@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: the python package
+# lives under python/ (build-time only; never imported at runtime).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,55 @@
+//! Power report: run the paper's §IV measurement procedure (500-trace
+//! block, batch size 1) on the held-out artifact test set and print the
+//! full Table 1, plus the §V platform comparison.
+//!
+//! ```bash
+//! cargo run --release --example power_report -- [n_traces] [--native]
+//! ```
+
+use bss2::coordinator::batch::run_block;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::power::energy::cr2032_years;
+use bss2::runtime::ArtifactDir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(500);
+    let dir = ArtifactDir::default_location();
+    let cfg = EngineConfig {
+        use_pjrt: !args.iter().any(|a| a == "--native"),
+        ..Default::default()
+    };
+
+    let ds = Dataset::load(&dir.ecg_test())?;
+    let traces: Vec<_> = ds
+        .traces
+        .iter()
+        .take(n)
+        .map(|t| (t.clone(), t.label))
+        .collect();
+    println!(
+        "measuring a block of {} held-out traces (afib fraction {:.2}) ...\n",
+        traces.len(),
+        ds.afib_fraction()
+    );
+
+    let mut engine = Engine::from_artifacts(&dir, cfg)?;
+    let rep = run_block(&mut engine, &traces)?;
+    println!("{}", rep.table1());
+
+    println!("\n§V platform comparison (energy per classification):");
+    for (name, j, ratio) in bss2::baselines::comparison_table(rep.energy_total_j)
+    {
+        println!("  {:<38} {:>12.4} mJ  {:>8.1}x", name, j * 1e3, ratio);
+    }
+    println!(
+        "\nCR2032 at 2-minute monitoring intervals: {:.1} years (paper: ~5)",
+        cr2032_years(rep.energy_total_j, 120.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Remote usage of the experiment execution service (paper §II-D: hosts
+//! exchange serialized experiment data with the mobile system over the
+//! USB-Ethernet link).  Spawns the service in-process, connects as a
+//! client, streams classification requests, and prints the service stats.
+//!
+//! ```bash
+//! cargo run --release --example remote_client -- [n_requests] [--native]
+//! ```
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{Client, Service};
+use bss2::ecg::gen::TraceStream;
+use bss2::runtime::ArtifactDir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(20);
+    let use_pjrt = !args.iter().any(|a| a == "--native");
+
+    let dir = ArtifactDir::default_location();
+    let svc = Service::start("127.0.0.1:0", move || {
+        Engine::from_artifacts(
+            &dir,
+            EngineConfig { use_pjrt, ..Default::default() },
+        )
+    })?;
+    println!("service listening on {}", svc.addr);
+
+    let mut client = Client::connect(&svc.addr)?;
+    let pong = client.call("{\"cmd\":\"ping\"}")?;
+    println!("ping -> {pong}");
+
+    let t0 = std::time::Instant::now();
+    let mut correct = 0;
+    for (i, trace) in TraceStream::new(7, 1.0).take(n).enumerate() {
+        let reply = client.classify(&trace)?;
+        let ok = reply
+            .get("ok")
+            .and_then(|v| match v {
+                bss2::util::json::Json::Bool(b) => Some(*b),
+                _ => None,
+            })
+            .unwrap_or(false);
+        anyhow::ensure!(ok, "request {i} failed: {reply}");
+        let pred = reply.get("pred").and_then(|p| p.as_f64()).unwrap_or(-1.0);
+        if pred as u8 == trace.label {
+            correct += 1;
+        }
+        if i < 5 {
+            println!("  req {i}: {reply}");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {n} requests in {:.2} s ({:.2} ms round trip each), \
+         {correct}/{n} labels matched",
+        wall,
+        wall * 1e3 / n as f64
+    );
+    let stats = client.call("{\"cmd\":\"stats\"}")?;
+    println!("service stats: {stats}");
+    svc.stop();
+    Ok(())
+}

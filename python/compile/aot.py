@@ -1,0 +1,222 @@
+"""AOT exporter: lower the L2 model (wrapping the L1 pallas kernel) to HLO.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports into ``--out`` (default ../artifacts):
+
+  vmm.hlo.txt       one physical synapse-array pass
+                    (x[256], w[256,256], gain[256], offset[256], noise[256],
+                     scale[]) -> (adc[256],)
+                    — executed three times per inference by the rust engine.
+  model.hlo.txt     fused full network with trained weights baked in
+                    (act[128]) -> (scores[2],) — mock/validation path.
+  manifest.json     shapes, hardware constants, artifact hashes; the rust
+                    test-suite cross-checks these against asic/consts.rs.
+  vmm_testvec.json  deterministic input/output pairs computed through the
+                    pallas kernel — the rust integration tests replay them
+                    through the compiled artifact and compare bit-exactly.
+  model_testvec.json  act -> scores pairs for the fused artifact + the
+                    3-pass composition (they must agree: noise = 0).
+
+Run ``compile.train`` first; this module refuses to export without trained
+weights (the fused artifact bakes them in).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import hwmodel as hw
+from . import model
+from .kernels import ref
+from .kernels.analog_vmm import analog_vmm
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    Guards against constant elision: ``as_hlo_text`` prints large literals
+    as ``{...}``, which the text parser on the rust side would silently turn
+    into garbage — any tensor bigger than a few elements must therefore be a
+    *parameter* of the exported function, never a baked constant.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text()
+    assert "..." not in text, (
+        "HLO text contains elided constants; bake-in is not supported — "
+        "pass large tensors as parameters instead")
+    return text
+
+
+def _sha256(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        h.update(f.read())
+    return h.hexdigest()
+
+
+def load_weights(out_dir):
+    path = os.path.join(out_dir, "weights.json")
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"{path} missing — run `python -m compile.train --out {out_dir}` "
+            "first (make artifacts does this).")
+    with open(path) as f:
+        w = json.load(f)
+    pq = {k: np.asarray(w[k], np.float32) for k in ("wc", "w1", "w2")}
+    calib = {"gain": np.asarray(w["gain"], np.float32),
+             "offset": np.asarray(w["offset"], np.float32)}
+    return w, pq, calib
+
+
+def export_vmm(out_dir):
+    """Lower the single-pass pallas kernel with runtime-supplied weights."""
+    spec_x = jax.ShapeDtypeStruct((hw.K_LOGICAL,), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((hw.K_LOGICAL, hw.N_COLS), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((hw.N_COLS,), jnp.float32)
+    spec_s = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = model.vmm_pass_fn()
+    lowered = jax.jit(fn).lower(spec_x, spec_w, spec_v, spec_v, spec_v, spec_s)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "vmm.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+    return path
+
+
+def export_model(out_dir, pq, calib, scales):
+    """Lower the fused network; weights are runtime parameters (HLO text
+    elides large constants, so they cannot be baked in)."""
+    fn = model.fused_inference_param_fn(tuple(scales))
+    spec_act = jax.ShapeDtypeStruct((hw.MODEL_IN,), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((hw.K_LOGICAL, hw.N_COLS), jnp.float32)
+    spec_cal = jax.ShapeDtypeStruct((2, hw.N_COLS), jnp.float32)
+    lowered = jax.jit(fn).lower(spec_act, spec_w, spec_w, spec_w, spec_cal,
+                                spec_cal)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+    return path
+
+
+def export_vmm_testvec(out_dir, n_cases=4, seed=7):
+    """Deterministic kernel-level test vectors for the rust integration tests."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    for i in range(n_cases):
+        x = rng.integers(0, hw.X_MAX + 1, hw.K_LOGICAL).astype(np.float32)
+        w = rng.integers(-hw.W_MAX, hw.W_MAX + 1,
+                         (hw.K_LOGICAL, hw.N_COLS)).astype(np.float32)
+        gain = (1 + hw.GAIN_FPN_SIGMA * rng.standard_normal(hw.N_COLS)
+                ).astype(np.float32)
+        offset = (hw.OFFSET_FPN_SIGMA * rng.standard_normal(hw.N_COLS)
+                  ).astype(np.float32)
+        noise = (hw.NOISE_SIGMA * rng.standard_normal(hw.N_COLS)
+                 ).astype(np.float32)
+        scale = np.float32(0.002 + 0.03 * rng.random())
+        out = np.asarray(analog_vmm(jnp.asarray(x), jnp.asarray(w),
+                                    jnp.asarray(gain), jnp.asarray(offset),
+                                    jnp.asarray(noise), jnp.asarray(scale)))
+        cases.append({
+            "x": x.tolist(), "w": w.reshape(-1).tolist(),
+            "gain": gain.tolist(), "offset": offset.tolist(),
+            "noise": noise.tolist(), "scale": float(scale),
+            "expected": out.tolist(),
+        })
+    path = os.path.join(out_dir, "vmm_testvec.json")
+    with open(path, "w") as f:
+        json.dump({"k": hw.K_LOGICAL, "n": hw.N_COLS, "cases": cases}, f)
+    print(f"[aot] wrote {path} ({n_cases} cases)")
+    return path
+
+
+def export_model_testvec(out_dir, pq, calib, scales, n_cases=8, seed=13):
+    """act -> scores pairs: fused artifact must equal 3-pass composition."""
+    from . import data
+    pq_j = {k: jnp.asarray(v) for k, v in pq.items()}
+    calib_j = {k: jnp.asarray(v) for k, v in calib.items()}
+    zero = jnp.zeros((3, hw.N_COLS))
+    cases = []
+    for i in range(n_cases):
+        u12, label = data.generate_trace(900_000 + i * 31, i % 2 == 1)
+        act = data.preprocess(u12)
+        scores = np.asarray(model.forward_hw(
+            pq_j, jnp.asarray(act), calib_j, zero, tuple(scales),
+            vmm=ref.analog_vmm_ref))
+        cases.append({"act": act.tolist(), "label": label,
+                      "scores": scores.tolist()})
+    path = os.path.join(out_dir, "model_testvec.json")
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"[aot] wrote {path} ({n_cases} cases)")
+    return path
+
+
+def export_manifest(out_dir, files, weights_meta):
+    manifest = {
+        "format": "bss2-artifacts-v1",
+        "hw": {
+            "k_logical": hw.K_LOGICAL, "k_signed": hw.K_SIGNED,
+            "n_cols": hw.N_COLS, "w_max": hw.W_MAX, "x_max": hw.X_MAX,
+            "adc_min": hw.ADC_MIN, "adc_max": hw.ADC_MAX,
+            "membrane_clip": hw.MEMBRANE_CLIP, "relu_shift": hw.RELU_SHIFT,
+            "preproc_shift": hw.PREPROC_SHIFT,
+            "noise_sigma": hw.NOISE_SIGMA,
+            "event_period_ns": hw.EVENT_PERIOD_NS,
+            "integration_cycle_us": hw.INTEGRATION_CYCLE_US,
+            "ecg_window": hw.ECG_WINDOW, "ecg_channels": hw.ECG_CHANNELS,
+            "pool_window": hw.POOL_WINDOW, "model_in": hw.MODEL_IN,
+            "conv": {"kernel": hw.CONV_KERNEL, "stride": hw.CONV_STRIDE,
+                     "channels": hw.CONV_CHANNELS,
+                     "positions": hw.CONV_POSITIONS, "pad": hw.CONV_PAD},
+            "fc1_out": hw.FC1_OUT, "fc2_out": hw.FC2_OUT,
+            "pool_group": hw.POOL_GROUP,
+            "macs": {"conv": hw.MACS_CONV, "fc1": hw.MACS_FC1,
+                     "fc2": hw.MACS_FC2, "total": hw.MACS_TOTAL},
+            "ops_total": hw.OPS_TOTAL,
+        },
+        "scales": weights_meta["scales"],
+        "metrics": weights_meta.get("metrics", {}),
+        "files": {os.path.basename(p): _sha256(p) for p in files},
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    weights_meta, pq, calib = load_weights(args.out)
+    scales = weights_meta["scales"]
+
+    files = [
+        export_vmm(args.out),
+        export_model(args.out, pq, calib, scales),
+        export_vmm_testvec(args.out),
+        export_model_testvec(args.out, pq, calib, scales),
+        os.path.join(args.out, "weights.json"),
+    ]
+    export_manifest(args.out, files, weights_meta)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Shared hardware-model constants for the BrainScaleS-2 analog network core.
+
+These constants define the *computationally observable* behaviour of one
+synapse-array half of the BSS-2 ASIC in its rate-based (vector-matrix
+multiplication) operation mode, as described in §II-A of the paper:
+
+  * 256 physical synapse rows per array half. Signed weights are realised by
+    splitting each logical input onto an excitatory and an inhibitory row
+    (paper Fig 4: separate inputs A/B per neuron), so 128 *signed* inputs per
+    half.  Synapse-level address matching additionally allows a second event
+    group to target a disjoint column block within the same integration cycle
+    (used by the paper's fc1 "dotted part", Fig 6) — the logical VMM therefore
+    exposes K = 256 logical signed inputs.
+  * 256 neuron columns per array half (512 neurons on the chip).
+  * 6-bit weights (|w| <= 63), 5-bit input activations (0..31) encoded as
+    pulse lengths.
+  * Analog accumulation on the membrane capacitance, subject to per-column
+    gain/offset fixed-pattern variation, temporal noise and saturation.
+  * Parallel 8-bit ADC readout.  The ADC offset can be aligned with V_reset
+    to perform a ReLU during conversion (paper §II-A); for the ECG model the
+    paper instead reads signed values and performs ReLUs digitally in the
+    SIMD CPUs (paper Fig 6 caption), which is our default.
+
+The identical constants are mirrored on the rust side in
+``rust/src/asic/consts.rs``; ``aot.py`` writes them into
+``artifacts/manifest.json`` and the rust test-suite cross-checks them.
+"""
+
+# --- Array geometry -------------------------------------------------------
+K_LOGICAL = 256     # logical signed inputs per array half (address-matched)
+K_SIGNED = 128      # signed inputs that map 1:1 onto physical row pairs
+N_COLS = 256        # neuron columns per array half
+N_HALVES = 2        # two array halves (top: conv, bottom: fc1+fc2)
+N_QUADRANTS = 4     # 4 quadrants of 128 neurons x (128x256) synapses
+
+# --- Resolutions ----------------------------------------------------------
+W_MAX = 63          # 6-bit weight magnitude
+X_MAX = 31          # 5-bit input activation (pulse length)
+ADC_MIN = -128      # signed 8-bit ADC counts relative to V_reset
+ADC_MAX = 127
+MEMBRANE_CLIP = 160.0   # membrane saturation in ADC-LSB units (beyond ADC range)
+
+# --- Analog non-idealities (calibration-time parameters) ------------------
+GAIN_FPN_SIGMA = 0.06    # per-column multiplicative fixed-pattern variation
+OFFSET_FPN_SIGMA = 2.0   # per-column additive offset [LSB]
+NOISE_SIGMA = 2.0        # temporal (trial-to-trial) noise [LSB]
+
+# --- Requantisation (SIMD CPU, §II-A "bitwise right-shifts") ---------------
+RELU_SHIFT = 2           # adc>>2: 127 -> 31, back to 5-bit activations
+
+# --- Timing model (paper §II-A / Eq. 1-2) ----------------------------------
+EVENT_PERIOD_NS = 8.0          # back-to-back synaptic input period
+INTEGRATION_CYCLE_US = 5.0     # full VMM cycle incl. membrane reset
+LVDS_LINKS = 5                 # links routed to the FPGA (of 8 on the ASIC)
+LVDS_GBPS = 2.0                # per-link bandwidth
+
+# --- Area model (paper Eq. 3) ----------------------------------------------
+SYNAPSE_UM2 = 8.0 * 12.0       # synapse area
+DIE_MM2 = 32.0                 # BSS-2 die size
+
+# --- ECG model hyperparameters (paper Fig 6 instantiation, DESIGN.md §3) ---
+ECG_FS_HZ = 150.0        # synthetic trace sample rate
+ECG_WINDOW = 2048        # classification window per channel (~13.65 s)
+ECG_CHANNELS = 2
+POOL_WINDOW = 32         # max-min pooling window (paper Fig 7)
+PREPROC_SHIFT = 5        # 12-bit pooled derivative -> 5-bit activations
+POOLED_LEN = ECG_WINDOW // POOL_WINDOW   # 64 per channel
+MODEL_IN = POOLED_LEN * ECG_CHANNELS     # 128 5-bit inputs
+
+CONV_KERNEL = 8          # conv taps along time
+CONV_STRIDE = 2
+CONV_CHANNELS = 8        # output feature channels
+CONV_POSITIONS = 32      # padded output positions (32 replicas, paper Fig 6)
+CONV_PAD = 3             # left zero-padding
+CONV_OUT = CONV_POSITIONS * CONV_CHANNELS   # 256
+
+FC1_OUT = 123            # hidden neurons (paper Fig 6)
+FC2_OUT = 10             # output neurons, avg-pooled 5+5 -> 2 classes
+N_CLASSES = 2
+POOL_GROUP = FC2_OUT // N_CLASSES
+
+# MAC counts (DESIGN.md §3; paper Table 1 reports 132 kOp for its unpublished
+# exact window sizes — we report ours and scale rates accordingly)
+MACS_CONV = CONV_OUT * CONV_KERNEL * ECG_CHANNELS      # 4096
+MACS_FC1 = CONV_OUT * FC1_OUT                          # 31488
+MACS_FC2 = FC1_OUT * FC2_OUT                           # 1230
+MACS_TOTAL = MACS_CONV + MACS_FC1 + MACS_FC2           # 36814
+OPS_TOTAL = 2 * MACS_TOTAL                             # mult+add counted separately

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: one integration cycle of the BSS-2 analog synapse array.
+
+Hardware adaptation (DESIGN.md §2): the paper's compute hot-spot is an analog
+crossbar — 256 synapse rows driving 256 neuron columns per array half, inputs
+as 5-bit pulse lengths, 6-bit weights, charge integration on membrane
+capacitances, 8-bit parallel ADC readout.  On a TPU-shaped substrate the same
+schedule becomes:
+
+  * the weight tile (K x TILE_N) is the synapse-array quadrant resident in
+    VMEM (the scratchpad analogue of the synapse SRAM),
+  * the activation vector is broadcast into an MXU contraction exactly like a
+    pulse train is broadcast along a synapse row,
+  * per-column gain/offset/noise + saturation + ADC quantisation are the
+    vector-unit epilogue, fused into the kernel so membrane voltages never
+    round-trip to HBM (on the ASIC they never leave the analog core).
+
+Grid: one program per column tile; the full input vector (<= 256 values,
+1 KiB) is resident per program, mirroring the event broadcast.
+
+``interpret=True`` is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the VMEM footprint and
+MXU utilisation in DESIGN.md §7 / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import hwmodel as hw
+
+# Column tile: 128 columns x 256 rows x 4 B = 128 KiB weight tile — fits VMEM
+# (16 MiB/core) with generous double-buffering headroom; a multiple of the
+# 128-lane vector width and of the MXU's 128x128 systolic tile.
+TILE_N = 128
+
+
+def _vmm_kernel(x_ref, w_ref, gain_ref, offset_ref, noise_ref, scale_ref,
+                out_ref, *, relu_in_adc: bool):
+    """Kernel body: one column tile of the analog array.
+
+    x_ref:      f32[1, K]      pulse-length activations (whole vector)
+    w_ref:      f32[K, TILE_N] 6-bit signed weights for this tile
+    gain/offset/noise_ref: f32[1, TILE_N] per-column analog state
+    scale_ref:  f32[1, 1]      per-layer amplification
+    out_ref:    f32[1, TILE_N] ADC counts
+    """
+    x = x_ref[...]                        # [1, K]
+    w = w_ref[...]                        # [K, TILE_N]
+    # Charge accumulation: exact integer arithmetic carried in f32
+    # (|acc| <= 31 * 63 * 256 < 2^19 << 2^24).
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)   # [1, TILE_N]
+    v = scale_ref[0, 0] * gain_ref[...] * acc + offset_ref[...] + noise_ref[...]
+    # Membrane saturation at the rails, then 8-bit ADC conversion.
+    v = jnp.clip(v, -hw.MEMBRANE_CLIP, hw.MEMBRANE_CLIP)
+    adc = jnp.round(v)
+    lo = 0.0 if relu_in_adc else float(hw.ADC_MIN)
+    out_ref[...] = jnp.clip(adc, lo, float(hw.ADC_MAX))
+
+
+@functools.partial(jax.jit, static_argnames=("relu_in_adc",))
+def analog_vmm(x, w, gain, offset, noise, scale, relu_in_adc=False):
+    """Pallas analog-VMM: drop-in equivalent of ``ref.analog_vmm_ref``.
+
+    Shapes: x f32[K], w f32[K, N], gain/offset/noise f32[N], scale f32[].
+    K and N must be multiples of the lane width (K >= 1, N % TILE_N == 0 is
+    *not* required — ragged tiles are padded by pallas).
+    """
+    k, n = w.shape
+    assert x.shape == (k,), (x.shape, w.shape)
+    tile = min(TILE_N, n)
+    grid = (pl.cdiv(n, tile),)
+
+    out = pl.pallas_call(
+        functools.partial(_vmm_kernel, relu_in_adc=relu_in_adc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),        # x: resident
+            pl.BlockSpec((k, tile), lambda i: (0, i)),     # w: column tiles
+            pl.BlockSpec((1, tile), lambda i: (0, i)),     # gain
+            pl.BlockSpec((1, tile), lambda i: (0, i)),     # offset
+            pl.BlockSpec((1, tile), lambda i: (0, i)),     # noise
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # scale
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=True,   # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        x.reshape(1, k),
+        w,
+        gain.reshape(1, n),
+        offset.reshape(1, n),
+        noise.reshape(1, n),
+        jnp.asarray(scale, jnp.float32).reshape(1, 1),
+    )
+    return out.reshape(n)
+
+
+def vmem_report(k=hw.K_LOGICAL, n=hw.N_COLS, tile=TILE_N):
+    """Static VMEM footprint / MXU utilisation estimate for DESIGN.md §Perf.
+
+    Returns a dict with bytes-per-program and the MXU occupancy of the
+    contraction (how much of the 128x128 systolic tile a (1,K)x(K,tile)
+    matmul keeps busy).
+    """
+    bytes_per = 4
+    x_b = k * bytes_per
+    w_b = k * tile * bytes_per
+    vec_b = 4 * tile * bytes_per          # gain, offset, noise, out
+    vmem = x_b + w_b + vec_b + bytes_per  # + scale
+    # A rank-1 activation against the 128-wide MXU: K/128 passes, 1/128 of
+    # rows busy — the analog array's advantage (full parallelism at batch 1)
+    # is exactly what the MXU loses here; see EXPERIMENTS.md §Perf.
+    mxu_row_util = 1.0 / 128.0
+    mxu_col_util = min(tile, 128) / 128.0
+    return {
+        "vmem_bytes_per_program": vmem,
+        "grid_programs": (n + tile - 1) // tile,
+        "mxu_row_utilisation": mxu_row_util,
+        "mxu_col_utilisation": mxu_col_util,
+        "flops_per_program": 2 * k * tile,
+    }

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the analog synapse-array VMM.
+
+This is the correctness reference for the Pallas kernel in
+``analog_vmm.py``.  It models one integration cycle of a BSS-2 synapse-array
+half in rate-based mode (paper §II-A, Fig 4):
+
+    acc[n]  = sum_k x[k] * w[k, n]          integer charge accumulation
+    v[n]    = scale * gain[n] * acc[n] + offset[n] + noise[n]
+    v[n]    = clip(v, -MEMBRANE_CLIP, +MEMBRANE_CLIP)   membrane saturation
+    adc[n]  = clip(round(v[n]), ADC_MIN, ADC_MAX)       8-bit readout
+
+``x`` are 5-bit pulse lengths (0..31), ``w`` 6-bit signed weights (-63..63).
+``gain``/``offset`` are the per-column fixed-pattern calibration state;
+``noise`` is the temporal noise realisation for this cycle (supplied by the
+caller — on the real system it is physics, in the rust engine it comes from
+the coordinator's PRNG so the HLO stays deterministic).
+
+If ``relu_in_adc`` the ADC offset is aligned with V_reset such that negative
+membrane deflections read as 0 (paper §II-A); the ECG model instead uses
+signed readout with digital ReLUs in the SIMD CPUs (paper Fig 6 caption).
+"""
+
+import jax.numpy as jnp
+
+from .. import hwmodel as hw
+
+
+def analog_vmm_ref(x, w, gain, offset, noise, scale, relu_in_adc=False):
+    """Reference analog VMM.
+
+    Args:
+      x:      f32[K]  input activations, integers in [0, X_MAX]
+      w:      f32[K, N] signed weights, integers in [-W_MAX, W_MAX]
+      gain:   f32[N]  per-column transconductance gain (calibrated ~1)
+      offset: f32[N]  per-column ADC/membrane offset [LSB]
+      noise:  f32[N]  temporal noise realisation [LSB]
+      scale:  f32[]   per-layer amplification (right-shift analogue)
+      relu_in_adc: clamp negative deflections to 0 during conversion.
+
+    Returns:
+      f32[N] ADC counts (integers in [ADC_MIN, ADC_MAX] or [0, ADC_MAX]).
+    """
+    acc = jnp.dot(x, w)                       # exact in f32: |acc| < 2^18
+    v = scale * gain * acc + offset + noise
+    v = jnp.clip(v, -hw.MEMBRANE_CLIP, hw.MEMBRANE_CLIP)
+    adc = jnp.round(v)
+    lo = 0.0 if relu_in_adc else float(hw.ADC_MIN)
+    return jnp.clip(adc, lo, float(hw.ADC_MAX))
+
+
+def quantize_weights(w_float):
+    """Map float weights in [-1, 1] to the 6-bit hardware grid."""
+    return jnp.round(jnp.clip(w_float, -1.0, 1.0) * hw.W_MAX)
+
+
+def requantize(adc, shift=hw.RELU_SHIFT):
+    """SIMD-CPU ReLU + right-shift requantisation back to 5-bit activations.
+
+    The embedded processors apply the activation function digitally and
+    convert 8-bit ADC counts to 5-bit inputs for the next layer by bitwise
+    right-shift (paper §II-A).
+    """
+    relu = jnp.maximum(adc, 0.0)
+    return jnp.clip(jnp.floor(relu / float(1 << shift)), 0.0, float(hw.X_MAX))

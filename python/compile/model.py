@@ -1,0 +1,312 @@
+"""L2: the ECG CDNN of paper Fig 6, expressed over the analog-array VMM.
+
+Network (DESIGN.md §3):
+
+    input  u5[128]            (2 ch x 64 max-min-pooled derivative samples)
+    conv   8 ch, kernel 8, stride 2, 32 positions   -> upper array half
+    relu + >>2 requantise                            (SIMD CPUs)
+    fc1    256 -> 123, split into two 128-input column blocks -> lower half
+    partial-sum add + relu + >>2                     (SIMD CPUs)
+    fc2    123 -> 10                                 -> lower half, cols 246..255
+    avg-pool 5+5 -> 2 class scores                   (SIMD CPUs)
+
+Every array pass is *physically* the same operation — one integration cycle
+of a 256x256 synapse-array half — so each layer's logical weights are packed
+into a 256x256 physical weight matrix ("mapping", mirrored by
+rust/src/nn/mapping.rs), and the forward pass is three calls of the L1
+kernel.  The rust engine executes the identical three passes against
+``artifacts/vmm.hlo.txt``.
+
+Two execution flavours:
+  * ``forward_hw``      — hardware semantics (quantised, noisy), built on the
+                          pallas kernel / ref oracle; used for AOT export and
+                          the hardware-in-the-loop forward pass.
+  * ``forward_trainable`` — same maths with straight-through estimators, used
+                          for the backward pass during HIL training.
+  * ``forward_mock``    — float "mock mode" (paper §II-D) without quantisation
+                          or noise; prototyping baseline + ablation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hwmodel as hw
+from .kernels import ref
+from .kernels.analog_vmm import analog_vmm
+
+
+# --- logical -> physical weight mapping (mirrors rust/src/nn/mapping.rs) ---
+
+def _conv_placement():
+    """Index arrays for the Toeplitz conv placement (computed once).
+
+    Returns (rows, cols, (o, c, t)) such that
+    ``physical[rows, cols] = wc[o, c, t]``.
+    """
+    rows, cols, oo, cc, tt = [], [], [], [], []
+    for p in range(hw.CONV_POSITIONS):
+        start = p * hw.CONV_STRIDE - hw.CONV_PAD
+        for o in range(hw.CONV_CHANNELS):
+            col = p * hw.CONV_CHANNELS + o
+            for c in range(hw.ECG_CHANNELS):
+                for t in range(hw.CONV_KERNEL):
+                    ti = start + t
+                    if 0 <= ti < hw.POOLED_LEN:
+                        rows.append(c * hw.POOLED_LEN + ti)
+                        cols.append(col)
+                        oo.append(o)
+                        cc.append(c)
+                        tt.append(t)
+    idx = tuple(np.asarray(a, np.int32) for a in (rows, cols, oo, cc, tt))
+    return idx
+
+
+_CONV_IDX = _conv_placement()
+
+
+def pack_conv(wc):
+    """Toeplitz placement of the conv kernel, replicated 32x (paper Fig 6).
+
+    wc: [C_OUT, C_IN, K] float/int weights.
+    Returns [K_LOGICAL, N_COLS] physical matrix for the upper array half.
+    Input layout on rows: row = ch * POOLED_LEN + t  (t pooled time index).
+    Column layout: col = position * C_OUT + out_channel.
+    """
+    rows, cols, oo, cc, tt = _CONV_IDX
+    m = jnp.zeros((hw.K_LOGICAL, hw.N_COLS), wc.dtype)
+    return m.at[rows, cols].set(wc[oo, cc, tt])
+
+
+def pack_conv_np(wc):
+    """Numpy fast-path of :func:`pack_conv` (used at export time)."""
+    rows, cols, oo, cc, tt = _CONV_IDX
+    m = np.zeros((hw.K_LOGICAL, hw.N_COLS), np.float32)
+    m[rows, cols] = np.asarray(wc)[oo, cc, tt]
+    return m
+
+
+def pack_fc1(w1):
+    """fc1 256->123 as two side-by-side 128-input column blocks (Fig 6).
+
+    Rows 0..127 (event group A) drive columns 0..122 with w1[:128];
+    rows 128..255 (event group B, synapse address matching) drive columns
+    123..245 with w1[128:].  Partial sums are added digitally.
+    """
+    m = jnp.zeros((hw.K_LOGICAL, hw.N_COLS), w1.dtype)
+    m = m.at[0:hw.K_SIGNED, 0:hw.FC1_OUT].set(w1[0:hw.K_SIGNED])
+    m = m.at[hw.K_SIGNED:hw.K_LOGICAL, hw.FC1_OUT:2 * hw.FC1_OUT].set(
+        w1[hw.K_SIGNED:hw.K_LOGICAL])
+    return m
+
+
+def pack_fc2(w2):
+    """fc2 123->10 on the lower half's right-most columns (246..255)."""
+    m = jnp.zeros((hw.K_LOGICAL, hw.N_COLS), w2.dtype)
+    m = m.at[0:hw.FC1_OUT, 2 * hw.FC1_OUT:2 * hw.FC1_OUT + hw.FC2_OUT].set(w2)
+    return m
+
+
+def init_params(key):
+    """Float master weights in [-1, 1]."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    fan_c = hw.ECG_CHANNELS * hw.CONV_KERNEL
+    wc = jax.random.normal(k1, (hw.CONV_CHANNELS, hw.ECG_CHANNELS,
+                                hw.CONV_KERNEL)) / np.sqrt(fan_c)
+    w1 = jax.random.normal(k2, (hw.K_LOGICAL, hw.FC1_OUT)) / np.sqrt(hw.CONV_OUT)
+    w2 = jax.random.normal(k3, (hw.FC1_OUT, hw.FC2_OUT)) / np.sqrt(hw.FC1_OUT)
+    return {"wc": wc, "w1": w1, "w2": w2}
+
+
+def default_calib(key=None, nominal=False):
+    """Per-column analog calibration state for both array halves.
+
+    On the real system this comes from the calibration routines (Weis et al.);
+    here the fixed-pattern realisation is drawn once and stored with the
+    weights.  ``nominal=True`` gives the ideal (gain 1, offset 0) substrate.
+    """
+    if nominal or key is None:
+        gain = jnp.ones((2, hw.N_COLS))
+        offset = jnp.zeros((2, hw.N_COLS))
+    else:
+        kg, ko = jax.random.split(key)
+        gain = 1.0 + hw.GAIN_FPN_SIGMA * jax.random.normal(kg, (2, hw.N_COLS))
+        offset = hw.OFFSET_FPN_SIGMA * jax.random.normal(ko, (2, hw.N_COLS))
+    return {"gain": gain, "offset": offset}
+
+
+# Per-layer amplification ("scale"): chosen so pre-ADC voltages use the 8-bit
+# range without saturating; fixed after calibration (see train.calibrate_scales).
+DEFAULT_SCALES = (0.045, 0.02, 0.06)
+
+
+# --- straight-through helpers ----------------------------------------------
+
+def _ste_round(x):
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _ste_clip(x, lo, hi):
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+def quantize_weights_ste(w):
+    return _ste_round(_ste_clip(w, -1.0, 1.0) * hw.W_MAX)
+
+
+# --- forward passes ---------------------------------------------------------
+
+def _simd_partial_relu_requant(adc2):
+    """SIMD-CPU digital step between fc1 and fc2 (partial add + relu + >>2)."""
+    partial = adc2[0:hw.FC1_OUT] + adc2[hw.FC1_OUT:2 * hw.FC1_OUT]
+    return ref.requantize(partial)
+
+
+def _simd_pool(adc3):
+    """SIMD-CPU average pooling of the 10 output neurons to 2 class scores."""
+    outs = adc3[2 * hw.FC1_OUT:2 * hw.FC1_OUT + hw.FC2_OUT]
+    return outs.reshape(hw.N_CLASSES, hw.POOL_GROUP).mean(axis=1)
+
+
+def forward_hw(params_q, act, calib, noise, scales=DEFAULT_SCALES,
+               vmm=analog_vmm):
+    """Hardware-semantics forward pass: three physical array passes.
+
+    params_q: dict of *quantised* weights (integers on the 6-bit grid).
+    act:      f32[128] 5-bit activations from the preprocessing chain.
+    calib:    {"gain": [2, N], "offset": [2, N]} per array half (0=upper).
+    noise:    f32[3, N] temporal-noise realisation per pass.
+    vmm:      kernel implementation (analog_vmm or ref.analog_vmm_ref).
+    Returns f32[2] class scores (average-pooled ADC counts).
+    """
+    wm_c = pack_conv(params_q["wc"])
+    wm_1 = pack_fc1(params_q["w1"])
+    wm_2 = pack_fc2(params_q["w2"])
+
+    x0 = jnp.zeros(hw.K_LOGICAL).at[0:hw.MODEL_IN].set(act)
+    adc1 = vmm(x0, wm_c, calib["gain"][0], calib["offset"][0], noise[0],
+               jnp.float32(scales[0]))
+    a1 = ref.requantize(adc1)                         # SIMD: relu + >>2
+
+    adc2 = vmm(a1, wm_1, calib["gain"][1], calib["offset"][1], noise[1],
+               jnp.float32(scales[1]))
+    a2 = _simd_partial_relu_requant(adc2)             # SIMD: add + relu + >>2
+
+    x2 = jnp.zeros(hw.K_LOGICAL).at[0:hw.FC1_OUT].set(a2)
+    adc3 = vmm(x2, wm_2, calib["gain"][1], calib["offset"][1], noise[2],
+               jnp.float32(scales[2]))
+    return _simd_pool(adc3)                           # SIMD: avg-pool 5+5
+
+
+def _vmm_ste(x, w, gain, offset, noise, scale):
+    """Differentiable analog VMM (straight-through quantisation/saturation)."""
+    acc = jnp.dot(x, w)
+    v = scale * gain * acc + offset + noise
+    v = _ste_clip(v, -hw.MEMBRANE_CLIP, hw.MEMBRANE_CLIP)
+    return _ste_clip(_ste_round(v), float(hw.ADC_MIN), float(hw.ADC_MAX))
+
+
+def _ste_floor(x):
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def _requant_ste(adc, shift=hw.RELU_SHIFT):
+    relu = jnp.maximum(adc, 0.0)
+    return _ste_clip(_ste_floor(relu / float(1 << shift)),
+                     0.0, float(hw.X_MAX))
+
+
+def forward_trainable(params, act, calib, noise, scales=DEFAULT_SCALES):
+    """HIL-training forward: identical maths, straight-through gradients."""
+    q = {k: quantize_weights_ste(v) for k, v in params.items()}
+    wm_c = pack_conv(q["wc"])
+    wm_1 = pack_fc1(q["w1"])
+    wm_2 = pack_fc2(q["w2"])
+
+    x0 = jnp.zeros(hw.K_LOGICAL).at[0:hw.MODEL_IN].set(act)
+    adc1 = _vmm_ste(x0, wm_c, calib["gain"][0], calib["offset"][0], noise[0],
+                    scales[0])
+    a1 = _requant_ste(adc1)
+    adc2 = _vmm_ste(a1, wm_1, calib["gain"][1], calib["offset"][1], noise[1],
+                    scales[1])
+    partial = adc2[0:hw.FC1_OUT] + adc2[hw.FC1_OUT:2 * hw.FC1_OUT]
+    a2 = _requant_ste(partial)
+    x2 = jnp.zeros(hw.K_LOGICAL).at[0:hw.FC1_OUT].set(a2)
+    adc3 = _vmm_ste(x2, wm_2, calib["gain"][1], calib["offset"][1], noise[2],
+                    scales[2])
+    outs = adc3[2 * hw.FC1_OUT:2 * hw.FC1_OUT + hw.FC2_OUT]
+    # Max-pool during training for robustness (paper §III-B), avg at inference.
+    return outs.reshape(hw.N_CLASSES, hw.POOL_GROUP).max(axis=1)
+
+
+def forward_mock(params, act):
+    """Float mock mode: no quantisation, no noise, ideal substrate."""
+    wm_c = pack_conv(params["wc"])
+    wm_1 = pack_fc1(params["w1"])
+    wm_2 = pack_fc2(params["w2"])
+    x0 = jnp.zeros(hw.K_LOGICAL).at[0:hw.MODEL_IN].set(act)
+    h1 = jnp.maximum(jnp.dot(x0, wm_c), 0.0)
+    h2p = jnp.dot(h1, wm_1)
+    h2 = jnp.maximum(h2p[0:hw.FC1_OUT] + h2p[hw.FC1_OUT:2 * hw.FC1_OUT], 0.0)
+    x2 = jnp.zeros(hw.K_LOGICAL).at[0:hw.FC1_OUT].set(h2)
+    h3 = jnp.dot(x2, wm_2)
+    outs = h3[2 * hw.FC1_OUT:2 * hw.FC1_OUT + hw.FC2_OUT]
+    return outs.reshape(hw.N_CLASSES, hw.POOL_GROUP).mean(axis=1)
+
+
+def fused_inference_fn(params_q_np, calib_np, scales=DEFAULT_SCALES):
+    """Fused full-network closure with baked weights (python-side testing
+    only — NOT exportable: ``as_hlo_text`` elides large constants, see
+    ``fused_inference_param_fn`` for the AOT artifact)."""
+    wq = {k: jnp.asarray(v) for k, v in params_q_np.items()}
+    calib = {k: jnp.asarray(v) for k, v in calib_np.items()}
+    zero = jnp.zeros((3, hw.N_COLS))
+
+    def fn(act):
+        return (forward_hw(wq, act, calib, zero, scales),)
+
+    return fn
+
+
+def fused_inference_param_fn(scales=DEFAULT_SCALES):
+    """The fused AOT artifact ``model.hlo.txt``: weights as *parameters*.
+
+    HLO text elides constants larger than a few elements (``{...}``), so the
+    physical weight matrices cannot be baked into the interchange text; the
+    rust side passes the packed matrices it loads from ``weights.json``.
+    Noise is zero — the rust engine injects noise only on the 3-pass
+    ``vmm.hlo`` path.
+
+    Signature: (act f32[128], wm_c f32[256,256], wm_1 f32[256,256],
+                wm_2 f32[256,256], gain f32[2,256], offset f32[2,256])
+               -> (scores f32[2],)
+    """
+    zero = jnp.zeros(hw.N_COLS)
+    s1, s2, s3 = (jnp.float32(s) for s in scales)
+
+    def fn(act, wm_c, wm_1, wm_2, gain, offset):
+        x0 = jnp.zeros(hw.K_LOGICAL).at[0:hw.MODEL_IN].set(act)
+        adc1 = analog_vmm(x0, wm_c, gain[0], offset[0], zero, s1)
+        a1 = ref.requantize(adc1)
+        adc2 = analog_vmm(a1, wm_1, gain[1], offset[1], zero, s2)
+        a2 = _simd_partial_relu_requant(adc2)
+        x2 = jnp.zeros(hw.K_LOGICAL).at[0:hw.FC1_OUT].set(a2)
+        adc3 = analog_vmm(x2, wm_2, gain[1], offset[1], zero, s3)
+        return (_simd_pool(adc3),)
+
+    return fn
+
+
+def vmm_pass_fn():
+    """Signature for the reusable single-pass artifact ``vmm.hlo.txt``.
+
+    (x f32[256], w f32[256,256], gain f32[256], offset f32[256],
+     noise f32[256], scale f32[]) -> (adc f32[256],)
+    One physical integration cycle; the rust engine calls it three times per
+    inference with the packed per-layer matrices, exactly like the chip
+    reuses its array halves.
+    """
+    def fn(x, w, gain, offset, noise, scale):
+        return (analog_vmm(x, w, gain, offset, noise, scale),)
+
+    return fn

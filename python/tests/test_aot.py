@@ -1,0 +1,108 @@
+"""AOT exporter tests: HLO text round-trips through the XLA text parser and
+reproduces the kernel numerics (the same path the rust runtime uses)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+import compile.hwmodel as hw
+from compile import aot, model
+from compile.kernels.analog_vmm import analog_vmm
+
+
+@pytest.fixture(scope="module")
+def vmm_hlo(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("aot"))
+    path = aot.export_vmm(out)
+    return open(path).read()
+
+
+def test_vmm_hlo_entry_signature(vmm_hlo):
+    assert "HloModule" in vmm_hlo
+    assert "f32[256,256]" in vmm_hlo        # weight operand
+    assert "->(f32[256]{0})" in vmm_hlo.replace(" ", "")
+
+
+def test_vmm_hlo_has_no_custom_calls(vmm_hlo):
+    """interpret=True must lower to plain HLO the CPU client can run."""
+    assert "custom-call" not in vmm_hlo or "Sharding" in vmm_hlo
+
+
+def test_vmm_kernel_matches_closed_form():
+    """The kernel the HLO was lowered from matches the closed-form maths
+    (the rust integration tests replay the exported test vectors through the
+    compiled artifact itself — this anchors the python side of that chain)."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 32, hw.K_LOGICAL).astype(np.float32)
+    w = rng.integers(-63, 64, (hw.K_LOGICAL, hw.N_COLS)).astype(np.float32)
+    gain = np.ones(hw.N_COLS, np.float32)
+    offset = np.zeros(hw.N_COLS, np.float32)
+    noise = np.zeros(hw.N_COLS, np.float32)
+    scale = np.float32(0.01)
+    got = np.asarray(analog_vmm(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(gain), jnp.asarray(offset),
+                                jnp.asarray(noise), jnp.asarray(scale)))
+    acc = x @ w
+    v = np.clip(scale * acc, -hw.MEMBRANE_CLIP, hw.MEMBRANE_CLIP)
+    want = np.clip(np.round(v), hw.ADC_MIN, hw.ADC_MAX)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_export_testvectors(tmp_path):
+    out = str(tmp_path)
+    path = aot.export_vmm_testvec(out, n_cases=2, seed=1)
+    blob = json.load(open(path))
+    assert blob["k"] == hw.K_LOGICAL and blob["n"] == hw.N_COLS
+    for case in blob["cases"]:
+        assert len(case["x"]) == hw.K_LOGICAL
+        assert len(case["w"]) == hw.K_LOGICAL * hw.N_COLS
+        assert len(case["expected"]) == hw.N_COLS
+        # Expected values are valid ADC counts.
+        e = np.asarray(case["expected"])
+        assert e.min() >= hw.ADC_MIN and e.max() <= hw.ADC_MAX
+
+
+def test_full_export_against_trained_weights(tmp_path):
+    """If real artifacts exist, verify manifest hashes and model testvec."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art, "manifest.json")):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(os.path.join(art, "manifest.json")))
+    assert manifest["hw"]["k_logical"] == hw.K_LOGICAL
+    assert manifest["hw"]["n_cols"] == hw.N_COLS
+    assert manifest["hw"]["macs"]["total"] == hw.MACS_TOTAL
+    for fname, sha in manifest["files"].items():
+        fpath = os.path.join(art, fname)
+        assert os.path.exists(fpath), f"missing artifact {fname}"
+        assert aot._sha256(fpath) == sha, f"hash mismatch for {fname}"
+
+    # Replay the exported model test vectors through forward_hw.
+    weights_meta, pq, calib = aot.load_weights(art)
+    pq_j = {k: jnp.asarray(v) for k, v in pq.items()}
+    calib_j = {k: jnp.asarray(v) for k, v in calib.items()}
+    zero = jnp.zeros((3, hw.N_COLS))
+    cases = json.load(open(os.path.join(art, "model_testvec.json")))["cases"]
+    from compile.kernels import ref
+    for case in cases:
+        scores = np.asarray(model.forward_hw(
+            pq_j, jnp.asarray(np.asarray(case["act"], np.float32)),
+            calib_j, zero, tuple(weights_meta["scales"]),
+            vmm=ref.analog_vmm_ref))
+        np.testing.assert_array_equal(scores, np.asarray(case["scores"]))
+
+
+def test_weights_are_on_hardware_grid(tmp_path):
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.exists(os.path.join(art, "weights.json")):
+        pytest.skip("artifacts not built")
+    _, pq, calib = aot.load_weights(art)
+    for k, v in pq.items():
+        assert np.all(v == np.round(v)), f"{k} not integer"
+        assert np.abs(v).max() <= hw.W_MAX, f"{k} exceeds 6-bit range"
+    assert calib["gain"].shape == (2, hw.N_COLS)
+    assert calib["offset"].shape == (2, hw.N_COLS)

@@ -1,0 +1,119 @@
+"""Synthetic ECG generator + FPGA preprocessing mirror tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.hwmodel as hw
+from compile import data
+
+
+def test_prng_splitmix64_reference():
+    """Golden values — the rust SplitMix64 must produce the same stream."""
+    rng = data.SplitMix64(0)
+    vals = [rng.next_u64() for _ in range(3)]
+    assert vals == [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4, 0x06C45D188009454F]
+    rng = data.SplitMix64(42)
+    assert rng.next_u64() == 0xBDD732262FEB6E95
+
+
+def test_prng_uniform_range():
+    rng = data.SplitMix64(7)
+    us = [rng.uniform() for _ in range(1000)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert 0.4 < float(np.mean(us)) < 0.6
+
+
+def test_prng_gauss_moments():
+    rng = data.SplitMix64(8)
+    gs = np.array([rng.gauss() for _ in range(4000)])
+    assert abs(gs.mean()) < 0.1
+    assert 0.9 < gs.std() < 1.1
+
+
+def test_trace_determinism():
+    a, la = data.generate_trace(123, True)
+    b, lb = data.generate_trace(123, True)
+    np.testing.assert_array_equal(a, b)
+    assert la == lb == 1
+
+
+def test_trace_shape_and_range():
+    t, label = data.generate_trace(5, False)
+    assert t.shape == (hw.ECG_CHANNELS, hw.ECG_WINDOW)
+    assert t.dtype == np.uint16
+    assert t.min() >= 0 and t.max() <= 4095
+    assert label == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), afib=st.booleans())
+def test_trace_is_12bit_and_active(seed, afib):
+    t, _ = data.generate_trace(seed, afib)
+    assert t.max() <= 4095
+    # Signal must actually contain beats (QRS deflections).
+    assert int(t[0].max()) - int(t[0].min()) > 200
+
+
+def test_dataset_balance_and_labels():
+    xs, ys = data.generate_dataset(20, seed=1)
+    assert xs.shape == (20, hw.ECG_CHANNELS, hw.ECG_WINDOW)
+    assert ys.sum() == 10  # alternating labels at afib_fraction=0.5
+
+
+def test_class_statistics_differ():
+    """A-fib traces must differ in the feature statistics the classifier
+    exploits: higher mean activation (rapid ventricular response + f-waves)
+    and more active bins."""
+    n = 60
+    xs, ys = data.generate_dataset(n, seed=77)
+    acts = data.preprocess_batch(xs)
+    mean_act = acts.mean(axis=1)
+    assert mean_act[ys == 1].mean() > mean_act[ys == 0].mean() + 0.5
+    hi = (acts >= 10).mean(axis=1)
+    assert hi[ys == 1].mean() > hi[ys == 0].mean()
+
+
+# --- preprocessing (Fig 7 mirror) -------------------------------------------
+
+def test_preprocess_shape_range():
+    t, _ = data.generate_trace(9, True)
+    act = data.preprocess(t)
+    assert act.shape == (hw.MODEL_IN,)
+    assert act.min() >= 0 and act.max() <= hw.X_MAX
+
+
+def test_preprocess_constant_trace_is_zero():
+    """Constant input -> zero derivative -> zero activations."""
+    t = np.full((hw.ECG_CHANNELS, hw.ECG_WINDOW), 2048, np.uint16)
+    np.testing.assert_array_equal(data.preprocess(t), 0)
+
+
+def test_preprocess_baseline_suppression():
+    """Slow baseline wander must be (mostly) removed by the derivative."""
+    tgrid = np.arange(hw.ECG_WINDOW) / hw.ECG_FS_HZ
+    wander = (300 * np.sin(2 * np.pi * 0.3 * tgrid)).astype(np.int32)
+    t = np.clip(2048 + wander, 0, 4095).astype(np.uint16)
+    tt = np.stack([t, t])
+    act = data.preprocess(tt)
+    assert act.max() <= 2, "baseline wander must not excite the features"
+
+
+def test_preprocess_spike_detected():
+    """A QRS-like spike must saturate its pooled bin."""
+    t = np.full((hw.ECG_CHANNELS, hw.ECG_WINDOW), 2048, np.uint16)
+    t[0, 640:643] = 3500   # sharp deflection inside pooled bin 20
+    act = data.preprocess(t).reshape(2, hw.POOLED_LEN)
+    assert act[0, 20] == hw.X_MAX
+    assert act[0, 25] == 0
+
+
+def test_preprocess_is_shift_quantised():
+    """Quantisation is a plain right-shift (FPGA barrel shifter)."""
+    t, _ = data.generate_trace(33, False)
+    x = t.astype(np.int32)
+    d = np.diff(x, axis=1, prepend=x[:, :1])
+    d = d.reshape(2, hw.POOLED_LEN, hw.POOL_WINDOW)
+    pooled = d.max(axis=2) - d.min(axis=2)
+    expect = np.clip(pooled >> hw.PREPROC_SHIFT, 0, hw.X_MAX).reshape(-1)
+    np.testing.assert_array_equal(data.preprocess(t), expect)

@@ -1,0 +1,165 @@
+"""Kernel vs reference — the CORE correctness signal (L1).
+
+Hypothesis sweeps the analog-VMM pallas kernel against the pure-jnp oracle
+over shapes, value ranges and configuration flags; plus directed tests of
+every analog effect (saturation, ADC clipping, ReLU-in-ADC, gain/offset/noise
+application order).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.hwmodel as hw
+from compile.kernels.analog_vmm import analog_vmm, vmem_report, TILE_N
+from compile.kernels.ref import analog_vmm_ref, quantize_weights, requantize
+
+
+def _rand_case(rng, k, n, x_hi=hw.X_MAX, w_hi=hw.W_MAX):
+    x = rng.integers(0, x_hi + 1, k).astype(np.float32)
+    w = rng.integers(-w_hi, w_hi + 1, (k, n)).astype(np.float32)
+    gain = (1 + 0.06 * rng.standard_normal(n)).astype(np.float32)
+    offset = (2.0 * rng.standard_normal(n)).astype(np.float32)
+    noise = (2.0 * rng.standard_normal(n)).astype(np.float32)
+    scale = np.float32(0.001 + 0.05 * rng.random())
+    return x, w, gain, offset, noise, scale
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    k=st.sampled_from([1, 8, 64, 123, 128, 200, 256]),
+    n=st.sampled_from([1, 16, 128, 130, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    relu=st.booleans(),
+)
+def test_kernel_matches_ref_shapes(k, n, seed, relu):
+    """Pallas kernel == oracle over ragged/odd shapes and both ADC modes."""
+    rng = np.random.default_rng(seed)
+    x, w, gain, offset, noise, scale = _rand_case(rng, k, n)
+    got = analog_vmm(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                     jnp.asarray(offset), jnp.asarray(noise),
+                     jnp.asarray(scale), relu_in_adc=relu)
+    want = analog_vmm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                          jnp.asarray(offset), jnp.asarray(noise),
+                          jnp.asarray(scale), relu_in_adc=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-4, 1.0))
+def test_kernel_scale_sweep(seed, scale):
+    """Scales from deep-linear to fully-saturating regimes."""
+    rng = np.random.default_rng(seed)
+    x, w, gain, offset, noise, _ = _rand_case(rng, hw.K_LOGICAL, hw.N_COLS)
+    s = np.float32(scale)
+    got = analog_vmm(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                     jnp.asarray(offset), jnp.asarray(noise), jnp.asarray(s))
+    want = analog_vmm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                          jnp.asarray(offset), jnp.asarray(noise),
+                          jnp.asarray(s))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_output_range_signed():
+    rng = np.random.default_rng(0)
+    x, w, gain, offset, noise, _ = _rand_case(rng, 256, 256)
+    out = np.asarray(analog_vmm(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(gain), jnp.asarray(offset),
+                                jnp.asarray(noise), jnp.asarray(np.float32(1.0))))
+    assert out.min() >= hw.ADC_MIN and out.max() <= hw.ADC_MAX
+    assert np.all(out == np.round(out)), "ADC counts must be integers"
+
+
+def test_output_range_relu():
+    rng = np.random.default_rng(1)
+    x, w, gain, offset, noise, _ = _rand_case(rng, 256, 256)
+    out = np.asarray(analog_vmm(jnp.asarray(x), jnp.asarray(w),
+                                jnp.asarray(gain), jnp.asarray(offset),
+                                jnp.asarray(noise), jnp.asarray(np.float32(1.0)),
+                                relu_in_adc=True))
+    assert out.min() >= 0.0, "ReLU-in-ADC clamps negative deflections"
+
+
+def test_zero_input_gives_offset_noise_only():
+    """No events -> membranes stay at V_reset + offset + noise."""
+    n = 64
+    x = jnp.zeros(128)
+    w = jnp.ones((128, n)) * 63.0
+    gain = jnp.ones(n)
+    offset = jnp.full(n, 3.0)
+    noise = jnp.full(n, -1.0)
+    out = np.asarray(analog_vmm(x, w, gain, offset, noise,
+                                jnp.asarray(np.float32(0.01))))
+    np.testing.assert_array_equal(out, np.full(n, 2.0))
+
+
+def test_linearity_before_saturation():
+    """In the linear regime the ADC output is proportional to the input."""
+    k, n = 128, 32
+    w = jnp.ones((k, n)) * 10.0
+    gain = jnp.ones(n)
+    zero = jnp.zeros(n)
+    s = jnp.asarray(np.float32(0.01))
+    x1 = jnp.full(k, 4.0)
+    x2 = jnp.full(k, 8.0)
+    o1 = np.asarray(analog_vmm(x1, w, gain, zero, zero, s))
+    o2 = np.asarray(analog_vmm(x2, w, gain, zero, zero, s))
+    np.testing.assert_allclose(o2, 2 * o1, atol=1.0)
+
+
+def test_membrane_saturation_dominates_adc():
+    """Huge accumulation saturates at the membrane clip, then the ADC clamps."""
+    k, n = 256, 8
+    x = jnp.full(k, float(hw.X_MAX))
+    w = jnp.full((k, n), float(hw.W_MAX))
+    out = np.asarray(analog_vmm(x, w, jnp.ones(n), jnp.zeros(n), jnp.zeros(n),
+                                jnp.asarray(np.float32(1.0))))
+    np.testing.assert_array_equal(out, np.full(n, float(hw.ADC_MAX)))
+    out_neg = np.asarray(analog_vmm(x, -w, jnp.ones(n), jnp.zeros(n),
+                                    jnp.zeros(n), jnp.asarray(np.float32(1.0))))
+    np.testing.assert_array_equal(out_neg, np.full(n, float(hw.ADC_MIN)))
+
+
+def test_gain_is_per_column():
+    k, n = 64, 4
+    x = jnp.full(k, 10.0)
+    w = jnp.ones((k, n))
+    gain = jnp.asarray([0.5, 1.0, 2.0, 4.0], jnp.float32)
+    out = np.asarray(analog_vmm(x, w, gain, jnp.zeros(n), jnp.zeros(n),
+                                jnp.asarray(np.float32(0.1))))
+    np.testing.assert_allclose(out, [32.0, 64.0, 127.0, 127.0])
+
+
+def test_quantize_weights_grid():
+    w = jnp.asarray([-2.0, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0])
+    q = np.asarray(quantize_weights(w))
+    np.testing.assert_array_equal(q, [-63, -63, -32, 0, 32, 63, 63])
+
+
+def test_requantize_shift():
+    adc = jnp.asarray([-50.0, -1.0, 0.0, 3.0, 4.0, 127.0, 124.0])
+    out = np.asarray(requantize(adc))
+    np.testing.assert_array_equal(out, [0, 0, 0, 0, 1, 31, 31])
+
+
+def test_vmem_report_static():
+    r = vmem_report()
+    assert r["vmem_bytes_per_program"] < 16 * 2**20, "tile must fit VMEM"
+    assert r["grid_programs"] == hw.N_COLS // TILE_N
+    assert r["flops_per_program"] == 2 * hw.K_LOGICAL * TILE_N
+
+
+@pytest.mark.parametrize("k,n", [(256, 256), (128, 384), (256, 512)])
+def test_chip_sized_shapes(k, n):
+    """Shapes the partitioner actually emits (half-array and multi-half)."""
+    rng = np.random.default_rng(k * 1000 + n)
+    x, w, gain, offset, noise, scale = _rand_case(rng, k, n)
+    got = analog_vmm(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                     jnp.asarray(offset), jnp.asarray(noise),
+                     jnp.asarray(scale))
+    want = analog_vmm_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gain),
+                          jnp.asarray(offset), jnp.asarray(noise),
+                          jnp.asarray(scale))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,187 @@
+"""L2 model tests: weight packing, forward flavours, fused == 3-pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.hwmodel as hw
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(3))
+
+
+@pytest.fixture(scope="module")
+def params_q(params):
+    return {k: jnp.round(jnp.clip(v, -1, 1) * hw.W_MAX)
+            for k, v in params.items()}
+
+
+@pytest.fixture(scope="module")
+def calib():
+    return model.default_calib(jax.random.PRNGKey(4))
+
+
+def _rand_act(seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 32, hw.MODEL_IN).astype(np.float32))
+
+
+# --- packing ---------------------------------------------------------------
+
+def test_pack_conv_geometry(params_q):
+    m = np.asarray(model.pack_conv(params_q["wc"]))
+    assert m.shape == (hw.K_LOGICAL, hw.N_COLS)
+    # Only the first MODEL_IN rows may carry conv weights.
+    assert np.all(m[hw.MODEL_IN:] == 0)
+    # Column p*C+o gets kernel taps of channel o at position p.
+    wc = np.asarray(params_q["wc"])
+    p, o = 5, 3
+    col = m[:, p * hw.CONV_CHANNELS + o]
+    start = p * hw.CONV_STRIDE - hw.CONV_PAD
+    for c in range(hw.ECG_CHANNELS):
+        for t in range(hw.CONV_KERNEL):
+            ti = start + t
+            if 0 <= ti < hw.POOLED_LEN:
+                assert col[c * hw.POOLED_LEN + ti] == wc[o, c, t]
+
+
+def test_pack_conv_np_matches_jax(params_q):
+    a = np.asarray(model.pack_conv(params_q["wc"]))
+    b = model.pack_conv_np(np.asarray(params_q["wc"]))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pack_conv_replication(params_q):
+    """The same kernel is arranged 32x on the substrate (paper Fig 6)."""
+    m = np.asarray(model.pack_conv(params_q["wc"]))
+    # Interior positions (no padding truncation) are shifted copies.
+    p0, p1 = 4, 10
+    col0 = m[:, p0 * hw.CONV_CHANNELS]
+    col1 = m[:, p1 * hw.CONV_CHANNELS]
+    shift = (p1 - p0) * hw.CONV_STRIDE
+    np.testing.assert_array_equal(
+        col0[0:hw.POOLED_LEN - shift], col1[shift:hw.POOLED_LEN])
+
+
+def test_pack_fc1_blocks(params_q):
+    m = np.asarray(model.pack_fc1(params_q["w1"]))
+    w1 = np.asarray(params_q["w1"])
+    np.testing.assert_array_equal(m[0:128, 0:123], w1[0:128])
+    np.testing.assert_array_equal(m[128:256, 123:246], w1[128:256])
+    assert np.all(m[0:128, 123:246] == 0)
+    assert np.all(m[128:256, 0:123] == 0)
+    assert np.all(m[:, 246:] == 0)
+
+
+def test_pack_fc2_block(params_q):
+    m = np.asarray(model.pack_fc2(params_q["w2"]))
+    np.testing.assert_array_equal(m[0:123, 246:256], np.asarray(params_q["w2"]))
+    assert np.all(m[123:, :] == 0)
+    assert np.all(m[:, :246] == 0)
+
+
+# --- forward flavours ------------------------------------------------------
+
+def test_forward_hw_pallas_equals_ref(params_q, calib):
+    act = _rand_act(0)
+    noise = jnp.zeros((3, hw.N_COLS))
+    a = model.forward_hw(params_q, act, calib, noise)
+    b = model.forward_hw(params_q, act, calib, noise,
+                         vmm=ref.analog_vmm_ref)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forward_trainable_matches_hw_when_quantised(params, params_q, calib):
+    """Same maths: trainable fwd with max-pool vs hw fwd with avg-pool must
+    agree on the *pre-pool* path; compare via a distribution check on many
+    inputs (scores correlated, same scale)."""
+    noise = jnp.zeros((3, hw.N_COLS))
+    for seed in range(4):
+        act = _rand_act(seed)
+        hw_scores = np.asarray(model.forward_hw(params_q, act, calib, noise))
+        tr_scores = np.asarray(model.forward_trainable(params, act, calib,
+                                                       noise))
+        # max >= mean over each pool group, both within ADC range
+        assert np.all(tr_scores >= hw_scores - 1e-5)
+        assert np.all(np.abs(hw_scores) <= 127.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_forward_hw_deterministic_and_bounded(seed, params_q, calib):
+    act = _rand_act(seed)
+    noise = jnp.zeros((3, hw.N_COLS))
+    s1 = np.asarray(model.forward_hw(params_q, act, calib, noise,
+                                     vmm=ref.analog_vmm_ref))
+    s2 = np.asarray(model.forward_hw(params_q, act, calib, noise,
+                                     vmm=ref.analog_vmm_ref))
+    np.testing.assert_array_equal(s1, s2)
+    assert s1.shape == (hw.N_CLASSES,)
+    assert np.all(np.abs(s1) <= 127.0)
+
+
+def test_noise_changes_scores(params_q, calib):
+    act = _rand_act(1)
+    k = jax.random.PRNGKey(0)
+    n1 = hw.NOISE_SIGMA * jax.random.normal(k, (3, hw.N_COLS))
+    s0 = np.asarray(model.forward_hw(params_q, act, calib,
+                                     jnp.zeros((3, hw.N_COLS)),
+                                     vmm=ref.analog_vmm_ref))
+    s1 = np.asarray(model.forward_hw(params_q, act, calib, n1,
+                                     vmm=ref.analog_vmm_ref))
+    assert not np.array_equal(s0, s1)
+    # ... but only by a few LSB thanks to the output average-pooling.
+    assert np.all(np.abs(s0 - s1) < 10 * hw.NOISE_SIGMA)
+
+
+def test_grad_flow_all_params(params, calib):
+    act = _rand_act(2)
+    noise = jnp.zeros((3, hw.N_COLS))
+
+    def loss(p):
+        return model.forward_trainable(p, act, calib, noise).sum()
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        assert float(jnp.abs(v).sum()) > 0.0, f"dead gradient for {k}"
+
+
+def test_mock_mode_runs(params):
+    s = np.asarray(model.forward_mock(params, _rand_act(5)))
+    assert s.shape == (hw.N_CLASSES,)
+
+
+def test_fused_fn_equals_composition(params_q, calib):
+    pq_np = {k: np.asarray(v) for k, v in params_q.items()}
+    calib_np = {k: np.asarray(v) for k, v in calib.items()}
+    fn = model.fused_inference_fn(pq_np, calib_np)
+    zero = jnp.zeros((3, hw.N_COLS))
+    for seed in range(3):
+        act = _rand_act(seed + 10)
+        fused = np.asarray(fn(act)[0])
+        composed = np.asarray(model.forward_hw(params_q, act, calib, zero))
+        np.testing.assert_array_equal(fused, composed)
+
+
+def test_fused_param_fn_equals_baked(params_q, calib):
+    """The exportable parameterised fused fn (weights as arguments — HLO
+    text cannot carry large constants) must equal the baked closure."""
+    pq_np = {k: np.asarray(v) for k, v in params_q.items()}
+    calib_np = {k: np.asarray(v) for k, v in calib.items()}
+    baked = model.fused_inference_fn(pq_np, calib_np)
+    param = model.fused_inference_param_fn()
+    wm_c = model.pack_conv(params_q["wc"])
+    wm_1 = model.pack_fc1(params_q["w1"])
+    wm_2 = model.pack_fc2(params_q["w2"])
+    for seed in range(3):
+        act = _rand_act(seed + 20)
+        a = np.asarray(baked(act)[0])
+        b = np.asarray(param(act, wm_c, wm_1, wm_2, calib["gain"],
+                             calib["offset"])[0])
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,111 @@
+"""Training-loop tests: optimizer, scale calibration, metrics, smoke-train."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import compile.hwmodel as hw
+from compile import data, model, train
+from compile.kernels import ref
+
+
+def test_adam_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = train.adam_init(params)
+    for _ in range(400):
+        g = {"w": 2 * params["w"]}
+        params, opt = train.adam_update(params, g, opt, lr=5e-2)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_adam_bias_correction_first_step():
+    """First Adam step must be ~lr * sign(grad) (bias-corrected)."""
+    params = {"w": jnp.asarray([0.0])}
+    opt = train.adam_init(params)
+    new, _ = train.adam_update(params, {"w": jnp.asarray([10.0])}, opt, lr=1e-2)
+    np.testing.assert_allclose(float(new["w"][0]), -1e-2, rtol=1e-3)
+
+
+def test_calibrate_scales_targets_range():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    calib = model.default_calib(jax.random.PRNGKey(1))
+    xs, _ = data.generate_dataset(64, seed=2)
+    acts = data.preprocess_batch(xs)
+    scales = train.calibrate_scales(params, acts, calib)
+    assert len(scales) == 3 and all(s > 0 for s in scales)
+    # Verify the conv layer's 99th-percentile |v| is near the target.
+    q = {k: np.asarray(ref.quantize_weights(v)) for k, v in params.items()}
+    wm_c = model.pack_conv_np(q["wc"])
+    x0 = np.zeros((len(acts), hw.K_LOGICAL), np.float32)
+    x0[:, 0:hw.MODEL_IN] = acts
+    v = scales[0] * (x0 @ wm_c) * np.asarray(calib["gain"])[0]
+    assert 80.0 < np.percentile(np.abs(v), 99) < 125.0
+
+
+def test_metrics_from_scores():
+    scores = np.array([[1, 0], [0, 1], [1, 0], [0, 1]])
+    labels = np.array([0, 0, 1, 1])
+    det, fp, acc = train.metrics_from_scores(scores, labels)
+    assert det == 0.5 and fp == 0.5 and acc == 0.5
+
+
+def test_metrics_perfect():
+    scores = np.array([[9, 0], [0, 9]])
+    labels = np.array([0, 1])
+    det, fp, acc = train.metrics_from_scores(scores, labels)
+    assert (det, fp, acc) == (1.0, 0.0, 1.0)
+
+
+def test_single_training_step_reduces_loss():
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    calib = model.default_calib(jax.random.PRNGKey(1))
+    xs, ys = data.generate_dataset(64, seed=5)
+    acts = jnp.asarray(data.preprocess_batch(xs))
+    scales = train.calibrate_scales(params, np.asarray(acts), calib)
+    step, batch_loss = train.make_step(calib, scales)
+    opt = train.adam_init(params)
+    noise = jnp.zeros((64, 3, hw.N_COLS))
+    labels = jnp.asarray(ys)
+    l0 = float(batch_loss(params, acts, noise, labels))
+    p, o = params, opt
+    for _ in range(15):
+        p, o, loss = step(p, o, acts, noise, labels)
+    l1 = float(batch_loss(p, acts, noise, labels))
+    assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+
+def test_pos_weight_shifts_operating_point():
+    """Higher pos_weight must penalise missed A-fib more."""
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    calib = model.default_calib(jax.random.PRNGKey(1))
+    scales = (0.05, 0.1, 0.1)
+    _, loss_plain = train.make_step(calib, scales, pos_weight=1.0)
+    _, loss_weighted = train.make_step(calib, scales, pos_weight=3.0)
+    act = jnp.asarray(np.random.default_rng(0).integers(
+        0, 32, (4, hw.MODEL_IN)).astype(np.float32))
+    noise = jnp.zeros((4, 3, hw.N_COLS))
+    pos_labels = jnp.asarray([1, 1, 1, 1])
+    lp = float(loss_plain(params, act, noise, pos_labels))
+    lw = float(loss_weighted(params, act, noise, pos_labels))
+    np.testing.assert_allclose(lw, 3.0 * lp, rtol=1e-5)
+
+
+def test_ecg_bin_roundtrip(tmp_path):
+    xs, ys = data.generate_dataset(4, seed=6)
+    path = tmp_path / "t.bin"
+    train.write_ecg_bin(str(path), xs, ys)
+    raw = path.read_bytes()
+    import struct
+    magic, n, ch, w = struct.unpack_from("<IIII", raw, 0)
+    assert magic == train.MAGIC and n == 4
+    assert ch == hw.ECG_CHANNELS and w == hw.ECG_WINDOW
+    off = 16
+    for i in range(n):
+        label = raw[off]; off += 1
+        assert label == ys[i]
+        t = np.frombuffer(raw, "<u2", ch * w, off).reshape(ch, w)
+        np.testing.assert_array_equal(t, xs[i])
+        off += ch * w * 2

@@ -1,0 +1,94 @@
+//! Bench: regenerate the data behind the paper's figures.
+//!
+//! * Fig 4 — membrane-integration trace of one neuron column.
+//! * Fig 7 — preprocessing-chain stages on one synthetic trace.
+//! * Fig 8 — training/validation curve (from the python artifact, since
+//!   training is a build-time activity; this harness re-evaluates the final
+//!   model on the held-out set to confirm the curve's endpoint).
+//!
+//! Each section prints the series the figure plots (CSV-ish rows).
+
+use bss2::asic::array::{AnalogArray, ColumnCalib};
+use bss2::asic::consts as c;
+use bss2::coordinator::batch::run_block;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::ecg::gen::generate_trace;
+use bss2::fpga::preprocess;
+use bss2::runtime::ArtifactDir;
+use bss2::util::benchkit::section;
+
+fn fig4() {
+    section("Fig 4: membrane voltage during one integration cycle");
+    let mut array = AnalogArray::new(16, 1, ColumnCalib::nominal(1));
+    let w: Vec<i8> = (0..16).map(|r| if r % 3 == 2 { -20 } else { 30 }).collect();
+    array.load_weights(&w);
+    let batches: Vec<Vec<u8>> = (0..16)
+        .map(|r| {
+            let mut b = vec![0u8; 16];
+            b[r] = (5 + 2 * (r % 13)) as u8;
+            b
+        })
+        .collect();
+    let trace = array.membrane_trace(&batches, 0, 0.012);
+    println!("t_ns,v_membrane_lsb");
+    for (i, v) in trace.iter().enumerate() {
+        println!("{},{:.2}", (i + 1) * 8, v);
+    }
+    println!("-> V_out = {:.1} LSB after {} events (paper Fig 4: the final \
+              voltage represents the analog VMM result)", trace.last().unwrap(), 16);
+}
+
+fn fig7() {
+    section("Fig 7: preprocessing stages (sinus example, first 8 pooled bins)");
+    let trace = generate_trace(42, false, 1.0);
+    let st = preprocess::fig7_trace(&trace.samples[0]);
+    println!("bin,raw_first_sample,pooled_maxmin,act_u5");
+    for bin in 0..8 {
+        println!(
+            "{},{},{},{}",
+            bin,
+            st.raw[bin * c::POOL_WINDOW],
+            st.pooled[bin],
+            st.activations[bin]
+        );
+    }
+    let nz = st.activations.iter().filter(|&&a| a > 0).count();
+    println!(
+        "-> {} of {} bins active; activation range 0..{}",
+        nz,
+        st.activations.len(),
+        st.activations.iter().max().unwrap()
+    );
+}
+
+fn fig8(dir: &ArtifactDir) -> anyhow::Result<()> {
+    section("Fig 8: training / validation metrics (build-time artifact)");
+    let csv = std::fs::read_to_string(dir.path("fig8_training.csv"))?;
+    print!("{csv}");
+    // Endpoint check: re-evaluate the shipped model on the held-out set.
+    let ds = Dataset::load(&dir.ecg_test())?;
+    let traces: Vec<_> = ds.traces.iter().map(|t| (t.clone(), t.label)).collect();
+    let mut engine = Engine::from_artifacts(dir, EngineConfig::default())?;
+    let rep = run_block(&mut engine, &traces)?;
+    println!(
+        "-> shipped model on held-out set: det {:.3} fp {:.3} acc {:.3} \
+         (paper endpoint: det 0.937, fp 0.140)",
+        rep.confusion.detection_rate(),
+        rep.confusion.false_positive_rate(),
+        rep.confusion.accuracy()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    fig4();
+    fig7();
+    let dir = ArtifactDir::default_location();
+    if dir.exists() {
+        fig8(&dir)?;
+    } else {
+        println!("\n[figures] artifacts missing — Fig 8 section skipped");
+    }
+    Ok(())
+}

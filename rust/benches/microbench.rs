@@ -1,0 +1,131 @@
+//! Microbenchmarks of the L3 substrate hot paths (profiling targets for the
+//! §Perf pass): preprocessing chain, event generation + routing, SIMD
+//! interpreter, native array integration, JSON parsing, ECG generation.
+
+use bss2::asic::array::{AnalogArray, ColumnCalib};
+use bss2::asic::consts as c;
+use bss2::asic::router::EventRouter;
+use bss2::asic::simd::{ChipOps, SimdCpu};
+use bss2::ecg::gen::generate_trace;
+use bss2::fpga::eventgen::{generate, EventLut};
+use bss2::fpga::preprocess::{self, StreamingPreprocessor};
+use bss2::nn::graph;
+use bss2::util::benchkit::{section, Bench};
+use bss2::util::json::Json;
+use bss2::util::rng::SplitMix64;
+use std::time::Duration;
+
+struct NopChip;
+impl ChipOps for NopChip {
+    fn send_events(&mut self, _: u8, _: &[i32]) {}
+    fn run_vmm(&mut self, _: u8) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn read_adc(&mut self, _: u8) -> Vec<i32> {
+        vec![1; c::N_COLS]
+    }
+    fn load_slot(&mut self, _: u8) -> Vec<i32> {
+        vec![3; c::MODEL_IN]
+    }
+    fn store_slot(&mut self, _: u8, _: &[i32]) {}
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(1);
+    let trace = generate_trace(1, true, 1.0);
+
+    section("FPGA preprocessing");
+    Bench::new("batch chain (2 ch x 2048 samples)")
+        .iters(100, 1_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(preprocess::preprocess(&trace.samples));
+        })
+        .print();
+    Bench::new("streaming chain (1 ch x 2048 samples)")
+        .iters(100, 1_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            let mut sp = StreamingPreprocessor::new();
+            sp.push_channel(&trace.samples[0]);
+            std::hint::black_box(sp.out);
+        })
+        .print();
+
+    section("event generation + routing");
+    let acts: Vec<u8> = (0..c::K_LOGICAL).map(|_| rng.below(32) as u8).collect();
+    let lut = EventLut::identity(0, c::K_LOGICAL);
+    Bench::new("eventgen (256 elements)")
+        .iters(1000, 5_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(generate(&acts, &lut, 0));
+        })
+        .print();
+    let mut router = EventRouter::identity();
+    let (events, _) = generate(&acts, &lut, 0);
+    Bench::new("router assemble (one burst)")
+        .iters(1000, 5_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(router.assemble(&events));
+        })
+        .print();
+
+    section("SIMD instruction stream (chip ops stubbed)");
+    let stream = graph::ecg_network().lower();
+    let mut cpu = SimdCpu::new();
+    let mut env = NopChip;
+    Bench::new("full ECG stream interpret")
+        .iters(1000, 5_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(cpu.execute(&stream, &mut env).unwrap());
+        })
+        .print();
+
+    section("native analog array");
+    let mut array = AnalogArray::new(
+        c::K_LOGICAL,
+        c::N_COLS,
+        ColumnCalib::fixed_pattern(c::N_COLS, &mut rng),
+    );
+    let w: Vec<i8> = (0..c::K_LOGICAL * c::N_COLS)
+        .map(|_| (rng.below(127) as i32 - 63) as i8)
+        .collect();
+    array.load_weights(&w);
+    let x: Vec<u8> = (0..c::K_LOGICAL).map(|_| rng.below(32) as u8).collect();
+    let noise = vec![0.5f32; c::N_COLS];
+    Bench::new("integrate 256x256")
+        .iters(100, 1_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(array.integrate(&x, 0.01, &noise, false));
+        })
+        .print();
+
+    section("substrate utilities");
+    let weights_like = {
+        let vals: Vec<String> = (0..10_000).map(|i| (i % 127 - 63).to_string()).collect();
+        format!("{{\"w\":[{}]}}", vals.join(","))
+    };
+    Bench::new("json parse (10k-int array)")
+        .iters(20, 100_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            std::hint::black_box(Json::parse(&weights_like).unwrap());
+        })
+        .print();
+    let mut seed = 0u64;
+    Bench::new("ECG trace generation (2 ch x 2048)")
+        .iters(20, 100_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            seed += 1;
+            std::hint::black_box(generate_trace(seed, seed % 2 == 0, 1.0));
+        })
+        .print();
+}
+
+// NOTE: the PJRT perf comparison (staged weights vs re-uploaded weights)
+// lives in benches/perf_pass.rs — see EXPERIMENTS.md §Perf.

@@ -1,0 +1,101 @@
+//! §Perf harness: measured before/after for the L3 hot-path optimisations
+//! (EXPERIMENTS.md §Perf).  Each section isolates ONE change:
+//!
+//!  A. weights re-uploaded every pass (the naive baseline)  vs
+//!  B. weights staged once as device buffers (`execute_b`)  — the deployed
+//!     configuration, mirroring the chip's "synapse matrix is filled once".
+//!  C. end-to-end classify_acts (3 passes + SIMD interpretation).
+//!  D. noise-sampling cost in the hot loop.
+
+use bss2::asic::consts as c;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::fpga::preprocess;
+use bss2::nn::weights::TrainedModel;
+use bss2::runtime::{ArtifactDir, Runtime};
+use bss2::util::benchkit::{section, Bench};
+use bss2::util::rng::SplitMix64;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactDir::default_location();
+    if !dir.exists() {
+        println!("[perf] artifacts missing — run `make artifacts`; skipping");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let vmm = rt.load_vmm(&dir.vmm_hlo())?;
+    let model = TrainedModel::load(&dir.weights())?;
+    let w = &model.pass_weights[0];
+    let gain = &model.gain[0];
+    let offset = &model.offset[0];
+    let scale = model.scales[0];
+    let mut rng = SplitMix64::new(3);
+    let x: Vec<f32> = (0..c::K_LOGICAL).map(|_| rng.below(32) as f32).collect();
+    let noise = vec![0.0f32; c::N_COLS];
+
+    section("A. naive: re-stage weights every pass (baseline)");
+    let r_naive = Bench::new("vmm pass, weights re-uploaded")
+        .iters(30, 20_000)
+        .target(Duration::from_secs(2))
+        .run(|| {
+            let staged = vmm.stage_pass(w, gain, offset, scale).unwrap();
+            std::hint::black_box(vmm.run_pass(&staged, &x, &noise).unwrap());
+        });
+    r_naive.print();
+
+    section("B. deployed: weights staged once (execute_b)");
+    let staged = vmm.stage_pass(w, gain, offset, scale)?;
+    let r_staged = Bench::new("vmm pass, staged weights")
+        .iters(30, 20_000)
+        .target(Duration::from_secs(2))
+        .run(|| {
+            std::hint::black_box(vmm.run_pass(&staged, &x, &noise).unwrap());
+        });
+    r_staged.print();
+    println!(
+        "  staging speedup: {:.2}x ({} -> {})",
+        r_naive.summary.mean / r_staged.summary.mean,
+        bss2::util::benchkit::fmt_time(r_naive.summary.mean),
+        bss2::util::benchkit::fmt_time(r_staged.summary.mean)
+    );
+
+    section("C. end-to-end classify_acts (3 passes + SIMD)");
+    let ds = Dataset::load(&dir.ecg_test())?;
+    let acts: Vec<i32> = preprocess::preprocess(&ds.traces[0].samples)
+        .iter()
+        .map(|&a| a as i32)
+        .collect();
+    let mut engine = Engine::from_artifacts(&dir, EngineConfig::default())?;
+    Bench::new("classify_acts (PJRT, noise on)")
+        .iters(30, 20_000)
+        .target(Duration::from_secs(2))
+        .run(|| {
+            std::hint::black_box(engine.classify_acts(&acts).unwrap());
+        })
+        .print();
+    let mut engine_n = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: false, ..Default::default() },
+    )?;
+    Bench::new("classify_acts (native, noise on)")
+        .iters(30, 20_000)
+        .target(Duration::from_secs(2))
+        .run(|| {
+            std::hint::black_box(engine_n.classify_acts(&acts).unwrap());
+        })
+        .print();
+
+    section("D. noise-sampling cost (256 gaussians/pass)");
+    let mut nrng = SplitMix64::new(7);
+    Bench::new("sample 256 gaussians")
+        .iters(1000, 2_000_000)
+        .target(Duration::from_secs(1))
+        .run(|| {
+            let v: Vec<f32> =
+                (0..c::N_COLS).map(|_| (2.0 * nrng.gauss()) as f32).collect();
+            std::hint::black_box(v);
+        })
+        .print();
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Bench: paper Table 1 — the end-to-end 500-trace block measurement.
+//!
+//! Reports every row of the table (simulated time/energy/accuracy via the
+//! §IV procedure) plus host wall-clock throughput of the two backends.
+//! Absolute numbers are expected to match the paper's *shape* (who costs
+//! what, ratios); see EXPERIMENTS.md.
+
+use bss2::coordinator::batch::run_block;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::runtime::ArtifactDir;
+use bss2::util::benchkit::{fmt_time, section, Bench};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = ArtifactDir::default_location();
+    if !dir.exists() {
+        println!("[table1] artifacts missing — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let ds = Dataset::load(&dir.ecg_test())?;
+    let traces: Vec<_> = ds
+        .traces
+        .iter()
+        .map(|t| (t.clone(), t.label))
+        .collect();
+
+    section("Table 1: full 500-trace block (PJRT artifact backend)");
+    let mut engine = Engine::from_artifacts(&dir, EngineConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let rep = run_block(&mut engine, &traces)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.table1());
+    println!(
+        "host wall-clock: {} for {} traces ({} each)",
+        fmt_time(wall),
+        traces.len(),
+        fmt_time(wall / traces.len() as f64)
+    );
+
+    section("Table 1: native array-model backend (cross-check)");
+    let mut engine_n = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: false, ..Default::default() },
+    )?;
+    let t0 = std::time::Instant::now();
+    let rep_n = run_block(&mut engine_n, &traces)?;
+    let wall_n = t0.elapsed().as_secs_f64();
+    println!(
+        "native backend: det {:.1} % fp {:.1} % (PJRT: det {:.1} % fp {:.1} %)",
+        rep_n.confusion.detection_rate() * 100.0,
+        rep_n.confusion.false_positive_rate() * 100.0,
+        rep.confusion.detection_rate() * 100.0,
+        rep.confusion.false_positive_rate() * 100.0,
+    );
+    println!(
+        "host wall-clock: {} ({} each)",
+        fmt_time(wall_n),
+        fmt_time(wall_n / traces.len() as f64)
+    );
+
+    section("single-inference host latency (PJRT backend)");
+    let one = vec![traces[0].clone()];
+    let r = Bench::new("classify one trace (end-to-end)")
+        .warmup(3)
+        .iters(20, 2000)
+        .target(Duration::from_secs(3))
+        .run(|| {
+            let _ = run_block(&mut engine, &one).unwrap();
+        });
+    r.print();
+    println!(
+        "simulated: {} per inference (paper: 276 µs)",
+        fmt_time(rep.time_per_inference_s)
+    );
+    Ok(())
+}

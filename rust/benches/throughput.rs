@@ -1,0 +1,83 @@
+//! Bench: paper Eq. 1–3 — synapse-array rates and area efficiency, plus the
+//! measured VMM-pass rate of both backends (how fast our substrate actually
+//! executes integration cycles, host wall-clock).
+
+use bss2::asic::array::{AnalogArray, ColumnCalib};
+use bss2::asic::consts as c;
+use bss2::runtime::{ArtifactDir, Runtime};
+use bss2::util::benchkit::{section, Bench};
+use bss2::util::rng::SplitMix64;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    section("paper equations (architecture model)");
+    println!(
+        "Eq. 1  peak synapse-array rate:   {:7.2} TOp/s   (paper: 32.8)",
+        c::peak_ops_per_s() / 1e12
+    );
+    println!(
+        "Eq. 2  effective VMM rate:        {:7.2} GOp/s   (paper: ~52)",
+        c::effective_ops_per_s() / 1e9
+    );
+    println!(
+        "Eq. 3  MAC area efficiency:       {:7.2} TOp/(s mm^2) (paper: 2.6)",
+        c::area_efficiency_tops_mm2()
+    );
+    println!(
+        "       full-die efficiency goal:  {:7.2} TOp/(s mm^2) (paper target: >1)",
+        c::peak_ops_per_s() / 1e12 / c::DIE_MM2
+    );
+
+    section("native array model: integration-cycle rate (host)");
+    let mut rng = SplitMix64::new(5);
+    let mut array = AnalogArray::new(
+        c::K_LOGICAL,
+        c::N_COLS,
+        ColumnCalib::fixed_pattern(c::N_COLS, &mut rng),
+    );
+    let w: Vec<i8> = (0..c::K_LOGICAL * c::N_COLS)
+        .map(|_| (rng.below(127) as i32 - 63) as i8)
+        .collect();
+    array.load_weights(&w);
+    let x: Vec<u8> = (0..c::K_LOGICAL).map(|_| rng.below(32) as u8).collect();
+    let noise = vec![0.0f32; c::N_COLS];
+    let r = Bench::new("native integrate (256x256 pass)")
+        .iters(50, 100_000)
+        .target(Duration::from_secs(2))
+        .run(|| {
+            std::hint::black_box(array.integrate(&x, 0.01, &noise, false));
+        });
+    r.print();
+    let macs = (c::K_LOGICAL * c::N_COLS) as f64;
+    println!(
+        "  -> {:.2} GOp/s host-equivalent (2 Op/synapse; chip Eq. 2: {:.1} GOp/s)",
+        r.per_second(2.0 * macs) / 1e9,
+        c::effective_ops_per_s() / 1e9
+    );
+
+    let dir = ArtifactDir::default_location();
+    if dir.exists() {
+        section("PJRT artifact: integration-cycle rate (host)");
+        let rt = Runtime::cpu()?;
+        let vmm = rt.load_vmm(&dir.vmm_hlo())?;
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let gain = vec![1.0f32; c::N_COLS];
+        let offset = vec![0.0f32; c::N_COLS];
+        let staged = vmm.stage_pass(&wf, &gain, &offset, 0.01)?;
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let r = Bench::new("pjrt vmm pass (256x256)")
+            .iters(50, 100_000)
+            .target(Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(vmm.run_pass(&staged, &xf, &noise).unwrap());
+            });
+        r.print();
+        println!(
+            "  -> {:.2} GOp/s host-equivalent",
+            r.per_second(2.0 * macs) / 1e9
+        );
+    } else {
+        println!("\n[throughput] artifacts missing — PJRT section skipped");
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Behavioural model of one analog synapse-array half (paper §II-A, Fig 4).
+//!
+//! This is the *native rust* implementation of exactly the semantics the L1
+//! pallas kernel implements (and which `artifacts/vmm.hlo.txt` executes via
+//! PJRT).  It serves three purposes:
+//!   1. the reference cross-check against the compiled artifact
+//!      (`tests/artifact_roundtrip.rs` must see identical ADC counts),
+//!   2. the "mock-mode" fallback engine when artifacts are not present,
+//!   3. the membrane-trace instrumentation behind Fig 4.
+//!
+//! Semantics per integration cycle:
+//! ```text
+//! acc[n]  = Σ_k x[k] · w[k,n]                    (charge accumulation)
+//! v[n]    = scale · gain[n] · acc[n] + offset[n] + noise[n]
+//! v[n]    = clip(v, ±MEMBRANE_CLIP)              (membrane saturation)
+//! adc[n]  = clip(round(v[n]), ADC_MIN, ADC_MAX)  (8-bit parallel readout)
+//! ```
+
+use super::consts as c;
+
+/// Static per-column analog state of one array half (from calibration).
+#[derive(Debug, Clone)]
+pub struct ColumnCalib {
+    /// Per-column transconductance gain (~1 after calibration).
+    pub gain: Vec<f32>,
+    /// Per-column membrane/ADC offset [LSB].
+    pub offset: Vec<f32>,
+}
+
+impl ColumnCalib {
+    pub fn nominal(n: usize) -> ColumnCalib {
+        ColumnCalib { gain: vec![1.0; n], offset: vec![0.0; n] }
+    }
+
+    /// Draw a fixed-pattern realisation (what the real chip's calibration
+    /// routines measure; Weis et al.).
+    pub fn fixed_pattern(n: usize, rng: &mut crate::util::rng::SplitMix64) -> ColumnCalib {
+        let gain = (0..n)
+            .map(|_| (1.0 + c::GAIN_FPN_SIGMA * rng.gauss()) as f32)
+            .collect();
+        let offset = (0..n)
+            .map(|_| (c::OFFSET_FPN_SIGMA * rng.gauss()) as f32)
+            .collect();
+        ColumnCalib { gain, offset }
+    }
+}
+
+/// One synapse-array half holding a static 6-bit weight matrix.
+#[derive(Debug, Clone)]
+pub struct AnalogArray {
+    pub k: usize,
+    pub n: usize,
+    /// Row-major `[k][n]` signed 6-bit weights.
+    pub weights: Vec<i8>,
+    pub calib: ColumnCalib,
+}
+
+impl AnalogArray {
+    pub fn new(k: usize, n: usize, calib: ColumnCalib) -> AnalogArray {
+        assert_eq!(calib.gain.len(), n);
+        AnalogArray { k, n, weights: vec![0; k * n], calib }
+    }
+
+    /// Write the weight matrix (the "synapse matrix is filled with weight
+    /// data" step of the paper's dataflow).  Values are clamped to the
+    /// 6-bit grid like the synapse SRAM would.
+    pub fn load_weights(&mut self, w: &[i8]) {
+        assert_eq!(w.len(), self.k * self.n);
+        for (dst, &src) in self.weights.iter_mut().zip(w) {
+            *dst = src.clamp(-(c::W_MAX as i8), c::W_MAX as i8);
+        }
+    }
+
+    #[inline]
+    pub fn weight(&self, row: usize, col: usize) -> i8 {
+        self.weights[row * self.n + col]
+    }
+
+    /// One full integration cycle: 5-bit activations in, 8-bit ADC counts
+    /// out.  `noise` is this cycle's temporal-noise realisation [LSB].
+    pub fn integrate(
+        &self,
+        x: &[u8],
+        scale: f32,
+        noise: &[f32],
+        relu_in_adc: bool,
+    ) -> Vec<i16> {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(noise.len(), self.n);
+        let acc = self.accumulate(x);
+        self.digitize(&acc, scale, noise, relu_in_adc)
+    }
+
+    /// Integer charge accumulation only (exact; used by Fig 4 and tests).
+    pub fn accumulate(&self, x: &[u8]) -> Vec<i32> {
+        let mut acc = vec![0i32; self.n];
+        for (row, &xv) in x.iter().enumerate() {
+            if xv == 0 {
+                continue; // no event -> no synaptic current
+            }
+            let xv = xv.min(c::X_MAX as u8) as i32;
+            let wrow = &self.weights[row * self.n..(row + 1) * self.n];
+            for (a, &w) in acc.iter_mut().zip(wrow) {
+                *a += xv * w as i32;
+            }
+        }
+        acc
+    }
+
+    /// Analog front-end + ADC conversion of accumulated charge.
+    pub fn digitize(
+        &self,
+        acc: &[i32],
+        scale: f32,
+        noise: &[f32],
+        relu_in_adc: bool,
+    ) -> Vec<i16> {
+        let lo = if relu_in_adc { 0.0 } else { c::ADC_MIN as f32 };
+        acc.iter()
+            .enumerate()
+            .map(|(n, &a)| {
+                let v = scale * self.calib.gain[n] * a as f32
+                    + self.calib.offset[n]
+                    + noise[n];
+                let v = v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP);
+                // f32 round: ties away from zero — identical to jnp.round
+                // for our value range? jnp.round is round-half-even; match it.
+                let r = round_half_even(v);
+                r.clamp(lo, c::ADC_MAX as f32) as i16
+            })
+            .collect()
+    }
+
+    /// Pre-ADC membrane voltage trace for a staged sequence of event
+    /// sub-vectors — instrumentation behind paper Fig 4.  Returns the
+    /// voltage of `col` after each event batch.
+    pub fn membrane_trace(
+        &self,
+        batches: &[Vec<u8>],
+        col: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        let mut acc = 0i32;
+        let mut out = Vec::with_capacity(batches.len());
+        for batch in batches {
+            assert_eq!(batch.len(), self.k);
+            for (row, &xv) in batch.iter().enumerate() {
+                acc += (xv.min(c::X_MAX as u8) as i32)
+                    * self.weight(row, col) as i32;
+            }
+            let v = scale * self.calib.gain[col] * acc as f32
+                + self.calib.offset[col];
+            out.push(v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP));
+        }
+        out
+    }
+}
+
+/// Round-half-to-even, matching `jnp.round` / IEEE-754 roundTiesToEven so the
+/// rust model agrees bit-for-bit with the pallas kernel and the HLO artifact.
+#[inline]
+pub fn round_half_even(v: f32) -> f32 {
+    let r = v.round(); // ties away from zero
+    if (v - v.trunc()).abs() == 0.5 && (r as i64) % 2 != 0 {
+        r - v.signum()
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn small_array() -> AnalogArray {
+        let mut a = AnalogArray::new(4, 3, ColumnCalib::nominal(3));
+        #[rustfmt::skip]
+        let w: Vec<i8> = vec![
+            1, -2, 3,
+            4, 5, -6,
+            -7, 8, 9,
+            10, -11, 12,
+        ];
+        a.load_weights(&w);
+        a
+    }
+
+    #[test]
+    fn accumulate_matches_manual_dot() {
+        let a = small_array();
+        let acc = a.accumulate(&[1, 2, 0, 3]);
+        // col0: 1*1 + 2*4 + 3*10 = 39; col1: -2 + 10 - 33 = -25;
+        // col2: 3 - 12 + 36 = 27
+        assert_eq!(acc, vec![39, -25, 27]);
+    }
+
+    #[test]
+    fn zero_input_zero_charge() {
+        let a = small_array();
+        assert_eq!(a.accumulate(&[0, 0, 0, 0]), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn weights_clamped_to_grid() {
+        let mut a = AnalogArray::new(1, 2, ColumnCalib::nominal(2));
+        a.load_weights(&[127i8 as i8, -128i8 as i8]);
+        assert_eq!(a.weight(0, 0), 63);
+        assert_eq!(a.weight(0, 1), -63);
+    }
+
+    #[test]
+    fn activations_clamped_to_5bit() {
+        let mut a = AnalogArray::new(1, 1, ColumnCalib::nominal(1));
+        a.load_weights(&[1]);
+        assert_eq!(a.accumulate(&[255]), vec![31]);
+    }
+
+    #[test]
+    fn digitize_applies_gain_offset_noise() {
+        let mut a = AnalogArray::new(1, 2, ColumnCalib::nominal(2));
+        a.calib.gain = vec![2.0, 1.0];
+        a.calib.offset = vec![0.5, -1.0];
+        a.load_weights(&[10, 10]);
+        let out = a.integrate(&[10], 0.1, &[0.0, 0.25], false);
+        // col0: 0.1*2*100 + 0.5 = 20.5 -> round-half-even = 20
+        // col1: 0.1*1*100 - 1.0 + 0.25 = 9.25 -> 9
+        assert_eq!(out, vec![20, 9]);
+    }
+
+    #[test]
+    fn saturation_and_adc_clip() {
+        let mut a = AnalogArray::new(2, 1, ColumnCalib::nominal(1));
+        a.load_weights(&[63, 63]);
+        let hi = a.integrate(&[31, 31], 1.0, &[0.0], false);
+        assert_eq!(hi, vec![c::ADC_MAX as i16]);
+        a.load_weights(&[-63, -63]);
+        let lo = a.integrate(&[31, 31], 1.0, &[0.0], false);
+        assert_eq!(lo, vec![c::ADC_MIN as i16]);
+        let relu = a.integrate(&[31, 31], 1.0, &[0.0], true);
+        assert_eq!(relu, vec![0]);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.2), 1.0);
+        assert_eq!(round_half_even(-1.7), -2.0);
+    }
+
+    #[test]
+    fn membrane_trace_monotone_accumulation() {
+        let mut a = AnalogArray::new(2, 1, ColumnCalib::nominal(1));
+        a.load_weights(&[5, 5]);
+        let batches = vec![vec![1, 0], vec![0, 2], vec![3, 3]];
+        let tr = a.membrane_trace(&batches, 0, 0.1);
+        assert_eq!(tr.len(), 3);
+        assert!(tr[0] < tr[1] && tr[1] < tr[2]);
+        // Final value equals the full integration (before noise/rounding).
+        let acc = a.accumulate(&[4, 5]);
+        assert!((tr[2] - 0.1 * acc[0] as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fixed_pattern_statistics() {
+        let mut rng = SplitMix64::new(3);
+        let cal = ColumnCalib::fixed_pattern(4096, &mut rng);
+        let gm: f32 = cal.gain.iter().sum::<f32>() / 4096.0;
+        assert!((gm - 1.0).abs() < 0.01, "gain mean {gm}");
+        let om: f32 = cal.offset.iter().sum::<f32>() / 4096.0;
+        assert!(om.abs() < 0.2, "offset mean {om}");
+    }
+}

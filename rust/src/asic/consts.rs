@@ -1,0 +1,142 @@
+//! Hardware constants of the BSS-2 ASIC model — the rust mirror of
+//! `python/compile/hwmodel.py`.  `artifacts/manifest.json` carries the
+//! python values; `tests/artifact_roundtrip.rs` cross-checks every field so
+//! the two sides can never drift apart silently.
+
+// --- Array geometry ----------------------------------------------------------
+/// Logical signed inputs per array half (with synapse address matching).
+pub const K_LOGICAL: usize = 256;
+/// Signed inputs that map 1:1 onto physical excitatory/inhibitory row pairs.
+pub const K_SIGNED: usize = 128;
+/// Physical synapse rows per array half.
+pub const ROWS_PHYS: usize = 256;
+/// Neuron columns per array half.
+pub const N_COLS: usize = 256;
+/// Array halves on the chip (top: conv, bottom: fc1+fc2).
+pub const N_HALVES: usize = 2;
+/// Quadrants of 128 neurons x (128x256) synapses (paper Fig 3).
+pub const N_QUADRANTS: usize = 4;
+/// Total neurons on the chip.
+pub const N_NEURONS: usize = 512;
+/// Total synapses on the chip (256 x 512, paper Eq. 1).
+pub const N_SYNAPSES: usize = 256 * 512;
+
+// --- Resolutions --------------------------------------------------------------
+/// 6-bit weight magnitude.
+pub const W_MAX: i32 = 63;
+/// 5-bit input activation (pulse length).
+pub const X_MAX: i32 = 31;
+/// Signed 8-bit ADC range relative to V_reset.
+pub const ADC_MIN: i32 = -128;
+pub const ADC_MAX: i32 = 127;
+/// Membrane saturation in ADC-LSB units (rails slightly beyond ADC range).
+pub const MEMBRANE_CLIP: f32 = 160.0;
+
+// --- Analog non-idealities ------------------------------------------------------
+pub const GAIN_FPN_SIGMA: f64 = 0.06;
+pub const OFFSET_FPN_SIGMA: f64 = 2.0;
+pub const NOISE_SIGMA: f64 = 2.0;
+
+// --- Requantisation (SIMD CPUs) --------------------------------------------------
+pub const RELU_SHIFT: u32 = 2;
+
+// --- Timing model (paper §II-A, Eq. 1-2) -----------------------------------------
+/// Back-to-back synaptic input period (8 ns -> 125 MHz).
+pub const EVENT_PERIOD_NS: f64 = 8.0;
+/// Full VMM integration cycle incl. membrane reset.
+pub const INTEGRATION_CYCLE_US: f64 = 5.0;
+/// LVDS links routed to the FPGA (of 8 on the ASIC).
+pub const LVDS_LINKS: usize = 5;
+/// Per-link bandwidth in Gbit/s.
+pub const LVDS_GBPS: f64 = 2.0;
+/// Event packet size on the link (bits): address + 5-bit payload + framing.
+pub const EVENT_PACKET_BITS: usize = 24;
+
+// --- Area model (paper Eq. 3) -----------------------------------------------------
+pub const SYNAPSE_UM2: f64 = 8.0 * 12.0;
+pub const DIE_MM2: f64 = 32.0;
+
+// --- ECG model hyperparameters (paper Fig 6 instantiation) -------------------------
+pub const ECG_FS_HZ: f64 = 150.0;
+pub const ECG_WINDOW: usize = 2048;
+pub const ECG_CHANNELS: usize = 2;
+pub const POOL_WINDOW: usize = 32;
+pub const PREPROC_SHIFT: u32 = 5;
+pub const POOLED_LEN: usize = ECG_WINDOW / POOL_WINDOW;
+pub const MODEL_IN: usize = POOLED_LEN * ECG_CHANNELS;
+
+pub const CONV_KERNEL: usize = 8;
+pub const CONV_STRIDE: usize = 2;
+pub const CONV_CHANNELS: usize = 8;
+pub const CONV_POSITIONS: usize = 32;
+pub const CONV_PAD: usize = 3;
+pub const CONV_OUT: usize = CONV_POSITIONS * CONV_CHANNELS;
+
+pub const FC1_OUT: usize = 123;
+pub const FC2_OUT: usize = 10;
+pub const N_CLASSES: usize = 2;
+pub const POOL_GROUP: usize = FC2_OUT / N_CLASSES;
+
+// --- MAC counts --------------------------------------------------------------------
+pub const MACS_CONV: usize = CONV_OUT * CONV_KERNEL * ECG_CHANNELS;
+pub const MACS_FC1: usize = CONV_OUT * FC1_OUT;
+pub const MACS_FC2: usize = FC1_OUT * FC2_OUT;
+pub const MACS_TOTAL: usize = MACS_CONV + MACS_FC1 + MACS_FC2;
+pub const OPS_TOTAL: usize = 2 * MACS_TOTAL;
+
+/// Peak synapse-array rate, paper Eq. 1: 125 MHz * 256 * 512 * 2 Op.
+pub fn peak_ops_per_s() -> f64 {
+    (1e9 / EVENT_PERIOD_NS) * 256.0 * 512.0 * 2.0
+}
+
+/// Effective full-array VMM rate, paper Eq. 2: 1/5µs * 256 * 512 * 2 Op.
+pub fn effective_ops_per_s() -> f64 {
+    (1e6 / INTEGRATION_CYCLE_US) * 256.0 * 512.0 * 2.0
+}
+
+/// Synapse-array MAC area efficiency, paper Eq. 3 [TOp/(s mm^2)].
+pub fn area_efficiency_tops_mm2() -> f64 {
+    peak_ops_per_s() / 1e12 / (N_SYNAPSES as f64 * SYNAPSE_UM2 * 1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_consistency() {
+        assert_eq!(K_SIGNED * 2, ROWS_PHYS);
+        assert_eq!(N_COLS * N_HALVES, N_NEURONS);
+        assert_eq!(MODEL_IN, 128);
+        assert_eq!(CONV_OUT, 256);
+        // fc1 split occupies cols 0..246, fc2 cols 246..256 — exactly N_COLS.
+        assert_eq!(2 * FC1_OUT + FC2_OUT, N_COLS);
+    }
+
+    #[test]
+    fn paper_eq1_peak_rate() {
+        // Paper Eq. 1: 32.8 TOp/s.
+        assert!((peak_ops_per_s() / 1e12 - 32.768).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_eq2_effective_rate() {
+        // Paper Eq. 2: ~52 GOp/s.
+        assert!((effective_ops_per_s() / 1e9 - 52.4288).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_eq3_area_efficiency() {
+        // Paper Eq. 3: 2.6 TOp/(s mm^2).
+        let v = area_efficiency_tops_mm2();
+        assert!((v - 2.6).abs() < 0.1, "got {v}");
+    }
+
+    #[test]
+    fn mac_counts() {
+        assert_eq!(MACS_CONV, 4096);
+        assert_eq!(MACS_FC1, 31488);
+        assert_eq!(MACS_FC2, 1230);
+        assert_eq!(OPS_TOTAL, 2 * 36814);
+    }
+}

@@ -1,0 +1,20 @@
+//! Behavioural model of the BrainScaleS-2 ASIC (paper §II-A, Fig 3).
+//!
+//! * [`consts`] — hardware constants, mirrored against `hwmodel.py`.
+//! * [`array`] — the analog synapse-array VMM (native twin of the L1 kernel).
+//! * [`packets`] — event/memory packet formats of the digital core logic.
+//! * [`router`] — the runtime-configurable event crossbar.
+//! * [`simd`] — embedded SIMD CPUs: ISA + instruction-stream interpreter.
+//! * [`chip`] — whole-ASIC composition + timing model.
+//! * [`calib`] — analog calibration routines (offset/gain recovery).
+//! * [`neuron`] — AdEx/LIF spiking mode (the SNN side of the substrate).
+
+pub mod array;
+pub mod calib;
+pub mod chip;
+pub mod consts;
+pub mod neuron;
+pub mod packets;
+pub mod plasticity;
+pub mod router;
+pub mod simd;

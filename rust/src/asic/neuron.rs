@@ -1,0 +1,224 @@
+//! Spiking neuron model of the analog core (paper §II-A: AdEx neurons in
+//! 1000-fold accelerated continuous time).
+//!
+//! The ECG showcase configures the neurons as linear integrators (see
+//! [`super::array`]); this module models the *spiking* operation mode the
+//! chip simultaneously supports — the paper's §V argues the key advantage of
+//! BSS-2 is hosting CDNN layers and SNN layers on one substrate.  We
+//! implement the leaky/adaptive-exponential integrate-and-fire dynamics with
+//! forward-Euler integration in accelerated model time, enough to run small
+//! SNN demos (`examples` / `repro snn`) on the same synapse arrays.
+
+
+/// AdEx parameters (hardware-calibrated units: membrane in ADC-LSB-like
+/// voltage units, time in microseconds of *accelerated* chip time).
+#[derive(Debug, Clone, Copy)]
+pub struct AdexParams {
+    pub tau_mem_us: f64,
+    pub tau_syn_us: f64,
+    pub tau_adapt_us: f64,
+    pub v_rest: f64,
+    pub v_thresh: f64,
+    pub v_reset: f64,
+    /// Exponential slope; 0 disables the AdEx term (plain LIF).
+    pub delta_t: f64,
+    /// Sub-threshold adaptation strength.
+    pub a: f64,
+    /// Spike-triggered adaptation increment.
+    pub b: f64,
+    pub refractory_us: f64,
+}
+
+impl Default for AdexParams {
+    fn default() -> Self {
+        AdexParams {
+            tau_mem_us: 10.0,
+            tau_syn_us: 5.0,
+            tau_adapt_us: 100.0,
+            v_rest: 0.0,
+            v_thresh: 60.0,
+            v_reset: -10.0,
+            delta_t: 2.0,
+            a: 0.0,
+            b: 8.0,
+            refractory_us: 2.0,
+        }
+    }
+}
+
+impl AdexParams {
+    pub fn lif() -> Self {
+        AdexParams { delta_t: 0.0, a: 0.0, b: 0.0, ..Default::default() }
+    }
+}
+
+/// State of one neuron circuit in spiking mode.
+#[derive(Debug, Clone)]
+pub struct NeuronState {
+    pub v: f64,
+    pub i_syn: f64,
+    pub w_adapt: f64,
+    pub refrac_until: f64,
+    pub spikes: Vec<f64>,
+}
+
+impl NeuronState {
+    pub fn new(p: &AdexParams) -> NeuronState {
+        NeuronState {
+            v: p.v_rest,
+            i_syn: 0.0,
+            w_adapt: 0.0,
+            refrac_until: -1.0,
+            spikes: Vec::new(),
+        }
+    }
+}
+
+/// A population of spiking neurons sharing parameters (one array column
+/// group).  Forward-Euler at `dt_us` in accelerated time.
+pub struct SpikingPopulation {
+    pub p: AdexParams,
+    pub neurons: Vec<NeuronState>,
+    pub t_us: f64,
+    pub dt_us: f64,
+}
+
+impl SpikingPopulation {
+    pub fn new(n: usize, p: AdexParams) -> SpikingPopulation {
+        SpikingPopulation {
+            neurons: (0..n).map(|_| NeuronState::new(&p)).collect(),
+            p,
+            t_us: 0.0,
+            dt_us: 0.1,
+        }
+    }
+
+    /// Inject synaptic charge (from the synapse array) into neuron `i`.
+    /// `weight` is the 6-bit signed weight; events come from the router.
+    pub fn receive(&mut self, i: usize, weight: i8) {
+        self.neurons[i].i_syn += weight as f64;
+    }
+
+    /// Advance one Euler step; returns indices of neurons that spiked.
+    pub fn step(&mut self) -> Vec<usize> {
+        let p = self.p;
+        let dt = self.dt_us;
+        self.t_us += dt;
+        let mut spiked = Vec::new();
+        for (i, n) in self.neurons.iter_mut().enumerate() {
+            // Synaptic current decay.
+            n.i_syn -= n.i_syn * dt / p.tau_syn_us;
+            if self.t_us < n.refrac_until {
+                continue;
+            }
+            // AdEx membrane dynamics.
+            let exp_term = if p.delta_t > 0.0 {
+                p.delta_t * ((n.v - p.v_thresh) / p.delta_t).exp()
+            } else {
+                0.0
+            };
+            let dv = (-(n.v - p.v_rest) + exp_term + n.i_syn - n.w_adapt)
+                * dt
+                / p.tau_mem_us;
+            n.v += dv;
+            // Adaptation dynamics.
+            let dw = (p.a * (n.v - p.v_rest) - n.w_adapt) * dt / p.tau_adapt_us;
+            n.w_adapt += dw;
+            if n.v >= p.v_thresh {
+                n.v = p.v_reset;
+                n.w_adapt += p.b;
+                n.refrac_until = self.t_us + p.refractory_us;
+                n.spikes.push(self.t_us);
+                spiked.push(i);
+            }
+        }
+        spiked
+    }
+
+    /// Run for `dur_us`, feeding a constant current into every neuron.
+    pub fn run_constant_input(&mut self, current: f64, dur_us: f64) {
+        let steps = (dur_us / self.dt_us).round() as usize;
+        for _ in 0..steps {
+            for n in &mut self.neurons {
+                n.i_syn += current * self.dt_us / self.p.tau_syn_us;
+            }
+            self.step();
+        }
+    }
+
+    pub fn rates_hz(&self, dur_us: f64) -> Vec<f64> {
+        // Rates in *accelerated* time; biological equivalent is /1000.
+        self.neurons
+            .iter()
+            .map(|n| n.spikes.len() as f64 / (dur_us * 1e-6))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lif_stays_at_rest_without_input() {
+        let mut pop = SpikingPopulation::new(4, AdexParams::lif());
+        for _ in 0..1000 {
+            assert!(pop.step().is_empty());
+        }
+        assert!(pop.neurons.iter().all(|n| n.v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn strong_input_causes_spiking() {
+        let mut pop = SpikingPopulation::new(2, AdexParams::lif());
+        pop.run_constant_input(150.0, 200.0);
+        assert!(!pop.neurons[0].spikes.is_empty(), "no spikes");
+    }
+
+    #[test]
+    fn subthreshold_input_does_not_spike() {
+        let mut pop = SpikingPopulation::new(1, AdexParams::lif());
+        pop.run_constant_input(10.0, 200.0);
+        assert!(pop.neurons[0].spikes.is_empty());
+    }
+
+    #[test]
+    fn rate_increases_with_current() {
+        let rate = |cur: f64| {
+            let mut pop = SpikingPopulation::new(1, AdexParams::lif());
+            pop.run_constant_input(cur, 500.0);
+            pop.rates_hz(500.0)[0]
+        };
+        assert!(rate(200.0) > rate(100.0));
+    }
+
+    #[test]
+    fn adaptation_slows_firing() {
+        let spikes = |b: f64| {
+            let p = AdexParams { b, delta_t: 0.0, ..Default::default() };
+            let mut pop = SpikingPopulation::new(1, p);
+            pop.run_constant_input(150.0, 500.0);
+            pop.neurons[0].spikes.len()
+        };
+        assert!(spikes(30.0) < spikes(0.0));
+    }
+
+    #[test]
+    fn refractory_enforced() {
+        let mut pop = SpikingPopulation::new(1, AdexParams::lif());
+        pop.run_constant_input(400.0, 100.0);
+        let sp = &pop.neurons[0].spikes;
+        assert!(sp.len() >= 2);
+        for w in sp.windows(2) {
+            assert!(w[1] - w[0] >= pop.p.refractory_us - 1e-9);
+        }
+    }
+
+    #[test]
+    fn synapse_events_drive_membrane() {
+        let mut pop = SpikingPopulation::new(2, AdexParams::lif());
+        pop.receive(0, 63);
+        pop.step();
+        assert!(pop.neurons[0].v > pop.neurons[1].v);
+    }
+}

@@ -1,0 +1,152 @@
+//! Digital core logic: packet formats of the ASIC's transport layer
+//! (paper §II-A "Digital Core Logic").
+//!
+//! Two traffic classes cross the high-speed serial links:
+//!   * **event packets** — unsecured, low-latency vector-input/spike events
+//!     (5-bit payload + routing address), optionally timestamped,
+//!   * **memory packets** — secured (sequence-numbered, acknowledged)
+//!     register/SRAM access from/to the SIMD CPUs and the FPGA.
+//!
+//! The wire encoding here is a faithful *behavioural* stand-in: framing and
+//! sizes follow the paper's link budget (`EVENT_PACKET_BITS`), and the
+//! playback/trace buffers and the link model account bandwidth with them.
+
+use super::consts as c;
+
+/// A vector-input (or spike) event: routed to synapse drivers by address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Routing label: which logical input row group this event targets.
+    pub address: u16,
+    /// 5-bit activation payload (pulse length).
+    pub payload: u8,
+    /// Event time in nanoseconds of chip time (0 = untimestamped/real-time).
+    pub timestamp_ns: u64,
+}
+
+impl Event {
+    pub fn new(address: u16, payload: u8) -> Event {
+        Event { address, payload: payload.min(c::X_MAX as u8), timestamp_ns: 0 }
+    }
+
+    pub fn at(mut self, t_ns: u64) -> Event {
+        self.timestamp_ns = t_ns;
+        self
+    }
+
+    /// Serialize to the 3-byte wire format: addr[11:0] | payload[4:0] |
+    /// framing/parity bits.
+    pub fn to_wire(&self) -> [u8; 3] {
+        let addr = self.address & 0x0FFF;
+        let b0 = (addr >> 4) as u8;
+        let b1 = (((addr & 0xF) as u8) << 4) | (self.payload & 0x1F) >> 1;
+        let b2 = ((self.payload & 0x1) << 7) | self.parity() & 0x7F;
+        [b0, b1, b2]
+    }
+
+    pub fn from_wire(w: [u8; 3]) -> Option<Event> {
+        let addr = ((w[0] as u16) << 4) | ((w[1] >> 4) as u16);
+        let payload = ((w[1] & 0x0F) << 1) | (w[2] >> 7);
+        let ev = Event { address: addr, payload, timestamp_ns: 0 };
+        if ev.parity() & 0x7F == w[2] & 0x7F {
+            Some(ev)
+        } else {
+            None // corrupted frame -> dropped by the link layer
+        }
+    }
+
+    fn parity(&self) -> u8 {
+        let mut p: u8 = 0x2A; // frame marker
+        p ^= (self.address & 0xFF) as u8;
+        p ^= (self.address >> 8) as u8;
+        p ^= self.payload;
+        p & 0x7F
+    }
+
+    pub const WIRE_BITS: usize = c::EVENT_PACKET_BITS;
+}
+
+/// Secured memory access (SIMD CPU <-> FPGA DRAM via the memory switch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MemPacket {
+    Read { addr: u32, len: u32, seq: u16 },
+    ReadResp { data: Vec<u32>, seq: u16 },
+    Write { addr: u32, data: Vec<u32>, seq: u16 },
+    WriteAck { seq: u16 },
+}
+
+impl MemPacket {
+    /// Wire size in bits (header 64 + payload words).
+    pub fn wire_bits(&self) -> usize {
+        match self {
+            MemPacket::Read { .. } => 64,
+            MemPacket::ReadResp { data, .. } => 64 + 32 * data.len(),
+            MemPacket::Write { data, .. } => 64 + 32 * data.len(),
+            MemPacket::WriteAck { .. } => 64,
+        }
+    }
+
+    pub fn seq(&self) -> u16 {
+        match self {
+            MemPacket::Read { seq, .. }
+            | MemPacket::ReadResp { seq, .. }
+            | MemPacket::Write { seq, .. }
+            | MemPacket::WriteAck { seq } => *seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_payload_clamped() {
+        let e = Event::new(3, 200);
+        assert_eq!(e.payload, 31);
+    }
+
+    #[test]
+    fn event_wire_roundtrip() {
+        for addr in [0u16, 1, 255, 4095] {
+            for payload in [0u8, 1, 15, 31] {
+                let e = Event::new(addr, payload);
+                let w = e.to_wire();
+                let d = Event::from_wire(w).expect("parity must hold");
+                assert_eq!(d.address, addr);
+                assert_eq!(d.payload, payload);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_frame_dropped() {
+        let mut w = Event::new(77, 13).to_wire();
+        w[0] ^= 0x10; // flip an address bit
+        assert_eq!(Event::from_wire(w), None);
+    }
+
+    #[test]
+    fn event_timestamping() {
+        let e = Event::new(1, 2).at(5000);
+        assert_eq!(e.timestamp_ns, 5000);
+    }
+
+    #[test]
+    fn mem_packet_sizes() {
+        assert_eq!(MemPacket::Read { addr: 0, len: 4, seq: 1 }.wire_bits(), 64);
+        assert_eq!(
+            MemPacket::Write { addr: 0, data: vec![0; 4], seq: 2 }.wire_bits(),
+            64 + 128
+        );
+        assert_eq!(
+            MemPacket::ReadResp { data: vec![0; 2], seq: 3 }.wire_bits(),
+            128
+        );
+    }
+
+    #[test]
+    fn mem_packet_seq() {
+        assert_eq!(MemPacket::WriteAck { seq: 9 }.seq(), 9);
+    }
+}

@@ -1,0 +1,144 @@
+//! Runtime-configurable event router (paper §II-A "Event Router").
+//!
+//! A digital crossbar distributes vector-input events from the link layer to
+//! the synapse drivers of the two array halves.  Each event carries a 12-bit
+//! address; the crossbar maps addresses to (half, logical row) targets.
+//! Synapse-level address matching (the second event group used by fc1's
+//! split, paper Fig 6) is represented by logical rows 128..255.
+
+use std::collections::HashMap;
+
+use super::consts as c;
+use super::packets::Event;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Target {
+    /// Array half: 0 = top (conv), 1 = bottom (fc layers).
+    pub half: u8,
+    /// Logical signed input row (0..K_LOGICAL).
+    pub row: u16,
+}
+
+/// Crossbar configuration + statistics.
+#[derive(Debug, Default)]
+pub struct EventRouter {
+    table: HashMap<u16, Vec<Target>>,
+    pub delivered: u64,
+    pub dropped: u64,
+}
+
+impl EventRouter {
+    pub fn new() -> EventRouter {
+        EventRouter::default()
+    }
+
+    /// Identity layout used by the ECG experiment: address a targets
+    /// half `a / K_LOGICAL`, logical row `a % K_LOGICAL`.
+    pub fn identity() -> EventRouter {
+        let mut r = EventRouter::new();
+        for half in 0..c::N_HALVES as u8 {
+            for row in 0..c::K_LOGICAL as u16 {
+                let addr = half as u16 * c::K_LOGICAL as u16 + row;
+                r.connect(addr, Target { half, row });
+            }
+        }
+        r
+    }
+
+    pub fn connect(&mut self, address: u16, target: Target) {
+        self.table.entry(address).or_default().push(target);
+    }
+
+    pub fn clear(&mut self) {
+        self.table.clear();
+    }
+
+    pub fn targets(&self, address: u16) -> &[Target] {
+        self.table.get(&address).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Route one event; returns the targets it reached.
+    pub fn route(&mut self, ev: &Event) -> Vec<Target> {
+        match self.table.get(&ev.address) {
+            Some(ts) if !ts.is_empty() => {
+                self.delivered += 1;
+                ts.clone()
+            }
+            _ => {
+                self.dropped += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Route a full event burst into per-half logical input vectors
+    /// (the last event to hit a row wins, like re-triggering a driver).
+    pub fn assemble(&mut self, events: &[Event]) -> [Vec<u8>; c::N_HALVES] {
+        let mut halves: [Vec<u8>; c::N_HALVES] =
+            [vec![0; c::K_LOGICAL], vec![0; c::K_LOGICAL]];
+        for ev in events {
+            for t in self.route(ev) {
+                halves[t.half as usize][t.row as usize] = ev.payload;
+            }
+        }
+        halves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_covers_both_halves() {
+        let r = EventRouter::identity();
+        assert_eq!(
+            r.targets(0),
+            &[Target { half: 0, row: 0 }]
+        );
+        assert_eq!(
+            r.targets(c::K_LOGICAL as u16 + 5),
+            &[Target { half: 1, row: 5 }]
+        );
+    }
+
+    #[test]
+    fn unknown_address_dropped() {
+        let mut r = EventRouter::identity();
+        let got = r.route(&Event::new(0x0FFF, 3));
+        assert!(got.is_empty());
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.delivered, 0);
+    }
+
+    #[test]
+    fn multicast_fanout() {
+        let mut r = EventRouter::new();
+        r.connect(7, Target { half: 0, row: 1 });
+        r.connect(7, Target { half: 1, row: 2 });
+        let ts = r.route(&Event::new(7, 9));
+        assert_eq!(ts.len(), 2);
+        assert_eq!(r.delivered, 1);
+    }
+
+    #[test]
+    fn assemble_builds_input_vectors() {
+        let mut r = EventRouter::identity();
+        let evs = vec![
+            Event::new(3, 11),
+            Event::new(c::K_LOGICAL as u16 + 8, 22),
+            Event::new(3, 13), // re-trigger wins
+        ];
+        let halves = r.assemble(&evs);
+        assert_eq!(halves[0][3], 13);
+        assert_eq!(halves[1][8], 22);
+        assert_eq!(halves[0].iter().filter(|&&v| v != 0).count(), 1);
+    }
+
+    #[test]
+    fn clear_resets_table() {
+        let mut r = EventRouter::identity();
+        r.clear();
+        assert!(r.targets(0).is_empty());
+    }
+}

@@ -1,0 +1,224 @@
+//! Block runner: the paper's §IV measurement procedure.
+//!
+//! "To increase the accuracy of all measurements, data was processed in
+//! blocks of 500 traces.  For each block, runtime and energy consumption
+//! have been measured [...] and afterwards averaged down to a single
+//! inference."  Batch size stays 1 throughout (edge workload).
+
+use crate::ecg::gen::Trace;
+use crate::power::energy::{Component, ALL_COMPONENTS};
+use crate::power::monitor::BlockMeasurement;
+
+use super::engine::Engine;
+use super::metrics::Confusion;
+
+/// Aggregated results of one 500-trace block (the rows of Table 1).
+#[derive(Debug, Clone)]
+pub struct BlockReport {
+    pub n: usize,
+    /// Block wall time [s] (simulated) and per-inference time [s].
+    pub block_time_s: f64,
+    pub time_per_inference_s: f64,
+    /// Energies per inference [J].
+    pub energy_total_j: f64,
+    pub energy_component_j: Vec<(Component, f64)>,
+    /// Powers as the sensor pipeline measured them [W].
+    pub system_power_w: f64,
+    pub asic_power_w: f64,
+    /// Compute figures.
+    pub macs_per_inference: usize,
+    pub ops_per_s: f64,
+    pub ops_per_j_asic: f64,
+    pub inferences_per_j_asic: f64,
+    /// Classification quality.
+    pub confusion: Confusion,
+}
+
+/// Run one block of traces through the engine, measuring like §IV.
+pub fn run_block(
+    engine: &mut Engine,
+    traces: &[(Trace, u8)],
+) -> anyhow::Result<BlockReport> {
+    anyhow::ensure!(!traces.is_empty(), "empty block");
+    let n = traces.len();
+    let mut confusion = Confusion::default();
+    let mut block_time = 0.0f64;
+    let mut comp_j: Vec<(Component, f64)> =
+        ALL_COMPONENTS.iter().map(|&c| (c, 0.0)).collect();
+    let mut sensors = BlockMeasurement::new(n);
+
+    for (trace, label) in traces {
+        let inf = engine.classify(trace)?;
+        confusion.add(inf.pred, *label);
+        block_time += inf.sim_time_s;
+        for (slot, (comp, j)) in comp_j.iter_mut().enumerate() {
+            debug_assert_eq!(*comp, inf.energy.per_component[slot].0);
+            *j += inf.energy.per_component[slot].1;
+        }
+    }
+    // The sensor pipeline samples the block's mean powers (the paper's
+    // sensors cannot resolve individual 276 µs inferences at 294 Hz).
+    sensors.record_block(&comp_j, block_time);
+
+    let per_inf = block_time / n as f64;
+    let macs = engine.macs_per_inference();
+    let asic_j_block: f64 = comp_j
+        .iter()
+        .filter(|(c, _)| {
+            matches!(
+                c,
+                Component::AsicIo | Component::AsicAnalog | Component::AsicDigital
+            )
+        })
+        .map(|(_, j)| j)
+        .sum();
+    let asic_j = asic_j_block / n as f64;
+    let total_j: f64 = comp_j.iter().map(|(_, j)| j).sum::<f64>() / n as f64;
+
+    Ok(BlockReport {
+        n,
+        block_time_s: block_time,
+        time_per_inference_s: per_inf,
+        energy_total_j: total_j,
+        energy_component_j: comp_j
+            .into_iter()
+            .map(|(c, j)| (c, j / n as f64))
+            .collect(),
+        system_power_w: sensors.measured_system_w(),
+        asic_power_w: asic_j / per_inf,
+        macs_per_inference: macs,
+        ops_per_s: (2 * macs) as f64 / per_inf,
+        ops_per_j_asic: (2 * macs) as f64 / asic_j,
+        inferences_per_j_asic: 1.0 / asic_j,
+        confusion,
+    })
+}
+
+impl BlockReport {
+    /// Render the block as the rows of paper Table 1.
+    pub fn table1(&self) -> String {
+        let mut s = String::new();
+        let row = |s: &mut String, q: &str, v: String, u: &str| {
+            s.push_str(&format!("| {q:<42} | {v:>12} | {u:<4} |\n"));
+        };
+        s.push_str(&format!(
+            "Table 1 — measured on a block of {} traces (batch size 1)\n",
+            self.n
+        ));
+        s.push_str("| quantity                                   |        value | unit |\n");
+        s.push_str("|--------------------------------------------|--------------|------|\n");
+        row(&mut s, "time per inference",
+            format!("{:.0} e-6", self.time_per_inference_s * 1e6), "s");
+        row(&mut s, "power consumption (system)",
+            format!("{:.1}", self.system_power_w), "W");
+        row(&mut s, "power consumption (BSS-2 ASIC)",
+            format!("{:.2}", self.asic_power_w), "W");
+        row(&mut s, "energy (total)",
+            format!("{:.2} e-3", self.energy_total_j * 1e3), "J");
+        let comp = |c: Component| {
+            self.energy_component_j
+                .iter()
+                .find(|(k, _)| *k == c)
+                .map(|(_, j)| *j)
+                .unwrap_or(0.0)
+        };
+        let ctrl = comp(Component::ArmCores)
+            + comp(Component::FpgaFabric)
+            + comp(Component::Dram);
+        row(&mut s, "energy (system controller, total)",
+            format!("{:.2} e-3", ctrl * 1e3), "J");
+        row(&mut s, "energy (system controller, ARM CPU)",
+            format!("{:.2} e-3", comp(Component::ArmCores) * 1e3), "J");
+        row(&mut s, "energy (system controller, FPGA)",
+            format!("{:.2} e-3", comp(Component::FpgaFabric) * 1e3), "J");
+        row(&mut s, "energy (system controller, DRAM)",
+            format!("{:.2} e-3", comp(Component::Dram) * 1e3), "J");
+        let asic = comp(Component::AsicIo)
+            + comp(Component::AsicAnalog)
+            + comp(Component::AsicDigital);
+        row(&mut s, "energy (ASIC, total)",
+            format!("{:.2} e-3", asic * 1e3), "J");
+        row(&mut s, "energy (ASIC, IO)",
+            format!("{:.2} e-3", comp(Component::AsicIo) * 1e3), "J");
+        row(&mut s, "energy (ASIC, analog)",
+            format!("{:.2} e-3", comp(Component::AsicAnalog) * 1e3), "J");
+        row(&mut s, "energy (ASIC, digital)",
+            format!("{:.2} e-3", comp(Component::AsicDigital) * 1e3), "J");
+        row(&mut s, "total operations in CDNN",
+            format!("{:.1} e3", (2 * self.macs_per_inference) as f64 / 1e3), "Op");
+        row(&mut s, "BSS-2 ASIC processing speed (mult./acc.)",
+            format!("{:.0} e6", self.ops_per_s / 1e6), "Op/s");
+        row(&mut s, "BSS-2 ASIC energy efficiency (mult./acc.)",
+            format!("{:.0} e6", self.ops_per_j_asic / 1e6), "Op/J");
+        row(&mut s, "BSS-2 ASIC energy efficiency (inferences)",
+            format!("{:.2} e3", self.inferences_per_j_asic / 1e3), "1/J");
+        row(&mut s, "detection rate",
+            format!("{:.1}", self.confusion.detection_rate() * 100.0), "%");
+        row(&mut s, "false positives",
+            format!("{:.1}", self.confusion.false_positive_rate() * 100.0), "%");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{Engine, EngineConfig};
+    use crate::ecg::gen::TraceStream;
+
+    fn native_engine() -> Engine {
+        // Reuse the tiny hand-built model from the engine tests via a
+        // minimal weights.json-equivalent structure.
+        let wc = vec![1.0; crate::asic::consts::CONV_CHANNELS
+            * crate::asic::consts::ECG_CHANNELS
+            * crate::asic::consts::CONV_KERNEL];
+        let w1 = vec![1.0; crate::asic::consts::K_LOGICAL
+            * crate::asic::consts::FC1_OUT];
+        let w2 = vec![1.0; crate::asic::consts::FC1_OUT
+            * crate::asic::consts::FC2_OUT];
+        let model = crate::nn::weights::TrainedModel {
+            pass_weights: [
+                crate::nn::mapping::pack_conv(&wc),
+                crate::nn::mapping::pack_fc1(&w1),
+                crate::nn::mapping::pack_fc2(&w2),
+            ],
+            scales: [0.02, 0.02, 0.02],
+            gain: [vec![1.0; 256], vec![1.0; 256]],
+            offset: [vec![0.0; 256], vec![0.0; 256]],
+            noise_sigma: 0.0,
+            train_metrics: Default::default(),
+        };
+        Engine::native(
+            model,
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn block_report_structure() {
+        let mut eng = native_engine();
+        let traces: Vec<_> = TraceStream::new(3, 1.0)
+            .take(20)
+            .map(|t| {
+                let l = t.label;
+                (t, l)
+            })
+            .collect();
+        let rep = run_block(&mut eng, &traces).unwrap();
+        assert_eq!(rep.n, 20);
+        assert_eq!(rep.confusion.total(), 20);
+        let us = rep.time_per_inference_s * 1e6;
+        assert!((us - 276.0).abs() < 40.0, "{us} µs");
+        assert!((rep.system_power_w - 5.6).abs() < 0.6, "{} W", rep.system_power_w);
+        assert!(rep.ops_per_s > 1e8, "{}", rep.ops_per_s);
+        let table = rep.table1();
+        assert!(table.contains("detection rate"));
+        assert!(table.contains("Op/s"));
+    }
+
+    #[test]
+    fn empty_block_rejected() {
+        let mut eng = native_engine();
+        assert!(run_block(&mut eng, &[]).is_err());
+    }
+}

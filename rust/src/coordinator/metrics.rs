@@ -1,0 +1,120 @@
+//! Classification metrics: detection rate / false positives as the paper
+//! reports them (Table 1), with uncertainty over repeated blocks.
+
+/// Confusion counts for the two-class A-fib task.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+impl Confusion {
+    pub fn add(&mut self, pred: u8, label: u8) {
+        match (pred, label) {
+            (1, 1) => self.tp += 1,
+            (1, 0) => self.fp += 1,
+            (0, 0) => self.tn += 1,
+            (0, 1) => self.fn_ += 1,
+            _ => panic!("labels must be 0/1"),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    /// Detection rate = sensitivity = TP / (TP + FN).
+    pub fn detection_rate(&self) -> f64 {
+        let pos = self.tp + self.fn_;
+        if pos == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / pos as f64
+    }
+
+    /// False-positive rate = FP / (FP + TN).
+    pub fn false_positive_rate(&self) -> f64 {
+        let neg = self.fp + self.tn;
+        if neg == 0 {
+            return 0.0;
+        }
+        self.fp as f64 / neg as f64
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+}
+
+/// Mean ± std of a metric across repeated measurement blocks (the paper's
+/// "(93.7 ± 0.7) %" style).
+pub fn mean_std<F: Fn(&Confusion) -> f64>(
+    blocks: &[Confusion],
+    f: F,
+) -> (f64, f64) {
+    let vals: Vec<f64> = blocks.iter().map(f).collect();
+    let n = vals.len().max(1) as f64;
+    let mean = vals.iter().sum::<f64>() / n;
+    let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_accumulates() {
+        let mut c = Confusion::default();
+        c.add(1, 1);
+        c.add(1, 0);
+        c.add(0, 0);
+        c.add(0, 1);
+        assert_eq!((c.tp, c.fp, c.tn, c.fn_), (1, 1, 1, 1));
+        assert_eq!(c.total(), 4);
+        assert_eq!(c.detection_rate(), 0.5);
+        assert_eq!(c.false_positive_rate(), 0.5);
+        assert_eq!(c.accuracy(), 0.5);
+    }
+
+    #[test]
+    fn empty_classes_are_zero() {
+        let c = Confusion::default();
+        assert_eq!(c.detection_rate(), 0.0);
+        assert_eq!(c.false_positive_rate(), 0.0);
+    }
+
+    #[test]
+    fn perfect_classifier() {
+        let mut c = Confusion::default();
+        for _ in 0..10 {
+            c.add(1, 1);
+            c.add(0, 0);
+        }
+        assert_eq!(c.detection_rate(), 1.0);
+        assert_eq!(c.false_positive_rate(), 0.0);
+        assert_eq!(c.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn mean_std_over_blocks() {
+        let mut a = Confusion::default();
+        a.add(1, 1); // det 1.0
+        let mut b = Confusion::default();
+        b.add(0, 1); // det 0.0
+        let (m, s) = mean_std(&[a, b], |c| c.detection_rate());
+        assert_eq!(m, 0.5);
+        assert_eq!(s, 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_label_panics() {
+        Confusion::default().add(2, 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: the paper's system contribution in rust.
+//!
+//! * [`engine`] — standalone inference engine (the §II-D instruction-stream
+//!   executor over PJRT or the native array model).
+//! * [`batch`] — 500-trace block runner + Table 1 report (§IV).
+//! * [`metrics`] — detection-rate / false-positive accounting.
+//! * [`service`] — the experiment execution service (remote TCP protocol).
+
+pub mod batch;
+pub mod engine;
+pub mod metrics;
+pub mod service;

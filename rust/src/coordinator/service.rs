@@ -1,0 +1,392 @@
+//! Experiment execution service (paper §II-D "Embedded System Environment").
+//!
+//! "An experiment execution service enables users to run Python-based
+//! interfaces on host computers that exchange serialized experiment
+//! configurations and result data with the mobile system."
+//!
+//! Ours is a line-delimited JSON protocol over TCP (the mobile system's
+//! USB-Ethernet remote path).  Requests are queued to a single worker
+//! thread that owns the engine — inference remains strictly batch-size-1
+//! (the paper's edge constraint), while accepting concurrent clients.
+//!
+//! Protocol (one JSON object per line):
+//! ```text
+//! -> {"cmd": "classify", "trace": [[...ch0 u12...], [...ch1...]]}
+//! <- {"ok": true, "pred": 1, "scores": [a, b], "time_us": t, "energy_mj": e}
+//! -> {"cmd": "stats"}
+//! <- {"ok": true, "served": n, "mean_time_us": t}
+//! -> {"cmd": "ping"} | {"cmd": "shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::asic::consts as c;
+use crate::ecg::gen::Trace;
+use crate::util::json::Json;
+
+use super::engine::Engine;
+
+/// Shared service statistics.
+#[derive(Default)]
+pub struct ServiceStats {
+    pub served: AtomicU64,
+    /// Sum of simulated inference times [µs] for mean reporting.
+    pub sim_time_us_sum: AtomicU64,
+}
+
+enum Job {
+    Classify { trace: Trace, resp: mpsc::Sender<String> },
+    Stats { resp: mpsc::Sender<String> },
+}
+
+/// The running service handle.
+pub struct Service {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServiceStats>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service on `addr` (use port 0 for an ephemeral port).
+    /// The engine is constructed *inside* the worker thread (PJRT handles
+    /// are not `Send`): pass a builder closure.
+    pub fn start<F>(addr: &str, make_engine: F) -> anyhow::Result<Service>
+    where
+        F: FnOnce() -> anyhow::Result<Engine> + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stats = Arc::new(ServiceStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Job>();
+
+        // Worker: owns the engine, processes jobs strictly in order
+        // (batch size 1 — the paper's edge constraint).
+        let wstats = stats.clone();
+        let worker_handle = std::thread::spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => e,
+                Err(e) => {
+                    // Drain jobs with an error reply so clients don't hang.
+                    let msg = format!("{{\"ok\":false,\"error\":\"engine init: {e}\"}}");
+                    while let Ok(job) = rx.recv() {
+                        match job {
+                            Job::Classify { resp, .. } => { let _ = resp.send(msg.clone()); }
+                            Job::Stats { resp } => { let _ = resp.send(msg.clone()); }
+                        }
+                    }
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Classify { trace, resp } => {
+                        let reply = match engine.classify(&trace) {
+                            Ok(inf) => {
+                                wstats.served.fetch_add(1, Ordering::Relaxed);
+                                wstats.sim_time_us_sum.fetch_add(
+                                    (inf.sim_time_s * 1e6) as u64,
+                                    Ordering::Relaxed,
+                                );
+                                format!(
+                                    "{{\"ok\":true,\"pred\":{},\"scores\":[{},{}],\
+                                     \"time_us\":{:.1},\"energy_mj\":{:.4}}}",
+                                    inf.pred,
+                                    inf.scores[0],
+                                    inf.scores[1],
+                                    inf.sim_time_s * 1e6,
+                                    inf.energy.total_j() * 1e3
+                                )
+                            }
+                            Err(e) => {
+                                format!("{{\"ok\":false,\"error\":\"{e}\"}}")
+                            }
+                        };
+                        let _ = resp.send(reply);
+                    }
+                    Job::Stats { resp } => {
+                        let served = wstats.served.load(Ordering::Relaxed);
+                        let sum = wstats.sim_time_us_sum.load(Ordering::Relaxed);
+                        let mean = if served > 0 { sum / served } else { 0 };
+                        let _ = resp.send(format!(
+                            "{{\"ok\":true,\"served\":{served},\
+                             \"mean_time_us\":{mean}}}"
+                        ));
+                    }
+                }
+            }
+        });
+
+        // Acceptor: non-blocking accept loop; per-connection handler threads.
+        let sdown = shutdown.clone();
+        let accept_handle = std::thread::spawn(move || {
+            let mut handlers = Vec::new();
+            while !sdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        let sdown2 = sdown.clone();
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx, sdown2);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+            drop(tx); // closes the worker queue
+        });
+
+        Ok(Service {
+            addr: local,
+            stats,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            worker_handle: Some(worker_handle),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.worker_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<Job>,
+    shutdown: Arc<AtomicBool>,
+) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(line.trim()) {
+            Err(e) => format!("{{\"ok\":false,\"error\":\"bad json: {e}\"}}"),
+            Ok(req) => match req.get("cmd").and_then(|c| c.as_str()) {
+                Some("ping") => "{\"ok\":true,\"pong\":true}".to_string(),
+                Some("shutdown") => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    "{\"ok\":true,\"bye\":true}".to_string()
+                }
+                Some("stats") => {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(Job::Stats { resp: rtx })
+                        .map_err(|_| anyhow::anyhow!("worker gone"))?;
+                    rrx.recv()?
+                }
+                Some("classify") => match parse_trace(&req) {
+                    Err(e) => format!("{{\"ok\":false,\"error\":\"{e}\"}}"),
+                    Ok(trace) => {
+                        let (rtx, rrx) = mpsc::channel();
+                        tx.send(Job::Classify { trace, resp: rtx })
+                            .map_err(|_| anyhow::anyhow!("worker gone"))?;
+                        rrx.recv()?
+                    }
+                },
+                _ => "{\"ok\":false,\"error\":\"unknown cmd\"}".to_string(),
+            },
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        if reply.contains("\"bye\"") {
+            return Ok(());
+        }
+    }
+}
+
+fn parse_trace(req: &Json) -> anyhow::Result<Trace> {
+    let chans = req
+        .req("trace")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("trace must be an array"))?;
+    anyhow::ensure!(chans.len() == c::ECG_CHANNELS, "need 2 channels");
+    let mut samples = Vec::with_capacity(c::ECG_CHANNELS);
+    for ch in chans {
+        let vals = ch
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("channel must be an array"))?;
+        anyhow::ensure!(
+            vals.len() == c::ECG_WINDOW,
+            "channel needs {} samples, got {}",
+            c::ECG_WINDOW,
+            vals.len()
+        );
+        let mut chan = Vec::with_capacity(c::ECG_WINDOW);
+        for v in vals {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric sample"))?;
+            anyhow::ensure!((0.0..4096.0).contains(&x), "sample out of 12-bit range");
+            chan.push(x as u16);
+        }
+        samples.push(chan);
+    }
+    Ok(Trace { samples, label: 0 })
+}
+
+/// Client helper (used by tests + the remote_client example).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn call(&mut self, req: &str) -> anyhow::Result<Json> {
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn classify(&mut self, trace: &Trace) -> anyhow::Result<Json> {
+        let mut req = String::from("{\"cmd\":\"classify\",\"trace\":[");
+        for (i, ch) in trace.samples.iter().enumerate() {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push('[');
+            for (j, &s) in ch.iter().enumerate() {
+                if j > 0 {
+                    req.push(',');
+                }
+                req.push_str(&s.to_string());
+            }
+            req.push(']');
+        }
+        req.push_str("]}");
+        self.call(&req)
+    }
+}
+
+// Keep Mutex imported for future use in stats extensions.
+#[allow(unused)]
+type _Unused = Mutex<()>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+
+    fn test_engine() -> Engine {
+        let wc = vec![1.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL];
+        let w1 = vec![1.0; c::K_LOGICAL * c::FC1_OUT];
+        let w2 = vec![1.0; c::FC1_OUT * c::FC2_OUT];
+        let model = crate::nn::weights::TrainedModel {
+            pass_weights: [
+                crate::nn::mapping::pack_conv(&wc),
+                crate::nn::mapping::pack_fc1(&w1),
+                crate::nn::mapping::pack_fc2(&w2),
+            ],
+            scales: [0.02, 0.02, 0.02],
+            gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
+            offset: [vec![0.0; c::N_COLS], vec![0.0; c::N_COLS]],
+            noise_sigma: 0.0,
+            train_metrics: Default::default(),
+        };
+        Engine::native(
+            model,
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn ping_and_classify_roundtrip() {
+        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let pong = cl.call("{\"cmd\":\"ping\"}").unwrap();
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+        let trace = crate::ecg::gen::generate_trace(1, true, 1.0);
+        let reply = cl.classify(&trace).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+        let pred = reply.get("pred").and_then(|p| p.as_f64()).unwrap();
+        assert!(pred == 0.0 || pred == 1.0);
+        assert!(reply.get("time_us").and_then(|t| t.as_f64()).unwrap() > 100.0);
+
+        let stats = cl.call("{\"cmd\":\"stats\"}").unwrap();
+        assert_eq!(stats.get("served").and_then(|s| s.as_f64()), Some(1.0));
+        svc.stop();
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let r = cl.call("not json at all").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = cl.call("{\"cmd\":\"classify\",\"trace\":[[1,2],[3]]}").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = cl.call("{\"cmd\":\"nope\"}").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        svc.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_serialised_through_worker() {
+        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+        let addr = svc.addr;
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            handles.push(std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                let trace = crate::ecg::gen::generate_trace(10 + i, i % 2 == 1, 1.0);
+                let reply = cl.classify(&trace).unwrap();
+                assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.stats.served.load(Ordering::Relaxed), 3);
+        svc.stop();
+    }
+}

@@ -1,0 +1,170 @@
+//! Binary ECG dataset reader — the `ecg_*.bin` artifacts written by
+//! `python/compile/train.py::write_ecg_bin`.
+//!
+//! Format (little-endian):
+//! ```text
+//! u32 magic = 0x45434731 ("ECG1")
+//! u32 n_traces, u32 channels, u32 window
+//! n_traces x { u8 label; channels*window x u16 sample }
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use super::gen::Trace;
+use crate::asic::consts as c;
+
+pub const MAGIC: u32 = 0x4543_4731;
+
+#[derive(Debug, thiserror::Error)]
+pub enum DatasetError {
+    #[error("io error reading dataset: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic {0:#x} (expected {MAGIC:#x})")]
+    BadMagic(u32),
+    #[error("truncated dataset file")]
+    Truncated,
+    #[error("geometry mismatch: file has {ch} ch x {win} window, model \
+             expects {exp_ch} x {exp_win}")]
+    Geometry { ch: usize, win: usize, exp_ch: usize, exp_win: usize },
+}
+
+#[derive(Debug)]
+pub struct Dataset {
+    pub traces: Vec<Trace>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset, DatasetError> {
+        let mut raw = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut raw)?;
+        Self::parse(&raw)
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Dataset, DatasetError> {
+        let rd_u32 = |off: usize| -> Result<u32, DatasetError> {
+            raw.get(off..off + 4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .ok_or(DatasetError::Truncated)
+        };
+        let magic = rd_u32(0)?;
+        if magic != MAGIC {
+            return Err(DatasetError::BadMagic(magic));
+        }
+        let n = rd_u32(4)? as usize;
+        let ch = rd_u32(8)? as usize;
+        let win = rd_u32(12)? as usize;
+        if ch != c::ECG_CHANNELS || win != c::ECG_WINDOW {
+            return Err(DatasetError::Geometry {
+                ch,
+                win,
+                exp_ch: c::ECG_CHANNELS,
+                exp_win: c::ECG_WINDOW,
+            });
+        }
+        let mut off = 16;
+        let mut traces = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = *raw.get(off).ok_or(DatasetError::Truncated)?;
+            off += 1;
+            let mut samples = Vec::with_capacity(ch);
+            for _ in 0..ch {
+                let mut chan = Vec::with_capacity(win);
+                for _ in 0..win {
+                    let b = raw
+                        .get(off..off + 2)
+                        .ok_or(DatasetError::Truncated)?;
+                    chan.push(u16::from_le_bytes(b.try_into().unwrap()));
+                    off += 2;
+                }
+                samples.push(chan);
+            }
+            traces.push(Trace { samples, label });
+        }
+        Ok(Dataset { traces })
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+
+    pub fn afib_fraction(&self) -> f64 {
+        if self.traces.is_empty() {
+            return 0.0;
+        }
+        self.traces.iter().filter(|t| t.label == 1).count() as f64
+            / self.traces.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(traces: &[Trace]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC.to_le_bytes());
+        out.extend((traces.len() as u32).to_le_bytes());
+        out.extend((c::ECG_CHANNELS as u32).to_le_bytes());
+        out.extend((c::ECG_WINDOW as u32).to_le_bytes());
+        for t in traces {
+            out.push(t.label);
+            for ch in &t.samples {
+                for &s in ch {
+                    out.extend(s.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t0 = super::super::gen::generate_trace(1, false, 1.0);
+        let t1 = super::super::gen::generate_trace(2, true, 1.0);
+        let blob = encode(&[t0.clone(), t1.clone()]);
+        let ds = Dataset::parse(&blob).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.traces[0].samples, t0.samples);
+        assert_eq!(ds.traces[1].label, 1);
+        assert_eq!(ds.afib_fraction(), 0.5);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut blob = encode(&[]);
+        blob[0] ^= 0xFF;
+        assert!(matches!(
+            Dataset::parse(&blob),
+            Err(DatasetError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let t = super::super::gen::generate_trace(3, false, 1.0);
+        let blob = encode(&[t]);
+        assert!(matches!(
+            Dataset::parse(&blob[..blob.len() - 10]),
+            Err(DatasetError::Truncated)
+        ));
+        assert!(matches!(
+            Dataset::parse(&blob[..8]),
+            Err(DatasetError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let mut blob = encode(&[]);
+        blob[8..12].copy_from_slice(&5u32.to_le_bytes()); // channels = 5
+        assert!(matches!(
+            Dataset::parse(&blob),
+            Err(DatasetError::Geometry { .. })
+        ));
+    }
+}

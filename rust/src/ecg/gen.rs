@@ -1,0 +1,278 @@
+//! Synthetic two-channel ECG generator — the rust mirror of
+//! `python/compile/data.py` (same SplitMix64 streams, same morphology).
+//!
+//! The python side generates the training/held-out test sets exported as
+//! binary artifacts; this generator supplies *unlimited streaming* workloads
+//! for the serving examples and benches with statistically identical
+//! traces.  The distributional contract (class statistics, 12-bit framing)
+//! is tested here and cross-checked against the artifact sets in the
+//! integration tests.
+
+use crate::asic::consts as c;
+use crate::util::rng::SplitMix64;
+
+pub const MID: i32 = 2048;
+pub const FULL_SCALE_MV: f64 = 2.5;
+
+/// (center offset [fraction of RR], width [s], amplitude ch0 [mV], ch1 scale)
+const WAVES: [(&str, f64, f64, f64, f64); 5] = [
+    ("P", -0.18, 0.025, 0.12, 0.7),
+    ("Q", -0.03, 0.010, -0.14, 1.3),
+    ("R", 0.00, 0.012, 1.10, 0.55),
+    ("S", 0.03, 0.011, -0.22, 1.6),
+    ("T", 0.22, 0.060, 0.28, 0.8),
+];
+
+/// One generated trace: 12-bit samples `[channel][sample]` + label.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub samples: Vec<Vec<u16>>,
+    pub label: u8, // 0 = sinus rhythm, 1 = atrial fibrillation
+}
+
+/// R-peak times + per-beat amplitude factors (mirror of `_beat_times`).
+fn beat_times(
+    rng: &mut SplitMix64,
+    afib: bool,
+    duration: f64,
+    difficulty: f64,
+) -> Vec<(f64, f64)> {
+    let hr = if afib {
+        rng.uniform(75.0, 135.0)
+    } else {
+        rng.uniform(55.0, 92.0)
+    };
+    let base_rr = 60.0 / hr;
+    let resp_f = rng.uniform(0.15, 0.35);
+    let resp_phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    let mut beats = Vec::new();
+    let mut t = rng.uniform(0.0, 0.5);
+    while t < duration {
+        let (rr, amp);
+        if afib {
+            let jitter = 0.45 - 0.20 * difficulty * rng.unit();
+            rr = (base_rr * (1.0 + jitter * (2.0 * rng.unit() - 1.0))).max(0.30);
+            amp = 1.0 + 0.30 * rng.gauss();
+        } else {
+            let rsa = 0.04
+                * (2.0 * std::f64::consts::PI * resp_f * t + resp_phase).sin();
+            let ectopic = if rng.unit() < 0.04 * difficulty {
+                0.25 * (2.0 * rng.unit() - 1.0)
+            } else {
+                0.0
+            };
+            rr = base_rr * (1.0 + rsa + 0.015 * rng.gauss() + ectopic);
+            amp = 1.0 + 0.05 * rng.gauss();
+        }
+        beats.push((t, amp.clamp(0.35, 1.8)));
+        t += rr;
+    }
+    beats
+}
+
+/// Generate one two-channel 12-bit ECG window (mirror of `generate_trace`).
+pub fn generate_trace(seed: u64, afib: bool, difficulty: f64) -> Trace {
+    let n = c::ECG_WINDOW;
+    let fs = c::ECG_FS_HZ;
+    let mut rng = SplitMix64::new(seed);
+    let duration = n as f64 / fs;
+    let mut sig = vec![vec![0.0f64; n]; 2];
+
+    let beats = beat_times(&mut rng, afib, duration + 1.0, difficulty);
+    let amp_scale = rng.uniform(0.8, 1.2);
+    let p_amp = if afib { 0.0 } else { 1.0 };
+    // Morphology jitter per trace (python iterates WAVES in dict order,
+    // which is insertion order P,Q,R,S,T — ours matches).
+    let wave_jitter: Vec<f64> =
+        (0..WAVES.len()).map(|_| 1.0 + 0.15 * rng.gauss()).collect();
+
+    for &(bt, bamp) in &beats {
+        let rr_local = 0.8;
+        for (wi, &(name, off, width, amp, ch1s)) in WAVES.iter().enumerate() {
+            if name == "P" && afib {
+                continue;
+            }
+            let a0 = amp
+                * amp_scale
+                * bamp
+                * wave_jitter[wi]
+                * if name == "P" { p_amp } else { 1.0 };
+            let cpos = bt + off * rr_local;
+            let lo = (((cpos - 4.0 * width) * fs).floor().max(0.0)) as usize;
+            let hi = ((((cpos + 4.0 * width) * fs) as isize) + 1)
+                .clamp(0, n as isize) as usize;
+            if hi <= lo {
+                continue;
+            }
+            for i in lo..hi {
+                let tt = i as f64 / fs - cpos;
+                let bump = (-0.5 * (tt / width).powi(2)).exp();
+                sig[0][i] += a0 * bump;
+                sig[1][i] += a0 * ch1s * bump;
+            }
+        }
+    }
+
+    if afib {
+        let f_amp = rng.uniform(0.06, 0.18);
+        let f_freq = rng.uniform(4.0, 9.0);
+        let f_phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        for i in 0..n {
+            let t = i as f64 / fs;
+            let mut fib = f_amp
+                * (2.0 * std::f64::consts::PI * f_freq * t + f_phase).sin();
+            fib *= 1.0
+                + 0.3 * (2.0 * std::f64::consts::PI * 0.9 * t + f_phase * 0.7)
+                    .sin();
+            sig[0][i] += fib;
+            sig[1][i] += 0.8 * fib;
+        }
+    }
+
+    let bw_amp = rng.uniform(0.05, 0.30);
+    let bw_f = rng.uniform(0.15, 0.45);
+    let bw_phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+    for i in 0..n {
+        let t = i as f64 / fs;
+        let w = bw_amp * (2.0 * std::f64::consts::PI * bw_f * t + bw_phase).sin();
+        sig[0][i] += w;
+        sig[1][i] += 0.9 * w;
+    }
+
+    let noise_sigma = rng.uniform(0.015, 0.035) * (1.0 + 0.5 * difficulty);
+    for ch in 0..2 {
+        let nblocks = n / 8;
+        let nvec: Vec<f64> = (0..nblocks).map(|_| rng.gauss()).collect();
+        for i in 0..n {
+            sig[ch][i] += noise_sigma * nvec[(i / 8).min(nblocks - 1)];
+        }
+    }
+    if rng.unit() < 0.15 {
+        let pos = rng.uniform(0.0, (n - 40) as f64) as usize;
+        let spike = rng.uniform(-0.8, 0.8);
+        for ch in 0..2 {
+            for i in pos..pos + 20 {
+                sig[ch][i] += spike;
+            }
+        }
+    }
+
+    let samples = sig
+        .into_iter()
+        .map(|ch| {
+            ch.into_iter()
+                .map(|v| {
+                    ((v / FULL_SCALE_MV * MID as f64).round() as i32 + MID)
+                        .clamp(0, 4095) as u16
+                })
+                .collect()
+        })
+        .collect();
+    Trace { samples, label: afib as u8 }
+}
+
+/// Streaming workload source with the same seed schedule as
+/// `data.generate_dataset` (alternating labels).
+pub struct TraceStream {
+    pub seed: u64,
+    pub difficulty: f64,
+    next_idx: u64,
+}
+
+impl TraceStream {
+    pub fn new(seed: u64, difficulty: f64) -> TraceStream {
+        TraceStream { seed, difficulty, next_idx: 0 }
+    }
+}
+
+impl Iterator for TraceStream {
+    type Item = Trace;
+
+    fn next(&mut self) -> Option<Trace> {
+        let i = self.next_idx;
+        self.next_idx += 1;
+        let afib = i % 2 == 1;
+        Some(generate_trace(
+            self.seed.wrapping_mul(1_000_003).wrapping_add(i.wrapping_mul(97)),
+            afib,
+            self.difficulty,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::preprocess;
+
+    #[test]
+    fn trace_shape_and_range() {
+        let t = generate_trace(5, false, 1.0);
+        assert_eq!(t.samples.len(), c::ECG_CHANNELS);
+        assert_eq!(t.samples[0].len(), c::ECG_WINDOW);
+        assert!(t.samples[0].iter().all(|&s| s <= 4095));
+        assert_eq!(t.label, 0);
+    }
+
+    #[test]
+    fn determinism() {
+        let a = generate_trace(123, true, 1.0);
+        let b = generate_trace(123, true, 1.0);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.label, 1);
+    }
+
+    #[test]
+    fn beats_present() {
+        let t = generate_trace(9, false, 1.0);
+        let max = *t.samples[0].iter().max().unwrap() as i32;
+        let min = *t.samples[0].iter().min().unwrap() as i32;
+        assert!(max - min > 200, "no QRS deflections: {}", max - min);
+    }
+
+    #[test]
+    fn class_statistics_differ() {
+        // Same check as python/tests/test_data.py::test_class_statistics_differ.
+        let mut mean0 = 0.0;
+        let mut mean1 = 0.0;
+        let n = 30;
+        for i in 0..n {
+            for (afib, acc) in [(false, &mut mean0), (true, &mut mean1)] {
+                let t = generate_trace(5000 + i * 13 + afib as u64, afib, 1.0);
+                let acts = preprocess::preprocess(&t.samples);
+                *acc += acts.iter().map(|&a| a as f64).sum::<f64>()
+                    / acts.len() as f64;
+            }
+        }
+        mean0 /= n as f64;
+        mean1 /= n as f64;
+        assert!(
+            mean1 > mean0 + 0.5,
+            "afib mean act {mean1} vs sinus {mean0}"
+        );
+    }
+
+    #[test]
+    fn stream_alternates_labels() {
+        let mut s = TraceStream::new(7, 1.0);
+        let labels: Vec<u8> = (0..6).map(|_| s.next().unwrap().label).collect();
+        assert_eq!(labels, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn difficulty_increases_noise() {
+        // Higher difficulty -> higher sensor noise -> larger activation floor.
+        let floor = |diff: f64| {
+            let mut sum = 0.0;
+            for i in 0..10 {
+                let t = generate_trace(900 + i, false, diff);
+                let acts = preprocess::preprocess(&t.samples);
+                let mut v: Vec<u8> = acts.clone();
+                v.sort_unstable();
+                sum += v[v.len() / 4] as f64; // lower quartile ~ noise floor
+            }
+            sum / 10.0
+        };
+        assert!(floor(2.0) >= floor(0.1));
+    }
+}

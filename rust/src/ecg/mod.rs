@@ -1,0 +1,7 @@
+//! Synthetic ECG workload (substitute for the private BMBF dataset).
+//!
+//! * [`gen`] — streaming generator, mirror of `python/compile/data.py`.
+//! * [`dataset`] — reader for the binary artifact sets (`ecg_*.bin`).
+
+pub mod dataset;
+pub mod gen;

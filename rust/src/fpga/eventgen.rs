@@ -1,0 +1,128 @@
+//! Vector event generator + lookup table (paper §II-C, Fig 5).
+//!
+//! "After the raw signal data is converted into 5-bit values, the vector
+//! event generator attaches an event address from a lookup table. [...]
+//! The use of a lookup table inside the FPGA allows arbitrary mapping of
+//! input vector elements onto the synapse matrix."
+//!
+//! The LUT maps activation-vector indices to event addresses understood by
+//! the ASIC's event router; zero activations generate no events (no pulse).
+
+use crate::asic::consts as c;
+use crate::asic::packets::Event;
+
+/// Lookup table: vector element index -> event address.
+#[derive(Debug, Clone)]
+pub struct EventLut {
+    table: Vec<u16>,
+}
+
+impl EventLut {
+    /// Identity mapping for array half `half`: element i -> address
+    /// `half * K_LOGICAL + i` (matches `router::EventRouter::identity`).
+    pub fn identity(half: u8, len: usize) -> EventLut {
+        EventLut {
+            table: (0..len)
+                .map(|i| half as u16 * c::K_LOGICAL as u16 + i as u16)
+                .collect(),
+        }
+    }
+
+    pub fn custom(table: Vec<u16>) -> EventLut {
+        EventLut { table }
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    pub fn lookup(&self, idx: usize) -> Option<u16> {
+        self.table.get(idx).copied()
+    }
+}
+
+/// Statistics of one generation burst.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GenStats {
+    pub elements: usize,
+    pub events: usize,
+    pub suppressed_zero: usize,
+}
+
+/// Generate the event burst for one activation vector.  Events are spaced
+/// `EVENT_PERIOD_NS` apart starting at `t0_ns` (the synapse drivers process
+/// back-to-back activations at 8 ns, paper §II-A).
+pub fn generate(
+    acts: &[u8],
+    lut: &EventLut,
+    t0_ns: u64,
+) -> (Vec<Event>, GenStats) {
+    assert!(acts.len() <= lut.len(), "LUT shorter than activation vector");
+    let mut events = Vec::with_capacity(acts.len());
+    let mut stats = GenStats { elements: acts.len(), ..Default::default() };
+    let mut t = t0_ns;
+    for (i, &a) in acts.iter().enumerate() {
+        if a == 0 {
+            stats.suppressed_zero += 1;
+            continue;
+        }
+        let addr = lut.lookup(i).expect("checked above");
+        events.push(Event::new(addr, a).at(t));
+        t += c::EVENT_PERIOD_NS as u64;
+        stats.events += 1;
+    }
+    (events, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_lut_addresses() {
+        let lut = EventLut::identity(1, 4);
+        assert_eq!(lut.lookup(0), Some(c::K_LOGICAL as u16));
+        assert_eq!(lut.lookup(3), Some(c::K_LOGICAL as u16 + 3));
+        assert_eq!(lut.lookup(4), None);
+    }
+
+    #[test]
+    fn zero_activations_suppressed() {
+        let lut = EventLut::identity(0, 4);
+        let (evs, st) = generate(&[0, 5, 0, 7], &lut, 0);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(st.suppressed_zero, 2);
+        assert_eq!(evs[0].address, 1);
+        assert_eq!(evs[0].payload, 5);
+        assert_eq!(evs[1].address, 3);
+    }
+
+    #[test]
+    fn event_spacing_is_8ns() {
+        let lut = EventLut::identity(0, 8);
+        let (evs, _) = generate(&[1; 8], &lut, 1000);
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.timestamp_ns, 1000 + i as u64 * 8);
+        }
+    }
+
+    #[test]
+    fn custom_lut_permutes() {
+        // Arbitrary mapping of vector elements onto the synapse matrix.
+        let lut = EventLut::custom(vec![42, 7, 300]);
+        let (evs, _) = generate(&[1, 2, 3], &lut, 0);
+        let addrs: Vec<u16> = evs.iter().map(|e| e.address).collect();
+        assert_eq!(addrs, vec![42, 7, 300]);
+    }
+
+    #[test]
+    #[should_panic(expected = "LUT shorter")]
+    fn short_lut_panics() {
+        let lut = EventLut::identity(0, 2);
+        let _ = generate(&[1, 1, 1], &lut, 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! System-controller FPGA fabric model (paper §II-C, Fig 5).
+//!
+//! * [`preprocess`] — the problem-specific preprocessing chain (Fig 7).
+//! * [`dma`] — DMA controller + LPDDR4 DRAM model.
+//! * [`eventgen`] — vector event generator + lookup table.
+//! * [`playback`] — playback/trace buffers + memory switch.
+//! * [`link`] — LVDS link layer (bandwidth, framing, fault injection).
+
+pub mod dma;
+pub mod eventgen;
+pub mod link;
+pub mod playback;
+pub mod preprocess;

@@ -1,0 +1,209 @@
+//! Playback + trace buffers and the memory switch (paper Fig 5).
+//!
+//! * The **playback buffer** holds a pre-compiled list of commands (events
+//!   and register writes) that the FPGA replays to the ASIC with precise
+//!   timing.
+//! * The **trace buffer** collects events/readout coming back.
+//! * The **memory switch** arbitrates memory-mapped access between the
+//!   playback path, the ARM cores, and memory requests issued *by the ASIC*
+//!   (the SIMD CPUs program the DMA through it, paper §II-C).
+
+use std::collections::VecDeque;
+
+use crate::asic::packets::{Event, MemPacket};
+
+/// A playback entry: release `what` at `release_ns` of experiment time.
+#[derive(Debug, Clone)]
+pub enum PlaybackCmd {
+    Event(Event),
+    Mem(MemPacket),
+    /// Barrier: wait until the ASIC-side handshake (vector event generator
+    /// sync, paper §II-C) fires.
+    Sync(u32),
+}
+
+#[derive(Debug, Default)]
+pub struct PlaybackBuffer {
+    queue: VecDeque<(u64, PlaybackCmd)>,
+    pub replayed: u64,
+}
+
+impl PlaybackBuffer {
+    pub fn push(&mut self, release_ns: u64, cmd: PlaybackCmd) {
+        // Entries must be time-sorted; the compiler emits them in order.
+        if let Some(&(last, _)) = self.queue.back() {
+            assert!(release_ns >= last, "playback entries must be ordered");
+        }
+        self.queue.push_back((release_ns, cmd));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop every command due at or before `now_ns`.
+    pub fn due(&mut self, now_ns: u64) -> Vec<PlaybackCmd> {
+        let mut out = Vec::new();
+        while let Some(&(t, _)) = self.queue.front() {
+            if t > now_ns {
+                break;
+            }
+            out.push(self.queue.pop_front().unwrap().1);
+            self.replayed += 1;
+        }
+        out
+    }
+}
+
+/// Trace buffer: bounded ring of returned events/readouts.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    ring: VecDeque<Event>,
+    pub capacity: usize,
+    pub overflowed: u64,
+}
+
+impl TraceBuffer {
+    pub fn new(capacity: usize) -> TraceBuffer {
+        TraceBuffer { ring: VecDeque::with_capacity(capacity), capacity, overflowed: 0 }
+    }
+
+    pub fn record(&mut self, ev: Event) {
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.overflowed += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    pub fn drain(&mut self) -> Vec<Event> {
+        self.ring.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+}
+
+/// Memory-switch ports, in fixed arbitration priority order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Port {
+    /// Requests issued by the ASIC's SIMD CPUs (highest: the inner loop).
+    Asic,
+    /// The playback/DMA path.
+    Playback,
+    /// The ARM cores (initialisation only, paper §II-C).
+    Arm,
+}
+
+/// Fixed-priority arbiter over queued memory requests.
+#[derive(Debug, Default)]
+pub struct MemorySwitch {
+    queues: [VecDeque<MemPacket>; 3],
+    pub granted: [u64; 3],
+}
+
+impl MemorySwitch {
+    fn idx(port: Port) -> usize {
+        match port {
+            Port::Asic => 0,
+            Port::Playback => 1,
+            Port::Arm => 2,
+        }
+    }
+
+    pub fn request(&mut self, port: Port, pkt: MemPacket) {
+        self.queues[Self::idx(port)].push_back(pkt);
+    }
+
+    /// Grant the next request by priority; returns (port, packet).
+    pub fn grant(&mut self) -> Option<(Port, MemPacket)> {
+        for (i, port) in [Port::Asic, Port::Playback, Port::Arm]
+            .into_iter()
+            .enumerate()
+        {
+            if let Some(pkt) = self.queues[i].pop_front() {
+                self.granted[i] += 1;
+                return Some((port, pkt));
+            }
+        }
+        None
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn playback_releases_in_time_order() {
+        let mut pb = PlaybackBuffer::default();
+        pb.push(10, PlaybackCmd::Event(Event::new(1, 1)));
+        pb.push(20, PlaybackCmd::Event(Event::new(2, 2)));
+        pb.push(30, PlaybackCmd::Sync(0));
+        assert_eq!(pb.due(5).len(), 0);
+        assert_eq!(pb.due(20).len(), 2);
+        assert_eq!(pb.due(100).len(), 1);
+        assert!(pb.is_empty());
+        assert_eq!(pb.replayed, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "ordered")]
+    fn playback_rejects_unordered() {
+        let mut pb = PlaybackBuffer::default();
+        pb.push(20, PlaybackCmd::Sync(0));
+        pb.push(10, PlaybackCmd::Sync(1));
+    }
+
+    #[test]
+    fn trace_buffer_overflow_drops_oldest() {
+        let mut tb = TraceBuffer::new(2);
+        tb.record(Event::new(1, 1));
+        tb.record(Event::new(2, 2));
+        tb.record(Event::new(3, 3));
+        assert_eq!(tb.overflowed, 1);
+        let evs = tb.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].address, 2);
+        assert!(tb.is_empty());
+    }
+
+    #[test]
+    fn memory_switch_priority() {
+        let mut sw = MemorySwitch::default();
+        sw.request(Port::Arm, MemPacket::WriteAck { seq: 1 });
+        sw.request(Port::Asic, MemPacket::WriteAck { seq: 2 });
+        sw.request(Port::Playback, MemPacket::WriteAck { seq: 3 });
+        let (p1, k1) = sw.grant().unwrap();
+        assert_eq!(p1, Port::Asic);
+        assert_eq!(k1.seq(), 2);
+        let (p2, _) = sw.grant().unwrap();
+        assert_eq!(p2, Port::Playback);
+        let (p3, _) = sw.grant().unwrap();
+        assert_eq!(p3, Port::Arm);
+        assert!(sw.grant().is_none());
+        assert_eq!(sw.granted, [1, 1, 1]);
+    }
+
+    #[test]
+    fn memory_switch_fifo_within_port() {
+        let mut sw = MemorySwitch::default();
+        sw.request(Port::Asic, MemPacket::WriteAck { seq: 1 });
+        sw.request(Port::Asic, MemPacket::WriteAck { seq: 2 });
+        assert_eq!(sw.grant().unwrap().1.seq(), 1);
+        assert_eq!(sw.grant().unwrap().1.seq(), 2);
+    }
+}

@@ -1,0 +1,222 @@
+//! FPGA preprocessing chain (paper Fig 7, §II-C "preprocessing chain").
+//!
+//! The problem-specific blue blocks of Fig 5, realised as custom RTL on the
+//! real system and mirrored bit-exactly by `python/compile/data.py::preprocess`:
+//!
+//!   1. **discrete derivative** — suppresses baseline fluctuations,
+//!   2. **max–min pooling** over `POOL_WINDOW` raw samples — rate reduction
+//!      and positive activations,
+//!   3. **5-bit quantisation** — a barrel right-shift, clipped to 31.
+//!
+//! The stage structure is kept explicit (one function per RTL block plus a
+//! streaming state machine) because the timing/energy model charges per
+//! stage and Fig 7 plots the intermediate signals.
+
+use crate::asic::consts as c;
+
+/// Stage 1: discrete derivative with the first sample as seed
+/// (`d[0] = 0`, `d[i] = x[i] - x[i-1]`), per channel.
+pub fn derivative(raw: &[u16]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(raw.len());
+    let mut prev = *raw.first().unwrap_or(&0) as i32;
+    for &s in raw {
+        out.push(s as i32 - prev);
+        prev = s as i32;
+    }
+    out
+}
+
+/// Stage 2: max–min pooling over non-overlapping `POOL_WINDOW` windows.
+pub fn maxmin_pool(deriv: &[i32]) -> Vec<i32> {
+    deriv
+        .chunks_exact(c::POOL_WINDOW)
+        .map(|w| {
+            let mut mx = i32::MIN;
+            let mut mn = i32::MAX;
+            for &v in w {
+                mx = mx.max(v);
+                mn = mn.min(v);
+            }
+            mx - mn
+        })
+        .collect()
+}
+
+/// Stage 3: 5-bit quantisation by barrel shift.
+pub fn quantize5(pooled: &[i32]) -> Vec<u8> {
+    pooled
+        .iter()
+        .map(|&v| ((v >> c::PREPROC_SHIFT).clamp(0, c::X_MAX)) as u8)
+        .collect()
+}
+
+/// Full chain over a two-channel window: `[ch][W]` raw 12-bit samples to
+/// `MODEL_IN` activations (channel-major layout, matching the python mirror
+/// and the event-generator lookup table).
+pub fn preprocess(raw: &[Vec<u16>]) -> Vec<u8> {
+    assert_eq!(raw.len(), c::ECG_CHANNELS);
+    let mut acts = Vec::with_capacity(c::MODEL_IN);
+    for ch in raw {
+        assert_eq!(ch.len(), c::ECG_WINDOW, "window length");
+        acts.extend(quantize5(&maxmin_pool(&derivative(ch))));
+    }
+    acts
+}
+
+/// Intermediate signals for Fig 7 (raw, derivative, pooled, activations)
+/// of channel 0.
+pub struct Fig7Trace {
+    pub raw: Vec<u16>,
+    pub derivative: Vec<i32>,
+    pub pooled: Vec<i32>,
+    pub activations: Vec<u8>,
+}
+
+pub fn fig7_trace(raw_ch0: &[u16]) -> Fig7Trace {
+    let d = derivative(raw_ch0);
+    let p = maxmin_pool(&d);
+    let a = quantize5(&p);
+    Fig7Trace { raw: raw_ch0.to_vec(), derivative: d, pooled: p, activations: a }
+}
+
+/// Streaming implementation processing one sample per FPGA clock — the form
+/// the RTL actually takes.  Kept semantically identical to the batch chain
+/// (property-tested) and used by the DMA path with cycle accounting.
+pub struct StreamingPreprocessor {
+    prev: i32,
+    seeded: bool,
+    win_max: i32,
+    win_min: i32,
+    win_fill: usize,
+    pub out: Vec<u8>,
+    /// FPGA clock cycles consumed (1/sample + 1/window flush).
+    pub cycles: u64,
+}
+
+impl Default for StreamingPreprocessor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingPreprocessor {
+    pub fn new() -> Self {
+        StreamingPreprocessor {
+            prev: 0,
+            seeded: false,
+            win_max: i32::MIN,
+            win_min: i32::MAX,
+            win_fill: 0,
+            out: Vec::new(),
+            cycles: 0,
+        }
+    }
+
+    pub fn push(&mut self, sample: u16) {
+        self.cycles += 1;
+        let s = sample as i32;
+        if !self.seeded {
+            self.prev = s;
+            self.seeded = true;
+        }
+        let d = s - self.prev;
+        self.prev = s;
+        self.win_max = self.win_max.max(d);
+        self.win_min = self.win_min.min(d);
+        self.win_fill += 1;
+        if self.win_fill == c::POOL_WINDOW {
+            let pooled = self.win_max - self.win_min;
+            self.out
+                .push(((pooled >> c::PREPROC_SHIFT).clamp(0, c::X_MAX)) as u8);
+            self.win_max = i32::MIN;
+            self.win_min = i32::MAX;
+            self.win_fill = 0;
+            self.cycles += 1;
+        }
+    }
+
+    pub fn push_channel(&mut self, raw: &[u16]) {
+        for &s in raw {
+            self.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn derivative_basic() {
+        assert_eq!(derivative(&[5, 7, 7, 2]), vec![0, 2, 0, -5]);
+        assert_eq!(derivative(&[]), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn maxmin_pool_window() {
+        let mut d = vec![0i32; c::POOL_WINDOW * 2];
+        d[3] = 10;
+        d[5] = -4; // window 0: max 10, min -4 -> 14
+        d[c::POOL_WINDOW + 1] = 7; // window 1: 7 - 0 = 7
+        assert_eq!(maxmin_pool(&d), vec![14, 7]);
+    }
+
+    #[test]
+    fn quantize5_shift_and_clip() {
+        assert_eq!(quantize5(&[0, 31, 32, 64, 100000]), vec![0, 0, 1, 2, 31]);
+    }
+
+    #[test]
+    fn full_chain_shapes() {
+        let raw = vec![vec![2048u16; c::ECG_WINDOW]; c::ECG_CHANNELS];
+        let acts = preprocess(&raw);
+        assert_eq!(acts.len(), c::MODEL_IN);
+        assert!(acts.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn spike_lands_in_right_bin() {
+        let mut raw = vec![vec![2048u16; c::ECG_WINDOW]; c::ECG_CHANNELS];
+        let pos = 20 * c::POOL_WINDOW + 5;
+        raw[0][pos] = 3500;
+        raw[0][pos + 1] = 3500;
+        let acts = preprocess(&raw);
+        assert_eq!(acts[20], c::X_MAX as u8);
+        assert_eq!(acts[25], 0);
+        assert_eq!(acts[c::POOLED_LEN + 20], 0, "channel isolation");
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        // Property: the RTL-shaped streaming pipeline == the batch chain.
+        let mut rng = SplitMix64::new(42);
+        for case in 0..10 {
+            let raw: Vec<u16> = (0..c::ECG_WINDOW)
+                .map(|_| rng.below(4096) as u16)
+                .collect();
+            let batch = quantize5(&maxmin_pool(&derivative(&raw)));
+            let mut sp = StreamingPreprocessor::new();
+            sp.push_channel(&raw);
+            assert_eq!(sp.out, batch, "case {case}");
+        }
+    }
+
+    #[test]
+    fn streaming_cycle_count() {
+        let mut sp = StreamingPreprocessor::new();
+        sp.push_channel(&vec![0u16; c::ECG_WINDOW]);
+        let expected = c::ECG_WINDOW as u64 + (c::ECG_WINDOW / c::POOL_WINDOW) as u64;
+        assert_eq!(sp.cycles, expected);
+    }
+
+    #[test]
+    fn fig7_trace_consistent() {
+        let mut raw = vec![2048u16; c::ECG_WINDOW];
+        raw[100] = 2600;
+        let tr = fig7_trace(&raw);
+        assert_eq!(tr.derivative.len(), c::ECG_WINDOW);
+        assert_eq!(tr.pooled.len(), c::POOLED_LEN);
+        assert_eq!(tr.activations, quantize5(&tr.pooled));
+    }
+}

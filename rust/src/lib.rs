@@ -1,0 +1,29 @@
+//! # bss2-mobile — BrainScaleS-2 mobile system, reproduced in software
+//!
+//! Reproduction of *"Demonstrating Analog Inference on the BrainScaleS-2
+//! Mobile System"* (IEEE OJCAS 2022) as a three-layer Rust + JAX + Pallas
+//! stack.  The physical system (mixed-signal ASIC + FPGA controller) is
+//! replaced by faithful behavioural models; the analog vector-matrix
+//! multiplication executes as an AOT-compiled Pallas kernel via PJRT.
+//! See DESIGN.md for the substitution table and architecture.
+//!
+//! Module map:
+//! * [`asic`] — the BSS-2 ASIC model (analog arrays, router, SIMD CPUs).
+//! * [`fpga`] — the system-controller fabric (DMA, preprocessing, buffers).
+//! * [`power`] — supply rails, INA219 sensors, energy model (Table 1).
+//! * [`runtime`] — PJRT client: loads and executes `artifacts/*.hlo.txt`.
+//! * [`nn`] — weights, logical->physical mapping, graph + partitioner.
+//! * [`coordinator`] — standalone inference engine, batch runner, service.
+//! * [`ecg`] — synthetic ECG generator + binary dataset reader.
+//! * [`baselines`] — comparison platforms of paper §V.
+//! * [`util`] — hand-rolled substrate (JSON, PRNG, CLI, bench, propcheck).
+
+pub mod asic;
+pub mod baselines;
+pub mod coordinator;
+pub mod ecg;
+pub mod fpga;
+pub mod nn;
+pub mod power;
+pub mod runtime;
+pub mod util;

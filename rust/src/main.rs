@@ -1,0 +1,424 @@
+//! `repro` — the BSS-2 mobile system CLI (leader entrypoint).
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! repro selftest                     artifact <-> engine roundtrip checks
+//! repro table1  [--n 500]            paper Table 1 on the held-out test set
+//! repro fig4    [--out fig4.csv]     membrane-integration trace (Fig 4)
+//! repro fig7    [--out fig7.csv]     preprocessing-chain stages (Fig 7)
+//! repro fig8                         pretty-print the training curve (Fig 8)
+//! repro throughput                   Eq. 1-3 rates + area efficiency
+//! repro baselines                    §V platform comparison
+//! repro classify [--n 10]            classify synthetic traces (quickstart)
+//! repro serve   [--addr host:port]   experiment execution service
+//! repro snn     [--neurons 4]        spiking (AdEx) operation-mode demo
+//! ```
+
+use bss2::asic::consts as c;
+use bss2::coordinator::batch;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::ecg::gen::{generate_trace, TraceStream};
+use bss2::runtime::ArtifactDir;
+use bss2::util::cli::Args;
+
+fn main() {
+    env_logger_init();
+    let (cmd, args) = Args::from_env();
+    let result = match cmd.as_str() {
+        "selftest" => selftest(&args),
+        "table1" => table1(&args),
+        "fig4" => fig4(&args),
+        "fig7" => fig7(&args),
+        "fig8" => fig8(&args),
+        "throughput" => throughput(&args),
+        "baselines" => baselines_cmd(&args),
+        "classify" => classify(&args),
+        "serve" => serve(&args),
+        "snn" => snn(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command `{other}` (try help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+repro — BrainScaleS-2 mobile system reproduction
+
+USAGE: repro <command> [options]
+
+COMMANDS:
+  selftest     artifact/engine roundtrip checks (run after `make artifacts`)
+  table1       reproduce paper Table 1 on the held-out test set
+  fig4         membrane-integration trace  (--out fig4.csv --col 0)
+  fig7         preprocessing stages        (--out fig7.csv --seed 42 --afib)
+  fig8         pretty-print the training curve
+  throughput   Eq. 1-3: peak/effective rates, area efficiency
+  baselines    §V energy comparison vs published platforms
+  classify     classify synthetic traces   (--n 10 --native)
+  serve        experiment service          (--addr 127.0.0.1:7001 --native)
+  snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
+
+OPTIONS (common):
+  --artifacts DIR   artifact directory (default: ./artifacts or $BSS2_ARTIFACTS)
+  --native          use the in-process array model instead of PJRT
+  --noise-off       disable temporal analog noise (ablation)
+";
+
+fn env_logger_init() {
+    // log crate without env_logger: print warnings+ to stderr.
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER)
+        .map(|()| log::set_max_level(log::LevelFilter::Info));
+}
+
+fn artifact_dir(args: &Args) -> ArtifactDir {
+    match args.get("artifacts") {
+        Some(p) => ArtifactDir::new(p),
+        None => ArtifactDir::default_location(),
+    }
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    EngineConfig {
+        use_pjrt: !args.flag("native"),
+        noise_off: args.flag("noise-off"),
+        nominal_calib: args.flag("nominal-calib"),
+        noise_seed: args.u64_or("noise-seed", 0x5EED).unwrap_or(0x5EED),
+    }
+}
+
+fn make_engine(args: &Args) -> anyhow::Result<Engine> {
+    Engine::from_artifacts(&artifact_dir(args), engine_config(args))
+}
+
+// --- selftest -----------------------------------------------------------------
+
+fn selftest(args: &Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    dir.require()?;
+    println!("[selftest] artifacts: {}", dir.root.display());
+    let manifest = dir.load_manifest()?;
+    println!(
+        "[selftest] manifest ok (k={}, n={}, {} MACs)",
+        manifest.k_logical, manifest.n_cols, manifest.macs_total
+    );
+
+    // 1. VMM artifact vs exported golden vectors (bit-exact).
+    let rt = bss2::runtime::Runtime::cpu()?;
+    let vmm = rt.load_vmm(&dir.vmm_hlo())?;
+    let tv = std::fs::read_to_string(dir.path("vmm_testvec.json"))?;
+    let tv = bss2::util::json::Json::parse(&tv)
+        .map_err(|e| anyhow::anyhow!("vmm_testvec: {e}"))?;
+    let cases = tv.req("cases")?.as_arr().unwrap();
+    for (i, case) in cases.iter().enumerate() {
+        let x = case.req("x")?.to_f32_vec()?;
+        let w = case.req("w")?.to_f32_vec()?;
+        let gain = case.req("gain")?.to_f32_vec()?;
+        let offset = case.req("offset")?.to_f32_vec()?;
+        let noise = case.req("noise")?.to_f32_vec()?;
+        let scale = case.req("scale")?.as_f64().unwrap() as f32;
+        let expected = case.req("expected")?.to_f32_vec()?;
+        let staged = vmm.stage_pass(&w, &gain, &offset, scale)?;
+        let got = vmm.run_pass(&staged, &x, &noise)?;
+        anyhow::ensure!(got == expected, "vmm case {i} mismatch");
+        println!("[selftest] vmm case {i}: OK ({} cols bit-exact)", got.len());
+    }
+
+    // 2. Fused model vs 3-pass engine (noise off; must agree bit-exactly).
+    let model_exe = rt.load_model(&dir.model_hlo())?;
+    let trained = bss2::nn::weights::TrainedModel::load(&dir.weights())?;
+    model_exe.stage(&trained)?;
+    let mv = std::fs::read_to_string(dir.path("model_testvec.json"))?;
+    let mv = bss2::util::json::Json::parse(&mv)
+        .map_err(|e| anyhow::anyhow!("model_testvec: {e}"))?;
+    let mut engine = Engine::from_artifacts(
+        &dir,
+        EngineConfig { noise_off: true, ..engine_config(args) },
+    )?;
+    for (i, case) in mv.req("cases")?.as_arr().unwrap().iter().enumerate() {
+        let act = case.req("act")?.to_f32_vec()?;
+        let want = case.req("scores")?.to_f32_vec()?;
+        let fused = model_exe.run(&act)?;
+        anyhow::ensure!(
+            (fused[0] - want[0]).abs() < 1e-4
+                && (fused[1] - want[1]).abs() < 1e-4,
+            "fused model case {i}: got {fused:?} want {want:?}"
+        );
+        let acts_i: Vec<i32> = act.iter().map(|&a| a as i32).collect();
+        let inf = engine.classify_acts(&acts_i)?;
+        // Engine pools with integer rounding; allow 1 LSB.
+        anyhow::ensure!(
+            (inf.scores[0] - want[0]).abs() <= 1.0
+                && (inf.scores[1] - want[1]).abs() <= 1.0,
+            "engine case {i}: got {:?} want {want:?}",
+            inf.scores
+        );
+        println!("[selftest] model case {i}: fused+engine OK");
+    }
+    println!("[selftest] ALL OK");
+    Ok(())
+}
+
+// --- table1 -------------------------------------------------------------------
+
+fn table1(args: &Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let n = args.usize_or("n", 500)?;
+    let ds = Dataset::load(&dir.ecg_test())?;
+    anyhow::ensure!(!ds.is_empty(), "empty test set");
+    let traces: Vec<_> = ds
+        .traces
+        .iter()
+        .take(n)
+        .map(|t| (t.clone(), t.label))
+        .collect();
+    println!(
+        "[table1] classifying {} held-out traces (batch size 1, {}) ...",
+        traces.len(),
+        if args.flag("native") { "native backend" } else { "PJRT artifact" }
+    );
+    let mut engine = make_engine(args)?;
+    let t0 = std::time::Instant::now();
+    let rep = batch::run_block(&mut engine, &traces)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.table1());
+    println!(
+        "[table1] host wall-clock {:.2} s ({:.2} ms/inference); simulated \
+         block time {:.1} ms",
+        wall,
+        wall * 1e3 / traces.len() as f64,
+        rep.block_time_s * 1e3
+    );
+    println!(
+        "[table1] paper reference: 276 µs, 5.6 W, 1.56 mJ, det 93.7±0.7 %, \
+         fp 14.0±1.0 %"
+    );
+    Ok(())
+}
+
+// --- figures ------------------------------------------------------------------
+
+fn fig4(args: &Args) -> anyhow::Result<()> {
+    use bss2::asic::array::{AnalogArray, ColumnCalib};
+    let col = args.usize_or("col", 0)?;
+    let out = args.str_or("out", "artifacts/fig4_membrane.csv");
+    // A single neuron column integrating a staged pulse train (Fig 4):
+    // batches of events arrive back-to-back at 8 ns.
+    let mut array = AnalogArray::new(16, 8, ColumnCalib::nominal(8));
+    let mut w = vec![0i8; 16 * 8];
+    for r in 0..16 {
+        w[r * 8 + col] = if r % 3 == 2 { -20 } else { 30 };
+    }
+    array.load_weights(&w);
+    let batches: Vec<Vec<u8>> = (0..16)
+        .map(|r| {
+            let mut b = vec![0u8; 16];
+            b[r] = (5 + 2 * (r % 13)) as u8;
+            b
+        })
+        .collect();
+    let trace = array.membrane_trace(&batches, col, 0.012);
+    let mut csv = String::from("t_ns,v_membrane_lsb\n");
+    for (i, v) in trace.iter().enumerate() {
+        csv.push_str(&format!("{},{v}\n", (i + 1) * 8));
+    }
+    std::fs::write(&out, &csv)?;
+    println!(
+        "[fig4] membrane trace of column {col}: {} samples -> {out}",
+        trace.len()
+    );
+    println!("[fig4] V_out after integration: {:.1} LSB", trace.last().unwrap());
+    Ok(())
+}
+
+fn fig7(args: &Args) -> anyhow::Result<()> {
+    use bss2::fpga::preprocess;
+    let seed = args.u64_or("seed", 42)?;
+    let afib = args.flag("afib");
+    let out = args.str_or("out", "artifacts/fig7_preprocess.csv");
+    let trace = generate_trace(seed, afib, 1.0);
+    let stages = preprocess::fig7_trace(&trace.samples[0]);
+    let mut csv =
+        String::from("sample,raw_u12,derivative,pooled_bin,pooled_maxmin,act_u5\n");
+    for i in 0..c::ECG_WINDOW {
+        let bin = i / c::POOL_WINDOW;
+        csv.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            i,
+            stages.raw[i],
+            stages.derivative[i],
+            bin,
+            stages.pooled[bin],
+            stages.activations[bin]
+        ));
+    }
+    std::fs::write(&out, &csv)?;
+    println!(
+        "[fig7] preprocessing stages (label={}): raw {} samples -> {} x 5-bit -> {out}",
+        trace.label,
+        c::ECG_WINDOW,
+        stages.activations.len()
+    );
+    Ok(())
+}
+
+fn fig8(args: &Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let csv = std::fs::read_to_string(dir.path("fig8_training.csv"))?;
+    println!("[fig8] training metrics (paper Fig 8 analogue):\n");
+    println!(
+        "{:>5} {:>11} {:>9} {:>9} {:>9} {:>6}",
+        "epoch", "train_loss", "val_loss", "val_acc", "det", "fp"
+    );
+    let mut last = None;
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() >= 7 {
+            println!(
+                "{:>5} {:>11.4} {:>9.4} {:>9.3} {:>9.3} {:>6.3}",
+                f[0],
+                f[1].parse::<f64>().unwrap_or(0.0),
+                f[2].parse::<f64>().unwrap_or(0.0),
+                f[4].parse::<f64>().unwrap_or(0.0),
+                f[5].parse::<f64>().unwrap_or(0.0),
+                f[6].parse::<f64>().unwrap_or(0.0)
+            );
+            last = Some(line.to_string());
+        }
+    }
+    if let Some(l) = last {
+        let f: Vec<&str> = l.split(',').collect();
+        println!(
+            "\n[fig8] final: val_acc={} det={} fp={} (paper: det 0.937, fp 0.140)",
+            f[4], f[5], f[6]
+        );
+    }
+    Ok(())
+}
+
+fn throughput(_args: &Args) -> anyhow::Result<()> {
+    println!(
+        "[throughput] paper Eq. 1: peak synapse rate = {:.1} TOp/s (paper: 32.8)",
+        c::peak_ops_per_s() / 1e12
+    );
+    println!(
+        "[throughput] paper Eq. 2: effective VMM rate = {:.1} GOp/s (paper: ~52)",
+        c::effective_ops_per_s() / 1e9
+    );
+    println!(
+        "[throughput] paper Eq. 3: MAC area efficiency = {:.2} TOp/(s mm²) (paper: 2.6)",
+        c::area_efficiency_tops_mm2()
+    );
+    println!(
+        "[throughput] full-die target: {:.2} TOp/(s mm²) (paper: >1)",
+        c::peak_ops_per_s() / 1e12 / c::DIE_MM2
+    );
+    Ok(())
+}
+
+fn baselines_cmd(args: &Args) -> anyhow::Result<()> {
+    use bss2::power::energy::cr2032_years;
+    let bss2_mj = args.f64_or("bss2-mj", 1.56)?;
+    println!("[baselines] §V energy comparison (per classification):");
+    for (name, j, ratio) in bss2::baselines::comparison_table(bss2_mj * 1e-3) {
+        println!("  {:<38} {:>12.4} mJ   {:>7.1}x", name, j * 1e3, ratio);
+    }
+    println!(
+        "[baselines] CR2032 at 2-minute intervals: {:.1} years (paper: ~5)",
+        cr2032_years(bss2_mj * 1e-3, 120.0)
+    );
+    Ok(())
+}
+
+// --- classify / serve / snn ----------------------------------------------------
+
+fn classify(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 10)?;
+    let mut engine = make_engine(args)?;
+    let mut correct = 0;
+    for (i, trace) in TraceStream::new(args.u64_or("seed", 1)?, 1.0)
+        .take(n)
+        .enumerate()
+    {
+        let inf = engine.classify(&trace)?;
+        let ok = inf.pred == trace.label;
+        correct += ok as usize;
+        println!(
+            "trace {i:3}  label={} pred={} scores=[{:+6.1} {:+6.1}]  \
+             {:.0} µs  {:.2} mJ  {}",
+            trace.label,
+            inf.pred,
+            inf.scores[0],
+            inf.scores[1],
+            inf.sim_time_s * 1e6,
+            inf.energy.total_j() * 1e3,
+            if ok { "ok" } else { "MISS" }
+        );
+    }
+    println!("[classify] {correct}/{n} correct");
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7001");
+    let dir = artifact_dir(args);
+    let cfg = engine_config(args);
+    let svc = bss2::coordinator::service::Service::start(&addr, move || {
+        Engine::from_artifacts(&dir, cfg)
+    })?;
+    println!(
+        "[serve] experiment service on {} (line-delimited JSON; \
+         {{\"cmd\":\"ping\"}} / classify / stats / shutdown)",
+        svc.addr
+    );
+    // Block until a client sends shutdown.
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+}
+
+fn snn(args: &Args) -> anyhow::Result<()> {
+    use bss2::asic::neuron::{AdexParams, SpikingPopulation};
+    let n = args.usize_or("neurons", 4)?;
+    let current = args.f64_or("current", 150.0)?;
+    let dur = args.f64_or("dur-us", 500.0)?;
+    println!(
+        "[snn] AdEx population of {n} neurons, {current} LSB input, \
+         {dur} µs accelerated time"
+    );
+    let mut pop = SpikingPopulation::new(n, AdexParams::default());
+    pop.run_constant_input(current, dur);
+    for (i, r) in pop.rates_hz(dur).iter().enumerate() {
+        println!(
+            "  neuron {i}: {} spikes, {:.0} Hz (accelerated) = {:.1} Hz bio",
+            pop.neurons[i].spikes.len(),
+            r,
+            r / 1000.0
+        );
+    }
+    println!(
+        "[snn] the same substrate runs the CDNN showcase — paper §V argues \
+         this combination is the key feature of BSS-2"
+    );
+    Ok(())
+}

@@ -1,0 +1,324 @@
+//! Multi-chunk plan executor — the hxtorch "Hardware Resources" contract
+//! (paper §II-D): arbitrary-size linear layers run on the fixed-size analog
+//! substrate by executing their partitioned [`Plan`] chunk by chunk,
+//! accumulating partial sums digitally (SIMD CPUs) and requantising between
+//! layers.  Paper §V: "rate-based stateless operation ... allows for
+//! multiplexing hardware resources in time and therefore has the advantage
+//! of supporting arbitrarily large model sizes".
+//!
+//! The executor drives any [`PassRunner`] — the native analog array model
+//! here, the PJRT artifact in the engine — and is validated against a float
+//! reference on random layer stacks (quantisation-aware, see tests).
+
+use crate::asic::array::{AnalogArray, ColumnCalib};
+use crate::asic::consts as c;
+
+use super::partition::{partition, Plan};
+
+/// Anything that can run one physical integration cycle of a chip-sized
+/// weight tile: `x` (5-bit activations, len == chunk in_len) against a
+/// `in_len x out_len` tile, returning signed ADC counts.
+pub trait PassRunner {
+    fn run_tile(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        x: &[u8],
+        scale: f32,
+    ) -> anyhow::Result<Vec<i16>>;
+
+    /// Integration cycles executed so far (for cost accounting).
+    fn passes(&self) -> usize;
+}
+
+/// Native-model runner: loads each tile into an analog array half and
+/// integrates (noise-free by default; the engine path carries noise).
+pub struct NativeRunner {
+    array: AnalogArray,
+    passes: usize,
+    pub noise: Vec<f32>,
+}
+
+impl Default for NativeRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeRunner {
+    pub fn new() -> NativeRunner {
+        NativeRunner {
+            array: AnalogArray::new(
+                c::K_LOGICAL,
+                c::N_COLS,
+                ColumnCalib::nominal(c::N_COLS),
+            ),
+            passes: 0,
+            noise: vec![0.0; c::N_COLS],
+        }
+    }
+}
+
+impl PassRunner for NativeRunner {
+    fn run_tile(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        x: &[u8],
+        scale: f32,
+    ) -> anyhow::Result<Vec<i16>> {
+        anyhow::ensure!(in_len <= c::K_LOGICAL && out_len <= c::N_COLS);
+        anyhow::ensure!(w_tile.len() == in_len * out_len);
+        anyhow::ensure!(x.len() == in_len);
+        // Pack the tile into the physical array (zero-padded).
+        let mut w_phys = vec![0i8; c::K_LOGICAL * c::N_COLS];
+        for r in 0..in_len {
+            for col in 0..out_len {
+                w_phys[r * c::N_COLS + col] =
+                    (w_tile[r * out_len + col] as i32)
+                        .clamp(-c::W_MAX, c::W_MAX) as i8;
+            }
+        }
+        self.array.load_weights(&w_phys);
+        let mut x_phys = vec![0u8; c::K_LOGICAL];
+        x_phys[..in_len].copy_from_slice(x);
+        let out = self.array.integrate(&x_phys, scale, &self.noise, false);
+        self.passes += 1;
+        Ok(out[..out_len].to_vec())
+    }
+
+    fn passes(&self) -> usize {
+        self.passes
+    }
+}
+
+/// One linear layer of an arbitrary-size model.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Row-major `[in_dim][out_dim]` integer weights on the 6-bit grid.
+    pub weights: Vec<f32>,
+    pub scale: f32,
+    /// Apply ReLU + >>RELU_SHIFT requantisation after this layer.
+    pub relu_requant: bool,
+}
+
+/// Execute one layer's plan: chunks -> tiles -> digital partial sums.
+/// Partial sums accumulate in i32 (the SIMD CPUs' width) **before** any
+/// nonlinearity, exactly like fc1's split blocks in the paper's Fig 6.
+pub fn run_layer<R: PassRunner>(
+    runner: &mut R,
+    layer: &LayerSpec,
+    plan: &Plan,
+    x: &[u8],
+) -> anyhow::Result<Vec<i32>> {
+    anyhow::ensure!(x.len() == layer.in_dim, "input dim");
+    anyhow::ensure!(
+        plan.in_dim == layer.in_dim && plan.out_dim == layer.out_dim,
+        "plan/layer mismatch"
+    );
+    let mut out = vec![0i32; layer.out_dim];
+    for chunk in &plan.chunks {
+        // Slice the weight tile of this chunk.
+        let (il, ol) = (chunk.in_len(), chunk.out_len());
+        let mut tile = vec![0.0f32; il * ol];
+        for (ri, r) in (chunk.in_start..chunk.in_end).enumerate() {
+            for (ci, col) in (chunk.out_start..chunk.out_end).enumerate() {
+                tile[ri * ol + ci] = layer.weights[r * layer.out_dim + col];
+            }
+        }
+        let adc = runner.run_tile(
+            &tile,
+            il,
+            ol,
+            &x[chunk.in_start..chunk.in_end],
+            layer.scale,
+        )?;
+        for (ci, &v) in adc.iter().enumerate() {
+            out[chunk.out_start + ci] += v as i32; // digital partial sum
+        }
+    }
+    Ok(out)
+}
+
+/// Execute a stack of layers end to end (5-bit activations between layers).
+pub fn run_model<R: PassRunner>(
+    runner: &mut R,
+    layers: &[LayerSpec],
+    input: &[u8],
+) -> anyhow::Result<Vec<i32>> {
+    anyhow::ensure!(!layers.is_empty());
+    let mut acts: Vec<u8> = input.to_vec();
+    let mut last_raw: Vec<i32> = acts.iter().map(|&a| a as i32).collect();
+    for layer in layers {
+        let plan = partition(layer.in_dim, layer.out_dim, c::N_HALVES);
+        plan.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+        let raw = run_layer(runner, layer, &plan, &acts)?;
+        if layer.relu_requant {
+            acts = raw
+                .iter()
+                .map(|&v| {
+                    ((v.max(0) >> c::RELU_SHIFT).min(c::X_MAX)) as u8
+                })
+                .collect();
+        } else {
+            acts = raw
+                .iter()
+                .map(|&v| v.clamp(0, c::X_MAX) as u8)
+                .collect();
+        }
+        last_raw = raw;
+    }
+    Ok(last_raw)
+}
+
+/// Cost model: integration cycles + simulated chip time for a layer stack
+/// (paper §III-A: oversize networks pay reconfiguration/serialisation).
+pub fn cost_of(layers: &[(usize, usize)]) -> (usize, f64) {
+    let passes: usize = layers
+        .iter()
+        .map(|&(i, o)| partition(i, o, c::N_HALVES).passes())
+        .sum();
+    let time_us = passes as f64 * c::INTEGRATION_CYCLE_US;
+    (passes, time_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_layer(
+        rng: &mut SplitMix64,
+        in_dim: usize,
+        out_dim: usize,
+        relu: bool,
+    ) -> LayerSpec {
+        LayerSpec {
+            in_dim,
+            out_dim,
+            weights: (0..in_dim * out_dim)
+                .map(|_| (rng.below(2 * c::W_MAX as u64 + 1) as i32
+                    - c::W_MAX) as f32)
+                .collect(),
+            scale: 0.002,
+            relu_requant: relu,
+        }
+    }
+
+    /// Float reference for a single layer in the linear regime.
+    fn dense_ref(layer: &LayerSpec, x: &[u8]) -> Vec<f64> {
+        let mut out = vec![0.0f64; layer.out_dim];
+        for (r, &xv) in x.iter().enumerate() {
+            for col in 0..layer.out_dim {
+                out[col] += xv as f64
+                    * layer.weights[r * layer.out_dim + col] as f64;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn single_chip_layer_matches_reference() {
+        let mut rng = SplitMix64::new(1);
+        let layer = rand_layer(&mut rng, 200, 100, false);
+        let x: Vec<u8> = (0..200).map(|_| rng.below(4) as u8).collect();
+        let plan = partition(200, 100, 2);
+        let mut runner = NativeRunner::new();
+        let got = run_layer(&mut runner, &layer, &plan, &x).unwrap();
+        let want = dense_ref(&layer, &x);
+        for (g, w) in got.iter().zip(&want) {
+            let expect = (w * layer.scale as f64).round().clamp(-128.0, 127.0);
+            assert!(
+                (*g as f64 - expect).abs() <= 1.0,
+                "got {g} want {expect}"
+            );
+        }
+        assert_eq!(runner.passes(), 1);
+    }
+
+    #[test]
+    fn oversize_layer_partial_sums() {
+        // 600 inputs -> 3 input tiles; digital accumulation must match the
+        // direct dense product in the linear regime.
+        let mut rng = SplitMix64::new(2);
+        let layer = rand_layer(&mut rng, 600, 300, false);
+        // Small activations keep each *partial* sum inside the ADC range.
+        let x: Vec<u8> = (0..600).map(|_| rng.below(2) as u8).collect();
+        let plan = partition(600, 300, 2);
+        let mut runner = NativeRunner::new();
+        let got = run_layer(&mut runner, &layer, &plan, &x).unwrap();
+        assert_eq!(runner.passes(), plan.passes());
+        let want = dense_ref(&layer, &x);
+        let mut worst = 0.0f64;
+        for (g, w) in got.iter().zip(&want) {
+            let expect = w * layer.scale as f64;
+            worst = worst.max((*g as f64 - expect).abs());
+        }
+        // Each tile rounds independently: error <= 0.5 LSB per input tile.
+        assert!(worst <= 3.0 * 0.5 + 1e-9, "worst {worst}");
+    }
+
+    #[test]
+    fn multi_layer_stack_runs() {
+        let mut rng = SplitMix64::new(3);
+        let layers = vec![
+            rand_layer(&mut rng, 300, 400, true),
+            rand_layer(&mut rng, 400, 150, true),
+            rand_layer(&mut rng, 150, 10, false),
+        ];
+        let x: Vec<u8> = (0..300).map(|_| rng.below(8) as u8).collect();
+        let mut runner = NativeRunner::new();
+        let out = run_model(&mut runner, &layers, &x).unwrap();
+        assert_eq!(out.len(), 10);
+        // 300x400: 2x2=4 chunks; 400x150: 2 chunks; 150x10: 1 chunk.
+        assert_eq!(runner.passes(), 4 + 2 + 1);
+    }
+
+    #[test]
+    fn executor_equivalence_property() {
+        propcheck::check("executor_matches_dense", 12, 0xFACE, |g| {
+            let in_dim = g.usize_in(1, 520);
+            let out_dim = g.usize_in(1, 300);
+            let mut rng = SplitMix64::new(g.rng.next_u64());
+            let layer = rand_layer(&mut rng, in_dim, out_dim, false);
+            let x: Vec<u8> =
+                (0..in_dim).map(|_| rng.below(2) as u8).collect();
+            let plan = partition(in_dim, out_dim, 2);
+            let mut runner = NativeRunner::new();
+            let got = run_layer(&mut runner, &layer, &plan, &x)
+                .map_err(|e| e.to_string())?;
+            let want = dense_ref(&layer, &x);
+            let tiles = in_dim.div_ceil(c::K_LOGICAL) as f64;
+            for (i, (gv, wv)) in got.iter().zip(&want).enumerate() {
+                let expect = wv * layer.scale as f64;
+                // Only check columns whose exact value stays linear.
+                if expect.abs() < 100.0 {
+                    prop_assert!(
+                        (*gv as f64 - expect).abs() <= 0.5 * tiles + 1e-6,
+                        "col {i}: got {gv} want {expect}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_model_scales() {
+        let (p_small, t_small) = cost_of(&[(256, 256)]);
+        assert_eq!(p_small, 1);
+        assert!((t_small - c::INTEGRATION_CYCLE_US).abs() < 1e-9);
+        let (p_big, _) = cost_of(&[(1024, 1024)]);
+        assert_eq!(p_big, 16);
+        // Paper §V scale: a 10M-parameter model is time-multiplexable.
+        let (p_huge, t_huge) = cost_of(&[(3000, 3000), (3000, 1000)]);
+        assert!(p_huge > 100);
+        assert!(t_huge > 500.0);
+    }
+}

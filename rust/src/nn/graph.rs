@@ -1,0 +1,164 @@
+//! Data-flow graph of network layers (paper §II-D "Data-Flow Graph
+//! Execution" — the hxtorch-equivalent model description the JIT walks).
+//!
+//! A [`Graph`] is a linear chain of [`Op`]s over integer activation
+//! vectors.  `lower()` walks the graph and emits the SIMD-CPU instruction
+//! stream + pass schedule the standalone engine executes — the "converted
+//! into configuration data and control flow statements" step of the paper.
+
+use crate::asic::consts as c;
+use crate::asic::simd::Insn;
+
+use super::partition::{partition, Plan};
+
+/// Graph operations (what the user-level model description contains).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Analog VMM against physical pass `pass_idx` on `half` (pre-packed
+    /// matrices; conv is expressed as its Toeplitz matrix).
+    AnalogPass { pass_idx: usize, half: u8 },
+    /// Digital partial-sum add of two column windows (fc1's split blocks).
+    PartialSum { a_off: u16, b_off: u16, len: u16 },
+    /// Digital ReLU + right-shift requantisation.
+    ReluShift { shift: u8 },
+    /// Slice a window out of the activation vector.
+    Window { off: u16, len: u16 },
+    /// Average-pool groups (the 10 → 2 output reduction).
+    AvgPool { group: u16, groups: u16 },
+    /// Final argmax over the first `len` lanes.
+    ArgMax { len: u16 },
+}
+
+/// The ECG network of paper Fig 6 as a data-flow graph.
+pub fn ecg_network() -> Graph {
+    Graph {
+        ops: vec![
+            Op::AnalogPass { pass_idx: 0, half: 0 }, // conv on upper half
+            Op::ReluShift { shift: c::RELU_SHIFT as u8 },
+            Op::AnalogPass { pass_idx: 1, half: 1 }, // fc1 on lower half
+            Op::PartialSum { a_off: 0, b_off: c::FC1_OUT as u16, len: c::FC1_OUT as u16 },
+            Op::ReluShift { shift: c::RELU_SHIFT as u8 },
+            Op::AnalogPass { pass_idx: 2, half: 1 }, // fc2 on lower half
+            Op::Window { off: 2 * c::FC1_OUT as u16, len: c::FC2_OUT as u16 },
+            Op::AvgPool { group: c::POOL_GROUP as u16, groups: c::N_CLASSES as u16 },
+            Op::ArgMax { len: c::N_CLASSES as u16 },
+        ],
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    /// Number of analog passes (integration cycles) per inference.
+    pub fn analog_passes(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, Op::AnalogPass { .. }))
+            .count()
+    }
+
+    /// Lower the graph to a SIMD instruction stream.  Register allocation
+    /// is a simple two-register rotation (act in v0, scratch v1/v2); the
+    /// result is stored to slot 1.
+    pub fn lower(&self) -> Vec<Insn> {
+        let mut s = Vec::new();
+        s.push(Insn::LoadActivations { dst: 0, src_slot: 0 });
+        s.push(Insn::WaitDma);
+        for op in &self.ops {
+            match *op {
+                Op::AnalogPass { pass_idx: _, half } => {
+                    s.push(Insn::TriggerEvents { half, src: 0 });
+                    s.push(Insn::TriggerVmm { half });
+                    s.push(Insn::ReadAdc { half, dst: 1 });
+                    s.push(Insn::Mov { dst: 0, src: 1 });
+                }
+                Op::PartialSum { a_off, b_off, len } => {
+                    s.push(Insn::Slice { dst: 1, src: 0, offset: a_off, len });
+                    s.push(Insn::Slice { dst: 2, src: 0, offset: b_off, len });
+                    s.push(Insn::Add { dst: 0, a: 1, b: 2 });
+                }
+                Op::ReluShift { shift } => {
+                    s.push(Insn::Relu { dst: 0, src: 0 });
+                    s.push(Insn::ShiftRight { dst: 0, src: 0, shift });
+                    s.push(Insn::Clamp { dst: 0, src: 0, lo: 0, hi: c::X_MAX });
+                }
+                Op::Window { off, len } => {
+                    s.push(Insn::Slice { dst: 0, src: 0, offset: off, len });
+                }
+                Op::AvgPool { group, groups } => {
+                    s.push(Insn::AvgPool { dst: 0, src: 0, group, groups });
+                }
+                Op::ArgMax { len } => {
+                    s.push(Insn::ArgMax { src: 0, len });
+                }
+            }
+        }
+        s.push(Insn::StoreResult { src: 0, dst_slot: 1 });
+        s
+    }
+
+    /// Resource summary for arbitrary models: how many chip passes a
+    /// sequence of dense layer shapes costs after partitioning (paper §V:
+    /// model size bounded only by memory).
+    pub fn plan_layers(layers: &[(usize, usize)], halves: usize) -> Vec<Plan> {
+        layers
+            .iter()
+            .map(|&(i, o)| partition(i, o, halves))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ecg_graph_has_three_passes() {
+        let g = ecg_network();
+        assert_eq!(g.analog_passes(), 3);
+    }
+
+    #[test]
+    fn lowered_stream_structure() {
+        let g = ecg_network();
+        let s = g.lower();
+        // 3 passes x 4 insns + load/wait + 2x relu-shift(3) + psum(3)
+        // + window + pool + argmax + store
+        let triggers = s
+            .iter()
+            .filter(|i| matches!(i, Insn::TriggerVmm { .. }))
+            .count();
+        assert_eq!(triggers, 3);
+        assert!(matches!(s[0], Insn::LoadActivations { .. }));
+        assert!(matches!(s.last().unwrap(), Insn::StoreResult { .. }));
+        let argmaxes = s.iter().filter(|i| matches!(i, Insn::ArgMax { .. })).count();
+        assert_eq!(argmaxes, 1);
+    }
+
+    #[test]
+    fn pass_halves_follow_fig6() {
+        let g = ecg_network();
+        let halves: Vec<u8> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::AnalogPass { half, .. } => Some(*half),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(halves, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn plan_layers_multi_chip() {
+        let plans = Graph::plan_layers(&[(1000, 500), (500, 10)], 2);
+        assert_eq!(plans.len(), 2);
+        assert!(plans[0].passes() > 1);
+        for p in &plans {
+            p.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Logical → physical weight mapping (rust mirror of `model.pack_*`).
+//!
+//! Every network layer is packed into a 256×256 physical weight matrix for
+//! one synapse-array half (paper Fig 6 right):
+//!
+//! * **conv**  — Toeplitz placement, the kernel replicated 32× across
+//!   column groups (upper half).
+//! * **fc1**   — two side-by-side 128-input column blocks sharing physical
+//!   rows via synapse address matching (lower half, cols 0..246).
+//! * **fc2**   — 123→10 on the lower half's right-most columns (246..256).
+//!
+//! The mappings must be bit-identical to the python versions: the exported
+//! `weights.json` holds *logical* weights, and both sides pack them.
+
+use crate::asic::consts as c;
+
+/// Row-major `[K_LOGICAL][N_COLS]` physical matrix.
+pub type PhysMatrix = Vec<f32>;
+
+fn zeros() -> PhysMatrix {
+    vec![0.0; c::K_LOGICAL * c::N_COLS]
+}
+
+#[inline]
+fn at(m: &mut PhysMatrix, row: usize, col: usize) -> &mut f32 {
+    &mut m[row * c::N_COLS + col]
+}
+
+/// conv weights `[C_OUT][C_IN][K]` → upper-half matrix.
+pub fn pack_conv(wc: &[f32]) -> PhysMatrix {
+    assert_eq!(
+        wc.len(),
+        c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL,
+        "conv weight shape"
+    );
+    let idx = |o: usize, ch: usize, t: usize| {
+        (o * c::ECG_CHANNELS + ch) * c::CONV_KERNEL + t
+    };
+    let mut m = zeros();
+    for p in 0..c::CONV_POSITIONS {
+        let start = p as isize * c::CONV_STRIDE as isize - c::CONV_PAD as isize;
+        for o in 0..c::CONV_CHANNELS {
+            let col = p * c::CONV_CHANNELS + o;
+            for ch in 0..c::ECG_CHANNELS {
+                for t in 0..c::CONV_KERNEL {
+                    let ti = start + t as isize;
+                    if ti >= 0 && (ti as usize) < c::POOLED_LEN {
+                        let row = ch * c::POOLED_LEN + ti as usize;
+                        *at(&mut m, row, col) = wc[idx(o, ch, t)];
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// fc1 weights `[K_LOGICAL][FC1_OUT]` → lower-half matrix (two blocks).
+pub fn pack_fc1(w1: &[f32]) -> PhysMatrix {
+    assert_eq!(w1.len(), c::K_LOGICAL * c::FC1_OUT, "fc1 weight shape");
+    let mut m = zeros();
+    for r in 0..c::K_SIGNED {
+        for j in 0..c::FC1_OUT {
+            *at(&mut m, r, j) = w1[r * c::FC1_OUT + j];
+        }
+    }
+    for r in c::K_SIGNED..c::K_LOGICAL {
+        for j in 0..c::FC1_OUT {
+            *at(&mut m, r, c::FC1_OUT + j) = w1[r * c::FC1_OUT + j];
+        }
+    }
+    m
+}
+
+/// fc2 weights `[FC1_OUT][FC2_OUT]` → lower-half matrix (cols 246..256).
+pub fn pack_fc2(w2: &[f32]) -> PhysMatrix {
+    assert_eq!(w2.len(), c::FC1_OUT * c::FC2_OUT, "fc2 weight shape");
+    let mut m = zeros();
+    for r in 0..c::FC1_OUT {
+        for j in 0..c::FC2_OUT {
+            *at(&mut m, r, 2 * c::FC1_OUT + j) = w2[r * c::FC2_OUT + j];
+        }
+    }
+    m
+}
+
+/// Convert a physical matrix to the i8 grid for the native array model.
+pub fn to_i8(m: &PhysMatrix) -> Vec<i8> {
+    m.iter()
+        .map(|&w| (w as i32).clamp(-c::W_MAX, c::W_MAX) as i8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_w(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..len)
+            .map(|_| (rng.below(127) as i32 - 63) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn conv_toeplitz_structure() {
+        let wc = rand_w(c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL, 1);
+        let m = pack_conv(&wc);
+        // Rows beyond MODEL_IN are empty.
+        for r in c::MODEL_IN..c::K_LOGICAL {
+            for col in 0..c::N_COLS {
+                assert_eq!(m[r * c::N_COLS + col], 0.0);
+            }
+        }
+        // Interior positions are shifted copies (paper: identical weight
+        // arranged 32 times).
+        let (p0, p1) = (4usize, 10usize);
+        let shift = (p1 - p0) * c::CONV_STRIDE;
+        for t in 0..(c::POOLED_LEN - shift) {
+            let a = m[t * c::N_COLS + p0 * c::CONV_CHANNELS];
+            let b = m[(t + shift) * c::N_COLS + p1 * c::CONV_CHANNELS];
+            assert_eq!(a, b, "t={t}");
+        }
+    }
+
+    #[test]
+    fn conv_specific_tap() {
+        let mut wc =
+            vec![0.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL];
+        // o=3, ch=1, t=2 -> value 7
+        wc[(3 * c::ECG_CHANNELS + 1) * c::CONV_KERNEL + 2] = 7.0;
+        let m = pack_conv(&wc);
+        let p = 5;
+        let col = p * c::CONV_CHANNELS + 3;
+        let ti = p * c::CONV_STRIDE - c::CONV_PAD + 2;
+        let row = c::POOLED_LEN + ti;
+        assert_eq!(m[row * c::N_COLS + col], 7.0);
+    }
+
+    #[test]
+    fn fc1_blocks() {
+        let w1 = rand_w(c::K_LOGICAL * c::FC1_OUT, 2);
+        let m = pack_fc1(&w1);
+        assert_eq!(m[0], w1[0]);
+        // Block B: row 128 lands in cols 123..246.
+        assert_eq!(
+            m[c::K_SIGNED * c::N_COLS + c::FC1_OUT],
+            w1[c::K_SIGNED * c::FC1_OUT]
+        );
+        // Cross blocks are zero.
+        assert_eq!(m[0 * c::N_COLS + c::FC1_OUT + 1], 0.0);
+        assert_eq!(m[c::K_SIGNED * c::N_COLS], 0.0);
+        // fc2 columns empty.
+        for r in 0..c::K_LOGICAL {
+            for j in (2 * c::FC1_OUT)..c::N_COLS {
+                assert_eq!(m[r * c::N_COLS + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fc2_block() {
+        let w2 = rand_w(c::FC1_OUT * c::FC2_OUT, 3);
+        let m = pack_fc2(&w2);
+        assert_eq!(m[2 * c::FC1_OUT], w2[0]);
+        assert_eq!(
+            m[5 * c::N_COLS + 2 * c::FC1_OUT + 3],
+            w2[5 * c::FC2_OUT + 3]
+        );
+        for r in c::FC1_OUT..c::K_LOGICAL {
+            for col in 0..c::N_COLS {
+                assert_eq!(m[r * c::N_COLS + col], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn to_i8_clamps() {
+        let m = vec![100.0, -100.0, 5.0];
+        assert_eq!(to_i8(&m), vec![63, -63, 5]);
+    }
+}

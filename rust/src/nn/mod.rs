@@ -1,0 +1,8 @@
+//! Neural-network layer: trained model loading, logical→physical mapping,
+//! data-flow graph + JIT partitioner (the hxtorch-equivalent, paper §II-D).
+
+pub mod executor;
+pub mod graph;
+pub mod mapping;
+pub mod partition;
+pub mod weights;

@@ -1,0 +1,236 @@
+//! JIT partitioner: layers → chip-sized chunks (paper §II-D "Hardware
+//! Resources" / "Data-Flow Graph Execution").
+//!
+//! "Individual layers are partitioned into chip-sized chunks and executed
+//! either in parallel, serially, or in the appropriate mixture needed to fit
+//! on the available hardware resources."
+//!
+//! A linear layer of shape `in_dim × out_dim` is tiled into chunks of at
+//! most `K_LOGICAL` logical inputs × `N_COLS` columns.  Chunks sharing the
+//! same input tile can run on different array halves *in parallel*; chunks
+//! along the input dimension run *serially* and their partial sums are added
+//! digitally by the SIMD CPUs (exactly how fc1's two blocks work in Fig 6).
+
+use crate::asic::consts as c;
+
+/// One chip-sized chunk of a layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chunk {
+    /// Input rows `[in_start, in_end)` of the logical layer.
+    pub in_start: usize,
+    pub in_end: usize,
+    /// Output columns `[out_start, out_end)`.
+    pub out_start: usize,
+    pub out_end: usize,
+    /// Sequential step this chunk runs in (chunks with the same step can
+    /// execute in parallel on different halves / chips).
+    pub step: usize,
+    /// Which partial-sum group the chunk contributes to (same group ⇒
+    /// digital accumulation by the SIMD CPU).
+    pub psum_group: usize,
+}
+
+impl Chunk {
+    pub fn in_len(&self) -> usize {
+        self.in_end - self.in_start
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_end - self.out_start
+    }
+}
+
+/// Execution plan for one linear layer.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub chunks: Vec<Chunk>,
+    /// Number of sequential steps (given `parallel_halves` usable halves).
+    pub steps: usize,
+}
+
+/// Partition an `in_dim × out_dim` layer onto hardware with
+/// `parallel_halves` array halves available per step.
+pub fn partition(in_dim: usize, out_dim: usize, parallel_halves: usize) -> Plan {
+    assert!(in_dim > 0 && out_dim > 0 && parallel_halves > 0);
+    let in_tiles = in_dim.div_ceil(c::K_LOGICAL);
+    let out_tiles = out_dim.div_ceil(c::N_COLS);
+    let mut chunks = Vec::with_capacity(in_tiles * out_tiles);
+    let _ = in_tiles;
+    // Chunk (i, o): input tile i, output tile o.  All input tiles of one
+    // output tile form one partial-sum group.
+    let mut slot = 0usize; // round-robin over halves per step
+    for o in 0..out_tiles {
+        for i in 0..in_tiles {
+            let step = slot / parallel_halves;
+            chunks.push(Chunk {
+                in_start: i * c::K_LOGICAL,
+                in_end: ((i + 1) * c::K_LOGICAL).min(in_dim),
+                out_start: o * c::N_COLS,
+                out_end: ((o + 1) * c::N_COLS).min(out_dim),
+                step,
+                psum_group: o, // one partial-sum group per output tile
+            });
+            slot += 1;
+        }
+    }
+    let steps = chunks.iter().map(|ch| ch.step).max().unwrap_or(0) + 1;
+    Plan { in_dim, out_dim, chunks, steps }
+}
+
+impl Plan {
+    /// Execute the plan against a dense f32 weight matrix + input vector
+    /// (reference executor used for equivalence tests and the mock engine;
+    /// the hardware engine maps each chunk onto an array pass instead).
+    pub fn execute_dense(&self, w: &[f32], x: &[f32]) -> Vec<f32> {
+        assert_eq!(w.len(), self.in_dim * self.out_dim);
+        assert_eq!(x.len(), self.in_dim);
+        let mut out = vec![0.0f32; self.out_dim];
+        for chv in &self.chunks {
+            for col in chv.out_start..chv.out_end {
+                let mut acc = 0.0f32;
+                for row in chv.in_start..chv.in_end {
+                    acc += x[row] * w[row * self.out_dim + col];
+                }
+                out[col] += acc; // digital partial-sum accumulation
+            }
+        }
+        out
+    }
+
+    /// Validate the structural invariants (used by the property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // 1. Full coverage without overlap: every (row, col) in exactly
+        //    one chunk.
+        let mut cover = vec![0u8; self.in_dim * self.out_dim];
+        for ch in &self.chunks {
+            if ch.in_len() > c::K_LOGICAL {
+                return Err(format!("chunk exceeds K_LOGICAL: {ch:?}"));
+            }
+            if ch.out_len() > c::N_COLS {
+                return Err(format!("chunk exceeds N_COLS: {ch:?}"));
+            }
+            for r in ch.in_start..ch.in_end {
+                for cl in ch.out_start..ch.out_end {
+                    let slot = &mut cover[r * self.out_dim + cl];
+                    if *slot != 0 {
+                        return Err(format!("overlap at ({r},{cl})"));
+                    }
+                    *slot = 1;
+                }
+            }
+        }
+        if cover.iter().any(|&v| v == 0) {
+            return Err("incomplete coverage".into());
+        }
+        // 2. Chunks of one psum group span distinct input tiles.
+        // 3. Steps are dense 0..steps.
+        let max_step = self.chunks.iter().map(|c| c.step).max().unwrap_or(0);
+        if max_step + 1 != self.steps {
+            return Err("steps not dense".into());
+        }
+        Ok(())
+    }
+
+    /// Array passes (integration cycles) the plan costs.
+    pub fn passes(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck;
+
+    #[test]
+    fn single_chip_layer_is_one_chunk() {
+        let p = partition(c::K_LOGICAL, c::N_COLS, 2);
+        assert_eq!(p.chunks.len(), 1);
+        assert_eq!(p.steps, 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fc1_like_split() {
+        // 256 inputs fit one half; 123 outputs fit: one chunk.
+        let p = partition(256, 123, 2);
+        assert_eq!(p.chunks.len(), 1);
+        // A 512-input layer needs 2 input tiles -> 2 chunks, 1 psum group.
+        let p = partition(512, 123, 2);
+        assert_eq!(p.chunks.len(), 2);
+        assert!(p.chunks.iter().all(|c| c.psum_group == 0));
+        assert_eq!(p.steps, 1, "two halves -> parallel");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn large_layer_serialises() {
+        // 1024 x 1024: 4 input tiles x 4 output tiles = 16 chunks; with 2
+        // halves that is 8 sequential steps.
+        let p = partition(1024, 1024, 2);
+        assert_eq!(p.chunks.len(), 16);
+        assert_eq!(p.steps, 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ragged_dims_covered() {
+        let p = partition(300, 400, 2);
+        p.check_invariants().unwrap();
+        assert_eq!(p.chunks.len(), 4);
+    }
+
+    #[test]
+    fn dense_execution_matches_direct_matmul() {
+        propcheck::check("partition_equiv", 20, 0xBEEF, |g| {
+            let in_dim = g.usize_in(1, 700);
+            let out_dim = g.usize_in(1, 600);
+            let halves = g.usize_in(1, 4);
+            let w = g.vec_f32(in_dim * out_dim, -2.0, 2.0);
+            let x = g.vec_f32(in_dim, 0.0, 31.0);
+            let plan = partition(in_dim, out_dim, halves);
+            plan.check_invariants()?;
+            let got = plan.execute_dense(&w, &x);
+            for col in [0, out_dim / 2, out_dim - 1] {
+                let want: f32 = (0..in_dim)
+                    .map(|r| x[r] * w[r * out_dim + col])
+                    .sum();
+                let diff = (got[col] - want).abs();
+                let tol = 1e-3 * want.abs().max(1.0);
+                prop_assert!(
+                    diff <= tol,
+                    "col {col}: got {} want {want}",
+                    got[col]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invariants_catch_bad_plans() {
+        let mut p = partition(256, 256, 1);
+        p.chunks[0].in_end = 100; // break coverage
+        assert!(p.check_invariants().is_err());
+    }
+
+    #[test]
+    fn more_halves_fewer_steps() {
+        let p1 = partition(1024, 512, 1);
+        let p4 = partition(1024, 512, 4);
+        assert!(p4.steps < p1.steps);
+        assert_eq!(p1.passes(), p4.passes(), "same work, different schedule");
+    }
+
+    #[test]
+    fn arbitrarily_large_models_supported() {
+        // Paper §V: "rate-based stateless operation ... supports arbitrarily
+        // large model sizes", limited only by memory.
+        let p = partition(10_000, 4_000, 2);
+        p.check_invariants().unwrap();
+        assert_eq!(p.passes(), 40 * 16);
+    }
+}

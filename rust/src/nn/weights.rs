@@ -1,0 +1,158 @@
+//! Trained-model loading: `weights.json` → packed physical matrices +
+//! calibration + per-layer scales.
+
+use std::path::Path;
+
+use crate::asic::consts as c;
+use crate::util::json::Json;
+
+use super::mapping;
+
+/// The trained ECG model in physical form, ready for the engine.
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    /// Physical matrices for the three passes (conv, fc1, fc2).
+    pub pass_weights: [mapping::PhysMatrix; 3],
+    /// Per-layer amplification (paper's right-shift configuration).
+    pub scales: [f32; 3],
+    /// Per-half calibration `[half][col]`.
+    pub gain: [Vec<f32>; 2],
+    pub offset: [Vec<f32>; 2],
+    pub noise_sigma: f64,
+    /// Training-time metrics recorded in the artifact.
+    pub train_metrics: std::collections::BTreeMap<String, f64>,
+}
+
+impl TrainedModel {
+    pub fn load(path: &Path) -> anyhow::Result<TrainedModel> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<TrainedModel> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("weights.json: {e}"))?;
+        let format = j.req("format")?.as_str().unwrap_or("");
+        anyhow::ensure!(
+            format == "bss2-weights-v1",
+            "unsupported weights format `{format}`"
+        );
+
+        let wc = j.req("wc")?.to_f32_vec()?;
+        let w1 = j.req("w1")?.to_f32_vec()?;
+        let w2 = j.req("w2")?.to_f32_vec()?;
+        for (name, w, limit) in
+            [("wc", &wc, c::W_MAX), ("w1", &w1, c::W_MAX), ("w2", &w2, c::W_MAX)]
+        {
+            for &v in w.iter() {
+                anyhow::ensure!(
+                    v == v.trunc() && v.abs() <= limit as f32,
+                    "{name} value {v} off the 6-bit grid"
+                );
+            }
+        }
+
+        let gain_flat = j.req("gain")?.to_f32_vec()?;
+        let offset_flat = j.req("offset")?.to_f32_vec()?;
+        anyhow::ensure!(gain_flat.len() == 2 * c::N_COLS, "gain shape");
+        anyhow::ensure!(offset_flat.len() == 2 * c::N_COLS, "offset shape");
+
+        let scales_v = j.req("scales")?.to_f32_vec()?;
+        anyhow::ensure!(scales_v.len() == 3, "expected 3 scales");
+
+        let mut train_metrics = std::collections::BTreeMap::new();
+        if let Some(m) = j.get("metrics").and_then(|m| m.as_obj()) {
+            for (k, v) in m {
+                if let Some(x) = v.as_f64() {
+                    train_metrics.insert(k.clone(), x);
+                }
+            }
+        }
+
+        Ok(TrainedModel {
+            pass_weights: [
+                mapping::pack_conv(&wc),
+                mapping::pack_fc1(&w1),
+                mapping::pack_fc2(&w2),
+            ],
+            scales: [scales_v[0], scales_v[1], scales_v[2]],
+            gain: [
+                gain_flat[..c::N_COLS].to_vec(),
+                gain_flat[c::N_COLS..].to_vec(),
+            ],
+            offset: [
+                offset_flat[..c::N_COLS].to_vec(),
+                offset_flat[c::N_COLS..].to_vec(),
+            ],
+            noise_sigma: j
+                .get("noise_sigma")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(c::NOISE_SIGMA),
+            train_metrics,
+        })
+    }
+
+    /// The array half a pass executes on (conv: top, fc1/fc2: bottom).
+    pub fn pass_half(pass: usize) -> usize {
+        if pass == 0 {
+            0
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_weights_json() -> String {
+        let wc = vec![1.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL];
+        let w1 = vec![-2.0; c::K_LOGICAL * c::FC1_OUT];
+        let w2 = vec![3.0; c::FC1_OUT * c::FC2_OUT];
+        let gain = vec![vec![1.0; c::N_COLS]; 2];
+        let offset = vec![vec![0.0; c::N_COLS]; 2];
+        format!(
+            r#"{{"format":"bss2-weights-v1","scales":[0.1,0.2,0.3],
+               "wc":{:?},"w1":{:?},"w2":{:?},"gain":{:?},"offset":{:?},
+               "noise_sigma":2.0,"metrics":{{"test_acc_mean":0.9}}}}"#,
+            wc, w1, w2, gain, offset
+        )
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = TrainedModel::parse(&tiny_weights_json()).unwrap();
+        assert_eq!(m.scales, [0.1, 0.2, 0.3]);
+        assert_eq!(m.gain[0].len(), c::N_COLS);
+        assert_eq!(m.pass_weights[0].len(), c::K_LOGICAL * c::N_COLS);
+        assert_eq!(m.train_metrics["test_acc_mean"], 0.9);
+        // fc1 block A carries -2.
+        assert_eq!(m.pass_weights[1][0], -2.0);
+        // fc2 block carries 3 at (0, 246).
+        assert_eq!(m.pass_weights[2][2 * c::FC1_OUT], 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = tiny_weights_json().replace("bss2-weights-v1", "v0");
+        assert!(TrainedModel::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_off_grid_weights() {
+        let bad = tiny_weights_json().replacen("-2.0", "-2.5", 1);
+        let err = TrainedModel::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("6-bit grid"), "{err}");
+        let bad2 = tiny_weights_json().replacen("3.0", "64.0", 1);
+        assert!(TrainedModel::parse(&bad2).is_err());
+    }
+
+    #[test]
+    fn pass_halves() {
+        assert_eq!(TrainedModel::pass_half(0), 0);
+        assert_eq!(TrainedModel::pass_half(1), 1);
+        assert_eq!(TrainedModel::pass_half(2), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Power/energy subsystem: the measurement pipeline behind paper Table 1.
+//!
+//! * [`energy`] — activity-based per-component energy model + CR2032
+//!   battery estimate (paper §V).
+//! * [`monitor`] — INA219 sensor models and the §IV block-averaging
+//!   measurement procedure (294 Hz / 4.4 kHz sampling).
+
+pub mod energy;
+pub mod monitor;

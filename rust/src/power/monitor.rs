@@ -1,0 +1,178 @@
+//! Power measurement pipeline: INA219 sensor models + block averaging
+//! (paper §II-B, §IV).
+//!
+//! "The individual supply currents of the BrainScaleS ASIC can be monitored
+//! by several shunt-based power monitoring ICs."  Measurements in §IV were
+//! taken "with a sampling rate of 294 Hz for sensors on the system
+//! controller and 4.4 kHz for sensors on the ASIC adapter PCB", then
+//! averaged over 500-trace blocks down to a single inference.
+//!
+//! The INA219 model reproduces the datasheet quantisation: bus-voltage LSB
+//! 4 mV, shunt-voltage LSB 10 µV across a configurable shunt resistor, and
+//! sampled integration of a (piecewise-constant) power trace.
+
+use super::energy::Component;
+
+/// One shunt-based power monitor on a rail.
+#[derive(Debug, Clone)]
+pub struct Ina219 {
+    pub component: Component,
+    pub rail_v: f64,
+    pub shunt_ohm: f64,
+    pub sample_hz: f64,
+    /// Accumulated samples [W].
+    pub samples: Vec<f64>,
+}
+
+impl Ina219 {
+    /// ASIC-adapter sensors: 4.4 kHz; controller sensors: 294 Hz (paper §IV).
+    pub fn for_component(component: Component) -> Ina219 {
+        let on_adapter = matches!(
+            component,
+            Component::AsicIo | Component::AsicAnalog | Component::AsicDigital
+        );
+        Ina219 {
+            component,
+            rail_v: if on_adapter { 1.2 } else { 5.0 },
+            shunt_ohm: if on_adapter { 0.1 } else { 0.02 },
+            sample_hz: if on_adapter { 4400.0 } else { 294.0 },
+            samples: Vec::new(),
+        }
+    }
+
+    /// Datasheet quantisation of one instantaneous power value.
+    pub fn quantize(&self, power_w: f64) -> f64 {
+        let current_a = power_w / self.rail_v;
+        let shunt_v = current_a * self.shunt_ohm;
+        let shunt_lsb = 10e-6; // 10 µV
+        let q_shunt = (shunt_v / shunt_lsb).round() * shunt_lsb;
+        let bus_lsb = 4e-3; // 4 mV
+        let q_bus = (self.rail_v / bus_lsb).round() * bus_lsb;
+        (q_shunt / self.shunt_ohm) * q_bus
+    }
+
+    /// Sample a constant power level held for `dur_s`.
+    pub fn sample_constant(&mut self, power_w: f64, dur_s: f64) {
+        let n = (dur_s * self.sample_hz).floor() as usize;
+        let q = self.quantize(power_w);
+        self.samples.extend(std::iter::repeat(q).take(n.max(1)));
+    }
+
+    pub fn mean_w(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+/// The block-measurement procedure of §IV: hold each component's mean power
+/// over the block duration, sample with the respective sensor, average down
+/// to per-inference figures.
+pub struct BlockMeasurement {
+    pub sensors: Vec<Ina219>,
+    pub block_len: usize,
+    pub block_duration_s: f64,
+}
+
+impl BlockMeasurement {
+    pub fn new(block_len: usize) -> BlockMeasurement {
+        BlockMeasurement {
+            sensors: super::energy::ALL_COMPONENTS
+                .iter()
+                .map(|&c| Ina219::for_component(c))
+                .collect(),
+            block_len,
+            block_duration_s: 0.0,
+        }
+    }
+
+    /// Record a processed block given its per-component energy totals [J]
+    /// and the block duration.
+    pub fn record_block(&mut self, component_j: &[(Component, f64)], dur_s: f64) {
+        self.block_duration_s += dur_s;
+        for sensor in &mut self.sensors {
+            let j = component_j
+                .iter()
+                .find(|(c, _)| *c == sensor.component)
+                .map(|(_, j)| *j)
+                .unwrap_or(0.0);
+            sensor.sample_constant(j / dur_s, dur_s);
+        }
+    }
+
+    /// Per-inference energy of one component as the sensors saw it [J].
+    pub fn measured_j(&self, component: Component) -> f64 {
+        let sensor = self
+            .sensors
+            .iter()
+            .find(|s| s.component == component)
+            .expect("sensor exists");
+        sensor.mean_w() * self.block_duration_s / self.block_len as f64
+    }
+
+    pub fn measured_total_j(&self) -> f64 {
+        super::energy::ALL_COMPONENTS
+            .iter()
+            .map(|&c| self.measured_j(c))
+            .sum()
+    }
+
+    pub fn measured_system_w(&self) -> f64 {
+        self.sensors.iter().map(|s| s.mean_w()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantisation_is_small_relative_error() {
+        let s = Ina219::for_component(Component::AsicAnalog);
+        for p in [0.05, 0.14, 0.69, 1.0] {
+            let q = s.quantize(p);
+            assert!((q - p).abs() / p < 0.01, "power {p} -> {q}");
+        }
+    }
+
+    #[test]
+    fn sampling_rates_follow_paper() {
+        let a = Ina219::for_component(Component::AsicIo);
+        assert_eq!(a.sample_hz, 4400.0);
+        let c = Ina219::for_component(Component::ArmCores);
+        assert_eq!(c.sample_hz, 294.0);
+    }
+
+    #[test]
+    fn sample_counts_scale_with_duration() {
+        let mut s = Ina219::for_component(Component::AsicAnalog);
+        s.sample_constant(0.5, 1.0);
+        assert_eq!(s.samples.len(), 4400);
+        let mut c = Ina219::for_component(Component::Dram);
+        c.sample_constant(0.5, 1.0);
+        assert_eq!(c.samples.len(), 294);
+    }
+
+    #[test]
+    fn block_measurement_recovers_energy() {
+        let mut bm = BlockMeasurement::new(500);
+        // 500 inferences of 276 µs at 0.69 W on the ASIC-analog rail.
+        let dur = 500.0 * 276e-6;
+        let je = 0.69 * dur;
+        bm.record_block(&[(Component::AsicAnalog, je)], dur);
+        let per_inf = bm.measured_j(Component::AsicAnalog);
+        let want = je / 500.0;
+        assert!(
+            (per_inf - want).abs() / want < 0.02,
+            "measured {per_inf} want {want}"
+        );
+    }
+
+    #[test]
+    fn short_blocks_still_produce_a_sample() {
+        let mut s = Ina219::for_component(Component::ArmCores);
+        s.sample_constant(1.0, 1e-4); // << sample period
+        assert_eq!(s.samples.len(), 1);
+    }
+}

@@ -1,0 +1,193 @@
+//! Artifact directory layout + manifest.
+//!
+//! `make artifacts` produces (python build path, never re-run at runtime):
+//! ```text
+//! artifacts/
+//!   vmm.hlo.txt        single-pass synapse-array executable
+//!   model.hlo.txt      fused full network (weights baked in)
+//!   weights.json       6-bit weights + calibration + per-layer scales
+//!   manifest.json      hardware constants + artifact hashes
+//!   vmm_testvec.json   kernel-level golden vectors
+//!   model_testvec.json network-level golden vectors
+//!   ecg_test.bin       500-trace held-out test set
+//!   ecg_cal.bin        small calibration set
+//!   fig8_training.csv  training metrics (paper Fig 8)
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::asic::consts as c;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+impl ArtifactDir {
+    pub fn new<P: Into<PathBuf>>(root: P) -> ArtifactDir {
+        ArtifactDir { root: root.into() }
+    }
+
+    /// Default location: `$BSS2_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> ArtifactDir {
+        let root = std::env::var("BSS2_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        ArtifactDir::new(root)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    pub fn vmm_hlo(&self) -> PathBuf {
+        self.path("vmm.hlo.txt")
+    }
+
+    pub fn model_hlo(&self) -> PathBuf {
+        self.path("model.hlo.txt")
+    }
+
+    pub fn weights(&self) -> PathBuf {
+        self.path("weights.json")
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.path("manifest.json")
+    }
+
+    pub fn ecg_test(&self) -> PathBuf {
+        self.path("ecg_test.bin")
+    }
+
+    pub fn exists(&self) -> bool {
+        self.manifest().exists() && self.vmm_hlo().exists()
+    }
+
+    pub fn require(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.exists(),
+            "artifacts not found under {} — run `make artifacts` first",
+            self.root.display()
+        );
+        Ok(())
+    }
+
+    pub fn load_manifest(&self) -> anyhow::Result<Manifest> {
+        Manifest::load(&self.manifest())
+    }
+}
+
+/// Parsed `manifest.json` (subset the runtime needs).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub scales: Vec<f64>,
+    pub k_logical: usize,
+    pub n_cols: usize,
+    pub macs_total: usize,
+    pub ops_total: usize,
+    pub noise_sigma: f64,
+    pub metrics: std::collections::BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let hw = j.req("hw")?;
+        let scales = j
+            .req("scales")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("scales not an array"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0))
+            .collect();
+        let mut metrics = std::collections::BTreeMap::new();
+        if let Some(m) = j.get("metrics").and_then(|m| m.as_obj()) {
+            for (k, v) in m {
+                if let Some(x) = v.as_f64() {
+                    metrics.insert(k.clone(), x);
+                }
+            }
+        }
+        let man = Manifest {
+            scales,
+            k_logical: hw.req("k_logical")?.as_usize().unwrap_or(0),
+            n_cols: hw.req("n_cols")?.as_usize().unwrap_or(0),
+            macs_total: hw
+                .req("macs")?
+                .req("total")?
+                .as_usize()
+                .unwrap_or(0),
+            ops_total: hw.req("ops_total")?.as_usize().unwrap_or(0),
+            noise_sigma: hw.req("noise_sigma")?.as_f64().unwrap_or(0.0),
+            metrics,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Cross-check the python-side constants against `asic::consts` — the
+    /// two mirrors must never drift.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.k_logical == c::K_LOGICAL,
+            "manifest k_logical {} != {}",
+            self.k_logical,
+            c::K_LOGICAL
+        );
+        anyhow::ensure!(
+            self.n_cols == c::N_COLS,
+            "manifest n_cols {} != {}",
+            self.n_cols,
+            c::N_COLS
+        );
+        anyhow::ensure!(
+            self.macs_total == c::MACS_TOTAL,
+            "manifest macs {} != {}",
+            self.macs_total,
+            c::MACS_TOTAL
+        );
+        anyhow::ensure!(self.scales.len() == 3, "expected 3 layer scales");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths() {
+        let d = ArtifactDir::new("/tmp/x");
+        assert_eq!(d.vmm_hlo(), PathBuf::from("/tmp/x/vmm.hlo.txt"));
+        assert_eq!(d.weights(), PathBuf::from("/tmp/x/weights.json"));
+    }
+
+    #[test]
+    fn missing_dir_reports_error() {
+        let d = ArtifactDir::new("/definitely/not/here");
+        assert!(!d.exists());
+        let err = d.require().unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_validation_catches_drift() {
+        let m = Manifest {
+            scales: vec![0.1, 0.2, 0.3],
+            k_logical: c::K_LOGICAL,
+            n_cols: c::N_COLS,
+            macs_total: c::MACS_TOTAL,
+            ops_total: c::OPS_TOTAL,
+            noise_sigma: 2.0,
+            metrics: Default::default(),
+        };
+        assert!(m.validate().is_ok());
+        let bad = Manifest { k_logical: 99, ..m };
+        assert!(bad.validate().is_err());
+    }
+}

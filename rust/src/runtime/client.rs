@@ -1,0 +1,242 @@
+//! PJRT client wrapper: compiled-executable cache + typed call helpers for
+//! the two artifact entry points.
+//!
+//! The VMM path is the inference hot loop, so weights/calibration literals
+//! are staged once as device buffers (`buffer_from_host_literal`) and reused
+//! across passes with `execute_b`; only the per-pass activation and noise
+//! vectors are re-uploaded (they change every integration cycle, exactly
+//! like events and physics on the real chip).
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::asic::consts as c;
+
+/// A PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+thread_local! {
+    /// One PJRT CPU client per thread: multiple live clients in one
+    /// process confuse the TFRT CPU backend's buffer bookkeeping
+    /// (observed as `literal.size_bytes() == b->size()` check failures),
+    /// and `PjRtClient` is `Rc`-based (not `Send`) anyway.
+    static CPU_CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = CPU_CLIENT.with(|slot| -> anyhow::Result<xla::PjRtClient> {
+            let mut slot = slot.borrow_mut();
+            if let Some(c) = slot.as_ref() {
+                return Ok(c.clone());
+            }
+            let c = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+            *slot = Some(c.clone());
+            Ok(c)
+        })?;
+        Ok(Runtime { client })
+    }
+
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))
+    }
+
+    /// Load the single-pass VMM executable.
+    pub fn load_vmm(&self, path: &Path) -> anyhow::Result<VmmExecutable> {
+        Ok(VmmExecutable { exe: self.compile_hlo_text(path)? })
+    }
+
+    /// Load the fused full-network executable.
+    pub fn load_model(&self, path: &Path) -> anyhow::Result<ModelExecutable> {
+        Ok(ModelExecutable::new(self.compile_hlo_text(path)?))
+    }
+}
+
+/// `(x[256], w[256,256], gain[256], offset[256], noise[256], scale[])
+///  -> (adc[256],)` — one physical integration cycle.
+pub struct VmmExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Weights + calibration staged on-device for one array pass.
+///
+/// PJRT's `BufferFromHostLiteral` copies *asynchronously*: the host literal
+/// must stay alive until the copy completes, so the source literals are
+/// retained alongside the device buffers (`_keep`).
+pub struct StagedPass {
+    w: xla::PjRtBuffer,
+    gain: xla::PjRtBuffer,
+    offset: xla::PjRtBuffer,
+    scale: xla::PjRtBuffer,
+    _keep: Vec<xla::Literal>,
+}
+
+impl VmmExecutable {
+    fn lit_vec(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+    }
+
+    /// Stage a pass's static operands as device buffers (done once at
+    /// engine construction — the "synapse matrix is filled with weight
+    /// data" step of the paper's dataflow).
+    pub fn stage_pass(
+        &self,
+        w: &[f32],
+        gain: &[f32],
+        offset: &[f32],
+        scale: f32,
+    ) -> anyhow::Result<StagedPass> {
+        anyhow::ensure!(w.len() == c::K_LOGICAL * c::N_COLS, "weight shape");
+        anyhow::ensure!(gain.len() == c::N_COLS && offset.len() == c::N_COLS);
+        let client = self.exe.client();
+        let lits = vec![
+            Self::lit_vec(w, &[c::K_LOGICAL as i64, c::N_COLS as i64])?,
+            Self::lit_vec(gain, &[c::N_COLS as i64])?,
+            Self::lit_vec(offset, &[c::N_COLS as i64])?,
+            xla::Literal::scalar(scale),
+        ];
+        let mut bufs = Vec::with_capacity(lits.len());
+        for lit in &lits {
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow::anyhow!("stage buffer: {e}"))?,
+            );
+        }
+        let scale_b = bufs.pop().unwrap();
+        let offset_b = bufs.pop().unwrap();
+        let gain_b = bufs.pop().unwrap();
+        let w_b = bufs.pop().unwrap();
+        Ok(StagedPass {
+            w: w_b,
+            gain: gain_b,
+            offset: offset_b,
+            scale: scale_b,
+            _keep: lits,
+        })
+    }
+
+    /// One integration cycle against staged weights.  `x` are 5-bit
+    /// activations (as f32), `noise` the temporal-noise realisation.
+    pub fn run_pass(
+        &self,
+        staged: &StagedPass,
+        x: &[f32],
+        noise: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == c::K_LOGICAL, "x length {}", x.len());
+        anyhow::ensure!(noise.len() == c::N_COLS, "noise length");
+        let client = self.exe.client();
+        // Keep the host literals alive until the result sync (async copy).
+        let x_lit = Self::lit_vec(x, &[c::K_LOGICAL as i64])?;
+        let n_lit = Self::lit_vec(noise, &[c::N_COLS as i64])?;
+        let xb = client
+            .buffer_from_host_literal(None, &x_lit)
+            .map_err(|e| anyhow::anyhow!("stage input: {e}"))?;
+        let nb = client
+            .buffer_from_host_literal(None, &n_lit)
+            .map_err(|e| anyhow::anyhow!("stage input: {e}"))?;
+        let args = [&xb, &staged.w, &staged.gain, &staged.offset, &nb, &staged.scale];
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("vmm execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+            .context("vmm output")
+    }
+}
+
+/// `(act[128], wm_c[256,256], wm_1[256,256], wm_2[256,256], gain[2,256],
+///  offset[2,256]) -> (scores[2],)` — the fused network; weights are
+/// runtime parameters (HLO text elides large constants).
+pub struct ModelExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    staged: std::cell::RefCell<Option<([xla::PjRtBuffer; 5], Vec<xla::Literal>)>>,
+}
+
+impl ModelExecutable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable) -> ModelExecutable {
+        ModelExecutable { exe, staged: std::cell::RefCell::new(None) }
+    }
+
+    /// Stage the model's weights/calibration once (device buffers).
+    pub fn stage(&self, model: &crate::nn::weights::TrainedModel) -> anyhow::Result<()> {
+        let client = self.exe.client();
+        let dims2 = [c::K_LOGICAL as i64, c::N_COLS as i64];
+        let cal_dims = [2i64, c::N_COLS as i64];
+        let gain_flat: Vec<f32> = model.gain.concat();
+        let offset_flat: Vec<f32> = model.offset.concat();
+        let mk_lit = |data: &[f32], dims: &[i64]| -> anyhow::Result<xla::Literal> {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+        };
+        let lits = vec![
+            mk_lit(&model.pass_weights[0], &dims2)?,
+            mk_lit(&model.pass_weights[1], &dims2)?,
+            mk_lit(&model.pass_weights[2], &dims2)?,
+            mk_lit(&gain_flat, &cal_dims)?,
+            mk_lit(&offset_flat, &cal_dims)?,
+        ];
+        let mut bufs = Vec::with_capacity(5);
+        for lit in &lits {
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow::anyhow!("stage: {e}"))?,
+            );
+        }
+        let arr: [xla::PjRtBuffer; 5] =
+            bufs.try_into().map_err(|_| anyhow::anyhow!("buffer count"))?;
+        *self.staged.borrow_mut() = Some((arr, lits));
+        Ok(())
+    }
+
+    pub fn run(&self, act: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(act.len() == c::MODEL_IN, "act length {}", act.len());
+        let guard = self.staged.borrow();
+        let (staged, _keep) = guard
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("call stage() before run()"))?;
+        let client = self.exe.client();
+        let act_lit = xla::Literal::vec1(act); // outlives the async copy
+        let act_buf = client
+            .buffer_from_host_literal(None, &act_lit)
+            .map_err(|e| anyhow::anyhow!("stage act: {e}"))?;
+        let args = [
+            &act_buf, &staged[0], &staged[1], &staged[2], &staged[3], &staged[4],
+        ];
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("model execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load + execute the AOT artifacts from the request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (see DESIGN.md §2 and
+//! /opt/xla-example/README.md).  Python never runs here.
+//!
+//! * [`artifacts`] — artifact directory layout + manifest parsing.
+//! * [`client`] — compiled-executable cache and typed call helpers.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactDir, Manifest};
+pub use client::{Runtime, VmmExecutable};

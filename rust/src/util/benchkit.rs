@@ -1,0 +1,165 @@
+//! Hand-rolled bench harness (criterion is not available offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that drives
+//! [`Bench`]: warmup, timed iterations, outlier-robust statistics, and a
+//! stable text report format that `bench_output.txt` captures.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall-clock seconds.
+    pub summary: Summary,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    pub fn target(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Run `f` repeatedly until both `min_iters` and `target_time` are
+    /// reached (or `max_iters`), and report per-iteration timings.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            let done_time = start.elapsed() >= self.target_time;
+            if (samples.len() >= self.min_iters && done_time)
+                || samples.len() >= self.max_iters
+            {
+                break;
+            }
+        }
+        BenchResult {
+            name: self.name.clone(),
+            iters: samples.len(),
+            summary: Summary::from(&samples),
+        }
+    }
+}
+
+impl BenchResult {
+    /// One-line report: `name  mean ± std  [min .. p99]  (n iters)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            self.name,
+            fmt_time(self.summary.mean),
+            fmt_time(self.summary.std),
+            fmt_time(self.summary.p50),
+            fmt_time(self.summary.p99),
+            self.iters
+        )
+    }
+
+    pub fn print(&self) -> &Self {
+        println!("{}", self.report());
+        self
+    }
+
+    /// Throughput helper: items per second at the mean time.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.summary.mean
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Section header used by all bench binaries to keep output greppable.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_minimum_iterations() {
+        let b = Bench::new("noop")
+            .warmup(1)
+            .iters(5, 50)
+            .target(Duration::from_millis(1));
+        let r = b.run(|| { std::hint::black_box(1 + 1); });
+        assert!(r.iters >= 5 && r.iters <= 50);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bench::new("noop")
+            .warmup(0)
+            .iters(1, 7)
+            .target(Duration::from_secs(60));
+        let r = b.run(|| std::hint::black_box(()));
+        assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn per_second() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            summary: Summary::from(&[0.5]),
+        };
+        assert!((r.per_second(10.0) - 20.0).abs() < 1e-9);
+    }
+}

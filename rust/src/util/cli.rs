@@ -1,0 +1,162 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Each subcommand of the `repro` binary builds one `Args` from
+//! `std::env::args()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that were consumed via typed getters (for strict mode).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from raw arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> (String, Args) {
+        let mut raw: Vec<String> = std::env::args().skip(1).collect();
+        let cmd = if raw.is_empty() { String::new() } else { raw.remove(0) };
+        (cmd, Args::parse(raw))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.known.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.known.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Error on unknown options (catches typos like `--trace` vs `--traces`).
+    pub fn check_unknown(&self) -> anyhow::Result<()> {
+        let known = self.known.borrow();
+        for key in self.options.keys() {
+            if !known.iter().any(|k| k == key) {
+                anyhow::bail!("unknown option --{key}");
+            }
+        }
+        for key in &self.flags {
+            if !known.iter().any(|k| k == key) {
+                anyhow::bail!("unknown flag --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("--n 5 --mode=fast run");
+        assert_eq!(a.get("n"), Some("5"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("--verbose --n 3");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b");
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--x 2.5 --n 7");
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 7);
+        assert_eq!(a.usize_or("missing", 9).unwrap(), 9);
+        assert!(a.usize_or("x", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.check_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("--offset -3");
+        // `-3` does not start with `--`, so it is consumed as the value.
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

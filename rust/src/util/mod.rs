@@ -1,0 +1,19 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline build environment only vendors the `xla` crate and a few
+//! leaf dependencies, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rand) are replaced by small, tested, purpose-built modules:
+//!
+//! * [`rng`] — SplitMix64 PRNG, bit-identical to the python mirror.
+//! * [`json`] — JSON parser/writer for the artifact formats.
+//! * [`cli`] — argument parsing for the `repro` binary.
+//! * [`stats`] — summaries/percentiles for the measurement pipeline.
+//! * [`benchkit`] — the bench harness driving `cargo bench` targets.
+//! * [`propcheck`] — mini property-testing kit for invariant tests.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,156 @@
+//! Mini property-testing kit (proptest is not available offline).
+//!
+//! A property is a closure over a [`Gen`] (seeded PRNG with sampling
+//! helpers).  [`check`] runs it for N random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically with
+//! [`replay`].  Used by the coordinator/partitioner invariant tests.
+
+use super::rng::SplitMix64;
+
+/// Case generator: a seeded PRNG plus convenience samplers.
+pub struct Gen {
+    pub rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: SplitMix64::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi as i64 - lo as i64 + 1) as u64) as i32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.i32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..len).map(|_| self.f64_in(lo, hi) as f32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `prop` for `cases` random cases derived from `base_seed`.
+/// Panics with the failing case seed on the first failure.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed on case {i} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn replay<F>(seed: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    prop(&mut Gen::new(seed))
+}
+
+/// Assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, 1, |g| {
+            count += 1;
+            let v = g.usize_in(3, 9);
+            prop_assert!((3..=9).contains(&v), "out of range: {v}");
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing` failed")]
+    fn failing_property_panics_with_seed() {
+        check("failing", 10, 2, |g| {
+            let v = g.i32_in(0, 100);
+            prop_assert!(v < 5, "got {v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        let f = |g: &mut Gen| {
+            let v = g.usize_in(0, 1_000_000);
+            Err(format!("{v}"))
+        };
+        let a = replay(1234, f).unwrap_err();
+        let b = replay(1234, f).unwrap_err();
+        assert_eq!(a, b);
+        first.replace(a);
+    }
+
+    #[test]
+    fn samplers_respect_bounds() {
+        let mut g = Gen::new(5);
+        for _ in 0..200 {
+            assert!((-3..=7).contains(&g.i32_in(-3, 7)));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = g.vec_i32(16, 0, 3);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|x| (0..=3).contains(x)));
+    }
+}

@@ -1,0 +1,116 @@
+//! Deterministic PRNG — SplitMix64, mirrored bit-for-bit against
+//! `python/compile/data.py::SplitMix64` (goldens cross-checked in both
+//! test-suites).  Used for synthetic ECG generation, temporal-noise
+//! injection on the inference hot path, and the mini property-testing kit.
+
+/// SplitMix64: tiny, fast, full-period 64-bit generator.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi)` built from the top 53 bits (same construction
+    /// as the python mirror, so the float streams coincide).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        let u = self.next_u64() >> 11;
+        lo + (hi - lo) * (u as f64 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn unit(&mut self) -> f64 {
+        self.uniform(0.0, 1.0)
+    }
+
+    /// Standard normal via Box-Muller, consuming two uniforms in the same
+    /// order as the python mirror.
+    #[inline]
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.uniform(1e-12, 1.0);
+        let u2 = self.unit();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Rejection-free modulo is fine for our n << 2^64 use-cases.
+        self.next_u64() % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_stream_seed0() {
+        // Must match python/tests/test_data.py::test_prng_splitmix64_reference.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(r.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(r.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn golden_stream_seed42() {
+        let mut r = SplitMix64::new(42);
+        assert_eq!(r.next_u64(), 0xBDD732262FEB6E95);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = SplitMix64::new(7);
+        let m: f64 = (0..4000).map(|_| r.unit()).sum::<f64>() / 4000.0;
+        assert!((m - 0.5).abs() < 0.03, "mean {m}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = SplitMix64::new(8);
+        let gs: Vec<f64> = (0..4000).map(|_| r.gauss()).collect();
+        let mean = gs.iter().sum::<f64>() / gs.len() as f64;
+        let var = gs.iter().map(|g| (g - mean).powi(2)).sum::<f64>()
+            / gs.len() as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.1, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..100 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_streams() {
+        let a = SplitMix64::new(1).next_u64();
+        let b = SplitMix64::new(2).next_u64();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration: the AOT artifacts round-trip bit-exactly through the PJRT
+//! runtime and agree with (a) the python-exported golden vectors and (b)
+//! the native rust array model.  These tests skip (with a message) when
+//! `make artifacts` has not run.
+
+use bss2::asic::array::{AnalogArray, ColumnCalib};
+use bss2::asic::consts as c;
+use bss2::runtime::{ArtifactDir, Runtime};
+use bss2::util::json::Json;
+
+fn artifacts() -> Option<ArtifactDir> {
+    let dir = ArtifactDir::default_location();
+    if dir.exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_matches_rust_constants() {
+    let Some(dir) = artifacts() else { return };
+    let m = dir.load_manifest().expect("manifest parses + validates");
+    assert_eq!(m.k_logical, c::K_LOGICAL);
+    assert_eq!(m.n_cols, c::N_COLS);
+    assert_eq!(m.macs_total, c::MACS_TOTAL);
+    assert_eq!(m.ops_total, c::OPS_TOTAL);
+    assert!((m.noise_sigma - c::NOISE_SIGMA).abs() < 1e-9);
+}
+
+#[test]
+fn vmm_artifact_matches_python_goldens_bit_exact() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vmm = rt.load_vmm(&dir.vmm_hlo()).unwrap();
+    let tv = std::fs::read_to_string(dir.path("vmm_testvec.json")).unwrap();
+    let tv = Json::parse(&tv).unwrap();
+    for (i, case) in tv.req("cases").unwrap().as_arr().unwrap().iter().enumerate() {
+        let x = case.req("x").unwrap().to_f32_vec().unwrap();
+        let w = case.req("w").unwrap().to_f32_vec().unwrap();
+        let gain = case.req("gain").unwrap().to_f32_vec().unwrap();
+        let offset = case.req("offset").unwrap().to_f32_vec().unwrap();
+        let noise = case.req("noise").unwrap().to_f32_vec().unwrap();
+        let scale = case.req("scale").unwrap().as_f64().unwrap() as f32;
+        let expected = case.req("expected").unwrap().to_f32_vec().unwrap();
+        let staged = vmm.stage_pass(&w, &gain, &offset, scale).unwrap();
+        let got = vmm.run_pass(&staged, &x, &noise).unwrap();
+        assert_eq!(got, expected, "case {i} differs from the pallas kernel");
+    }
+}
+
+#[test]
+fn vmm_artifact_matches_native_array_model() {
+    // The rust `AnalogArray` is the in-process twin of the L1 kernel: same
+    // inputs must give identical ADC counts (round-half-even et al.).
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let vmm = rt.load_vmm(&dir.vmm_hlo()).unwrap();
+
+    let mut rng = bss2::util::rng::SplitMix64::new(0xA5A5);
+    for case in 0..3 {
+        let w_i8: Vec<i8> = (0..c::K_LOGICAL * c::N_COLS)
+            .map(|_| (rng.below(127) as i32 - 63) as i8)
+            .collect();
+        let x_u8: Vec<u8> = (0..c::K_LOGICAL).map(|_| rng.below(32) as u8).collect();
+        let gain: Vec<f32> = (0..c::N_COLS)
+            .map(|_| (1.0 + 0.06 * rng.gauss()) as f32)
+            .collect();
+        let offset: Vec<f32> =
+            (0..c::N_COLS).map(|_| (2.0 * rng.gauss()) as f32).collect();
+        let noise: Vec<f32> =
+            (0..c::N_COLS).map(|_| (2.0 * rng.gauss()) as f32).collect();
+        let scale = (0.002 + 0.02 * rng.unit()) as f32;
+
+        let mut array = AnalogArray::new(
+            c::K_LOGICAL,
+            c::N_COLS,
+            ColumnCalib { gain: gain.clone(), offset: offset.clone() },
+        );
+        array.load_weights(&w_i8);
+        let native: Vec<f32> = array
+            .integrate(&x_u8, scale, &noise, false)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+
+        let wf: Vec<f32> = w_i8.iter().map(|&v| v as f32).collect();
+        let xf: Vec<f32> = x_u8.iter().map(|&v| v as f32).collect();
+        let staged = vmm.stage_pass(&wf, &gain, &offset, scale).unwrap();
+        let pjrt = vmm.run_pass(&staged, &xf, &noise).unwrap();
+
+        let diffs = native
+            .iter()
+            .zip(&pjrt)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(diffs, 0, "case {case}: {diffs} columns differ");
+    }
+}
+
+#[test]
+fn weights_artifact_loads_and_is_on_grid() {
+    let Some(dir) = artifacts() else { return };
+    let model = bss2::nn::weights::TrainedModel::load(&dir.weights()).unwrap();
+    for (p, m) in model.pass_weights.iter().enumerate() {
+        assert_eq!(m.len(), c::K_LOGICAL * c::N_COLS);
+        for &w in m.iter() {
+            assert!(w == w.trunc() && w.abs() <= c::W_MAX as f32,
+                    "pass {p}: weight {w} off the 6-bit grid");
+        }
+    }
+    assert!(model.scales.iter().all(|&s| s > 0.0));
+    // Recorded training metrics landed in the paper's regime.
+    let det = model.train_metrics.get("test_detection_mean").copied().unwrap_or(0.0);
+    let fp = model.train_metrics.get("test_fp_mean").copied().unwrap_or(1.0);
+    assert!(det > 0.85, "detection {det} below the paper's regime");
+    assert!(fp < 0.25, "false positives {fp} above the paper's regime");
+}
+
+#[test]
+fn ecg_test_set_loads_with_expected_geometry() {
+    let Some(dir) = artifacts() else { return };
+    let ds = bss2::ecg::dataset::Dataset::load(&dir.ecg_test()).unwrap();
+    assert_eq!(ds.len(), 500, "paper: test blocks of 500 records");
+    let frac = ds.afib_fraction();
+    assert!((frac - 0.5).abs() < 0.1, "afib fraction {frac}");
+}

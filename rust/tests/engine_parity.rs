@@ -1,0 +1,150 @@
+//! Integration: the two engine backends (PJRT artifact vs native array
+//! model) and the fused L2 graph all compute identical classifications, and
+//! the end-to-end system reproduces the paper's headline metrics.
+
+use bss2::coordinator::batch::run_block;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::dataset::Dataset;
+use bss2::ecg::gen::TraceStream;
+use bss2::runtime::{ArtifactDir, Runtime};
+
+fn artifacts() -> Option<ArtifactDir> {
+    let dir = ArtifactDir::default_location();
+    if dir.exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_bit_exactly() {
+    let Some(dir) = artifacts() else { return };
+    // Same noise seed => same noise stream => identical ADC counts.
+    let mut pjrt = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: true, noise_seed: 42, ..Default::default() },
+    )
+    .unwrap();
+    let mut native = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: false, noise_seed: 42, ..Default::default() },
+    )
+    .unwrap();
+    for trace in TraceStream::new(17, 1.0).take(12) {
+        let a = pjrt.classify(&trace).unwrap();
+        let b = native.classify(&trace).unwrap();
+        assert_eq!(a.scores, b.scores, "backends disagree");
+        assert_eq!(a.pred, b.pred);
+    }
+}
+
+#[test]
+fn fused_graph_matches_three_pass_engine() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let fused = rt.load_model(&dir.model_hlo()).unwrap();
+    let model = bss2::nn::weights::TrainedModel::load(&dir.weights()).unwrap();
+    fused.stage(&model).unwrap();
+    let mut engine = Engine::from_artifacts(
+        &dir,
+        EngineConfig { noise_off: true, ..Default::default() },
+    )
+    .unwrap();
+    for trace in TraceStream::new(23, 1.0).take(8) {
+        let acts: Vec<i32> = bss2::fpga::preprocess::preprocess(&trace.samples)
+            .iter()
+            .map(|&a| a as i32)
+            .collect();
+        let actf: Vec<f32> = acts.iter().map(|&a| a as f32).collect();
+        let f = fused.run(&actf).unwrap();
+        let e = engine.classify_acts(&acts).unwrap();
+        // Engine pools in integer arithmetic (SIMD CPU); fused pools in f32.
+        assert!(
+            (f[0] - e.scores[0]).abs() <= 1.0 && (f[1] - e.scores[1]).abs() <= 1.0,
+            "fused {f:?} vs engine {:?}",
+            e.scores
+        );
+    }
+}
+
+#[test]
+fn headline_metrics_reproduce_table1_shape() {
+    let Some(dir) = artifacts() else { return };
+    let ds = Dataset::load(&dir.ecg_test()).unwrap();
+    let traces: Vec<_> = ds
+        .traces
+        .iter()
+        .map(|t| (t.clone(), t.label))
+        .collect();
+    let mut engine =
+        Engine::from_artifacts(&dir, EngineConfig::default()).unwrap();
+    let rep = run_block(&mut engine, &traces).unwrap();
+
+    // Timing: 276 µs per inference, 138 ms per 500-block.
+    let us = rep.time_per_inference_s * 1e6;
+    assert!((us - 276.0).abs() < 25.0, "time/inference {us} µs");
+    // Power: 5.6 W system, 0.69 W ASIC.
+    assert!((rep.system_power_w - 5.6).abs() < 0.4, "{} W", rep.system_power_w);
+    assert!((rep.asic_power_w - 0.69).abs() < 0.15, "{} W", rep.asic_power_w);
+    // Energy: 1.56 mJ total.
+    assert!(
+        (rep.energy_total_j * 1e3 - 1.56).abs() < 0.15,
+        "{} mJ",
+        rep.energy_total_j * 1e3
+    );
+    // Accuracy: high-sensitivity regime (paper 93.7 % det at 14.0 % fp).
+    let det = rep.confusion.detection_rate();
+    let fp = rep.confusion.false_positive_rate();
+    assert!(det > 0.90, "detection {det}");
+    assert!(fp < 0.20, "false positives {fp}");
+}
+
+#[test]
+fn noise_ablation_changes_individual_scores() {
+    let Some(dir) = artifacts() else { return };
+    let mut noisy = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut clean = Engine::from_artifacts(
+        &dir,
+        EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut diffs = 0;
+    for trace in TraceStream::new(31, 1.0).take(10) {
+        let a = noisy.classify(&trace).unwrap();
+        let b = clean.classify(&trace).unwrap();
+        if a.scores != b.scores {
+            diffs += 1;
+        }
+    }
+    assert!(diffs >= 5, "noise should perturb most scores, got {diffs}/10");
+}
+
+#[test]
+fn service_end_to_end_over_tcp() {
+    let Some(dir) = artifacts() else { return };
+    let svc = bss2::coordinator::service::Service::start("127.0.0.1:0", move || {
+        Engine::from_artifacts(
+            &dir,
+            EngineConfig { use_pjrt: false, ..Default::default() },
+        )
+    })
+    .unwrap();
+    let mut client =
+        bss2::coordinator::service::Client::connect(&svc.addr).unwrap();
+    let trace = TraceStream::new(3, 1.0).next().unwrap();
+    let reply = client.classify(&trace).unwrap();
+    assert_eq!(
+        reply.get("ok"),
+        Some(&bss2::util::json::Json::Bool(true)),
+        "{reply}"
+    );
+    let t = reply.get("time_us").and_then(|v| v.as_f64()).unwrap();
+    assert!((t - 276.0).abs() < 40.0, "served time {t} µs");
+    svc.stop();
+}
