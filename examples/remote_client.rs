@@ -1,68 +1,115 @@
 //! Remote usage of the experiment execution service (paper §II-D: hosts
 //! exchange serialized experiment data with the mobile system over the
-//! USB-Ethernet link).  Spawns the service in-process, connects as a
-//! client, streams classification requests, and prints the service stats.
+//! USB-Ethernet link).  Spawns the service in-process — backed by a fleet
+//! of `--chips N` engine replicas — connects as several concurrent
+//! clients, streams classification requests, and prints the per-chip work
+//! spread plus the fleet stats.
 //!
 //! ```bash
-//! cargo run --release --example remote_client -- [n_requests] [--native]
+//! cargo run --release --example remote_client -- [n_requests] [--native] [--chips 4]
 //! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use bss2::coordinator::engine::{Engine, EngineConfig};
 use bss2::coordinator::service::{Client, Service};
 use bss2::ecg::gen::TraceStream;
+use bss2::fleet::FleetConfig;
 use bss2::runtime::ArtifactDir;
+use bss2::util::cli::Args;
+use bss2::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(std::env::args().skip(1));
     let n: usize = args
-        .iter()
-        .find(|a| !a.starts_with("--"))
+        .positional
+        .first()
         .and_then(|a| a.parse().ok())
         .unwrap_or(20);
-    let use_pjrt = !args.iter().any(|a| a == "--native");
+    let use_pjrt = !args.flag("native");
+    let chips = args.usize_or("chips", 2)?;
 
     let dir = ArtifactDir::default_location();
-    let svc = Service::start("127.0.0.1:0", move || {
-        Engine::from_artifacts(
-            &dir,
-            EngineConfig { use_pjrt, ..Default::default() },
-        )
-    })?;
-    println!("service listening on {}", svc.addr);
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips, ..Default::default() },
+        move |chip| {
+            Engine::from_artifacts(
+                &dir,
+                EngineConfig { use_pjrt, ..Default::default() }.for_chip(chip),
+            )
+        },
+    )?;
+    println!("service listening on {} ({chips} chips)", svc.addr);
 
     let mut client = Client::connect(&svc.addr)?;
     let pong = client.call("{\"cmd\":\"ping\"}")?;
     println!("ping -> {pong}");
 
+    // Concurrent clients: 2 per chip keeps every replica busy.
+    let n_clients = (2 * chips).max(2);
+    let per_client = n.div_ceil(n_clients);
+    let correct = Arc::new(AtomicUsize::new(0));
+    let addr = svc.addr;
     let t0 = std::time::Instant::now();
-    let mut correct = 0;
-    for (i, trace) in TraceStream::new(7, 1.0).take(n).enumerate() {
-        let reply = client.classify(&trace)?;
-        let ok = reply
-            .get("ok")
-            .and_then(|v| match v {
-                bss2::util::json::Json::Bool(b) => Some(*b),
-                _ => None,
-            })
-            .unwrap_or(false);
-        anyhow::ensure!(ok, "request {i} failed: {reply}");
-        let pred = reply.get("pred").and_then(|p| p.as_f64()).unwrap_or(-1.0);
-        if pred as u8 == trace.label {
-            correct += 1;
-        }
-        if i < 5 {
-            println!("  req {i}: {reply}");
+    let mut handles = Vec::new();
+    for cl_id in 0..n_clients {
+        let correct = correct.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<usize>> {
+            let mut cl = Client::connect(&addr)?;
+            let mut chips_hit = Vec::new();
+            let stream = TraceStream::new(7 + cl_id as u64, 1.0);
+            for (i, trace) in stream.take(per_client).enumerate() {
+                let reply = cl.classify(&trace)?;
+                let ok = reply.get("ok") == Some(&Json::Bool(true));
+                let shed = reply.get("shed") == Some(&Json::Bool(true));
+                if shed {
+                    // Backpressure: honour the hint, then move on.
+                    let us = reply
+                        .get("retry_after_us")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(300.0);
+                    std::thread::sleep(std::time::Duration::from_micros(us as u64));
+                    continue;
+                }
+                anyhow::ensure!(ok, "client {cl_id} req {i} failed: {reply}");
+                if let Some(chip) = reply.get("chip").and_then(|v| v.as_usize()) {
+                    chips_hit.push(chip);
+                }
+                let pred =
+                    reply.get("pred").and_then(|p| p.as_f64()).unwrap_or(-1.0);
+                if pred as u8 == trace.label {
+                    correct.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Ok(chips_hit)
+        }));
+    }
+    let mut per_chip = vec![0usize; chips];
+    let mut total = 0usize;
+    for h in handles {
+        for chip in h.join().expect("client thread panicked")? {
+            per_chip[chip] += 1;
+            total += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    // wall/total is aggregate throughput across n_clients concurrent
+    // clients, not a per-request round trip.
     println!(
-        "\nserved {n} requests in {:.2} s ({:.2} ms round trip each), \
-         {correct}/{n} labels matched",
+        "\nserved {total} requests in {:.2} s ({:.0} req/s aggregate over \
+         {n_clients} clients), {}/{total} labels matched",
         wall,
-        wall * 1e3 / n as f64
+        total as f64 / wall.max(1e-9),
+        correct.load(Ordering::Relaxed)
     );
+    println!("work spread: {per_chip:?} requests per chip");
+
     let stats = client.call("{\"cmd\":\"stats\"}")?;
     println!("service stats: {stats}");
+    let fleet = client.call("{\"cmd\":\"fleet_stats\"}")?;
+    println!("fleet stats:   {fleet}");
     svc.stop();
     Ok(())
 }

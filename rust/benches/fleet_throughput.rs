@@ -1,0 +1,104 @@
+//! Bench: fleet scaling — aggregate inferences/s vs chip count on the
+//! Native backend (acceptance: ≥3× the single-chip rate at 4 chips).
+//!
+//! Each chip is a full single-unit engine (276 µs simulated per
+//! inference, batch size 1); the fleet scales throughput *out* by adding
+//! replicas, not by batching — so the rate should grow near-linearly
+//! until the host runs out of cores.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::gen::{generate_trace, Trace};
+use bss2::fleet::{Fleet, FleetConfig};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::benchkit::section;
+
+const MODEL_SEED: u64 = 0xBEEF;
+
+fn start_fleet(chips: usize) -> Fleet {
+    Fleet::start(
+        FleetConfig { chips, queue_depth: 64, ..Default::default() },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                EngineConfig { use_pjrt: false, ..Default::default() }
+                    .for_chip(chip),
+            ))
+        },
+    )
+    .expect("native fleet must start")
+}
+
+/// Pump `jobs_per_client` traces from `2 * chips` concurrent clients and
+/// return aggregate completed inferences per second.
+fn fleet_rate(chips: usize, jobs_per_client: usize) -> anyhow::Result<f64> {
+    let fleet = Arc::new(start_fleet(chips));
+    let traces: Arc<Vec<Trace>> = Arc::new(
+        (0..32).map(|i| generate_trace(1000 + i, i % 2 == 0, 1.0)).collect(),
+    );
+
+    // Warm up every replica once (first-classify allocations).
+    for _ in 0..chips {
+        fleet.classify_blocking(&traces[0])?;
+    }
+
+    let n_clients = 2 * chips;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..n_clients {
+        let fleet = fleet.clone();
+        let traces = traces.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            for i in 0..jobs_per_client {
+                let trace = &traces[(client + i) % traces.len()];
+                // Queue depth 64 with 2 clients/chip never saturates.
+                fleet.classify_blocking(trace)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total = (n_clients * jobs_per_client) as f64;
+
+    let snaps = Arc::try_unwrap(fleet)
+        .unwrap_or_else(|_| panic!("fleet still shared"));
+    let per_chip: Vec<u64> =
+        snaps.chip_snapshots().iter().map(|s| s.served).collect();
+    println!("    per-chip served: {per_chip:?}");
+    snaps.shutdown();
+    Ok(total / elapsed)
+}
+
+fn main() -> anyhow::Result<()> {
+    section("paper single-unit reference");
+    println!(
+        "  one BSS-2 mobile unit: 276 µs/inference => {:.0} inf/s simulated ceiling",
+        1e6 / 276.0
+    );
+
+    section("fleet scaling: aggregate inferences/s (native backend, host)");
+    let jobs_per_client = 96;
+    let base = fleet_rate(1, jobs_per_client)?;
+    println!("  1 chip : {base:8.0} inf/s   (1.00x)");
+    let mut at4 = None;
+    for chips in [2usize, 4, 8] {
+        let rate = fleet_rate(chips, jobs_per_client)?;
+        let scale = rate / base;
+        println!("  {chips} chips: {rate:8.0} inf/s   ({scale:.2}x)");
+        if chips == 4 {
+            at4 = Some(scale);
+        }
+    }
+    if let Some(s) = at4 {
+        println!(
+            "\n  4-chip scaling: {s:.2}x vs single chip (acceptance: >= 3x \
+             on a >=4-core host)"
+        );
+    }
+    Ok(())
+}

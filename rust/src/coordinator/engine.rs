@@ -67,6 +67,7 @@ pub struct Inference {
     pub energy: EnergyBreakdown,
 }
 
+#[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub use_pjrt: bool,
     pub noise_seed: u64,
@@ -83,6 +84,21 @@ impl Default for EngineConfig {
             noise_seed: 0x5EED,
             noise_off: false,
             nominal_calib: false,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Derive the config of one fleet replica: same ablation switches,
+    /// but a decorrelated noise stream per chip (golden-ratio stream
+    /// split, as SplitMix64 seeds sequences).  Chip 0 keeps the base
+    /// seed so a single-chip fleet is bit-identical to the paper setup.
+    pub fn for_chip(self, chip: usize) -> EngineConfig {
+        EngineConfig {
+            noise_seed: self
+                .noise_seed
+                .wrapping_add((chip as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            ..self
         }
     }
 }

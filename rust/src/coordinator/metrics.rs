@@ -49,6 +49,15 @@ impl Confusion {
         }
         (self.tp + self.tn) as f64 / self.total() as f64
     }
+
+    /// Fold another confusion into this one (aggregating per-chip blocks
+    /// into fleet-wide metrics — counts are additive across replicas).
+    pub fn merge(&mut self, other: &Confusion) {
+        self.tp += other.tp;
+        self.fp += other.fp;
+        self.tn += other.tn;
+        self.fn_ += other.fn_;
+    }
 }
 
 /// Mean ± std of a metric across repeated measurement blocks (the paper's
@@ -110,6 +119,18 @@ mod tests {
         let (m, s) = mean_std(&[a, b], |c| c.detection_rate());
         assert_eq!(m, 0.5);
         assert_eq!(s, 0.5);
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = Confusion::default();
+        a.add(1, 1);
+        a.add(0, 0);
+        let mut b = Confusion::default();
+        b.add(1, 0);
+        a.merge(&b);
+        assert_eq!((a.tp, a.fp, a.tn, a.fn_), (1, 1, 1, 0));
+        assert_eq!(a.total(), 3);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!   executor over PJRT or the native array model).
 //! * [`batch`] — 500-trace block runner + Table 1 report (§IV).
 //! * [`metrics`] — detection-rate / false-positive accounting.
-//! * [`service`] — the experiment execution service (remote TCP protocol).
+//! * [`service`] — the experiment execution service (remote TCP protocol),
+//!   dispatching through a [`crate::fleet::Fleet`] of engine replicas.
 
 pub mod batch;
 pub mod engine;

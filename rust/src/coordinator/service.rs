@@ -5,135 +5,106 @@
 //! configurations and result data with the mobile system."
 //!
 //! Ours is a line-delimited JSON protocol over TCP (the mobile system's
-//! USB-Ethernet remote path).  Requests are queued to a single worker
-//! thread that owns the engine — inference remains strictly batch-size-1
-//! (the paper's edge constraint), while accepting concurrent clients.
+//! USB-Ethernet remote path).  Requests are dispatched through a
+//! [`fleet::Fleet`](crate::fleet::Fleet) of engine replicas — each chip
+//! still serves strictly batch-size-1 (the paper's edge constraint), while
+//! the fleet spreads concurrent clients across replicas and sheds load
+//! explicitly when every admission queue is full.
 //!
 //! Protocol (one JSON object per line):
 //! ```text
 //! -> {"cmd": "classify", "trace": [[...ch0 u12...], [...ch1...]]}
-//! <- {"ok": true, "pred": 1, "scores": [a, b], "time_us": t, "energy_mj": e}
+//! <- {"ok": true, "pred": 1, "scores": [a, b], "time_us": t,
+//!     "energy_mj": e, "chip": c}
+//! <- {"ok": false, "shed": true, "error": "...", "retry_after_us": n}
 //! -> {"cmd": "stats"}
-//! <- {"ok": true, "served": n, "mean_time_us": t}
+//! <- {"ok": true, "served": n, "mean_time_us": t, "chips": c, "shed": s}
+//! -> {"cmd": "fleet_stats"}
+//! <- {"ok": true, "chips": c, ..., "per_chip": [...]}
 //! -> {"cmd": "ping"} | {"cmd": "shutdown"}
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::asic::consts as c;
 use crate::ecg::gen::Trace;
+use crate::fleet::{ChipId, DispatchOutcome, Fleet, FleetConfig};
 use crate::util::json::Json;
 
 use super::engine::Engine;
 
-/// Shared service statistics.
-#[derive(Default)]
-pub struct ServiceStats {
-    pub served: AtomicU64,
-    /// Sum of simulated inference times [µs] for mean reporting.
-    pub sim_time_us_sum: AtomicU64,
-}
-
-enum Job {
-    Classify { trace: Trace, resp: mpsc::Sender<String> },
-    Stats { resp: mpsc::Sender<String> },
-}
-
-/// The running service handle.
+/// The running service handle.  Serving statistics live in
+/// [`Fleet::telemetry`]: one source of truth, accumulated in integer
+/// nanoseconds so mean-latency reporting keeps sub-µs precision across
+/// millions of requests.
 pub struct Service {
     pub addr: std::net::SocketAddr,
-    pub stats: Arc<ServiceStats>,
+    pub fleet: Arc<Fleet>,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
-    worker_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Service {
-    /// Start the service on `addr` (use port 0 for an ephemeral port).
-    /// The engine is constructed *inside* the worker thread (PJRT handles
-    /// are not `Send`): pass a builder closure.
+    /// Start a single-chip service (the paper's original topology).  The
+    /// engine is constructed *inside* the worker thread (PJRT handles are
+    /// not `Send`): pass a builder closure.
+    ///
+    /// Keeps the legacy contract: an effectively unbounded admission
+    /// queue (no shed replies) — opt into backpressure via
+    /// [`Service::start_fleet`].  One contract change: engine-init
+    /// failure now fails `start` fast instead of serving per-request
+    /// `engine init` errors.
     pub fn start<F>(addr: &str, make_engine: F) -> anyhow::Result<Service>
     where
         F: FnOnce() -> anyhow::Result<Engine> + Send + 'static,
     {
+        let once = Mutex::new(Some(make_engine));
+        let cfg = FleetConfig { queue_depth: usize::MAX, ..FleetConfig::single() };
+        Self::start_fleet(addr, cfg, move |_chip| {
+            let f = once
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("engine builder already used"))?;
+            f()
+        })
+    }
+
+    /// Start the service on `addr` (use port 0 for an ephemeral port)
+    /// backed by a fleet of `cfg.chips` engine replicas.  `make_engine`
+    /// runs once per chip, inside that chip's worker thread.  Fails fast
+    /// if *every* replica's engine fails to construct (partial failures
+    /// serve degraded, with the dead chips reported in `fleet_stats`).
+    pub fn start_fleet<F>(
+        addr: &str,
+        cfg: FleetConfig,
+        make_engine: F,
+    ) -> anyhow::Result<Service>
+    where
+        F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stats = Arc::new(ServiceStats::default());
+        let fleet = Arc::new(Fleet::start(cfg, make_engine)?);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<Job>();
 
-        // Worker: owns the engine, processes jobs strictly in order
-        // (batch size 1 — the paper's edge constraint).
-        let wstats = stats.clone();
-        let worker_handle = std::thread::spawn(move || {
-            let mut engine = match make_engine() {
-                Ok(e) => e,
-                Err(e) => {
-                    // Drain jobs with an error reply so clients don't hang.
-                    let msg = format!("{{\"ok\":false,\"error\":\"engine init: {e}\"}}");
-                    while let Ok(job) = rx.recv() {
-                        match job {
-                            Job::Classify { resp, .. } => { let _ = resp.send(msg.clone()); }
-                            Job::Stats { resp } => { let _ = resp.send(msg.clone()); }
-                        }
-                    }
-                    return;
-                }
-            };
-            while let Ok(job) = rx.recv() {
-                match job {
-                    Job::Classify { trace, resp } => {
-                        let reply = match engine.classify(&trace) {
-                            Ok(inf) => {
-                                wstats.served.fetch_add(1, Ordering::Relaxed);
-                                wstats.sim_time_us_sum.fetch_add(
-                                    (inf.sim_time_s * 1e6) as u64,
-                                    Ordering::Relaxed,
-                                );
-                                format!(
-                                    "{{\"ok\":true,\"pred\":{},\"scores\":[{},{}],\
-                                     \"time_us\":{:.1},\"energy_mj\":{:.4}}}",
-                                    inf.pred,
-                                    inf.scores[0],
-                                    inf.scores[1],
-                                    inf.sim_time_s * 1e6,
-                                    inf.energy.total_j() * 1e3
-                                )
-                            }
-                            Err(e) => {
-                                format!("{{\"ok\":false,\"error\":\"{e}\"}}")
-                            }
-                        };
-                        let _ = resp.send(reply);
-                    }
-                    Job::Stats { resp } => {
-                        let served = wstats.served.load(Ordering::Relaxed);
-                        let sum = wstats.sim_time_us_sum.load(Ordering::Relaxed);
-                        let mean = if served > 0 { sum / served } else { 0 };
-                        let _ = resp.send(format!(
-                            "{{\"ok\":true,\"served\":{served},\
-                             \"mean_time_us\":{mean}}}"
-                        ));
-                    }
-                }
-            }
-        });
-
-        // Acceptor: non-blocking accept loop; per-connection handler threads.
+        // Acceptor: non-blocking accept loop; per-connection handler
+        // threads dispatch into the fleet.
         let sdown = shutdown.clone();
+        let afleet = fleet.clone();
         let accept_handle = std::thread::spawn(move || {
             let mut handlers = Vec::new();
             while !sdown.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let tx = tx.clone();
+                        let fleet = afleet.clone();
                         let sdown2 = sdown.clone();
                         handlers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, tx, sdown2);
+                            let _ = handle_conn(stream, fleet, sdown2);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -145,16 +116,23 @@ impl Service {
             for h in handlers {
                 let _ = h.join();
             }
-            drop(tx); // closes the worker queue
         });
 
         Ok(Service {
             addr: local,
-            stats,
+            fleet,
             shutdown,
             accept_handle: Some(accept_handle),
-            worker_handle: Some(worker_handle),
         })
+    }
+
+    /// Block the calling thread until a client sends `shutdown`, then
+    /// stop.  Used by `repro serve`.
+    pub fn run_until_shutdown(self) {
+        while !self.shutdown.load(Ordering::Relaxed) {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        self.stop();
     }
 
     pub fn stop(mut self) {
@@ -162,21 +140,60 @@ impl Service {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.worker_handle.take() {
-            let _ = h.join();
-        }
+        // All handlers joined: this Arc is the last one; drop drains+joins
+        // the chip workers.
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A message as a JSON string literal (quoted + escaped by the
+/// `util::json` writer, so parser and writer can never diverge).
+fn json_str(s: &str) -> String {
+    Json::Str(s.to_string()).to_string()
+}
+
+fn classify_reply(fleet: &Fleet, trace: Trace) -> String {
+    match fleet.dispatch(trace) {
+        DispatchOutcome::Shed { reason, retry_after_us } => format!(
+            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
+             \"retry_after_us\":{retry_after_us}}}",
+            reason.as_str()
+        ),
+        DispatchOutcome::Enqueued { chip, resp } => match resp.recv() {
+            Err(mpsc::RecvError) => format!(
+                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
+            ),
+            Ok(reply) => match reply.result {
+                Ok(inf) => format!(
+                    "{{\"ok\":true,\"pred\":{},\"scores\":[{},{}],\
+                     \"time_us\":{:.1},\"energy_mj\":{:.4},\
+                     \"chip\":{}}}",
+                    inf.pred,
+                    inf.scores[0],
+                    inf.scores[1],
+                    inf.sim_time_s * 1e6,
+                    inf.energy.total_j() * 1e3,
+                    reply.chip
+                ),
+                Err(e) => {
+                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
+                }
+            },
+        },
     }
 }
 
 fn handle_conn(
     stream: TcpStream,
-    tx: mpsc::Sender<Job>,
+    fleet: Arc<Fleet>,
     shutdown: Arc<AtomicBool>,
 ) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
@@ -187,7 +204,6 @@ fn handle_conn(
         if shutdown.load(Ordering::Relaxed) {
             return Ok(());
         }
-        line.clear();
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {}
@@ -195,15 +211,21 @@ fn handle_conn(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // Timeout mid-line: keep the partial request buffered —
+                // read_line appends, so the next pass completes it.
                 continue;
             }
             Err(e) => return Err(e.into()),
         }
         if line.trim().is_empty() {
+            line.clear();
             continue;
         }
         let reply = match Json::parse(line.trim()) {
-            Err(e) => format!("{{\"ok\":false,\"error\":\"bad json: {e}\"}}"),
+            Err(e) => format!(
+                "{{\"ok\":false,\"error\":{}}}",
+                json_str(&format!("bad json: {e}"))
+            ),
             Ok(req) => match req.get("cmd").and_then(|c| c.as_str()) {
                 Some("ping") => "{\"ok\":true,\"pong\":true}".to_string(),
                 Some("shutdown") => {
@@ -211,19 +233,23 @@ fn handle_conn(
                     "{\"ok\":true,\"bye\":true}".to_string()
                 }
                 Some("stats") => {
-                    let (rtx, rrx) = mpsc::channel();
-                    tx.send(Job::Stats { resp: rtx })
-                        .map_err(|_| anyhow::anyhow!("worker gone"))?;
-                    rrx.recv()?
+                    let t = fleet.telemetry().snapshot();
+                    format!(
+                        "{{\"ok\":true,\"served\":{},\"mean_time_us\":{:.3},\
+                         \"chips\":{},\"shed\":{}}}",
+                        t.served,
+                        t.mean_sim_time_us,
+                        fleet.size(),
+                        fleet.shed_count()
+                    )
                 }
+                Some("fleet_stats") => fleet.stats_json(),
                 Some("classify") => match parse_trace(&req) {
-                    Err(e) => format!("{{\"ok\":false,\"error\":\"{e}\"}}"),
-                    Ok(trace) => {
-                        let (rtx, rrx) = mpsc::channel();
-                        tx.send(Job::Classify { trace, resp: rtx })
-                            .map_err(|_| anyhow::anyhow!("worker gone"))?;
-                        rrx.recv()?
-                    }
+                    Err(e) => format!(
+                        "{{\"ok\":false,\"error\":{}}}",
+                        json_str(&e.to_string())
+                    ),
+                    Ok(trace) => classify_reply(&fleet, trace),
                 },
                 _ => "{\"ok\":false,\"error\":\"unknown cmd\"}".to_string(),
             },
@@ -233,6 +259,7 @@ fn handle_conn(
         if reply.contains("\"bye\"") {
             return Ok(());
         }
+        line.clear();
     }
 }
 
@@ -307,10 +334,6 @@ impl Client {
     }
 }
 
-// Keep Mutex imported for future use in stats extensions.
-#[allow(unused)]
-type _Unused = Mutex<()>;
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,9 +374,13 @@ mod tests {
         let pred = reply.get("pred").and_then(|p| p.as_f64()).unwrap();
         assert!(pred == 0.0 || pred == 1.0);
         assert!(reply.get("time_us").and_then(|t| t.as_f64()).unwrap() > 100.0);
+        // Single-chip fleet: everything lands on chip 0.
+        assert_eq!(reply.get("chip").and_then(|v| v.as_usize()), Some(0));
 
         let stats = cl.call("{\"cmd\":\"stats\"}").unwrap();
         assert_eq!(stats.get("served").and_then(|s| s.as_f64()), Some(1.0));
+        assert_eq!(stats.get("chips").and_then(|s| s.as_usize()), Some(1));
+        assert!(stats.get("mean_time_us").and_then(|s| s.as_f64()).unwrap() > 100.0);
         svc.stop();
     }
 
@@ -371,22 +398,51 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_clients_serialised_through_worker() {
-        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+    fn concurrent_clients_spread_over_fleet() {
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig { chips: 2, queue_depth: 8, ..Default::default() },
+            |chip| {
+                Ok(Engine::native(
+                    crate::nn::weights::TrainedModel::synthetic(3),
+                    EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() }
+                        .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap();
         let addr = svc.addr;
         let mut handles = Vec::new();
-        for i in 0..3 {
+        for i in 0..4u64 {
             handles.push(std::thread::spawn(move || {
                 let mut cl = Client::connect(&addr).unwrap();
                 let trace = crate::ecg::gen::generate_trace(10 + i, i % 2 == 1, 1.0);
                 let reply = cl.classify(&trace).unwrap();
                 assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+                reply.get("chip").and_then(|v| v.as_usize()).unwrap()
             }));
         }
-        for h in handles {
-            h.join().unwrap();
-        }
-        assert_eq!(svc.stats.served.load(Ordering::Relaxed), 3);
+        let chips: Vec<usize> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(svc.fleet.telemetry().served(), 4);
+        // Round-robin tie-break: both chips must have served.
+        assert!(chips.contains(&0) && chips.contains(&1), "{chips:?}");
+
+        let mut cl = Client::connect(&addr).unwrap();
+        let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+        assert_eq!(fs.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(fs.get("chips").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            fs.get("per_chip").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
         svc.stop();
+    }
+
+    #[test]
+    fn json_str_escapes_via_writer() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
     }
 }

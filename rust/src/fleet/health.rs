@@ -1,0 +1,239 @@
+//! Per-chip health tracking: served/error/latency counters and the
+//! unhealthy → drain → re-admit state machine.
+//!
+//! A replica that keeps failing (engine errors, worker channel gone) is
+//! marked [`ChipState::Unhealthy`]: the scheduler stops admitting new work
+//! while jobs already queued on the replica drain normally.  Unhealthy
+//! chips are periodically *probed* (one real request routed to them); a
+//! success re-admits the chip.  A chip whose engine never constructed, or
+//! whose worker thread died, is [`ChipState::Dead`] and never re-admitted.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Replica lifecycle state (stored as an `AtomicU8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipState {
+    /// Admitting work normally.
+    Healthy,
+    /// Too many consecutive errors: draining, probe-only admission.
+    Unhealthy,
+    /// Engine init failed or worker gone: never dispatched again.
+    Dead,
+}
+
+impl ChipState {
+    fn from_u8(v: u8) -> ChipState {
+        match v {
+            0 => ChipState::Healthy,
+            1 => ChipState::Unhealthy,
+            _ => ChipState::Dead,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ChipState::Healthy => "healthy",
+            ChipState::Unhealthy => "unhealthy",
+            ChipState::Dead => "dead",
+        }
+    }
+}
+
+/// Shared (lock-free on the hot path) health record of one chip replica.
+///
+/// Ownership split vs `fleet::telemetry`: health carries the per-chip
+/// *operational* view (state machine, inflight, served/error counters the
+/// scheduler and `fleet_stats` read); telemetry carries the fleet-wide
+/// histogram and windowed rates.  Both are written from exactly one site
+/// — the success/error arms of `pool::chip_worker` — so the two views
+/// cannot drift unless that single write site changes.
+pub struct ChipHealth {
+    state: AtomicU8,
+    /// Jobs admitted but not yet completed (queued + executing).
+    inflight: AtomicUsize,
+    served: AtomicU64,
+    errors: AtomicU64,
+    consecutive_errors: AtomicU32,
+    error_threshold: u32,
+    /// Sum of simulated inference time [ns] over served jobs (paper
+    /// accounting; ns so sub-µs precision survives millions of requests).
+    sim_time_ns_sum: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+/// Point-in-time copy of one chip's counters (for stats/tests).
+#[derive(Debug, Clone)]
+pub struct ChipHealthSnapshot {
+    pub state: ChipState,
+    pub inflight: usize,
+    pub served: u64,
+    pub errors: u64,
+    pub mean_sim_time_us: f64,
+    pub last_error: Option<String>,
+}
+
+impl ChipHealth {
+    pub fn new(error_threshold: u32) -> ChipHealth {
+        ChipHealth {
+            state: AtomicU8::new(0),
+            inflight: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            consecutive_errors: AtomicU32::new(0),
+            error_threshold: error_threshold.max(1),
+            sim_time_ns_sum: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        }
+    }
+
+    pub fn state(&self) -> ChipState {
+        ChipState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// May the scheduler route regular traffic here?
+    pub fn is_dispatchable(&self) -> bool {
+        self.state() == ChipState::Healthy
+    }
+
+    /// May the scheduler route a re-admission probe here?
+    pub fn is_probeable(&self) -> bool {
+        self.state() == ChipState::Unhealthy
+    }
+
+    /// Called by the scheduler when a job is admitted (before enqueue).
+    pub fn begin_job(&self) {
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Worker: job finished successfully.  A success on an unhealthy chip
+    /// re-admits it (the probe path).
+    pub fn record_success(&self, sim_time_ns: u64) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.sim_time_ns_sum.fetch_add(sim_time_ns, Ordering::Relaxed);
+        self.consecutive_errors.store(0, Ordering::Release);
+        // Dead stays dead; Unhealthy recovers.
+        let _ = self.state.compare_exchange(
+            1,
+            0,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// Worker: job failed.  Crossing the consecutive-error threshold marks
+    /// the chip unhealthy (drain + probe-only).
+    pub fn record_error(&self, msg: &str) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let consec = self.consecutive_errors.fetch_add(1, Ordering::AcqRel) + 1;
+        *self.last_error.lock().unwrap() = Some(msg.to_string());
+        if consec >= self.error_threshold {
+            let _ = self.state.compare_exchange(
+                0,
+                1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+        }
+    }
+
+    /// Permanently remove the chip from scheduling (engine init failure or
+    /// worker death).  Does not touch inflight: the pool unwinds those.
+    pub fn mark_dead(&self, msg: &str) {
+        self.state.store(2, Ordering::Release);
+        *self.last_error.lock().unwrap() = Some(msg.to_string());
+    }
+
+    pub fn snapshot(&self) -> ChipHealthSnapshot {
+        let served = self.served();
+        let sim_ns = self.sim_time_ns_sum.load(Ordering::Relaxed);
+        ChipHealthSnapshot {
+            state: self.state(),
+            inflight: self.inflight(),
+            served,
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_sim_time_us: if served > 0 {
+                sim_ns as f64 / served as f64 / 1e3
+            } else {
+                0.0
+            },
+            last_error: self.last_error.lock().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_until_threshold() {
+        let h = ChipHealth::new(3);
+        assert!(h.is_dispatchable());
+        for _ in 0..2 {
+            h.begin_job();
+            h.record_error("boom");
+        }
+        assert!(h.is_dispatchable(), "below threshold stays healthy");
+        h.begin_job();
+        h.record_error("boom");
+        assert_eq!(h.state(), ChipState::Unhealthy);
+        assert!(h.is_probeable());
+        assert!(!h.is_dispatchable());
+    }
+
+    #[test]
+    fn success_resets_consecutive_and_readmits() {
+        let h = ChipHealth::new(2);
+        h.begin_job();
+        h.record_error("a");
+        h.begin_job();
+        h.record_success(276_000);
+        h.begin_job();
+        h.record_error("b");
+        assert!(h.is_dispatchable(), "streak was broken by the success");
+        h.begin_job();
+        h.record_error("c");
+        assert_eq!(h.state(), ChipState::Unhealthy);
+        // Probe succeeds -> re-admitted.
+        h.begin_job();
+        h.record_success(276_000);
+        assert_eq!(h.state(), ChipState::Healthy);
+    }
+
+    #[test]
+    fn dead_is_terminal() {
+        let h = ChipHealth::new(1);
+        h.mark_dead("engine init failed");
+        assert_eq!(h.state(), ChipState::Dead);
+        assert!(!h.is_dispatchable() && !h.is_probeable());
+        h.begin_job();
+        h.record_success(1);
+        assert_eq!(h.state(), ChipState::Dead, "success cannot resurrect");
+    }
+
+    #[test]
+    fn inflight_and_means_tracked() {
+        let h = ChipHealth::new(3);
+        h.begin_job();
+        h.begin_job();
+        assert_eq!(h.inflight(), 2);
+        h.record_success(276_000);
+        h.record_success(280_000);
+        let s = h.snapshot();
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.served, 2);
+        assert!((s.mean_sim_time_us - 278.0).abs() < 1e-9);
+        assert_eq!(s.state, ChipState::Healthy);
+    }
+}

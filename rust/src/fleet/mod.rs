@@ -1,0 +1,128 @@
+//! Multi-chip fleet scheduler: shard inference across a pool of BSS-2
+//! engine replicas.
+//!
+//! The paper serves one ECG trace at a time on a single mobile unit
+//! (276 µs/inference, batch-size-1, §II-D/§IV).  This layer scales that
+//! *out* — the way hxtorch partitions larger networks across multiple
+//! BrainScaleS-2 substrates — by running N independent engine replicas,
+//! each a faithful single-unit simulation with its own worker thread,
+//! noise seed, and calibration state.  Per-inference semantics (timing,
+//! energy, accuracy accounting) stay bit-identical to the paper; only
+//! aggregate throughput changes.
+//!
+//! * [`pool`] — replica lifecycle: worker threads, engine construction
+//!   via builder closures (PJRT handles are not `Send`), drain/join.
+//! * [`scheduler`] — least-loaded admission with a bounded per-chip
+//!   queue and explicit shed (backpressure) responses.
+//! * [`health`] — per-chip served/error/latency counters and the
+//!   unhealthy → drain → re-admit state machine.
+//! * [`telemetry`] — fleet-wide latency histogram (p50/p95/p99) and
+//!   per-chip throughput, cross-checked against `util::stats`.
+//!
+//! `coordinator::service` dispatches through a [`Fleet`]; `repro serve
+//! --chips N` sizes it from the CLI.
+
+pub mod health;
+pub mod pool;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use health::{ChipHealth, ChipHealthSnapshot, ChipState};
+pub use pool::{ChipId, ChipReply, DispatchOutcome, Fleet, FleetConfig};
+pub use scheduler::ShedReason;
+pub use telemetry::{FleetTelemetry, LatencyHistogram, TelemetrySnapshot};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{Engine, EngineConfig};
+    use crate::nn::weights::TrainedModel;
+
+    fn native_fleet(chips: usize, queue_depth: usize) -> Fleet {
+        Fleet::start(
+            FleetConfig { chips, queue_depth, ..Default::default() },
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fleet_starts_and_serves_one_trace() {
+        let fleet = native_fleet(2, 8);
+        assert_eq!(fleet.size(), 2);
+        assert_eq!(fleet.healthy_count(), 2);
+        let trace = crate::ecg::gen::generate_trace(3, true, 1.0);
+        let (chip, inf) = fleet.classify_blocking(&trace).unwrap();
+        assert!(chip < 2);
+        assert!(inf.pred <= 1);
+        assert!(inf.sim_time_s > 100e-6);
+        assert_eq!(fleet.telemetry().served(), 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn all_chip_init_failures_fail_start() {
+        let err = Fleet::start(
+            FleetConfig { chips: 2, ..Default::default() },
+            |_chip| anyhow::bail!("no substrate"),
+        )
+        .err()
+        .expect("must fail");
+        assert!(err.to_string().contains("no substrate"), "{err}");
+    }
+
+    #[test]
+    fn partial_init_failure_leaves_survivors_serving() {
+        let fleet = Fleet::start(
+            FleetConfig { chips: 3, queue_depth: 8, ..Default::default() },
+            |chip| {
+                anyhow::ensure!(chip != 1, "chip 1 substrate missing");
+                Ok(Engine::native(
+                    TrainedModel::synthetic(1),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        ..Default::default()
+                    },
+                ))
+            },
+        )
+        .unwrap();
+        assert_eq!(fleet.healthy_count(), 2);
+        let snaps = fleet.chip_snapshots();
+        assert_eq!(snaps[1].state, ChipState::Dead);
+        let trace = crate::ecg::gen::generate_trace(5, false, 1.0);
+        for _ in 0..4 {
+            let (chip, _) = fleet.classify_blocking(&trace).unwrap();
+            assert_ne!(chip, 1, "dead chip must not serve");
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn stats_json_is_valid_and_complete() {
+        let fleet = native_fleet(2, 8);
+        let trace = crate::ecg::gen::generate_trace(7, true, 1.0);
+        for _ in 0..3 {
+            fleet.classify_blocking(&trace).unwrap();
+        }
+        let j = crate::util::json::Json::parse(&fleet.stats_json()).unwrap();
+        assert_eq!(j.get("ok"), Some(&crate::util::json::Json::Bool(true)));
+        assert_eq!(j.get("chips").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(3));
+        let per_chip = j.get("per_chip").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(per_chip.len(), 2);
+        assert!(j.get("p99_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        fleet.shutdown();
+    }
+}

@@ -1,0 +1,397 @@
+//! Replica pool: N independent `Engine` replicas, each owned by its own
+//! worker thread — a rack of simulated BSS-2 mobile units behind one
+//! dispatch surface.
+//!
+//! Engines are constructed *inside* each worker thread via a builder
+//! closure (PJRT handles are not `Send`, same pattern as
+//! `coordinator::service` used for its single worker).  Each replica gets
+//! its own noise seed and calibration state through the builder, so every
+//! chip's per-inference semantics — timing, energy, noise stream — stay
+//! bit-identical to the single-unit paper setup while aggregate
+//! throughput scales with the chip count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::engine::{Engine, Inference};
+use crate::ecg::gen::Trace;
+
+use super::health::{ChipHealth, ChipHealthSnapshot};
+use super::scheduler::{Scheduler, ShedReason};
+use super::telemetry::FleetTelemetry;
+
+/// Index of a chip replica within the fleet.
+pub type ChipId = usize;
+
+/// Fleet sizing and admission-control knobs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of engine replicas (simulated mobile units).
+    pub chips: usize,
+    /// Per-chip admission bound (queued + executing) before shedding.
+    pub queue_depth: usize,
+    /// Consecutive engine errors before a chip is marked unhealthy.
+    pub error_threshold: u32,
+    /// Admissions between re-admission probes of unhealthy chips.
+    pub probe_period: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            chips: 1,
+            queue_depth: 32,
+            error_threshold: 3,
+            probe_period: 64,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Single-chip fleet (the paper's original serving topology).
+    pub fn single() -> FleetConfig {
+        FleetConfig::default()
+    }
+}
+
+/// One classification job for a chip worker.
+struct ChipJob {
+    trace: Trace,
+    admitted: Instant,
+    resp: mpsc::Sender<ChipReply>,
+}
+
+/// Worker's answer to one job.
+#[derive(Debug)]
+pub struct ChipReply {
+    pub chip: ChipId,
+    /// Host latency from admission to completion [µs].
+    pub host_latency_us: f64,
+    pub result: Result<Inference, String>,
+}
+
+/// Outcome of an admission attempt.
+pub enum DispatchOutcome {
+    /// Admitted: the reply arrives on `resp`.
+    Enqueued { chip: ChipId, resp: mpsc::Receiver<ChipReply> },
+    /// Backpressure: not admitted; retry after roughly `retry_after_us`.
+    Shed { reason: ShedReason, retry_after_us: u64 },
+}
+
+struct ChipHandle {
+    tx: Mutex<Option<mpsc::Sender<ChipJob>>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The running fleet: replicas + scheduler + telemetry.  `Fleet` is
+/// `Sync`; share it across connection handlers with an `Arc`.
+pub struct Fleet {
+    handles: Vec<ChipHandle>,
+    health: Vec<Arc<ChipHealth>>,
+    telemetry: Arc<FleetTelemetry>,
+    scheduler: Scheduler,
+    /// Admissions refused at the transport layer (dead worker channels);
+    /// scheduler-level sheds are counted separately.
+    transport_rejects: AtomicU64,
+}
+
+impl Fleet {
+    /// Spin up `cfg.chips` replicas.  `make_engine(chip)` runs once per
+    /// chip, inside that chip's worker thread.  Fails only if *every*
+    /// replica fails to construct; partial failures are logged and the
+    /// affected chips marked dead.
+    pub fn start<F>(cfg: FleetConfig, make_engine: F) -> anyhow::Result<Fleet>
+    where
+        F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(cfg.chips >= 1, "fleet needs at least one chip");
+        let make = Arc::new(make_engine);
+        let telemetry = Arc::new(FleetTelemetry::new(cfg.chips));
+        let mut handles = Vec::with_capacity(cfg.chips);
+        let mut health = Vec::with_capacity(cfg.chips);
+        let (ack_tx, ack_rx) = mpsc::channel::<(ChipId, Result<(), String>)>();
+
+        for chip in 0..cfg.chips {
+            let (tx, rx) = mpsc::channel::<ChipJob>();
+            let h = Arc::new(ChipHealth::new(cfg.error_threshold));
+            let worker_health = h.clone();
+            let worker_tel = telemetry.clone();
+            let worker_make = make.clone();
+            let worker_ack = ack_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("bss2-chip-{chip}"))
+                .spawn(move || {
+                    chip_worker(
+                        chip,
+                        rx,
+                        worker_make,
+                        worker_health,
+                        worker_tel,
+                        worker_ack,
+                    )
+                })?;
+            handles.push(ChipHandle { tx: Mutex::new(Some(tx)), join: Some(join) });
+            health.push(h);
+        }
+        drop(ack_tx);
+
+        // Wait for every replica to report engine construction.  Workers
+        // drop their ack sender right after reporting, so this loop ends
+        // once all replicas have checked in (or died).
+        let mut ok = 0usize;
+        let mut first_err: Option<String> = None;
+        while let Ok((chip_id, res)) = ack_rx.recv() {
+            match res {
+                Ok(()) => ok += 1,
+                Err(e) => {
+                    log::warn!("fleet: chip {chip_id} failed to start: {e}");
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        let mut fleet = Fleet {
+            handles,
+            health,
+            telemetry,
+            scheduler: Scheduler::new(cfg.queue_depth, cfg.probe_period),
+            transport_rejects: AtomicU64::new(0),
+        };
+        if ok == 0 {
+            fleet.shutdown_inner();
+            anyhow::bail!(
+                "fleet: all {} chips failed to start: {}",
+                cfg.chips,
+                first_err.unwrap_or_else(|| "worker died before ack".into())
+            );
+        }
+        if ok < cfg.chips {
+            log::warn!("fleet: {ok} of {} chips healthy at start", cfg.chips);
+        }
+        Ok(fleet)
+    }
+
+    /// Admit one trace, or shed it.  Non-blocking: the reply arrives on
+    /// the returned receiver.
+    pub fn dispatch(&self, trace: Trace) -> DispatchOutcome {
+        let mut trace = Some(trace);
+        // A dead worker channel is discovered lazily; retry the pick at
+        // most once per chip before giving up.
+        for _ in 0..self.handles.len() {
+            let chip = match self.scheduler.pick(&self.health) {
+                Ok(c) => c,
+                Err(reason) => {
+                    return DispatchOutcome::Shed {
+                        reason,
+                        retry_after_us: self.retry_hint_us(),
+                    };
+                }
+            };
+            let (rtx, rrx) = mpsc::channel();
+            self.health[chip].begin_job();
+            let job = ChipJob {
+                trace: trace.take().expect("trace is reclaimed on every retry"),
+                admitted: Instant::now(),
+                resp: rtx,
+            };
+            let send_result = {
+                let guard = self.handles[chip].tx.lock().unwrap();
+                match guard.as_ref() {
+                    Some(tx) => tx.send(job).map_err(|mpsc::SendError(j)| j),
+                    None => Err(job),
+                }
+            };
+            match send_result {
+                Ok(()) => return DispatchOutcome::Enqueued { chip, resp: rrx },
+                Err(job) => {
+                    // Worker gone: reclaim the trace, mark the chip dead,
+                    // and try the next candidate.
+                    trace = Some(job.trace);
+                    self.health[chip].record_error("worker channel closed");
+                    self.health[chip].mark_dead("worker channel closed");
+                }
+            }
+        }
+        self.transport_rejects.fetch_add(1, Ordering::Relaxed);
+        DispatchOutcome::Shed {
+            reason: ShedReason::NoHealthyChips,
+            retry_after_us: self.retry_hint_us(),
+        }
+    }
+
+    /// Blocking convenience: admit, wait, unwrap.  Sheds become errors.
+    pub fn classify_blocking(
+        &self,
+        trace: &Trace,
+    ) -> anyhow::Result<(ChipId, Inference)> {
+        match self.dispatch(trace.clone()) {
+            DispatchOutcome::Shed { reason, retry_after_us } => anyhow::bail!(
+                "request shed: {} (retry in ~{retry_after_us} µs)",
+                reason.as_str()
+            ),
+            DispatchOutcome::Enqueued { chip, resp } => {
+                let reply = resp
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("chip {chip} worker gone"))?;
+                let inf = reply.result.map_err(|e| anyhow::anyhow!(e))?;
+                Ok((reply.chip, inf))
+            }
+        }
+    }
+
+    /// Rough client-facing backpressure hint [µs]: the mean host latency
+    /// times the number of queued rounds ahead of the request.
+    fn retry_hint_us(&self) -> u64 {
+        let mean = self.telemetry.mean_host_us();
+        let per = if mean > 0.0 { mean } else { 300.0 };
+        let inflight: usize = self.health.iter().map(|h| h.inflight()).sum();
+        let lanes = self
+            .health
+            .iter()
+            .filter(|h| h.is_dispatchable())
+            .count()
+            .max(1);
+        (per * ((inflight / lanes) as f64 + 1.0)).max(1.0) as u64
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.health.iter().filter(|h| h.is_dispatchable()).count()
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.scheduler.shed_count()
+            + self.transport_rejects.load(Ordering::Relaxed)
+    }
+
+    pub fn telemetry(&self) -> &FleetTelemetry {
+        &self.telemetry
+    }
+
+    pub fn chip_snapshots(&self) -> Vec<ChipHealthSnapshot> {
+        self.health.iter().map(|h| h.snapshot()).collect()
+    }
+
+    /// The `fleet_stats` service payload (line-protocol JSON object).
+    pub fn stats_json(&self) -> String {
+        let t = self.telemetry.snapshot();
+        let mut s = format!(
+            "{{\"ok\":true,\"chips\":{},\"healthy\":{},\"served\":{},\
+             \"shed\":{},\"mean_host_us\":{:.1},\"p50_us\":{:.1},\
+             \"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_sim_time_us\":{:.3},\
+             \"per_chip\":[",
+            self.size(),
+            self.healthy_count(),
+            t.served,
+            self.shed_count(),
+            t.mean_host_us,
+            t.p50_us,
+            t.p95_us,
+            t.p99_us,
+            t.mean_sim_time_us,
+        );
+        for (i, h) in self.chip_snapshots().iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let rate = t.per_chip.get(i).map(|c| c.2).unwrap_or(0.0);
+            s.push_str(&format!(
+                "{{\"chip\":{i},\"state\":\"{}\",\"served\":{},\
+                 \"errors\":{},\"inflight\":{},\"mean_sim_time_us\":{:.3},\
+                 \"rate_per_s\":{rate:.2}}}",
+                h.state.as_str(),
+                h.served,
+                h.errors,
+                h.inflight,
+                h.mean_sim_time_us,
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    fn shutdown_inner(&mut self) {
+        for h in &self.handles {
+            // Dropping the sender closes the worker's queue; queued jobs
+            // still drain before the thread exits.
+            h.tx.lock().unwrap().take();
+        }
+        for h in &mut self.handles {
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    /// Drain and join all replicas.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn chip_worker<F>(
+    chip: ChipId,
+    rx: mpsc::Receiver<ChipJob>,
+    make_engine: Arc<F>,
+    health: Arc<ChipHealth>,
+    telemetry: Arc<FleetTelemetry>,
+    ack: mpsc::Sender<(ChipId, Result<(), String>)>,
+) where
+    F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
+{
+    let mut engine = match make_engine(chip) {
+        Ok(e) => {
+            let _ = ack.send((chip, Ok(())));
+            drop(ack);
+            e
+        }
+        Err(e) => {
+            health.mark_dead(&format!("engine init: {e}"));
+            let _ = ack.send((chip, Err(e.to_string())));
+            drop(ack);
+            // Drain with error replies so racing clients never hang.
+            while let Ok(job) = rx.recv() {
+                health.record_error("engine init failed");
+                let _ = job.resp.send(ChipReply {
+                    chip,
+                    host_latency_us: job.admitted.elapsed().as_secs_f64() * 1e6,
+                    result: Err(format!("chip {chip}: engine init failed")),
+                });
+            }
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        let ChipJob { trace, admitted, resp } = job;
+        let result = match engine.classify(&trace) {
+            Ok(inf) => {
+                let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
+                let host_us = admitted.elapsed().as_secs_f64() * 1e6;
+                health.record_success(sim_ns);
+                telemetry.record(chip, host_us, sim_ns);
+                Ok(inf)
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                health.record_error(&msg);
+                Err(format!("chip {chip}: {msg}"))
+            }
+        };
+        // The client may have given up; a closed reply channel is fine.
+        let _ = resp.send(ChipReply {
+            chip,
+            host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
+            result,
+        });
+    }
+}

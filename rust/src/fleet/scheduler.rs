@@ -1,0 +1,193 @@
+//! Least-loaded dispatch with bounded admission and explicit backpressure.
+//!
+//! Admission policy per request:
+//! 1. Among *healthy* chips, pick the one with the fewest inflight jobs
+//!    (queued + executing).  Ties rotate round-robin with the admission
+//!    counter so equal-load replicas share work deterministically.
+//! 2. If the least-loaded healthy chip already holds `queue_depth`
+//!    inflight jobs, the request is **shed** (`ShedReason::Saturated`)
+//!    instead of queueing unboundedly — the client gets an explicit
+//!    backpressure response it can retry against.
+//! 3. Every `probe_period`-th admission is offered to an *unhealthy*
+//!    (draining) chip first: one real request probes it, and a success
+//!    re-admits the chip (see `fleet::health`).
+//!
+//! The inflight bound is soft under races (two concurrent admissions can
+//! both observe the same snapshot), so the true bound is
+//! `queue_depth + #concurrent dispatchers` — acceptable for shedding,
+//! which is a load-control mechanism, not an exactness guarantee.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::health::ChipHealth;
+
+/// Why a request was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Every healthy chip is at its admission bound.
+    Saturated,
+    /// No chip is currently healthy (all draining or dead).
+    NoHealthyChips,
+}
+
+impl ShedReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::Saturated => "fleet saturated",
+            ShedReason::NoHealthyChips => "no healthy chips",
+        }
+    }
+}
+
+pub struct Scheduler {
+    queue_depth: usize,
+    probe_period: u64,
+    admissions: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new(queue_depth: usize, probe_period: u64) -> Scheduler {
+        Scheduler {
+            queue_depth: queue_depth.max(1),
+            probe_period: probe_period.max(2),
+            admissions: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn admissions(&self) -> u64 {
+        self.admissions.load(Ordering::Relaxed)
+    }
+
+    /// Pick a chip for one request, or decide to shed it.  The caller must
+    /// `begin_job()` on the returned chip's health before enqueueing.
+    pub fn pick(&self, chips: &[std::sync::Arc<ChipHealth>]) -> Result<usize, ShedReason> {
+        let tick = self.admissions.fetch_add(1, Ordering::Relaxed);
+        let n = chips.len();
+
+        // Re-admission probe: periodically offer one request to an idle
+        // draining chip so it can prove itself again.
+        if tick % self.probe_period == self.probe_period - 1 {
+            if let Some(i) = (0..n)
+                .map(|k| ((tick as usize) + k) % n)
+                .find(|&i| chips[i].is_probeable() && chips[i].inflight() == 0)
+            {
+                return Ok(i);
+            }
+        }
+
+        let mut best: Option<(usize, usize)> = None; // (inflight, chip)
+        for k in 0..n {
+            let i = ((tick as usize) + k) % n;
+            if !chips[i].is_dispatchable() {
+                continue;
+            }
+            let load = chips[i].inflight();
+            if best.map(|(bl, _)| load < bl).unwrap_or(true) {
+                best = Some((load, i));
+            }
+        }
+        match best {
+            Some((load, i)) if load < self.queue_depth => Ok(i),
+            Some(_) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ShedReason::Saturated)
+            }
+            None => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(ShedReason::NoHealthyChips)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn chips(n: usize) -> Vec<Arc<ChipHealth>> {
+        (0..n).map(|_| Arc::new(ChipHealth::new(3))).collect()
+    }
+
+    #[test]
+    fn rotates_over_equal_load() {
+        let cs = chips(4);
+        let s = Scheduler::new(8, 1_000_000);
+        let mut hit = [0usize; 4];
+        for _ in 0..16 {
+            let i = s.pick(&cs).unwrap();
+            hit[i] += 1;
+            // Complete immediately: load stays equal, rotation drives spread.
+            cs[i].begin_job();
+            cs[i].record_success(1);
+        }
+        assert_eq!(hit, [4, 4, 4, 4], "round-robin tie-break");
+    }
+
+    #[test]
+    fn prefers_least_loaded() {
+        let cs = chips(3);
+        // Chip 0 and 1 busy, chip 2 idle.
+        cs[0].begin_job();
+        cs[0].begin_job();
+        cs[1].begin_job();
+        let s = Scheduler::new(8, 1_000_000);
+        for _ in 0..3 {
+            assert_eq!(s.pick(&cs).unwrap(), 2);
+        }
+    }
+
+    #[test]
+    fn sheds_when_saturated() {
+        let cs = chips(2);
+        let s = Scheduler::new(2, 1_000_000);
+        for c in &cs {
+            c.begin_job();
+            c.begin_job();
+        }
+        assert_eq!(s.pick(&cs), Err(ShedReason::Saturated));
+        assert_eq!(s.shed_count(), 1);
+        // A completion frees a slot.
+        cs[1].record_success(1);
+        assert_eq!(s.pick(&cs), Ok(1));
+    }
+
+    #[test]
+    fn sheds_when_no_healthy_chips() {
+        let cs = chips(1);
+        cs[0].mark_dead("gone");
+        let s = Scheduler::new(4, 1_000_000);
+        assert_eq!(s.pick(&cs), Err(ShedReason::NoHealthyChips));
+    }
+
+    #[test]
+    fn probes_unhealthy_chip_periodically() {
+        let cs = chips(2);
+        // Chip 1 goes unhealthy.
+        for _ in 0..3 {
+            cs[1].begin_job();
+            cs[1].record_error("x");
+        }
+        let s = Scheduler::new(8, 4);
+        let mut probed = false;
+        for _ in 0..8 {
+            let i = s.pick(&cs).unwrap();
+            if i == 1 {
+                probed = true;
+                cs[1].begin_job();
+                cs[1].record_success(1);
+            } else {
+                cs[i].begin_job();
+                cs[i].record_success(1);
+            }
+        }
+        assert!(probed, "unhealthy chip must receive a probe");
+        assert!(cs[1].is_dispatchable(), "probe success re-admits");
+    }
+}

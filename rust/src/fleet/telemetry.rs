@@ -1,0 +1,311 @@
+//! Fleet-wide telemetry: a lock-free log-bucketed latency histogram with
+//! p50/p95/p99 estimation, plus per-chip throughput accounting.
+//!
+//! Two time bases are tracked deliberately:
+//! * **host latency** — wall-clock from admission to completion (queueing
+//!   + engine execution), the number a serving system cares about; and
+//! * **simulated inference time** — the paper's 276 µs per-inference
+//!   accounting, which stays bit-identical per chip no matter how many
+//!   replicas run (reported as a mean, accumulated in ns).
+//!
+//! Percentiles come from the histogram (geometric mid-point of the hit
+//! bucket, ~±15 % resolution by construction); `util::stats::Summary` is
+//! the exact oracle the unit tests cross-check against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::pm;
+
+/// Log-spaced buckets: bucket `i` covers `[BASE_US * RATIO^i, BASE_US *
+/// RATIO^(i+1))`.  64 buckets at ratio 1.3 span 1 µs .. ~2e7 µs (20 s).
+const N_BUCKETS: usize = 64;
+const BASE_US: f64 = 1.0;
+const RATIO: f64 = 1.3;
+
+fn bucket_of(us: f64) -> usize {
+    if us <= BASE_US {
+        return 0;
+    }
+    let idx = (us / BASE_US).ln() / RATIO.ln();
+    (idx as usize).min(N_BUCKETS - 1)
+}
+
+fn bucket_mid_us(i: usize) -> f64 {
+    // Geometric mid-point of the bucket's bounds.
+    BASE_US * RATIO.powi(i as i32) * RATIO.sqrt()
+}
+
+/// Concurrent latency histogram (host-latency µs).
+pub struct LatencyHistogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.counts[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((us * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Histogram quantile, `q` in [0, 100].  Returns 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return bucket_mid_us(i);
+            }
+        }
+        bucket_mid_us(N_BUCKETS - 1)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-chip completion counters (successes only; errors live in health).
+struct ChipCounters {
+    completed: AtomicU64,
+    host_ns_sum: AtomicU64,
+}
+
+/// Previous-snapshot marker: per-chip rates are computed over the window
+/// since the last `snapshot()` call, so a long-idle service reports its
+/// *current* throughput, not a lifetime average decayed toward zero.
+struct RateWindow {
+    at: Instant,
+    completed: Vec<u64>,
+}
+
+/// Aggregated fleet telemetry shared by workers, scheduler, and service.
+pub struct FleetTelemetry {
+    histogram: LatencyHistogram,
+    sim_time_ns_sum: AtomicU64,
+    per_chip: Vec<ChipCounters>,
+    started: Instant,
+    window: Mutex<RateWindow>,
+}
+
+/// Point-in-time fleet telemetry (stable shape for stats/tests).
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub served: u64,
+    pub mean_host_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_sim_time_us: f64,
+    pub elapsed_s: f64,
+    /// Per chip: (completed jobs, mean host latency µs, jobs/s over the
+    /// window since the previous snapshot).
+    pub per_chip: Vec<(u64, f64, f64)>,
+}
+
+impl FleetTelemetry {
+    pub fn new(chips: usize) -> FleetTelemetry {
+        let now = Instant::now();
+        FleetTelemetry {
+            histogram: LatencyHistogram::new(),
+            sim_time_ns_sum: AtomicU64::new(0),
+            per_chip: (0..chips)
+                .map(|_| ChipCounters {
+                    completed: AtomicU64::new(0),
+                    host_ns_sum: AtomicU64::new(0),
+                })
+                .collect(),
+            started: now,
+            window: Mutex::new(RateWindow {
+                at: now,
+                completed: vec![0; chips],
+            }),
+        }
+    }
+
+    /// Record one completed inference on `chip`.
+    pub fn record(&self, chip: usize, host_latency_us: f64, sim_time_ns: u64) {
+        self.histogram.record_us(host_latency_us);
+        self.sim_time_ns_sum.fetch_add(sim_time_ns, Ordering::Relaxed);
+        if let Some(c) = self.per_chip.get(chip) {
+            c.completed.fetch_add(1, Ordering::Relaxed);
+            c.host_ns_sum
+                .fetch_add((host_latency_us * 1e3) as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn served(&self) -> u64 {
+        self.histogram.count()
+    }
+
+    pub fn mean_host_us(&self) -> f64 {
+        self.histogram.mean_us()
+    }
+
+    /// Point-in-time snapshot.  Per-chip `jobs/s` covers the window since
+    /// the *previous* snapshot (first call: since fleet start), so
+    /// back-to-back `fleet_stats` queries read current throughput.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let served = self.served();
+        let now = Instant::now();
+        let elapsed = (now - self.started).as_secs_f64().max(1e-9);
+        let mut window = self.window.lock().unwrap();
+        let dt = (now - window.at).as_secs_f64().max(1e-9);
+        let per_chip = self
+            .per_chip
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let n = c.completed.load(Ordering::Relaxed);
+                let mean = if n > 0 {
+                    c.host_ns_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+                } else {
+                    0.0
+                };
+                let prev = window.completed.get(i).copied().unwrap_or(0);
+                let rate = n.saturating_sub(prev) as f64 / dt;
+                (n, mean, rate)
+            })
+            .collect::<Vec<_>>();
+        window.at = now;
+        window.completed = per_chip.iter().map(|c| c.0).collect();
+        drop(window);
+        TelemetrySnapshot {
+            served,
+            mean_host_us: self.histogram.mean_us(),
+            p50_us: self.histogram.quantile_us(50.0),
+            p95_us: self.histogram.quantile_us(95.0),
+            p99_us: self.histogram.quantile_us(99.0),
+            mean_sim_time_us: if served > 0 {
+                self.sim_time_ns_sum.load(Ordering::Relaxed) as f64
+                    / served as f64
+                    / 1e3
+            } else {
+                0.0
+            },
+            elapsed_s: elapsed,
+            per_chip,
+        }
+    }
+
+    /// One-line human report (`mean ± spread` in the paper's style).
+    pub fn report(&self) -> String {
+        let s = self.snapshot();
+        format!(
+            "fleet: {} served, host latency {} µs (p50 {:.0}, p95 {:.0}, \
+             p99 {:.0}), sim {:.1} µs/inference",
+            s.served,
+            pm(s.mean_host_us, s.p95_us - s.p50_us, 1),
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+            s.mean_sim_time_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn buckets_are_monotone_and_cover() {
+        assert_eq!(bucket_of(0.5), 0);
+        assert_eq!(bucket_of(1.0), 0);
+        let mut prev = 0;
+        for us in [2.0, 10.0, 100.0, 5e3, 1e6, 1e9] {
+            let b = bucket_of(us);
+            assert!(b >= prev, "bucket must not decrease");
+            prev = b;
+        }
+        assert_eq!(bucket_of(1e12), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_track_exact_summary_within_bucket_resolution() {
+        let h = LatencyHistogram::new();
+        let mut rng = crate::util::rng::SplitMix64::new(42);
+        let samples: Vec<f64> =
+            (0..5000).map(|_| 100.0 + 400.0 * rng.unit()).collect();
+        for &s in &samples {
+            h.record_us(s);
+        }
+        let exact = Summary::from(&samples);
+        for (q, want) in [(50.0, exact.p50), (95.0, exact.p95), (99.0, exact.p99)]
+        {
+            let got = h.quantile_us(q);
+            // One bucket is a factor of RATIO wide; mid-point estimation is
+            // within ±RATIO of the exact value.
+            assert!(
+                got > want / RATIO && got < want * RATIO,
+                "q{q}: histogram {got} vs exact {want}"
+            );
+        }
+        assert!((h.mean_us() - exact.mean).abs() / exact.mean < 0.01);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(50.0), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn per_chip_accounting() {
+        let t = FleetTelemetry::new(2);
+        t.record(0, 300.0, 276_000);
+        t.record(1, 500.0, 276_000);
+        t.record(1, 700.0, 276_000);
+        let s = t.snapshot();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.per_chip[0].0, 1);
+        assert_eq!(s.per_chip[1].0, 2);
+        assert!((s.per_chip[1].1 - 600.0).abs() < 1.0);
+        assert!((s.mean_sim_time_us - 276.0).abs() < 1e-9);
+        assert!(s.per_chip[1].2 > 0.0, "throughput rate positive");
+        // Out-of-range chip ids are ignored, not panicking.
+        t.record(9, 100.0, 1);
+        assert_eq!(t.snapshot().served, 4);
+    }
+
+    #[test]
+    fn report_mentions_percentiles() {
+        let t = FleetTelemetry::new(1);
+        t.record(0, 300.0, 276_000);
+        let r = t.report();
+        assert!(r.contains("p95"), "{r}");
+        assert!(r.contains("served"), "{r}");
+    }
+}

@@ -14,6 +14,8 @@
 //! * [`runtime`] — PJRT client: loads and executes `artifacts/*.hlo.txt`.
 //! * [`nn`] — weights, logical->physical mapping, graph + partitioner.
 //! * [`coordinator`] — standalone inference engine, batch runner, service.
+//! * [`fleet`] — multi-chip scheduler: N engine replicas behind one
+//!   least-loaded dispatcher with health tracking and backpressure.
 //! * [`ecg`] — synthetic ECG generator + binary dataset reader.
 //! * [`baselines`] — comparison platforms of paper §V.
 //! * [`util`] — hand-rolled substrate (JSON, PRNG, CLI, bench, propcheck).
@@ -22,6 +24,7 @@ pub mod asic;
 pub mod baselines;
 pub mod coordinator;
 pub mod ecg;
+pub mod fleet;
 pub mod fpga;
 pub mod nn;
 pub mod power;

@@ -11,7 +11,8 @@
 //! repro throughput                   Eq. 1-3 rates + area efficiency
 //! repro baselines                    §V platform comparison
 //! repro classify [--n 10]            classify synthetic traces (quickstart)
-//! repro serve   [--addr host:port]   experiment execution service
+//! repro serve   [--addr host:port] [--chips N]   experiment execution
+//!                                    service over a fleet of N replicas
 //! repro snn     [--neurons 4]        spiking (AdEx) operation-mode demo
 //! ```
 
@@ -63,13 +64,16 @@ COMMANDS:
   throughput   Eq. 1-3: peak/effective rates, area efficiency
   baselines    §V energy comparison vs published platforms
   classify     classify synthetic traces   (--n 10 --native)
-  serve        experiment service          (--addr 127.0.0.1:7001 --native)
+  serve        experiment service          (--addr 127.0.0.1:7001 --native
+                                            --chips 4 --queue-depth 32)
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
 
 OPTIONS (common):
   --artifacts DIR   artifact directory (default: ./artifacts or $BSS2_ARTIFACTS)
   --native          use the in-process array model instead of PJRT
   --noise-off       disable temporal analog noise (ablation)
+  --chips N         serve: fleet of N engine replicas (default 1)
+  --queue-depth M   serve: per-chip admission bound before shedding
 ";
 
 fn env_logger_init() {
@@ -380,21 +384,30 @@ fn classify(args: &Args) -> anyhow::Result<()> {
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
+    use bss2::fleet::FleetConfig;
     let addr = args.str_or("addr", "127.0.0.1:7001");
+    let chips = args.usize_or("chips", 1)?;
+    let queue_depth = args.usize_or("queue-depth", 32)?;
     let dir = artifact_dir(args);
     let cfg = engine_config(args);
-    let svc = bss2::coordinator::service::Service::start(&addr, move || {
-        Engine::from_artifacts(&dir, cfg)
-    })?;
+    let fleet_cfg = FleetConfig { chips, queue_depth, ..Default::default() };
+    let svc = bss2::coordinator::service::Service::start_fleet(
+        &addr,
+        fleet_cfg,
+        move |chip| Engine::from_artifacts(&dir, cfg.clone().for_chip(chip)),
+    )?;
     println!(
-        "[serve] experiment service on {} (line-delimited JSON; \
-         {{\"cmd\":\"ping\"}} / classify / stats / shutdown)",
-        svc.addr
+        "[serve] experiment service on {} — fleet of {} chip{} \
+         (queue depth {}/chip; line-delimited JSON; {{\"cmd\":\"ping\"}} / \
+         classify / stats / fleet_stats / shutdown)",
+        svc.addr,
+        svc.fleet.size(),
+        if svc.fleet.size() == 1 { "" } else { "s" },
+        queue_depth
     );
-    // Block until a client sends shutdown.
-    loop {
-        std::thread::sleep(std::time::Duration::from_millis(200));
-    }
+    // Block until a client sends shutdown, then drain and join the fleet.
+    svc.run_until_shutdown();
+    Ok(())
 }
 
 fn snn(args: &Args) -> anyhow::Result<()> {

@@ -93,6 +93,37 @@ impl TrainedModel {
         })
     }
 
+    /// Deterministic synthetic model for tests, benches, and fleet
+    /// bring-up without trained artifacts: on-grid (6-bit) weights from a
+    /// seeded stream, nominal calibration, the paper's noise sigma.  Not a
+    /// trained classifier — predictions are arbitrary but reproducible.
+    pub fn synthetic(seed: u64) -> TrainedModel {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        let mut grid = |n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|_| {
+                    (rng.below(2 * c::W_MAX as u64 + 1) as i64 - c::W_MAX as i64)
+                        as f32
+                })
+                .collect()
+        };
+        let wc = grid(c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL);
+        let w1 = grid(c::K_LOGICAL * c::FC1_OUT);
+        let w2 = grid(c::FC1_OUT * c::FC2_OUT);
+        TrainedModel {
+            pass_weights: [
+                mapping::pack_conv(&wc),
+                mapping::pack_fc1(&w1),
+                mapping::pack_fc2(&w2),
+            ],
+            scales: [0.02, 0.02, 0.02],
+            gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
+            offset: [vec![0.0; c::N_COLS], vec![0.0; c::N_COLS]],
+            noise_sigma: c::NOISE_SIGMA,
+            train_metrics: Default::default(),
+        }
+    }
+
     /// The array half a pass executes on (conv: top, fc1/fc2: bottom).
     pub fn pass_half(pass: usize) -> usize {
         if pass == 0 {
@@ -147,6 +178,22 @@ mod tests {
         assert!(err.contains("6-bit grid"), "{err}");
         let bad2 = tiny_weights_json().replacen("3.0", "64.0", 1);
         assert!(TrainedModel::parse(&bad2).is_err());
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_on_grid() {
+        let a = TrainedModel::synthetic(9);
+        let b = TrainedModel::synthetic(9);
+        assert_eq!(a.pass_weights[0], b.pass_weights[0]);
+        assert_eq!(a.pass_weights[2], b.pass_weights[2]);
+        for m in a.pass_weights.iter() {
+            assert_eq!(m.len(), c::K_LOGICAL * c::N_COLS);
+            for &w in m.iter() {
+                assert!(w == w.trunc() && w.abs() <= c::W_MAX as f32);
+            }
+        }
+        let c2 = TrainedModel::synthetic(10);
+        assert_ne!(a.pass_weights[0], c2.pass_weights[0], "seed matters");
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Integration: the multi-chip fleet scheduler.
+//!
+//! (a) Under concurrent load every chip replica receives work.
+//! (b) A fleet of N chips produces exactly the same predictions as a
+//!     single engine for the same traces and seed (per-chip semantics are
+//!     bit-identical to the paper's single-unit setup).
+//! (c) Saturating the admission queues yields well-formed shed
+//!     (backpressure) responses instead of hangs or unbounded queueing.
+
+use std::sync::Arc;
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{Client, Service};
+use bss2::ecg::gen::TraceStream;
+use bss2::fleet::{DispatchOutcome, Fleet, FleetConfig, ShedReason};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::json::Json;
+
+const MODEL_SEED: u64 = 0xF1EE7;
+
+fn engine_config(chip: usize) -> EngineConfig {
+    EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() }
+        .for_chip(chip)
+}
+
+fn native_fleet(chips: usize, queue_depth: usize) -> Fleet {
+    Fleet::start(
+        FleetConfig { chips, queue_depth, ..Default::default() },
+        |chip| Ok(Engine::native(TrainedModel::synthetic(MODEL_SEED), engine_config(chip))),
+    )
+    .unwrap()
+}
+
+#[test]
+fn all_chips_receive_work_under_load() {
+    let chips = 4;
+    let fleet = Arc::new(native_fleet(chips, 16));
+    let mut handles = Vec::new();
+    for client in 0..8u64 {
+        let fleet = fleet.clone();
+        handles.push(std::thread::spawn(move || {
+            for trace in TraceStream::new(100 + client, 1.0).take(12) {
+                // Depth 16 with ≤8 concurrent requests never sheds; any
+                // shed here is a scheduler bug.
+                let (chip, inf) = fleet.classify_blocking(&trace).unwrap();
+                assert!(chip < 4);
+                assert!(inf.pred <= 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snaps = fleet.chip_snapshots();
+    let served: Vec<u64> = snaps.iter().map(|s| s.served).collect();
+    assert_eq!(served.iter().sum::<u64>(), 96);
+    for (chip, &n) in served.iter().enumerate() {
+        assert!(n > 0, "chip {chip} served nothing: {served:?}");
+    }
+    assert_eq!(fleet.telemetry().served(), 96);
+    assert_eq!(fleet.shed_count(), 0, "no shed expected under this load");
+    Arc::try_unwrap(fleet).ok().unwrap().shutdown();
+}
+
+#[test]
+fn fleet_matches_single_engine_predictions() {
+    // Noise is off, so classification is a pure function of the trace and
+    // the replicas are exact clones of the single-unit engine.
+    let mut single =
+        Engine::native(TrainedModel::synthetic(MODEL_SEED), engine_config(0));
+    let fleet = native_fleet(3, 8);
+    for trace in TraceStream::new(55, 1.0).take(15) {
+        let want = single.classify(&trace).unwrap();
+        let (_chip, got) = fleet.classify_blocking(&trace).unwrap();
+        assert_eq!(got.pred, want.pred);
+        assert_eq!(got.scores, want.scores);
+        assert_eq!(got.sim_time_s, want.sim_time_s, "timing accounting drifted");
+        assert_eq!(
+            got.energy.total_j(),
+            want.energy.total_j(),
+            "energy accounting drifted"
+        );
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn backpressure_sheds_instead_of_hanging() {
+    // One chip, tiny admission bound, and a dispatch loop much faster
+    // than one inference: the queue must fill and shed.
+    let fleet = native_fleet(1, 2);
+    let trace = TraceStream::new(9, 1.0).next().unwrap();
+    let mut enqueued = Vec::new();
+    let mut sheds = 0u64;
+    for _ in 0..200 {
+        match fleet.dispatch(trace.clone()) {
+            DispatchOutcome::Enqueued { resp, .. } => enqueued.push(resp),
+            DispatchOutcome::Shed { reason, retry_after_us } => {
+                assert_eq!(reason, ShedReason::Saturated);
+                assert!(retry_after_us > 0, "retry hint must be positive");
+                sheds += 1;
+            }
+        }
+    }
+    assert!(sheds > 0, "200 instant dispatches into depth 2 must shed");
+    assert_eq!(fleet.shed_count(), sheds);
+    // Every admitted job still completes (drain, no loss).
+    for resp in enqueued {
+        let reply = resp.recv().expect("admitted job must be answered");
+        assert!(reply.result.is_ok(), "{:?}", reply.result);
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn service_shed_response_is_well_formed() {
+    // Same saturation scenario end-to-end over TCP: every reply is valid
+    // line-delimited JSON, either a classification or a shed.
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips: 1, queue_depth: 1, ..Default::default() },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                engine_config(chip),
+            ))
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+    let mut handles = Vec::new();
+    for client in 0..6u64 {
+        handles.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut cl = Client::connect(&addr).unwrap();
+            let (mut served, mut shed) = (0, 0);
+            for trace in TraceStream::new(700 + client, 1.0).take(8) {
+                let reply = cl.classify(&trace).unwrap();
+                if reply.get("ok") == Some(&Json::Bool(true)) {
+                    assert!(reply.get("chip").is_some());
+                    served += 1;
+                } else {
+                    // A rejection must be an explicit, well-formed shed.
+                    assert_eq!(
+                        reply.get("shed"),
+                        Some(&Json::Bool(true)),
+                        "non-shed failure: {reply}"
+                    );
+                    assert!(reply
+                        .get("retry_after_us")
+                        .and_then(|v| v.as_f64())
+                        .unwrap() > 0.0);
+                    assert!(reply.get("error").is_some());
+                    shed += 1;
+                }
+            }
+            (served, shed)
+        }));
+    }
+    let mut total_served = 0;
+    let mut total_shed = 0;
+    for h in handles {
+        let (s, d) = h.join().unwrap();
+        total_served += s;
+        total_shed += d;
+    }
+    assert_eq!(total_served + total_shed, 48, "every request got a reply");
+    assert!(total_served > 0, "some requests must be served");
+    let mut cl = Client::connect(&addr).unwrap();
+    let stats = cl.call("{\"cmd\":\"stats\"}").unwrap();
+    assert_eq!(
+        stats.get("served").and_then(|v| v.as_usize()),
+        Some(total_served)
+    );
+    svc.stop();
+}
+
+#[test]
+fn fleet_stats_protocol_roundtrip() {
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips: 2, queue_depth: 8, ..Default::default() },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                engine_config(chip),
+            ))
+        },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    for trace in TraceStream::new(31, 1.0).take(4) {
+        let reply = cl.classify(&trace).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    }
+    let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+    assert_eq!(fs.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(fs.get("chips").and_then(|v| v.as_usize()), Some(2));
+    assert_eq!(fs.get("served").and_then(|v| v.as_usize()), Some(4));
+    let per_chip = fs.get("per_chip").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(per_chip.len(), 2);
+    let chip_served: usize = per_chip
+        .iter()
+        .map(|c| c.get("served").and_then(|v| v.as_usize()).unwrap())
+        .sum();
+    assert_eq!(chip_served, 4);
+    for c in per_chip {
+        assert_eq!(c.get("state").and_then(|v| v.as_str()), Some("healthy"));
+    }
+    // The round-robin tie-break spreads even a single sequential client.
+    assert!(
+        per_chip.iter().all(|c| {
+            c.get("served").and_then(|v| v.as_usize()).unwrap() > 0
+        }),
+        "both chips serve a sequential client: {fs}"
+    );
+    svc.stop();
+}
