@@ -106,6 +106,27 @@ fn main() -> anyhow::Result<()> {
     );
     println!("work spread: {per_chip:?} requests per chip");
 
+    // Batched path: one classify_batch request runs as a single program
+    // on one chip, amortising per-layer weight reconfiguration (the
+    // reply reports partial acceptance under load).
+    let batch: Vec<_> = TraceStream::new(99, 1.0).take(8).collect();
+    let reply = client.classify_batch(&batch)?;
+    anyhow::ensure!(
+        reply.get("ok") == Some(&Json::Bool(true)),
+        "classify_batch failed: {reply}"
+    );
+    println!(
+        "classify_batch: {}/{} accepted on chip {}, {:.0} µs/sample \
+         (single-trace path: ~276 µs)",
+        reply.get("accepted").and_then(|v| v.as_usize()).unwrap_or(0),
+        batch.len(),
+        reply.get("chip").and_then(|v| v.as_usize()).unwrap_or(0),
+        reply
+            .get("time_us_per_sample")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+    );
+
     let stats = client.call("{\"cmd\":\"stats\"}")?;
     println!("service stats: {stats}");
     let fleet = client.call("{\"cmd\":\"fleet_stats\"}")?;

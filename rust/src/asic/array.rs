@@ -123,8 +123,7 @@ impl AnalogArray {
                     + self.calib.offset[n]
                     + noise[n];
                 let v = v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP);
-                // f32 round: ties away from zero — identical to jnp.round
-                // for our value range? jnp.round is round-half-even; match it.
+                // jnp.round is roundTiesToEven; the CADC model matches it.
                 let r = round_half_even(v);
                 r.clamp(lo, c::ADC_MAX as f32) as i16
             })
@@ -158,11 +157,21 @@ impl AnalogArray {
 
 /// Round-half-to-even, matching `jnp.round` / IEEE-754 roundTiesToEven so the
 /// rust model agrees bit-for-bit with the pallas kernel and the HLO artifact.
+///
+/// Pure f32 arithmetic: the previous implementation cast the rounded value
+/// to `i64` for the parity check (saturating — and wrong in spirit — for
+/// magnitudes beyond the `i64` range) and stepped by `v.signum()`.  Here a
+/// tie is `|r - v| == 0.5` exactly (representable, and impossible once the
+/// f32 spacing exceeds 0.5, so huge values never take the branch), parity
+/// is `r % 2.0` (exact for integral floats of any magnitude), and the even
+/// neighbour is reached by stepping from `r` back across `v`.
 #[inline]
 pub fn round_half_even(v: f32) -> f32 {
     let r = v.round(); // ties away from zero
-    if (v - v.trunc()).abs() == 0.5 && (r as i64) % 2 != 0 {
-        r - v.signum()
+    if (r - v).abs() == 0.5 && r % 2.0 != 0.0 {
+        // Tie on an odd integer: the even neighbour is one step back
+        // toward zero, i.e. r minus the signed overshoot of ±0.5 doubled.
+        r - (r - v) * 2.0
     } else {
         r
     }
@@ -250,6 +259,56 @@ mod tests {
         assert_eq!(round_half_even(-1.5), -2.0);
         assert_eq!(round_half_even(1.2), 1.0);
         assert_eq!(round_half_even(-1.7), -2.0);
+    }
+
+    #[test]
+    fn round_half_even_exhaustive_ties() {
+        // Every representable .5 tie in the ADC-relevant range, both signs.
+        for n in 0..2048i32 {
+            let even = (2 * n) as f32;
+            let odd = (2 * n + 1) as f32;
+            // k + 0.5 rounds to the even neighbour on either side.
+            assert_eq!(round_half_even(even + 0.5), even, "tie above {even}");
+            assert_eq!(round_half_even(odd + 0.5), odd + 1.0, "tie above {odd}");
+            assert_eq!(round_half_even(-(even + 0.5)), -even);
+            assert_eq!(round_half_even(-(odd + 0.5)), -(odd + 1.0));
+            // Non-ties still round to nearest.
+            assert_eq!(round_half_even(even + 0.25), even);
+            assert_eq!(round_half_even(odd + 0.75), odd + 1.0);
+        }
+    }
+
+    #[test]
+    fn round_half_even_large_magnitudes() {
+        // Beyond 2^23 every f32 is integral: round is the identity and the
+        // tie branch must never fire (no i64 cast to saturate any more).
+        for v in [
+            8_388_608.0f32,          // 2^23
+            16_777_215.0,            // largest odd integral f32
+            1e12, -1e12,             // far past 2^23
+            9.3e18, -9.3e18,         // ≈ i64::MAX, the old cast's edge
+            1e30, -1e30,             // far beyond the i64 range
+            f32::MAX, f32::MIN,
+        ] {
+            assert_eq!(round_half_even(v), v, "integral {v} must be identity");
+        }
+        // Largest f32 values with a fractional part: spacing 0.5 at 2^22.
+        assert_eq!(round_half_even(4_194_303.5), 4_194_304.0);
+        assert_eq!(round_half_even(-4_194_303.5), -4_194_304.0);
+        assert_eq!(round_half_even(4_194_302.5), 4_194_302.0);
+    }
+
+    #[test]
+    fn round_half_even_with_negative_calib_offsets() {
+        // Ties produced the way `digitize` produces them: accumulated
+        // charge scaled then shifted by a *negative* calibration offset.
+        let mut a = AnalogArray::new(1, 4, ColumnCalib::nominal(4));
+        a.calib.offset = vec![-0.5, -1.5, -2.5, -3.5];
+        a.load_weights(&[10, 10, 10, 10]);
+        // acc = 10 * 10 = 100; v = 0.1 * 100 + offset = 99.5, 98.5, 97.5,
+        // 96.5 -> round-half-even: 100, 98, 98, 96.
+        let out = a.integrate(&[10], 0.1, &[0.0; 4], false);
+        assert_eq!(out, vec![100, 98, 98, 96]);
     }
 
     #[test]

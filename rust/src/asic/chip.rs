@@ -25,6 +25,8 @@ pub struct ChipStats {
     pub vmm_cycles: u64,
     pub adc_reads: u64,
     pub simd_cycles: u64,
+    /// Synapse-matrix rewrites (per-pass weight reconfigurations).
+    pub weight_writes: u64,
 }
 
 /// Chip-level timing model: simulated nanoseconds per activity
@@ -48,6 +50,11 @@ impl ChipTiming {
     /// One integration cycle incl. membrane reset (5 µs).
     pub fn add_integration(&mut self) {
         self.ns += c::INTEGRATION_CYCLE_US * 1e3;
+    }
+
+    /// Rewrite one half's synapse matrix (per-pass weight reconfiguration).
+    pub fn add_weight_write(&mut self) {
+        self.ns += c::WEIGHT_WRITE_US * 1e3;
     }
 
     /// Parallel CADC conversion + digital transfer of one half.

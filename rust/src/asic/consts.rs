@@ -45,6 +45,11 @@ pub const RELU_SHIFT: u32 = 2;
 pub const EVENT_PERIOD_NS: f64 = 8.0;
 /// Full VMM integration cycle incl. membrane reset.
 pub const INTEGRATION_CYCLE_US: f64 = 5.0;
+/// Rewriting one half's synapse matrix (per-pass weight reconfiguration:
+/// 256 x 256 x 6 bit over the config bus).  Part of what the paper's 276 µs
+/// per-inference figure spends outside the integration cycles; batching
+/// pays it once per batch instead of once per sample (hxtorch's lever).
+pub const WEIGHT_WRITE_US: f64 = 40.0;
 /// LVDS links routed to the FPGA (of 8 on the ASIC).
 pub const LVDS_LINKS: usize = 5;
 /// Per-link bandwidth in Gbit/s.

@@ -61,15 +61,21 @@ impl Confusion {
 }
 
 /// Mean ± std of a metric across repeated measurement blocks (the paper's
-/// "(93.7 ± 0.7) %" style).
+/// "(93.7 ± 0.7) %" style).  Bessel-corrected sample std (`n - 1`): the
+/// blocks are repeated runs estimating an underlying rate, so the paper's
+/// ± figure is a sample statistic; fewer than two blocks report 0.
 pub fn mean_std<F: Fn(&Confusion) -> f64>(
     blocks: &[Confusion],
     f: F,
 ) -> (f64, f64) {
     let vals: Vec<f64> = blocks.iter().map(f).collect();
-    let n = vals.len().max(1) as f64;
-    let mean = vals.iter().sum::<f64>() / n;
-    let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    let n = vals.len();
+    let mean = vals.iter().sum::<f64>() / n.max(1) as f64;
+    let var = if n > 1 {
+        vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
     (mean, var.sqrt())
 }
 
@@ -118,7 +124,20 @@ mod tests {
         b.add(0, 1); // det 0.0
         let (m, s) = mean_std(&[a, b], |c| c.detection_rate());
         assert_eq!(m, 0.5);
-        assert_eq!(s, 0.5);
+        // Sample std over {0, 1}: sqrt(0.5 / (2 - 1)).
+        assert!((s - 0.5f64.sqrt()).abs() < 1e-12, "std {s}");
+    }
+
+    #[test]
+    fn mean_std_single_block_is_zero_spread() {
+        let mut a = Confusion::default();
+        a.add(1, 1);
+        let (m, s) = mean_std(&[a], |c| c.detection_rate());
+        assert_eq!(m, 1.0);
+        assert_eq!(s, 0.0, "one block: no spread estimate, not NaN");
+        let (m, s) = mean_std(&[], |c| c.detection_rate());
+        assert_eq!(m, 0.0);
+        assert_eq!(s, 0.0);
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //!
 //! Ours is a line-delimited JSON protocol over TCP (the mobile system's
 //! USB-Ethernet remote path).  Requests are dispatched through a
-//! [`fleet::Fleet`](crate::fleet::Fleet) of engine replicas — each chip
-//! still serves strictly batch-size-1 (the paper's edge constraint), while
-//! the fleet spreads concurrent clients across replicas and sheds load
-//! explicitly when every admission queue is full.
+//! [`fleet::Fleet`](crate::fleet::Fleet) of engine replicas.  A `classify`
+//! serves one trace at the paper's 276 µs single-sample latency; a
+//! `classify_batch` trades latency for throughput: the whole batch runs on
+//! one chip as a single program with one weight reconfiguration per layer
+//! per batch (DESIGN.md §9).  The fleet spreads concurrent clients across
+//! replicas, accounts admission in *samples*, and sheds load explicitly —
+//! a batch that only partially fits is partially accepted.
 //!
 //! Protocol (one JSON object per line):
 //! ```text
@@ -17,6 +20,13 @@
 //! <- {"ok": true, "pred": 1, "scores": [a, b], "time_us": t,
 //!     "energy_mj": e, "chip": c}
 //! <- {"ok": false, "shed": true, "error": "...", "retry_after_us": n}
+//! -> {"cmd": "classify_batch", "traces": [[[..ch0..], [..ch1..]], ...]}
+//! <- {"ok": true, "chip": c, "batch": B, "accepted": k, "shed": B - k,
+//!     "retry_after_us": n?, "time_us_per_sample": t,
+//!     "results": [{"pred": p, "scores": [a, b], "time_us": t,
+//!                  "energy_mj": e}, ...k entries...]}
+//! <- {"ok": false, "shed": true, "error": "...", "accepted": 0,
+//!     "batch": B, "retry_after_us": n}
 //! -> {"cmd": "stats"}
 //! <- {"ok": true, "served": n, "mean_time_us": t, "chips": c, "shed": s}
 //! -> {"cmd": "fleet_stats"}
@@ -31,10 +41,12 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use crate::asic::consts as c;
 use crate::ecg::gen::Trace;
-use crate::fleet::{ChipId, DispatchOutcome, Fleet, FleetConfig};
+use crate::fleet::{
+    BatchDispatchOutcome, ChipId, DispatchOutcome, Fleet, FleetConfig,
+};
 use crate::util::json::Json;
 
-use super::engine::Engine;
+use super::engine::{Engine, Inference};
 
 /// The running service handle.  Serving statistics live in
 /// [`Fleet::telemetry`]: one source of truth, accumulated in integer
@@ -160,6 +172,23 @@ fn json_str(s: &str) -> String {
     Json::Str(s.to_string()).to_string()
 }
 
+/// Largest accepted `classify_batch` wire batch (sanity bound for request
+/// and reply sizes; larger batches should be split by the client anyway).
+pub const MAX_WIRE_BATCH: usize = 64;
+
+/// One inference as the inner JSON object of a reply.
+fn inference_json(inf: &Inference) -> String {
+    format!(
+        "{{\"pred\":{},\"scores\":[{},{}],\"time_us\":{:.1},\
+         \"energy_mj\":{:.4}}}",
+        inf.pred,
+        inf.scores[0],
+        inf.scores[1],
+        inf.sim_time_s * 1e6,
+        inf.energy.total_j() * 1e3
+    )
+}
+
 fn classify_reply(fleet: &Fleet, trace: Trace) -> String {
     match fleet.dispatch(trace) {
         DispatchOutcome::Shed { reason, retry_after_us } => format!(
@@ -172,17 +201,79 @@ fn classify_reply(fleet: &Fleet, trace: Trace) -> String {
                 "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
             ),
             Ok(reply) => match reply.result {
-                Ok(inf) => format!(
-                    "{{\"ok\":true,\"pred\":{},\"scores\":[{},{}],\
-                     \"time_us\":{:.1},\"energy_mj\":{:.4},\
-                     \"chip\":{}}}",
-                    inf.pred,
-                    inf.scores[0],
-                    inf.scores[1],
-                    inf.sim_time_s * 1e6,
-                    inf.energy.total_j() * 1e3,
-                    reply.chip
-                ),
+                Ok(infs) => match infs.first() {
+                    Some(inf) => {
+                        // Same field formatting as the batch reply (one
+                        // source of truth: `inference_json`), plus chip.
+                        let fields = inference_json(inf);
+                        format!(
+                            "{{\"ok\":true,{},\"chip\":{}}}",
+                            &fields[1..fields.len() - 1],
+                            reply.chip
+                        )
+                    }
+                    None => format!(
+                        "{{\"ok\":false,\"error\":\"chip {} empty reply\"}}",
+                        reply.chip
+                    ),
+                },
+                Err(e) => {
+                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
+                }
+            },
+        },
+    }
+}
+
+/// Serve one `classify_batch` request: dispatch the whole batch to one
+/// chip (amortised weight reconfiguration); report partial acceptance
+/// explicitly so the client can retry the shed suffix.
+fn classify_batch_reply(fleet: &Fleet, traces: Vec<Trace>) -> String {
+    let batch = traces.len();
+    match fleet.dispatch_batch(traces) {
+        BatchDispatchOutcome::Shed { reason, retry_after_us } => format!(
+            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
+             \"accepted\":0,\"batch\":{batch},\
+             \"retry_after_us\":{retry_after_us}}}",
+            reason.as_str()
+        ),
+        BatchDispatchOutcome::Enqueued {
+            chip,
+            accepted,
+            rejected,
+            resp,
+            retry_after_us,
+        } => match resp.recv() {
+            Err(mpsc::RecvError) => format!(
+                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
+            ),
+            Ok(reply) => match reply.result {
+                Ok(infs) => {
+                    let sum_us: f64 =
+                        infs.iter().map(|i| i.sim_time_s).sum::<f64>() * 1e6;
+                    let per_us = sum_us / infs.len().max(1) as f64;
+                    let mut s = format!(
+                        "{{\"ok\":true,\"chip\":{},\"batch\":{batch},\
+                         \"accepted\":{accepted},\"shed\":{rejected},",
+                        reply.chip
+                    );
+                    if rejected > 0 {
+                        s.push_str(&format!(
+                            "\"retry_after_us\":{retry_after_us},"
+                        ));
+                    }
+                    s.push_str(&format!(
+                        "\"time_us_per_sample\":{per_us:.1},\"results\":["
+                    ));
+                    for (i, inf) in infs.iter().enumerate() {
+                        if i > 0 {
+                            s.push(',');
+                        }
+                        s.push_str(&inference_json(inf));
+                    }
+                    s.push_str("]}");
+                    s
+                }
                 Err(e) => {
                     format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
                 }
@@ -251,6 +342,13 @@ fn handle_conn(
                     ),
                     Ok(trace) => classify_reply(&fleet, trace),
                 },
+                Some("classify_batch") => match parse_trace_batch(&req) {
+                    Err(e) => format!(
+                        "{{\"ok\":false,\"error\":{}}}",
+                        json_str(&e.to_string())
+                    ),
+                    Ok(traces) => classify_batch_reply(&fleet, traces),
+                },
                 _ => "{\"ok\":false,\"error\":\"unknown cmd\"}".to_string(),
             },
         };
@@ -264,8 +362,25 @@ fn handle_conn(
 }
 
 fn parse_trace(req: &Json) -> anyhow::Result<Trace> {
-    let chans = req
-        .req("trace")?
+    parse_trace_value(req.req("trace")?)
+}
+
+fn parse_trace_batch(req: &Json) -> anyhow::Result<Vec<Trace>> {
+    let items = req
+        .req("traces")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("traces must be an array"))?;
+    anyhow::ensure!(!items.is_empty(), "empty batch");
+    anyhow::ensure!(
+        items.len() <= MAX_WIRE_BATCH,
+        "batch of {} exceeds the wire limit of {MAX_WIRE_BATCH}",
+        items.len()
+    );
+    items.iter().map(parse_trace_value).collect()
+}
+
+fn parse_trace_value(v: &Json) -> anyhow::Result<Trace> {
+    let chans = v
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("trace must be an array"))?;
     anyhow::ensure!(chans.len() == c::ECG_CHANNELS, "need 2 channels");
@@ -315,23 +430,45 @@ impl Client {
     }
 
     pub fn classify(&mut self, trace: &Trace) -> anyhow::Result<Json> {
-        let mut req = String::from("{\"cmd\":\"classify\",\"trace\":[");
-        for (i, ch) in trace.samples.iter().enumerate() {
+        let mut req = String::from("{\"cmd\":\"classify\",\"trace\":");
+        push_trace_json(trace, &mut req);
+        req.push('}');
+        self.call(&req)
+    }
+
+    /// Submit a whole batch as one `classify_batch` request (amortised
+    /// weight reconfiguration server-side).  The reply may report partial
+    /// acceptance: `accepted` < batch with the shed suffix to retry.
+    pub fn classify_batch(&mut self, traces: &[Trace]) -> anyhow::Result<Json> {
+        let mut req = String::from("{\"cmd\":\"classify_batch\",\"traces\":[");
+        for (i, trace) in traces.iter().enumerate() {
             if i > 0 {
                 req.push(',');
             }
-            req.push('[');
-            for (j, &s) in ch.iter().enumerate() {
-                if j > 0 {
-                    req.push(',');
-                }
-                req.push_str(&s.to_string());
-            }
-            req.push(']');
+            push_trace_json(trace, &mut req);
         }
         req.push_str("]}");
         self.call(&req)
     }
+}
+
+/// Append one trace as the nested-array wire format.
+fn push_trace_json(trace: &Trace, req: &mut String) {
+    req.push('[');
+    for (i, ch) in trace.samples.iter().enumerate() {
+        if i > 0 {
+            req.push(',');
+        }
+        req.push('[');
+        for (j, &s) in ch.iter().enumerate() {
+            if j > 0 {
+                req.push(',');
+            }
+            req.push_str(&s.to_string());
+        }
+        req.push(']');
+    }
+    req.push(']');
 }
 
 #[cfg(test)]
@@ -392,8 +529,98 @@ mod tests {
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         let r = cl.call("{\"cmd\":\"classify\",\"trace\":[[1,2],[3]]}").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = cl.call("{\"cmd\":\"classify_batch\",\"traces\":[]}").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+        let r = cl.call("{\"cmd\":\"classify_batch\",\"traces\":3}").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         let r = cl.call("{\"cmd\":\"nope\"}").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        svc.stop();
+    }
+
+    #[test]
+    fn classify_batch_roundtrip_matches_single() {
+        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let traces: Vec<_> = (0..4)
+            .map(|i| {
+                crate::ecg::gen::generate_trace(90 + i as u64, i % 2 == 0, 1.0)
+            })
+            .collect();
+        // Noise is off: sequential predictions are the parity reference.
+        let mut want = Vec::new();
+        for t in &traces {
+            let r = cl.classify(t).unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+            want.push(r.get("pred").and_then(|p| p.as_f64()).unwrap());
+        }
+        let reply = cl.classify_batch(&traces).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+        assert_eq!(reply.get("batch").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(reply.get("accepted").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(reply.get("shed").and_then(|v| v.as_usize()), Some(0));
+        let results = reply.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(results.len(), 4);
+        for (r, w) in results.iter().zip(&want) {
+            assert_eq!(r.get("pred").and_then(|p| p.as_f64()), Some(*w));
+        }
+        // Amortisation is visible on the wire: per-sample time well under
+        // the paper's 276 µs single-trace figure.
+        let per = reply
+            .get("time_us_per_sample")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(per < 200.0, "amortised per-sample time {per} µs");
+        svc.stop();
+    }
+
+    #[test]
+    fn classify_batch_partial_acceptance() {
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig { chips: 1, queue_depth: 3, ..Default::default() },
+            |chip| {
+                Ok(Engine::native(
+                    crate::nn::weights::TrainedModel::synthetic(7),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let traces: Vec<_> = (0..5)
+            .map(|i| {
+                crate::ecg::gen::generate_trace(70 + i as u64, i % 2 == 1, 1.0)
+            })
+            .collect();
+        let reply = cl.classify_batch(&traces).unwrap();
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+        assert_eq!(reply.get("batch").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(reply.get("accepted").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(reply.get("shed").and_then(|v| v.as_usize()), Some(2));
+        assert!(
+            reply
+                .get("retry_after_us")
+                .and_then(|v| v.as_f64())
+                .unwrap()
+                > 0.0,
+            "partial acceptance must carry a retry hint: {reply}"
+        );
+        assert_eq!(
+            reply.get("results").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(3)
+        );
+        // The shed suffix is retriable once the queue drained (the reply
+        // above only arrives after the admitted prefix completed).
+        let retry = cl.classify_batch(&traces[3..]).unwrap();
+        assert_eq!(retry.get("ok"), Some(&Json::Bool(true)), "{retry}");
+        assert_eq!(retry.get("accepted").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(retry.get("shed").and_then(|v| v.as_usize()), Some(0));
         svc.stop();
     }
 

@@ -110,16 +110,29 @@ impl ChipHealth {
     }
 
     /// Called by the scheduler when a job is admitted (before enqueue).
+    /// Admission is accounted in **samples**: a batch of B counts B.
     pub fn begin_job(&self) {
-        self.inflight.fetch_add(1, Ordering::AcqRel);
+        self.begin_jobs(1);
+    }
+
+    /// Batch admission: `samples` inflight slots at once.
+    pub fn begin_jobs(&self, samples: usize) {
+        self.inflight.fetch_add(samples, Ordering::AcqRel);
     }
 
     /// Worker: job finished successfully.  A success on an unhealthy chip
     /// re-admits it (the probe path).
     pub fn record_success(&self, sim_time_ns: u64) {
-        self.inflight.fetch_sub(1, Ordering::AcqRel);
-        self.served.fetch_add(1, Ordering::Relaxed);
-        self.sim_time_ns_sum.fetch_add(sim_time_ns, Ordering::Relaxed);
+        self.record_batch_success(1, sim_time_ns);
+    }
+
+    /// Worker: a batch of `samples` finished successfully;
+    /// `sim_time_ns_total` is the summed per-sample simulated time.
+    pub fn record_batch_success(&self, samples: usize, sim_time_ns_total: u64) {
+        self.inflight.fetch_sub(samples, Ordering::AcqRel);
+        self.served.fetch_add(samples as u64, Ordering::Relaxed);
+        self.sim_time_ns_sum
+            .fetch_add(sim_time_ns_total, Ordering::Relaxed);
         self.consecutive_errors.store(0, Ordering::Release);
         // Dead stays dead; Unhealthy recovers.
         let _ = self.state.compare_exchange(
@@ -133,7 +146,14 @@ impl ChipHealth {
     /// Worker: job failed.  Crossing the consecutive-error threshold marks
     /// the chip unhealthy (drain + probe-only).
     pub fn record_error(&self, msg: &str) {
-        self.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.record_batch_error(1, msg);
+    }
+
+    /// Worker: a batch of `samples` failed as one engine call — the
+    /// inflight slots drain, but it counts as *one* error event toward
+    /// the consecutive-error threshold.
+    pub fn record_batch_error(&self, samples: usize, msg: &str) {
+        self.inflight.fetch_sub(samples, Ordering::AcqRel);
         self.errors.fetch_add(1, Ordering::Relaxed);
         let consec = self.consecutive_errors.fetch_add(1, Ordering::AcqRel) + 1;
         *self.last_error.lock().unwrap() = Some(msg.to_string());
@@ -220,6 +240,24 @@ mod tests {
         h.begin_job();
         h.record_success(1);
         assert_eq!(h.state(), ChipState::Dead, "success cannot resurrect");
+    }
+
+    #[test]
+    fn batch_accounting_in_samples() {
+        let h = ChipHealth::new(3);
+        h.begin_jobs(5);
+        assert_eq!(h.inflight(), 5);
+        h.record_batch_success(5, 5 * 100_000);
+        let s = h.snapshot();
+        assert_eq!(s.inflight, 0);
+        assert_eq!(s.served, 5);
+        assert!((s.mean_sim_time_us - 100.0).abs() < 1e-9);
+        // A failed batch drains its slots but is one error event.
+        h.begin_jobs(4);
+        h.record_batch_error(4, "boom");
+        assert_eq!(h.inflight(), 0);
+        assert_eq!(h.snapshot().errors, 1);
+        assert!(h.is_dispatchable(), "one batch failure is one strike");
     }
 
     #[test]

@@ -6,14 +6,18 @@
 //! *out* — the way hxtorch partitions larger networks across multiple
 //! BrainScaleS-2 substrates — by running N independent engine replicas,
 //! each a faithful single-unit simulation with its own worker thread,
-//! noise seed, and calibration state.  Per-inference semantics (timing,
+//! noise seed, and calibration state.  Single-trace semantics (timing,
 //! energy, accuracy accounting) stay bit-identical to the paper; only
-//! aggregate throughput changes.
+//! aggregate throughput changes.  Batched requests (`classify_batch`)
+//! keep per-sample *predictions* bit-identical while amortising timing
+//! and energy over the batch (DESIGN.md §9).
 //!
 //! * [`pool`] — replica lifecycle: worker threads, engine construction
 //!   via builder closures (PJRT handles are not `Send`), drain/join.
 //! * [`scheduler`] — least-loaded admission with a bounded per-chip
-//!   queue and explicit shed (backpressure) responses.
+//!   queue (accounted in samples: a classify_batch of B occupies B
+//!   slots, and a batch that only partially fits is partially admitted)
+//!   and explicit shed (backpressure) responses.
 //! * [`health`] — per-chip served/error/latency counters and the
 //!   unhealthy → drain → re-admit state machine.
 //! * [`telemetry`] — fleet-wide latency histogram (p50/p95/p99) and
@@ -28,7 +32,10 @@ pub mod scheduler;
 pub mod telemetry;
 
 pub use health::{ChipHealth, ChipHealthSnapshot, ChipState};
-pub use pool::{ChipId, ChipReply, DispatchOutcome, Fleet, FleetConfig};
+pub use pool::{
+    BatchDispatchOutcome, ChipId, ChipReply, DispatchOutcome, Fleet,
+    FleetConfig,
+};
 pub use scheduler::ShedReason;
 pub use telemetry::{FleetTelemetry, LatencyHistogram, TelemetrySnapshot};
 

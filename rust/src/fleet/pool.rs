@@ -29,7 +29,8 @@ pub type ChipId = usize;
 pub struct FleetConfig {
     /// Number of engine replicas (simulated mobile units).
     pub chips: usize,
-    /// Per-chip admission bound (queued + executing) before shedding.
+    /// Per-chip admission bound in **samples** (queued + executing)
+    /// before shedding — a batch of B occupies B slots.
     pub queue_depth: usize,
     /// Consecutive engine errors before a chip is marked unhealthy.
     pub error_threshold: u32,
@@ -55,27 +56,46 @@ impl FleetConfig {
     }
 }
 
-/// One classification job for a chip worker.
+/// One classification job for a chip worker: a batch of ≥ 1 traces the
+/// engine executes as one program (`Engine::classify_batch`, one weight
+/// reconfiguration per layer per batch).
 struct ChipJob {
-    trace: Trace,
+    traces: Vec<Trace>,
     admitted: Instant,
     resp: mpsc::Sender<ChipReply>,
 }
 
-/// Worker's answer to one job.
+/// Worker's answer to one job: one `Inference` per admitted sample.
 #[derive(Debug)]
 pub struct ChipReply {
     pub chip: ChipId,
     /// Host latency from admission to completion [µs].
     pub host_latency_us: f64,
-    pub result: Result<Inference, String>,
+    pub result: Result<Vec<Inference>, String>,
 }
 
-/// Outcome of an admission attempt.
+/// Outcome of a single-trace admission attempt.
 pub enum DispatchOutcome {
     /// Admitted: the reply arrives on `resp`.
     Enqueued { chip: ChipId, resp: mpsc::Receiver<ChipReply> },
     /// Backpressure: not admitted; retry after roughly `retry_after_us`.
+    Shed { reason: ShedReason, retry_after_us: u64 },
+}
+
+/// Outcome of a batch admission attempt.  Admission is accounted in
+/// samples, so a batch can be *partially* accepted: the fitting prefix is
+/// enqueued and the remainder reported back for the client to retry.
+pub enum BatchDispatchOutcome {
+    Enqueued {
+        chip: ChipId,
+        /// Samples admitted (a prefix of the submitted batch).
+        accepted: usize,
+        /// Samples shed (the suffix), to be retried by the caller.
+        rejected: usize,
+        resp: mpsc::Receiver<ChipReply>,
+        /// Retry hint for the rejected remainder (0 when none).
+        retry_after_us: u64,
+    },
     Shed { reason: ShedReason, retry_after_us: u64 },
 }
 
@@ -174,23 +194,47 @@ impl Fleet {
     /// Admit one trace, or shed it.  Non-blocking: the reply arrives on
     /// the returned receiver.
     pub fn dispatch(&self, trace: Trace) -> DispatchOutcome {
-        let mut trace = Some(trace);
+        match self.dispatch_batch(vec![trace]) {
+            BatchDispatchOutcome::Enqueued { chip, resp, .. } => {
+                DispatchOutcome::Enqueued { chip, resp }
+            }
+            BatchDispatchOutcome::Shed { reason, retry_after_us } => {
+                DispatchOutcome::Shed { reason, retry_after_us }
+            }
+        }
+    }
+
+    /// Admit a batch of traces — possibly only a prefix of it (admission
+    /// is bounded in samples; see [`BatchDispatchOutcome`]).  Non-blocking.
+    pub fn dispatch_batch(&self, mut traces: Vec<Trace>) -> BatchDispatchOutcome {
+        // An empty batch is a caller bug; never let it reach a worker
+        // (it would error in the engine and charge the healthy chip an
+        // error strike).  Report it as a zero-accepted shed instead.
+        debug_assert!(!traces.is_empty(), "dispatch_batch needs ≥ 1 trace");
+        if traces.is_empty() {
+            return BatchDispatchOutcome::Shed {
+                reason: ShedReason::Saturated,
+                retry_after_us: 0,
+            };
+        }
         // A dead worker channel is discovered lazily; retry the pick at
         // most once per chip before giving up.
         for _ in 0..self.handles.len() {
-            let chip = match self.scheduler.pick(&self.health) {
-                Ok(c) => c,
-                Err(reason) => {
-                    return DispatchOutcome::Shed {
-                        reason,
-                        retry_after_us: self.retry_hint_us(),
-                    };
-                }
-            };
+            let (chip, accepted) =
+                match self.scheduler.pick_batch(&self.health, traces.len()) {
+                    Ok(pick) => pick,
+                    Err(reason) => {
+                        return BatchDispatchOutcome::Shed {
+                            reason,
+                            retry_after_us: self.retry_hint_us(),
+                        };
+                    }
+                };
+            let rest = traces.split_off(accepted.min(traces.len()));
             let (rtx, rrx) = mpsc::channel();
-            self.health[chip].begin_job();
+            self.health[chip].begin_jobs(traces.len());
             let job = ChipJob {
-                trace: trace.take().expect("trace is reclaimed on every retry"),
+                traces,
                 admitted: Instant::now(),
                 resp: rtx,
             };
@@ -202,18 +246,30 @@ impl Fleet {
                 }
             };
             match send_result {
-                Ok(()) => return DispatchOutcome::Enqueued { chip, resp: rrx },
+                Ok(()) => {
+                    let retry_after_us =
+                        if rest.is_empty() { 0 } else { self.retry_hint_us() };
+                    return BatchDispatchOutcome::Enqueued {
+                        chip,
+                        accepted,
+                        rejected: rest.len(),
+                        resp: rrx,
+                        retry_after_us,
+                    };
+                }
                 Err(job) => {
-                    // Worker gone: reclaim the trace, mark the chip dead,
-                    // and try the next candidate.
-                    trace = Some(job.trace);
-                    self.health[chip].record_error("worker channel closed");
+                    // Worker gone: reclaim the whole batch, mark the chip
+                    // dead, and try the next candidate.
+                    self.health[chip]
+                        .record_batch_error(job.traces.len(), "worker channel closed");
                     self.health[chip].mark_dead("worker channel closed");
+                    traces = job.traces;
+                    traces.extend(rest);
                 }
             }
         }
         self.transport_rejects.fetch_add(1, Ordering::Relaxed);
-        DispatchOutcome::Shed {
+        BatchDispatchOutcome::Shed {
             reason: ShedReason::NoHealthyChips,
             retry_after_us: self.retry_hint_us(),
         }
@@ -233,8 +289,37 @@ impl Fleet {
                 let reply = resp
                     .recv()
                     .map_err(|_| anyhow::anyhow!("chip {chip} worker gone"))?;
-                let inf = reply.result.map_err(|e| anyhow::anyhow!(e))?;
+                let infs = reply.result.map_err(|e| anyhow::anyhow!(e))?;
+                let inf = infs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("empty reply"))?;
                 Ok((reply.chip, inf))
+            }
+        }
+    }
+
+    /// Blocking batch convenience: admit (possibly partially), wait,
+    /// unwrap.  Returns the serving chip, one `Inference` per *admitted*
+    /// sample, and the rejected sample count (0 when fully admitted).
+    pub fn classify_batch_blocking(
+        &self,
+        traces: &[Trace],
+    ) -> anyhow::Result<(ChipId, Vec<Inference>, usize)> {
+        anyhow::ensure!(!traces.is_empty(), "empty batch");
+        match self.dispatch_batch(traces.to_vec()) {
+            BatchDispatchOutcome::Shed { reason, retry_after_us } => {
+                anyhow::bail!(
+                    "batch shed: {} (retry in ~{retry_after_us} µs)",
+                    reason.as_str()
+                )
+            }
+            BatchDispatchOutcome::Enqueued { chip, rejected, resp, .. } => {
+                let reply = resp
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("chip {chip} worker gone"))?;
+                let infs = reply.result.map_err(|e| anyhow::anyhow!(e))?;
+                Ok((reply.chip, infs, rejected))
             }
         }
     }
@@ -360,7 +445,7 @@ fn chip_worker<F>(
             drop(ack);
             // Drain with error replies so racing clients never hang.
             while let Ok(job) = rx.recv() {
-                health.record_error("engine init failed");
+                health.record_batch_error(job.traces.len(), "engine init failed");
                 let _ = job.resp.send(ChipReply {
                     chip,
                     host_latency_us: job.admitted.elapsed().as_secs_f64() * 1e6,
@@ -372,18 +457,26 @@ fn chip_worker<F>(
     };
 
     while let Ok(job) = rx.recv() {
-        let ChipJob { trace, admitted, resp } = job;
-        let result = match engine.classify(&trace) {
-            Ok(inf) => {
-                let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
+        let ChipJob { traces, admitted, resp } = job;
+        let samples = traces.len();
+        // One engine program per job: a 1-batch is bit-identical to the
+        // legacy single-trace path, larger batches amortise weight
+        // reconfiguration (Engine::classify_batch).
+        let result = match engine.classify_batch(&traces) {
+            Ok(infs) => {
                 let host_us = admitted.elapsed().as_secs_f64() * 1e6;
-                health.record_success(sim_ns);
-                telemetry.record(chip, host_us, sim_ns);
-                Ok(inf)
+                let mut total_sim_ns = 0u64;
+                for inf in &infs {
+                    let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
+                    total_sim_ns += sim_ns;
+                    telemetry.record(chip, host_us, sim_ns);
+                }
+                health.record_batch_success(samples, total_sim_ns);
+                Ok(infs)
             }
             Err(e) => {
                 let msg = e.to_string();
-                health.record_error(&msg);
+                health.record_batch_error(samples, &msg);
                 Err(format!("chip {chip}: {msg}"))
             }
         };

@@ -1,13 +1,17 @@
 //! Least-loaded dispatch with bounded admission and explicit backpressure.
 //!
-//! Admission policy per request:
-//! 1. Among *healthy* chips, pick the one with the fewest inflight jobs
-//!    (queued + executing).  Ties rotate round-robin with the admission
-//!    counter so equal-load replicas share work deterministically.
+//! Admission policy per request (queue depth and load are accounted in
+//! **samples** — a classify_batch of B counts as B):
+//! 1. Among *healthy* chips, pick the one with the fewest inflight
+//!    samples (queued + executing).  Ties rotate round-robin with the
+//!    admission counter so equal-load replicas share work
+//!    deterministically.
 //! 2. If the least-loaded healthy chip already holds `queue_depth`
-//!    inflight jobs, the request is **shed** (`ShedReason::Saturated`)
+//!    inflight samples, the request is **shed** (`ShedReason::Saturated`)
 //!    instead of queueing unboundedly — the client gets an explicit
-//!    backpressure response it can retry against.
+//!    backpressure response it can retry against.  A batch that only
+//!    *partially* fits is partially admitted: the fitting prefix is
+//!    dispatched and the shed remainder reported back to the client.
 //! 3. Every `probe_period`-th admission is offered to an *unhealthy*
 //!    (draining) chip first: one real request probes it, and a success
 //!    re-admits the chip (see `fleet::health`).
@@ -67,17 +71,35 @@ impl Scheduler {
     /// Pick a chip for one request, or decide to shed it.  The caller must
     /// `begin_job()` on the returned chip's health before enqueueing.
     pub fn pick(&self, chips: &[std::sync::Arc<ChipHealth>]) -> Result<usize, ShedReason> {
+        self.pick_batch(chips, 1).map(|(chip, _)| chip)
+    }
+
+    /// Pick a chip for a batch of `samples`.  Queue depth is accounted in
+    /// **samples**, not requests: a batch that only partially fits the
+    /// least-loaded chip's remaining depth is *partially* admitted — the
+    /// returned count is the prefix that fits (always ≥ 1) and the caller
+    /// sheds or retries the remainder.  The caller must `begin_jobs(n)`
+    /// on the returned chip's health before enqueueing.
+    pub fn pick_batch(
+        &self,
+        chips: &[std::sync::Arc<ChipHealth>],
+        samples: usize,
+    ) -> Result<(usize, usize), ShedReason> {
+        let samples = samples.max(1);
         let tick = self.admissions.fetch_add(1, Ordering::Relaxed);
         let n = chips.len();
 
         // Re-admission probe: periodically offer one request to an idle
-        // draining chip so it can prove itself again.
+        // draining chip so it can prove itself again.  A probe admits a
+        // single sample regardless of the batch size — the blast radius
+        // of a still-broken chip must stay one sample, not one batch
+        // (the caller partially sheds the rest).
         if tick % self.probe_period == self.probe_period - 1 {
             if let Some(i) = (0..n)
                 .map(|k| ((tick as usize) + k) % n)
                 .find(|&i| chips[i].is_probeable() && chips[i].inflight() == 0)
             {
-                return Ok(i);
+                return Ok((i, 1));
             }
         }
 
@@ -93,7 +115,9 @@ impl Scheduler {
             }
         }
         match best {
-            Some((load, i)) if load < self.queue_depth => Ok(i),
+            Some((load, i)) if load < self.queue_depth => {
+                Ok((i, samples.min(self.queue_depth - load)))
+            }
             Some(_) => {
                 self.shed.fetch_add(1, Ordering::Relaxed);
                 Err(ShedReason::Saturated)
@@ -156,6 +180,24 @@ mod tests {
         // A completion frees a slot.
         cs[1].record_success(1);
         assert_eq!(s.pick(&cs), Ok(1));
+    }
+
+    #[test]
+    fn batch_admission_is_sample_accounted() {
+        let cs = chips(1);
+        let s = Scheduler::new(8, 1_000_000);
+        // Empty chip: a batch of 5 fits whole.
+        assert_eq!(s.pick_batch(&cs, 5), Ok((0, 5)));
+        cs[0].begin_jobs(5);
+        // 3 slots left: a batch of 6 is partially admitted.
+        assert_eq!(s.pick_batch(&cs, 6), Ok((0, 3)));
+        cs[0].begin_jobs(3);
+        // Full: shed, even for a 1-sample batch.
+        assert_eq!(s.pick_batch(&cs, 2), Err(ShedReason::Saturated));
+        assert_eq!(s.pick_batch(&cs, 1), Err(ShedReason::Saturated));
+        // Draining four samples frees four slots.
+        cs[0].record_batch_success(4, 4);
+        assert_eq!(s.pick_batch(&cs, 8), Ok((0, 4)));
     }
 
     #[test]

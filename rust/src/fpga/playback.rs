@@ -22,6 +22,23 @@ pub enum PlaybackCmd {
     Sync(u32),
 }
 
+/// A compiled program handed an entry that precedes the buffer tail.
+///
+/// This is a *typed* error, not a panic: the playback buffer runs inside
+/// an engine worker thread, and a panic there would take the whole chip
+/// worker down.  Returning the error lets the caller surface it as an
+/// engine failure, which the fleet health machine counts toward marking
+/// the chip unhealthy/faulted instead of crashing the replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error(
+    "playback entry at {release_ns} ns precedes the buffer tail at \
+     {tail_ns} ns (compiled program out of order)"
+)]
+pub struct OutOfOrderEntry {
+    pub release_ns: u64,
+    pub tail_ns: u64,
+}
+
 #[derive(Debug, Default)]
 pub struct PlaybackBuffer {
     queue: VecDeque<(u64, PlaybackCmd)>,
@@ -29,12 +46,24 @@ pub struct PlaybackBuffer {
 }
 
 impl PlaybackBuffer {
-    pub fn push(&mut self, release_ns: u64, cmd: PlaybackCmd) {
-        // Entries must be time-sorted; the compiler emits them in order.
+    /// Append a command; entries must be time-sorted (the compiler emits
+    /// them in order).  An out-of-order entry is rejected — the buffer is
+    /// left untouched so the chip can be drained/faulted cleanly.
+    pub fn push(
+        &mut self,
+        release_ns: u64,
+        cmd: PlaybackCmd,
+    ) -> Result<(), OutOfOrderEntry> {
         if let Some(&(last, _)) = self.queue.back() {
-            assert!(release_ns >= last, "playback entries must be ordered");
+            if release_ns < last {
+                return Err(OutOfOrderEntry {
+                    release_ns,
+                    tail_ns: last,
+                });
+            }
         }
         self.queue.push_back((release_ns, cmd));
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -150,9 +179,9 @@ mod tests {
     #[test]
     fn playback_releases_in_time_order() {
         let mut pb = PlaybackBuffer::default();
-        pb.push(10, PlaybackCmd::Event(Event::new(1, 1)));
-        pb.push(20, PlaybackCmd::Event(Event::new(2, 2)));
-        pb.push(30, PlaybackCmd::Sync(0));
+        pb.push(10, PlaybackCmd::Event(Event::new(1, 1))).unwrap();
+        pb.push(20, PlaybackCmd::Event(Event::new(2, 2))).unwrap();
+        pb.push(30, PlaybackCmd::Sync(0)).unwrap();
         assert_eq!(pb.due(5).len(), 0);
         assert_eq!(pb.due(20).len(), 2);
         assert_eq!(pb.due(100).len(), 1);
@@ -161,11 +190,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "ordered")]
-    fn playback_rejects_unordered() {
+    fn playback_rejects_unordered_without_panicking() {
         let mut pb = PlaybackBuffer::default();
-        pb.push(20, PlaybackCmd::Sync(0));
-        pb.push(10, PlaybackCmd::Sync(1));
+        pb.push(20, PlaybackCmd::Sync(0)).unwrap();
+        let err = pb.push(10, PlaybackCmd::Sync(1)).unwrap_err();
+        assert_eq!(err, OutOfOrderEntry { release_ns: 10, tail_ns: 20 });
+        assert!(err.to_string().contains("out of order"), "{err}");
+        // The buffer is untouched: the ordered entry is still replayable.
+        assert_eq!(pb.len(), 1);
+        assert_eq!(pb.due(100).len(), 1);
+        // Equal timestamps remain legal (back-to-back commands).
+        pb.push(40, PlaybackCmd::Sync(2)).unwrap();
+        pb.push(40, PlaybackCmd::Sync(3)).unwrap();
+        assert_eq!(pb.due(40).len(), 2);
     }
 
     #[test]

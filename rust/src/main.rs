@@ -63,7 +63,7 @@ COMMANDS:
   fig8         pretty-print the training curve
   throughput   Eq. 1-3: peak/effective rates, area efficiency
   baselines    §V energy comparison vs published platforms
-  classify     classify synthetic traces   (--n 10 --native)
+  classify     classify synthetic traces   (--n 10 --native --batch 8)
   serve        experiment service          (--addr 127.0.0.1:7001 --native
                                             --chips 4 --queue-depth 32)
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
@@ -72,8 +72,11 @@ OPTIONS (common):
   --artifacts DIR   artifact directory (default: ./artifacts or $BSS2_ARTIFACTS)
   --native          use the in-process array model instead of PJRT
   --noise-off       disable temporal analog noise (ablation)
+  --batch B         classify: samples per batched program (amortises the
+                    per-layer weight reconfiguration; default 1)
   --chips N         serve: fleet of N engine replicas (default 1)
-  --queue-depth M   serve: per-chip admission bound before shedding
+  --queue-depth M   serve: per-chip admission bound in samples before
+                    shedding (classify_batch requests count per sample)
 ";
 
 fn env_logger_init() {
@@ -358,28 +361,39 @@ fn baselines_cmd(args: &Args) -> anyhow::Result<()> {
 
 fn classify(args: &Args) -> anyhow::Result<()> {
     let n = args.usize_or("n", 10)?;
+    let batch = args.usize_or("batch", 1)?.max(1);
     let mut engine = make_engine(args)?;
-    let mut correct = 0;
-    for (i, trace) in TraceStream::new(args.u64_or("seed", 1)?, 1.0)
+    let traces: Vec<_> = TraceStream::new(args.u64_or("seed", 1)?, 1.0)
         .take(n)
-        .enumerate()
-    {
-        let inf = engine.classify(&trace)?;
-        let ok = inf.pred == trace.label;
-        correct += ok as usize;
-        println!(
-            "trace {i:3}  label={} pred={} scores=[{:+6.1} {:+6.1}]  \
-             {:.0} µs  {:.2} mJ  {}",
-            trace.label,
-            inf.pred,
-            inf.scores[0],
-            inf.scores[1],
-            inf.sim_time_s * 1e6,
-            inf.energy.total_j() * 1e3,
-            if ok { "ok" } else { "MISS" }
-        );
+        .collect();
+    let mut correct = 0;
+    let mut idx = 0usize;
+    for chunk in traces.chunks(batch) {
+        // One batched program per chunk: weight reconfiguration and the
+        // control overhead amortise over `batch` samples; a batch of 1 is
+        // the paper's 276 µs single-trace path.
+        let infs = engine.classify_batch(chunk)?;
+        for (trace, inf) in chunk.iter().zip(&infs) {
+            let ok = inf.pred == trace.label;
+            correct += ok as usize;
+            println!(
+                "trace {idx:3}  label={} pred={} scores=[{:+6.1} {:+6.1}]  \
+                 {:.0} µs  {:.2} mJ  {}",
+                trace.label,
+                inf.pred,
+                inf.scores[0],
+                inf.scores[1],
+                inf.sim_time_s * 1e6,
+                inf.energy.total_j() * 1e3,
+                if ok { "ok" } else { "MISS" }
+            );
+            idx += 1;
+        }
     }
-    println!("[classify] {correct}/{n} correct");
+    println!(
+        "[classify] {correct}/{} correct (batch size {batch})",
+        traces.len()
+    );
     Ok(())
 }
 
@@ -398,8 +412,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     )?;
     println!(
         "[serve] experiment service on {} — fleet of {} chip{} \
-         (queue depth {}/chip; line-delimited JSON; {{\"cmd\":\"ping\"}} / \
-         classify / stats / fleet_stats / shutdown)",
+         (queue depth {} samples/chip; line-delimited JSON; \
+         {{\"cmd\":\"ping\"}} / classify / classify_batch / stats / \
+         fleet_stats / shutdown)",
         svc.addr,
         svc.fleet.size(),
         if svc.fleet.size() == 1 { "" } else { "s" },

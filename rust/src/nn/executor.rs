@@ -28,8 +28,33 @@ pub trait PassRunner {
         scale: f32,
     ) -> anyhow::Result<Vec<i16>>;
 
+    /// Batched variant of [`run_tile`](PassRunner::run_tile): integrate
+    /// every activation vector in `xs` against the *same* weight tile.
+    /// Backends override this to write the tile once and loop only the
+    /// integration (the hxtorch batching lever); the default degrades to
+    /// one reconfiguration per sample, so results are bit-identical
+    /// either way.
+    fn run_tile_batch(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        xs: &[Vec<u8>],
+        scale: f32,
+    ) -> anyhow::Result<Vec<Vec<i16>>> {
+        xs.iter()
+            .map(|x| self.run_tile(w_tile, in_len, out_len, x, scale))
+            .collect()
+    }
+
     /// Integration cycles executed so far (for cost accounting).
     fn passes(&self) -> usize;
+
+    /// Weight reconfigurations (tile writes) so far.  Backends that do
+    /// not track reconfiguration pay one write per pass.
+    fn weight_loads(&self) -> usize {
+        self.passes()
+    }
 }
 
 /// Native-model runner: loads each tile into an analog array half and
@@ -37,6 +62,7 @@ pub trait PassRunner {
 pub struct NativeRunner {
     array: AnalogArray,
     passes: usize,
+    weight_loads: usize,
     pub noise: Vec<f32>,
 }
 
@@ -55,8 +81,48 @@ impl NativeRunner {
                 ColumnCalib::nominal(c::N_COLS),
             ),
             passes: 0,
+            weight_loads: 0,
             noise: vec![0.0; c::N_COLS],
         }
+    }
+
+    /// Pack a logical tile into the physical array (zero-padded) and
+    /// write it — one weight reconfiguration.
+    fn load_tile(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!((1..=c::K_LOGICAL).contains(&in_len));
+        anyhow::ensure!((1..=c::N_COLS).contains(&out_len));
+        anyhow::ensure!(w_tile.len() == in_len * out_len);
+        let mut w_phys = vec![0i8; c::K_LOGICAL * c::N_COLS];
+        for (r, w_row) in w_tile.chunks_exact(out_len).enumerate() {
+            for (col, &w) in w_row.iter().enumerate() {
+                w_phys[r * c::N_COLS + col] =
+                    (w as i32).clamp(-c::W_MAX, c::W_MAX) as i8;
+            }
+        }
+        self.array.load_weights(&w_phys);
+        self.weight_loads += 1;
+        Ok(())
+    }
+
+    /// One integration of the currently loaded tile.
+    fn integrate_loaded(
+        &mut self,
+        in_len: usize,
+        out_len: usize,
+        x: &[u8],
+        scale: f32,
+    ) -> anyhow::Result<Vec<i16>> {
+        anyhow::ensure!(x.len() == in_len);
+        let mut x_phys = vec![0u8; c::K_LOGICAL];
+        x_phys[..in_len].copy_from_slice(x);
+        let out = self.array.integrate(&x_phys, scale, &self.noise, false);
+        self.passes += 1;
+        Ok(out[..out_len].to_vec())
     }
 }
 
@@ -69,28 +135,31 @@ impl PassRunner for NativeRunner {
         x: &[u8],
         scale: f32,
     ) -> anyhow::Result<Vec<i16>> {
-        anyhow::ensure!(in_len <= c::K_LOGICAL && out_len <= c::N_COLS);
-        anyhow::ensure!(w_tile.len() == in_len * out_len);
-        anyhow::ensure!(x.len() == in_len);
-        // Pack the tile into the physical array (zero-padded).
-        let mut w_phys = vec![0i8; c::K_LOGICAL * c::N_COLS];
-        for r in 0..in_len {
-            for col in 0..out_len {
-                w_phys[r * c::N_COLS + col] =
-                    (w_tile[r * out_len + col] as i32)
-                        .clamp(-c::W_MAX, c::W_MAX) as i8;
-            }
-        }
-        self.array.load_weights(&w_phys);
-        let mut x_phys = vec![0u8; c::K_LOGICAL];
-        x_phys[..in_len].copy_from_slice(x);
-        let out = self.array.integrate(&x_phys, scale, &self.noise, false);
-        self.passes += 1;
-        Ok(out[..out_len].to_vec())
+        self.load_tile(w_tile, in_len, out_len)?;
+        self.integrate_loaded(in_len, out_len, x, scale)
+    }
+
+    /// One weight write, `xs.len()` integrations.
+    fn run_tile_batch(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        xs: &[Vec<u8>],
+        scale: f32,
+    ) -> anyhow::Result<Vec<Vec<i16>>> {
+        self.load_tile(w_tile, in_len, out_len)?;
+        xs.iter()
+            .map(|x| self.integrate_loaded(in_len, out_len, x, scale))
+            .collect()
     }
 
     fn passes(&self) -> usize {
         self.passes
+    }
+
+    fn weight_loads(&self) -> usize {
+        self.weight_loads
     }
 }
 
@@ -104,6 +173,29 @@ pub struct LayerSpec {
     pub scale: f32,
     /// Apply ReLU + >>RELU_SHIFT requantisation after this layer.
     pub relu_requant: bool,
+}
+
+/// Slice one chunk's weight tile out of a layer's row-major matrix.
+fn slice_tile(layer: &LayerSpec, chunk: &super::partition::Chunk) -> Vec<f32> {
+    let ol = chunk.out_len();
+    let mut tile = vec![0.0f32; chunk.in_len() * ol];
+    for (ri, r) in (chunk.in_start..chunk.in_end).enumerate() {
+        for (ci, col) in (chunk.out_start..chunk.out_end).enumerate() {
+            tile[ri * ol + ci] = layer.weights[r * layer.out_dim + col];
+        }
+    }
+    tile
+}
+
+/// The digital inter-layer requantisation (SIMD-CPU semantics).
+fn requantise(layer: &LayerSpec, raw: &[i32]) -> Vec<u8> {
+    if layer.relu_requant {
+        raw.iter()
+            .map(|&v| ((v.max(0) >> c::RELU_SHIFT).min(c::X_MAX)) as u8)
+            .collect()
+    } else {
+        raw.iter().map(|&v| v.clamp(0, c::X_MAX) as u8).collect()
+    }
 }
 
 /// Execute one layer's plan: chunks -> tiles -> digital partial sums.
@@ -122,18 +214,11 @@ pub fn run_layer<R: PassRunner>(
     );
     let mut out = vec![0i32; layer.out_dim];
     for chunk in &plan.chunks {
-        // Slice the weight tile of this chunk.
-        let (il, ol) = (chunk.in_len(), chunk.out_len());
-        let mut tile = vec![0.0f32; il * ol];
-        for (ri, r) in (chunk.in_start..chunk.in_end).enumerate() {
-            for (ci, col) in (chunk.out_start..chunk.out_end).enumerate() {
-                tile[ri * ol + ci] = layer.weights[r * layer.out_dim + col];
-            }
-        }
+        let tile = slice_tile(layer, chunk);
         let adc = runner.run_tile(
             &tile,
-            il,
-            ol,
+            chunk.in_len(),
+            chunk.out_len(),
             &x[chunk.in_start..chunk.in_end],
             layer.scale,
         )?;
@@ -144,32 +229,127 @@ pub fn run_layer<R: PassRunner>(
     Ok(out)
 }
 
+/// Batched layer execution: every chunk's weight tile is sliced and
+/// written **once** and integrated against all `xs.len()` activation
+/// vectors (`run_layer` re-sliced and re-wrote it per sample).  Per-sample
+/// results are bit-identical to `run_layer`.
+pub fn run_layer_batch<R: PassRunner>(
+    runner: &mut R,
+    layer: &LayerSpec,
+    plan: &Plan,
+    xs: &[Vec<u8>],
+) -> anyhow::Result<Vec<Vec<i32>>> {
+    anyhow::ensure!(!xs.is_empty(), "empty batch");
+    anyhow::ensure!(
+        plan.in_dim == layer.in_dim && plan.out_dim == layer.out_dim,
+        "plan/layer mismatch"
+    );
+    for x in xs {
+        anyhow::ensure!(x.len() == layer.in_dim, "input dim");
+    }
+    let mut out = vec![vec![0i32; layer.out_dim]; xs.len()];
+    for chunk in &plan.chunks {
+        let tile = slice_tile(layer, chunk);
+        let slices: Vec<Vec<u8>> = xs
+            .iter()
+            .map(|x| x[chunk.in_start..chunk.in_end].to_vec())
+            .collect();
+        let adcs = runner.run_tile_batch(
+            &tile,
+            chunk.in_len(),
+            chunk.out_len(),
+            &slices,
+            layer.scale,
+        )?;
+        anyhow::ensure!(adcs.len() == xs.len(), "runner batch shape");
+        for (sample, adc) in out.iter_mut().zip(&adcs) {
+            for (ci, &v) in adc.iter().enumerate() {
+                sample[chunk.out_start + ci] += v as i32;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Per-layer execution plans of a model, partitioned **once** and reused
+/// across samples and batches (`run_model` used to re-partition every
+/// layer on every call — once per sample under serving load).
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    plans: Vec<Plan>,
+}
+
+impl ModelPlan {
+    pub fn of(layers: &[LayerSpec]) -> anyhow::Result<ModelPlan> {
+        anyhow::ensure!(!layers.is_empty(), "empty model");
+        let plans: Vec<Plan> = layers
+            .iter()
+            .map(|l| partition(l.in_dim, l.out_dim, c::N_HALVES))
+            .collect();
+        for plan in &plans {
+            plan.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+        }
+        Ok(ModelPlan { plans })
+    }
+
+    pub fn plans(&self) -> &[Plan] {
+        &self.plans
+    }
+
+    /// Integration cycles per sample.
+    pub fn passes_per_sample(&self) -> usize {
+        self.plans.iter().map(|p| p.passes()).sum()
+    }
+}
+
 /// Execute a stack of layers end to end (5-bit activations between layers).
 pub fn run_model<R: PassRunner>(
     runner: &mut R,
     layers: &[LayerSpec],
     input: &[u8],
 ) -> anyhow::Result<Vec<i32>> {
-    anyhow::ensure!(!layers.is_empty());
+    let plan = ModelPlan::of(layers)?;
+    run_model_planned(runner, layers, &plan, input)
+}
+
+/// `run_model` against a pre-computed [`ModelPlan`].
+pub fn run_model_planned<R: PassRunner>(
+    runner: &mut R,
+    layers: &[LayerSpec],
+    plan: &ModelPlan,
+    input: &[u8],
+) -> anyhow::Result<Vec<i32>> {
+    anyhow::ensure!(layers.len() == plan.plans.len(), "plan/model mismatch");
     let mut acts: Vec<u8> = input.to_vec();
     let mut last_raw: Vec<i32> = acts.iter().map(|&a| a as i32).collect();
-    for layer in layers {
-        let plan = partition(layer.in_dim, layer.out_dim, c::N_HALVES);
-        plan.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
-        let raw = run_layer(runner, layer, &plan, &acts)?;
-        if layer.relu_requant {
-            acts = raw
-                .iter()
-                .map(|&v| {
-                    ((v.max(0) >> c::RELU_SHIFT).min(c::X_MAX)) as u8
-                })
-                .collect();
-        } else {
-            acts = raw
-                .iter()
-                .map(|&v| v.clamp(0, c::X_MAX) as u8)
-                .collect();
-        }
+    for (layer, lplan) in layers.iter().zip(&plan.plans) {
+        let raw = run_layer(runner, layer, lplan, &acts)?;
+        acts = requantise(layer, &raw);
+        last_raw = raw;
+    }
+    Ok(last_raw)
+}
+
+/// Batched model execution: for every layer, each weight tile is written
+/// once per *batch* instead of once per sample.  Guarantee (property
+/// tested): `run_model_batch(..)[i]` is bit-identical to
+/// `run_model(.., inputs[i])` for every `i`.
+pub fn run_model_batch<R: PassRunner>(
+    runner: &mut R,
+    layers: &[LayerSpec],
+    plan: &ModelPlan,
+    inputs: &[Vec<u8>],
+) -> anyhow::Result<Vec<Vec<i32>>> {
+    anyhow::ensure!(!inputs.is_empty(), "empty batch");
+    anyhow::ensure!(layers.len() == plan.plans.len(), "plan/model mismatch");
+    let mut acts: Vec<Vec<u8>> = inputs.to_vec();
+    let mut last_raw: Vec<Vec<i32>> = acts
+        .iter()
+        .map(|a| a.iter().map(|&v| v as i32).collect())
+        .collect();
+    for (layer, lplan) in layers.iter().zip(&plan.plans) {
+        let raw = run_layer_batch(runner, layer, lplan, &acts)?;
+        acts = raw.iter().map(|r| requantise(layer, r)).collect();
         last_raw = raw;
     }
     Ok(last_raw)
@@ -184,6 +364,39 @@ pub fn cost_of(layers: &[(usize, usize)]) -> (usize, f64) {
         .sum();
     let time_us = passes as f64 * c::INTEGRATION_CYCLE_US;
     (passes, time_us)
+}
+
+/// Chip-time cost of classifying a batch of `batch` samples.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCost {
+    pub batch: usize,
+    /// Integration cycles over the whole batch.
+    pub passes: usize,
+    /// Weight reconfigurations over the whole batch (once per tile).
+    pub weight_loads: usize,
+    /// Total simulated chip time for the batch [µs].
+    pub total_us: f64,
+}
+
+impl BatchCost {
+    pub fn per_sample_us(&self) -> f64 {
+        self.total_us / self.batch as f64
+    }
+}
+
+/// Batched cost model: integration work scales with the batch, but each
+/// tile's weight write is paid once per batch — so per-sample cost
+/// decreases monotonically in `batch` toward the pure-integration floor.
+pub fn cost_of_batch(layers: &[(usize, usize)], batch: usize) -> BatchCost {
+    assert!(batch > 0, "batch must be positive");
+    let tiles: usize = layers
+        .iter()
+        .map(|&(i, o)| partition(i, o, c::N_HALVES).passes())
+        .sum();
+    let passes = tiles * batch;
+    let total_us = tiles as f64 * c::WEIGHT_WRITE_US
+        + passes as f64 * c::INTEGRATION_CYCLE_US;
+    BatchCost { batch, passes, weight_loads: tiles, total_us }
 }
 
 #[cfg(test)]
@@ -320,5 +533,86 @@ mod tests {
         let (p_huge, t_huge) = cost_of(&[(3000, 3000), (3000, 1000)]);
         assert!(p_huge > 100);
         assert!(t_huge > 500.0);
+    }
+
+    #[test]
+    fn batch_cost_amortises_weight_writes() {
+        let shapes = [(600usize, 300usize), (300, 10)];
+        let c1 = cost_of_batch(&shapes, 1);
+        // 600x300: 3x2 = 6 tiles; 300x10: 2 tiles.
+        assert_eq!(c1.weight_loads, 8);
+        assert_eq!(c1.passes, 8);
+        let mut prev = c1.per_sample_us();
+        for b in [2usize, 4, 8, 16, 32] {
+            let cb = cost_of_batch(&shapes, b);
+            assert_eq!(cb.weight_loads, 8, "loads are per batch, not sample");
+            assert_eq!(cb.passes, 8 * b, "integrations are per sample");
+            let per = cb.per_sample_us();
+            assert!(per < prev, "B={b}: {per} !< {prev}");
+            prev = per;
+        }
+        // The floor is the pure-integration cost.
+        let floor = 8.0 * c::INTEGRATION_CYCLE_US;
+        assert!(prev > floor);
+        assert!(prev - floor < 8.0 * c::WEIGHT_WRITE_US / 32.0 + 1e-9);
+    }
+
+    #[test]
+    fn native_runner_batch_loads_weights_once() {
+        let mut rng = SplitMix64::new(11);
+        let layer = rand_layer(&mut rng, 600, 300, false);
+        let plan = partition(600, 300, 2);
+        let xs: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..600).map(|_| rng.below(2) as u8).collect())
+            .collect();
+        let mut runner = NativeRunner::new();
+        let out = run_layer_batch(&mut runner, &layer, &plan, &xs).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(runner.passes(), 4 * plan.passes());
+        assert_eq!(runner.weight_loads(), plan.passes(), "one write per tile");
+    }
+
+    /// Acceptance property: `run_model_batch(B)[i] == run_model(sample_i)`
+    /// bit-for-bit, for random layer stacks and batch sizes.
+    #[test]
+    fn model_batch_matches_sequential_property() {
+        propcheck::check("run_model_batch_parity", 10, 0xBA7C4, |g| {
+            let mut rng = SplitMix64::new(g.rng.next_u64());
+            let d0 = g.usize_in(1, 400);
+            let d1 = g.usize_in(1, 300);
+            let d2 = g.usize_in(1, 64);
+            let layers = vec![
+                rand_layer(&mut rng, d0, d1, true),
+                rand_layer(&mut rng, d1, d2, false),
+            ];
+            let batch = g.usize_in(1, 6);
+            let inputs: Vec<Vec<u8>> = (0..batch)
+                .map(|_| (0..d0).map(|_| rng.below(8) as u8).collect())
+                .collect();
+            let plan = ModelPlan::of(&layers).map_err(|e| e.to_string())?;
+            let mut batch_runner = NativeRunner::new();
+            let got =
+                run_model_batch(&mut batch_runner, &layers, &plan, &inputs)
+                    .map_err(|e| e.to_string())?;
+            for (i, input) in inputs.iter().enumerate() {
+                let mut seq_runner = NativeRunner::new();
+                let want = run_model(&mut seq_runner, &layers, input)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    got[i] == want,
+                    "sample {i}: batch {:?} != sequential {:?}",
+                    &got[i][..want.len().min(8)],
+                    &want[..want.len().min(8)]
+                );
+            }
+            // Amortisation: the batch path writes each tile once.
+            prop_assert!(
+                batch_runner.weight_loads() == plan.passes_per_sample(),
+                "weight loads {} != tiles {}",
+                batch_runner.weight_loads(),
+                plan.passes_per_sample()
+            );
+            Ok(())
+        });
     }
 }

@@ -142,6 +142,19 @@ impl EnergyBreakdown {
         self.total_j() / self.duration_s
     }
 
+    /// Uniform share of a batch-level breakdown (e.g. `1/B` per sample).
+    /// `scaled(1.0)` is exactly `self`.
+    pub fn scaled(&self, factor: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            per_component: self
+                .per_component
+                .iter()
+                .map(|&(comp, j)| (comp, j * factor))
+                .collect(),
+            duration_s: self.duration_s * factor,
+        }
+    }
+
     pub fn asic_power_w(&self) -> f64 {
         self.asic_j() / self.duration_s
     }
@@ -203,6 +216,7 @@ mod tests {
                 vmm_cycles: 3,
                 adc_reads: 3,
                 simd_cycles: 300,
+                weight_writes: 2,
             },
             dma: DmaStats {
                 transfers: 2,

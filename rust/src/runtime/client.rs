@@ -166,6 +166,30 @@ impl VmmExecutable {
             .map_err(|e| anyhow::anyhow!("to_vec: {e}"))
             .context("vmm output")
     }
+
+    /// Batched integration: every activation vector in `xs` runs against
+    /// the *same* staged pass — the PJRT twin of
+    /// `nn::executor::PassRunner::run_tile_batch`.  Weights/calibration
+    /// are device-resident (`StagedPass`), so the per-sample cost is one
+    /// activation+noise upload and one execute; nothing is re-staged.
+    ///
+    /// Note: the engine's own PJRT backend already amortises staging by
+    /// construction (weights are staged once in `Engine::from_artifacts`
+    /// and `run_vmm` only uploads activations), so it does not need this
+    /// entry point; it exists for external batched drivers of the VMM
+    /// artifact.
+    pub fn run_pass_batch(
+        &self,
+        staged: &StagedPass,
+        xs: &[Vec<f32>],
+        noises: &[Vec<f32>],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(xs.len() == noises.len(), "batch shape");
+        xs.iter()
+            .zip(noises)
+            .map(|(x, noise)| self.run_pass(staged, x, noise))
+            .collect()
+    }
 }
 
 /// `(act[128], wm_c[256,256], wm_1[256,256], wm_2[256,256], gain[2,256],

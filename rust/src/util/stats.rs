@@ -18,8 +18,16 @@ impl Summary {
         assert!(!samples.is_empty(), "Summary::from on empty slice");
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
-        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
-            / n as f64;
+        // Bessel-corrected *sample* variance (n - 1): the paper reports
+        // mean ± std over repeated measurement runs, which estimates the
+        // spread of the underlying distribution, not of the finite sample.
+        // A single sample has no spread estimate — report 0.
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / (n - 1) as f64
+        } else {
+            0.0
+        };
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
@@ -68,11 +76,26 @@ mod tests {
     }
 
     #[test]
-    fn summary_std() {
+    fn summary_std_is_bessel_corrected() {
         let s = Summary::from(&[2.0, 2.0, 2.0]);
         assert_eq!(s.std, 0.0);
+        // Sample std of {0, 2}: sqrt(((0-1)² + (2-1)²) / (2-1)) = sqrt(2),
+        // not the population value 1.
         let s = Summary::from(&[0.0, 2.0]);
-        assert!((s.std - 1.0).abs() < 1e-12);
+        assert!((s.std - 2.0f64.sqrt()).abs() < 1e-12, "std {}", s.std);
+        // Cross-check on a paper-style repeated-runs set.
+        let s = Summary::from(&[93.2, 94.4, 93.6, 94.0]);
+        let want = (0.8 / 3.0f64).sqrt(); // Σ(x-x̄)² = 0.8 over n-1 = 3
+        assert!((s.std - want).abs() < 1e-12, "std {} want {want}", s.std);
+    }
+
+    #[test]
+    fn summary_singleton_has_zero_std() {
+        let s = Summary::from(&[42.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.std, 0.0, "n == 1: no spread estimate, not NaN");
+        assert_eq!(s.mean, 42.0);
+        assert_eq!(s.p50, 42.0);
     }
 
     #[test]
@@ -86,6 +109,31 @@ mod tests {
     #[test]
     fn percentile_singleton() {
         assert_eq!(percentile_sorted(&[7.0], 99.0), 7.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile_sorted(&[7.0], 100.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_extremes_hit_min_and_max() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 5.0);
+        // q = 100 must not index one past the end (pos == n - 1 exactly).
+        let big: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&big, 100.0), 999.0);
+        assert_eq!(percentile_sorted(&big, 0.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_duplicate_values() {
+        let v = vec![3.0, 3.0, 3.0, 3.0];
+        for q in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_sorted(&v, q), 3.0);
+        }
+        let v = vec![1.0, 1.0, 9.0, 9.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 9.0);
     }
 
     #[test]

@@ -11,8 +11,10 @@ use std::sync::Arc;
 
 use bss2::coordinator::engine::{Engine, EngineConfig};
 use bss2::coordinator::service::{Client, Service};
-use bss2::ecg::gen::TraceStream;
-use bss2::fleet::{DispatchOutcome, Fleet, FleetConfig, ShedReason};
+use bss2::ecg::gen::{Trace, TraceStream};
+use bss2::fleet::{
+    BatchDispatchOutcome, DispatchOutcome, Fleet, FleetConfig, ShedReason,
+};
 use bss2::nn::weights::TrainedModel;
 use bss2::util::json::Json;
 
@@ -108,6 +110,73 @@ fn backpressure_sheds_instead_of_hanging() {
     for resp in enqueued {
         let reply = resp.recv().expect("admitted job must be answered");
         assert!(reply.result.is_ok(), "{:?}", reply.result);
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn batch_sheds_partially_when_it_only_partially_fits() {
+    let fleet = native_fleet(1, 4);
+    let traces: Vec<Trace> = TraceStream::new(77, 1.0).take(6).collect();
+    // Idle fleet: a 6-batch only partially fits a depth-4 queue.
+    let (accepted, rejected, resp) = match fleet.dispatch_batch(traces.clone())
+    {
+        BatchDispatchOutcome::Enqueued {
+            accepted,
+            rejected,
+            resp,
+            retry_after_us,
+            ..
+        } => {
+            assert!(retry_after_us > 0, "partial fit must carry a retry hint");
+            (accepted, rejected, resp)
+        }
+        BatchDispatchOutcome::Shed { .. } => {
+            panic!("idle fleet must admit a prefix")
+        }
+    };
+    assert_eq!((accepted, rejected), (4, 2));
+    // Instant follow-up batches shed once the 4 slots are occupied.
+    let mut sheds = 0u64;
+    let mut held = Vec::new();
+    for _ in 0..50 {
+        match fleet.dispatch_batch(traces[..2].to_vec()) {
+            BatchDispatchOutcome::Shed { reason, retry_after_us } => {
+                assert_eq!(reason, ShedReason::Saturated);
+                assert!(retry_after_us > 0);
+                sheds += 1;
+            }
+            BatchDispatchOutcome::Enqueued { resp, .. } => held.push(resp),
+        }
+    }
+    assert!(sheds > 0, "50 instant 2-batches into depth 4 must shed");
+    // The admitted prefix is fully answered, one inference per sample.
+    let infs = resp.recv().unwrap().result.unwrap();
+    assert_eq!(infs.len(), 4);
+    for r in held {
+        assert!(r.recv().unwrap().result.is_ok());
+    }
+    fleet.shutdown();
+}
+
+#[test]
+fn fleet_batch_matches_single_engine_predictions() {
+    // Same parity guarantee as the single path, through classify_batch:
+    // per-sample results must be bit-identical to a fresh single engine.
+    let mut single =
+        Engine::native(TrainedModel::synthetic(MODEL_SEED), engine_config(0));
+    let fleet = native_fleet(2, 32);
+    let traces: Vec<Trace> = TraceStream::new(91, 1.0).take(6).collect();
+    let (_chip, infs, rejected) =
+        fleet.classify_batch_blocking(&traces).unwrap();
+    assert_eq!(rejected, 0);
+    assert_eq!(infs.len(), 6);
+    for (trace, got) in traces.iter().zip(&infs) {
+        let want = single.classify(trace).unwrap();
+        assert_eq!(got.pred, want.pred);
+        assert_eq!(got.scores, want.scores);
+        // Timing amortises: per-sample time beats the single-trace path.
+        assert!(got.sim_time_s < want.sim_time_s);
     }
     fleet.shutdown();
 }
