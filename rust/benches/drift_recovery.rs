@@ -1,0 +1,178 @@
+//! Bench: accuracy over a long drifting run — auto-recalibration on vs off.
+//!
+//! Three engines share one piece of (simulated) silicon — the same
+//! fixed-pattern seed — and the two serving arms share the same drift
+//! field and traffic:
+//! * **baseline**  — frozen pattern (no drift), freshly calibrated: its
+//!   predictions on the eval set define 100 % "accuracy" (the
+//!   fresh-calibration reference of the acceptance criterion);
+//! * **no-recal**  — drift on, one day-0 profile, never refreshed;
+//! * **auto-recal** — drift on, the `calib::scheduler` policy re-measures
+//!   the profile whenever it ages out (or the logit margin degrades).
+//!
+//! Metric: *stable-decision agreement* with the baseline — the fraction
+//! of eval traces (pre-filtered to a baseline logit margin ≥ 4 LSB, i.e.
+//! decisions that are meaningful to hold) predicted identically.  The
+//! run alternates serving bursts with idle aging so the chip covers
+//! several drift relaxation times in seconds of wall clock.
+//!
+//! Expected shape (asserted): the auto-recal arm stays within 1 pp of
+//! the baseline while the no-recal arm measurably degrades below it.
+
+use bss2::calib::{DriftParams, RecalibPolicy};
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::gen::{Trace, TraceStream};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::benchkit::section;
+
+const FPN_SEED: u64 = 0xD81F7;
+const MODEL_SEED: u64 = 0xF1EE7;
+/// Serving bursts between evaluations.
+const STEPS_PER_EVAL: usize = 100;
+const EVALS: usize = 5;
+/// Traces served per burst.
+const BURST: usize = 8;
+/// Idle chip time between bursts [µs].
+const IDLE_US: u64 = 20_000;
+/// Eval traces kept (after the margin filter).
+const EVAL_N: usize = 200;
+/// Baseline margin below which a decision is too marginal to score.
+const MARGIN_FLOOR: f32 = 4.0;
+
+fn drift() -> DriftParams {
+    DriftParams {
+        tau_us: 2.0e6,
+        sigma_gain: 0.05,
+        sigma_offset: 8.0,
+        ..Default::default()
+    }
+}
+
+fn engine(drift: Option<DriftParams>) -> Engine {
+    Engine::native(
+        TrainedModel::synthetic(MODEL_SEED),
+        EngineConfig {
+            use_pjrt: false,
+            noise_off: true,
+            fpn_seed: Some(FPN_SEED),
+            drift,
+            ..Default::default()
+        },
+    )
+}
+
+/// Fraction of eval traces predicted identically to the baseline.
+fn agreement(
+    eng: &mut Engine,
+    eval: &[Trace],
+    reference: &[u8],
+) -> anyhow::Result<f64> {
+    let mut same = 0usize;
+    for (t, &want) in eval.iter().zip(reference) {
+        if eng.classify(t)?.pred == want {
+            same += 1;
+        }
+    }
+    Ok(same as f64 / eval.len() as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let policy = RecalibPolicy {
+        max_age_us: 100_000, // tau/20: wander stays ~2-3 LSB between runs
+        margin_degrade_ratio: 0.7,
+        reps: 32,
+        min_serving: 0,
+    };
+
+    // Freshly calibrated frozen silicon defines the reference decisions;
+    // keep only traces whose decision margin is meaningful to hold.
+    let mut baseline = engine(None);
+    baseline.recalibrate(64)?;
+    let mut eval: Vec<Trace> = Vec::with_capacity(EVAL_N);
+    let mut reference: Vec<u8> = Vec::with_capacity(EVAL_N);
+    for trace in TraceStream::new(4242, 1.0).take(3 * EVAL_N) {
+        let inf = baseline.classify(&trace)?;
+        if (inf.scores[0] - inf.scores[1]).abs() >= MARGIN_FLOOR {
+            eval.push(trace);
+            reference.push(inf.pred);
+            if eval.len() == EVAL_N {
+                break;
+            }
+        }
+    }
+    println!(
+        "eval set: {} stable-decision traces (baseline margin >= {} LSB)",
+        eval.len(),
+        MARGIN_FLOOR
+    );
+
+    // Two identical drifted chips; both get a day-0 profile.
+    let mut norecal = engine(Some(drift()));
+    norecal.recalibrate(policy.reps)?;
+    let mut recal = engine(Some(drift()));
+    recal.recalibrate(policy.reps)?;
+    let mut recals = 0usize;
+
+    section("drift run: agreement with the fresh-calibration baseline");
+    println!(
+        "{:>10} {:>12} {:>12} {:>8} {:>12}",
+        "t [s]", "no-recal", "auto-recal", "recals", "residual"
+    );
+    let mut serve_stream = TraceStream::new(99, 1.0);
+    let (mut final_no, mut final_auto) = (1.0f64, 1.0f64);
+    for _ in 0..EVALS {
+        for _ in 0..STEPS_PER_EVAL {
+            // Identical traffic + idle aging on both arms.
+            let burst: Vec<Trace> =
+                serve_stream.by_ref().take(BURST).collect();
+            norecal.classify_batch(&burst)?;
+            recal.classify_batch(&burst)?;
+            norecal.advance_idle_us(IDLE_US);
+            recal.advance_idle_us(IDLE_US);
+            // The auto-recal arm runs the fleet policy (age/margin).
+            if policy
+                .should_recalibrate(recal.calib_age_us(), None)
+                .is_some()
+            {
+                recal.recalibrate(policy.reps)?;
+                recals += 1;
+            }
+        }
+        final_no = agreement(&mut norecal, &eval, &reference)?;
+        final_auto = agreement(&mut recal, &eval, &reference)?;
+        let residual = recal
+            .calib_profile()
+            .map(|p| p.worst_residual())
+            .unwrap_or(0.0);
+        println!(
+            "{:>10.2} {:>11.1}% {:>11.1}% {:>8} {:>9.3} LSB",
+            recal.chip_time_us() as f64 / 1e6,
+            100.0 * final_no,
+            100.0 * final_auto,
+            recals,
+            residual
+        );
+    }
+
+    println!(
+        "\n[drift_recovery] auto-recalibration held {:.1}% agreement \
+         (baseline 100%) over {:.1} s of chip time and {recals} \
+         recalibrations; without recalibration the day-0 profile decayed \
+         to {:.1}%",
+        100.0 * final_auto,
+        recal.chip_time_us() as f64 / 1e6,
+        100.0 * final_no,
+    );
+    assert!(
+        final_auto >= 0.99,
+        "auto-recal arm must stay within 1 pp of the fresh-calibration \
+         baseline, got {:.3}",
+        final_auto
+    );
+    assert!(
+        final_no < final_auto,
+        "the no-recalibration arm must measurably degrade \
+         ({final_no:.3} !< {final_auto:.3})"
+    );
+    Ok(())
+}

@@ -53,12 +53,51 @@ pub struct AnalogArray {
     /// Row-major `[k][n]` signed 6-bit weights.
     pub weights: Vec<i8>,
     pub calib: ColumnCalib,
+    /// Optional analog drift field: when present, the effective gain and
+    /// offset wander around `calib` with chip time (`calib::drift`).
+    pub drift: Option<crate::calib::drift::DriftState>,
 }
 
 impl AnalogArray {
     pub fn new(k: usize, n: usize, calib: ColumnCalib) -> AnalogArray {
         assert_eq!(calib.gain.len(), n);
-        AnalogArray { k, n, weights: vec![0; k * n], calib }
+        AnalogArray { k, n, weights: vec![0; k * n], calib, drift: None }
+    }
+
+    /// Attach a drift field.  Fails fast on a column-count mismatch —
+    /// deferring it would panic out-of-bounds mid-integration instead.
+    pub fn set_drift(&mut self, drift: crate::calib::drift::DriftState) {
+        assert_eq!(
+            drift.columns(),
+            self.n,
+            "drift field columns must match the array half"
+        );
+        self.drift = Some(drift);
+    }
+
+    /// Advance this half's chip clock (no-op without a drift field).
+    pub fn advance_us(&mut self, us: u64) {
+        if let Some(d) = &mut self.drift {
+            d.advance_us(us);
+        }
+    }
+
+    /// Effective (drifted) per-column gain at the current chip time.
+    #[inline]
+    pub fn effective_gain(&self, col: usize) -> f32 {
+        match &self.drift {
+            Some(d) => self.calib.gain[col] * d.gain_factor(col),
+            None => self.calib.gain[col],
+        }
+    }
+
+    /// Effective (drifted) per-column offset at the current chip time.
+    #[inline]
+    pub fn effective_offset(&self, col: usize) -> f32 {
+        match &self.drift {
+            Some(d) => self.calib.offset[col] + d.offset_delta(col),
+            None => self.calib.offset[col],
+        }
     }
 
     /// Write the weight matrix (the "synapse matrix is filled with weight
@@ -119,8 +158,8 @@ impl AnalogArray {
         acc.iter()
             .enumerate()
             .map(|(n, &a)| {
-                let v = scale * self.calib.gain[n] * a as f32
-                    + self.calib.offset[n]
+                let v = scale * self.effective_gain(n) * a as f32
+                    + self.effective_offset(n)
                     + noise[n];
                 let v = v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP);
                 // jnp.round is roundTiesToEven; the CADC model matches it.
@@ -147,8 +186,8 @@ impl AnalogArray {
                 acc += (xv.min(c::X_MAX as u8) as i32)
                     * self.weight(row, col) as i32;
             }
-            let v = scale * self.calib.gain[col] * acc as f32
-                + self.calib.offset[col];
+            let v = scale * self.effective_gain(col) * acc as f32
+                + self.effective_offset(col);
             out.push(v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP));
         }
         out
@@ -322,6 +361,42 @@ mod tests {
         // Final value equals the full integration (before noise/rounding).
         let acc = a.accumulate(&[4, 5]);
         assert!((tr[2] - 0.1 * acc[0] as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn drift_field_shifts_conversion_deterministically() {
+        use crate::calib::drift::{DriftParams, DriftState};
+        let params = DriftParams {
+            tau_us: 10_000.0,
+            sigma_gain: 0.0,
+            sigma_offset: 8.0,
+            temp_amplitude_k: 0.0,
+            ..Default::default()
+        };
+        let mk = || {
+            let mut a = AnalogArray::new(1, 4, ColumnCalib::nominal(4));
+            a.load_weights(&[10, 10, 10, 10]);
+            a.set_drift(DriftState::new(4, 5, params));
+            a
+        };
+        let mut a = mk();
+        // Before any chip time passes, drift is the identity.
+        assert_eq!(a.effective_gain(0), 1.0);
+        assert_eq!(a.effective_offset(0), 0.0);
+        let fresh = a.integrate(&[10], 0.1, &[0.0; 4], false);
+        assert_eq!(fresh, vec![10, 10, 10, 10]);
+        // After many relaxation times the offsets have wandered.
+        a.advance_us(100_000);
+        let moved: f32 =
+            (0..4).map(|col| a.effective_offset(col).abs()).sum();
+        assert!(moved > 0.01, "offsets did not wander: {moved}");
+        // Identical seed + identical chip time => identical conversion.
+        let mut b = mk();
+        b.advance_us(100_000);
+        assert_eq!(
+            a.integrate(&[10], 0.1, &[0.0; 4], false),
+            b.integrate(&[10], 0.1, &[0.0; 4], false)
+        );
     }
 
     #[test]

@@ -94,22 +94,52 @@ pub fn measure_gains(
     }
 }
 
-/// End-to-end calibration of one array half: offsets then gains.
+/// Uniform diagnostic weight loaded for the gain fit.  Test-pulse
+/// amplitude chosen so x_hi lands at ~100 LSB (16 * 32 * 64 * 0.003 = 98),
+/// well inside the linear range.
+pub const W_TEST: i8 = 32;
+/// Rows driven by the test pulses.
+pub const ROWS_TEST: usize = 64;
+/// Per-column amplification during the diagnostic measurement.
+pub const SCALE_TEST: f32 = 0.003;
+
+/// End-to-end calibration of one array half: offsets then gains, with the
+/// substrate's nominal temporal-noise sigma.
 pub fn calibrate_half(
-    array: &AnalogArray,
+    array: &mut AnalogArray,
     rng: &mut crate::util::rng::SplitMix64,
     reps: usize,
 ) -> CalibMeasurement {
-    let sigma = c::NOISE_SIGMA;
+    calibrate_half_with(array, rng, reps, c::NOISE_SIGMA)
+}
+
+/// [`calibrate_half`] with an explicit measurement-noise sigma (the engine
+/// passes its own, so noise-off ablations calibrate noise-free).
+///
+/// The gain fit needs a *known* uniform weight pattern: the serving
+/// weights are saved, the [`W_TEST`] diagnostic pattern is written, and
+/// the original synapse matrix is restored afterwards — so a calibration
+/// is correct (and side-effect-free) mid-serving, whatever the array
+/// currently holds.
+pub fn calibrate_half_with(
+    array: &mut AnalogArray,
+    rng: &mut crate::util::rng::SplitMix64,
+    reps: usize,
+    sigma: f64,
+) -> CalibMeasurement {
+    let n = array.n;
     let mut mk_noise = |_r: usize| -> Vec<f32> {
-        (0..array.n).map(|_| (sigma * rng.gauss()) as f32).collect()
+        (0..n).map(|_| (sigma * rng.gauss()) as f32).collect()
     };
+    let saved = array.weights.clone();
+    array.load_weights(&vec![W_TEST; array.k * n]);
     let offsets = measure_offsets(array, &mut mk_noise, reps);
-    // Diagnostic pattern: the calibration uses a scratch weight load; we
-    // fit against whatever uniform row weight the array currently holds.
-    // Test-pulse amplitude chosen so x_hi lands at ~100 LSB
-    // (16 * 32 * 64 * 0.003 = 98), well inside the linear range.
-    measure_gains(array, &offsets, mk_noise, 0.003, 32, 64, reps)
+    let m = measure_gains(
+        array, &offsets, mk_noise, SCALE_TEST, W_TEST, ROWS_TEST, reps,
+    );
+    // Exact restore: the saved weights were already on the 6-bit grid.
+    array.weights = saved;
+    m
 }
 
 #[cfg(test)]
@@ -144,8 +174,32 @@ mod tests {
     #[test]
     fn gains_recovered_within_percent() {
         let mut rng = SplitMix64::new(12);
-        let array = diagnostic_array(&mut rng);
-        let m = calibrate_half(&array, &mut SplitMix64::new(5), 64);
+        let mut array = diagnostic_array(&mut rng);
+        let m = calibrate_half(&mut array, &mut SplitMix64::new(5), 64);
+        let mut worst = 0.0f32;
+        for (e, t) in m.gain_est.iter().zip(&array.calib.gain) {
+            worst = worst.max((e - t).abs() / t);
+        }
+        assert!(worst < 0.06, "worst relative gain error {worst}");
+        assert!(m.residual_rms < 2.0, "residual {}", m.residual_rms);
+    }
+
+    #[test]
+    fn calibration_is_correct_mid_serving() {
+        // The array holds an arbitrary (non-uniform) serving matrix: the
+        // routine must fit against its own diagnostic pattern — not
+        // "whatever the array currently holds" — and restore the serving
+        // weights afterwards.
+        let mut rng = SplitMix64::new(21);
+        let calib = ColumnCalib::fixed_pattern(c::N_COLS, &mut rng);
+        let mut array = AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib);
+        let serving: Vec<i8> = (0..c::K_LOGICAL * c::N_COLS)
+            .map(|i| ((i * 7 + 3) % 127) as i8 - 63)
+            .collect();
+        array.load_weights(&serving);
+        let before = array.weights.clone();
+        let m = calibrate_half(&mut array, &mut SplitMix64::new(6), 64);
+        assert_eq!(array.weights, before, "serving weights restored");
         let mut worst = 0.0f32;
         for (e, t) in m.gain_est.iter().zip(&array.calib.gain) {
             worst = worst.max((e - t).abs() / t);

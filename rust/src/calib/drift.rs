@@ -1,0 +1,269 @@
+//! Analog drift model: a chip-time-driven Ornstein–Uhlenbeck wander of the
+//! per-column gain/offset fixed pattern, plus a slow temperature swing.
+//!
+//! The paper's claim that the mobile system operates "reliably outside a
+//! specialized lab setting" rests on the calibration routines (Weis et al.,
+//! arXiv:2006.13177) compensating not just the *static* fixed pattern but
+//! its slow wander with supply temperature and device aging.  This module
+//! supplies the physics those routines fight: each column's gain and offset
+//! performs a mean-reverting random walk around its calibrated value, and a
+//! deterministic sinusoidal temperature profile couples into both through
+//! first-order temperature coefficients.
+//!
+//! Determinism: the OU process advances on a fixed [`DRIFT_TICK_US`] grid
+//! of *simulated chip time*.  Ticks fire at absolute multiples of the
+//! quantum, so advancing by 300 µs then 700 µs produces bit-identically the
+//! same state as advancing by 1000 µs once — runs are reproducible no
+//! matter how serving partitions chip time (property-tested below).
+
+use crate::util::rng::SplitMix64;
+
+/// Chip-time quantum of one OU update [µs].  One inference is ~276 µs, so
+/// the wander is effectively frozen within a single batch and moves on the
+/// serving/idle timescale — exactly the regime recalibration targets.
+pub const DRIFT_TICK_US: u64 = 1_000;
+
+/// Parameters of the per-column drift process.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftParams {
+    /// OU relaxation time [µs of chip time].
+    pub tau_us: f64,
+    /// Stationary std of the multiplicative gain wander (relative).
+    pub sigma_gain: f64,
+    /// Stationary std of the additive offset wander [ADC LSB].
+    pub sigma_offset: f64,
+    /// Amplitude of the deterministic temperature swing [K].
+    pub temp_amplitude_k: f64,
+    /// Period of the temperature swing [µs of chip time].
+    pub temp_period_us: f64,
+    /// Relative gain change per kelvin (all columns move together).
+    pub temp_gain_per_k: f64,
+    /// Offset change per kelvin [ADC LSB].
+    pub temp_offset_per_k: f64,
+}
+
+impl Default for DriftParams {
+    /// Timescales chosen so drift is visible over seconds of chip time
+    /// (thousands of inferences) while one batch sees a frozen pattern.
+    fn default() -> DriftParams {
+        DriftParams {
+            tau_us: 2.0e6,
+            sigma_gain: 0.04,
+            sigma_offset: 5.0,
+            temp_amplitude_k: 3.0,
+            temp_period_us: 3.0e6,
+            temp_gain_per_k: 0.007,
+            temp_offset_per_k: 0.8,
+        }
+    }
+}
+
+impl DriftParams {
+    /// A drift field with the random wander disabled (temperature only) —
+    /// useful for isolating the deterministic component in tests.
+    pub fn temperature_only() -> DriftParams {
+        DriftParams { sigma_gain: 0.0, sigma_offset: 0.0, ..Default::default() }
+    }
+}
+
+/// Live drift state of one array half: the current wander realisation plus
+/// the chip clock that drives it.
+#[derive(Debug, Clone)]
+pub struct DriftState {
+    params: DriftParams,
+    rng: SplitMix64,
+    /// Absolute chip time [µs].
+    time_us: u64,
+    /// Chip time already consumed by OU ticks [µs].
+    ticked_us: u64,
+    /// Per-column multiplicative gain deviation (around 0).
+    gain_wander: Vec<f32>,
+    /// Per-column additive offset deviation [LSB].
+    offset_wander: Vec<f32>,
+}
+
+impl DriftState {
+    pub fn new(n: usize, seed: u64, params: DriftParams) -> DriftState {
+        DriftState {
+            params,
+            rng: SplitMix64::new(seed),
+            time_us: 0,
+            ticked_us: 0,
+            gain_wander: vec![0.0; n],
+            offset_wander: vec![0.0; n],
+        }
+    }
+
+    pub fn params(&self) -> &DriftParams {
+        &self.params
+    }
+
+    /// Columns this field covers (must match the array half it drives).
+    pub fn columns(&self) -> usize {
+        self.gain_wander.len()
+    }
+
+    pub fn time_us(&self) -> u64 {
+        self.time_us
+    }
+
+    /// Advance the chip clock by `us` simulated microseconds, applying one
+    /// OU step per crossed [`DRIFT_TICK_US`] boundary.
+    pub fn advance_us(&mut self, us: u64) {
+        self.time_us += us;
+        while self.time_us - self.ticked_us >= DRIFT_TICK_US {
+            self.ticked_us += DRIFT_TICK_US;
+            self.tick();
+        }
+    }
+
+    /// One exact OU update over a tick: `x <- a x + sqrt(1-a^2) sigma g`.
+    fn tick(&mut self) {
+        let a = (-(DRIFT_TICK_US as f64) / self.params.tau_us).exp();
+        let b = (1.0 - a * a).sqrt();
+        let (sg, so) = (self.params.sigma_gain, self.params.sigma_offset);
+        for g in self.gain_wander.iter_mut() {
+            *g = (a * *g as f64 + b * sg * self.rng.gauss()) as f32;
+        }
+        for o in self.offset_wander.iter_mut() {
+            *o = (a * *o as f64 + b * so * self.rng.gauss()) as f32;
+        }
+    }
+
+    /// Deviation from the reference temperature at the current chip time.
+    pub fn temp_delta_k(&self) -> f64 {
+        if self.params.temp_period_us <= 0.0 {
+            return 0.0;
+        }
+        let phase = self.time_us as f64 / self.params.temp_period_us;
+        self.params.temp_amplitude_k
+            * (2.0 * std::f64::consts::PI * phase).sin()
+    }
+
+    /// Multiplicative factor on column `col`'s calibrated gain.
+    #[inline]
+    pub fn gain_factor(&self, col: usize) -> f32 {
+        (1.0 + self.gain_wander[col] as f64
+            + self.params.temp_gain_per_k * self.temp_delta_k()) as f32
+    }
+
+    /// Additive shift on column `col`'s calibrated offset [LSB].
+    #[inline]
+    pub fn offset_delta(&self, col: usize) -> f32 {
+        (self.offset_wander[col] as f64
+            + self.params.temp_offset_per_k * self.temp_delta_k()) as f32
+    }
+
+    /// Root-mean-square of the current offset wander [LSB] (diagnostics).
+    pub fn offset_wander_rms(&self) -> f32 {
+        if self.offset_wander.is_empty() {
+            return 0.0;
+        }
+        let ss: f64 = self
+            .offset_wander
+            .iter()
+            .map(|&o| (o as f64) * (o as f64))
+            .sum();
+        (ss / self.offset_wander.len() as f64).sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drifty() -> DriftParams {
+        DriftParams {
+            tau_us: 50_000.0,
+            sigma_gain: 0.05,
+            sigma_offset: 6.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn starts_at_identity() {
+        let d = DriftState::new(8, 1, drifty());
+        for col in 0..8 {
+            assert_eq!(d.gain_factor(col), 1.0);
+            assert_eq!(d.offset_delta(col), 0.0);
+        }
+    }
+
+    #[test]
+    fn advance_partition_independent() {
+        // 300 + 700 µs must land bit-identically on 1000 µs, and a long
+        // run chopped into odd pieces must equal one big advance.
+        let mk = || DriftState::new(16, 42, drifty());
+        let (mut a, mut b) = (mk(), mk());
+        a.advance_us(300);
+        a.advance_us(700);
+        b.advance_us(1000);
+        assert_eq!(a.gain_wander, b.gain_wander);
+        assert_eq!(a.offset_wander, b.offset_wander);
+
+        let (mut c, mut d) = (mk(), mk());
+        let mut total = 0u64;
+        for step in [137u64, 863, 1, 999, 2500, 12_345, 7] {
+            c.advance_us(step);
+            total += step;
+        }
+        d.advance_us(total);
+        assert_eq!(c.gain_wander, d.gain_wander);
+        assert_eq!(c.offset_wander, d.offset_wander);
+        assert_eq!(c.time_us(), d.time_us());
+    }
+
+    #[test]
+    fn wander_reaches_stationary_scale() {
+        // After many relaxation times the wander std approaches sigma.
+        let p = drifty();
+        let mut d = DriftState::new(512, 7, p);
+        d.advance_us(20 * p.tau_us as u64);
+        let rms = d.offset_wander_rms() as f64;
+        assert!(
+            rms > 0.4 * p.sigma_offset && rms < 2.0 * p.sigma_offset,
+            "offset wander rms {rms} vs sigma {}",
+            p.sigma_offset
+        );
+    }
+
+    #[test]
+    fn mean_reversion_bounds_the_walk() {
+        // Unlike a pure random walk, the OU wander must not grow without
+        // bound: rms after 100 tau stays the same order as after 20 tau.
+        let p = drifty();
+        let mut d = DriftState::new(256, 9, p);
+        d.advance_us(20 * p.tau_us as u64);
+        let early = d.offset_wander_rms();
+        d.advance_us(80 * p.tau_us as u64);
+        let late = d.offset_wander_rms();
+        assert!(late < 3.0 * early, "rms grew {early} -> {late}");
+    }
+
+    #[test]
+    fn temperature_term_is_deterministic_and_periodic() {
+        let p = DriftParams::temperature_only();
+        let mut d = DriftState::new(4, 3, p);
+        d.advance_us((p.temp_period_us / 4.0) as u64); // quarter period
+        let quarter = d.temp_delta_k();
+        assert!((quarter - p.temp_amplitude_k).abs() < 1e-6, "{quarter}");
+        // All columns move together under temperature.
+        assert_eq!(d.gain_factor(0), d.gain_factor(3));
+        assert!(d.gain_factor(0) > 1.0);
+        assert!(d.offset_delta(0) > 0.0);
+        // Full period returns to (near) zero.
+        let mut e = DriftState::new(4, 3, p);
+        e.advance_us(p.temp_period_us as u64);
+        assert!(e.temp_delta_k().abs() < 1e-6);
+    }
+
+    #[test]
+    fn seeds_decorrelate_chips() {
+        let mut a = DriftState::new(64, 1, drifty());
+        let mut b = DriftState::new(64, 2, drifty());
+        a.advance_us(100_000);
+        b.advance_us(100_000);
+        assert_ne!(a.offset_wander, b.offset_wander);
+    }
+}

@@ -1,0 +1,39 @@
+//! Calibration & drift-compensation subsystem: close the loop from
+//! measurement to serving.
+//!
+//! The paper credits "calibration routines for the analog network core"
+//! (Weis et al., arXiv:2006.13177) for making the ASIC usable outside the
+//! lab; hxtorch exposes the same measured-deviation workflow to training
+//! (Spilger et al., arXiv:2006.13138).  `asic::calib` holds the raw
+//! measurement routines; this subsystem turns them into an operational
+//! loop for a serving fleet of aging, heterogeneous chips:
+//!
+//! * [`drift`] — the physics: a seeded, chip-time-driven Ornstein–
+//!   Uhlenbeck wander of per-column gain/offset plus a temperature
+//!   coefficient, advanced deterministically in simulated µs as the
+//!   engine serves (`asic::array` consults it at ADC conversion).
+//! * [`profile`] — the artifact: a versioned per-chip [`CalibProfile`]
+//!   (measured gain/offset, residual rms, chip-time stamp, reps),
+//!   persisted through `runtime::artifacts` and *applied* as a
+//!   [`ColumnCorrection`] in the post-ADC path of `coordinator::engine`
+//!   and `nn::executor`, so MACs are compensated against the measured
+//!   pattern rather than the ideal one.
+//! * [`monitor`] — the symptom tracker: per-chip logit-margin EWMA vs its
+//!   post-calibration baseline.
+//! * [`scheduler`] — the policy: age- and margin-triggered
+//!   [`RecalibPolicy`], owned by `fleet::pool`, which drains one replica
+//!   into `ChipState::Calibrating` while the rest of the pool serves.
+//!
+//! `repro calibrate` drives a full-chip run from the CLI;
+//! `benches/drift_recovery.rs` demonstrates accuracy recovery over a long
+//! drifting run with the loop on vs off.
+
+pub mod drift;
+pub mod monitor;
+pub mod profile;
+pub mod scheduler;
+
+pub use drift::{DriftParams, DriftState, DRIFT_TICK_US};
+pub use monitor::{DriftMonitor, MarginSnapshot};
+pub use profile::{CalibProfile, ColumnCorrection, PROFILE_FORMAT};
+pub use scheduler::{RecalibPolicy, RecalibReason};

@@ -1,0 +1,152 @@
+//! Drift monitor: per-chip tracking of prediction-margin degradation.
+//!
+//! Calibration *age* (chip time since the last profile) is the primary
+//! recalibration trigger and lives in `fleet::health` as an atomic counter.
+//! This module tracks the *symptom*: as the analog pattern wanders away
+//! from the applied profile, class scores move toward each other and the
+//! logit margin |s0 - s1| shrinks.  The monitor keeps an EWMA of the
+//! margin, freezes a baseline over the first post-calibration window, and
+//! reports the degradation ratio `ewma / baseline` the policy thresholds.
+//!
+//! Updated from the chip worker after every served batch, read from the
+//! dispatch path — a `Mutex` over four floats, uncontended in practice.
+
+use std::sync::Mutex;
+
+/// Margin samples averaged into the post-calibration baseline before the
+/// degradation ratio becomes meaningful.
+pub const BASELINE_WARMUP: u64 = 32;
+
+#[derive(Debug, Clone, Copy)]
+struct MonitorInner {
+    /// EWMA of the absolute logit margin [LSB].
+    ewma: f64,
+    /// Frozen mean margin of the first [`BASELINE_WARMUP`] samples.
+    baseline: f64,
+    /// Running sum while the baseline accumulates.
+    warmup_sum: f64,
+    /// Margin samples since the last (re)calibration.
+    samples: u64,
+}
+
+/// Point-in-time monitor view.
+#[derive(Debug, Clone, Copy)]
+pub struct MarginSnapshot {
+    pub ewma: f64,
+    pub baseline: f64,
+    pub samples: u64,
+}
+
+/// Per-chip margin tracker (see module docs).
+pub struct DriftMonitor {
+    alpha: f64,
+    inner: Mutex<MonitorInner>,
+}
+
+impl DriftMonitor {
+    /// `alpha` is the EWMA weight of one new sample (e.g. 1/64).
+    pub fn new(alpha: f64) -> DriftMonitor {
+        DriftMonitor {
+            alpha: alpha.clamp(1e-6, 1.0),
+            inner: Mutex::new(MonitorInner {
+                ewma: 0.0,
+                baseline: 0.0,
+                warmup_sum: 0.0,
+                samples: 0,
+            }),
+        }
+    }
+
+    /// Record one inference's class scores.
+    pub fn record_scores(&self, scores: &[f32; 2]) {
+        self.record_margin((scores[0] - scores[1]).abs() as f64);
+    }
+
+    pub fn record_margin(&self, margin: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.samples += 1;
+        if g.samples <= BASELINE_WARMUP {
+            g.warmup_sum += margin;
+            g.baseline = g.warmup_sum / g.samples as f64;
+            g.ewma = g.baseline;
+        } else {
+            g.ewma += self.alpha * (margin - g.ewma);
+        }
+    }
+
+    /// Forget everything: called right after a recalibration so the next
+    /// baseline reflects the freshly compensated chip.
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        *g = MonitorInner { ewma: 0.0, baseline: 0.0, warmup_sum: 0.0, samples: 0 };
+    }
+
+    pub fn snapshot(&self) -> MarginSnapshot {
+        let g = self.inner.lock().unwrap();
+        MarginSnapshot { ewma: g.ewma, baseline: g.baseline, samples: g.samples }
+    }
+
+    /// `ewma / baseline`, or `None` until the baseline warmed up (or when
+    /// the baseline margin is degenerate).
+    pub fn degradation(&self) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        if g.samples <= BASELINE_WARMUP || g.baseline <= 1e-9 {
+            return None;
+        }
+        Some(g.ewma / g.baseline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_degradation_ratio() {
+        let m = DriftMonitor::new(0.25);
+        for _ in 0..BASELINE_WARMUP {
+            m.record_margin(40.0);
+        }
+        assert!(m.degradation().is_none(), "warmup not finished");
+        m.record_margin(40.0);
+        let d = m.degradation().unwrap();
+        assert!((d - 1.0).abs() < 1e-9, "healthy chip ratio {d}");
+        // Margins collapse: ratio decays toward 0.25 of baseline.
+        for _ in 0..256 {
+            m.record_margin(10.0);
+        }
+        let d = m.degradation().unwrap();
+        assert!(d < 0.3, "degraded ratio {d}");
+        let s = m.snapshot();
+        assert!((s.baseline - 40.0).abs() < 1e-9);
+        assert!(s.samples > BASELINE_WARMUP);
+    }
+
+    #[test]
+    fn reset_clears_baseline() {
+        let m = DriftMonitor::new(0.5);
+        for _ in 0..=BASELINE_WARMUP {
+            m.record_margin(20.0);
+        }
+        assert!(m.degradation().is_some());
+        m.reset();
+        assert!(m.degradation().is_none());
+        assert_eq!(m.snapshot().samples, 0);
+    }
+
+    #[test]
+    fn zero_baseline_never_divides() {
+        let m = DriftMonitor::new(0.5);
+        for _ in 0..=BASELINE_WARMUP {
+            m.record_margin(0.0);
+        }
+        assert!(m.degradation().is_none(), "degenerate baseline guarded");
+    }
+
+    #[test]
+    fn record_scores_uses_absolute_margin() {
+        let m = DriftMonitor::new(0.5);
+        m.record_scores(&[-10.0, 30.0]);
+        assert!((m.snapshot().ewma - 40.0).abs() < 1e-6);
+    }
+}

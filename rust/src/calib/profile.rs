@@ -1,0 +1,361 @@
+//! Per-chip calibration profile: the versioned artifact produced by a
+//! full-chip calibration run and consumed by the serving path.
+//!
+//! The real workflow (Weis et al., arXiv:2006.13177; hxtorch, Spilger et
+//! al., arXiv:2006.13138) measures each column's gain/offset against test
+//! pulses and hands the *measured* deviation to the lowering path, so MACs
+//! are compensated against the chip that actually executes them rather
+//! than an ideal substrate.  [`CalibProfile`] is that measurement as a
+//! persistable artifact: per-half gain/offset vectors, the residual rms of
+//! the fit, the chip-time stamp of the measurement (so its *age* is
+//! well-defined under drift), and the repetition count that sets the
+//! measurement noise floor.
+//!
+//! [`ColumnCorrection`] is the serving-side application: the inverse map
+//! `adc -> round((adc - offset) / gain)` applied right after ADC readout,
+//! which is where the SIMD CPUs of the real system apply it.
+
+use std::path::Path;
+
+use crate::asic::array::{round_half_even, AnalogArray};
+use crate::asic::calib::calibrate_half_with;
+use crate::asic::consts as c;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Artifact format tag (bump on layout changes).
+pub const PROFILE_FORMAT: &str = "bss2-calib-v1";
+
+/// Columns with a measured gain below this are treated as dead and left
+/// uncorrected (inverting a near-zero gain would amplify noise unboundedly).
+pub const MIN_CORRECTABLE_GAIN: f32 = 0.05;
+
+/// A versioned per-chip calibration measurement.
+#[derive(Debug, Clone)]
+pub struct CalibProfile {
+    /// Fleet ordinal of the chip the profile was measured on.
+    pub chip: usize,
+    /// Chip-time stamp of the measurement [µs] (drift age reference).
+    pub chip_time_us: u64,
+    /// Measurement repetitions (noise suppressed by sqrt(reps)).
+    pub reps: usize,
+    /// Measured per-half, per-column gain.
+    pub gain: [Vec<f32>; 2],
+    /// Measured per-half, per-column offset [LSB].
+    pub offset: [Vec<f32>; 2],
+    /// Per-half residual rms of the two-point fit [LSB].
+    pub residual_rms: [f32; 2],
+}
+
+impl CalibProfile {
+    /// The ideal-substrate profile (gain 1, offset 0) — applying it is a
+    /// no-op correction.
+    pub fn nominal(chip: usize) -> CalibProfile {
+        CalibProfile {
+            chip,
+            chip_time_us: 0,
+            reps: 0,
+            gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
+            offset: [vec![0.0; c::N_COLS], vec![0.0; c::N_COLS]],
+            residual_rms: [0.0, 0.0],
+        }
+    }
+
+    /// Full-chip calibration: measure both array halves with
+    /// [`calibrate_half_with`] (which saves, swaps in the diagnostic
+    /// pattern, and restores the serving weights — safe mid-serving).
+    /// The measurement sees the *current* effective pattern, drift
+    /// included, which is exactly what makes recalibration work.
+    pub fn measure(
+        halves: &mut [AnalogArray; 2],
+        rng: &mut SplitMix64,
+        reps: usize,
+        noise_sigma: f64,
+        chip: usize,
+        chip_time_us: u64,
+    ) -> CalibProfile {
+        let reps = reps.max(1);
+        let m0 = calibrate_half_with(&mut halves[0], rng, reps, noise_sigma);
+        let m1 = calibrate_half_with(&mut halves[1], rng, reps, noise_sigma);
+        CalibProfile {
+            chip,
+            chip_time_us,
+            reps,
+            gain: [m0.gain_est, m1.gain_est],
+            offset: [m0.offset_est, m1.offset_est],
+            residual_rms: [m0.residual_rms, m1.residual_rms],
+        }
+    }
+
+    /// Chip time one full-chip measurement occupies [µs]: per half, `reps`
+    /// offset integrations plus `2*reps` two-point gain integrations, plus
+    /// the diagnostic-pattern write and the serving-weight restore.
+    pub fn measurement_cost_us(reps: usize) -> f64 {
+        let per_half = 3.0 * reps as f64 * c::INTEGRATION_CYCLE_US
+            + 2.0 * c::WEIGHT_WRITE_US;
+        2.0 * per_half
+    }
+
+    /// The serving-side correction for one half.
+    pub fn correction(&self, half: usize) -> ColumnCorrection {
+        ColumnCorrection::from_measured(&self.gain[half], &self.offset[half])
+    }
+
+    /// Worst per-half fit residual [LSB] (the health figure `fleet_stats`
+    /// reports).
+    pub fn worst_residual(&self) -> f32 {
+        self.residual_rms[0].max(self.residual_rms[1])
+    }
+
+    // --- artifact (de)serialisation ---------------------------------------
+
+    pub fn to_json(&self) -> String {
+        let vec_f32 = |v: &[f32]| {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("format".into(), Json::Str(PROFILE_FORMAT.into()));
+        m.insert("chip".into(), Json::Num(self.chip as f64));
+        m.insert("chip_time_us".into(), Json::Num(self.chip_time_us as f64));
+        m.insert("reps".into(), Json::Num(self.reps as f64));
+        m.insert(
+            "residual_rms".into(),
+            Json::Arr(vec![
+                Json::Num(self.residual_rms[0] as f64),
+                Json::Num(self.residual_rms[1] as f64),
+            ]),
+        );
+        m.insert(
+            "gain".into(),
+            Json::Arr(vec![vec_f32(&self.gain[0]), vec_f32(&self.gain[1])]),
+        );
+        m.insert(
+            "offset".into(),
+            Json::Arr(vec![vec_f32(&self.offset[0]), vec_f32(&self.offset[1])]),
+        );
+        Json::Obj(m).to_string()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<CalibProfile> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("calib profile: {e}"))?;
+        let format = j.req("format")?.as_str().unwrap_or("");
+        anyhow::ensure!(
+            format == PROFILE_FORMAT,
+            "unsupported calib profile format `{format}`"
+        );
+        let pair = |key: &str| -> anyhow::Result<[Vec<f32>; 2]> {
+            let arr = j
+                .req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?;
+            anyhow::ensure!(arr.len() == 2, "{key} needs 2 halves");
+            let a = arr[0].to_f32_vec()?;
+            let b = arr[1].to_f32_vec()?;
+            anyhow::ensure!(
+                a.len() == c::N_COLS && b.len() == c::N_COLS,
+                "{key} halves must hold {} columns",
+                c::N_COLS
+            );
+            Ok([a, b])
+        };
+        let gain = pair("gain")?;
+        let offset = pair("offset")?;
+        let resid = j.req("residual_rms")?.to_f32_vec()?;
+        anyhow::ensure!(resid.len() == 2, "residual_rms needs 2 halves");
+        Ok(CalibProfile {
+            chip: j.req("chip")?.as_usize().unwrap_or(0),
+            chip_time_us: j
+                .req("chip_time_us")?
+                .as_f64()
+                .map(|t| t.max(0.0) as u64)
+                .unwrap_or(0),
+            reps: j.req("reps")?.as_usize().unwrap_or(0),
+            gain,
+            offset,
+            residual_rms: [resid[0], resid[1]],
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<CalibProfile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Digital post-ADC correction for one array half: undo the measured
+/// per-column gain/offset so downstream layers see the ideal substrate.
+#[derive(Debug, Clone)]
+pub struct ColumnCorrection {
+    inv_gain: Vec<f32>,
+    offset: Vec<f32>,
+}
+
+impl ColumnCorrection {
+    /// No-op correction over `n` columns.
+    pub fn identity(n: usize) -> ColumnCorrection {
+        ColumnCorrection { inv_gain: vec![1.0; n], offset: vec![0.0; n] }
+    }
+
+    /// Correction from measured gain/offset vectors.  Columns whose gain
+    /// fell below [`MIN_CORRECTABLE_GAIN`] are left unscaled (dead-column
+    /// guard).
+    pub fn from_measured(gain: &[f32], offset: &[f32]) -> ColumnCorrection {
+        assert_eq!(gain.len(), offset.len());
+        ColumnCorrection {
+            inv_gain: gain
+                .iter()
+                .map(|&g| if g < MIN_CORRECTABLE_GAIN { 1.0 } else { 1.0 / g })
+                .collect(),
+            offset: offset.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inv_gain.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inv_gain.is_empty()
+    }
+
+    #[inline]
+    fn corrected(&self, col: usize, adc: f32) -> f32 {
+        let v = (adc - self.offset[col]) * self.inv_gain[col];
+        round_half_even(v).clamp(c::ADC_MIN as f32, c::ADC_MAX as f32)
+    }
+
+    /// Correct ADC counts in place (engine latch width).  `adc` may cover
+    /// a prefix of the columns (partitioned tiles start at column 0).
+    pub fn apply_i32(&self, adc: &mut [i32]) {
+        assert!(adc.len() <= self.inv_gain.len());
+        for (col, v) in adc.iter_mut().enumerate() {
+            *v = self.corrected(col, *v as f32) as i32;
+        }
+    }
+
+    /// Correct ADC counts in place (executor tile width).
+    pub fn apply_i16(&self, adc: &mut [i16]) {
+        assert!(adc.len() <= self.inv_gain.len());
+        for (col, v) in adc.iter_mut().enumerate() {
+            *v = self.corrected(col, *v as f32) as i16;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::array::ColumnCalib;
+
+    fn fpn_halves(seed: u64) -> [AnalogArray; 2] {
+        let mut rng = SplitMix64::new(seed);
+        let mk = |rng: &mut SplitMix64| {
+            let calib = ColumnCalib::fixed_pattern(c::N_COLS, rng);
+            let mut a = AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib);
+            a.load_weights(&vec![17i8; c::K_LOGICAL * c::N_COLS]);
+            a
+        };
+        [mk(&mut rng), mk(&mut rng)]
+    }
+
+    #[test]
+    fn measure_recovers_fixed_pattern_and_keeps_weights() {
+        let mut halves = fpn_halves(5);
+        let before: [Vec<i8>; 2] =
+            [halves[0].weights.clone(), halves[1].weights.clone()];
+        let mut rng = SplitMix64::new(77);
+        let p = CalibProfile::measure(&mut halves, &mut rng, 64, 2.0, 3, 123);
+        assert_eq!(p.chip, 3);
+        assert_eq!(p.chip_time_us, 123);
+        for h in 0..2 {
+            assert_eq!(halves[h].weights, before[h], "weights restored");
+            let mut worst = 0.0f32;
+            for (e, t) in p.gain[h].iter().zip(&halves[h].calib.gain) {
+                worst = worst.max((e - t).abs() / t);
+            }
+            assert!(worst < 0.06, "half {h} worst gain error {worst}");
+            assert!(p.residual_rms[h] < 2.0, "half {h} residual");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut halves = fpn_halves(9);
+        let mut rng = SplitMix64::new(1);
+        let p = CalibProfile::measure(&mut halves, &mut rng, 8, 2.0, 1, 999);
+        let q = CalibProfile::parse(&p.to_json()).unwrap();
+        assert_eq!(q.chip, p.chip);
+        assert_eq!(q.chip_time_us, p.chip_time_us);
+        assert_eq!(q.reps, p.reps);
+        assert_eq!(q.gain, p.gain, "gain must roundtrip bit-exactly");
+        assert_eq!(q.offset, p.offset);
+        assert_eq!(q.residual_rms, p.residual_rms);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = CalibProfile::nominal(2);
+        let path = std::env::temp_dir().join("bss2_calib_profile_test.json");
+        p.save(&path).unwrap();
+        let q = CalibProfile::load(&path).unwrap();
+        assert_eq!(q.chip, 2);
+        assert_eq!(q.gain[0], p.gain[0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parse_rejects_bad_format_and_shape() {
+        let p = CalibProfile::nominal(0);
+        let bad = p.to_json().replace(PROFILE_FORMAT, "bss2-calib-v0");
+        assert!(CalibProfile::parse(&bad).is_err());
+        assert!(CalibProfile::parse("{}").is_err());
+    }
+
+    #[test]
+    fn correction_inverts_gain_offset() {
+        let corr = ColumnCorrection::from_measured(&[2.0, 0.5], &[10.0, -4.0]);
+        // adc = gain * ideal + offset; correction recovers ideal.
+        let mut adc = vec![(2.0f32 * 30.0 + 10.0) as i32, (0.5f32 * 40.0 - 4.0) as i32];
+        corr.apply_i32(&mut adc);
+        assert_eq!(adc, vec![30, 40]);
+        let mut adc16 = vec![70i16, 16];
+        corr.apply_i16(&mut adc16);
+        assert_eq!(adc16, vec![30, 40]);
+    }
+
+    #[test]
+    fn correction_guards_dead_columns_and_clips() {
+        let corr = ColumnCorrection::from_measured(&[0.01, 1.0], &[0.0, -300.0]);
+        let mut adc = vec![50i32, 0];
+        corr.apply_i32(&mut adc);
+        assert_eq!(adc[0], 50, "dead column left unscaled");
+        assert_eq!(adc[1], c::ADC_MAX, "correction clips to ADC range");
+    }
+
+    #[test]
+    fn nominal_correction_is_identity() {
+        let p = CalibProfile::nominal(0);
+        let corr = p.correction(0);
+        let mut adc = vec![-5i32, 0, 17, 127];
+        corr.apply_i32(&mut adc);
+        assert_eq!(adc, vec![-5, 0, 17, 127]);
+        assert_eq!(corr.len(), c::N_COLS);
+        assert!(!corr.is_empty());
+    }
+
+    #[test]
+    fn measurement_cost_scales_with_reps() {
+        let c1 = CalibProfile::measurement_cost_us(16);
+        let c2 = CalibProfile::measurement_cost_us(64);
+        assert!(c2 > c1);
+        // 2 halves x (3*64 integrations * 5 µs + 2 writes * 40 µs).
+        assert!((c2 - 2.0 * (3.0 * 64.0 * 5.0 + 80.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Recalibration policy: *when* a chip should leave the serving pool and
+//! re-measure its profile.
+//!
+//! Two triggers, mirroring how the real system is operated:
+//! * **age** — the profile's chip-time age exceeded `max_age_us`; drift
+//!   has had time to wander regardless of what traffic observed; and
+//! * **margin** — the observed logit-margin EWMA degraded below
+//!   `margin_degrade_ratio` of its post-calibration baseline (symptom-
+//!   driven, catches faster-than-expected drift).
+//!
+//! The policy *decides*; `fleet::pool` owns the act: it flips the chip to
+//! `ChipState::Calibrating` (the scheduler stops admitting regular work),
+//! lets the FIFO queue drain, runs the measurement on the worker, and
+//! re-admits on success.  `min_serving` keeps the pool available — a
+//! recalibration is deferred while it would leave fewer than that many
+//! healthy replicas serving (so a single-chip fleet never self-drains
+//! unless explicitly allowed).
+
+/// Why a recalibration was triggered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecalibReason {
+    /// The calibration profile exceeded its chip-time age budget.
+    Aged,
+    /// The logit margin degraded below the policy ratio.
+    MarginDegraded,
+}
+
+impl RecalibReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecalibReason::Aged => "profile aged out",
+            RecalibReason::MarginDegraded => "logit margin degraded",
+        }
+    }
+}
+
+/// Age- and symptom-triggered recalibration policy.
+#[derive(Debug, Clone)]
+pub struct RecalibPolicy {
+    /// Recalibrate when the profile is older than this [µs of chip time].
+    pub max_age_us: u64,
+    /// Recalibrate when the margin EWMA falls below this fraction of the
+    /// post-calibration baseline (0 disables the symptom trigger).
+    pub margin_degrade_ratio: f64,
+    /// Measurement repetitions per recalibration.
+    pub reps: usize,
+    /// Minimum healthy replicas that must keep serving while one chip
+    /// calibrates.
+    pub min_serving: usize,
+}
+
+impl Default for RecalibPolicy {
+    fn default() -> RecalibPolicy {
+        RecalibPolicy {
+            // ~36k inferences at the paper's 276 µs — tight enough that
+            // the default drift field stays well-compensated.
+            max_age_us: 10_000_000,
+            margin_degrade_ratio: 0.7,
+            reps: 32,
+            min_serving: 1,
+        }
+    }
+}
+
+impl RecalibPolicy {
+    /// A policy that never fires (both triggers disabled).
+    pub fn disabled() -> RecalibPolicy {
+        RecalibPolicy {
+            max_age_us: u64::MAX,
+            margin_degrade_ratio: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Should a chip with this profile age and margin degradation leave
+    /// the pool to recalibrate?  `degradation` is `None` until the
+    /// monitor's baseline warmed up.
+    pub fn should_recalibrate(
+        &self,
+        age_us: u64,
+        degradation: Option<f64>,
+    ) -> Option<RecalibReason> {
+        if age_us > self.max_age_us {
+            return Some(RecalibReason::Aged);
+        }
+        if self.margin_degrade_ratio > 0.0 {
+            if let Some(d) = degradation {
+                if d < self.margin_degrade_ratio {
+                    return Some(RecalibReason::MarginDegraded);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn age_trigger() {
+        let p = RecalibPolicy { max_age_us: 1_000, ..Default::default() };
+        assert_eq!(p.should_recalibrate(999, None), None);
+        assert_eq!(p.should_recalibrate(1_000, None), None, "inclusive budget");
+        assert_eq!(p.should_recalibrate(1_001, None), Some(RecalibReason::Aged));
+    }
+
+    #[test]
+    fn margin_trigger_needs_warmed_monitor() {
+        let p = RecalibPolicy {
+            max_age_us: u64::MAX,
+            margin_degrade_ratio: 0.7,
+            ..Default::default()
+        };
+        assert_eq!(p.should_recalibrate(0, None), None);
+        assert_eq!(p.should_recalibrate(0, Some(0.9)), None);
+        assert_eq!(
+            p.should_recalibrate(0, Some(0.5)),
+            Some(RecalibReason::MarginDegraded)
+        );
+    }
+
+    #[test]
+    fn age_takes_precedence_over_margin() {
+        let p = RecalibPolicy {
+            max_age_us: 10,
+            margin_degrade_ratio: 0.7,
+            ..Default::default()
+        };
+        assert_eq!(
+            p.should_recalibrate(11, Some(0.1)),
+            Some(RecalibReason::Aged)
+        );
+    }
+
+    #[test]
+    fn disabled_policy_never_fires() {
+        let p = RecalibPolicy::disabled();
+        assert_eq!(p.should_recalibrate(u64::MAX - 1, Some(0.0)), None);
+    }
+
+    #[test]
+    fn reasons_have_labels() {
+        assert!(RecalibReason::Aged.as_str().contains("aged"));
+        assert!(RecalibReason::MarginDegraded.as_str().contains("margin"));
+    }
+}

@@ -31,6 +31,8 @@ use crate::asic::array::{AnalogArray, ColumnCalib};
 use crate::asic::chip::{ChipStats, ChipTiming};
 use crate::asic::consts as c;
 use crate::asic::simd::{ChipOps, Insn, SimdCpu};
+use crate::calib::drift::{DriftParams, DriftState};
+use crate::calib::profile::{CalibProfile, ColumnCorrection};
 use crate::ecg::gen::Trace;
 use crate::fpga::dma::{Descriptor, DmaController, Dram};
 use crate::fpga::eventgen::{self, EventLut};
@@ -84,6 +86,17 @@ pub struct EngineConfig {
     pub noise_off: bool,
     /// Zero-out the analog fixed pattern (ablation: ideal substrate).
     pub nominal_calib: bool,
+    /// Fleet ordinal of this replica (stamped into calibration profiles).
+    pub chip: usize,
+    /// When set, the native arrays draw their *own* per-chip fixed-pattern
+    /// realisation from this seed instead of trusting the trained model's
+    /// calibration vectors — the heterogeneous-hardware regime the
+    /// calibration subsystem exists for.  `None` keeps the legacy
+    /// behaviour (the model's measured pattern IS the substrate).
+    pub fpn_seed: Option<u64>,
+    /// Analog drift field for the native arrays (`calib::drift`): the
+    /// fixed pattern wanders with served chip time.  `None` = frozen.
+    pub drift: Option<DriftParams>,
 }
 
 impl Default for EngineConfig {
@@ -93,6 +106,9 @@ impl Default for EngineConfig {
             noise_seed: 0x5EED,
             noise_off: false,
             nominal_calib: false,
+            chip: 0,
+            fpn_seed: None,
+            drift: None,
         }
     }
 }
@@ -102,11 +118,14 @@ impl EngineConfig {
     /// but a decorrelated noise stream per chip (golden-ratio stream
     /// split, as SplitMix64 seeds sequences).  Chip 0 keeps the base
     /// seed so a single-chip fleet is bit-identical to the paper setup.
+    /// The fixed-pattern seed (when present) splits the same way, so
+    /// every replica is a *different* piece of silicon.
     pub fn for_chip(self, chip: usize) -> EngineConfig {
+        let split = (chip as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         EngineConfig {
-            noise_seed: self
-                .noise_seed
-                .wrapping_add((chip as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            noise_seed: self.noise_seed.wrapping_add(split),
+            fpn_seed: self.fpn_seed.map(|s| s.wrapping_add(split)),
+            chip,
             ..self
         }
     }
@@ -132,6 +151,21 @@ pub struct Engine {
     batch_sample: usize,
     noise_rng: SplitMix64,
     noise_sigma: f64,
+    // Calibration & drift state (calib subsystem)
+    /// Fleet ordinal (stamped into calibration profiles).
+    chip_ordinal: usize,
+    /// Simulated chip time served so far [µs] — drives the drift field.
+    chip_time_us: u64,
+    /// Chip time of the last applied calibration [µs].
+    last_calib_us: u64,
+    /// The applied calibration profile, if any.
+    profile: Option<CalibProfile>,
+    /// Per-half post-ADC correction derived from `profile`.
+    compensation: Option<[ColumnCorrection; 2]>,
+    /// Measurement-noise stream for recalibration runs (separate from the
+    /// inference noise stream so recalibrating never perturbs serving
+    /// reproducibility).
+    calib_rng: SplitMix64,
     // FPGA-side state
     dram: Dram,
     lut: EventLut,
@@ -181,7 +215,7 @@ impl Engine {
                 .collect::<anyhow::Result<Vec<_>>>()?;
             Backend::Pjrt { vmm, staged }
         } else {
-            Self::native_backend(&model)
+            Self::native_backend(&model, &cfg)
         };
         Ok(Self::assemble(model, backend, cfg))
     }
@@ -189,17 +223,47 @@ impl Engine {
     /// Mock-mode constructor: native arrays, no PJRT (used when artifacts
     /// are absent in unit tests, and for the backend-parity cross-check).
     pub fn native(model: TrainedModel, cfg: EngineConfig) -> Engine {
-        let backend = Self::native_backend(&model);
+        let backend = Self::native_backend(&model, &cfg);
         Self::assemble(model, backend, cfg)
     }
 
-    fn native_backend(model: &TrainedModel) -> Backend {
+    /// Stream-split constant for the *half* dimension.  Deliberately a
+    /// different odd constant than the golden-ratio chip split used by
+    /// [`EngineConfig::for_chip`]: with one shared constant, seed(chip,
+    /// half=1) would equal seed(chip+1, half=0) and adjacent replicas
+    /// would share bit-identical silicon on one half.
+    const HALF_SPLIT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+    fn native_backend(model: &TrainedModel, cfg: &EngineConfig) -> Backend {
         let mk = |h: usize| {
-            let calib = ColumnCalib {
-                gain: model.gain[h].clone(),
-                offset: model.offset[h].clone(),
+            // With an `fpn_seed` the substrate is its own piece of silicon
+            // (a seeded fixed-pattern realisation per half, decorrelated
+            // per chip and per half); without one, the trained model's
+            // calibration vectors define the substrate — the legacy
+            // behaviour every existing test/bench relies on.
+            let calib = match cfg.fpn_seed {
+                Some(seed) => {
+                    let mut rng = SplitMix64::new(seed.wrapping_add(
+                        (h as u64).wrapping_mul(Self::HALF_SPLIT),
+                    ));
+                    ColumnCalib::fixed_pattern(c::N_COLS, &mut rng)
+                }
+                None => ColumnCalib {
+                    gain: model.gain[h].clone(),
+                    offset: model.offset[h].clone(),
+                },
             };
-            AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib)
+            let mut a = AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib);
+            if let Some(params) = cfg.drift {
+                a.set_drift(DriftState::new(
+                    c::N_COLS,
+                    cfg.noise_seed
+                        .wrapping_add(0xD21F7)
+                        .wrapping_add((h as u64).wrapping_mul(Self::HALF_SPLIT)),
+                    params,
+                ));
+            }
+            a
         };
         let mut h0 = mk(0);
         let h1 = mk(1);
@@ -224,6 +288,12 @@ impl Engine {
             batch_sample: 0,
             noise_rng: SplitMix64::new(cfg.noise_seed),
             noise_sigma,
+            chip_ordinal: cfg.chip,
+            chip_time_us: 0,
+            last_calib_us: 0,
+            profile: None,
+            compensation: None,
+            calib_rng: SplitMix64::new(cfg.noise_seed ^ 0xCA11_B8A7_E5EED),
             dram: Dram::default(),
             lut: EventLut::identity(0, c::K_LOGICAL),
             chip_stats: ChipStats::default(),
@@ -347,6 +417,8 @@ impl Engine {
         // 3. Timing + energy accounting.
         let sim_time_s = (self.dma_time_ns + self.chip_timing.ns) / 1e9
             + CONTROL_OVERHEAD_US / 1e6;
+        // Serving consumes chip time: the drift field wanders with it.
+        self.advance_chip_time_us((sim_time_s * 1e6).round() as u64);
         let activity = Activity {
             chip: self.chip_stats.clone(),
             dma: crate::fpga::dma::DmaStats {
@@ -402,6 +474,8 @@ impl Engine {
         // sample (cf. `CONTROL_OVERHEAD_US`).
         let batch_time_s = (self.dma_time_ns + self.chip_timing.ns) / 1e9
             + CONTROL_OVERHEAD_US / 1e6;
+        // Serving consumes chip time: the drift field wanders with it.
+        self.advance_chip_time_us((batch_time_s * 1e6).round() as u64);
         let activity = Activity {
             chip: self.chip_stats.clone(),
             dma: crate::fpga::dma::DmaStats {
@@ -478,6 +552,91 @@ impl Engine {
     /// Total MACs per inference (for the Op/s figures in Table 1).
     pub fn macs_per_inference(&self) -> usize {
         c::MACS_TOTAL
+    }
+
+    // --- calibration & drift (calib subsystem) -----------------------------
+
+    /// Advance the chip clock (and the drift field) by `us` simulated µs.
+    fn advance_chip_time_us(&mut self, us: u64) {
+        self.chip_time_us += us;
+        if let Backend::Native { halves } = &mut self.backend {
+            for half in halves.iter_mut() {
+                half.advance_us(us);
+            }
+        }
+    }
+
+    /// Let the chip age without serving (power-gated idle still drifts:
+    /// temperature cycles, bias wander).  Used by benches/tests to reach
+    /// interesting drift states quickly.
+    pub fn advance_idle_us(&mut self, us: u64) {
+        self.advance_chip_time_us(us);
+    }
+
+    /// Simulated chip time served/aged so far [µs].
+    pub fn chip_time_us(&self) -> u64 {
+        self.chip_time_us
+    }
+
+    /// Chip-time age of the applied calibration [µs] (chip time itself
+    /// when nothing was ever applied).
+    pub fn calib_age_us(&self) -> u64 {
+        self.chip_time_us.saturating_sub(self.last_calib_us)
+    }
+
+    /// The applied calibration profile, if any.
+    pub fn calib_profile(&self) -> Option<&CalibProfile> {
+        self.profile.as_ref()
+    }
+
+    /// Whether [`recalibrate`](Engine::recalibrate) can run on this
+    /// backend (only the native arrays expose the substrate for
+    /// measurement).  The fleet reads this to exempt PJRT replicas from
+    /// the auto-recalibration policy instead of draining them into a
+    /// doomed measurement.
+    pub fn supports_recalibration(&self) -> bool {
+        matches!(self.backend, Backend::Native { .. })
+    }
+
+    /// Apply a calibration profile: every subsequent ADC readout is
+    /// corrected against the profile's measured gain/offset
+    /// (`calib::ColumnCorrection`), so MACs are compensated against the
+    /// measured fixed pattern rather than the ideal one.
+    pub fn apply_profile(&mut self, profile: &CalibProfile) {
+        self.compensation = Some([profile.correction(0), profile.correction(1)]);
+        self.profile = Some(profile.clone());
+        self.last_calib_us = self.chip_time_us;
+    }
+
+    /// Full-chip recalibration: measure both array halves against the
+    /// diagnostic pattern (serving weights are saved and restored —
+    /// `asic::calib::calibrate_half_with`), apply the resulting profile,
+    /// and charge the measurement's chip time.  The measurement sees the
+    /// *drifted* pattern, which is exactly why a fresh profile recovers
+    /// accuracy.  Only the native backend exposes the substrate for
+    /// measurement; the PJRT path serves its staged calibration.
+    pub fn recalibrate(&mut self, reps: usize) -> anyhow::Result<CalibProfile> {
+        let reps = reps.max(1);
+        let sigma = self.noise_sigma;
+        let (chip, now_us) = (self.chip_ordinal, self.chip_time_us);
+        let profile = match &mut self.backend {
+            Backend::Native { halves } => CalibProfile::measure(
+                halves,
+                &mut self.calib_rng,
+                reps,
+                sigma,
+                chip,
+                now_us,
+            ),
+            Backend::Pjrt { .. } => anyhow::bail!(
+                "recalibration requires the native backend (the PJRT \
+                 artifact serves its staged calibration)"
+            ),
+        };
+        let cost = CalibProfile::measurement_cost_us(reps).round() as u64;
+        self.advance_chip_time_us(cost);
+        self.apply_profile(&profile);
+        Ok(profile)
     }
 }
 
@@ -582,7 +741,7 @@ impl ChipOps for Engine {
             .map(|bank| bank[self.batch_sample][pass].clone());
         let noise = banked.unwrap_or_else(|| self.sample_noise());
         let x: Vec<f32> = self.queued[h].clone();
-        let out: Vec<i32> = match &mut self.backend {
+        let mut out: Vec<i32> = match &mut self.backend {
             Backend::Pjrt { vmm, staged } => {
                 let res = vmm.run_pass(&staged[pass], &x, &noise)?;
                 res.iter().map(|&v| v as i32).collect()
@@ -605,6 +764,11 @@ impl ChipOps for Engine {
                     .collect()
             }
         };
+        if let Some(corr) = &self.compensation {
+            // Profile compensation: the SIMD CPUs undo the measured
+            // per-column gain/offset right after the parallel readout.
+            corr[h].apply_i32(&mut out);
+        }
         self.adc_latch[h] = out;
         self.queued[h].fill(0.0);
         self.chip_stats.vmm_cycles += 1;
@@ -867,5 +1031,164 @@ mod tests {
             EngineConfig { use_pjrt: false, ..Default::default() },
         );
         assert!(eng.classify_batch(&[]).is_err());
+    }
+
+    #[test]
+    fn chip_time_advances_with_serving_and_idle() {
+        let mut eng = Engine::native(
+            tiny_model(),
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        assert_eq!(eng.chip_time_us(), 0);
+        let trace = crate::ecg::gen::generate_trace(40, false, 1.0);
+        let inf = eng.classify(&trace).unwrap();
+        let t1 = eng.chip_time_us();
+        assert_eq!(t1, (inf.sim_time_s * 1e6).round() as u64);
+        eng.advance_idle_us(1_000);
+        assert_eq!(eng.chip_time_us(), t1 + 1_000);
+        // No profile ever applied: the whole chip life is the calib age.
+        assert_eq!(eng.calib_age_us(), t1 + 1_000);
+        // A batch advances chip time once, by the batch program time.
+        let traces: Vec<_> = (0..4)
+            .map(|i| crate::ecg::gen::generate_trace(41 + i, i % 2 == 0, 1.0))
+            .collect();
+        let before = eng.chip_time_us();
+        let infs = eng.classify_batch(&traces).unwrap();
+        let batch_us = infs[0].sim_time_s * 1e6 * 4.0;
+        let grew = (eng.chip_time_us() - before) as f64;
+        assert!((grew - batch_us).abs() <= 1.0, "batch {batch_us} vs {grew}");
+    }
+
+    #[test]
+    fn recalibration_stamps_profile_and_resets_age() {
+        let mut eng = Engine::native(
+            tiny_model(),
+            EngineConfig {
+                use_pjrt: false,
+                noise_off: true,
+                fpn_seed: Some(0xF1),
+                chip: 7,
+                ..Default::default()
+            },
+        );
+        eng.advance_idle_us(5_000);
+        assert!(eng.calib_profile().is_none());
+        let p = eng.recalibrate(16).unwrap();
+        assert_eq!(p.chip, 7);
+        assert_eq!(p.chip_time_us, 5_000, "stamped at measurement start");
+        assert_eq!(p.reps, 16);
+        assert!(eng.calib_profile().is_some());
+        assert_eq!(eng.calib_age_us(), 0, "age resets at application");
+        // The measurement itself consumed chip time.
+        let cost = CalibProfile::measurement_cost_us(16).round() as u64;
+        assert_eq!(eng.chip_time_us(), 5_000 + cost);
+    }
+
+    /// The heart of the subsystem: on a drifted chip, a *fresh* profile
+    /// recovers (near-)ideal predictions while a stale day-0 profile
+    /// deviates measurably.
+    #[test]
+    fn recalibration_compensates_a_drifted_chip() {
+        let drift = DriftParams {
+            tau_us: 100_000.0,
+            sigma_gain: 0.05,
+            sigma_offset: 8.0,
+            temp_amplitude_k: 0.0,
+            ..Default::default()
+        };
+        let mk = |drift: Option<DriftParams>| {
+            Engine::native(
+                tiny_model(),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    fpn_seed: Some(0xF1D0),
+                    drift,
+                    ..Default::default()
+                },
+            )
+        };
+        let traces: Vec<_> = (0..8)
+            .map(|i| crate::ecg::gen::generate_trace(900 + i, i % 2 == 0, 1.0))
+            .collect();
+        // Reference: same silicon, freshly compensated, frozen pattern.
+        let mut fresh = mk(None);
+        fresh.recalibrate(64).unwrap();
+        let reference: Vec<[f32; 2]> = traces
+            .iter()
+            .map(|t| fresh.classify(t).unwrap().scores)
+            .collect();
+
+        let dev_of = |eng: &mut Engine| -> f64 {
+            let mut dev = 0.0f64;
+            for (t, want) in traces.iter().zip(&reference) {
+                let got = eng.classify(t).unwrap().scores;
+                dev += (got[0] - want[0]).abs() as f64
+                    + (got[1] - want[1]).abs() as f64;
+            }
+            dev / (2.0 * traces.len() as f64)
+        };
+
+        // Stale arm: day-0 profile, then 20 relaxation times of drift.
+        let mut stale = mk(Some(drift));
+        stale.recalibrate(64).unwrap();
+        stale.advance_idle_us(2_000_000);
+        let dev_stale = dev_of(&mut stale);
+
+        // Recalibrated arm: identical silicon + drift path, but the
+        // profile is re-measured after the wander.
+        let mut recal = mk(Some(drift));
+        recal.recalibrate(64).unwrap();
+        recal.advance_idle_us(2_000_000);
+        recal.recalibrate(64).unwrap();
+        let dev_recal = dev_of(&mut recal);
+
+        assert!(
+            dev_stale > 2.0,
+            "stale profile must deviate measurably, got {dev_stale}"
+        );
+        assert!(
+            dev_recal < dev_stale,
+            "recalibration must beat the stale profile \
+             ({dev_recal} vs {dev_stale})"
+        );
+        assert!(
+            dev_recal <= 8.0,
+            "fresh profile must track the ideal substrate, got {dev_recal}"
+        );
+    }
+
+    #[test]
+    fn recalibration_preserves_serving_weights_and_residency() {
+        // A recalibration mid-serving must leave the synapse matrices (and
+        // thus subsequent predictions) exactly as a never-recalibrated
+        // engine sees them, modulo the applied compensation.  With an
+        // ideal substrate the measured profile is near-identity, so the
+        // *predictions* must survive recalibration unchanged.
+        let mk = || {
+            Engine::native(
+                tiny_model(),
+                EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+            )
+        };
+        let trace = crate::ecg::gen::generate_trace(55, true, 1.0);
+        let mut control = mk();
+        let a = control.classify(&trace).unwrap();
+        let mut eng = mk();
+        assert!(eng.supports_recalibration(), "native backend measures");
+        let b0 = eng.classify(&trace).unwrap();
+        eng.recalibrate(32).unwrap();
+        let b1 = eng.classify(&trace).unwrap();
+        assert_eq!(a.pred, b0.pred);
+        assert_eq!(a.scores, b0.scores);
+        // Near-identity compensation: scores stay within a few LSB
+        // (quantisation of the noise-free two-point fit).
+        assert!(
+            (b1.scores[0] - b0.scores[0]).abs() <= 4.0
+                && (b1.scores[1] - b0.scores[1]).abs() <= 4.0,
+            "recalibration perturbed an ideal chip: {:?} -> {:?}",
+            b0.scores,
+            b1.scores
+        );
     }
 }

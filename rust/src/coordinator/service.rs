@@ -31,6 +31,10 @@
 //! <- {"ok": true, "served": n, "mean_time_us": t, "chips": c, "shed": s}
 //! -> {"cmd": "fleet_stats"}
 //! <- {"ok": true, "chips": c, ..., "per_chip": [...]}
+//! -> {"cmd": "recalibrate", "chip": c, "reps": r}
+//! <- {"ok": true, "chip": c, "chip_time_us": t, "residual_rms": x,
+//!     "reason": "..."}   (drain -> calibrate -> re-admit; blocks until
+//!                         the measurement finished)
 //! -> {"cmd": "ping"} | {"cmd": "shutdown"}
 //! ```
 
@@ -176,6 +180,12 @@ fn json_str(s: &str) -> String {
 /// and reply sizes; larger batches should be split by the client anyway).
 pub const MAX_WIRE_BATCH: usize = 64;
 
+/// Largest accepted `recalibrate` repetition count: one request must not
+/// wedge a chip in `Calibrating` (and suppress the fleet policy) for an
+/// unbounded measurement.  1024 reps ≈ 6k integrations per half, already
+/// far past the point of diminishing noise suppression.
+pub const MAX_RECALIB_REPS: usize = 1024;
+
 /// One inference as the inner JSON object of a reply.
 fn inference_json(inf: &Inference) -> String {
     format!(
@@ -282,6 +292,31 @@ fn classify_batch_reply(fleet: &Fleet, traces: Vec<Trace>) -> String {
     }
 }
 
+/// Serve one `recalibrate` request: drain the chip, measure, re-admit.
+/// Blocks until the worker reports back (queued work drains first).
+fn recalibrate_reply(fleet: &Fleet, chip: usize, reps: usize) -> String {
+    match fleet.recalibrate_chip(chip, reps) {
+        Err(e) => {
+            format!("{{\"ok\":false,\"error\":{}}}", json_str(&e.to_string()))
+        }
+        Ok(rx) => match rx.recv() {
+            Err(mpsc::RecvError) => format!(
+                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
+            ),
+            Ok(reply) => match reply.result {
+                Ok((stamp, residual)) => format!(
+                    "{{\"ok\":true,\"chip\":{chip},\"chip_time_us\":{stamp},\
+                     \"residual_rms\":{residual:.4},\"reason\":\"{}\"}}",
+                    reply.reason.as_str()
+                ),
+                Err(e) => {
+                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
+                }
+            },
+        },
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     fleet: Arc<Fleet>,
@@ -335,6 +370,20 @@ fn handle_conn(
                     )
                 }
                 Some("fleet_stats") => fleet.stats_json(),
+                Some("recalibrate") => {
+                    let chip =
+                        req.get("chip").and_then(|c| c.as_usize()).unwrap_or(0);
+                    let reps =
+                        req.get("reps").and_then(|r| r.as_usize()).unwrap_or(32);
+                    if reps == 0 || reps > MAX_RECALIB_REPS {
+                        format!(
+                            "{{\"ok\":false,\"error\":\"reps must be in \
+                             1..={MAX_RECALIB_REPS}\"}}"
+                        )
+                    } else {
+                        recalibrate_reply(&fleet, chip, reps)
+                    }
+                }
                 Some("classify") => match parse_trace(&req) {
                     Err(e) => format!(
                         "{{\"ok\":false,\"error\":{}}}",
@@ -621,6 +670,57 @@ mod tests {
         assert_eq!(retry.get("ok"), Some(&Json::Bool(true)), "{retry}");
         assert_eq!(retry.get("accepted").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(retry.get("shed").and_then(|v| v.as_usize()), Some(0));
+        svc.stop();
+    }
+
+    #[test]
+    fn recalibrate_command_roundtrip() {
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig { chips: 2, queue_depth: 8, ..Default::default() },
+            |chip| {
+                Ok(Engine::native(
+                    crate::nn::weights::TrainedModel::synthetic(11),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        fpn_seed: Some(0xCA11B),
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let r = cl.call("{\"cmd\":\"recalibrate\",\"chip\":1,\"reps\":8}").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        assert_eq!(r.get("chip").and_then(|v| v.as_usize()), Some(1));
+        assert!(r.get("residual_rms").and_then(|v| v.as_f64()).is_some());
+        assert!(
+            r.get("chip_time_us").and_then(|v| v.as_f64()).unwrap() > 0.0,
+            "measurement consumed chip time: {r}"
+        );
+        // fleet_stats reports the completed recalibration per chip.
+        let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+        assert_eq!(
+            fs.get("recalibrations").and_then(|v| v.as_usize()),
+            Some(1),
+            "{fs}"
+        );
+        let per = fs.get("per_chip").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(
+            per[1].get("recalibrations").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        // Out-of-range chip errors cleanly.
+        let bad = cl.call("{\"cmd\":\"recalibrate\",\"chip\":9}").unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+        // Unbounded reps are rejected before touching the fleet.
+        let bad = cl
+            .call("{\"cmd\":\"recalibrate\",\"chip\":0,\"reps\":1000000000}")
+            .unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{bad}");
         svc.stop();
     }
 

@@ -7,8 +7,18 @@
 //! chips are periodically *probed* (one real request routed to them); a
 //! success re-admits the chip.  A chip whose engine never constructed, or
 //! whose worker thread died, is [`ChipState::Dead`] and never re-admitted.
+//!
+//! [`ChipState::Calibrating`] is the planned counterpart of Unhealthy: the
+//! pool takes a healthy replica out of rotation (drain → calibrate →
+//! re-admit, `calib::scheduler` policy), during which the scheduler must
+//! route it *neither* regular work *nor* probes.  Health additionally
+//! carries the chip-time counters the policy reads: the engine's served
+//! chip time, the stamp of the last applied calibration, and the worst
+//! residual of that profile's fit.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
 use std::sync::Mutex;
 
 /// Replica lifecycle state (stored as an `AtomicU8`).
@@ -20,6 +30,9 @@ pub enum ChipState {
     Unhealthy,
     /// Engine init failed or worker gone: never dispatched again.
     Dead,
+    /// Drained out of rotation for recalibration: no regular work, no
+    /// probes, until the measurement finishes.
+    Calibrating,
 }
 
 impl ChipState {
@@ -27,6 +40,7 @@ impl ChipState {
         match v {
             0 => ChipState::Healthy,
             1 => ChipState::Unhealthy,
+            3 => ChipState::Calibrating,
             _ => ChipState::Dead,
         }
     }
@@ -36,6 +50,7 @@ impl ChipState {
             ChipState::Healthy => "healthy",
             ChipState::Unhealthy => "unhealthy",
             ChipState::Dead => "dead",
+            ChipState::Calibrating => "calibrating",
         }
     }
 }
@@ -59,6 +74,17 @@ pub struct ChipHealth {
     /// Sum of simulated inference time [ns] over served jobs (paper
     /// accounting; ns so sub-µs precision survives millions of requests).
     sim_time_ns_sum: AtomicU64,
+    /// Latest engine chip time [µs] (reported by the worker per job).
+    chip_time_us: AtomicU64,
+    /// Chip-time stamp of the last applied calibration [µs].
+    last_calib_us: AtomicU64,
+    /// Worst per-half residual rms of the applied profile (f32 bits).
+    residual_bits: AtomicU32,
+    /// Completed recalibrations.
+    recalibrations: AtomicU64,
+    /// Whether the chip's engine backend supports recalibration at all
+    /// (false for PJRT replicas — the policy must never drain them).
+    calib_capable: AtomicBool,
     last_error: Mutex<Option<String>>,
 }
 
@@ -70,6 +96,11 @@ pub struct ChipHealthSnapshot {
     pub served: u64,
     pub errors: u64,
     pub mean_sim_time_us: f64,
+    /// Chip-time age of the applied calibration [µs].
+    pub calib_age_us: u64,
+    /// Worst residual rms of the applied profile [LSB] (0 before any).
+    pub residual_rms: f32,
+    pub recalibrations: u64,
     pub last_error: Option<String>,
 }
 
@@ -83,6 +114,11 @@ impl ChipHealth {
             consecutive_errors: AtomicU32::new(0),
             error_threshold: error_threshold.max(1),
             sim_time_ns_sum: AtomicU64::new(0),
+            chip_time_us: AtomicU64::new(0),
+            last_calib_us: AtomicU64::new(0),
+            residual_bits: AtomicU32::new(0f32.to_bits()),
+            recalibrations: AtomicU64::new(0),
+            calib_capable: AtomicBool::new(true),
             last_error: Mutex::new(None),
         }
     }
@@ -174,6 +210,83 @@ impl ChipHealth {
         *self.last_error.lock().unwrap() = Some(msg.to_string());
     }
 
+    // --- calibration state machine (drain -> calibrate -> re-admit) --------
+
+    pub fn is_calibrating(&self) -> bool {
+        self.state() == ChipState::Calibrating
+    }
+
+    /// Take a *healthy* chip out of rotation for recalibration.  Returns
+    /// false when the chip is not currently Healthy (racing dispatchers
+    /// resolve here: only one wins the CAS).  Jobs already queued drain
+    /// normally; the scheduler admits nothing new — not even probes.
+    pub fn begin_calibration(&self) -> bool {
+        self.state
+            .compare_exchange(0, 3, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Worker: recalibration finished — record the profile figures and
+    /// re-admit the chip.
+    pub fn finish_calibration(&self, chip_time_us: u64, residual_rms: f32) {
+        self.chip_time_us.store(chip_time_us, Ordering::Release);
+        self.last_calib_us.store(chip_time_us, Ordering::Release);
+        self.residual_bits
+            .store(residual_rms.to_bits(), Ordering::Release);
+        self.recalibrations.fetch_add(1, Ordering::Relaxed);
+        self.consecutive_errors.store(0, Ordering::Release);
+        // Calibrating -> Healthy; Dead stays dead.
+        let _ = self.state.compare_exchange(
+            3,
+            0,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// Worker: recalibration failed — park the chip Unhealthy so the
+    /// ordinary probe path decides whether it ever serves again.
+    pub fn fail_calibration(&self, msg: &str) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        *self.last_error.lock().unwrap() = Some(msg.to_string());
+        let _ = self.state.compare_exchange(
+            3,
+            1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// Worker: latest engine chip time after a served job [µs].
+    pub fn set_chip_time_us(&self, t: u64) {
+        self.chip_time_us.store(t, Ordering::Release);
+    }
+
+    /// Worker (at engine construction): this replica's backend cannot be
+    /// recalibrated — the policy and manual triggers must skip it.
+    pub fn set_calib_incapable(&self) {
+        self.calib_capable.store(false, Ordering::Release);
+    }
+
+    pub fn is_calib_capable(&self) -> bool {
+        self.calib_capable.load(Ordering::Acquire)
+    }
+
+    /// Chip-time age of the applied calibration [µs].
+    pub fn calib_age_us(&self) -> u64 {
+        self.chip_time_us
+            .load(Ordering::Acquire)
+            .saturating_sub(self.last_calib_us.load(Ordering::Acquire))
+    }
+
+    pub fn recalibrations(&self) -> u64 {
+        self.recalibrations.load(Ordering::Relaxed)
+    }
+
+    pub fn residual_rms(&self) -> f32 {
+        f32::from_bits(self.residual_bits.load(Ordering::Acquire))
+    }
+
     pub fn snapshot(&self) -> ChipHealthSnapshot {
         let served = self.served();
         let sim_ns = self.sim_time_ns_sum.load(Ordering::Relaxed);
@@ -187,6 +300,9 @@ impl ChipHealth {
             } else {
                 0.0
             },
+            calib_age_us: self.calib_age_us(),
+            residual_rms: self.residual_rms(),
+            recalibrations: self.recalibrations(),
             last_error: self.last_error.lock().unwrap().clone(),
         }
     }
@@ -258,6 +374,67 @@ mod tests {
         assert_eq!(h.inflight(), 0);
         assert_eq!(h.snapshot().errors, 1);
         assert!(h.is_dispatchable(), "one batch failure is one strike");
+    }
+
+    #[test]
+    fn calibration_state_machine() {
+        let h = ChipHealth::new(3);
+        assert!(h.begin_calibration(), "healthy chip may calibrate");
+        assert_eq!(h.state(), ChipState::Calibrating);
+        assert!(!h.is_dispatchable(), "no regular work while calibrating");
+        assert!(!h.is_probeable(), "no probes while calibrating");
+        assert!(!h.begin_calibration(), "second CAS must lose");
+        // Draining jobs admitted before the transition must not flip the
+        // state back to Healthy.
+        h.begin_job();
+        h.record_success(276_000);
+        assert_eq!(h.state(), ChipState::Calibrating, "drain keeps state");
+        h.finish_calibration(5_000, 1.25);
+        assert_eq!(h.state(), ChipState::Healthy, "re-admitted");
+        let s = h.snapshot();
+        assert_eq!(s.recalibrations, 1);
+        assert_eq!(s.calib_age_us, 0);
+        assert!((s.residual_rms - 1.25).abs() < 1e-6);
+        // Age grows as the worker reports served chip time.
+        h.set_chip_time_us(12_000);
+        assert_eq!(h.calib_age_us(), 7_000);
+    }
+
+    #[test]
+    fn incapable_chip_is_flagged_but_serves() {
+        let h = ChipHealth::new(3);
+        assert!(h.is_calib_capable());
+        h.set_calib_incapable();
+        assert!(!h.is_calib_capable());
+        assert!(h.is_dispatchable(), "incapable ≠ unhealthy");
+    }
+
+    #[test]
+    fn failed_calibration_parks_unhealthy() {
+        let h = ChipHealth::new(3);
+        assert!(h.begin_calibration());
+        h.fail_calibration("substrate unreachable");
+        assert_eq!(h.state(), ChipState::Unhealthy);
+        assert!(h.is_probeable(), "probe path decides re-admission");
+        assert_eq!(h.snapshot().errors, 1);
+        // A successful probe re-admits as usual.
+        h.begin_job();
+        h.record_success(276_000);
+        assert_eq!(h.state(), ChipState::Healthy);
+    }
+
+    #[test]
+    fn unhealthy_and_dead_chips_cannot_begin_calibration() {
+        let h = ChipHealth::new(1);
+        h.begin_job();
+        h.record_error("boom");
+        assert_eq!(h.state(), ChipState::Unhealthy);
+        assert!(!h.begin_calibration());
+        h.mark_dead("gone");
+        assert!(!h.begin_calibration());
+        // finish_calibration on a dead chip must not resurrect it.
+        h.finish_calibration(1, 0.5);
+        assert_eq!(h.state(), ChipState::Dead);
     }
 
     #[test]

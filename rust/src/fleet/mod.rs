@@ -19,9 +19,17 @@
 //!   slots, and a batch that only partially fits is partially admitted)
 //!   and explicit shed (backpressure) responses.
 //! * [`health`] — per-chip served/error/latency counters and the
-//!   unhealthy → drain → re-admit state machine.
+//!   unhealthy → drain → re-admit state machine (plus the
+//!   `Calibrating` drain state and calibration-age counters).
 //! * [`telemetry`] — fleet-wide latency histogram (p50/p95/p99) and
 //!   per-chip throughput, cross-checked against `util::stats`.
+//!
+//! The calibration loop (`calib` subsystem) is fleet-integrated here:
+//! `FleetConfig::recalib` arms an age-/margin-triggered policy under
+//! which the pool drains one replica at a time into
+//! `ChipState::Calibrating` (no regular work, no probes), re-measures its
+//! profile on the worker, and re-admits it — while the rest of the pool
+//! keeps serving.
 //!
 //! `coordinator::service` dispatches through a [`Fleet`]; `repro serve
 //! --chips N` sizes it from the CLI.
@@ -33,8 +41,8 @@ pub mod telemetry;
 
 pub use health::{ChipHealth, ChipHealthSnapshot, ChipState};
 pub use pool::{
-    BatchDispatchOutcome, ChipId, ChipReply, DispatchOutcome, Fleet,
-    FleetConfig,
+    BatchDispatchOutcome, CalibReply, ChipId, ChipReply, DispatchOutcome,
+    Fleet, FleetConfig,
 };
 pub use scheduler::ShedReason;
 pub use telemetry::{FleetTelemetry, LatencyHistogram, TelemetrySnapshot};
@@ -127,9 +135,60 @@ mod tests {
         assert_eq!(j.get("ok"), Some(&crate::util::json::Json::Bool(true)));
         assert_eq!(j.get("chips").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("calibrating").and_then(|v| v.as_usize()), Some(0));
         let per_chip = j.get("per_chip").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(per_chip.len(), 2);
+        // Calibration fields are reported per chip.
+        assert!(per_chip[0].get("calib_age_us").is_some());
+        assert!(per_chip[0].get("residual_rms").is_some());
+        assert!(per_chip[0].get("recalibrations").is_some());
         assert!(j.get("p99_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn manual_recalibration_drains_and_readmits() {
+        let fleet = native_fleet(2, 8);
+        let trace = crate::ecg::gen::generate_trace(9, false, 1.0);
+        fleet.classify_blocking(&trace).unwrap();
+        let rx = fleet.recalibrate_chip(0, 16).unwrap();
+        // The drain state is set synchronously by `recalibrate_chip`; by
+        // the time we look, the worker may already have finished and
+        // re-admitted the chip — both observations are valid, anything
+        // else is a state-machine bug.
+        let s0 = fleet.chip_snapshots()[0].clone();
+        assert!(
+            s0.state == ChipState::Calibrating
+                || (s0.state == ChipState::Healthy && s0.recalibrations == 1),
+            "unexpected state {:?}",
+            s0.state
+        );
+        // The pool keeps serving while chip 0 drains.  (The scheduler-
+        // level guarantee that a Calibrating chip is never picked is
+        // deterministic and lives in `scheduler::tests`; here we only
+        // assert the race-safe direction: a job that DID land on chip 0
+        // implies the chip had already been re-admitted.)
+        for _ in 0..8 {
+            let (chip, _) = fleet.classify_blocking(&trace).unwrap();
+            if chip == 0 {
+                assert_ne!(
+                    fleet.chip_snapshots()[0].state,
+                    ChipState::Calibrating,
+                    "calibrating chip was dispatched work"
+                );
+            }
+        }
+        let reply = rx.recv().expect("calibration reply");
+        assert_eq!(reply.chip, 0);
+        let (stamp, residual) = reply.result.expect("calibration succeeds");
+        assert!(stamp > 0, "measurement consumed chip time");
+        assert!(residual >= 0.0);
+        assert_eq!(fleet.recalibration_count(), 1);
+        let snap = &fleet.chip_snapshots()[0];
+        assert_eq!(snap.state, ChipState::Healthy, "re-admitted");
+        assert_eq!(snap.recalibrations, 1);
+        // Out-of-range chips are rejected up front.
+        assert!(fleet.recalibrate_chip(5, 4).is_err());
         fleet.shutdown();
     }
 }

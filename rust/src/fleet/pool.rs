@@ -10,10 +10,12 @@
 //! bit-identical to the single-unit paper setup while aggregate
 //! throughput scales with the chip count.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
+use crate::calib::monitor::DriftMonitor;
+use crate::calib::scheduler::{RecalibPolicy, RecalibReason};
 use crate::coordinator::engine::{Engine, Inference};
 use crate::ecg::gen::Trace;
 
@@ -23,6 +25,9 @@ use super::telemetry::FleetTelemetry;
 
 /// Index of a chip replica within the fleet.
 pub type ChipId = usize;
+
+/// EWMA weight of the per-chip drift monitors (one new margin sample).
+const MONITOR_ALPHA: f64 = 1.0 / 64.0;
 
 /// Fleet sizing and admission-control knobs.
 #[derive(Debug, Clone)]
@@ -36,6 +41,12 @@ pub struct FleetConfig {
     pub error_threshold: u32,
     /// Admissions between re-admission probes of unhealthy chips.
     pub probe_period: u64,
+    /// Auto-recalibration policy (`calib::scheduler`): when set, the pool
+    /// drains one aged/degraded replica at a time into
+    /// `ChipState::Calibrating` while the rest keep serving.  `None`
+    /// disables automatic recalibration (manual
+    /// [`Fleet::recalibrate_chip`] still works).
+    pub recalib: Option<RecalibPolicy>,
 }
 
 impl Default for FleetConfig {
@@ -45,6 +56,7 @@ impl Default for FleetConfig {
             queue_depth: 32,
             error_threshold: 3,
             probe_period: 64,
+            recalib: None,
         }
     }
 }
@@ -56,13 +68,29 @@ impl FleetConfig {
     }
 }
 
-/// One classification job for a chip worker: a batch of ≥ 1 traces the
-/// engine executes as one program (`Engine::classify_batch`, one weight
-/// reconfiguration per layer per batch).
-struct ChipJob {
-    traces: Vec<Trace>,
-    admitted: Instant,
-    resp: mpsc::Sender<ChipReply>,
+/// One unit of work for a chip worker.  The mpsc queue is FIFO, which is
+/// what gives `Calibrate` its drain semantics: classification jobs
+/// admitted before the state flipped to `Calibrating` complete first.
+enum ChipJob {
+    /// A batch of ≥ 1 traces the engine executes as one program
+    /// (`Engine::classify_batch`, one weight reconfiguration per layer
+    /// per batch).
+    Classify {
+        traces: Vec<Trace>,
+        admitted: Instant,
+        resp: mpsc::Sender<ChipReply>,
+    },
+    /// Full-chip recalibration (`Engine::recalibrate`): measure, apply,
+    /// re-admit.  `resp` is optional — policy-triggered recalibrations
+    /// are fire-and-forget, manual ones want the summary back.
+    /// `drain_token` (policy path only) is the pool-level one-at-a-time
+    /// latch; the worker releases it when the measurement finishes.
+    Calibrate {
+        reps: usize,
+        reason: RecalibReason,
+        resp: Option<mpsc::Sender<CalibReply>>,
+        drain_token: Option<Arc<AtomicBool>>,
+    },
 }
 
 /// Worker's answer to one job: one `Inference` per admitted sample.
@@ -72,6 +100,15 @@ pub struct ChipReply {
     /// Host latency from admission to completion [µs].
     pub host_latency_us: f64,
     pub result: Result<Vec<Inference>, String>,
+}
+
+/// Worker's answer to a recalibration job.
+#[derive(Debug)]
+pub struct CalibReply {
+    pub chip: ChipId,
+    pub reason: RecalibReason,
+    /// On success: (chip-time stamp [µs], worst per-half residual [LSB]).
+    pub result: Result<(u64, f32), String>,
 }
 
 /// Outcome of a single-trace admission attempt.
@@ -109,8 +146,18 @@ struct ChipHandle {
 pub struct Fleet {
     handles: Vec<ChipHandle>,
     health: Vec<Arc<ChipHealth>>,
+    /// Per-chip logit-margin monitors feeding the recalibration policy.
+    monitors: Vec<Arc<DriftMonitor>>,
     telemetry: Arc<FleetTelemetry>,
     scheduler: Scheduler,
+    /// Auto-recalibration policy (None = manual only).
+    recalib: Option<RecalibPolicy>,
+    /// Pool-level latch serialising *policy-triggered* drains: taken by
+    /// `maybe_recalibrate` before electing a chip, released by the
+    /// worker when the measurement finishes — so concurrent dispatchers
+    /// can never drain two replicas at once (the per-chip CAS alone only
+    /// serialises drains of the *same* chip).
+    policy_drain: Arc<AtomicBool>,
     /// Admissions refused at the transport layer (dead worker channels);
     /// scheduler-level sheds are counted separately.
     transport_rejects: AtomicU64,
@@ -130,12 +177,15 @@ impl Fleet {
         let telemetry = Arc::new(FleetTelemetry::new(cfg.chips));
         let mut handles = Vec::with_capacity(cfg.chips);
         let mut health = Vec::with_capacity(cfg.chips);
+        let mut monitors = Vec::with_capacity(cfg.chips);
         let (ack_tx, ack_rx) = mpsc::channel::<(ChipId, Result<(), String>)>();
 
         for chip in 0..cfg.chips {
             let (tx, rx) = mpsc::channel::<ChipJob>();
             let h = Arc::new(ChipHealth::new(cfg.error_threshold));
+            let m = Arc::new(DriftMonitor::new(MONITOR_ALPHA));
             let worker_health = h.clone();
+            let worker_monitor = m.clone();
             let worker_tel = telemetry.clone();
             let worker_make = make.clone();
             let worker_ack = ack_tx.clone();
@@ -147,12 +197,14 @@ impl Fleet {
                         rx,
                         worker_make,
                         worker_health,
+                        worker_monitor,
                         worker_tel,
                         worker_ack,
                     )
                 })?;
             handles.push(ChipHandle { tx: Mutex::new(Some(tx)), join: Some(join) });
             health.push(h);
+            monitors.push(m);
         }
         drop(ack_tx);
 
@@ -173,8 +225,11 @@ impl Fleet {
         let mut fleet = Fleet {
             handles,
             health,
+            monitors,
             telemetry,
             scheduler: Scheduler::new(cfg.queue_depth, cfg.probe_period),
+            recalib: cfg.recalib.clone(),
+            policy_drain: Arc::new(AtomicBool::new(false)),
             transport_rejects: AtomicU64::new(0),
         };
         if ok == 0 {
@@ -217,6 +272,11 @@ impl Fleet {
                 retry_after_us: 0,
             };
         }
+        // Piggyback the recalibration policy on the dispatch path: an
+        // aged/degraded healthy replica is drained into `Calibrating`
+        // *before* this request is placed, so the request never lands on
+        // a chip about to leave the pool.
+        self.maybe_recalibrate();
         // A dead worker channel is discovered lazily; retry the pick at
         // most once per chip before giving up.
         for _ in 0..self.handles.len() {
@@ -233,7 +293,7 @@ impl Fleet {
             let rest = traces.split_off(accepted.min(traces.len()));
             let (rtx, rrx) = mpsc::channel();
             self.health[chip].begin_jobs(traces.len());
-            let job = ChipJob {
+            let job = ChipJob::Classify {
                 traces,
                 admitted: Instant::now(),
                 resp: rtx,
@@ -257,14 +317,19 @@ impl Fleet {
                         retry_after_us,
                     };
                 }
-                Err(job) => {
+                Err(ChipJob::Classify { traces: reclaimed, .. }) => {
                     // Worker gone: reclaim the whole batch, mark the chip
                     // dead, and try the next candidate.
-                    self.health[chip]
-                        .record_batch_error(job.traces.len(), "worker channel closed");
+                    self.health[chip].record_batch_error(
+                        reclaimed.len(),
+                        "worker channel closed",
+                    );
                     self.health[chip].mark_dead("worker channel closed");
-                    traces = job.traces;
+                    traces = reclaimed;
                     traces.extend(rest);
+                }
+                Err(ChipJob::Calibrate { .. }) => {
+                    unreachable!("classify dispatch returned a calibrate job")
                 }
             }
         }
@@ -339,6 +404,150 @@ impl Fleet {
         (per * ((inflight / lanes) as f64 + 1.0)).max(1.0) as u64
     }
 
+    // --- recalibration (drain -> calibrate -> re-admit) --------------------
+
+    /// Policy check on the dispatch path: drain at most one aged or
+    /// margin-degraded replica into `Calibrating`, provided enough healthy
+    /// chips remain serving.  Cheap (a few atomic loads per chip).  The
+    /// pool-level `policy_drain` latch makes "one replica at a time"
+    /// exact even under concurrent dispatchers; replicas whose backend
+    /// cannot recalibrate (PJRT) are exempt rather than drained into a
+    /// doomed measurement.
+    fn maybe_recalibrate(&self) {
+        let Some(policy) = &self.recalib else {
+            return;
+        };
+        if self.calibrating_count() > 0 {
+            return; // a manual drain is already in progress
+        }
+        if self.healthy_count() <= policy.min_serving {
+            return; // never drain below the availability floor
+        }
+        if self
+            .policy_drain
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return; // another dispatcher holds the drain latch
+        }
+        for chip in 0..self.health.len() {
+            let h = &self.health[chip];
+            if !h.is_dispatchable() || !h.is_calib_capable() {
+                continue;
+            }
+            let reason = policy.should_recalibrate(
+                h.calib_age_us(),
+                self.monitors[chip].degradation(),
+            );
+            if let Some(reason) = reason {
+                if self.start_recalibration(
+                    chip,
+                    policy.reps,
+                    reason,
+                    None,
+                    Some(self.policy_drain.clone()),
+                ) {
+                    // Latch ownership handed to the worker, which
+                    // releases it when the measurement finishes.
+                    return;
+                }
+                // Failed start (lost the per-chip CAS, or the worker is
+                // gone): the token clone was *dropped*, never stored, so
+                // we still own the latch — keep scanning.
+            }
+        }
+        // No chip drained: we still own the latch; release it.
+        self.policy_drain.store(false, Ordering::Release);
+    }
+
+    /// Flip `chip` Healthy -> Calibrating and enqueue the measurement
+    /// behind its queued work (FIFO = drain).  Returns false if the chip
+    /// was not Healthy or its worker is gone.
+    ///
+    /// Drain-token ownership: the token is only *handed over* (to the
+    /// worker, which stores `false` when the measurement finishes) when
+    /// this returns true.  On every failure path the token clone is
+    /// dropped without a store, so the caller keeps ownership of the
+    /// latch — releasing here would let a concurrent dispatcher acquire
+    /// it while the caller is still scanning.
+    fn start_recalibration(
+        &self,
+        chip: ChipId,
+        reps: usize,
+        reason: RecalibReason,
+        resp: Option<mpsc::Sender<CalibReply>>,
+        drain_token: Option<Arc<AtomicBool>>,
+    ) -> bool {
+        if !self.health[chip].begin_calibration() {
+            return false;
+        }
+        let job = ChipJob::Calibrate { reps, reason, resp, drain_token };
+        let sent = {
+            let guard = self.handles[chip].tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(tx) => tx.send(job).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            // Worker gone: the chip leaves the pool for good.  (The
+            // undelivered job — and any token clone in it — was dropped.)
+            self.health[chip].mark_dead("worker channel closed");
+        }
+        sent
+    }
+
+    /// Manually drain `chip` for recalibration with `reps` measurement
+    /// repetitions.  Returns the receiver for the worker's summary.
+    ///
+    /// Manual drains honour the same availability rules as the policy
+    /// (best-effort under concurrent manual requests): one chip at a
+    /// time, and never the last healthy replica of a multi-chip pool.
+    /// A single-chip pool may drain itself — the operator accepts shed
+    /// responses until the measurement finishes.
+    pub fn recalibrate_chip(
+        &self,
+        chip: ChipId,
+        reps: usize,
+    ) -> anyhow::Result<mpsc::Receiver<CalibReply>> {
+        anyhow::ensure!(chip < self.handles.len(), "chip {chip} out of range");
+        anyhow::ensure!(
+            self.health[chip].is_calib_capable(),
+            "chip {chip}'s backend does not support recalibration"
+        );
+        anyhow::ensure!(
+            self.calibrating_count() == 0,
+            "another chip is already calibrating"
+        );
+        anyhow::ensure!(
+            self.handles.len() == 1 || self.healthy_count() > 1,
+            "refusing to drain the last healthy chip of the pool"
+        );
+        let (tx, rx) = mpsc::channel();
+        anyhow::ensure!(
+            self.start_recalibration(
+                chip,
+                reps,
+                RecalibReason::Aged,
+                Some(tx),
+                None
+            ),
+            "chip {chip} is not healthy (state {})",
+            self.health[chip].state().as_str()
+        );
+        Ok(rx)
+    }
+
+    /// Chips currently drained for recalibration.
+    pub fn calibrating_count(&self) -> usize {
+        self.health.iter().filter(|h| h.is_calibrating()).count()
+    }
+
+    /// Completed recalibrations across the fleet.
+    pub fn recalibration_count(&self) -> u64 {
+        self.health.iter().map(|h| h.recalibrations()).sum()
+    }
+
     pub fn size(&self) -> usize {
         self.handles.len()
     }
@@ -364,12 +573,15 @@ impl Fleet {
     pub fn stats_json(&self) -> String {
         let t = self.telemetry.snapshot();
         let mut s = format!(
-            "{{\"ok\":true,\"chips\":{},\"healthy\":{},\"served\":{},\
+            "{{\"ok\":true,\"chips\":{},\"healthy\":{},\"calibrating\":{},\
+             \"recalibrations\":{},\"served\":{},\
              \"shed\":{},\"mean_host_us\":{:.1},\"p50_us\":{:.1},\
              \"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_sim_time_us\":{:.3},\
              \"per_chip\":[",
             self.size(),
             self.healthy_count(),
+            self.calibrating_count(),
+            self.recalibration_count(),
             t.served,
             self.shed_count(),
             t.mean_host_us,
@@ -386,12 +598,16 @@ impl Fleet {
             s.push_str(&format!(
                 "{{\"chip\":{i},\"state\":\"{}\",\"served\":{},\
                  \"errors\":{},\"inflight\":{},\"mean_sim_time_us\":{:.3},\
-                 \"rate_per_s\":{rate:.2}}}",
+                 \"rate_per_s\":{rate:.2},\"calib_age_us\":{},\
+                 \"residual_rms\":{:.4},\"recalibrations\":{}}}",
                 h.state.as_str(),
                 h.served,
                 h.errors,
                 h.inflight,
                 h.mean_sim_time_us,
+                h.calib_age_us,
+                h.residual_rms,
+                h.recalibrations,
             ));
         }
         s.push_str("]}");
@@ -428,6 +644,7 @@ fn chip_worker<F>(
     rx: mpsc::Receiver<ChipJob>,
     make_engine: Arc<F>,
     health: Arc<ChipHealth>,
+    monitor: Arc<DriftMonitor>,
     telemetry: Arc<FleetTelemetry>,
     ack: mpsc::Sender<(ChipId, Result<(), String>)>,
 ) where
@@ -435,6 +652,12 @@ fn chip_worker<F>(
 {
     let mut engine = match make_engine(chip) {
         Ok(e) => {
+            // Record backend capability *before* acking, so once
+            // `Fleet::start` returns the recalibration policy can already
+            // see which replicas are exempt.
+            if !e.supports_recalibration() {
+                health.set_calib_incapable();
+            }
             let _ = ack.send((chip, Ok(())));
             drop(ack);
             e
@@ -445,46 +668,107 @@ fn chip_worker<F>(
             drop(ack);
             // Drain with error replies so racing clients never hang.
             while let Ok(job) = rx.recv() {
-                health.record_batch_error(job.traces.len(), "engine init failed");
-                let _ = job.resp.send(ChipReply {
-                    chip,
-                    host_latency_us: job.admitted.elapsed().as_secs_f64() * 1e6,
-                    result: Err(format!("chip {chip}: engine init failed")),
-                });
+                match job {
+                    ChipJob::Classify { traces, admitted, resp } => {
+                        health.record_batch_error(
+                            traces.len(),
+                            "engine init failed",
+                        );
+                        let _ = resp.send(ChipReply {
+                            chip,
+                            host_latency_us: admitted.elapsed().as_secs_f64()
+                                * 1e6,
+                            result: Err(format!(
+                                "chip {chip}: engine init failed"
+                            )),
+                        });
+                    }
+                    ChipJob::Calibrate { reason, resp, drain_token, .. } => {
+                        health.fail_calibration("engine init failed");
+                        if let Some(resp) = resp {
+                            let _ = resp.send(CalibReply {
+                                chip,
+                                reason,
+                                result: Err(format!(
+                                    "chip {chip}: engine init failed"
+                                )),
+                            });
+                        }
+                        if let Some(t) = drain_token {
+                            t.store(false, Ordering::Release);
+                        }
+                    }
+                }
             }
             return;
         }
     };
 
     while let Ok(job) = rx.recv() {
-        let ChipJob { traces, admitted, resp } = job;
-        let samples = traces.len();
-        // One engine program per job: a 1-batch is bit-identical to the
-        // legacy single-trace path, larger batches amortise weight
-        // reconfiguration (Engine::classify_batch).
-        let result = match engine.classify_batch(&traces) {
-            Ok(infs) => {
-                let host_us = admitted.elapsed().as_secs_f64() * 1e6;
-                let mut total_sim_ns = 0u64;
-                for inf in &infs {
-                    let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
-                    total_sim_ns += sim_ns;
-                    telemetry.record(chip, host_us, sim_ns);
+        match job {
+            ChipJob::Classify { traces, admitted, resp } => {
+                let samples = traces.len();
+                // One engine program per job: a 1-batch is bit-identical
+                // to the legacy single-trace path, larger batches amortise
+                // weight reconfiguration (Engine::classify_batch).
+                let result = match engine.classify_batch(&traces) {
+                    Ok(infs) => {
+                        let host_us = admitted.elapsed().as_secs_f64() * 1e6;
+                        let mut total_sim_ns = 0u64;
+                        for inf in &infs {
+                            let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
+                            total_sim_ns += sim_ns;
+                            telemetry.record(chip, host_us, sim_ns);
+                            monitor.record_scores(&inf.scores);
+                        }
+                        health.record_batch_success(samples, total_sim_ns);
+                        health.set_chip_time_us(engine.chip_time_us());
+                        Ok(infs)
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        health.record_batch_error(samples, &msg);
+                        Err(format!("chip {chip}: {msg}"))
+                    }
+                };
+                // The client may have given up; a closed reply channel is
+                // fine.
+                let _ = resp.send(ChipReply {
+                    chip,
+                    host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
+                    result,
+                });
+            }
+            ChipJob::Calibrate { reps, reason, resp, drain_token } => {
+                // The FIFO queue already drained everything admitted
+                // before the state flipped to Calibrating.
+                let result = match engine.recalibrate(reps) {
+                    Ok(profile) => {
+                        let stamp = engine.chip_time_us();
+                        let residual = profile.worst_residual();
+                        health.finish_calibration(stamp, residual);
+                        monitor.reset();
+                        log::info!(
+                            "chip {chip}: recalibrated ({}), residual \
+                             {residual:.3} LSB",
+                            reason.as_str()
+                        );
+                        Ok((stamp, residual))
+                    }
+                    Err(e) => {
+                        let msg = format!("chip {chip}: {e}");
+                        health.fail_calibration(&msg);
+                        log::warn!("recalibration failed: {msg}");
+                        Err(msg)
+                    }
+                };
+                if let Some(t) = drain_token {
+                    t.store(false, Ordering::Release);
                 }
-                health.record_batch_success(samples, total_sim_ns);
-                Ok(infs)
+                if let Some(resp) = resp {
+                    let _ = resp.send(CalibReply { chip, reason, result });
+                }
             }
-            Err(e) => {
-                let msg = e.to_string();
-                health.record_batch_error(samples, &msg);
-                Err(format!("chip {chip}: {msg}"))
-            }
-        };
-        // The client may have given up; a closed reply channel is fine.
-        let _ = resp.send(ChipReply {
-            chip,
-            host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
-            result,
-        });
+        }
     }
 }

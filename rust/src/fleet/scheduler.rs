@@ -15,6 +15,9 @@
 //! 3. Every `probe_period`-th admission is offered to an *unhealthy*
 //!    (draining) chip first: one real request probes it, and a success
 //!    re-admits the chip (see `fleet::health`).
+//! 4. A chip in `ChipState::Calibrating` (drained for recalibration,
+//!    `calib::scheduler`) is invisible to both paths: it receives neither
+//!    regular work nor probes until the pool re-admits it.
 //!
 //! The inflight bound is soft under races (two concurrent admissions can
 //! both observe the same snapshot), so the true bound is
@@ -198,6 +201,31 @@ mod tests {
         // Draining four samples frees four slots.
         cs[0].record_batch_success(4, 4);
         assert_eq!(s.pick_batch(&cs, 8), Ok((0, 4)));
+    }
+
+    #[test]
+    fn calibrating_chip_never_picked_even_by_probes() {
+        let cs = chips(2);
+        assert!(cs[1].begin_calibration());
+        // Probe every 2nd admission: across many ticks, both the regular
+        // and the probe path must avoid the calibrating chip.
+        let s = Scheduler::new(8, 2);
+        for _ in 0..32 {
+            let (i, n) = s.pick_batch(&cs, 1).unwrap();
+            assert_eq!(i, 0, "calibrating chip received work");
+            assert_eq!(n, 1);
+            cs[0].begin_job();
+            cs[0].record_success(1);
+        }
+        // With every other chip saturated the request sheds rather than
+        // leaking onto the calibrating replica.
+        for _ in 0..8 {
+            cs[0].begin_job();
+        }
+        assert_eq!(s.pick_batch(&cs, 1), Err(ShedReason::Saturated));
+        // Re-admission makes it eligible again.
+        cs[1].finish_calibration(1_000, 0.5);
+        assert_eq!(s.pick(&cs), Ok(1));
     }
 
     #[test]

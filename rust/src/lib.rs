@@ -9,6 +9,8 @@
 //!
 //! Module map:
 //! * [`asic`] — the BSS-2 ASIC model (analog arrays, router, SIMD CPUs).
+//! * [`calib`] — calibration & drift compensation: per-chip profiles, the
+//!   analog drift model, and the fleet recalibration policy.
 //! * [`fpga`] — the system-controller fabric (DMA, preprocessing, buffers).
 //! * [`power`] — supply rails, INA219 sensors, energy model (Table 1).
 //! * [`runtime`] — PJRT client: loads and executes `artifacts/*.hlo.txt`.
@@ -22,6 +24,7 @@
 
 pub mod asic;
 pub mod baselines;
+pub mod calib;
 pub mod coordinator;
 pub mod ecg;
 pub mod fleet;

@@ -36,6 +36,7 @@ fn main() {
         "throughput" => throughput(&args),
         "baselines" => baselines_cmd(&args),
         "classify" => classify(&args),
+        "calibrate" => calibrate(&args),
         "serve" => serve(&args),
         "snn" => snn(&args),
         "" | "help" | "--help" => {
@@ -64,6 +65,9 @@ COMMANDS:
   throughput   Eq. 1-3: peak/effective rates, area efficiency
   baselines    §V energy comparison vs published platforms
   classify     classify synthetic traces   (--n 10 --native --batch 8)
+  calibrate    full-chip calibration run   (--reps 64 --chip 0 --idle-us T
+                                            --out FILE; writes the per-chip
+                                            profile artifact)
   serve        experiment service          (--addr 127.0.0.1:7001 --native
                                             --chips 4 --queue-depth 32)
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
@@ -77,6 +81,13 @@ OPTIONS (common):
   --chips N         serve: fleet of N engine replicas (default 1)
   --queue-depth M   serve: per-chip admission bound in samples before
                     shedding (classify_batch requests count per sample)
+  --fpn-seed S      native backend: draw a per-chip fixed-pattern
+                    realisation from seed S instead of the model's
+                    calibration vectors (heterogeneous-silicon regime)
+  --drift           native backend: enable the analog drift field (OU
+                    gain/offset wander + temperature; calib::drift)
+  --auto-recalib    serve: age-/margin-triggered auto-recalibration (one
+                    chip drains into `calibrating` while the rest serve)
 ";
 
 fn env_logger_init() {
@@ -105,17 +116,31 @@ fn artifact_dir(args: &Args) -> ArtifactDir {
     }
 }
 
-fn engine_config(args: &Args) -> EngineConfig {
-    EngineConfig {
+fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
+    // A typo'd seed must error, not silently fall back to different
+    // silicon (same contract as `u64_or` on every other numeric option).
+    let fpn_seed = match args.get("fpn-seed") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("--fpn-seed `{s}`: {e}"))?,
+        ),
+        None => None,
+    };
+    Ok(EngineConfig {
         use_pjrt: !args.flag("native"),
         noise_off: args.flag("noise-off"),
         nominal_calib: args.flag("nominal-calib"),
-        noise_seed: args.u64_or("noise-seed", 0x5EED).unwrap_or(0x5EED),
-    }
+        noise_seed: args.u64_or("noise-seed", 0x5EED)?,
+        chip: 0,
+        fpn_seed,
+        drift: args
+            .flag("drift")
+            .then(bss2::calib::drift::DriftParams::default),
+    })
 }
 
 fn make_engine(args: &Args) -> anyhow::Result<Engine> {
-    Engine::from_artifacts(&artifact_dir(args), engine_config(args))
+    Engine::from_artifacts(&artifact_dir(args), engine_config(args)?)
 }
 
 // --- selftest -----------------------------------------------------------------
@@ -160,7 +185,7 @@ fn selftest(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("model_testvec: {e}"))?;
     let mut engine = Engine::from_artifacts(
         &dir,
-        EngineConfig { noise_off: true, ..engine_config(args) },
+        EngineConfig { noise_off: true, ..engine_config(args)? },
     )?;
     for (i, case) in mv.req("cases")?.as_arr().unwrap().iter().enumerate() {
         let act = case.req("act")?.to_f32_vec()?;
@@ -397,18 +422,118 @@ fn classify(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Full-chip calibration run: measure both array halves, apply the
+/// profile, and persist it as a per-chip artifact (`calib_chip{N}.json`).
+/// Falls back to a synthetic native engine when no artifacts are present,
+/// so the calibration loop is exercisable out of the box.
+fn calibrate(args: &Args) -> anyhow::Result<()> {
+    use bss2::nn::weights::TrainedModel;
+    use bss2::util::stats::Summary;
+
+    let chip = args.usize_or("chip", 0)?;
+    let reps = args.usize_or("reps", 64)?.max(1);
+    let idle_us = args.u64_or("idle-us", 0)?;
+    let dir = artifact_dir(args);
+    // Calibrating an unknown substrate only makes sense with a per-chip
+    // fixed pattern; default one in when the user did not pick a seed.
+    let mut cfg = EngineConfig { chip, ..engine_config(args)? };
+    if cfg.fpn_seed.is_none() {
+        cfg.fpn_seed = Some(0xCA11B);
+    }
+    let mut engine = if dir.exists() {
+        Engine::from_artifacts(&dir, EngineConfig { use_pjrt: false, ..cfg })?
+    } else {
+        println!(
+            "[calibrate] no artifacts under {} — synthetic native engine",
+            dir.root.display()
+        );
+        Engine::native(
+            TrainedModel::synthetic(0xF1EE7),
+            EngineConfig { use_pjrt: false, ..cfg },
+        )
+    };
+    if idle_us > 0 {
+        engine.advance_idle_us(idle_us);
+        println!("[calibrate] aged chip by {idle_us} µs of idle chip time");
+    }
+
+    let t0 = engine.chip_time_us();
+    let profile = engine.recalibrate(reps)?;
+    for h in 0..2 {
+        let g: Vec<f64> =
+            profile.gain[h].iter().map(|&v| v as f64).collect();
+        let o: Vec<f64> =
+            profile.offset[h].iter().map(|&v| v as f64).collect();
+        let (gs, os) = (Summary::from(&g), Summary::from(&o));
+        println!(
+            "[calibrate] half {h}: gain {:.4} ± {:.4}, offset {:+.3} ± {:.3} \
+             LSB, residual {:.3} LSB",
+            gs.mean, gs.std, os.mean, os.std, profile.residual_rms[h]
+        );
+    }
+    println!(
+        "[calibrate] chip {chip}: measured at t={t0} µs with {reps} reps \
+         (cost {:.0} µs of chip time); profile applied to the serving path",
+        bss2::calib::CalibProfile::measurement_cost_us(reps)
+    );
+
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => dir.calib_profile(chip),
+    };
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    profile.save(&out)?;
+    println!("[calibrate] profile -> {}", out.display());
+    Ok(())
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
     use bss2::fleet::FleetConfig;
     let addr = args.str_or("addr", "127.0.0.1:7001");
     let chips = args.usize_or("chips", 1)?;
     let queue_depth = args.usize_or("queue-depth", 32)?;
     let dir = artifact_dir(args);
-    let cfg = engine_config(args);
-    let fleet_cfg = FleetConfig { chips, queue_depth, ..Default::default() };
+    let cfg = engine_config(args)?;
+    // --auto-recalib arms the drain -> calibrate -> re-admit loop.  Only
+    // meaningful with --native --drift, where the substrate actually
+    // wanders; PJRT replicas report themselves calibration-incapable and
+    // the policy exempts them.
+    let fleet_cfg = FleetConfig {
+        chips,
+        queue_depth,
+        recalib: args
+            .flag("auto-recalib")
+            .then(bss2::calib::RecalibPolicy::default),
+        ..Default::default()
+    };
     let svc = bss2::coordinator::service::Service::start_fleet(
         &addr,
         fleet_cfg,
-        move |chip| Engine::from_artifacts(&dir, cfg.clone().for_chip(chip)),
+        move |chip| {
+            let mut engine =
+                Engine::from_artifacts(&dir, cfg.clone().for_chip(chip))?;
+            // Close the measurement -> serving loop: a profile written by
+            // `repro calibrate` (or a previous serving run) is applied at
+            // construction; a corrupt artifact fails the chip loudly
+            // rather than serving uncompensated.
+            let profile_path = dir.calib_profile(chip);
+            if profile_path.exists() {
+                let profile = bss2::calib::CalibProfile::load(&profile_path)?;
+                engine.apply_profile(&profile);
+                log::info!(
+                    "chip {chip}: applied calibration profile {} (measured \
+                     at t={} µs, {} reps)",
+                    profile_path.display(),
+                    profile.chip_time_us,
+                    profile.reps
+                );
+            }
+            Ok(engine)
+        },
     )?;
     println!(
         "[serve] experiment service on {} — fleet of {} chip{} \

@@ -64,6 +64,10 @@ pub struct NativeRunner {
     passes: usize,
     weight_loads: usize,
     pub noise: Vec<f32>,
+    /// Optional post-ADC calibration correction (`calib::profile`): undoes
+    /// the measured per-column gain/offset right after readout, the same
+    /// place the engine applies it.
+    correction: Option<crate::calib::ColumnCorrection>,
 }
 
 impl Default for NativeRunner {
@@ -74,16 +78,36 @@ impl Default for NativeRunner {
 
 impl NativeRunner {
     pub fn new() -> NativeRunner {
+        Self::with_calib(ColumnCalib::nominal(c::N_COLS))
+    }
+
+    /// A runner over a substrate with the given per-column fixed pattern
+    /// (pair with [`set_correction`](NativeRunner::set_correction) to run
+    /// profile-compensated).
+    pub fn with_calib(calib: ColumnCalib) -> NativeRunner {
         NativeRunner {
-            array: AnalogArray::new(
-                c::K_LOGICAL,
-                c::N_COLS,
-                ColumnCalib::nominal(c::N_COLS),
-            ),
+            array: AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib),
             passes: 0,
             weight_loads: 0,
             noise: vec![0.0; c::N_COLS],
+            correction: None,
         }
+    }
+
+    /// Apply (or clear) a measured calibration correction.
+    pub fn set_correction(
+        &mut self,
+        correction: Option<crate::calib::ColumnCorrection>,
+    ) {
+        if let Some(corr) = &correction {
+            assert_eq!(corr.len(), c::N_COLS, "correction column count");
+        }
+        self.correction = correction;
+    }
+
+    /// The substrate this runner integrates on (tests/calibration).
+    pub fn array_mut(&mut self) -> &mut AnalogArray {
+        &mut self.array
     }
 
     /// Pack a logical tile into the physical array (zero-padded) and
@@ -122,7 +146,13 @@ impl NativeRunner {
         x_phys[..in_len].copy_from_slice(x);
         let out = self.array.integrate(&x_phys, scale, &self.noise, false);
         self.passes += 1;
-        Ok(out[..out_len].to_vec())
+        let mut out = out[..out_len].to_vec();
+        if let Some(corr) = &self.correction {
+            // Tiles occupy the column prefix, so the per-column correction
+            // indexes line up with the tile output.
+            corr.apply_i16(&mut out);
+        }
+        Ok(out)
     }
 }
 
@@ -520,6 +550,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn profile_correction_recovers_nominal_layer() {
+        use crate::asic::array::ColumnCalib;
+        use crate::calib::ColumnCorrection;
+
+        let mut rng = SplitMix64::new(31);
+        let layer = rand_layer(&mut rng, 200, 120, false);
+        let x: Vec<u8> = (0..200).map(|_| rng.below(3) as u8).collect();
+        let plan = partition(200, 120, 2);
+        let mut nominal = NativeRunner::new();
+        let want = run_layer(&mut nominal, &layer, &plan, &x).unwrap();
+
+        let mut fpn_rng = SplitMix64::new(77);
+        let calib = ColumnCalib::fixed_pattern(c::N_COLS, &mut fpn_rng);
+        // Uncompensated fixed pattern: raw deviation from the ideal.
+        let mut raw = NativeRunner::with_calib(calib.clone());
+        let got_raw = run_layer(&mut raw, &layer, &plan, &x).unwrap();
+        // Measure the pattern (noise-free) and run compensated.
+        let mut comp = NativeRunner::with_calib(calib);
+        let m = crate::asic::calib::calibrate_half_with(
+            comp.array_mut(),
+            &mut SplitMix64::new(5),
+            16,
+            0.0,
+        );
+        comp.set_correction(Some(ColumnCorrection::from_measured(
+            &m.gain_est,
+            &m.offset_est,
+        )));
+        let got = run_layer(&mut comp, &layer, &plan, &x).unwrap();
+
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 3,
+                "col {i}: compensated {g} vs nominal {w}"
+            );
+        }
+        let dev = |a: &[i32]| -> i64 {
+            a.iter().zip(&want).map(|(v, w)| (v - w).abs() as i64).sum()
+        };
+        assert!(
+            dev(&got) <= dev(&got_raw),
+            "compensation must not be worse than the raw fixed pattern \
+             ({} vs {})",
+            dev(&got),
+            dev(&got_raw)
+        );
     }
 
     #[test]

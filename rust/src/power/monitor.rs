@@ -101,14 +101,40 @@ impl BlockMeasurement {
         }
     }
 
+    /// Sensor lookup; `None` when no monitor was configured for the rail.
+    pub fn sensor(&self, component: Component) -> Option<&Ina219> {
+        self.sensors.iter().find(|s| s.component == component)
+    }
+
+    /// Mutable accessor that registers a sensor for the rail on first use,
+    /// so a misconfigured sensor set cannot crash the power pipeline.
+    pub fn sensor_mut(&mut self, component: Component) -> &mut Ina219 {
+        if let Some(i) =
+            self.sensors.iter().position(|s| s.component == component)
+        {
+            return &mut self.sensors[i];
+        }
+        self.sensors.push(Ina219::for_component(component));
+        self.sensors.last_mut().unwrap()
+    }
+
     /// Per-inference energy of one component as the sensors saw it [J].
+    /// A rail without a configured sensor reads 0 J (nothing was sampled)
+    /// instead of panicking the pipeline — loudly, so a misconfigured
+    /// sensor set corrupting a Table-1 figure is visible in the logs.
     pub fn measured_j(&self, component: Component) -> f64 {
-        let sensor = self
-            .sensors
-            .iter()
-            .find(|s| s.component == component)
-            .expect("sensor exists");
-        sensor.mean_w() * self.block_duration_s / self.block_len as f64
+        match self.sensor(component) {
+            Some(s) => {
+                s.mean_w() * self.block_duration_s / self.block_len as f64
+            }
+            None => {
+                log::warn!(
+                    "power monitor: no sensor configured for the \
+                     {component:?} rail — reporting 0 J"
+                );
+                0.0
+            }
+        }
     }
 
     pub fn measured_total_j(&self) -> f64 {
@@ -167,6 +193,25 @@ mod tests {
             (per_inf - want).abs() / want < 0.02,
             "measured {per_inf} want {want}"
         );
+    }
+
+    #[test]
+    fn missing_sensor_reads_zero_instead_of_panicking() {
+        let mut bm = BlockMeasurement::new(500);
+        // A misconfigured rail: the ASIC-analog sensor was never fitted.
+        bm.sensors.retain(|s| s.component != Component::AsicAnalog);
+        bm.record_block(&[(Component::AsicAnalog, 1.0)], 0.1);
+        assert_eq!(bm.measured_j(Component::AsicAnalog), 0.0);
+        // The total still sums the rails that do have sensors.
+        let _ = bm.measured_total_j();
+        // The mutable accessor registers the sensor on first use.
+        let s = bm.sensor_mut(Component::AsicAnalog);
+        assert_eq!(s.component, Component::AsicAnalog);
+        assert!(bm.sensor(Component::AsicAnalog).is_some());
+        // Registering is idempotent: no duplicate sensors.
+        let n = bm.sensors.len();
+        let _ = bm.sensor_mut(Component::AsicAnalog);
+        assert_eq!(bm.sensors.len(), n);
     }
 
     #[test]

@@ -61,6 +61,12 @@ impl ArtifactDir {
         self.path("ecg_test.bin")
     }
 
+    /// Per-chip calibration profile (`repro calibrate`, fleet
+    /// recalibration): measured gain/offset + residual + chip-time stamp.
+    pub fn calib_profile(&self, chip: usize) -> PathBuf {
+        self.path(&format!("calib_chip{chip}.json"))
+    }
+
     pub fn exists(&self) -> bool {
         self.manifest().exists() && self.vmm_hlo().exists()
     }
@@ -165,6 +171,10 @@ mod tests {
         let d = ArtifactDir::new("/tmp/x");
         assert_eq!(d.vmm_hlo(), PathBuf::from("/tmp/x/vmm.hlo.txt"));
         assert_eq!(d.weights(), PathBuf::from("/tmp/x/weights.json"));
+        assert_eq!(
+            d.calib_profile(3),
+            PathBuf::from("/tmp/x/calib_chip3.json")
+        );
     }
 
     #[test]

@@ -13,6 +13,16 @@ use anyhow::Context;
 
 use crate::asic::consts as c;
 
+/// Typed staging failure: the device-buffer count did not match the
+/// executable's operand layout.  Returned (never panicked) so a runtime
+/// mismatch degrades into an error the engine/fleet can report.
+#[derive(Debug, thiserror::Error)]
+#[error("staging produced {got} device buffers, expected {expected}")]
+pub struct WrongBufferCount {
+    pub expected: usize,
+    pub got: usize,
+}
+
 /// A PJRT CPU client plus compiled executables.
 pub struct Runtime {
     pub client: xla::PjRtClient,
@@ -118,17 +128,21 @@ impl VmmExecutable {
                     .map_err(|e| anyhow::anyhow!("stage buffer: {e}"))?,
             );
         }
-        let scale_b = bufs.pop().unwrap();
-        let offset_b = bufs.pop().unwrap();
-        let gain_b = bufs.pop().unwrap();
-        let w_b = bufs.pop().unwrap();
-        Ok(StagedPass {
-            w: w_b,
-            gain: gain_b,
-            offset: offset_b,
-            scale: scale_b,
-            _keep: lits,
-        })
+        let got = bufs.len();
+        if got != 4 {
+            return Err(WrongBufferCount { expected: 4, got }.into());
+        }
+        let mut it = bufs.into_iter();
+        match (it.next(), it.next(), it.next(), it.next()) {
+            (Some(w), Some(gain), Some(offset), Some(scale)) => Ok(StagedPass {
+                w,
+                gain,
+                offset,
+                scale,
+                _keep: lits,
+            }),
+            _ => Err(WrongBufferCount { expected: 4, got }.into()),
+        }
     }
 
     /// One integration cycle against staged weights.  `x` are 5-bit
@@ -262,5 +276,19 @@ impl ModelExecutable {
             .to_tuple1()
             .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
         out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrong_buffer_count_is_typed_and_described() {
+        let err: anyhow::Error = WrongBufferCount { expected: 4, got: 3 }.into();
+        assert!(err.downcast_ref::<WrongBufferCount>().is_some());
+        let msg = err.to_string();
+        assert!(msg.contains("expected 4"), "{msg}");
+        assert!(msg.contains("3 device buffers"), "{msg}");
     }
 }

@@ -1,0 +1,214 @@
+//! Integration: the calibration & drift-compensation subsystem.
+//!
+//! (a) Property: profile-compensated inference on a *drifted* array
+//!     recovers (within tolerance) the predictions of a freshly
+//!     calibrated chip, and is never worse than serving on a stale
+//!     day-0 profile.
+//! (b) The fleet's drain → `Calibrating` → re-admit state machine holds
+//!     under concurrent dispatch: every request completes, no request is
+//!     lost to a draining chip, and recalibrated chips return to service.
+//! (c) The age-triggered auto-recalibration policy fires during normal
+//!     serving and the pool never stops serving while it does.
+
+use std::sync::Arc;
+
+use bss2::calib::{DriftParams, RecalibPolicy};
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::gen::TraceStream;
+use bss2::fleet::{ChipState, Fleet, FleetConfig};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::propcheck;
+
+fn drifted_engine(
+    fpn_seed: u64,
+    noise_seed: u64,
+    drift: Option<DriftParams>,
+) -> Engine {
+    Engine::native(
+        TrainedModel::synthetic(0xF1EE7),
+        EngineConfig {
+            use_pjrt: false,
+            noise_off: true,
+            noise_seed,
+            fpn_seed: Some(fpn_seed),
+            drift,
+            ..Default::default()
+        },
+    )
+}
+
+/// (a) The satellite property: compensation against a *fresh* profile
+/// tracks the freshly calibrated chip; a stale profile does not get
+/// better than that.
+#[test]
+fn compensated_drifted_chip_recovers_fresh_predictions() {
+    propcheck::check("drift_recovery", 4, 0xCA11B, |g| {
+        let fpn_seed = g.rng.next_u64();
+        let noise_seed = g.rng.next_u64();
+        let drift = DriftParams {
+            tau_us: 100_000.0,
+            sigma_gain: 0.05,
+            sigma_offset: g.f64_in(6.0, 12.0),
+            temp_amplitude_k: 0.0,
+            ..Default::default()
+        };
+        let age_us = 300_000; // 3 relaxation times: near-stationary wander
+        let traces: Vec<_> = TraceStream::new(g.rng.next_u64(), 1.0)
+            .take(6)
+            .collect();
+
+        // Fresh reference: frozen pattern, compensated at measurement.
+        let mut fresh = drifted_engine(fpn_seed, noise_seed, None);
+        fresh.recalibrate(32).map_err(|e| e.to_string())?;
+        let mut reference = Vec::new();
+        for t in &traces {
+            reference.push(fresh.classify(t).map_err(|e| e.to_string())?.scores);
+        }
+        let dev_of = |eng: &mut Engine| -> Result<f64, String> {
+            let mut dev = 0.0;
+            for (t, want) in traces.iter().zip(&reference) {
+                let got =
+                    eng.classify(t).map_err(|e| e.to_string())?.scores;
+                dev += (got[0] - want[0]).abs() as f64
+                    + (got[1] - want[1]).abs() as f64;
+            }
+            Ok(dev / (2.0 * traces.len() as f64))
+        };
+
+        // Stale arm: day-0 profile, then age_us of drift.
+        let mut stale = drifted_engine(fpn_seed, noise_seed, Some(drift));
+        stale.recalibrate(32).map_err(|e| e.to_string())?;
+        stale.advance_idle_us(age_us);
+        let dev_stale = dev_of(&mut stale)?;
+
+        // Recalibrated arm: identical silicon + drift path, profile
+        // re-measured after the wander.
+        let mut recal = drifted_engine(fpn_seed, noise_seed, Some(drift));
+        recal.recalibrate(32).map_err(|e| e.to_string())?;
+        recal.advance_idle_us(age_us);
+        recal.recalibrate(32).map_err(|e| e.to_string())?;
+        let dev_recal = dev_of(&mut recal)?;
+
+        bss2::prop_assert!(
+            dev_recal <= 8.0,
+            "fresh profile must track the freshly calibrated chip \
+             (mean |score delta| {dev_recal})"
+        );
+        bss2::prop_assert!(
+            dev_recal <= dev_stale + 0.5,
+            "recalibration must not lose to the stale profile \
+             ({dev_recal} vs {dev_stale})"
+        );
+        Ok(())
+    });
+}
+
+/// (b) Drain -> Calibrating -> re-admit under concurrent dispatch.
+#[test]
+fn recalibration_state_machine_under_concurrent_dispatch() {
+    let drift = DriftParams::default();
+    let fleet = Arc::new(
+        Fleet::start(
+            FleetConfig { chips: 3, queue_depth: 64, ..Default::default() },
+            move |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        fpn_seed: Some(0xD81F7),
+                        drift: Some(drift),
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap(),
+    );
+
+    // Concurrent traffic across the pool while two chips recalibrate.
+    let mut clients = Vec::new();
+    for c in 0..4u64 {
+        let fleet = fleet.clone();
+        clients.push(std::thread::spawn(move || {
+            for trace in TraceStream::new(500 + c, 1.0).take(20) {
+                let (chip, inf) = fleet
+                    .classify_blocking(&trace)
+                    .expect("pool must keep serving during recalibration");
+                assert!(chip < 3);
+                assert!(inf.pred <= 1);
+            }
+        }));
+    }
+    for chip in [0usize, 1] {
+        let rx = fleet.recalibrate_chip(chip, 32).unwrap();
+        let reply = rx.recv().expect("worker reply");
+        assert_eq!(reply.chip, chip);
+        let (stamp, residual) = reply.result.expect("calibration succeeds");
+        assert!(stamp > 0);
+        assert!(residual < 3.0, "implausible residual {residual}");
+    }
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    assert_eq!(fleet.recalibration_count(), 2);
+    assert_eq!(fleet.calibrating_count(), 0, "everyone re-admitted");
+    assert_eq!(fleet.telemetry().served(), 80, "no request lost");
+    for snap in fleet.chip_snapshots() {
+        assert_eq!(snap.state, ChipState::Healthy);
+    }
+    // The served chip time and profile ages are visible in fleet stats.
+    let j = bss2::util::json::Json::parse(&fleet.stats_json()).unwrap();
+    assert_eq!(j.get("recalibrations").and_then(|v| v.as_usize()), Some(2));
+    Arc::try_unwrap(fleet).ok().expect("all clients joined").shutdown();
+}
+
+/// (c) Age-triggered auto-recalibration during normal serving: the policy
+/// drains chips on its own, one at a time, and the pool keeps serving.
+#[test]
+fn auto_recalibration_fires_while_pool_serves() {
+    let policy = RecalibPolicy {
+        max_age_us: 1_000, // a few inferences of chip time
+        margin_degrade_ratio: 0.0,
+        reps: 8,
+        min_serving: 1,
+    };
+    let fleet = Fleet::start(
+        FleetConfig {
+            chips: 2,
+            queue_depth: 64,
+            recalib: Some(policy),
+            ..Default::default()
+        },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(0xF1EE7),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    fpn_seed: Some(0xD81F7),
+                    drift: Some(DriftParams::default()),
+                    ..Default::default()
+                }
+                .for_chip(chip),
+            ))
+        },
+    )
+    .unwrap();
+
+    for trace in TraceStream::new(900, 1.0).take(40) {
+        // Never drains below min_serving, so blocking classify always
+        // finds a healthy chip.
+        let (chip, _) = fleet
+            .classify_blocking(&trace)
+            .expect("pool must keep serving under auto-recalibration");
+        assert!(chip < 2);
+        assert!(fleet.calibrating_count() <= 1, "one drain at a time");
+    }
+    assert!(
+        fleet.recalibration_count() >= 1,
+        "the age trigger must have fired during 40 served inferences"
+    );
+    fleet.shutdown();
+}
