@@ -35,5 +35,8 @@ pub mod scheduler;
 
 pub use drift::{DriftParams, DriftState, DRIFT_TICK_US};
 pub use monitor::{DriftMonitor, MarginSnapshot};
-pub use profile::{CalibProfile, ColumnCorrection, PROFILE_FORMAT};
+pub use profile::{
+    substrate_hash, CalibProfile, ColumnCorrection, UnsupportedFormat,
+    PROFILE_FORMAT,
+};
 pub use scheduler::{RecalibPolicy, RecalibReason};

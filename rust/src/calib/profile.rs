@@ -23,18 +23,66 @@ use crate::asic::consts as c;
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 
-/// Artifact format tag (bump on layout changes).
-pub const PROFILE_FORMAT: &str = "bss2-calib-v1";
+/// Artifact format tag (bump on layout changes).  v2 added the mandatory
+/// `substrate` identity hash.
+pub const PROFILE_FORMAT: &str = "bss2-calib-v2";
+
+/// [`CalibProfile::parse`] error for a well-formed artifact of a
+/// *different* format version.  Distinguished from corruption so loaders
+/// can treat a leftover older-version profile like any other
+/// inapplicable profile (skip and re-measure) instead of refusing to
+/// start, while still failing loudly on genuinely corrupt artifacts.
+#[derive(Debug)]
+pub struct UnsupportedFormat(pub String);
+
+impl std::fmt::Display for UnsupportedFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unsupported calib profile format `{}` (expected {})",
+            self.0, PROFILE_FORMAT
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedFormat {}
 
 /// Columns with a measured gain below this are treated as dead and left
 /// uncorrected (inverting a near-zero gain would amplify noise unboundedly).
 pub const MIN_CORRECTABLE_GAIN: f32 = 0.05;
+
+/// Identity of a native substrate: an FNV-1a hash over the un-drifted
+/// base calibration pattern (gain/offset bit patterns of both halves).
+/// The base pattern is fixed for the lifetime of a chip — drift wanders
+/// *around* it — so the hash names the silicon, not its current state.
+/// A profile is only meaningful on the silicon it was measured on:
+/// applying an inverse gain/offset measured elsewhere corrupts
+/// inferences instead of compensating them, so `Engine::apply_profile`
+/// verifies this hash before accepting a profile.
+pub fn substrate_hash(halves: &[AnalogArray; 2]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |bits: u32| {
+        h ^= bits as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for half in halves {
+        for &g in &half.calib.gain {
+            mix(g.to_bits());
+        }
+        for &o in &half.calib.offset {
+            mix(o.to_bits());
+        }
+    }
+    h
+}
 
 /// A versioned per-chip calibration measurement.
 #[derive(Debug, Clone)]
 pub struct CalibProfile {
     /// Fleet ordinal of the chip the profile was measured on.
     pub chip: usize,
+    /// [`substrate_hash`] of the silicon the measurement ran on.
+    pub substrate: u64,
     /// Chip-time stamp of the measurement [µs] (drift age reference).
     pub chip_time_us: u64,
     /// Measurement repetitions (noise suppressed by sqrt(reps)).
@@ -49,10 +97,12 @@ pub struct CalibProfile {
 
 impl CalibProfile {
     /// The ideal-substrate profile (gain 1, offset 0) — applying it is a
-    /// no-op correction.
+    /// no-op correction.  Its substrate hash is 0, which no measurable
+    /// substrate produces, so it never passes the apply-time check.
     pub fn nominal(chip: usize) -> CalibProfile {
         CalibProfile {
             chip,
+            substrate: 0,
             chip_time_us: 0,
             reps: 0,
             gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
@@ -79,6 +129,7 @@ impl CalibProfile {
         let m1 = calibrate_half_with(&mut halves[1], rng, reps, noise_sigma);
         CalibProfile {
             chip,
+            substrate: substrate_hash(halves),
             chip_time_us,
             reps,
             gain: [m0.gain_est, m1.gain_est],
@@ -116,6 +167,12 @@ impl CalibProfile {
         let mut m = std::collections::BTreeMap::new();
         m.insert("format".into(), Json::Str(PROFILE_FORMAT.into()));
         m.insert("chip".into(), Json::Num(self.chip as f64));
+        // Hex string, not a number: a u64 hash does not survive the f64
+        // round-trip a JSON number would impose.
+        m.insert(
+            "substrate".into(),
+            Json::Str(format!("{:016x}", self.substrate)),
+        );
         m.insert("chip_time_us".into(), Json::Num(self.chip_time_us as f64));
         m.insert("reps".into(), Json::Num(self.reps as f64));
         m.insert(
@@ -139,11 +196,16 @@ impl CalibProfile {
     pub fn parse(text: &str) -> anyhow::Result<CalibProfile> {
         let j = Json::parse(text)
             .map_err(|e| anyhow::anyhow!("calib profile: {e}"))?;
-        let format = j.req("format")?.as_str().unwrap_or("");
-        anyhow::ensure!(
-            format == PROFILE_FORMAT,
-            "unsupported calib profile format `{format}`"
-        );
+        // Only a well-formed *string* tag can name another version; a
+        // wrong-typed `format` is corruption and fails loudly like
+        // every other wrong-typed field.
+        let format = j
+            .req("format")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("format must be a string"))?;
+        if format != PROFILE_FORMAT {
+            return Err(UnsupportedFormat(format.into()).into());
+        }
         let pair = |key: &str| -> anyhow::Result<[Vec<f32>; 2]> {
             let arr = j
                 .req(key)?
@@ -163,14 +225,26 @@ impl CalibProfile {
         let offset = pair("offset")?;
         let resid = j.req("residual_rms")?.to_f32_vec()?;
         anyhow::ensure!(resid.len() == 2, "residual_rms needs 2 halves");
+        // A wrong-typed scalar is a corrupt artifact and must fail
+        // loudly, exactly like the gain/offset shape checks above — a
+        // silent zero default would load as a chip-0, age-zero profile.
+        let uint = |key: &str| -> anyhow::Result<u64> {
+            j.req(key)?.as_uint().ok_or_else(|| {
+                anyhow::anyhow!("{key} must be a non-negative integer")
+            })
+        };
+        let substrate = j
+            .req("substrate")?
+            .as_str()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| {
+                anyhow::anyhow!("substrate must be a hex identity string")
+            })?;
         Ok(CalibProfile {
-            chip: j.req("chip")?.as_usize().unwrap_or(0),
-            chip_time_us: j
-                .req("chip_time_us")?
-                .as_f64()
-                .map(|t| t.max(0.0) as u64)
-                .unwrap_or(0),
-            reps: j.req("reps")?.as_usize().unwrap_or(0),
+            chip: uint("chip")? as usize,
+            substrate,
+            chip_time_us: uint("chip_time_us")?,
+            reps: uint("reps")? as usize,
             gain,
             offset,
             residual_rms: [resid[0], resid[1]],
@@ -292,6 +366,7 @@ mod tests {
         let p = CalibProfile::measure(&mut halves, &mut rng, 8, 2.0, 1, 999);
         let q = CalibProfile::parse(&p.to_json()).unwrap();
         assert_eq!(q.chip, p.chip);
+        assert_eq!(q.substrate, p.substrate, "identity hash must roundtrip");
         assert_eq!(q.chip_time_us, p.chip_time_us);
         assert_eq!(q.reps, p.reps);
         assert_eq!(q.gain, p.gain, "gain must roundtrip bit-exactly");
@@ -313,9 +388,58 @@ mod tests {
     #[test]
     fn parse_rejects_bad_format_and_shape() {
         let p = CalibProfile::nominal(0);
-        let bad = p.to_json().replace(PROFILE_FORMAT, "bss2-calib-v0");
-        assert!(CalibProfile::parse(&bad).is_err());
-        assert!(CalibProfile::parse("{}").is_err());
+        // A different format version is a *typed* error, so loaders can
+        // skip stale artifacts without excusing corrupt ones.
+        let stale = p.to_json().replace(PROFILE_FORMAT, "bss2-calib-v1");
+        let err = CalibProfile::parse(&stale).unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedFormat>().is_some(), "{err}");
+        let err = CalibProfile::parse("{}").unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedFormat>().is_none(), "{err}");
+        // A wrong-typed tag is corruption, not another version.
+        let mut j = Json::parse(&p.to_json()).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format".into(), Json::Num(42.0));
+        }
+        let err = CalibProfile::parse(&j.to_string()).unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedFormat>().is_none(), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_wrong_typed_scalars() {
+        let p = CalibProfile::nominal(1);
+        for key in ["chip", "chip_time_us", "reps", "substrate"] {
+            let mut j = Json::parse(&p.to_json()).unwrap();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), Json::Str("not-a-count".into()));
+            }
+            let err = CalibProfile::parse(&j.to_string());
+            assert!(err.is_err(), "wrong-typed `{key}` must fail loudly");
+        }
+    }
+
+    #[test]
+    fn substrate_hash_names_the_silicon() {
+        assert_eq!(
+            substrate_hash(&fpn_halves(5)),
+            substrate_hash(&fpn_halves(5)),
+            "same base pattern, same identity"
+        );
+        assert_ne!(
+            substrate_hash(&fpn_halves(5)),
+            substrate_hash(&fpn_halves(6)),
+            "different silicon, different identity"
+        );
+        // Drift wanders around the base pattern without renaming it.
+        let mut drifted = fpn_halves(5);
+        for half in drifted.iter_mut() {
+            half.set_drift(crate::calib::drift::DriftState::new(
+                c::N_COLS,
+                42,
+                crate::calib::drift::DriftParams::default(),
+            ));
+            half.advance_us(500_000);
+        }
+        assert_eq!(substrate_hash(&fpn_halves(5)), substrate_hash(&drifted));
     }
 
     #[test]

@@ -162,6 +162,10 @@ pub struct Engine {
     profile: Option<CalibProfile>,
     /// Per-half post-ADC correction derived from `profile`.
     compensation: Option<[ColumnCorrection; 2]>,
+    /// Identity hash of the native substrate (`calib::substrate_hash`).
+    /// `None` on PJRT — the staged artifact has no measurable substrate,
+    /// so no profile ever applies to it.
+    substrate: Option<u64>,
     /// Measurement-noise stream for recalibration runs (separate from the
     /// inference noise stream so recalibrating never perturbs serving
     /// reproducibility).
@@ -277,6 +281,12 @@ impl Engine {
 
     fn assemble(model: TrainedModel, backend: Backend, cfg: EngineConfig) -> Engine {
         let noise_sigma = if cfg.noise_off { 0.0 } else { model.noise_sigma };
+        let substrate = match &backend {
+            Backend::Native { halves } => {
+                Some(crate::calib::substrate_hash(halves))
+            }
+            Backend::Pjrt { .. } => None,
+        };
         Engine {
             stream: graph::ecg_network().lower(),
             backend,
@@ -293,6 +303,7 @@ impl Engine {
             last_calib_us: 0,
             profile: None,
             compensation: None,
+            substrate,
             calib_rng: SplitMix64::new(cfg.noise_seed ^ 0xCA11_B8A7_E5EED),
             dram: Dram::default(),
             lut: EventLut::identity(0, c::K_LOGICAL),
@@ -598,14 +609,45 @@ impl Engine {
         matches!(self.backend, Backend::Native { .. })
     }
 
+    /// Identity of the native substrate (`calib::substrate_hash` of the
+    /// un-drifted base pattern), `None` on the PJRT backend.  A saved
+    /// profile applies only to the silicon whose hash it carries.
+    pub fn substrate_hash(&self) -> Option<u64> {
+        self.substrate
+    }
+
     /// Apply a calibration profile: every subsequent ADC readout is
     /// corrected against the profile's measured gain/offset
     /// (`calib::ColumnCorrection`), so MACs are compensated against the
     /// measured fixed pattern rather than the ideal one.
-    pub fn apply_profile(&mut self, profile: &CalibProfile) {
+    ///
+    /// The profile must have been measured on *this* substrate
+    /// (verified via its identity hash): correcting against a pattern
+    /// the silicon does not have would corrupt every inference instead
+    /// of compensating it.  PJRT engines refuse all profiles — the
+    /// staged artifact already serves its own calibration.
+    pub fn apply_profile(
+        &mut self,
+        profile: &CalibProfile,
+    ) -> anyhow::Result<()> {
+        let ours = self.substrate.ok_or_else(|| {
+            anyhow::anyhow!(
+                "no measurable substrate: the PJRT artifact serves its \
+                 staged calibration"
+            )
+        })?;
+        anyhow::ensure!(
+            ours == profile.substrate,
+            "profile substrate {:016x} does not match this chip's {:016x} \
+             (measured on different silicon — re-run `repro calibrate` \
+             with this chip's backend and fpn-seed configuration)",
+            profile.substrate,
+            ours
+        );
         self.compensation = Some([profile.correction(0), profile.correction(1)]);
         self.profile = Some(profile.clone());
         self.last_calib_us = self.chip_time_us;
+        Ok(())
     }
 
     /// Full-chip recalibration: measure both array halves against the
@@ -635,7 +677,8 @@ impl Engine {
         };
         let cost = CalibProfile::measurement_cost_us(reps).round() as u64;
         self.advance_chip_time_us(cost);
-        self.apply_profile(&profile);
+        self.apply_profile(&profile)
+            .expect("a profile measured here matches this substrate");
         Ok(profile)
     }
 }
@@ -1156,6 +1199,47 @@ mod tests {
             dev_recal <= 8.0,
             "fresh profile must track the ideal substrate, got {dev_recal}"
         );
+    }
+
+    #[test]
+    fn apply_profile_refuses_foreign_substrates() {
+        let mk = |seed: u64| {
+            Engine::native(
+                tiny_model(),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    fpn_seed: Some(seed),
+                    ..Default::default()
+                },
+            )
+        };
+        let mut a = mk(0xA);
+        let profile = a.recalibrate(16).unwrap();
+        assert_eq!(a.substrate_hash(), Some(profile.substrate));
+
+        // Same seed = same silicon: the saved profile applies.
+        let mut twin = mk(0xA);
+        twin.apply_profile(&profile).unwrap();
+        assert!(twin.calib_profile().is_some());
+
+        // Different seed = different silicon: applying the inverse
+        // gain/offset of chip A would corrupt chip B, so it is refused.
+        let mut b = mk(0xB);
+        assert_ne!(b.substrate_hash(), a.substrate_hash());
+        let err = b.apply_profile(&profile).unwrap_err();
+        assert!(err.to_string().contains("different silicon"), "{err}");
+        assert!(b.calib_profile().is_none(), "refusal leaves no profile");
+        // The per-chip split of `EngineConfig::for_chip` is a different
+        // substrate too — a chip-0 measurement must not apply to chip 1.
+        let cfg = EngineConfig {
+            use_pjrt: false,
+            noise_off: true,
+            fpn_seed: Some(0xA),
+            ..Default::default()
+        };
+        let mut chip1 = Engine::native(tiny_model(), cfg.for_chip(1));
+        assert!(chip1.apply_profile(&profile).is_err());
     }
 
     #[test]

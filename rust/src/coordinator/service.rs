@@ -371,17 +371,31 @@ fn handle_conn(
                 }
                 Some("fleet_stats") => fleet.stats_json(),
                 Some("recalibrate") => {
-                    let chip =
-                        req.get("chip").and_then(|c| c.as_usize()).unwrap_or(0);
-                    let reps =
-                        req.get("reps").and_then(|r| r.as_usize()).unwrap_or(32);
-                    if reps == 0 || reps > MAX_RECALIB_REPS {
-                        format!(
-                            "{{\"ok\":false,\"error\":\"reps must be in \
-                             1..={MAX_RECALIB_REPS}\"}}"
-                        )
-                    } else {
-                        recalibrate_reply(&fleet, chip, reps)
+                    // Malformed fields are rejected, never defaulted: a
+                    // bad `chip` would drain a replica the client never
+                    // named, a bad `reps` would silently run a
+                    // measurement length they never asked for.
+                    let chip = req
+                        .get("chip")
+                        .and_then(|c| c.as_uint())
+                        .map(|c| c as usize);
+                    let reps = match req.get("reps") {
+                        None => Some(32),
+                        Some(r) => r.as_uint().map(|r| r as usize),
+                    }
+                    .filter(|r| (1..=MAX_RECALIB_REPS).contains(r));
+                    match (chip, reps) {
+                        (None, _) => "{\"ok\":false,\"error\":\"recalibrate \
+                                      requires a non-negative integer `chip` \
+                                      field\"}"
+                            .to_string(),
+                        (_, None) => format!(
+                            "{{\"ok\":false,\"error\":\"reps must be an \
+                             integer in 1..={MAX_RECALIB_REPS}\"}}"
+                        ),
+                        (Some(chip), Some(reps)) => {
+                            recalibrate_reply(&fleet, chip, reps)
+                        }
                     }
                 }
                 Some("classify") => match parse_trace(&req) {
@@ -721,6 +735,25 @@ mod tests {
             .call("{\"cmd\":\"recalibrate\",\"chip\":0,\"reps\":1000000000}")
             .unwrap();
         assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{bad}");
+        // A missing or malformed `chip` must never default to chip 0:
+        // the request is rejected and no replica is drained.
+        for req in [
+            "{\"cmd\":\"recalibrate\"}",
+            "{\"cmd\":\"recalibrate\",\"chip\":\"zero\"}",
+            "{\"cmd\":\"recalibrate\",\"chip\":-1}",
+            "{\"cmd\":\"recalibrate\",\"chip\":0.5}",
+            "{\"cmd\":\"recalibrate\",\"chip\":0,\"reps\":\"many\"}",
+            "{\"cmd\":\"recalibrate\",\"chip\":0,\"reps\":-4}",
+        ] {
+            let bad = cl.call(req).unwrap();
+            assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{req}");
+        }
+        let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+        assert_eq!(
+            fs.get("recalibrations").and_then(|v| v.as_usize()),
+            Some(1),
+            "malformed requests must not have drained anything: {fs}"
+        );
         svc.stop();
     }
 

@@ -83,8 +83,9 @@ enum ChipJob {
     /// Full-chip recalibration (`Engine::recalibrate`): measure, apply,
     /// re-admit.  `resp` is optional — policy-triggered recalibrations
     /// are fire-and-forget, manual ones want the summary back.
-    /// `drain_token` (policy path only) is the pool-level one-at-a-time
-    /// latch; the worker releases it when the measurement finishes.
+    /// `drain_token` is the pool-level one-at-a-time latch, held by both
+    /// the policy and manual trigger paths; the worker releases it when
+    /// the measurement finishes.
     Calibrate {
         reps: usize,
         reason: RecalibReason,
@@ -152,11 +153,12 @@ pub struct Fleet {
     scheduler: Scheduler,
     /// Auto-recalibration policy (None = manual only).
     recalib: Option<RecalibPolicy>,
-    /// Pool-level latch serialising *policy-triggered* drains: taken by
-    /// `maybe_recalibrate` before electing a chip, released by the
-    /// worker when the measurement finishes — so concurrent dispatchers
-    /// can never drain two replicas at once (the per-chip CAS alone only
-    /// serialises drains of the *same* chip).
+    /// Pool-level latch serialising *all* drains: taken by
+    /// `maybe_recalibrate` before electing a chip and by manual
+    /// `recalibrate_chip` requests, released by the worker when the
+    /// measurement finishes — so concurrent triggers can never drain two
+    /// replicas at once (the per-chip CAS alone only serialises drains
+    /// of the *same* chip).
     policy_drain: Arc<AtomicBool>,
     /// Admissions refused at the transport layer (dead worker channels);
     /// scheduler-level sheds are counted separately.
@@ -418,7 +420,8 @@ impl Fleet {
             return;
         };
         if self.calibrating_count() > 0 {
-            return; // a manual drain is already in progress
+            return; // a drain is in progress (cheap early-out; the
+                    // latch below is what makes one-at-a-time exact)
         }
         if self.healthy_count() <= policy.min_serving {
             return; // never drain below the availability floor
@@ -500,10 +503,12 @@ impl Fleet {
     /// Manually drain `chip` for recalibration with `reps` measurement
     /// repetitions.  Returns the receiver for the worker's summary.
     ///
-    /// Manual drains honour the same availability rules as the policy
-    /// (best-effort under concurrent manual requests): one chip at a
-    /// time, and never the last healthy replica of a multi-chip pool.
-    /// A single-chip pool may drain itself — the operator accepts shed
+    /// Manual drains honour the same availability rules as the policy:
+    /// one chip at a time — exact, because they acquire the same
+    /// pool-level `policy_drain` latch the policy dispatcher holds from
+    /// electing a chip until the worker finishes the measurement — and
+    /// never the last healthy replica of a multi-chip pool.  A
+    /// single-chip pool may drain itself — the operator accepts shed
     /// responses until the measurement finishes.
     pub fn recalibrate_chip(
         &self,
@@ -515,26 +520,41 @@ impl Fleet {
             self.health[chip].is_calib_capable(),
             "chip {chip}'s backend does not support recalibration"
         );
+        // A `calibrating_count() == 0` check alone would race the policy
+        // path between its latch acquisition and the chip's CAS; taking
+        // the latch itself makes one-at-a-time exact across both paths.
         anyhow::ensure!(
-            self.calibrating_count() == 0,
+            self.policy_drain
+                .compare_exchange(
+                    false,
+                    true,
+                    Ordering::AcqRel,
+                    Ordering::Acquire
+                )
+                .is_ok(),
             "another chip is already calibrating"
         );
-        anyhow::ensure!(
-            self.handles.len() == 1 || self.healthy_count() > 1,
-            "refusing to drain the last healthy chip of the pool"
-        );
+        // Past this point every failure path must release the latch; on
+        // success, ownership passes to the worker (which releases it
+        // when the measurement finishes, like the policy path).
+        if self.handles.len() > 1 && self.healthy_count() <= 1 {
+            self.policy_drain.store(false, Ordering::Release);
+            anyhow::bail!("refusing to drain the last healthy chip of the pool");
+        }
         let (tx, rx) = mpsc::channel();
-        anyhow::ensure!(
-            self.start_recalibration(
-                chip,
-                reps,
-                RecalibReason::Aged,
-                Some(tx),
-                None
-            ),
-            "chip {chip} is not healthy (state {})",
-            self.health[chip].state().as_str()
-        );
+        if !self.start_recalibration(
+            chip,
+            reps,
+            RecalibReason::Aged,
+            Some(tx),
+            Some(self.policy_drain.clone()),
+        ) {
+            self.policy_drain.store(false, Ordering::Release);
+            anyhow::bail!(
+                "chip {chip} is not healthy (state {})",
+                self.health[chip].state().as_str()
+            );
+        }
         Ok(rx)
     }
 

@@ -119,11 +119,15 @@ fn artifact_dir(args: &Args) -> ArtifactDir {
 fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
     // A typo'd seed must error, not silently fall back to different
     // silicon (same contract as `u64_or` on every other numeric option).
+    // Seeds read naturally in hex, so a `0x` prefix is accepted too.
     let fpn_seed = match args.get("fpn-seed") {
-        Some(s) => Some(
-            s.parse::<u64>()
-                .map_err(|e| anyhow::anyhow!("--fpn-seed `{s}`: {e}"))?,
-        ),
+        Some(s) => {
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            Some(parsed.map_err(|e| anyhow::anyhow!("--fpn-seed `{s}`: {e}"))?)
+        }
         None => None,
     };
     Ok(EngineConfig {
@@ -434,12 +438,15 @@ fn calibrate(args: &Args) -> anyhow::Result<()> {
     let reps = args.usize_or("reps", 64)?.max(1);
     let idle_us = args.u64_or("idle-us", 0)?;
     let dir = artifact_dir(args);
-    // Calibrating an unknown substrate only makes sense with a per-chip
-    // fixed pattern; default one in when the user did not pick a seed.
-    let mut cfg = EngineConfig { chip, ..engine_config(args)? };
-    if cfg.fpn_seed.is_none() {
-        cfg.fpn_seed = Some(0xCA11B);
-    }
+    // The config goes through the same `for_chip(N)` per-ordinal split
+    // as the replica `serve` builds for this ordinal, and the seed
+    // defaults stay symmetric (no seed = the model's own calibration
+    // vectors define the substrate, same as `serve --native`) — so a
+    // profile measured here describes exactly the silicon it will later
+    // be applied to.  Serve verifies that via the profile's substrate
+    // hash; pass the same `--fpn-seed` to both to calibrate a synthetic
+    // per-chip fixed pattern instead.
+    let cfg = engine_config(args)?.for_chip(chip);
     let mut engine = if dir.exists() {
         Engine::from_artifacts(&dir, EngineConfig { use_pjrt: false, ..cfg })?
     } else {
@@ -519,18 +526,44 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             // Close the measurement -> serving loop: a profile written by
             // `repro calibrate` (or a previous serving run) is applied at
             // construction; a corrupt artifact fails the chip loudly
-            // rather than serving uncompensated.
+            // rather than serving uncompensated.  A profile that merely
+            // doesn't *apply* — measured on different silicon (other
+            // fpn-seed, other backend) or left behind by an older format
+            // version — is skipped with a warning instead: its inverse
+            // gain/offset would mis-correct this substrate, not
+            // compensate it.
             let profile_path = dir.calib_profile(chip);
             if profile_path.exists() {
-                let profile = bss2::calib::CalibProfile::load(&profile_path)?;
-                engine.apply_profile(&profile);
-                log::info!(
-                    "chip {chip}: applied calibration profile {} (measured \
-                     at t={} µs, {} reps)",
-                    profile_path.display(),
-                    profile.chip_time_us,
-                    profile.reps
-                );
+                match bss2::calib::CalibProfile::load(&profile_path) {
+                    Ok(profile) => match engine.apply_profile(&profile) {
+                        Ok(()) => log::info!(
+                            "chip {chip}: applied calibration profile {} \
+                             (measured at t={} µs, {} reps)",
+                            profile_path.display(),
+                            profile.chip_time_us,
+                            profile.reps
+                        ),
+                        Err(e) => log::warn!(
+                            "chip {chip}: ignoring calibration profile {}: \
+                             {e}",
+                            profile_path.display()
+                        ),
+                    },
+                    // A leftover older-version artifact is stale, not
+                    // corrupt: skip it (like any inapplicable profile)
+                    // and let recalibration re-measure.
+                    Err(e)
+                        if e.downcast_ref::<bss2::calib::UnsupportedFormat>()
+                            .is_some() =>
+                    {
+                        log::warn!(
+                            "chip {chip}: ignoring calibration profile {}: \
+                             {e}; re-run `repro calibrate`",
+                            profile_path.display()
+                        );
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             Ok(engine)
         },

@@ -64,6 +64,16 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Strict unsigned-integer view: `Some` only for non-negative whole
+    /// numbers.  Prefer this over [`as_usize`](Json::as_usize) when a
+    /// malformed field must be *rejected* — the lossy cast there maps
+    /// -1 and 0.5 to perfectly valid values.
+    pub fn as_uint(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+            .map(|v| v as u64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -360,6 +370,18 @@ mod tests {
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("-2.5e3").unwrap(), Json::Num(-2500.0));
         assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn as_uint_rejects_what_as_usize_mangles() {
+        assert_eq!(Json::Num(7.0).as_uint(), Some(7));
+        assert_eq!(Json::Num(0.0).as_uint(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_uint(), None);
+        assert_eq!(Json::Num(0.5).as_uint(), None);
+        assert_eq!(Json::Str("7".into()).as_uint(), None);
+        // ...whereas the lossy cast happily accepts the first two.
+        assert_eq!(Json::Num(-1.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(0.5).as_usize(), Some(0));
     }
 
     #[test]
