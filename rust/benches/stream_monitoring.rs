@@ -1,0 +1,260 @@
+//! Bench: continuous ECG stream monitoring.
+//!
+//! Three views:
+//! * **frontend cost vs hop** — the incremental windower's per-window
+//!   cost is O(hop) (exact, via its deterministic op counter — asserted),
+//!   not O(2048) like re-running the batch chain per window; wall-clock
+//!   per window is reported for both.
+//! * **sustained windows/s vs chips** — episode-labeled stream fanned
+//!   through `Fleet::dispatch_acts` at hop 512 for 1/2/4 replicas.
+//! * **afib detection latency** — windows from episode onset to the
+//!   first positive window, with the untrained energy-detector model
+//!   thresholded against the sinus lead-in.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use bss2::asic::consts as c;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::ecg::stream::{ContinuousEcg, EpisodeConfig};
+use bss2::fleet::{DispatchOutcome, Fleet, FleetConfig};
+use bss2::fpga::preprocess::{preprocess, IncrementalWindower};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::benchkit::section;
+use bss2::util::stats::Summary;
+
+fn short_cfg() -> EpisodeConfig {
+    EpisodeConfig {
+        lead_in_s: 30.0,
+        sinus_s: (18.0, 35.0),
+        afib_s: (12.0, 25.0),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    frontend_cost()?;
+    fleet_throughput()?;
+    detection_latency()?;
+    Ok(())
+}
+
+/// Per-window frontend cost: incremental O(hop) vs batch O(2048).
+fn frontend_cost() -> anyhow::Result<()> {
+    section("incremental frontend: per-window cost vs hop");
+    // 3 simulated minutes of continuous signal, synthesized once.
+    let total = (180.0 * c::ECG_FS_HZ) as usize;
+    let raw = ContinuousEcg::new(42, 1.0, short_cfg()).next_chunk(total);
+
+    for &hop in &[32usize, 128, 512, 2048] {
+        // Incremental: feed the whole stream, count windows + exact ops.
+        let mut w = IncrementalWindower::new(hop)?;
+        let t0 = Instant::now();
+        let mut ops_marks = Vec::new();
+        for i in 0..total {
+            if w.push([raw[0][i], raw[1][i]]).is_some() {
+                ops_marks.push(w.work_ops);
+            }
+        }
+        let inc_ns = t0.elapsed().as_nanos() as f64 / ops_marks.len() as f64;
+
+        // The marginal op count between consecutive windows is *exactly*
+        // 2·(hop + hop/32): O(hop), independent of the 2048 window.
+        let per_window_ops =
+            (c::ECG_CHANNELS * (hop + hop / c::POOL_WINDOW)) as u64;
+        for pair in ops_marks.windows(2) {
+            assert_eq!(
+                pair[1] - pair[0],
+                per_window_ops,
+                "marginal frontend work must be O(hop), hop {hop}"
+            );
+        }
+
+        // Batch reference: re-run the full chain per window.
+        let n_windows = ops_marks.len();
+        let t0 = Instant::now();
+        for k in 0..n_windows {
+            let s = k * hop;
+            let win: Vec<Vec<u16>> = (0..2)
+                .map(|ch| raw[ch][s..s + c::ECG_WINDOW].to_vec())
+                .collect();
+            let acts = preprocess(&win);
+            assert_eq!(acts.len(), c::MODEL_IN);
+        }
+        let batch_ns = t0.elapsed().as_nanos() as f64 / n_windows as f64;
+
+        println!(
+            "  hop {hop:>4}: {n_windows:>4} windows  marginal ops \
+             {per_window_ops:>5} (batch chain: {})  wall {:>8.0} ns/window \
+             (batch: {:>8.0} ns/window)",
+            c::ECG_CHANNELS * (c::ECG_WINDOW + c::ECG_WINDOW / c::POOL_WINDOW),
+            inc_ns,
+            batch_ns
+        );
+    }
+    println!(
+        "\n  per-window frontend cost scales with the hop, not with the \
+         {}-sample window (op counts asserted above)",
+        c::ECG_WINDOW
+    );
+    Ok(())
+}
+
+/// Sustained windows/s through the fleet at hop 512 for 1/2/4 chips.
+fn fleet_throughput() -> anyhow::Result<()> {
+    section("sustained stream throughput vs chips (hop 512)");
+    let hop = 512usize;
+    let stream_s = 60.0;
+    let total = (stream_s * c::ECG_FS_HZ) as usize;
+    let raw = ContinuousEcg::new(77, 1.0, short_cfg()).next_chunk(total);
+
+    let mut base = None;
+    for &chips in &[1usize, 2, 4] {
+        let fleet = Fleet::start(
+            FleetConfig { chips, queue_depth: 32, ..Default::default() },
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::energy_detector(),
+                    EngineConfig { use_pjrt: false, ..Default::default() }
+                        .for_chip(chip),
+                ))
+            },
+        )?;
+        let mut w = IncrementalWindower::new(hop)?;
+        let mut pending = VecDeque::new();
+        let (mut served, mut shed) = (0u64, 0u64);
+        let t0 = Instant::now();
+        for i in 0..total {
+            let Some(frame) = w.push([raw[0][i], raw[1][i]]) else {
+                continue;
+            };
+            let acts: Vec<i32> =
+                frame.acts.iter().map(|&a| a as i32).collect();
+            match fleet.dispatch_acts(acts) {
+                DispatchOutcome::Enqueued { resp, .. } => pending.push_back(resp),
+                DispatchOutcome::Shed { .. } => shed += 1,
+            }
+            // Bounded outstanding work: drain like a real monitor would,
+            // so memory and admission stay flat.
+            while pending.len() > 16 {
+                let resp: std::sync::mpsc::Receiver<_> =
+                    pending.pop_front().unwrap();
+                if resp.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                    served += 1;
+                }
+            }
+        }
+        while let Some(resp) = pending.pop_front() {
+            if resp.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                served += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rate = served as f64 / wall;
+        println!(
+            "  chips {chips}: {served:>4} windows in {wall:>6.2} s -> \
+             {rate:>7.1} windows/s ({shed} shed)  [stream real-time rate: \
+             {:.2} windows/s]",
+            c::ECG_FS_HZ / hop as f64
+        );
+        if chips == 1 {
+            base = Some(rate);
+        }
+        fleet.shutdown();
+    }
+    if let Some(b) = base {
+        println!(
+            "\n  (single-chip baseline {b:.1} windows/s; scaling with chips \
+             is measured precisely by benches/fleet_throughput.rs)"
+        );
+    }
+    Ok(())
+}
+
+/// Afib detection latency: windows from episode onset to first positive.
+fn detection_latency() -> anyhow::Result<()> {
+    section("afib detection latency (energy detector, hop 512)");
+    let hop = 512usize;
+    let lead_in_s = 30.0;
+    let minutes = 4.0;
+    let total = (minutes * 60.0 * c::ECG_FS_HZ) as usize;
+    let mut ecg = ContinuousEcg::new(99, 1.0, short_cfg());
+    let raw = ecg.next_chunk(total);
+
+    let mut engine = Engine::native(
+        TrainedModel::energy_detector(),
+        EngineConfig { use_pjrt: false, ..Default::default() },
+    );
+    let mut w = IncrementalWindower::new(hop)?;
+    let mut wins: Vec<(u64, f64)> = Vec::new(); // (start_sample, score sum)
+    for i in 0..total {
+        let Some(frame) = w.push([raw[0][i], raw[1][i]]) else {
+            continue;
+        };
+        let acts: Vec<i32> = frame.acts.iter().map(|&a| a as i32).collect();
+        let inf = engine.classify_acts(&acts)?;
+        wins.push((
+            frame.start_sample,
+            (inf.scores[0] + inf.scores[1]) as f64,
+        ));
+    }
+    assert!(wins.len() > 20, "stream produced {} windows", wins.len());
+
+    let win_len = c::ECG_WINDOW as u64;
+    let lead_end = (lead_in_s * c::ECG_FS_HZ) as u64;
+    let lead: Vec<f64> = wins
+        .iter()
+        .filter(|(s, _)| s + win_len <= lead_end)
+        .map(|&(_, e)| e)
+        .collect();
+    assert!(lead.len() >= 2, "lead-in too short");
+    let s = Summary::from(&lead);
+    let thr = s.mean + 4.0 * s.std.max(0.5);
+    println!(
+        "  lead-in score sum {:.1} ± {:.1} LSB -> threshold {thr:.1}",
+        s.mean, s.std
+    );
+
+    let episodes: Vec<_> = ecg
+        .episodes()
+        .into_iter()
+        .filter(|e| e.afib && e.start + win_len <= total as u64)
+        .collect();
+    assert!(!episodes.is_empty(), "no afib episodes in {minutes} minutes");
+    let mut detected = 0usize;
+    for ep in &episodes {
+        let onset_win = wins
+            .iter()
+            .position(|&(st, _)| st + win_len > ep.start)
+            .expect("windows cover the episode");
+        let det = wins
+            .iter()
+            .enumerate()
+            .find(|&(_, &(st, e))| {
+                st + win_len > ep.start && st < ep.end && e > thr
+            });
+        match det {
+            Some((di, &(st, _))) => {
+                detected += 1;
+                println!(
+                    "  episode at {:>6.1} s ({:>5.1} s): detected after \
+                     {} windows ({:.1} s of signal past onset)",
+                    ep.start as f64 / c::ECG_FS_HZ,
+                    ep.len() as f64 / c::ECG_FS_HZ,
+                    di - onset_win,
+                    (st + win_len - ep.start) as f64 / c::ECG_FS_HZ
+                );
+            }
+            None => println!(
+                "  episode at {:>6.1} s ({:>5.1} s): missed",
+                ep.start as f64 / c::ECG_FS_HZ,
+                ep.len() as f64 / c::ECG_FS_HZ
+            ),
+        }
+    }
+    println!(
+        "\n  {detected}/{} episodes detected (untrained energy threshold; \
+         trained artifacts use the wire `pred` — see `repro monitor`)",
+        episodes.len()
+    );
+    Ok(())
+}

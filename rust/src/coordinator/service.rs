@@ -14,6 +14,22 @@
 //! replicas, accounts admission in *samples*, and sheds load explicitly —
 //! a batch that only partially fits is partially accepted.
 //!
+//! **Connection model** (DESIGN.md §11): each connection is split into a
+//! *reader* (parses requests, dispatches into the fleet without waiting)
+//! and an *ordered-reply writer* (a FIFO of pending replies, each resolved
+//! as its chip finishes).  Replies therefore arrive in request order while
+//! in-flight requests **pipeline** — a client may write N requests before
+//! reading any reply, and they execute concurrently across the fleet.
+//! All I/O is blocking and shutdown-aware: idle connections cause zero
+//! periodic wakeups, and `stop()` unblocks everything by closing the
+//! listener and every registered connection.
+//!
+//! **Streaming sessions**: continuous ECG monitoring pushes an unbroken
+//! sample stream in arbitrary chunks; the server windows it incrementally
+//! (O(hop) per window, `fpga::preprocess::IncrementalWindower`), dispatches
+//! ready frames through the fleet, and pushes result lines asynchronously,
+//! in window order.
+//!
 //! Protocol (one JSON object per line):
 //! ```text
 //! -> {"cmd": "classify", "trace": [[...ch0 u12...], [...ch1...]]}
@@ -27,30 +43,159 @@
 //!                  "energy_mj": e}, ...k entries...]}
 //! <- {"ok": false, "shed": true, "error": "...", "accepted": 0,
 //!     "batch": B, "retry_after_us": n}
+//! -> {"cmd": "stream_open", "hop": H}       (H: samples, multiple of 32)
+//! <- {"ok": true, "stream": "open", "hop": H, "window": 2048,
+//!     "pool_window": 32}
+//! -> {"cmd": "stream_push", "samples": [[...ch0...], [...ch1...]]}
+//!    (arbitrary chunk length; results arrive asynchronously, in order:)
+//! <- {"ok": true, "stream": true, "window": w, "start_sample": s,
+//!     "pred": p, "scores": [a, b], "time_us": t, "energy_mj": e,
+//!     "chip": c}
+//! <- {"ok": false, "stream": true, "shed": true, "window": w,
+//!     "start_sample": s, "error": "...", "retry_after_us": n}
+//! -> {"cmd": "stream_close"}
+//! <- {"ok": true, "stream": "closed", "windows": n, "dispatched": d,
+//!     "shed": k, "samples": m}   (written after every pending result)
 //! -> {"cmd": "stats"}
 //! <- {"ok": true, "served": n, "mean_time_us": t, "chips": c, "shed": s}
 //! -> {"cmd": "fleet_stats"}
 //! <- {"ok": true, "chips": c, ..., "per_chip": [...]}
 //! -> {"cmd": "recalibrate", "chip": c, "reps": r}
 //! <- {"ok": true, "chip": c, "chip_time_us": t, "residual_rms": x,
-//!     "reason": "..."}   (drain -> calibrate -> re-admit; blocks until
-//!                         the measurement finished)
+//!     "reason": "..."}   (drain -> calibrate -> re-admit; the reply line
+//!                         waits for the measurement, later requests on
+//!                         the same connection keep pipelining)
 //! -> {"cmd": "ping"} | {"cmd": "shutdown"}
+//!    (shutdown requires `FleetConfig::allow_remote_shutdown`, default
+//!     off: an open port must not be an unauthenticated kill switch)
 //! ```
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::asic::consts as c;
 use crate::ecg::gen::Trace;
 use crate::fleet::{
     BatchDispatchOutcome, ChipId, DispatchOutcome, Fleet, FleetConfig,
 };
+use crate::fpga::preprocess::IncrementalWindower;
 use crate::util::json::Json;
 
 use super::engine::{Engine, Inference};
+
+/// Largest accepted `classify_batch` wire batch (sanity bound for request
+/// and reply sizes; larger batches should be split by the client anyway).
+pub const MAX_WIRE_BATCH: usize = 64;
+
+/// Largest accepted `recalibrate` repetition count: one request must not
+/// wedge a chip in `Calibrating` (and suppress the fleet policy) for an
+/// unbounded measurement.  1024 reps ≈ 6k integrations per half, already
+/// far past the point of diminishing noise suppression.
+pub const MAX_RECALIB_REPS: usize = 1024;
+
+/// Largest accepted `stream_push` chunk [samples per channel] — bounds a
+/// single request line to a few hundred kB; longer recordings are meant
+/// to be pushed as a sequence of chunks anyway.
+pub const MAX_STREAM_CHUNK: usize = 16384;
+
+/// Bound on a connection's pending-reply FIFO.  The reader blocks once
+/// this many replies are outstanding, so a client that writes requests
+/// without ever reading replies stalls its *own* connection (TCP
+/// backpressure) instead of growing server memory without bound — the
+/// pipelining window is "up to this many requests in flight".
+pub const PENDING_REPLY_DEPTH: usize = 256;
+
+/// Level-triggered shutdown latch: an atomic flag for cheap polling plus
+/// a condvar so [`Service::run_until_shutdown`] can sleep instead of
+/// spinning.
+struct ShutdownSignal {
+    flag: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ShutdownSignal {
+    fn new() -> ShutdownSignal {
+        ShutdownSignal {
+            flag: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn signal(&self) {
+        // Set under the lock so a waiter can never observe the flag
+        // clear and then miss the notify.
+        let _g = self.lock.lock().unwrap();
+        self.flag.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn wait(&self) {
+        let mut g = self.lock.lock().unwrap();
+        while !self.flag.load(Ordering::SeqCst) {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Live-connection registry: the acceptor registers a socket clone before
+/// spawning its handler, the handler deregisters on exit (panic-safe via
+/// [`ConnGuard`]), and `stop()` shuts every registered socket down to
+/// unblock readers sleeping in blocking I/O.
+struct ConnRegistry {
+    next_id: AtomicU64,
+    streams: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl ConnRegistry {
+    fn new() -> ConnRegistry {
+        ConnRegistry {
+            next_id: AtomicU64::new(0),
+            streams: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn register(&self, stream: &TcpStream) -> std::io::Result<u64> {
+        let clone = stream.try_clone()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.streams.lock().unwrap().insert(id, clone);
+        Ok(id)
+    }
+
+    fn deregister(&self, id: u64) {
+        self.streams.lock().unwrap().remove(&id);
+    }
+
+    fn active(&self) -> usize {
+        self.streams.lock().unwrap().len()
+    }
+
+    fn shutdown_all(&self) {
+        for s in self.streams.lock().unwrap().values() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Deregisters a connection even when its handler panics.
+struct ConnGuard {
+    conns: Arc<ConnRegistry>,
+    id: u64,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.conns.deregister(self.id);
+    }
+}
 
 /// The running service handle.  Serving statistics live in
 /// [`Fleet::telemetry`]: one source of truth, accumulated in integer
@@ -59,7 +204,8 @@ use super::engine::{Engine, Inference};
 pub struct Service {
     pub addr: std::net::SocketAddr,
     pub fleet: Arc<Fleet>,
-    shutdown: Arc<AtomicBool>,
+    shutdown: Arc<ShutdownSignal>,
+    conns: Arc<ConnRegistry>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -69,16 +215,21 @@ impl Service {
     /// not `Send`): pass a builder closure.
     ///
     /// Keeps the legacy contract: an effectively unbounded admission
-    /// queue (no shed replies) — opt into backpressure via
-    /// [`Service::start_fleet`].  One contract change: engine-init
-    /// failure now fails `start` fast instead of serving per-request
-    /// `engine init` errors.
+    /// queue (no shed replies) and a wire-reachable `shutdown` command —
+    /// the in-process test/bring-up topology.  Opt into backpressure and
+    /// the hardened defaults via [`Service::start_fleet`].  One contract
+    /// change kept from the fleet PR: engine-init failure fails `start`
+    /// fast instead of serving per-request `engine init` errors.
     pub fn start<F>(addr: &str, make_engine: F) -> anyhow::Result<Service>
     where
         F: FnOnce() -> anyhow::Result<Engine> + Send + 'static,
     {
         let once = Mutex::new(Some(make_engine));
-        let cfg = FleetConfig { queue_depth: usize::MAX, ..FleetConfig::single() };
+        let cfg = FleetConfig {
+            queue_depth: usize::MAX,
+            allow_remote_shutdown: true,
+            ..FleetConfig::single()
+        };
         Self::start_fleet(addr, cfg, move |_chip| {
             let f = once
                 .lock()
@@ -104,56 +255,142 @@ impl Service {
     {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
+        let allow_remote_shutdown = cfg.allow_remote_shutdown;
+        let max_conns = cfg.max_connections.max(1);
         let fleet = Arc::new(Fleet::start(cfg, make_engine)?);
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown = Arc::new(ShutdownSignal::new());
+        let conns = Arc::new(ConnRegistry::new());
 
-        // Acceptor: non-blocking accept loop; per-connection handler
-        // threads dispatch into the fleet.
+        // Acceptor: *blocking* accept loop — no polling sleeps.  `stop()`
+        // wakes it with a loopback connection after setting the flag.
         let sdown = shutdown.clone();
         let afleet = fleet.clone();
-        let accept_handle = std::thread::spawn(move || {
-            let mut handlers = Vec::new();
-            while !sdown.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let fleet = afleet.clone();
-                        let sdown2 = sdown.clone();
-                        handlers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, fleet, sdown2);
-                        }));
+        let aconns = conns.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("bss2-acceptor".into())
+            .spawn(move || {
+                let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                loop {
+                    let stream = match listener.accept() {
+                        Ok((s, _)) => s,
+                        Err(ref e)
+                            if e.kind() == std::io::ErrorKind::Interrupted =>
+                        {
+                            continue
+                        }
+                        Err(_) => break,
+                    };
+                    if sdown.is_set() {
+                        break; // stop()'s wake-up connection (dropped)
                     }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    // Reap finished handler threads so connection churn
+                    // cannot grow the vector (and the thread handles it
+                    // retains) without bound.
+                    handlers.retain(|h| !h.is_finished());
+                    if aconns.active() >= max_conns {
+                        // Explicit accept-time shed: tell the client why
+                        // before hanging up, instead of a silent RST or —
+                        // worse — an unbounded thread pile-up.
+                        let mut s = stream;
+                        let _ = s.write_all(
+                            format!(
+                                "{{\"ok\":false,\"shed\":true,\
+                                 \"error\":\"connection limit reached\",\
+                                 \"max_connections\":{max_conns}}}\n"
+                            )
+                            .as_bytes(),
+                        );
+                        continue;
                     }
-                    Err(_) => break,
+                    let Ok(id) = aconns.register(&stream) else {
+                        continue;
+                    };
+                    // Re-check *after* registering: `stop()` signals and
+                    // then closes every registered socket, and the
+                    // registry mutex orders the two — either stop() saw
+                    // this entry and closed it, or we see the flag here.
+                    // Either way no handler is spawned on a socket that
+                    // could block the final join.
+                    if sdown.is_set() {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        aconns.deregister(id);
+                        break;
+                    }
+                    let fleet = afleet.clone();
+                    let sdown2 = sdown.clone();
+                    let guard =
+                        ConnGuard { conns: aconns.clone(), id };
+                    let spawned = std::thread::Builder::new()
+                        .name("bss2-conn".into())
+                        .spawn(move || {
+                            let _guard = guard;
+                            let _ = handle_conn(
+                                stream,
+                                fleet,
+                                sdown2,
+                                allow_remote_shutdown,
+                            );
+                        });
+                    // On spawn failure the closure (and the guard inside
+                    // it) is dropped, which deregisters the connection.
+                    if let Ok(h) = spawned {
+                        handlers.push(h);
+                    }
                 }
-            }
-            for h in handlers {
-                let _ = h.join();
-            }
-        });
+                for h in handlers {
+                    let _ = h.join();
+                }
+            })
+            .expect("spawn acceptor");
 
         Ok(Service {
             addr: local,
             fleet,
             shutdown,
+            conns,
             accept_handle: Some(accept_handle),
         })
     }
 
-    /// Block the calling thread until a client sends `shutdown`, then
-    /// stop.  Used by `repro serve`.
+    /// Live client connections (registered handlers).
+    pub fn active_connections(&self) -> usize {
+        self.conns.active()
+    }
+
+    /// Block the calling thread until a client sends `shutdown` (condvar
+    /// wait — no polling), then stop.  Used by `repro serve`.
     pub fn run_until_shutdown(self) {
-        while !self.shutdown.load(Ordering::Relaxed) {
-            std::thread::sleep(std::time::Duration::from_millis(100));
-        }
+        self.shutdown.wait();
         self.stop();
     }
 
     pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        self.shutdown_impl();
+    }
+
+    /// Idempotent teardown: raise the flag, close every registered client
+    /// socket (unblocks readers in blocking I/O), wake the blocking
+    /// acceptor with a loopback connection, then join it — which joins
+    /// every handler; handler writers drain against the still-running
+    /// fleet, so a handler blocked in `resp.recv()` always completes.
+    fn shutdown_impl(&mut self) {
+        self.shutdown.signal();
+        self.conns.shutdown_all();
         if let Some(h) = self.accept_handle.take() {
+            // Wildcard binds (0.0.0.0/::) are not connectable everywhere;
+            // aim the wake-up connection at loopback on the bound port.
+            let mut wake = self.addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    std::net::IpAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::IpAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            let _ = TcpStream::connect(wake);
             let _ = h.join();
         }
         // All handlers joined: this Arc is the last one; drop drains+joins
@@ -163,10 +400,7 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown_impl();
     }
 }
 
@@ -176,15 +410,9 @@ fn json_str(s: &str) -> String {
     Json::Str(s.to_string()).to_string()
 }
 
-/// Largest accepted `classify_batch` wire batch (sanity bound for request
-/// and reply sizes; larger batches should be split by the client anyway).
-pub const MAX_WIRE_BATCH: usize = 64;
-
-/// Largest accepted `recalibrate` repetition count: one request must not
-/// wedge a chip in `Calibrating` (and suppress the fleet policy) for an
-/// unbounded measurement.  1024 reps ≈ 6k integrations per half, already
-/// far past the point of diminishing noise suppression.
-pub const MAX_RECALIB_REPS: usize = 1024;
+fn err_json(msg: &str) -> String {
+    format!("{{\"ok\":false,\"error\":{}}}", json_str(msg))
+}
 
 /// One inference as the inner JSON object of a reply.
 fn inference_json(inf: &Inference) -> String {
@@ -199,228 +427,512 @@ fn inference_json(inf: &Inference) -> String {
     )
 }
 
-fn classify_reply(fleet: &Fleet, trace: Trace) -> String {
-    match fleet.dispatch(trace) {
-        DispatchOutcome::Shed { reason, retry_after_us } => format!(
-            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
-             \"retry_after_us\":{retry_after_us}}}",
-            reason.as_str()
-        ),
-        DispatchOutcome::Enqueued { chip, resp } => match resp.recv() {
-            Err(mpsc::RecvError) => format!(
-                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
-            ),
-            Ok(reply) => match reply.result {
-                Ok(infs) => match infs.first() {
-                    Some(inf) => {
-                        // Same field formatting as the batch reply (one
-                        // source of truth: `inference_json`), plus chip.
-                        let fields = inference_json(inf);
-                        format!(
-                            "{{\"ok\":true,{},\"chip\":{}}}",
-                            &fields[1..fields.len() - 1],
-                            reply.chip
-                        )
-                    }
-                    None => format!(
-                        "{{\"ok\":false,\"error\":\"chip {} empty reply\"}}",
-                        reply.chip
-                    ),
-                },
-                Err(e) => {
-                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
-                }
-            },
-        },
-    }
+/// One pending reply in a connection's ordered-reply FIFO.  `Now` is
+/// resolved text; the other variants hold the receiver their chip worker
+/// will answer on — the writer resolves them in FIFO order, so replies
+/// leave in request order while the requests themselves run concurrently.
+enum Pending {
+    Now(String),
+    /// Write, then close the connection (the `shutdown` good-bye).
+    Bye(String),
+    Classify {
+        chip: ChipId,
+        resp: mpsc::Receiver<crate::fleet::ChipReply>,
+    },
+    Batch {
+        chip: ChipId,
+        batch: usize,
+        accepted: usize,
+        rejected: usize,
+        retry_after_us: u64,
+        resp: mpsc::Receiver<crate::fleet::ChipReply>,
+    },
+    Calib {
+        chip: usize,
+        resp: mpsc::Receiver<crate::fleet::CalibReply>,
+    },
+    StreamResult {
+        window: u64,
+        start_sample: u64,
+        resp: mpsc::Receiver<crate::fleet::ChipReply>,
+    },
 }
 
-/// Serve one `classify_batch` request: dispatch the whole batch to one
-/// chip (amortised weight reconfiguration); report partial acceptance
-/// explicitly so the client can retry the shed suffix.
-fn classify_batch_reply(fleet: &Fleet, traces: Vec<Trace>) -> String {
-    let batch = traces.len();
-    match fleet.dispatch_batch(traces) {
-        BatchDispatchOutcome::Shed { reason, retry_after_us } => format!(
-            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
-             \"accepted\":0,\"batch\":{batch},\
-             \"retry_after_us\":{retry_after_us}}}",
-            reason.as_str()
-        ),
-        BatchDispatchOutcome::Enqueued {
-            chip,
-            accepted,
-            rejected,
-            resp,
-            retry_after_us,
-        } => match resp.recv() {
-            Err(mpsc::RecvError) => format!(
-                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
-            ),
-            Ok(reply) => match reply.result {
-                Ok(infs) => {
-                    let sum_us: f64 =
-                        infs.iter().map(|i| i.sim_time_s).sum::<f64>() * 1e6;
-                    let per_us = sum_us / infs.len().max(1) as f64;
-                    let mut s = format!(
-                        "{{\"ok\":true,\"chip\":{},\"batch\":{batch},\
-                         \"accepted\":{accepted},\"shed\":{rejected},",
-                        reply.chip
-                    );
-                    if rejected > 0 {
-                        s.push_str(&format!(
-                            "\"retry_after_us\":{retry_after_us},"
-                        ));
-                    }
-                    s.push_str(&format!(
-                        "\"time_us_per_sample\":{per_us:.1},\"results\":["
-                    ));
-                    for (i, inf) in infs.iter().enumerate() {
-                        if i > 0 {
-                            s.push(',');
-                        }
-                        s.push_str(&inference_json(inf));
-                    }
-                    s.push_str("]}");
-                    s
-                }
-                Err(e) => {
-                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
-                }
-            },
-        },
-    }
-}
-
-/// Serve one `recalibrate` request: drain the chip, measure, re-admit.
-/// Blocks until the worker reports back (queued work drains first).
-fn recalibrate_reply(fleet: &Fleet, chip: usize, reps: usize) -> String {
-    match fleet.recalibrate_chip(chip, reps) {
-        Err(e) => {
-            format!("{{\"ok\":false,\"error\":{}}}", json_str(&e.to_string()))
-        }
-        Ok(rx) => match rx.recv() {
-            Err(mpsc::RecvError) => format!(
-                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}"
-            ),
-            Ok(reply) => match reply.result {
-                Ok((stamp, residual)) => format!(
-                    "{{\"ok\":true,\"chip\":{chip},\"chip_time_us\":{stamp},\
-                     \"residual_rms\":{residual:.4},\"reason\":\"{}\"}}",
-                    reply.reason.as_str()
-                ),
-                Err(e) => {
-                    format!("{{\"ok\":false,\"error\":{}}}", json_str(&e))
-                }
-            },
-        },
-    }
+/// Per-connection streaming session (`stream_open` .. `stream_close`).
+struct StreamSession {
+    windower: IncrementalWindower,
+    dispatched: u64,
+    shed: u64,
+    samples: u64,
 }
 
 fn handle_conn(
     stream: TcpStream,
     fleet: Arc<Fleet>,
-    shutdown: Arc<AtomicBool>,
+    shutdown: Arc<ShutdownSignal>,
+    allow_remote_shutdown: bool,
 ) -> anyhow::Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
+    // Reader half (this thread) + ordered-reply writer thread.  Blocking
+    // I/O throughout: an idle connection wakes nobody; stop() closes the
+    // socket to unblock us.
+    let writer_stream = stream.try_clone()?;
+    // Bounded FIFO: `send` blocks at PENDING_REPLY_DEPTH outstanding
+    // replies, propagating backpressure to the client instead of
+    // buffering unboundedly.  stop() cannot deadlock on this: it closes
+    // the socket, the writer's write fails and it drops `rx`, and any
+    // blocked `send` here returns Err immediately.
+    let (tx, rx) = mpsc::sync_channel::<Pending>(PENDING_REPLY_DEPTH);
+    let writer_shutdown = shutdown.clone();
+    let writer = std::thread::Builder::new()
+        .name("bss2-conn-writer".into())
+        .spawn(move || write_loop(writer_stream, rx, writer_shutdown))?;
+
     let mut reader = BufReader::new(stream);
+    let mut session: Option<StreamSession> = None;
     let mut line = String::new();
-    loop {
-        if shutdown.load(Ordering::Relaxed) {
-            return Ok(());
-        }
+    let result = loop {
+        line.clear();
         match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
+            Ok(0) => break Ok(()), // client closed
             Ok(_) => {}
-            Err(ref e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // Timeout mid-line: keep the partial request buffered —
-                // read_line appends, so the next pass completes it.
-                continue;
-            }
-            Err(e) => return Err(e.into()),
+            // stop() shut the socket down, or the peer vanished.
+            Err(e) => break Err(e.into()),
+        }
+        if shutdown.is_set() {
+            break Ok(());
         }
         if line.trim().is_empty() {
-            line.clear();
             continue;
         }
-        let reply = match Json::parse(line.trim()) {
-            Err(e) => format!(
-                "{{\"ok\":false,\"error\":{}}}",
-                json_str(&format!("bad json: {e}"))
+        let (replies, bye) = handle_request(
+            line.trim(),
+            &fleet,
+            allow_remote_shutdown,
+            &mut session,
+        );
+        let mut writer_gone = false;
+        for p in replies {
+            if tx.send(p).is_err() {
+                writer_gone = true;
+                break;
+            }
+        }
+        if bye || writer_gone {
+            break Ok(());
+        }
+    };
+    // Let the writer flush every pending reply, then join it.
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// The connection's ordered-reply writer: resolves pending replies in
+/// FIFO (= request) order.  A write failure (client gone, or stop()
+/// closed the socket) ends the loop; dropped receivers are harmless —
+/// chip workers ignore closed reply channels.  An accepted wire
+/// `shutdown` is signalled *here*, after the good-bye line (and every
+/// reply queued ahead of it) reached the socket — raising it any
+/// earlier would race `stop()` into closing this connection under the
+/// unflushed replies.
+fn write_loop(
+    mut w: TcpStream,
+    rx: mpsc::Receiver<Pending>,
+    shutdown: Arc<ShutdownSignal>,
+) {
+    while let Ok(p) = rx.recv() {
+        let (reply, bye) = match p {
+            Pending::Now(s) => (s, false),
+            Pending::Bye(s) => (s, true),
+            Pending::Classify { chip, resp } => {
+                (resolve_classify(chip, &resp), false)
+            }
+            Pending::Batch {
+                chip,
+                batch,
+                accepted,
+                rejected,
+                retry_after_us,
+                resp,
+            } => (
+                resolve_batch(chip, batch, accepted, rejected, retry_after_us, &resp),
+                false,
             ),
-            Ok(req) => match req.get("cmd").and_then(|c| c.as_str()) {
-                Some("ping") => "{\"ok\":true,\"pong\":true}".to_string(),
-                Some("shutdown") => {
-                    shutdown.store(true, Ordering::Relaxed);
-                    "{\"ok\":true,\"bye\":true}".to_string()
-                }
-                Some("stats") => {
-                    let t = fleet.telemetry().snapshot();
+            Pending::Calib { chip, resp } => (resolve_calib(chip, &resp), false),
+            Pending::StreamResult { window, start_sample, resp } => {
+                (resolve_stream(window, start_sample, &resp), false)
+            }
+        };
+        let write_ok = w.write_all(reply.as_bytes()).is_ok()
+            && w.write_all(b"\n").is_ok();
+        if bye {
+            // Accepted shutdown: the command takes effect even if the
+            // good-bye could not be delivered (the client vanished).
+            shutdown.signal();
+            return;
+        }
+        if !write_ok {
+            return;
+        }
+    }
+}
+
+fn resolve_classify(
+    chip: ChipId,
+    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+) -> String {
+    match resp.recv() {
+        Err(mpsc::RecvError) => {
+            format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
+        }
+        Ok(reply) => match reply.result {
+            Ok(infs) => match infs.first() {
+                Some(inf) => {
+                    // Same field formatting as the batch reply (one
+                    // source of truth: `inference_json`), plus chip.
+                    let fields = inference_json(inf);
                     format!(
-                        "{{\"ok\":true,\"served\":{},\"mean_time_us\":{:.3},\
-                         \"chips\":{},\"shed\":{}}}",
-                        t.served,
-                        t.mean_sim_time_us,
-                        fleet.size(),
-                        fleet.shed_count()
+                        "{{\"ok\":true,{},\"chip\":{}}}",
+                        &fields[1..fields.len() - 1],
+                        reply.chip
                     )
                 }
-                Some("fleet_stats") => fleet.stats_json(),
-                Some("recalibrate") => {
-                    // Malformed fields are rejected, never defaulted: a
-                    // bad `chip` would drain a replica the client never
-                    // named, a bad `reps` would silently run a
-                    // measurement length they never asked for.
-                    let chip = req
-                        .get("chip")
-                        .and_then(|c| c.as_uint())
-                        .map(|c| c as usize);
-                    let reps = match req.get("reps") {
-                        None => Some(32),
-                        Some(r) => r.as_uint().map(|r| r as usize),
+                None => format!(
+                    "{{\"ok\":false,\"error\":\"chip {} empty reply\"}}",
+                    reply.chip
+                ),
+            },
+            Err(e) => err_json(&e),
+        },
+    }
+}
+
+fn resolve_batch(
+    chip: ChipId,
+    batch: usize,
+    accepted: usize,
+    rejected: usize,
+    retry_after_us: u64,
+    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+) -> String {
+    match resp.recv() {
+        Err(mpsc::RecvError) => {
+            format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
+        }
+        Ok(reply) => match reply.result {
+            Ok(infs) => {
+                let sum_us: f64 =
+                    infs.iter().map(|i| i.sim_time_s).sum::<f64>() * 1e6;
+                let per_us = sum_us / infs.len().max(1) as f64;
+                let mut s = format!(
+                    "{{\"ok\":true,\"chip\":{},\"batch\":{batch},\
+                     \"accepted\":{accepted},\"shed\":{rejected},",
+                    reply.chip
+                );
+                if rejected > 0 {
+                    s.push_str(&format!(
+                        "\"retry_after_us\":{retry_after_us},"
+                    ));
+                }
+                s.push_str(&format!(
+                    "\"time_us_per_sample\":{per_us:.1},\"results\":["
+                ));
+                for (i, inf) in infs.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
                     }
-                    .filter(|r| (1..=MAX_RECALIB_REPS).contains(r));
-                    match (chip, reps) {
-                        (None, _) => "{\"ok\":false,\"error\":\"recalibrate \
-                                      requires a non-negative integer `chip` \
-                                      field\"}"
-                            .to_string(),
-                        (_, None) => format!(
-                            "{{\"ok\":false,\"error\":\"reps must be an \
-                             integer in 1..={MAX_RECALIB_REPS}\"}}"
-                        ),
-                        (Some(chip), Some(reps)) => {
-                            recalibrate_reply(&fleet, chip, reps)
+                    s.push_str(&inference_json(inf));
+                }
+                s.push_str("]}");
+                s
+            }
+            Err(e) => err_json(&e),
+        },
+    }
+}
+
+fn resolve_calib(
+    chip: usize,
+    resp: &mpsc::Receiver<crate::fleet::CalibReply>,
+) -> String {
+    match resp.recv() {
+        Err(mpsc::RecvError) => {
+            format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
+        }
+        Ok(reply) => match reply.result {
+            Ok((stamp, residual)) => format!(
+                "{{\"ok\":true,\"chip\":{chip},\"chip_time_us\":{stamp},\
+                 \"residual_rms\":{residual:.4},\"reason\":\"{}\"}}",
+                reply.reason.as_str()
+            ),
+            Err(e) => err_json(&e),
+        },
+    }
+}
+
+fn resolve_stream(
+    window: u64,
+    start_sample: u64,
+    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+) -> String {
+    match resp.recv() {
+        Err(mpsc::RecvError) => format!(
+            "{{\"ok\":false,\"stream\":true,\"window\":{window},\
+             \"start_sample\":{start_sample},\
+             \"error\":\"chip worker gone\"}}"
+        ),
+        Ok(reply) => match reply.result {
+            Ok(infs) => match infs.first() {
+                Some(inf) => {
+                    let fields = inference_json(inf);
+                    format!(
+                        "{{\"ok\":true,\"stream\":true,\"window\":{window},\
+                         \"start_sample\":{start_sample},{},\"chip\":{}}}",
+                        &fields[1..fields.len() - 1],
+                        reply.chip
+                    )
+                }
+                None => format!(
+                    "{{\"ok\":false,\"stream\":true,\"window\":{window},\
+                     \"start_sample\":{start_sample},\
+                     \"error\":\"chip {} empty reply\"}}",
+                    reply.chip
+                ),
+            },
+            Err(e) => format!(
+                "{{\"ok\":false,\"stream\":true,\"window\":{window},\
+                 \"start_sample\":{start_sample},\"error\":{}}}",
+                json_str(&e)
+            ),
+        },
+    }
+}
+
+/// Parse one request line and dispatch it.  Returns the pending replies
+/// to enqueue (in order) and whether the connection should close after
+/// they are written.
+fn handle_request(
+    line: &str,
+    fleet: &Fleet,
+    allow_remote_shutdown: bool,
+    session: &mut Option<StreamSession>,
+) -> (Vec<Pending>, bool) {
+    let one = |s: String| (vec![Pending::Now(s)], false);
+    let req = match Json::parse(line) {
+        Err(e) => return one(err_json(&format!("bad json: {e}"))),
+        Ok(req) => req,
+    };
+    match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("ping") => one("{\"ok\":true,\"pong\":true}".to_string()),
+        Some("shutdown") => {
+            if !allow_remote_shutdown {
+                return one(err_json(
+                    "remote shutdown disabled; start the service with \
+                     --allow-remote-shutdown",
+                ));
+            }
+            // The *writer* raises the shutdown signal, after it flushed
+            // every pipelined reply ahead of the good-bye — signalling
+            // here would let stop() close this very socket before the
+            // client got its replies.
+            (
+                vec![Pending::Bye("{\"ok\":true,\"bye\":true}".to_string())],
+                true,
+            )
+        }
+        Some("stats") => {
+            let t = fleet.telemetry().snapshot();
+            one(format!(
+                "{{\"ok\":true,\"served\":{},\"mean_time_us\":{:.3},\
+                 \"chips\":{},\"shed\":{}}}",
+                t.served,
+                t.mean_sim_time_us,
+                fleet.size(),
+                fleet.shed_count()
+            ))
+        }
+        Some("fleet_stats") => one(fleet.stats_json()),
+        Some("recalibrate") => {
+            // Malformed fields are rejected, never defaulted: a bad
+            // `chip` would drain a replica the client never named, a bad
+            // `reps` would silently run a measurement length they never
+            // asked for.
+            let chip = req
+                .get("chip")
+                .and_then(|c| c.as_uint())
+                .map(|c| c as usize);
+            let reps = match req.get("reps") {
+                None => Some(32),
+                Some(r) => r.as_uint().map(|r| r as usize),
+            }
+            .filter(|r| (1..=MAX_RECALIB_REPS).contains(r));
+            match (chip, reps) {
+                (None, _) => one(
+                    "{\"ok\":false,\"error\":\"recalibrate requires a \
+                     non-negative integer `chip` field\"}"
+                        .to_string(),
+                ),
+                (_, None) => one(format!(
+                    "{{\"ok\":false,\"error\":\"reps must be an integer \
+                     in 1..={MAX_RECALIB_REPS}\"}}"
+                )),
+                (Some(chip), Some(reps)) => {
+                    match fleet.recalibrate_chip(chip, reps) {
+                        Err(e) => one(err_json(&e.to_string())),
+                        Ok(rx) => {
+                            (vec![Pending::Calib { chip, resp: rx }], false)
                         }
                     }
                 }
-                Some("classify") => match parse_trace(&req) {
-                    Err(e) => format!(
-                        "{{\"ok\":false,\"error\":{}}}",
-                        json_str(&e.to_string())
-                    ),
-                    Ok(trace) => classify_reply(&fleet, trace),
-                },
-                Some("classify_batch") => match parse_trace_batch(&req) {
-                    Err(e) => format!(
-                        "{{\"ok\":false,\"error\":{}}}",
-                        json_str(&e.to_string())
-                    ),
-                    Ok(traces) => classify_batch_reply(&fleet, traces),
-                },
-                _ => "{\"ok\":false,\"error\":\"unknown cmd\"}".to_string(),
-            },
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        if reply.contains("\"bye\"") {
-            return Ok(());
+            }
         }
-        line.clear();
+        Some("classify") => match parse_trace(&req) {
+            Err(e) => one(err_json(&e.to_string())),
+            Ok(trace) => match fleet.dispatch(trace) {
+                DispatchOutcome::Shed { reason, retry_after_us } => {
+                    one(format!(
+                        "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
+                         \"retry_after_us\":{retry_after_us}}}",
+                        reason.as_str()
+                    ))
+                }
+                DispatchOutcome::Enqueued { chip, resp } => {
+                    (vec![Pending::Classify { chip, resp }], false)
+                }
+            },
+        },
+        Some("classify_batch") => match parse_trace_batch(&req) {
+            Err(e) => one(err_json(&e.to_string())),
+            Ok(traces) => {
+                let batch = traces.len();
+                match fleet.dispatch_batch(traces) {
+                    BatchDispatchOutcome::Shed { reason, retry_after_us } => {
+                        one(format!(
+                            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
+                             \"accepted\":0,\"batch\":{batch},\
+                             \"retry_after_us\":{retry_after_us}}}",
+                            reason.as_str()
+                        ))
+                    }
+                    BatchDispatchOutcome::Enqueued {
+                        chip,
+                        accepted,
+                        rejected,
+                        resp,
+                        retry_after_us,
+                    } => (
+                        vec![Pending::Batch {
+                            chip,
+                            batch,
+                            accepted,
+                            rejected,
+                            retry_after_us,
+                            resp,
+                        }],
+                        false,
+                    ),
+                }
+            }
+        },
+        Some("stream_open") => {
+            if session.is_some() {
+                return one(err_json("stream already open on this connection"));
+            }
+            let hop = match req.get("hop") {
+                None => Ok(c::ECG_WINDOW),
+                Some(h) => h.as_uint().map(|h| h as usize).ok_or_else(|| {
+                    anyhow::anyhow!("hop must be a non-negative integer")
+                }),
+            };
+            match hop.and_then(IncrementalWindower::new) {
+                Err(e) => one(err_json(&e.to_string())),
+                Ok(windower) => {
+                    let hop = windower.hop();
+                    *session = Some(StreamSession {
+                        windower,
+                        dispatched: 0,
+                        shed: 0,
+                        samples: 0,
+                    });
+                    one(format!(
+                        "{{\"ok\":true,\"stream\":\"open\",\"hop\":{hop},\
+                         \"window\":{},\"pool_window\":{}}}",
+                        c::ECG_WINDOW,
+                        c::POOL_WINDOW
+                    ))
+                }
+            }
+        }
+        Some("stream_push") => {
+            // Session-level errors are framed with "stream":true so a
+            // client draining the asynchronous result stream can tell a
+            // rejected push from a window result (which always carries a
+            // "window" field).
+            let stream_err = |msg: &str| {
+                (
+                    vec![Pending::Now(format!(
+                        "{{\"ok\":false,\"stream\":true,\"error\":{}}}",
+                        json_str(msg)
+                    ))],
+                    false,
+                )
+            };
+            let Some(sess) = session.as_mut() else {
+                return stream_err(
+                    "no open stream on this connection (send stream_open \
+                     first)",
+                );
+            };
+            let chunk = match parse_stream_chunk(&req) {
+                Err(e) => return stream_err(&e.to_string()),
+                Ok(chunk) => chunk,
+            };
+            sess.samples += chunk[0].len() as u64;
+            let frames = match sess.windower.push_chunk(&chunk) {
+                Err(e) => return stream_err(&e.to_string()),
+                Ok(frames) => frames,
+            };
+            let mut out = Vec::with_capacity(frames.len());
+            for f in frames {
+                let acts: Vec<i32> =
+                    f.acts.iter().map(|&a| a as i32).collect();
+                match fleet.dispatch_acts(acts) {
+                    DispatchOutcome::Enqueued { chip: _, resp } => {
+                        sess.dispatched += 1;
+                        out.push(Pending::StreamResult {
+                            window: f.index,
+                            start_sample: f.start_sample,
+                            resp,
+                        });
+                    }
+                    DispatchOutcome::Shed { reason, retry_after_us } => {
+                        sess.shed += 1;
+                        out.push(Pending::Now(format!(
+                            "{{\"ok\":false,\"stream\":true,\"shed\":true,\
+                             \"window\":{},\"start_sample\":{},\
+                             \"error\":\"{}\",\
+                             \"retry_after_us\":{retry_after_us}}}",
+                            f.index,
+                            f.start_sample,
+                            reason.as_str()
+                        )));
+                    }
+                }
+            }
+            (out, false)
+        }
+        Some("stream_close") => match session.take() {
+            None => one(err_json("no open stream on this connection")),
+            Some(sess) => one(format!(
+                "{{\"ok\":true,\"stream\":\"closed\",\"windows\":{},\
+                 \"dispatched\":{},\"shed\":{},\"samples\":{}}}",
+                sess.windower.windows(),
+                sess.dispatched,
+                sess.shed,
+                sess.samples
+            )),
+        },
+        _ => one("{\"ok\":false,\"error\":\"unknown cmd\"}".to_string()),
     }
 }
 
@@ -442,6 +954,17 @@ fn parse_trace_batch(req: &Json) -> anyhow::Result<Vec<Trace>> {
     items.iter().map(parse_trace_value).collect()
 }
 
+/// One 12-bit sample.  Strict: non-integer values are rejected, not
+/// silently truncated (`12.7` used to become `12` via `as u16`) — same
+/// convention as every other numeric wire field (`Json::as_uint`).
+fn parse_sample(v: &Json) -> anyhow::Result<u16> {
+    let x = v.as_uint().ok_or_else(|| {
+        anyhow::anyhow!("samples must be non-negative integers")
+    })?;
+    anyhow::ensure!(x < 4096, "sample {x} out of 12-bit range");
+    Ok(x as u16)
+}
+
 fn parse_trace_value(v: &Json) -> anyhow::Result<Trace> {
     let chans = v
         .as_arr()
@@ -458,17 +981,43 @@ fn parse_trace_value(v: &Json) -> anyhow::Result<Trace> {
             c::ECG_WINDOW,
             vals.len()
         );
-        let mut chan = Vec::with_capacity(c::ECG_WINDOW);
-        for v in vals {
-            let x = v
-                .as_f64()
-                .ok_or_else(|| anyhow::anyhow!("non-numeric sample"))?;
-            anyhow::ensure!((0.0..4096.0).contains(&x), "sample out of 12-bit range");
-            chan.push(x as u16);
-        }
+        let chan =
+            vals.iter().map(parse_sample).collect::<anyhow::Result<_>>()?;
         samples.push(chan);
     }
     Ok(Trace { samples, label: 0 })
+}
+
+/// Parse a `stream_push` chunk: two equal-length channels of 12-bit
+/// integer samples, 1..=[`MAX_STREAM_CHUNK`] samples each.
+fn parse_stream_chunk(req: &Json) -> anyhow::Result<Vec<Vec<u16>>> {
+    let chans = req
+        .req("samples")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("samples must be an array"))?;
+    anyhow::ensure!(chans.len() == c::ECG_CHANNELS, "need 2 channels");
+    let mut chunk = Vec::with_capacity(c::ECG_CHANNELS);
+    for ch in chans {
+        let vals = ch
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("channel must be an array"))?;
+        anyhow::ensure!(!vals.is_empty(), "empty chunk");
+        anyhow::ensure!(
+            vals.len() <= MAX_STREAM_CHUNK,
+            "chunk of {} exceeds {MAX_STREAM_CHUNK} samples per push",
+            vals.len()
+        );
+        let chan: Vec<u16> =
+            vals.iter().map(parse_sample).collect::<anyhow::Result<_>>()?;
+        chunk.push(chan);
+    }
+    anyhow::ensure!(
+        chunk[0].len() == chunk[1].len(),
+        "channel lengths differ: {} vs {}",
+        chunk[0].len(),
+        chunk[1].len()
+    );
+    Ok(chunk)
 }
 
 /// Client helper (used by tests + the remote_client example).
@@ -484,25 +1033,70 @@ impl Client {
         Ok(Client { stream, reader })
     }
 
-    pub fn call(&mut self, req: &str) -> anyhow::Result<Json> {
+    /// A second handle on the same connection, for split read/write use
+    /// (e.g. one thread pushing stream chunks while another collects the
+    /// asynchronous result lines).  Each handle has its own buffered
+    /// reader: only ever *read* from one of them, or buffered bytes are
+    /// lost to the other.
+    pub fn try_clone(&self) -> anyhow::Result<Client> {
+        Ok(Client {
+            stream: self.stream.try_clone()?,
+            reader: BufReader::new(self.stream.try_clone()?),
+        })
+    }
+
+    /// Write one request line without reading a reply — the pipelining /
+    /// streaming half of the protocol.  Pair with [`read_reply`].
+    ///
+    /// [`read_reply`]: Client::read_reply
+    pub fn send(&mut self, req: &str) -> anyhow::Result<()> {
         self.stream.write_all(req.as_bytes())?;
         self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read one reply line (blocking).
+    pub fn read_reply(&mut self) -> anyhow::Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "connection closed");
         Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
     }
 
+    /// Request/response convenience: send one line, read one line.
+    pub fn call(&mut self, req: &str) -> anyhow::Result<Json> {
+        self.send(req)?;
+        self.read_reply()
+    }
+
     pub fn classify(&mut self, trace: &Trace) -> anyhow::Result<Json> {
+        self.send_classify(trace)?;
+        self.read_reply()
+    }
+
+    /// Write a `classify` request without waiting — lets callers pipeline
+    /// several requests on one connection before collecting the ordered
+    /// replies.
+    pub fn send_classify(&mut self, trace: &Trace) -> anyhow::Result<()> {
         let mut req = String::from("{\"cmd\":\"classify\",\"trace\":");
         push_trace_json(trace, &mut req);
         req.push('}');
-        self.call(&req)
+        self.send(&req)
     }
 
     /// Submit a whole batch as one `classify_batch` request (amortised
     /// weight reconfiguration server-side).  The reply may report partial
     /// acceptance: `accepted` < batch with the shed suffix to retry.
     pub fn classify_batch(&mut self, traces: &[Trace]) -> anyhow::Result<Json> {
+        self.send_classify_batch(traces)?;
+        self.read_reply()
+    }
+
+    /// Write a `classify_batch` request without waiting for the reply.
+    pub fn send_classify_batch(
+        &mut self,
+        traces: &[Trace],
+    ) -> anyhow::Result<()> {
         let mut req = String::from("{\"cmd\":\"classify_batch\",\"traces\":[");
         for (i, trace) in traces.iter().enumerate() {
             if i > 0 {
@@ -511,7 +1105,42 @@ impl Client {
             push_trace_json(trace, &mut req);
         }
         req.push_str("]}");
-        self.call(&req)
+        self.send(&req)
+    }
+
+    /// Open a streaming session at `hop` samples per window step.
+    pub fn stream_open(&mut self, hop: usize) -> anyhow::Result<Json> {
+        self.call(&format!("{{\"cmd\":\"stream_open\",\"hop\":{hop}}}"))
+    }
+
+    /// Push one chunk (`chunk[ch]`, equal lengths) into the open stream.
+    /// No reply is read: window results arrive asynchronously — collect
+    /// them with [`read_reply`](Client::read_reply).
+    pub fn stream_push(&mut self, chunk: &[Vec<u16>]) -> anyhow::Result<()> {
+        let mut req = String::from("{\"cmd\":\"stream_push\",\"samples\":[");
+        for (i, ch) in chunk.iter().enumerate() {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push('[');
+            for (j, &s) in ch.iter().enumerate() {
+                if j > 0 {
+                    req.push(',');
+                }
+                req.push_str(&s.to_string());
+            }
+            req.push(']');
+        }
+        req.push_str("]}");
+        self.send(&req)
+    }
+
+    /// Send `stream_close`.  The close acknowledgement arrives *after*
+    /// every pending window result (ordered-reply FIFO): keep calling
+    /// [`read_reply`](Client::read_reply) until the line carries
+    /// `"stream":"closed"`.
+    pub fn stream_close(&mut self) -> anyhow::Result<()> {
+        self.send("{\"cmd\":\"stream_close\"}")
     }
 }
 
@@ -598,6 +1227,51 @@ mod tests {
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
         let r = cl.call("{\"cmd\":\"nope\"}").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        svc.stop();
+    }
+
+    #[test]
+    fn non_integer_samples_rejected() {
+        // Satellite fix: `12.7` used to be silently truncated to 12 (and
+        // `0.5` to 0) via `as u16`; now any non-integer sample rejects
+        // the request, matching the strict `as_uint` wire convention.
+        let svc = Service::start("127.0.0.1:0", || Ok(test_engine())).unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        // A classify request whose very first sample is `first`, the rest
+        // a constant mid-scale 2048.
+        let req_with = |first: &str| {
+            let mut req =
+                format!("{{\"cmd\":\"classify\",\"trace\":[[{first}");
+            for _ in 1..c::ECG_WINDOW {
+                req.push_str(",2048");
+            }
+            req.push_str("],[2048");
+            for _ in 1..c::ECG_WINDOW {
+                req.push_str(",2048");
+            }
+            req.push_str("]]}");
+            req
+        };
+        // Sanity: the all-integer request passes ...
+        let r = cl.call(&req_with("2048")).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        // ... while fractional samples are refused, not truncated.
+        for v in ["12.7", "0.5"] {
+            let r = cl.call(&req_with(v)).unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{v}: {r}");
+            assert!(
+                r.get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap()
+                    .contains("integer"),
+                "{v}: {r}"
+            );
+        }
+        // Negative and out-of-12-bit-range values are refused too.
+        for v in ["-3", "4096", "\"2048\""] {
+            let r = cl.call(&req_with(v)).unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{v}: {r}");
+        }
         svc.stop();
     }
 

@@ -15,7 +15,9 @@ pub const MID: i32 = 2048;
 pub const FULL_SCALE_MV: f64 = 2.5;
 
 /// (center offset [fraction of RR], width [s], amplitude ch0 [mV], ch1 scale)
-const WAVES: [(&str, f64, f64, f64, f64); 5] = [
+/// Shared with the continuous generator ([`super::stream`]) so windowed
+/// and streamed morphology can never drift apart.
+pub(crate) const WAVES: [(&str, f64, f64, f64, f64); 5] = [
     ("P", -0.18, 0.025, 0.12, 0.7),
     ("Q", -0.03, 0.010, -0.14, 1.3),
     ("R", 0.00, 0.012, 1.10, 0.55),

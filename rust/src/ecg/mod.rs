@@ -1,7 +1,10 @@
 //! Synthetic ECG workload (substitute for the private BMBF dataset).
 //!
-//! * [`gen`] — streaming generator, mirror of `python/compile/data.py`.
+//! * [`gen`] — windowed generator, mirror of `python/compile/data.py`.
+//! * [`stream`] — continuous episode-labeled stream source (the
+//!   monitoring scenario: afib episodes crossing window boundaries).
 //! * [`dataset`] — reader for the binary artifact sets (`ecg_*.bin`).
 
 pub mod dataset;
 pub mod gen;
+pub mod stream;

@@ -1,0 +1,499 @@
+//! Continuous two-channel ECG source with labeled rhythm *episodes*.
+//!
+//! [`gen::generate_trace`](super::gen::generate_trace) makes isolated
+//! 2048-sample windows — fine for the paper's pre-cut benchmark sets, but
+//! real ECG monitoring is an unbroken 150 Hz stream in which arrhythmia
+//! episodes start and stop wherever they like, crossing every window
+//! boundary (the scenario targeted by event-driven neuromorphic ECG
+//! monitors, Bauer et al. 2019).  This module emits such a stream: sinus
+//! rhythm and atrial-fibrillation *segments* alternate with random
+//! durations, the morphology (P/Q/R/S/T bumps, fibrillatory wave,
+//! baseline wander, sensor noise) matches the windowed generator, and the
+//! ground-truth episode intervals are exposed for latency measurements.
+//!
+//! Determinism: the generator is **chunking-invariant** — the emitted
+//! sample sequence depends only on the seed, never on how the consumer
+//! slices its reads.  Each stochastic component (segment schedule, beat
+//! timing, sensor noise) draws from its own seeded SplitMix64 stream, so
+//! interleaving order cannot perturb any of them.
+
+use std::collections::VecDeque;
+
+use crate::asic::consts as c;
+use crate::util::rng::SplitMix64;
+
+use super::gen::{FULL_SCALE_MV, MID, WAVES};
+
+/// Furthest a beat's bumps reach *behind* its R-peak [s]: the P wave sits
+/// at -0.18 · 0.8 s with a ±4σ support of 0.1 s.
+const BEAT_BACK_S: f64 = 0.25;
+/// Furthest a beat's bumps reach *ahead* of its R-peak [s]: the T wave at
+/// +0.22 · 0.8 s with ±4σ of 0.24 s.
+const BEAT_FWD_S: f64 = 0.45;
+/// Synthesis lookahead [samples]: a sample is final only once every beat
+/// that could touch it has been placed, i.e. once the buffer extends
+/// `BEAT_BACK_S + BEAT_FWD_S` (0.7 s ≈ 105 samples) past it; padded a
+/// little for rounding slack.
+const COMPLETE_MARGIN: usize =
+    ((BEAT_BACK_S + BEAT_FWD_S) * c::ECG_FS_HZ) as usize + 15;
+/// Sensor-noise block length [samples] (matches the windowed generator).
+const NOISE_BLOCK: u64 = 8;
+
+/// One rhythm interval `[start, end)` in absolute stream samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Episode {
+    pub start: u64,
+    pub end: u64,
+    pub afib: bool,
+}
+
+impl Episode {
+    /// Length in samples.
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+}
+
+/// Episode schedule knobs (durations in seconds).
+#[derive(Debug, Clone)]
+pub struct EpisodeConfig {
+    /// Guaranteed sinus rhythm at the start of the stream (detector
+    /// calibration window for the monitoring demo).
+    pub lead_in_s: f64,
+    /// Sinus segment duration range (uniform).
+    pub sinus_s: (f64, f64),
+    /// A-fib episode duration range (uniform).
+    pub afib_s: (f64, f64),
+}
+
+impl Default for EpisodeConfig {
+    fn default() -> Self {
+        // Defaults make every afib episode span multiple 2048-sample
+        // (≈ 13.7 s) windows and every boundary land mid-window.
+        EpisodeConfig {
+            lead_in_s: 30.0,
+            sinus_s: (25.0, 60.0),
+            afib_s: (15.0, 40.0),
+        }
+    }
+}
+
+/// Per-segment synthesis parameters (drawn once when the segment is
+/// scheduled, from the schedule RNG stream).
+#[derive(Debug, Clone)]
+struct Segment {
+    start: u64,
+    end: u64,
+    afib: bool,
+    /// Base RR interval [s] from the segment's heart rate.
+    base_rr: f64,
+    /// Respiratory sinus arrhythmia (sinus segments).
+    resp_f: f64,
+    resp_phase: f64,
+    /// Fibrillatory wave (afib segments).
+    fib_amp: f64,
+    fib_freq: f64,
+    fib_phase: f64,
+}
+
+/// Unbounded continuous ECG generator.  Pull samples with
+/// [`next_chunk`](ContinuousEcg::next_chunk); query ground truth with
+/// [`episodes`](ContinuousEcg::episodes) / [`afib_fraction`](ContinuousEcg::afib_fraction).
+pub struct ContinuousEcg {
+    difficulty: f64,
+    cfg: EpisodeConfig,
+    // Independent stochastic streams (chunking invariance).
+    seg_rng: SplitMix64,
+    beat_rng: SplitMix64,
+    noise_rng: SplitMix64,
+    // Stream-level morphology.
+    amp_scale: f64,
+    wave_jitter: [f64; 5],
+    bw_amp: f64,
+    bw_f: f64,
+    bw_phase: f64,
+    noise_sigma: f64,
+    // Segment schedule (grows on demand; strictly contiguous).
+    segments: Vec<Segment>,
+    // Beat engine.
+    next_beat_t: f64,
+    // Sensor-noise block state.
+    next_noise_block: u64,
+    cur_noise: [f64; 2],
+    // Signal buffer: buf[i] holds sample `buf_start + i` (mV, per channel).
+    buf_start: u64,
+    buf: VecDeque<[f64; 2]>,
+    emitted: u64,
+}
+
+impl ContinuousEcg {
+    pub fn new(seed: u64, difficulty: f64, cfg: EpisodeConfig) -> ContinuousEcg {
+        let mut morph = SplitMix64::new(seed ^ 0x00C0_FFEE_0001);
+        let amp_scale = morph.uniform(0.8, 1.2);
+        let mut wave_jitter = [1.0f64; 5];
+        for j in wave_jitter.iter_mut() {
+            *j = 1.0 + 0.15 * morph.gauss();
+        }
+        let bw_amp = morph.uniform(0.05, 0.30);
+        let bw_f = morph.uniform(0.15, 0.45);
+        let bw_phase = morph.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let noise_sigma =
+            morph.uniform(0.015, 0.035) * (1.0 + 0.5 * difficulty);
+        let mut beat_rng = SplitMix64::new(seed ^ 0x00BE_A700_0002);
+        let next_beat_t = beat_rng.uniform(0.0, 0.5);
+        ContinuousEcg {
+            difficulty,
+            cfg,
+            seg_rng: SplitMix64::new(seed ^ 0x005E_6000_0003),
+            beat_rng,
+            noise_rng: SplitMix64::new(seed ^ 0x0001_5E00_0004),
+            amp_scale,
+            wave_jitter,
+            bw_amp,
+            bw_f,
+            bw_phase,
+            noise_sigma,
+            segments: Vec::new(),
+            next_beat_t,
+            next_noise_block: 0,
+            cur_noise: [0.0; 2],
+            buf_start: 0,
+            buf: VecDeque::new(),
+            emitted: 0,
+        }
+    }
+
+    /// Samples handed out so far (the absolute index of the next sample).
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// The episode schedule as scheduled so far (extends slightly past the
+    /// synthesized signal: segments are drawn ahead of the sample cursor).
+    pub fn episodes(&self) -> Vec<Episode> {
+        self.segments
+            .iter()
+            .map(|s| Episode { start: s.start, end: s.end, afib: s.afib })
+            .collect()
+    }
+
+    /// Fraction of `[start, start + len)` covered by afib episodes.
+    /// Extends the schedule on demand, so any future range is valid.
+    pub fn afib_fraction(&mut self, start: u64, len: u64) -> f64 {
+        if len == 0 {
+            return 0.0;
+        }
+        let end = start + len;
+        self.ensure_segments(end);
+        let mut afib = 0u64;
+        for s in &self.segments {
+            if s.afib {
+                afib += s.end.min(end).saturating_sub(s.start.max(start));
+            }
+        }
+        afib as f64 / len as f64
+    }
+
+    /// Emit the next `n` samples as `[channel][n]` 12-bit values.
+    pub fn next_chunk(&mut self, n: usize) -> Vec<Vec<u16>> {
+        self.synthesize_to(self.emitted + n as u64);
+        let mut out = vec![Vec::with_capacity(n); c::ECG_CHANNELS];
+        for _ in 0..n {
+            let v = self.buf.pop_front().expect("synthesized range");
+            self.buf_start += 1;
+            for (ch, chan) in out.iter_mut().enumerate() {
+                chan.push(digitize(v[ch]));
+            }
+        }
+        self.emitted += n as u64;
+        out
+    }
+
+    // --- synthesis ---------------------------------------------------------
+
+    /// Extend the segment schedule to cover at least `sample`.
+    fn ensure_segments(&mut self, sample: u64) {
+        let fs = c::ECG_FS_HZ;
+        while self
+            .segments
+            .last()
+            .map(|s| s.end <= sample)
+            .unwrap_or(true)
+        {
+            let (start, afib) = match self.segments.last() {
+                None => (0, false), // sinus lead-in
+                Some(prev) => (prev.end, !prev.afib),
+            };
+            let dur_s = match (self.segments.is_empty(), afib) {
+                (true, _) => self.cfg.lead_in_s,
+                (false, false) => {
+                    self.seg_rng.uniform(self.cfg.sinus_s.0, self.cfg.sinus_s.1)
+                }
+                (false, true) => {
+                    self.seg_rng.uniform(self.cfg.afib_s.0, self.cfg.afib_s.1)
+                }
+            };
+            let len = ((dur_s * fs).round() as u64).max(1);
+            let hr = if afib {
+                self.seg_rng.uniform(75.0, 135.0)
+            } else {
+                self.seg_rng.uniform(55.0, 92.0)
+            };
+            let seg = Segment {
+                start,
+                end: start + len,
+                afib,
+                base_rr: 60.0 / hr,
+                resp_f: self.seg_rng.uniform(0.15, 0.35),
+                resp_phase: self.seg_rng.uniform(0.0, 2.0 * std::f64::consts::PI),
+                fib_amp: self.seg_rng.uniform(0.06, 0.18),
+                fib_freq: self.seg_rng.uniform(4.0, 9.0),
+                fib_phase: self.seg_rng.uniform(0.0, 2.0 * std::f64::consts::PI),
+            };
+            self.segments.push(seg);
+        }
+    }
+
+    fn segment_at(&self, sample: u64) -> &Segment {
+        let i = self.segments.partition_point(|s| s.end <= sample);
+        &self.segments[i.min(self.segments.len() - 1)]
+    }
+
+    /// Make every sample `< upto` final: extend the baseline buffer
+    /// `COMPLETE_MARGIN` past it, then place every beat whose bumps fit
+    /// entirely inside the extended buffer.
+    fn synthesize_to(&mut self, upto: u64) {
+        let fs = c::ECG_FS_HZ;
+        let target = upto + COMPLETE_MARGIN as u64;
+        let cur_end = self.buf_start + self.buf.len() as u64;
+        if target > cur_end {
+            self.ensure_segments(target);
+            for i in cur_end..target {
+                let t = i as f64 / fs;
+                // Sensor noise: one draw per channel per 8-sample block.
+                while i / NOISE_BLOCK >= self.next_noise_block {
+                    self.cur_noise =
+                        [self.noise_rng.gauss(), self.noise_rng.gauss()];
+                    self.next_noise_block += 1;
+                }
+                let w = self.bw_amp
+                    * (2.0 * std::f64::consts::PI * self.bw_f * t
+                        + self.bw_phase)
+                        .sin();
+                let mut v = [
+                    w + self.noise_sigma * self.cur_noise[0],
+                    0.9 * w + self.noise_sigma * self.cur_noise[1],
+                ];
+                let seg = self.segment_at(i);
+                if seg.afib {
+                    let mut fib = seg.fib_amp
+                        * (2.0 * std::f64::consts::PI * seg.fib_freq * t
+                            + seg.fib_phase)
+                            .sin();
+                    fib *= 1.0
+                        + 0.3
+                            * (2.0 * std::f64::consts::PI * 0.9 * t
+                                + seg.fib_phase * 0.7)
+                                .sin();
+                    v[0] += fib;
+                    v[1] += 0.8 * fib;
+                }
+                self.buf.push_back(v);
+            }
+        }
+        // Place beats whose full support fits inside the buffer.
+        let buf_end_t = (self.buf_start + self.buf.len() as u64) as f64 / fs;
+        while self.next_beat_t + BEAT_FWD_S <= buf_end_t {
+            self.place_next_beat();
+        }
+    }
+
+    fn place_next_beat(&mut self) {
+        let fs = c::ECG_FS_HZ;
+        let bt = self.next_beat_t;
+        let bt_sample = (bt * fs) as u64;
+        self.ensure_segments(bt_sample);
+        let seg = self.segment_at(bt_sample).clone();
+
+        // Per-beat amplitude and the next RR interval (mirrors
+        // `gen::beat_times`, parameterised by the segment's rhythm).
+        let (rr, bamp);
+        if seg.afib {
+            let jitter = 0.45 - 0.20 * self.difficulty * self.beat_rng.unit();
+            rr = (seg.base_rr
+                * (1.0 + jitter * (2.0 * self.beat_rng.unit() - 1.0)))
+                .max(0.30);
+            bamp = 1.0 + 0.30 * self.beat_rng.gauss();
+        } else {
+            let rsa = 0.04
+                * (2.0 * std::f64::consts::PI * seg.resp_f * bt
+                    + seg.resp_phase)
+                    .sin();
+            let ectopic = if self.beat_rng.unit() < 0.04 * self.difficulty {
+                0.25 * (2.0 * self.beat_rng.unit() - 1.0)
+            } else {
+                0.0
+            };
+            rr = seg.base_rr
+                * (1.0 + rsa + 0.015 * self.beat_rng.gauss() + ectopic);
+            bamp = 1.0 + 0.05 * self.beat_rng.gauss();
+        }
+        let bamp = bamp.clamp(0.35, 1.8);
+        self.next_beat_t = bt + rr;
+
+        let rr_local = 0.8;
+        for (wi, &(name, off, width, amp, ch1s)) in WAVES.iter().enumerate() {
+            if name == "P" && seg.afib {
+                continue; // no organised atrial activity during afib
+            }
+            let a0 = amp * self.amp_scale * bamp * self.wave_jitter[wi];
+            let cpos = bt + off * rr_local;
+            let lo = (((cpos - 4.0 * width) * fs).floor().max(0.0)) as u64;
+            let hi = (((cpos + 4.0 * width) * fs).ceil().max(0.0)) as u64 + 1;
+            let buf_end = self.buf_start + self.buf.len() as u64;
+            let (lo, hi) = (lo.max(self.buf_start), hi.min(buf_end));
+            for i in lo..hi {
+                let tt = i as f64 / fs - cpos;
+                let bump = a0 * (-0.5 * (tt / width).powi(2)).exp();
+                let slot = &mut self.buf[(i - self.buf_start) as usize];
+                slot[0] += bump;
+                slot[1] += ch1s * bump;
+            }
+        }
+    }
+}
+
+fn digitize(v: f64) -> u16 {
+    ((v / FULL_SCALE_MV * MID as f64).round() as i32 + MID).clamp(0, 4095)
+        as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::preprocess;
+
+    fn short_cfg() -> EpisodeConfig {
+        EpisodeConfig {
+            lead_in_s: 8.0,
+            sinus_s: (6.0, 10.0),
+            afib_s: (5.0, 9.0),
+        }
+    }
+
+    #[test]
+    fn chunking_invariant() {
+        let mut a = ContinuousEcg::new(7, 1.0, short_cfg());
+        let mut b = ContinuousEcg::new(7, 1.0, short_cfg());
+        let whole = a.next_chunk(3000);
+        let mut sliced = vec![Vec::new(), Vec::new()];
+        for n in [1usize, 999, 41, 700, 1259] {
+            let ch = b.next_chunk(n);
+            for c in 0..2 {
+                sliced[c].extend_from_slice(&ch[c]);
+            }
+        }
+        assert_eq!(whole, sliced, "stream must not depend on chunk sizes");
+    }
+
+    #[test]
+    fn lead_in_is_sinus_and_episodes_alternate() {
+        // Afib durations of 14–20 s exceed the 13.7 s model window, so
+        // every afib episode *necessarily* spans window boundaries.
+        let cfg = EpisodeConfig {
+            lead_in_s: 8.0,
+            sinus_s: (6.0, 10.0),
+            afib_s: (14.0, 20.0),
+        };
+        let mut s = ContinuousEcg::new(11, 1.0, cfg);
+        let _ = s.next_chunk(60 * 150); // one minute
+        let eps = s.episodes();
+        assert!(!eps[0].afib, "lead-in must be sinus");
+        assert_eq!(eps[0].len(), (8.0 * 150.0) as u64);
+        for w in eps.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "contiguous schedule");
+            assert_ne!(w[0].afib, w[1].afib, "alternating rhythm");
+        }
+        assert!(
+            eps.iter().filter(|e| e.afib).count() >= 2,
+            "a minute of short segments holds afib episodes: {eps:?}"
+        );
+        assert!(
+            eps.iter()
+                .filter(|e| e.afib)
+                .all(|e| e.len() as usize > c::ECG_WINDOW),
+            "afib episodes must span window boundaries: {eps:?}"
+        );
+    }
+
+    #[test]
+    fn afib_fraction_matches_schedule() {
+        let mut s = ContinuousEcg::new(13, 1.0, short_cfg());
+        let lead = (8.0 * 150.0) as u64;
+        assert_eq!(s.afib_fraction(0, lead), 0.0);
+        let eps = s.episodes();
+        let first_afib = eps.iter().find(|e| e.afib).unwrap();
+        assert_eq!(s.afib_fraction(first_afib.start, first_afib.len()), 1.0);
+        // A range straddling the onset is partially covered.
+        let f = s.afib_fraction(first_afib.start - 100, 200);
+        assert!((f - 0.5).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn samples_in_range_with_beats() {
+        let mut s = ContinuousEcg::new(3, 1.0, short_cfg());
+        let ch = s.next_chunk(c::ECG_WINDOW);
+        assert_eq!(ch.len(), c::ECG_CHANNELS);
+        assert_eq!(ch[0].len(), c::ECG_WINDOW);
+        assert!(ch[0].iter().all(|&v| v <= 4095));
+        let max = *ch[0].iter().max().unwrap() as i32;
+        let min = *ch[0].iter().min().unwrap() as i32;
+        assert!(max - min > 200, "no QRS deflections: {}", max - min);
+    }
+
+    #[test]
+    fn afib_windows_have_higher_activation() {
+        // Streamed counterpart of `gen::tests::class_statistics_differ`:
+        // windows lying fully inside afib episodes carry more derivative
+        // energy than pure sinus windows.  Segments of 16–26 s leave
+        // whole 13.7 s windows inside *both* rhythm classes.
+        let cfg = EpisodeConfig {
+            lead_in_s: 16.0,
+            sinus_s: (16.0, 26.0),
+            afib_s: (16.0, 26.0),
+        };
+        let mut s = ContinuousEcg::new(21, 1.0, cfg);
+        let total = 150 * 240; // four minutes
+        let raw = s.next_chunk(total);
+        let (mut afib_sum, mut afib_n) = (0.0, 0);
+        let (mut sinus_sum, mut sinus_n) = (0.0, 0);
+        let mut start = 0usize;
+        while start + c::ECG_WINDOW <= total {
+            let frac =
+                s.afib_fraction(start as u64, c::ECG_WINDOW as u64);
+            if frac > 0.95 || frac < 0.05 {
+                let win: Vec<Vec<u16>> = (0..2)
+                    .map(|ch| raw[ch][start..start + c::ECG_WINDOW].to_vec())
+                    .collect();
+                let acts = preprocess::preprocess(&win);
+                let mean = acts.iter().map(|&a| a as f64).sum::<f64>()
+                    / acts.len() as f64;
+                if frac > 0.95 {
+                    afib_sum += mean;
+                    afib_n += 1;
+                } else {
+                    sinus_sum += mean;
+                    sinus_n += 1;
+                }
+            }
+            start += 512;
+        }
+        assert!(afib_n >= 3 && sinus_n >= 3, "{afib_n} afib / {sinus_n} sinus");
+        let (am, sm) = (afib_sum / afib_n as f64, sinus_sum / sinus_n as f64);
+        assert!(am > sm + 0.2, "afib mean act {am:.3} vs sinus {sm:.3}");
+    }
+}

@@ -31,6 +31,12 @@
 //! profile on the worker, and re-admits it — while the rest of the pool
 //! keeps serving.
 //!
+//! Streaming sessions (`stream_*` wire commands, DESIGN.md §11) dispatch
+//! preprocessed activation *frames* through [`Fleet::dispatch_acts`]: the
+//! FPGA-side incremental windower already ran, so the chip only executes
+//! the three analog passes.  Frames are accounted exactly like
+//! single-trace requests (one sample each).
+//!
 //! `coordinator::service` dispatches through a [`Fleet`]; `repro serve
 //! --chips N` sizes it from the CLI.
 

@@ -47,6 +47,17 @@ pub struct FleetConfig {
     /// disables automatic recalibration (manual
     /// [`Fleet::recalibrate_chip`] still works).
     pub recalib: Option<RecalibPolicy>,
+    /// Whether the wire `shutdown` command may stop the whole service.
+    /// Off by default: any TCP client being able to kill the fleet is an
+    /// unauthenticated kill switch.  `repro serve` opts in via
+    /// `--allow-remote-shutdown`; in-process tests opt in explicitly
+    /// (or go through [`Service::start`](crate::coordinator::service::Service::start),
+    /// which enables it for its single-chip legacy contract).
+    pub allow_remote_shutdown: bool,
+    /// Hard cap on concurrent client connections; connection number
+    /// `max_connections + 1` gets an explicit accept-time shed reply
+    /// instead of a handler thread.
+    pub max_connections: usize,
 }
 
 impl Default for FleetConfig {
@@ -57,6 +68,8 @@ impl Default for FleetConfig {
             error_threshold: 3,
             probe_period: 64,
             recalib: None,
+            allow_remote_shutdown: false,
+            max_connections: 256,
         }
     }
 }
@@ -77,6 +90,14 @@ enum ChipJob {
     /// per batch).
     Classify {
         traces: Vec<Trace>,
+        admitted: Instant,
+        resp: mpsc::Sender<ChipReply>,
+    },
+    /// One preprocessed activation frame (`Engine::classify_acts`) — the
+    /// streaming path: the FPGA-side incremental windower already ran, so
+    /// the chip only executes the three analog passes.
+    ClassifyActs {
+        acts: Vec<i32>,
         admitted: Instant,
         resp: mpsc::Sender<ChipReply>,
     },
@@ -261,6 +282,66 @@ impl Fleet {
         }
     }
 
+    /// Hand `job` to `chip`'s worker queue.  On a dead worker (channel
+    /// gone) the chip is marked dead and the job returned so the caller
+    /// can reclaim its payload and retry another replica.  Shared by
+    /// every admission path so the locked-send / reclaim dance exists
+    /// exactly once.
+    fn try_send(&self, chip: ChipId, job: ChipJob) -> Result<(), ChipJob> {
+        let send_result = {
+            let guard = self.handles[chip].tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(tx) => tx.send(job).map_err(|mpsc::SendError(j)| j),
+                None => Err(job),
+            }
+        };
+        send_result.map_err(|job| {
+            self.health[chip].mark_dead("worker channel closed");
+            job
+        })
+    }
+
+    /// Admit one preprocessed activation frame (the streaming path:
+    /// `MODEL_IN` 5-bit activations from the incremental windower), or
+    /// shed it.  Non-blocking; accounted as one sample, exactly like a
+    /// single-trace `dispatch`.
+    pub fn dispatch_acts(&self, acts: Vec<i32>) -> DispatchOutcome {
+        self.maybe_recalibrate();
+        let mut acts = acts;
+        for _ in 0..self.handles.len() {
+            let chip = match self.scheduler.pick_batch(&self.health, 1) {
+                Ok((chip, _)) => chip,
+                Err(reason) => {
+                    return DispatchOutcome::Shed {
+                        reason,
+                        retry_after_us: self.retry_hint_us(),
+                    };
+                }
+            };
+            let (rtx, rrx) = mpsc::channel();
+            self.health[chip].begin_job();
+            let job = ChipJob::ClassifyActs {
+                acts,
+                admitted: Instant::now(),
+                resp: rtx,
+            };
+            match self.try_send(chip, job) {
+                Ok(()) => return DispatchOutcome::Enqueued { chip, resp: rrx },
+                Err(ChipJob::ClassifyActs { acts: reclaimed, .. }) => {
+                    self.health[chip]
+                        .record_batch_error(1, "worker channel closed");
+                    acts = reclaimed;
+                }
+                Err(_) => unreachable!("acts dispatch returned a foreign job"),
+            }
+        }
+        self.transport_rejects.fetch_add(1, Ordering::Relaxed);
+        DispatchOutcome::Shed {
+            reason: ShedReason::NoHealthyChips,
+            retry_after_us: self.retry_hint_us(),
+        }
+    }
+
     /// Admit a batch of traces — possibly only a prefix of it (admission
     /// is bounded in samples; see [`BatchDispatchOutcome`]).  Non-blocking.
     pub fn dispatch_batch(&self, mut traces: Vec<Trace>) -> BatchDispatchOutcome {
@@ -300,14 +381,7 @@ impl Fleet {
                 admitted: Instant::now(),
                 resp: rtx,
             };
-            let send_result = {
-                let guard = self.handles[chip].tx.lock().unwrap();
-                match guard.as_ref() {
-                    Some(tx) => tx.send(job).map_err(|mpsc::SendError(j)| j),
-                    None => Err(job),
-                }
-            };
-            match send_result {
+            match self.try_send(chip, job) {
                 Ok(()) => {
                     let retry_after_us =
                         if rest.is_empty() { 0 } else { self.retry_hint_us() };
@@ -320,18 +394,17 @@ impl Fleet {
                     };
                 }
                 Err(ChipJob::Classify { traces: reclaimed, .. }) => {
-                    // Worker gone: reclaim the whole batch, mark the chip
-                    // dead, and try the next candidate.
+                    // Worker gone (chip marked dead by try_send): reclaim
+                    // the whole batch and try the next candidate.
                     self.health[chip].record_batch_error(
                         reclaimed.len(),
                         "worker channel closed",
                     );
-                    self.health[chip].mark_dead("worker channel closed");
                     traces = reclaimed;
                     traces.extend(rest);
                 }
-                Err(ChipJob::Calibrate { .. }) => {
-                    unreachable!("classify dispatch returned a calibrate job")
+                Err(_) => {
+                    unreachable!("classify dispatch returned a foreign job")
                 }
             }
         }
@@ -485,19 +558,10 @@ impl Fleet {
             return false;
         }
         let job = ChipJob::Calibrate { reps, reason, resp, drain_token };
-        let sent = {
-            let guard = self.handles[chip].tx.lock().unwrap();
-            match guard.as_ref() {
-                Some(tx) => tx.send(job).is_ok(),
-                None => false,
-            }
-        };
-        if !sent {
-            // Worker gone: the chip leaves the pool for good.  (The
-            // undelivered job — and any token clone in it — was dropped.)
-            self.health[chip].mark_dead("worker channel closed");
-        }
-        sent
+        // On a dead worker try_send marks the chip dead; dropping the
+        // returned job drops any drain-token clone inside it, so the
+        // caller keeps latch ownership.
+        self.try_send(chip, job).is_ok()
     }
 
     /// Manually drain `chip` for recalibration with `reps` measurement
@@ -703,6 +767,17 @@ fn chip_worker<F>(
                             )),
                         });
                     }
+                    ChipJob::ClassifyActs { admitted, resp, .. } => {
+                        health.record_batch_error(1, "engine init failed");
+                        let _ = resp.send(ChipReply {
+                            chip,
+                            host_latency_us: admitted.elapsed().as_secs_f64()
+                                * 1e6,
+                            result: Err(format!(
+                                "chip {chip}: engine init failed"
+                            )),
+                        });
+                    }
                     ChipJob::Calibrate { reason, resp, drain_token, .. } => {
                         health.fail_calibration("engine init failed");
                         if let Some(resp) = resp {
@@ -753,6 +828,32 @@ fn chip_worker<F>(
                 };
                 // The client may have given up; a closed reply channel is
                 // fine.
+                let _ = resp.send(ChipReply {
+                    chip,
+                    host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
+                    result,
+                });
+            }
+            ChipJob::ClassifyActs { acts, admitted, resp } => {
+                // One activation frame from the streaming frontend: the
+                // chip runs the three analog passes; preprocessing
+                // already happened incrementally on the FPGA side.
+                let result = match engine.classify_acts(&acts) {
+                    Ok(inf) => {
+                        let host_us = admitted.elapsed().as_secs_f64() * 1e6;
+                        let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
+                        telemetry.record(chip, host_us, sim_ns);
+                        monitor.record_scores(&inf.scores);
+                        health.record_batch_success(1, sim_ns);
+                        health.set_chip_time_us(engine.chip_time_us());
+                        Ok(vec![inf])
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        health.record_batch_error(1, &msg);
+                        Err(format!("chip {chip}: {msg}"))
+                    }
+                };
                 let _ = resp.send(ChipReply {
                     chip,
                     host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,

@@ -142,6 +142,215 @@ impl StreamingPreprocessor {
     }
 }
 
+/// Pool bins per model window.
+pub const WIN_BINS: usize = c::ECG_WINDOW / c::POOL_WINDOW;
+
+/// One ready model window extracted from a continuous stream.
+#[derive(Debug, Clone)]
+pub struct WindowFrame {
+    /// 0-based index of the window within the stream (hop-ordered).
+    pub index: u64,
+    /// Absolute index of the window's first raw sample.
+    pub start_sample: u64,
+    /// `MODEL_IN` channel-major 5-bit activations, bit-identical to
+    /// [`preprocess`] on the same `ECG_WINDOW` raw samples.
+    pub acts: Vec<u8>,
+}
+
+/// Per-channel incremental state: derivative seed + the current bin's
+/// accumulators + a ring of completed pooled/quantised columns.
+struct ChanWindow {
+    prev: i32,
+    seeded: bool,
+    /// True derivative of the current bin's first sample.
+    d_first: i32,
+    /// Max/min over the current bin's *remaining* samples (1..POOL_WINDOW).
+    max_r: i32,
+    min_r: i32,
+    fill: usize,
+    /// Ring of the last `WIN_BINS` completed columns as
+    /// `(seeded, interior)` activations — see [`IncrementalWindower`].
+    ring: Vec<(u8, u8)>,
+}
+
+impl ChanWindow {
+    fn new() -> ChanWindow {
+        ChanWindow {
+            prev: 0,
+            seeded: false,
+            d_first: 0,
+            max_r: i32::MIN,
+            min_r: i32::MAX,
+            fill: 0,
+            ring: vec![(0, 0); WIN_BINS],
+        }
+    }
+
+    /// Feed one raw sample; returns true when it completed a pool bin
+    /// (stored into the ring at `bins_done % WIN_BINS`).
+    fn push(&mut self, sample: u16, bins_done: u64) -> bool {
+        let s = sample as i32;
+        if !self.seeded {
+            self.prev = s;
+            self.seeded = true;
+        }
+        let d = s - self.prev;
+        self.prev = s;
+        if self.fill == 0 {
+            self.d_first = d;
+        } else {
+            self.max_r = self.max_r.max(d);
+            self.min_r = self.min_r.min(d);
+        }
+        self.fill += 1;
+        if self.fill < c::POOL_WINDOW {
+            return false;
+        }
+        // Interior variant: the true derivative throughout.  Seeded
+        // variant: the bin's first derivative replaced by 0 — exactly
+        // what the batch chain computes when this bin opens a window
+        // (`derivative` seeds with the window's first sample).  The
+        // max/min folds below degrade gracefully when the "rest" is
+        // empty (POOL_WINDOW == 1): MIN.max(x) == x, MAX.min(x) == x.
+        let interior = self.d_first.max(self.max_r) - self.d_first.min(self.min_r);
+        let seeded = self.max_r.max(0) - self.min_r.min(0);
+        self.ring[(bins_done % WIN_BINS as u64) as usize] =
+            (quant5(seeded), quant5(interior));
+        self.max_r = i32::MIN;
+        self.min_r = i32::MAX;
+        self.fill = 0;
+        true
+    }
+}
+
+fn quant5(pooled: i32) -> u8 {
+    ((pooled >> c::PREPROC_SHIFT).clamp(0, c::X_MAX)) as u8
+}
+
+/// Incremental sliding-window frontend: turns an unbounded two-channel
+/// sample stream into model windows at a hop of `hop` samples, spending
+/// **O(hop)** work per window instead of re-running the full
+/// `O(ECG_WINDOW)` chain.
+///
+/// The trick: at a hop that is a multiple of `POOL_WINDOW`, consecutive
+/// windows share all but `hop / POOL_WINDOW` pooled columns.  Each column
+/// is computed **once** as it streams past and kept in a ring — in two
+/// variants, because the batch chain seeds the derivative with the
+/// window's first sample (`d[0] = 0`): the *seeded* variant (first
+/// in-bin derivative replaced by 0) is used when the column opens a
+/// window, the *interior* variant (true streaming derivative) everywhere
+/// else.  Emitted frames are therefore bit-identical to [`preprocess`]
+/// on the same raw window (property-tested below).
+pub struct IncrementalWindower {
+    hop_bins: usize,
+    chans: Vec<ChanWindow>,
+    /// Completed bins per channel (channels advance in lockstep).
+    bins_done: u64,
+    /// Bin count at which the next window completes.
+    next_window_bin: u64,
+    windows: u64,
+    /// Raw samples consumed (per channel).
+    pub samples_in: u64,
+    /// Frontend work counter: one op per (channel, sample) + one per
+    /// completed column.  The marginal cost per emitted window is exactly
+    /// `ECG_CHANNELS * (hop + hop / POOL_WINDOW)` — O(hop), not
+    /// O(ECG_WINDOW) (asserted by `benches/stream_monitoring.rs`).
+    pub work_ops: u64,
+}
+
+impl IncrementalWindower {
+    /// `hop` must be a positive multiple of `POOL_WINDOW`, at most
+    /// `ECG_WINDOW` (a larger hop would skip samples).
+    pub fn new(hop: usize) -> anyhow::Result<IncrementalWindower> {
+        anyhow::ensure!(
+            hop > 0 && hop <= c::ECG_WINDOW && hop % c::POOL_WINDOW == 0,
+            "hop must be a multiple of {} in 1..={}, got {hop}",
+            c::POOL_WINDOW,
+            c::ECG_WINDOW
+        );
+        Ok(IncrementalWindower {
+            hop_bins: hop / c::POOL_WINDOW,
+            chans: (0..c::ECG_CHANNELS).map(|_| ChanWindow::new()).collect(),
+            bins_done: 0,
+            next_window_bin: WIN_BINS as u64,
+            windows: 0,
+            samples_in: 0,
+            work_ops: 0,
+        })
+    }
+
+    pub fn hop(&self) -> usize {
+        self.hop_bins * c::POOL_WINDOW
+    }
+
+    /// Windows emitted so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Feed one sample per channel; returns the completed window, if any.
+    pub fn push(&mut self, samples: [u16; c::ECG_CHANNELS]) -> Option<WindowFrame> {
+        self.samples_in += 1;
+        self.work_ops += c::ECG_CHANNELS as u64;
+        let mut bin_done = false;
+        for (ch, &s) in self.chans.iter_mut().zip(samples.iter()) {
+            bin_done = ch.push(s, self.bins_done);
+        }
+        if !bin_done {
+            return None;
+        }
+        self.bins_done += 1;
+        self.work_ops += c::ECG_CHANNELS as u64;
+        if self.bins_done < self.next_window_bin {
+            return None;
+        }
+        self.next_window_bin += self.hop_bins as u64;
+        let start_bin = self.bins_done - WIN_BINS as u64;
+        let mut acts = Vec::with_capacity(c::MODEL_IN);
+        for ch in &self.chans {
+            for k in 0..WIN_BINS as u64 {
+                let (seeded, interior) =
+                    ch.ring[((start_bin + k) % WIN_BINS as u64) as usize];
+                acts.push(if k == 0 { seeded } else { interior });
+            }
+        }
+        let frame = WindowFrame {
+            index: self.windows,
+            start_sample: start_bin * c::POOL_WINDOW as u64,
+            acts,
+        };
+        self.windows += 1;
+        Some(frame)
+    }
+
+    /// Feed a two-channel chunk (`chunk[ch]`, equal lengths); returns the
+    /// windows it completed, in stream order.
+    pub fn push_chunk(
+        &mut self,
+        chunk: &[Vec<u16>],
+    ) -> anyhow::Result<Vec<WindowFrame>> {
+        anyhow::ensure!(
+            chunk.len() == c::ECG_CHANNELS,
+            "need {} channels, got {}",
+            c::ECG_CHANNELS,
+            chunk.len()
+        );
+        anyhow::ensure!(
+            chunk[0].len() == chunk[1].len(),
+            "channel lengths differ: {} vs {}",
+            chunk[0].len(),
+            chunk[1].len()
+        );
+        let mut frames = Vec::new();
+        for i in 0..chunk[0].len() {
+            if let Some(f) = self.push([chunk[0][i], chunk[1][i]]) {
+                frames.push(f);
+            }
+        }
+        Ok(frames)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +417,84 @@ mod tests {
         sp.push_channel(&vec![0u16; c::ECG_WINDOW]);
         let expected = c::ECG_WINDOW as u64 + (c::ECG_WINDOW / c::POOL_WINDOW) as u64;
         assert_eq!(sp.cycles, expected);
+    }
+
+    #[test]
+    fn incremental_windower_matches_batch_chain() {
+        // Property: every frame emitted by the incremental frontend is
+        // bit-identical to the batch `preprocess()` of the same raw
+        // window — for random streams, hops, and chunkings.
+        let mut rng = SplitMix64::new(0x51D1);
+        for &hop in &[32usize, 96, 128, 512, 1024, 2048] {
+            let total = c::ECG_WINDOW + 3 * hop + 17;
+            let raw: Vec<Vec<u16>> = (0..c::ECG_CHANNELS)
+                .map(|_| {
+                    (0..total).map(|_| rng.below(4096) as u16).collect()
+                })
+                .collect();
+            let mut w = IncrementalWindower::new(hop).unwrap();
+            let mut frames = Vec::new();
+            let mut fed = 0usize;
+            while fed < total {
+                let n = (1 + rng.below(701) as usize).min(total - fed);
+                let chunk: Vec<Vec<u16>> = raw
+                    .iter()
+                    .map(|ch| ch[fed..fed + n].to_vec())
+                    .collect();
+                frames.extend(w.push_chunk(&chunk).unwrap());
+                fed += n;
+            }
+            let expect_windows = (total - c::ECG_WINDOW) / hop + 1;
+            assert_eq!(frames.len(), expect_windows, "hop {hop}");
+            for (k, f) in frames.iter().enumerate() {
+                assert_eq!(f.index, k as u64);
+                assert_eq!(f.start_sample, (k * hop) as u64, "hop {hop}");
+                let s = f.start_sample as usize;
+                let win: Vec<Vec<u16>> = raw
+                    .iter()
+                    .map(|ch| ch[s..s + c::ECG_WINDOW].to_vec())
+                    .collect();
+                assert_eq!(
+                    f.acts,
+                    preprocess(&win),
+                    "hop {hop}, window {k} not bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_window_cost_is_o_hop() {
+        // The marginal work between consecutive windows is exactly
+        // 2 · (hop + hop/32) ops — independent of the window length.
+        for &hop in &[32usize, 256, 2048] {
+            let mut rng = SplitMix64::new(9);
+            let mut w = IncrementalWindower::new(hop).unwrap();
+            let mut marks = Vec::new();
+            for _ in 0..c::ECG_WINDOW + 4 * hop {
+                if w.push([rng.below(4096) as u16, rng.below(4096) as u16])
+                    .is_some()
+                {
+                    marks.push(w.work_ops);
+                }
+            }
+            assert!(marks.len() >= 4);
+            let per = (c::ECG_CHANNELS * (hop + hop / c::POOL_WINDOW)) as u64;
+            for pair in marks.windows(2) {
+                assert_eq!(pair[1] - pair[0], per, "hop {hop}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_windower_rejects_bad_hops() {
+        assert!(IncrementalWindower::new(0).is_err());
+        assert!(IncrementalWindower::new(33).is_err());
+        assert!(IncrementalWindower::new(c::ECG_WINDOW + 32).is_err());
+        assert!(IncrementalWindower::new(c::POOL_WINDOW).is_ok());
+        let mut w = IncrementalWindower::new(64).unwrap();
+        assert!(w.push_chunk(&[vec![1, 2], vec![3]]).is_err(), "ragged");
+        assert!(w.push_chunk(&[vec![1, 2]]).is_err(), "one channel");
     }
 
     #[test]

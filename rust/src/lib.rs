@@ -18,7 +18,8 @@
 //! * [`coordinator`] — standalone inference engine, batch runner, service.
 //! * [`fleet`] — multi-chip scheduler: N engine replicas behind one
 //!   least-loaded dispatcher with health tracking and backpressure.
-//! * [`ecg`] — synthetic ECG generator + binary dataset reader.
+//! * [`ecg`] — synthetic ECG: windowed generator, continuous
+//!   episode-labeled stream source, binary dataset reader.
 //! * [`baselines`] — comparison platforms of paper §V.
 //! * [`util`] — hand-rolled substrate (JSON, PRNG, CLI, bench, propcheck).
 

@@ -38,6 +38,7 @@ fn main() {
         "classify" => classify(&args),
         "calibrate" => calibrate(&args),
         "serve" => serve(&args),
+        "monitor" => monitor(&args),
         "snn" => snn(&args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -69,7 +70,15 @@ COMMANDS:
                                             --out FILE; writes the per-chip
                                             profile artifact)
   serve        experiment service          (--addr 127.0.0.1:7001 --native
-                                            --chips 4 --queue-depth 32)
+                                            --chips 4 --queue-depth 32
+                                            --max-conns 256
+                                            --allow-remote-shutdown)
+  monitor      continuous ECG stream demo  (--minutes 3 --hop 512 --chips 2
+                                            --chunk 450 --seed 99): streams
+                                            an episode-labeled recording
+                                            through a stream_open/push/close
+                                            session and reports per-window
+                                            results + afib detection latency
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
 
 OPTIONS (common):
@@ -88,6 +97,11 @@ OPTIONS (common):
                     gain/offset wander + temperature; calib::drift)
   --auto-recalib    serve: age-/margin-triggered auto-recalibration (one
                     chip drains into `calibrating` while the rest serve)
+  --max-conns N     serve: cap on concurrent client connections; excess
+                    connects get an explicit shed reply (default 256)
+  --allow-remote-shutdown
+                    serve: honour the wire `shutdown` command (default
+                    off — an open port must not be a kill switch)
 ";
 
 fn env_logger_init() {
@@ -515,6 +529,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         recalib: args
             .flag("auto-recalib")
             .then(bss2::calib::RecalibPolicy::default),
+        // Off unless explicitly requested: an open serving port must not
+        // double as an unauthenticated kill switch.
+        allow_remote_shutdown: args.flag("allow-remote-shutdown"),
+        max_connections: args.usize_or("max-conns", 256)?.max(1),
         ..Default::default()
     };
     let svc = bss2::coordinator::service::Service::start_fleet(
@@ -571,15 +589,310 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     println!(
         "[serve] experiment service on {} — fleet of {} chip{} \
          (queue depth {} samples/chip; line-delimited JSON; \
-         {{\"cmd\":\"ping\"}} / classify / classify_batch / stats / \
-         fleet_stats / shutdown)",
+         {{\"cmd\":\"ping\"}} / classify / classify_batch / \
+         stream_open|push|close / stats / fleet_stats{})",
         svc.addr,
         svc.fleet.size(),
         if svc.fleet.size() == 1 { "" } else { "s" },
-        queue_depth
+        queue_depth,
+        if args.flag("allow-remote-shutdown") {
+            " / shutdown"
+        } else {
+            "; wire shutdown disabled"
+        }
     );
-    // Block until a client sends shutdown, then drain and join the fleet.
+    // Block until a client sends shutdown (if allowed) or the process is
+    // killed, then drain and join the fleet.
     svc.run_until_shutdown();
+    Ok(())
+}
+
+/// Continuous-monitoring demo: stream an episode-labeled synthetic ECG
+/// recording through a `stream_open`/`stream_push`/`stream_close` session
+/// against an in-process fleet, collect the asynchronously pushed
+/// per-window results, and report ordering, sustained throughput, and the
+/// afib detection latency per episode (windows from episode onset to the
+/// first positive window).
+///
+/// Detection: with trained artifacts the wire `pred` is used directly;
+/// without them the fleet runs the untrained *energy-detector* model
+/// (`TrainedModel::energy_detector`) and the demo thresholds the served
+/// score sum against the sinus lead-in (mean + 4σ) — afib's elevated
+/// derivative energy is the detected feature.
+fn monitor(args: &Args) -> anyhow::Result<()> {
+    use bss2::coordinator::service::{Client, Service, MAX_STREAM_CHUNK};
+    use bss2::ecg::stream::{ContinuousEcg, EpisodeConfig};
+    use bss2::fleet::FleetConfig;
+    use bss2::nn::weights::TrainedModel;
+    use bss2::util::json::Json;
+    use bss2::util::stats::Summary;
+
+    let minutes = args.f64_or("minutes", 3.0)?.max(1.0);
+    let hop = args.usize_or("hop", 512)?;
+    let chips = args.usize_or("chips", 2)?;
+    // 3 s per push by default; clamped to the wire limit per request.
+    let chunk = args.usize_or("chunk", 450)?.clamp(1, MAX_STREAM_CHUNK);
+    let seed = args.u64_or("seed", 99)?;
+    let queue_depth = args.usize_or("queue-depth", 64)?;
+    let dir = artifact_dir(args);
+    let trained = dir.exists();
+    if !trained {
+        println!(
+            "[monitor] no artifacts under {} — untrained energy-detector \
+             model (score-sum threshold vs the sinus lead-in)",
+            dir.root.display()
+        );
+    }
+    let cfg = engine_config(args)?;
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips, queue_depth, ..Default::default() },
+        move |chip| {
+            let cfg = cfg.clone().for_chip(chip);
+            if trained {
+                Engine::from_artifacts(&dir, cfg)
+            } else {
+                Ok(Engine::native(
+                    TrainedModel::energy_detector(),
+                    EngineConfig { use_pjrt: false, ..cfg },
+                ))
+            }
+        },
+    )?;
+
+    let lead_in_s = 30.0;
+    let mut ecg = ContinuousEcg::new(
+        seed,
+        1.0,
+        EpisodeConfig {
+            lead_in_s,
+            sinus_s: (20.0, 45.0),
+            afib_s: (12.0, 30.0),
+        },
+    );
+    let total = (minutes * 60.0 * c::ECG_FS_HZ) as usize;
+
+    // One connection, split: this thread pushes chunks, a collector
+    // thread reads the asynchronously pushed result lines.
+    let mut reader_cl = Client::connect(&svc.addr)?;
+    let mut writer_cl = reader_cl.try_clone()?;
+    writer_cl.send(&format!("{{\"cmd\":\"stream_open\",\"hop\":{hop}}}"))?;
+    let ack = reader_cl.read_reply()?;
+    anyhow::ensure!(
+        ack.get("stream").and_then(|s| s.as_str()) == Some("open"),
+        "stream_open failed: {ack}"
+    );
+    let collector =
+        std::thread::spawn(move || -> anyhow::Result<Vec<Json>> {
+            let mut lines = Vec::new();
+            loop {
+                let line = reader_cl.read_reply()?;
+                let closed = line.get("stream").and_then(|s| s.as_str())
+                    == Some("closed");
+                lines.push(line);
+                if closed {
+                    return Ok(lines);
+                }
+            }
+        });
+
+    println!(
+        "[monitor] streaming {:.1} min at {} Hz (hop {hop} = {:.2} s per \
+         window step) into a {chips}-chip fleet ...",
+        minutes,
+        c::ECG_FS_HZ,
+        hop as f64 / c::ECG_FS_HZ
+    );
+    let t0 = std::time::Instant::now();
+    let mut pushed = 0usize;
+    while pushed < total {
+        let n = chunk.min(total - pushed);
+        let ch = ecg.next_chunk(n);
+        writer_cl.stream_push(&ch)?;
+        pushed += n;
+    }
+    writer_cl.stream_close()?;
+    let lines = collector.join().expect("collector thread")?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Split result lines from the close ack; verify in-order delivery.
+    struct Win {
+        window: u64,
+        start: u64,
+        scores: [f64; 2],
+        pred: u8,
+        chip: usize,
+    }
+    let mut wins: Vec<Win> = Vec::new();
+    let mut sheds = 0u64;
+    for l in &lines {
+        if l.get("stream").and_then(|s| s.as_str()) == Some("closed") {
+            continue;
+        }
+        // Session-level error lines carry no "window" field; surface the
+        // server's own message instead of a parse error.
+        let Some(window) = l.get("window").and_then(|v| v.as_uint()) else {
+            anyhow::bail!(
+                "stream session error: {}",
+                l.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        };
+        if l.get("ok") != Some(&Json::Bool(true)) {
+            sheds += 1; // shed (or failed) window: no result delivered
+            continue;
+        }
+        let scores = l
+            .get("scores")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("result without scores: {l}"))?;
+        wins.push(Win {
+            window,
+            start: l.get("start_sample").and_then(|v| v.as_uint()).unwrap_or(0),
+            scores: [
+                scores[0].as_f64().unwrap_or(0.0),
+                scores[1].as_f64().unwrap_or(0.0),
+            ],
+            pred: l.get("pred").and_then(|v| v.as_uint()).unwrap_or(0) as u8,
+            chip: l.get("chip").and_then(|v| v.as_usize()).unwrap_or(0),
+        });
+    }
+    anyhow::ensure!(!wins.is_empty(), "no windows served");
+    for pair in wins.windows(2) {
+        anyhow::ensure!(
+            pair[1].window > pair[0].window,
+            "results out of order: window {} after {}",
+            pair[1].window,
+            pair[0].window
+        );
+    }
+
+    // Detector: wire pred with trained artifacts, otherwise a score-sum
+    // threshold calibrated on windows fully inside the sinus lead-in.
+    let lead_end = (lead_in_s * c::ECG_FS_HZ) as u64;
+    let lead: Vec<f64> = wins
+        .iter()
+        .filter(|w| w.start + c::ECG_WINDOW as u64 <= lead_end)
+        .map(|w| w.scores[0] + w.scores[1])
+        .collect();
+    anyhow::ensure!(
+        trained || lead.len() >= 2,
+        "lead-in too short to calibrate the detector ({} windows)",
+        lead.len()
+    );
+    let (thr, lead_summary) = if trained {
+        (f64::INFINITY, None)
+    } else {
+        let s = Summary::from(&lead);
+        (s.mean + 4.0 * s.std.max(0.5), Some(s))
+    };
+    let positive = |w: &Win| {
+        if trained {
+            w.pred == 1
+        } else {
+            w.scores[0] + w.scores[1] > thr
+        }
+    };
+    if let Some(s) = &lead_summary {
+        println!(
+            "[monitor] lead-in score sum {:.1} ± {:.1} LSB -> threshold \
+             {thr:.1}",
+            s.mean, s.std
+        );
+    }
+
+    // Per-episode detection latency.  `afib_all` keeps *every* afib
+    // interval (even ones truncated by the end of the stream) for the
+    // false-positive accounting below; latency is only measured for
+    // episodes with at least one full window of signal.
+    let win_len = c::ECG_WINDOW as u64;
+    let afib_all: Vec<_> =
+        ecg.episodes().into_iter().filter(|e| e.afib).collect();
+    let episodes: Vec<_> = afib_all
+        .iter()
+        .copied()
+        .filter(|e| e.start + win_len <= total as u64)
+        .collect();
+    println!(
+        "\n--- streamed monitoring summary ------------------------------"
+    );
+    println!(
+        "  windows served:    {} in order (+{sheds} shed), {:.1} windows/s \
+         sustained end to end",
+        wins.len(),
+        wins.len() as f64 / wall
+    );
+    let spread: std::collections::BTreeMap<usize, usize> =
+        wins.iter().fold(Default::default(), |mut m, w| {
+            *m.entry(w.chip).or_default() += 1;
+            m
+        });
+    println!("  chip spread:       {spread:?}");
+    println!("  afib episodes:     {}", episodes.len());
+    let mut latencies = Vec::new();
+    for ep in &episodes {
+        // Index of the first window covering the onset, computed from
+        // the hop grid (shed-proof: window *indices*, not positions in
+        // the served vec, carry the latency).
+        let hop64 = hop as u64;
+        let onset_win =
+            (ep.start + 1).saturating_sub(win_len).div_ceil(hop64);
+        let mut det: Option<&Win> = None;
+        for w in &wins {
+            if w.start + win_len > ep.start && w.start < ep.end && positive(w)
+            {
+                det = Some(w);
+                break;
+            }
+        }
+        match det {
+            Some(d) => {
+                let lat_windows = d.window - onset_win;
+                let lat_s =
+                    (d.start + win_len - ep.start) as f64 / c::ECG_FS_HZ;
+                latencies.push(lat_windows as f64);
+                println!(
+                    "    episode at {:>7.1} s ({:>5.1} s long): detected \
+                     after {lat_windows} window{} ({lat_s:.1} s of signal \
+                     past onset)",
+                    ep.start as f64 / c::ECG_FS_HZ,
+                    ep.len() as f64 / c::ECG_FS_HZ,
+                    if lat_windows == 1 { "" } else { "s" }
+                );
+            }
+            None => println!(
+                "    episode at {:>7.1} s ({:>5.1} s long): MISSED",
+                ep.start as f64 / c::ECG_FS_HZ,
+                ep.len() as f64 / c::ECG_FS_HZ
+            ),
+        }
+    }
+    if !latencies.is_empty() {
+        println!(
+            "  detection latency: {:.1} windows mean over {} detected \
+             episode{}",
+            latencies.iter().sum::<f64>() / latencies.len() as f64,
+            latencies.len(),
+            if latencies.len() == 1 { "" } else { "s" }
+        );
+    }
+    // False-positive rate over pure-sinus windows (outside every afib
+    // interval, including end-truncated ones excluded from latency).
+    let (mut sinus_n, mut fp) = (0usize, 0usize);
+    for w in &wins {
+        let overlaps_episode = afib_all
+            .iter()
+            .any(|e| w.start + win_len > e.start && w.start < e.end);
+        if !overlaps_episode {
+            sinus_n += 1;
+            if positive(w) {
+                fp += 1;
+            }
+        }
+    }
+    if sinus_n > 0 {
+        println!("  false positives:   {fp}/{sinus_n} sinus windows");
+    }
+    svc.stop();
     Ok(())
 }
 

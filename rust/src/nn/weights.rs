@@ -124,6 +124,40 @@ impl TrainedModel {
         }
     }
 
+    /// Untrained **energy-detector** model for the monitoring demo and
+    /// streaming bench: every weight +1, nominal calibration, layer
+    /// scales picked so the all-positive chain stays inside the ADC and
+    /// 5-bit requantisation ranges without saturating.  Class scores
+    /// then grow monotonically with total input activation — afib's
+    /// elevated derivative energy (the feature fully-analog ECG
+    /// front-ends exploit, cf. EKGNet) is detectable by thresholding the
+    /// score sum against a sinus lead-in, no trained artifacts needed.
+    /// Not a classifier: `pred` is meaningless for this model.
+    pub fn energy_detector() -> TrainedModel {
+        let wc = vec![1.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL];
+        let w1 = vec![1.0; c::K_LOGICAL * c::FC1_OUT];
+        let w2 = vec![1.0; c::FC1_OUT * c::FC2_OUT];
+        TrainedModel {
+            pass_weights: [
+                mapping::pack_conv(&wc),
+                mapping::pack_fc1(&w1),
+                mapping::pack_fc2(&w2),
+            ],
+            // All-ones sums per column: conv ~100–160 activation units
+            // (16 taps × mean act 6–10), fc1 ~2–3k (256 inputs), fc2
+            // ~0.7–1.1k (123 inputs).  These scales land each stage at a
+            // few tens of ADC LSB — meaningful signal above the 2 LSB
+            // analog noise, yet clear of the ±127 LSB rail and the
+            // post-shift 5-bit cap, so the energy response stays
+            // monotone instead of saturating.
+            scales: [0.25, 0.015, 0.05],
+            gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
+            offset: [vec![0.0; c::N_COLS], vec![0.0; c::N_COLS]],
+            noise_sigma: c::NOISE_SIGMA,
+            train_metrics: Default::default(),
+        }
+    }
+
     /// The array half a pass executes on (conv: top, fc1/fc2: bottom).
     pub fn pass_half(pass: usize) -> usize {
         if pass == 0 {

@@ -1,0 +1,347 @@
+//! Serving-layer integration tests for the streaming/pipelining PR:
+//! connection-churn soak (handler reaping), the max-connections cap,
+//! pipelined request concurrency with ordered replies, stream-session
+//! round-trips with chunk sizes that straddle window boundaries, and the
+//! remote-shutdown gate.
+
+use std::time::{Duration, Instant};
+
+use bss2::asic::consts as c;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{Client, Service};
+use bss2::ecg::gen::generate_trace;
+use bss2::ecg::stream::{ContinuousEcg, EpisodeConfig};
+use bss2::fleet::FleetConfig;
+use bss2::fpga::preprocess::IncrementalWindower;
+use bss2::nn::weights::TrainedModel;
+use bss2::util::json::Json;
+
+/// Deterministic native engine; every chip identical (no per-chip split),
+/// so any replica's answer equals a local reference engine's.
+fn test_engine() -> Engine {
+    Engine::native(
+        TrainedModel::synthetic(0x57AB1E),
+        EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+    )
+}
+
+fn start_service(cfg: FleetConfig) -> Service {
+    Service::start_fleet("127.0.0.1:0", cfg, |_chip| Ok(test_engine())).unwrap()
+}
+
+#[test]
+fn connection_churn_does_not_grow_handlers() {
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 8,
+        ..Default::default()
+    });
+    // N connect/use/disconnect cycles: the handler registry must drain
+    // back instead of accumulating finished connections forever.
+    for i in 0..40 {
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let pong = cl.call("{\"cmd\":\"ping\"}").unwrap();
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "cycle {i}");
+        drop(cl);
+        assert!(
+            svc.active_connections() <= 4,
+            "handler growth under churn: {} live after cycle {i}",
+            svc.active_connections()
+        );
+    }
+    // After the last disconnect every handler unwinds (blocking read
+    // returns 0) and deregisters.
+    let t0 = Instant::now();
+    while svc.active_connections() > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "handlers never drained: {} still live",
+            svc.active_connections()
+        );
+        std::thread::yield_now();
+    }
+    svc.stop();
+}
+
+#[test]
+fn connection_cap_sheds_with_explicit_reply() {
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 8,
+        max_connections: 2,
+        ..Default::default()
+    });
+    // Two held connections fill the cap (ping proves they're registered).
+    let mut a = Client::connect(&svc.addr).unwrap();
+    let mut b = Client::connect(&svc.addr).unwrap();
+    assert_eq!(a.call("{\"cmd\":\"ping\"}").unwrap().get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(b.call("{\"cmd\":\"ping\"}").unwrap().get("ok"), Some(&Json::Bool(true)));
+    // The third gets an accept-time shed reply, then the socket closes.
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let shed = cl.read_reply().unwrap();
+    assert_eq!(shed.get("ok"), Some(&Json::Bool(false)), "{shed}");
+    assert_eq!(shed.get("shed"), Some(&Json::Bool(true)), "{shed}");
+    assert_eq!(shed.get("max_connections").and_then(|v| v.as_usize()), Some(2));
+    assert!(cl.read_reply().is_err(), "shed connection must be closed");
+    // Freeing a slot re-admits new clients.
+    drop(a);
+    let t0 = Instant::now();
+    loop {
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let r = cl.read_reply_or_ping();
+        if r {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "slot never freed after disconnect"
+        );
+        std::thread::yield_now();
+    }
+    drop(b);
+    svc.stop();
+}
+
+/// Tiny helper: returns true when the connection accepts a ping (i.e. it
+/// was admitted, not shed).
+trait PingProbe {
+    fn read_reply_or_ping(&mut self) -> bool;
+}
+
+impl PingProbe for Client {
+    fn read_reply_or_ping(&mut self) -> bool {
+        if self.send("{\"cmd\":\"ping\"}").is_err() {
+            return false;
+        }
+        match self.read_reply() {
+            Ok(r) => r.get("pong") == Some(&Json::Bool(true)),
+            Err(_) => false,
+        }
+    }
+}
+
+#[test]
+fn pipelined_requests_execute_concurrently_in_order() {
+    let svc = start_service(FleetConfig {
+        chips: 2,
+        queue_depth: 128,
+        ..Default::default()
+    });
+    let mut cl = Client::connect(&svc.addr).unwrap();
+
+    // Two batches written back-to-back *before reading any reply*: the
+    // reader dispatches both immediately, so both chips hold inflight
+    // work at the same time — impossible under the old one-request-at-a-
+    // time handler, which would not even parse the second request until
+    // the first reply was written.
+    let big: Vec<_> =
+        (0..64).map(|i| generate_trace(300 + i, i % 2 == 0, 1.0)).collect();
+    let small: Vec<_> =
+        (0..3).map(|i| generate_trace(400 + i, i % 2 == 1, 1.0)).collect();
+    cl.send_classify_batch(&big).unwrap();
+    cl.send_classify_batch(&small).unwrap();
+
+    // Observe the overlap: both chips must report inflight work
+    // simultaneously at some point (inflight is set at admission and
+    // cleared at completion, and the 64-batch runs for milliseconds).
+    // If everything finished before this thread got scheduled at all,
+    // the observation is inconclusive rather than failed — the
+    // different-chips assertion below still proves both were dispatched
+    // before either reply was read.
+    let t0 = Instant::now();
+    let mut overlapped = false;
+    let mut conclusive = true;
+    while t0.elapsed() < Duration::from_secs(5) {
+        let snaps = svc.fleet.chip_snapshots();
+        if snaps[0].inflight > 0 && snaps[1].inflight > 0 {
+            overlapped = true;
+            break;
+        }
+        if snaps.iter().map(|s| s.served).sum::<u64>() >= 67 {
+            conclusive = false;
+            break;
+        }
+        std::thread::yield_now();
+    }
+
+    // Replies come back in request order regardless of completion order.
+    let r1 = cl.read_reply().unwrap();
+    let r2 = cl.read_reply().unwrap();
+    assert_eq!(r1.get("ok"), Some(&Json::Bool(true)), "{r1}");
+    assert_eq!(r2.get("ok"), Some(&Json::Bool(true)), "{r2}");
+    assert_eq!(r1.get("batch").and_then(|v| v.as_usize()), Some(64));
+    assert_eq!(r2.get("batch").and_then(|v| v.as_usize()), Some(3));
+    assert_ne!(
+        r1.get("chip").and_then(|v| v.as_usize()),
+        r2.get("chip").and_then(|v| v.as_usize()),
+        "least-loaded dispatch must spread pipelined batches: {r1} / {r2}"
+    );
+    assert!(
+        overlapped || !conclusive,
+        "pipelined requests never held inflight work on both chips at once"
+    );
+
+    // Pipelined single classifies: replies arrive in request order and
+    // each matches a local reference engine bit-for-bit (noise off, all
+    // replicas identical).
+    let traces: Vec<_> =
+        (0..6).map(|i| generate_trace(500 + i, i % 2 == 0, 1.0)).collect();
+    for t in &traces {
+        cl.send_classify(t).unwrap();
+    }
+    let mut reference = test_engine();
+    for (i, t) in traces.iter().enumerate() {
+        let want = reference.classify(t).unwrap();
+        let got = cl.read_reply().unwrap();
+        assert_eq!(got.get("ok"), Some(&Json::Bool(true)), "req {i}: {got}");
+        assert_eq!(
+            got.get("pred").and_then(|v| v.as_usize()),
+            Some(want.pred as usize),
+            "reply order broken at request {i}: {got}"
+        );
+        let scores = got.get("scores").and_then(|v| v.as_arr()).unwrap();
+        for k in 0..2 {
+            let s = scores[k].as_f64().unwrap();
+            assert!(
+                (s - want.scores[k] as f64).abs() < 1e-3,
+                "req {i} score {k}: wire {s} vs local {}",
+                want.scores[k]
+            );
+        }
+    }
+    svc.stop();
+}
+
+#[test]
+fn stream_session_roundtrip_straddles_window_boundaries() {
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 64,
+        ..Default::default()
+    });
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let hop = 512usize;
+
+    // Protocol guards: push before open, double open.
+    let r = cl
+        .call("{\"cmd\":\"stream_push\",\"samples\":[[1],[2]]}")
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    let open = cl.stream_open(hop).unwrap();
+    assert_eq!(open.get("ok"), Some(&Json::Bool(true)), "{open}");
+    assert_eq!(open.get("hop").and_then(|v| v.as_usize()), Some(hop));
+    let again = cl.call(&format!("{{\"cmd\":\"stream_open\",\"hop\":{hop}}}")).unwrap();
+    assert_eq!(again.get("ok"), Some(&Json::Bool(false)), "{again}");
+    // A malformed chunk is rejected without killing the session.
+    let r = cl
+        .call("{\"cmd\":\"stream_push\",\"samples\":[[1,2],[3]]}")
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "ragged: {r}");
+    let r = cl
+        .call("{\"cmd\":\"stream_push\",\"samples\":[[1.5],[2]]}")
+        .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "non-integer: {r}");
+
+    // Stream 3684 samples in chunks that straddle both the 2048 window
+    // boundary and every 512 hop boundary: 4 windows emerge.
+    let total = c::ECG_WINDOW + 3 * hop + 100;
+    let mut ecg = ContinuousEcg::new(
+        5,
+        1.0,
+        EpisodeConfig { lead_in_s: 6.0, sinus_s: (5.0, 8.0), afib_s: (4.0, 7.0) },
+    );
+    let raw = ecg.next_chunk(total);
+    let mut fed = 0usize;
+    for n in [1usize, 700, 41, 1000, 613, 800, 529] {
+        let chunk: Vec<Vec<u16>> =
+            raw.iter().map(|ch| ch[fed..fed + n].to_vec()).collect();
+        cl.stream_push(&chunk).unwrap();
+        fed += n;
+    }
+    assert_eq!(fed, total);
+    cl.stream_close().unwrap();
+
+    // Results arrive in window order; the close ack arrives last, after
+    // every pending result (ordered-reply FIFO).
+    let mut reference = test_engine();
+    let mut windower = IncrementalWindower::new(hop).unwrap();
+    let frames = windower.push_chunk(&raw).unwrap();
+    assert_eq!(frames.len(), 4);
+    for (k, frame) in frames.iter().enumerate() {
+        let line = cl.read_reply().unwrap();
+        assert_eq!(line.get("ok"), Some(&Json::Bool(true)), "window {k}: {line}");
+        assert_eq!(line.get("stream"), Some(&Json::Bool(true)), "{line}");
+        assert_eq!(line.get("window").and_then(|v| v.as_usize()), Some(k));
+        assert_eq!(
+            line.get("start_sample").and_then(|v| v.as_usize()),
+            Some(k * hop)
+        );
+        let acts: Vec<i32> = frame.acts.iter().map(|&a| a as i32).collect();
+        let want = reference.classify_acts(&acts).unwrap();
+        assert_eq!(
+            line.get("pred").and_then(|v| v.as_usize()),
+            Some(want.pred as usize),
+            "window {k}: {line}"
+        );
+        let scores = line.get("scores").and_then(|v| v.as_arr()).unwrap();
+        for i in 0..2 {
+            let s = scores[i].as_f64().unwrap();
+            assert!(
+                (s - want.scores[i] as f64).abs() < 1e-3,
+                "window {k} score {i}: wire {s} vs local {}",
+                want.scores[i]
+            );
+        }
+    }
+    let closed = cl.read_reply().unwrap();
+    assert_eq!(closed.get("stream").and_then(|v| v.as_str()), Some("closed"));
+    assert_eq!(closed.get("windows").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(closed.get("dispatched").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(closed.get("shed").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(
+        closed.get("samples").and_then(|v| v.as_usize()),
+        Some(total)
+    );
+    // The session is gone; a fresh one can be opened on the same
+    // connection.
+    let r = cl.call("{\"cmd\":\"stream_close\"}").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    let reopen = cl.stream_open(c::ECG_WINDOW).unwrap();
+    assert_eq!(reopen.get("ok"), Some(&Json::Bool(true)), "{reopen}");
+    svc.stop();
+}
+
+#[test]
+fn remote_shutdown_is_gated() {
+    // Default config: the wire shutdown command is refused and the
+    // service keeps serving.
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 8,
+        ..Default::default()
+    });
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let r = cl.call("{\"cmd\":\"shutdown\"}").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r}");
+    assert!(
+        r.get("error").and_then(|e| e.as_str()).unwrap().contains("disabled"),
+        "{r}"
+    );
+    let pong = cl.call("{\"cmd\":\"ping\"}").unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "still serving");
+    svc.stop();
+
+    // Opt-in config: shutdown answers bye and closes the connection.
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 8,
+        allow_remote_shutdown: true,
+        ..Default::default()
+    });
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let r = cl.call("{\"cmd\":\"shutdown\"}").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    assert_eq!(r.get("bye"), Some(&Json::Bool(true)), "{r}");
+    assert!(cl.read_reply().is_err(), "connection closes after bye");
+    svc.stop();
+}
