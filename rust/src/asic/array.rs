@@ -45,6 +45,25 @@ impl ColumnCalib {
     }
 }
 
+/// Injected analog faults of one array half (`fault` subsystem).  These
+/// are *silent* faults: they corrupt the conversion without erroring,
+/// which is exactly why the calibration margin monitors exist.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArrayFaults {
+    /// Columns whose synapse column is disconnected: accumulated charge
+    /// reads as zero, so the column converts to offset + noise only.
+    pub dead_columns: Vec<usize>,
+    /// CADC reference collapse: every column of the half reads
+    /// full-scale regardless of the accumulated charge.
+    pub adc_saturated: bool,
+}
+
+impl ArrayFaults {
+    pub fn is_clean(&self) -> bool {
+        self.dead_columns.is_empty() && !self.adc_saturated
+    }
+}
+
 /// One synapse-array half holding a static 6-bit weight matrix.
 #[derive(Debug, Clone)]
 pub struct AnalogArray {
@@ -56,12 +75,38 @@ pub struct AnalogArray {
     /// Optional analog drift field: when present, the effective gain and
     /// offset wander around `calib` with chip time (`calib::drift`).
     pub drift: Option<crate::calib::drift::DriftState>,
+    /// Currently injected faults (clean by default; `fault` subsystem).
+    pub faults: ArrayFaults,
 }
 
 impl AnalogArray {
     pub fn new(k: usize, n: usize, calib: ColumnCalib) -> AnalogArray {
         assert_eq!(calib.gain.len(), n);
-        AnalogArray { k, n, weights: vec![0; k * n], calib, drift: None }
+        AnalogArray {
+            k,
+            n,
+            weights: vec![0; k * n],
+            calib,
+            drift: None,
+            faults: ArrayFaults::default(),
+        }
+    }
+
+    /// Inject (or, with a clean set, clear) analog faults.  Columns
+    /// outside the half are ignored — a sloppy fault plan must degrade
+    /// the chip, not panic the serving path.  Affects [`integrate`]
+    /// conversions only; [`membrane_trace`] stays instrumentation of the
+    /// healthy substrate.
+    ///
+    /// [`integrate`]: AnalogArray::integrate
+    /// [`membrane_trace`]: AnalogArray::membrane_trace
+    pub fn set_faults(&mut self, mut faults: ArrayFaults) {
+        faults.dead_columns.retain(|&c| c < self.n);
+        self.faults = faults;
+    }
+
+    pub fn clear_faults(&mut self) {
+        self.faults = ArrayFaults::default();
     }
 
     /// Attach a drift field.  Fails fast on a column-count mismatch —
@@ -158,6 +203,14 @@ impl AnalogArray {
         acc.iter()
             .enumerate()
             .map(|(n, &a)| {
+                if self.faults.adc_saturated {
+                    // Reference collapse: the comparator ramp never
+                    // crosses, every column latches full-scale.
+                    return c::ADC_MAX as i16;
+                }
+                // A dead synapse column contributes no charge; the
+                // front-end still converts its offset and noise.
+                let a = if self.faults.dead_columns.contains(&n) { 0 } else { a };
                 let v = scale * self.effective_gain(n) * a as f32
                     + self.effective_offset(n)
                     + noise[n];
@@ -397,6 +450,40 @@ mod tests {
             a.integrate(&[10], 0.1, &[0.0; 4], false),
             b.integrate(&[10], 0.1, &[0.0; 4], false)
         );
+    }
+
+    #[test]
+    fn dead_columns_convert_offset_only() {
+        let mut a = AnalogArray::new(1, 4, ColumnCalib::nominal(4));
+        a.calib.offset = vec![0.0, 2.0, 0.0, -3.0];
+        a.load_weights(&[10, 10, 10, 10]);
+        let healthy = a.integrate(&[10], 0.1, &[0.0; 4], false);
+        assert_eq!(healthy, vec![10, 12, 10, 7]);
+        a.set_faults(ArrayFaults {
+            dead_columns: vec![1, 3, 99], // 99 out of range: ignored
+            adc_saturated: false,
+        });
+        assert_eq!(a.faults.dead_columns, vec![1, 3]);
+        let faulted = a.integrate(&[10], 0.1, &[0.0; 4], false);
+        // Dead columns read their offset only; live columns unchanged.
+        assert_eq!(faulted, vec![10, 2, 10, -3]);
+        a.clear_faults();
+        assert!(a.faults.is_clean());
+        assert_eq!(a.integrate(&[10], 0.1, &[0.0; 4], false), healthy);
+    }
+
+    #[test]
+    fn adc_saturation_pins_every_column() {
+        let mut a = AnalogArray::new(1, 3, ColumnCalib::nominal(3));
+        a.load_weights(&[-10, 0, 10]);
+        a.set_faults(ArrayFaults { dead_columns: vec![], adc_saturated: true });
+        let out = a.integrate(&[10], 0.1, &[0.0; 3], false);
+        assert_eq!(out, vec![c::ADC_MAX as i16; 3]);
+        // ReLU mode saturates high too — full-scale is positive.
+        let relu = a.integrate(&[10], 0.1, &[0.0; 3], true);
+        assert_eq!(relu, vec![c::ADC_MAX as i16; 3]);
+        a.clear_faults();
+        assert_ne!(a.integrate(&[10], 0.1, &[0.0; 3], false), out);
     }
 
     #[test]

@@ -34,6 +34,7 @@ use crate::asic::simd::{ChipOps, Insn, SimdCpu};
 use crate::calib::drift::{DriftParams, DriftState};
 use crate::calib::profile::{CalibProfile, ColumnCorrection};
 use crate::ecg::gen::Trace;
+use crate::fault::{FaultCounters, FaultInjector, FAULT_TAG};
 use crate::fpga::dma::{Descriptor, DmaController, Dram};
 use crate::fpga::eventgen::{self, EventLut};
 use crate::fpga::preprocess::StreamingPreprocessor;
@@ -59,6 +60,13 @@ pub const FPGA_CLOCK_HZ: f64 = 100e6;
 /// once per batch: one instruction stream, one descriptor program, one
 /// readback.
 pub const CONTROL_OVERHEAD_US: f64 = 128.0;
+
+/// Chip time consumed by a program attempt that an injected whole-chip
+/// death refuses [µs] — the host still programs descriptors and times
+/// out waiting for the result.  Close to the paper's 276 µs inference so
+/// failed probes age the chip at roughly the serving rate, which is what
+/// lets *transient* deaths recover under the fleet's re-admission probes.
+pub const FAULT_ATTEMPT_COST_US: u64 = 300;
 
 /// Which VMM implementation executes the analog passes.
 pub enum Backend {
@@ -170,6 +178,15 @@ pub struct Engine {
     /// inference noise stream so recalibrating never perturbs serving
     /// reproducibility).
     calib_rng: SplitMix64,
+    // Fault injection (fault subsystem; None = healthy hardware)
+    /// Armed fault schedule, consulted once per program.
+    faults: Option<FaultInjector>,
+    /// This program's DMA transfer loses its frame (consumed by
+    /// `preprocess`).
+    pending_frame_drop: bool,
+    /// Extra latency charged to this program [µs] (consumed by the
+    /// timing accounting).
+    pending_latency_us: f64,
     // FPGA-side state
     dram: Dram,
     lut: EventLut,
@@ -305,6 +322,9 @@ impl Engine {
             compensation: None,
             substrate,
             calib_rng: SplitMix64::new(cfg.noise_seed ^ 0xCA11_B8A7_E5EED),
+            faults: None,
+            pending_frame_drop: false,
+            pending_latency_us: 0.0,
             dram: Dram::default(),
             lut: EventLut::identity(0, c::K_LOGICAL),
             chip_stats: ChipStats::default(),
@@ -340,10 +360,16 @@ impl Engine {
     /// charging DMA + fabric time.  Returns the 5-bit activation vector.
     /// (USB mass storage → DRAM on the real system; we charge only the
     /// DMA read like the paper's block measurement, which starts "with
-    /// raw ECG data in DRAM".)
-    fn preprocess(&mut self, trace: &Trace) -> Vec<i32> {
+    /// raw ECG data in DRAM".)  Fails when an injected frame drop loses
+    /// the transfer — a partial activation vector must never reach the
+    /// chip silently.
+    fn preprocess(&mut self, trace: &Trace) -> anyhow::Result<Vec<i32>> {
         let mut acts: Vec<i32> = Vec::with_capacity(c::MODEL_IN);
         let mut dma = DmaController::new();
+        if self.pending_frame_drop {
+            self.pending_frame_drop = false;
+            dma.inject_drop();
+        }
         for (ch, samples) in trace.samples.iter().enumerate() {
             let addr = (ch as u32) * 0x10_0000;
             self.dram.write_samples(addr, samples);
@@ -360,13 +386,25 @@ impl Engine {
         }
         self.dma_time_ns += dma.stats.time_ns;
         self.dma_bytes += dma.stats.bytes;
-        acts
+        if dma.stats.drops > 0 {
+            // Like a refused program on a dead chip, the aborted attempt
+            // still consumes chip time (descriptor round trips + host
+            // timeout) — which is what lets a *transient* frame-drop
+            // window expire under the fleet's re-admission probes
+            // instead of quarantining the chip forever.
+            self.advance_chip_time_us(FAULT_ATTEMPT_COST_US);
+            anyhow::bail!(
+                "{FAULT_TAG} dma frame dropped (raw trace lost in flight)"
+            );
+        }
+        Ok(acts)
     }
 
     /// Classify one raw trace: the full paper dataflow.
     pub fn classify(&mut self, trace: &Trace) -> anyhow::Result<Inference> {
         self.reset_accounting();
-        let acts = self.preprocess(trace);
+        self.begin_faulted_program(true)?;
+        let acts = self.preprocess(trace)?;
         self.run_stream(&acts)
     }
 
@@ -387,15 +425,22 @@ impl Engine {
     ) -> anyhow::Result<Vec<Inference>> {
         anyhow::ensure!(!traces.is_empty(), "empty batch");
         self.reset_accounting();
-        let acts_all: Vec<Vec<i32>> =
-            traces.iter().map(|t| self.preprocess(t)).collect();
+        self.begin_faulted_program(true)?;
+        let acts_all = traces
+            .iter()
+            .map(|t| self.preprocess(t))
+            .collect::<anyhow::Result<Vec<Vec<i32>>>>()?;
         self.run_stream_batch(&acts_all)
     }
 
-    /// Classify from preprocessed activations (entry point for the fused
-    /// model comparison and kernel-level tests).
+    /// Classify from preprocessed activations (entry point for the
+    /// streaming path, the fused model comparison, and kernel-level
+    /// tests).  DMA frame-drop faults do not apply here — the raw-trace
+    /// transfer happened FPGA-side in the incremental windower — but
+    /// chip death, latency, link and array faults do.
     pub fn classify_acts(&mut self, acts: &[i32]) -> anyhow::Result<Inference> {
         self.reset_accounting();
+        self.begin_faulted_program(false)?;
         self.run_stream(acts)
     }
 
@@ -425,9 +470,11 @@ impl Engine {
             .ok_or_else(|| anyhow::anyhow!("stream did not classify"))?
             as u8;
 
-        // 3. Timing + energy accounting.
+        // 3. Timing + energy accounting (an injected latency spike is
+        // charged to the program like any other FPGA round-trip stall).
+        let latency_extra_us = std::mem::take(&mut self.pending_latency_us);
         let sim_time_s = (self.dma_time_ns + self.chip_timing.ns) / 1e9
-            + CONTROL_OVERHEAD_US / 1e6;
+            + (CONTROL_OVERHEAD_US + latency_extra_us) / 1e6;
         // Serving consumes chip time: the drift field wanders with it.
         self.advance_chip_time_us((sim_time_s * 1e6).round() as u64);
         let activity = Activity {
@@ -436,6 +483,7 @@ impl Engine {
                 transfers: 2,
                 bytes: self.dma_bytes,
                 time_ns: self.dma_time_ns,
+                drops: 0,
             },
             preprocessed_samples: self.pp_samples,
             events_generated: self.events_generated,
@@ -481,10 +529,11 @@ impl Engine {
         self.chip_stats.simd_cycles += total_cycles;
         self.chip_timing.add_simd_cycles(total_cycles);
 
-        // One batched program: control overhead is per batch, not per
-        // sample (cf. `CONTROL_OVERHEAD_US`).
+        // One batched program: control overhead (and any injected
+        // latency spike) is per batch, not per sample.
+        let latency_extra_us = std::mem::take(&mut self.pending_latency_us);
         let batch_time_s = (self.dma_time_ns + self.chip_timing.ns) / 1e9
-            + CONTROL_OVERHEAD_US / 1e6;
+            + (CONTROL_OVERHEAD_US + latency_extra_us) / 1e6;
         // Serving consumes chip time: the drift field wanders with it.
         self.advance_chip_time_us((batch_time_s * 1e6).round() as u64);
         let activity = Activity {
@@ -493,6 +542,7 @@ impl Engine {
                 transfers: 2 * b as u64,
                 bytes: self.dma_bytes,
                 time_ns: self.dma_time_ns,
+                drops: 0,
             },
             preprocessed_samples: self.pp_samples,
             events_generated: self.events_generated,
@@ -563,6 +613,73 @@ impl Engine {
     /// Total MACs per inference (for the Op/s figures in Table 1).
     pub fn macs_per_inference(&self) -> usize {
         c::MACS_TOTAL
+    }
+
+    // --- fault injection (fault subsystem) ---------------------------------
+
+    /// Arm a fault schedule on this chip (`fault::FaultInjector`).  From
+    /// now on every program start consults the schedule at the current
+    /// chip time and applies whatever is active.
+    ///
+    /// Analog array faults (dead columns, ADC saturation) inject into
+    /// the native array model only; arming them on a PJRT backend warns
+    /// loudly — same convention as `apply_profile` refusing profiles on
+    /// PJRT — because a chaos run must not report survival of faults
+    /// that never physically happened.  Chip death, frame drops, link
+    /// corruption, and latency spikes apply on both backends.
+    pub fn arm_faults(&mut self, inj: FaultInjector) {
+        if matches!(self.backend, Backend::Pjrt { .. })
+            && inj.has_analog_faults()
+        {
+            log::warn!(
+                "chip {}: fault plan contains analog array faults \
+                 (dead_columns/adc_saturation) that cannot be injected \
+                 into the staged PJRT artifact — they will NOT occur; \
+                 use --native for analog fault experiments",
+                self.chip_ordinal
+            );
+        }
+        self.faults = Some(inj);
+    }
+
+    /// Running fault tally (None when no schedule is armed).
+    pub fn fault_counters(&self) -> Option<&FaultCounters> {
+        self.faults.as_ref().map(|f| f.counters())
+    }
+
+    /// Evaluate the armed fault schedule for the program starting now:
+    /// refuse it outright (chip death), arm a frame drop for
+    /// `preprocess` (only for `dma_transfer` programs — the streaming
+    /// acts path has no raw-trace DMA to lose), set this program's
+    /// latency surcharge and link BER, and (re)apply the active analog
+    /// faults to the native halves.  No-op without an armed injector.
+    fn begin_faulted_program(&mut self, dma_transfer: bool) -> anyhow::Result<()> {
+        self.pending_frame_drop = false;
+        self.pending_latency_us = 0.0;
+        let Some(inj) = self.faults.as_mut() else {
+            return Ok(());
+        };
+        let active = inj.begin_program(self.chip_time_us, dma_transfer);
+        if active.chip_dead {
+            // The host still talked to the chip and timed out: the
+            // attempt consumes chip time, which is what lets transient
+            // deaths age past their window under re-admission probes.
+            self.advance_chip_time_us(FAULT_ATTEMPT_COST_US);
+            anyhow::bail!(
+                "{FAULT_TAG} injected chip death (chip {})",
+                self.chip_ordinal
+            );
+        }
+        if let Backend::Native { halves } = &mut self.backend {
+            // `active.array` is clean outside fault windows, so this
+            // also *clears* faults whose window just closed.
+            for (h, half) in halves.iter_mut().enumerate() {
+                half.set_faults(active.array[h].clone());
+            }
+        }
+        self.pending_frame_drop = active.drop_frame;
+        self.pending_latency_us = active.latency_extra_us;
+        Ok(())
     }
 
     // --- calibration & drift (calib subsystem) -----------------------------
@@ -662,14 +779,23 @@ impl Engine {
         let sigma = self.noise_sigma;
         let (chip, now_us) = (self.chip_ordinal, self.chip_time_us);
         let profile = match &mut self.backend {
-            Backend::Native { halves } => CalibProfile::measure(
-                halves,
-                &mut self.calib_rng,
-                reps,
-                sigma,
-                chip,
-                now_us,
-            ),
+            Backend::Native { halves } => {
+                // Measure the substrate, not a transient injected fault:
+                // a dead column reads near-zero gain and its "inverse"
+                // correction would blow up.  Any active fault re-applies
+                // at the next program start anyway.
+                for half in halves.iter_mut() {
+                    half.clear_faults();
+                }
+                CalibProfile::measure(
+                    halves,
+                    &mut self.calib_rng,
+                    reps,
+                    sigma,
+                    chip,
+                    now_us,
+                )
+            }
             Backend::Pjrt { .. } => anyhow::bail!(
                 "recalibration requires the native backend (the PJRT \
                  artifact serves its staged calibration)"
@@ -747,6 +873,13 @@ impl ChipOps for Engine {
         self.events_generated += gstats.events as u64;
         self.chip_stats.events_sent += gstats.events as u64;
         self.chip_timing.add_event_burst(gstats.events);
+        // Injected link corruption: the burst crosses the (fault-seeded)
+        // link model, which drops frames that fail parity.  With no
+        // active BER the burst passes through untouched.
+        let events = match self.faults.as_mut() {
+            Some(inj) => inj.transfer_events(events),
+            None => events,
+        };
         let q = &mut self.queued[half as usize];
         q.fill(0.0);
         for ev in &events {
@@ -841,6 +974,7 @@ impl ChipOps for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{FaultKind, FaultPlan, FaultSpec};
 
     fn tiny_model() -> TrainedModel {
         // Hand-built weights: conv all-1 taps, fc1 identity-ish, fc2 routes
@@ -1240,6 +1374,190 @@ mod tests {
         };
         let mut chip1 = Engine::native(tiny_model(), cfg.for_chip(1));
         assert!(chip1.apply_profile(&profile).is_err());
+    }
+
+    fn armed(model: TrainedModel, plan: FaultPlan) -> Engine {
+        let mut eng = Engine::native(
+            model,
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        if let Some(inj) = FaultInjector::from_plan(&plan, 0) {
+            eng.arm_faults(inj);
+        }
+        eng
+    }
+
+    fn one_fault(kind: FaultKind, at_us: u64, duration_us: Option<u64>) -> FaultPlan {
+        FaultPlan {
+            seed: 5,
+            faults: vec![FaultSpec { chip: 0, at_us, duration_us, kind }],
+        }
+    }
+
+    #[test]
+    fn injected_chip_death_errors_then_ages_past_the_window() {
+        let plan = one_fault(FaultKind::ChipDeath, 0, Some(900));
+        let mut eng = armed(tiny_model(), plan);
+        let trace = crate::ecg::gen::generate_trace(70, false, 1.0);
+        // Attempts at t = 0, 300, 600 all die; each consumes the
+        // attempt cost, so the fourth attempt starts at t = 900 — past
+        // the window — and serves normally.
+        for attempt in 0..3u64 {
+            let err = eng.classify(&trace).unwrap_err().to_string();
+            assert!(err.starts_with("fault:"), "attempt {attempt}: {err}");
+            assert_eq!(
+                eng.chip_time_us(),
+                (attempt + 1) * FAULT_ATTEMPT_COST_US,
+                "failed attempts must consume chip time"
+            );
+        }
+        let inf = eng.classify(&trace).unwrap();
+        assert!(inf.pred <= 1);
+        let c = eng.fault_counters().unwrap();
+        assert_eq!(c.dead_programs, 3);
+        assert_eq!(c.faulted_programs, 3);
+    }
+
+    #[test]
+    fn injected_frame_drop_aborts_the_program_and_consumes_chip_time() {
+        // Rate 1.0 in a short window: the first program (chip time 0)
+        // drops its frame; the aborted attempt consumes chip time — like
+        // a dead-chip attempt — so the transient window expires under
+        // retries and the next program is clean.
+        let plan = one_fault(
+            FaultKind::FrameDrops { rate: 1.0 },
+            0,
+            Some(FAULT_ATTEMPT_COST_US),
+        );
+        let mut eng = armed(tiny_model(), plan);
+        let trace = crate::ecg::gen::generate_trace(71, true, 1.0);
+        let err = eng.classify(&trace).unwrap_err().to_string();
+        assert!(err.contains("dma frame dropped"), "{err}");
+        assert!(err.starts_with("fault:"), "{err}");
+        assert_eq!(eng.fault_counters().unwrap().frame_drops, 1);
+        assert_eq!(
+            eng.chip_time_us(),
+            FAULT_ATTEMPT_COST_US,
+            "an aborted attempt must age the chip (transient recovery)"
+        );
+        // Chip time crossed the window: the retry is clean.
+        let inf = eng.classify(&trace).unwrap();
+        assert!(inf.pred <= 1);
+        assert_eq!(eng.fault_counters().unwrap().frame_drops, 1);
+    }
+
+    #[test]
+    fn adc_saturation_corrupts_silently_then_clears() {
+        let trace = crate::ecg::gen::generate_trace(72, false, 1.0);
+        let mut clean = Engine::native(
+            tiny_model(),
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        let want = clean.classify(&trace).unwrap();
+        let plan =
+            one_fault(FaultKind::AdcSaturation { half: 0 }, 0, Some(1000));
+        let mut eng = armed(tiny_model(), plan);
+        let got = eng.classify(&trace).unwrap();
+        assert_ne!(
+            got.scores, want.scores,
+            "a saturated conv half must corrupt the scores"
+        );
+        assert!(eng.fault_counters().unwrap().faulted_programs >= 1);
+        // Past the window the fault clears at the next program start and
+        // the conversion matches the healthy engine bit for bit.
+        eng.advance_idle_us(2_000);
+        let healed = eng.classify(&trace).unwrap();
+        assert_eq!(healed.scores, want.scores);
+        assert_eq!(healed.pred, want.pred);
+    }
+
+    #[test]
+    fn dead_columns_shift_scores_silently() {
+        let trace = crate::ecg::gen::generate_trace(73, true, 1.0);
+        let mut clean = Engine::native(
+            tiny_model(),
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        let want = clean.classify(&trace).unwrap();
+        // Kill the two class columns' worth of fc2 outputs (half 1,
+        // columns 0/1 carry the class scores after pooling).
+        let plan = one_fault(
+            FaultKind::DeadColumns { half: 1, columns: (0..32).collect() },
+            0,
+            None,
+        );
+        let mut eng = armed(tiny_model(), plan);
+        let got = eng.classify(&trace).unwrap();
+        assert_ne!(got.scores, want.scores, "dead fc columns must show");
+    }
+
+    #[test]
+    fn latency_spike_charges_program_time() {
+        let trace = crate::ecg::gen::generate_trace(74, false, 1.0);
+        let mut clean = Engine::native(
+            tiny_model(),
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        let base = clean.classify(&trace).unwrap();
+        let plan =
+            one_fault(FaultKind::LatencySpike { extra_us: 5_000 }, 0, None);
+        let mut eng = armed(tiny_model(), plan);
+        let slow = eng.classify(&trace).unwrap();
+        let extra_s = slow.sim_time_s - base.sim_time_s;
+        assert!(
+            (extra_s - 5e-3).abs() < 1e-6,
+            "spike must add exactly 5 ms, added {extra_s}"
+        );
+        assert_eq!(slow.pred, base.pred, "slow, not wrong");
+        assert_eq!(slow.scores, base.scores);
+        assert_eq!(eng.fault_counters().unwrap().latency_spikes, 1);
+    }
+
+    #[test]
+    fn link_corruption_thins_events_without_erroring() {
+        let trace = crate::ecg::gen::generate_trace(75, true, 1.0);
+        let plan =
+            one_fault(FaultKind::LinkCorruption { ber: 0.5 }, 0, None);
+        let mut eng = armed(tiny_model(), plan);
+        let inf = eng.classify(&trace).unwrap();
+        assert!(inf.pred <= 1, "corruption degrades, never errors");
+        assert!(
+            eng.fault_counters().unwrap().link_events_dropped > 0,
+            "BER 0.5 over hundreds of events must drop some"
+        );
+    }
+
+    #[test]
+    fn armed_faults_replay_deterministically() {
+        let plan = FaultPlan {
+            seed: 21,
+            faults: vec![
+                FaultSpec {
+                    chip: 0,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::FrameDrops { rate: 0.5 },
+                },
+                FaultSpec {
+                    chip: 0,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::LinkCorruption { ber: 0.02 },
+                },
+            ],
+        };
+        let run = |plan: &FaultPlan| -> Vec<Result<[f32; 2], String>> {
+            let mut eng = armed(tiny_model(), plan.clone());
+            (0..6)
+                .map(|i| {
+                    let t = crate::ecg::gen::generate_trace(80 + i, i % 2 == 0, 1.0);
+                    eng.classify(&t)
+                        .map(|inf| inf.scores)
+                        .map_err(|e| e.to_string())
+                })
+                .collect()
+        };
+        assert_eq!(run(&plan), run(&plan), "same plan, same outcome");
     }
 
     #[test]

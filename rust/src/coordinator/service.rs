@@ -43,6 +43,10 @@
 //!                  "energy_mj": e}, ...k entries...]}
 //! <- {"ok": false, "shed": true, "error": "...", "accepted": 0,
 //!     "batch": B, "retry_after_us": n}
+//! <- {"ok": false, "error": "...", "batch": B, "accepted": k}
+//!    (terminal engine failure — only after the fleet's transparent
+//!     failover budget is exhausted; still echoes batch/accepted so
+//!     pipelined clients keep request/reply correlation)
 //! -> {"cmd": "stream_open", "hop": H}       (H: samples, multiple of 32)
 //! <- {"ok": true, "stream": "open", "hop": H, "window": 2048,
 //!     "pool_window": 32}
@@ -615,9 +619,15 @@ fn resolve_batch(
     retry_after_us: u64,
     resp: &mpsc::Receiver<crate::fleet::ChipReply>,
 ) -> String {
+    // Terminal failures still echo `batch`/`accepted`: a pipelining
+    // client correlates ordered replies to requests by these fields, and
+    // a failover-exhausted error must not break that correlation.
     match resp.recv() {
         Err(mpsc::RecvError) => {
-            format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
+            format!(
+                "{{\"ok\":false,\"error\":\"chip {chip} worker gone\",\
+                 \"batch\":{batch},\"accepted\":{accepted}}}"
+            )
         }
         Ok(reply) => match reply.result {
             Ok(infs) => {
@@ -646,7 +656,11 @@ fn resolve_batch(
                 s.push_str("]}");
                 s
             }
-            Err(e) => err_json(&e),
+            Err(e) => format!(
+                "{{\"ok\":false,\"error\":{},\"batch\":{batch},\
+                 \"accepted\":{accepted}}}",
+                json_str(&e)
+            ),
         },
     }
 }

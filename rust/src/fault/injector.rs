@@ -1,0 +1,318 @@
+//! Per-chip fault arming: evaluates a [`FaultPlan`] against the chip's
+//! clock, once per program.
+//!
+//! The engine owns one injector (armed via `Engine::arm_faults`) and
+//! asks it at every program start what is currently broken
+//! ([`FaultInjector::begin_program`]).  All stochastic draws (frame-drop
+//! rolls, link bit flips) come from per-chip streams split off the
+//! plan's seed, and are only consumed while the corresponding fault
+//! window is active — so a chip with no active stochastic fault has a
+//! bit-identical execution to an unarmed one, and a seeded soak replays
+//! exactly as long as each chip sees the same job sequence.
+
+use crate::asic::array::ArrayFaults;
+use crate::asic::packets::Event;
+use crate::fpga::link::{LinkConfig, LinkLayer};
+use crate::util::rng::SplitMix64;
+
+use super::plan::{FaultKind, FaultPlan, FaultSpec};
+
+/// Golden-ratio stream split (the same constant `EngineConfig::for_chip`
+/// uses), so every chip rolls its own independent fault stream.
+const CHIP_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// What is broken for the program starting now.
+#[derive(Debug, Clone, Default)]
+pub struct ProgramFaults {
+    /// The chip does not answer: the program must fail.
+    pub chip_dead: bool,
+    /// This program's DMA transfer loses a frame: the program must fail.
+    pub drop_frame: bool,
+    /// Extra host-visible latency charged to this program [µs].
+    pub latency_extra_us: f64,
+    /// Active bit-error rate on the event link (0 = clean).
+    pub link_ber: f64,
+    /// Analog faults per array half (dead columns, ADC saturation).
+    pub array: [ArrayFaults; 2],
+}
+
+/// Running tally of what the injector actually did (unit tests and the
+/// chaos report read these; all counts are deterministic per seed).
+#[derive(Debug, Clone, Default)]
+pub struct FaultCounters {
+    /// Programs that began with at least one fault active.
+    pub faulted_programs: u64,
+    /// Programs refused because the chip was dead.
+    pub dead_programs: u64,
+    /// Programs aborted by an injected DMA frame drop.
+    pub frame_drops: u64,
+    /// Programs that were charged a latency spike.
+    pub latency_spikes: u64,
+    /// Event frames lost to injected link corruption.
+    pub link_events_dropped: u64,
+}
+
+/// One chip's armed fault schedule.
+pub struct FaultInjector {
+    chip: usize,
+    specs: Vec<FaultSpec>,
+    /// Frame-drop rolls (consumed only inside active drop windows).
+    rng: SplitMix64,
+    /// Link model applying the active BER (its own seeded flip stream).
+    link: LinkLayer,
+    /// BER of the program currently executing (set by `begin_program`).
+    current_ber: f64,
+    counters: FaultCounters,
+}
+
+impl FaultInjector {
+    /// Arm `plan` on `chip`.  Returns `None` when the plan has no fault
+    /// for this chip — an unarmed engine pays zero per-program cost.
+    pub fn from_plan(plan: &FaultPlan, chip: usize) -> Option<FaultInjector> {
+        let specs = plan.faults_for(chip);
+        if specs.is_empty() {
+            return None;
+        }
+        let split = plan.seed.wrapping_add((chip as u64).wrapping_mul(CHIP_SPLIT));
+        Some(FaultInjector {
+            chip,
+            specs,
+            rng: SplitMix64::new(split ^ 0xD0D0_FA17),
+            link: LinkLayer::with_seed(
+                LinkConfig::default(),
+                split ^ 0x11C4_B17F,
+            ),
+            current_ber: 0.0,
+            counters: FaultCounters::default(),
+        })
+    }
+
+    pub fn chip(&self) -> usize {
+        self.chip
+    }
+
+    /// Whether the schedule contains analog array faults (dead columns,
+    /// ADC saturation).  Those inject into the native array model only —
+    /// the staged PJRT artifact has no per-column substrate to corrupt —
+    /// so the engine warns loudly when arming them on a PJRT backend
+    /// instead of silently reporting survival of faults that never
+    /// happened.
+    pub fn has_analog_faults(&self) -> bool {
+        self.specs.iter().any(|s| {
+            matches!(
+                s.kind,
+                FaultKind::DeadColumns { .. } | FaultKind::AdcSaturation { .. }
+            )
+        })
+    }
+
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
+    /// Evaluate the schedule at chip time `t_us` and account the
+    /// program.  Called exactly once per program by the engine;
+    /// `dma_transfer` says whether this program performs the raw-trace
+    /// DMA at all — streaming `classify_acts` programs don't (the
+    /// windower already ran FPGA-side), so frame-drop faults neither
+    /// roll nor count against them.
+    pub fn begin_program(
+        &mut self,
+        t_us: u64,
+        dma_transfer: bool,
+    ) -> ProgramFaults {
+        let mut out = ProgramFaults::default();
+        let mut any = false;
+        for spec in &self.specs {
+            if !spec.active_at(t_us) {
+                continue;
+            }
+            any = true;
+            match &spec.kind {
+                FaultKind::ChipDeath => out.chip_dead = true,
+                FaultKind::DeadColumns { half, columns } => {
+                    let h = &mut out.array[*half & 1];
+                    for &c in columns {
+                        if !h.dead_columns.contains(&c) {
+                            h.dead_columns.push(c);
+                        }
+                    }
+                }
+                FaultKind::AdcSaturation { half } => {
+                    out.array[*half & 1].adc_saturated = true;
+                }
+                FaultKind::LinkCorruption { ber } => {
+                    out.link_ber = out.link_ber.max(*ber);
+                }
+                FaultKind::FrameDrops { rate } => {
+                    // Roll only inside the window and only for programs
+                    // with a DMA transfer to lose: otherwise the RNG is
+                    // untouched and execution matches an unarmed chip.
+                    if dma_transfer && self.rng.unit() < *rate {
+                        out.drop_frame = true;
+                    }
+                }
+                FaultKind::LatencySpike { extra_us } => {
+                    out.latency_extra_us += *extra_us as f64;
+                }
+            }
+        }
+        if any {
+            self.counters.faulted_programs += 1;
+        }
+        if out.chip_dead {
+            self.counters.dead_programs += 1;
+        } else if out.drop_frame {
+            self.counters.frame_drops += 1;
+        }
+        if out.latency_extra_us > 0.0 && !out.chip_dead {
+            self.counters.latency_spikes += 1;
+        }
+        self.current_ber = out.link_ber;
+        out
+    }
+
+    /// Pass an event burst through the (possibly corrupting) link.
+    /// With no active BER the burst is returned untouched and the flip
+    /// stream is not consumed.
+    pub fn transfer_events(&mut self, events: Vec<Event>) -> Vec<Event> {
+        if self.current_ber <= 0.0 {
+            return events;
+        }
+        self.link.set_ber(self.current_ber);
+        let before = self.link.stats.events_dropped;
+        let out = self.link.transfer(&events);
+        self.counters.link_events_dropped +=
+            self.link.stats.events_dropped - before;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::plan::FaultSpec;
+
+    fn plan(faults: Vec<FaultSpec>) -> FaultPlan {
+        FaultPlan { seed: 9, faults }
+    }
+
+    #[test]
+    fn unaffected_chip_gets_no_injector() {
+        let p = plan(vec![FaultSpec {
+            chip: 1,
+            at_us: 0,
+            duration_us: None,
+            kind: FaultKind::ChipDeath,
+        }]);
+        assert!(FaultInjector::from_plan(&p, 0).is_none());
+        assert!(FaultInjector::from_plan(&p, 1).is_some());
+    }
+
+    #[test]
+    fn schedule_windows_gate_activation() {
+        let p = plan(vec![
+            FaultSpec {
+                chip: 0,
+                at_us: 1000,
+                duration_us: Some(500),
+                kind: FaultKind::ChipDeath,
+            },
+            FaultSpec {
+                chip: 0,
+                at_us: 2000,
+                duration_us: None,
+                kind: FaultKind::LatencySpike { extra_us: 300 },
+            },
+        ]);
+        let mut inj = FaultInjector::from_plan(&p, 0).unwrap();
+        assert!(!inj.begin_program(0, true).chip_dead);
+        assert!(inj.begin_program(1000, true).chip_dead);
+        assert!(inj.begin_program(1499, true).chip_dead);
+        let after = inj.begin_program(1500, true);
+        assert!(!after.chip_dead);
+        assert_eq!(after.latency_extra_us, 0.0);
+        let late = inj.begin_program(5000, true);
+        assert_eq!(late.latency_extra_us, 300.0);
+        let c = inj.counters();
+        assert_eq!(c.dead_programs, 2);
+        assert_eq!(c.latency_spikes, 1);
+        assert_eq!(c.faulted_programs, 3);
+    }
+
+    #[test]
+    fn array_faults_merge_across_specs() {
+        let p = plan(vec![
+            FaultSpec {
+                chip: 0,
+                at_us: 0,
+                duration_us: None,
+                kind: FaultKind::DeadColumns { half: 1, columns: vec![3, 5] },
+            },
+            FaultSpec {
+                chip: 0,
+                at_us: 0,
+                duration_us: None,
+                kind: FaultKind::DeadColumns { half: 1, columns: vec![5, 9] },
+            },
+            FaultSpec {
+                chip: 0,
+                at_us: 0,
+                duration_us: None,
+                kind: FaultKind::AdcSaturation { half: 0 },
+            },
+        ]);
+        let mut inj = FaultInjector::from_plan(&p, 0).unwrap();
+        let f = inj.begin_program(0, true);
+        assert_eq!(f.array[1].dead_columns, vec![3, 5, 9], "deduplicated");
+        assert!(f.array[0].adc_saturated);
+        assert!(!f.array[1].adc_saturated);
+        assert!(!f.chip_dead);
+    }
+
+    #[test]
+    fn frame_drops_are_seed_deterministic() {
+        let p = plan(vec![FaultSpec {
+            chip: 2,
+            at_us: 0,
+            duration_us: None,
+            kind: FaultKind::FrameDrops { rate: 0.5 },
+        }]);
+        let roll = |p: &FaultPlan| -> Vec<bool> {
+            let mut inj = FaultInjector::from_plan(p, 2).unwrap();
+            (0..64).map(|i| inj.begin_program(i * 100, true).drop_frame).collect()
+        };
+        let a = roll(&p);
+        assert_eq!(a, roll(&p), "same seed, same rolls");
+        let hits = a.iter().filter(|&&d| d).count();
+        assert!(hits > 10 && hits < 54, "rate 0.5 should hit ~half: {hits}");
+        let other = FaultPlan { seed: 10, ..p.clone() };
+        assert_ne!(a, roll(&other), "different plan seed, different rolls");
+    }
+
+    #[test]
+    fn link_corruption_thins_event_bursts() {
+        let p = plan(vec![FaultSpec {
+            chip: 0,
+            at_us: 0,
+            duration_us: Some(100),
+            kind: FaultKind::LinkCorruption { ber: 1.0 },
+        }]);
+        let mut inj = FaultInjector::from_plan(&p, 0).unwrap();
+        let burst: Vec<Event> =
+            (0..50).map(|i| Event::new(i, (i % 32) as u8)).collect();
+        // Outside the window: untouched (same Vec length, same content).
+        inj.begin_program(200, true);
+        let clean = inj.transfer_events(burst.clone());
+        assert_eq!(clean.len(), 50);
+        assert_eq!(inj.counters().link_events_dropped, 0);
+        // Inside: every frame gets a flipped bit; parity drops most.
+        inj.begin_program(0, true);
+        let noisy = inj.transfer_events(burst);
+        assert!(noisy.len() < 50, "BER 1.0 must drop frames");
+        assert_eq!(
+            inj.counters().link_events_dropped,
+            50 - noisy.len() as u64
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Deterministic fault injection for the simulated hardware.
+//!
+//! The paper's headline claim is operational: the mobile system "has
+//! enabled the BrainScaleS-2 ASIC to be operated reliably outside a
+//! specialized lab setting".  Our fleet has reliability machinery
+//! (`fleet::health` error thresholds, quarantine + re-probe, shed
+//! replies) — but nothing in the simulator could *break*, so none of it
+//! had ever been driven by an actual fault.  This subsystem makes the
+//! simulated hardware breakable, **deterministically**:
+//!
+//! * [`plan`] — [`FaultPlan`]: a seeded, serialisable schedule of faults
+//!   (`--fault-plan` on `repro serve`, `repro chaos`).  Every fault is a
+//!   window in **chip time**, the same clock that drives the analog
+//!   drift field (`calib::drift`), so a plan replays bit-identically on
+//!   any host as long as the job sequence per chip is the same.
+//! * [`injector`] — [`FaultInjector`]: the per-chip arming of a plan.
+//!   The engine consults it once per program
+//!   (`Engine::begin_faulted_program`) and applies whatever is active:
+//!   dead synapse columns and ADC saturation on the analog halves
+//!   (`asic::array::ArrayFaults`), bit corruption on the highspeed link
+//!   (`fpga::link` BER), DMA frame drops (`fpga::dma`), latency spikes,
+//!   and whole-chip death (transient or permanent).
+//!
+//! Fault *classes* split along an axis the failover design cares about:
+//!
+//! * **erroring faults** (chip death, frame drops) make the program
+//!   fail — the fleet sees the error, strikes the chip, and
+//!   transparently retries the job on a healthy replica
+//!   (`fleet::pool` failover, bounded redirect budget);
+//! * **silent faults** (dead columns, ADC saturation, link corruption)
+//!   corrupt numerics without erroring — failover cannot catch those by
+//!   design; they are what the calibration monitors
+//!   (`calib::monitor` margin EWMA) and the recalibration policy exist
+//!   for.
+//!
+//! Error messages of injected faults carry the [`FAULT_TAG`] prefix so
+//! telemetry can distinguish injected failures from organic ones.
+
+pub mod injector;
+pub mod plan;
+
+pub use injector::{FaultCounters, FaultInjector, ProgramFaults};
+pub use plan::{FaultKind, FaultPlan, FaultSpec};
+
+/// Prefix of every injected-fault error message (telemetry filter).
+pub const FAULT_TAG: &str = "fault:";

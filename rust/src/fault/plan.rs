@@ -1,0 +1,605 @@
+//! Fault plans: seeded, serialisable schedules of hardware faults.
+//!
+//! A plan is a list of [`FaultSpec`]s, each targeting one chip with a
+//! fault window in **chip time** (µs): active from `at_us` for
+//! `duration_us` (or forever when absent).  Chip time only advances with
+//! that chip's own activity (served programs, failed attempts, idle
+//! aging), so a plan is independent of host scheduling — the property
+//! the `repro chaos` determinism contract rests on.
+//!
+//! Plans travel as JSON (`--fault-plan` accepts a path or an inline
+//! object):
+//!
+//! ```json
+//! {"seed": 1, "faults": [
+//!   {"kind": "chip_death",     "chip": 1, "at_us": 2000, "duration_us": 8000},
+//!   {"kind": "dead_columns",   "chip": 0, "half": 1, "columns": [3, 17],
+//!    "at_us": 0},
+//!   {"kind": "adc_saturation", "chip": 2, "half": 0, "at_us": 500,
+//!    "duration_us": 1500},
+//!   {"kind": "link_corruption","chip": 0, "ber": 0.001, "at_us": 0},
+//!   {"kind": "frame_drops",    "chip": 1, "rate": 0.2, "at_us": 0},
+//!   {"kind": "latency_spike",  "chip": 3, "extra_us": 5000, "at_us": 100}
+//! ]}
+//! ```
+
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// What breaks.  Windowing (`at_us`/`duration_us`) lives in
+/// [`FaultSpec`]; this is the fault's mechanism and parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// The whole chip stops answering: every program errors while the
+    /// window is active.  A failed attempt still consumes chip time
+    /// (the host's timeout), so *transient* deaths recover once enough
+    /// re-admission probes have burned through the window.
+    ChipDeath,
+    /// Synapse columns of one array half disconnect: their accumulated
+    /// charge reads as zero (output = offset + noise only).  Silent.
+    DeadColumns { half: usize, columns: Vec<usize> },
+    /// CADC reference collapse on one half: every column reads
+    /// full-scale.  Silent.
+    AdcSaturation { half: usize },
+    /// Bit-error rate on the highspeed event link: corrupted frames
+    /// fail parity and are dropped (`asic::packets`), thinning the
+    /// event stream.  Silent.
+    LinkCorruption { ber: f64 },
+    /// Per-program probability that a DMA descriptor transfer loses its
+    /// frame; the program aborts with an error.  Erroring.
+    FrameDrops { rate: f64 },
+    /// Extra host-visible latency added to every program in the window
+    /// (a wedged FPGA round trip).  Slow, but correct.
+    LatencySpike { extra_us: u64 },
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::ChipDeath => "chip_death",
+            FaultKind::DeadColumns { .. } => "dead_columns",
+            FaultKind::AdcSaturation { .. } => "adc_saturation",
+            FaultKind::LinkCorruption { .. } => "link_corruption",
+            FaultKind::FrameDrops { .. } => "frame_drops",
+            FaultKind::LatencySpike { .. } => "latency_spike",
+        }
+    }
+
+    /// Whether the fault makes programs *fail* (vs silently corrupting
+    /// numerics or only slowing them down).
+    pub fn is_erroring(&self) -> bool {
+        matches!(self, FaultKind::ChipDeath | FaultKind::FrameDrops { .. })
+    }
+}
+
+/// One scheduled fault on one chip.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub chip: usize,
+    /// Chip time at which the fault arms [µs].
+    pub at_us: u64,
+    /// Fault window length [µs]; `None` = permanent.
+    pub duration_us: Option<u64>,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// Is the fault active at chip time `t_us`?
+    pub fn active_at(&self, t_us: u64) -> bool {
+        t_us >= self.at_us
+            && match self.duration_us {
+                Some(d) => t_us < self.at_us.saturating_add(d),
+                None => true,
+            }
+    }
+
+    /// One human-readable summary line (deterministic — the chaos
+    /// survival report prints these).
+    pub fn describe(&self) -> String {
+        let window = match self.duration_us {
+            Some(d) => format!("at {} µs for {} µs", self.at_us, d),
+            None => format!("at {} µs, permanent", self.at_us),
+        };
+        let what = match &self.kind {
+            FaultKind::ChipDeath => "chip death".to_string(),
+            FaultKind::DeadColumns { half, columns } => {
+                format!("{} dead column(s) on half {half}", columns.len())
+            }
+            FaultKind::AdcSaturation { half } => {
+                format!("ADC saturation on half {half}")
+            }
+            FaultKind::LinkCorruption { ber } => {
+                format!("link corruption (BER {ber})")
+            }
+            FaultKind::FrameDrops { rate } => {
+                format!("DMA frame drops (rate {rate})")
+            }
+            FaultKind::LatencySpike { extra_us } => {
+                format!("latency spike (+{extra_us} µs)")
+            }
+        };
+        format!("chip {}: {what} {window}", self.chip)
+    }
+
+    fn to_json(&self) -> String {
+        let mut s = format!(
+            "{{\"kind\":\"{}\",\"chip\":{},\"at_us\":{}",
+            self.kind.name(),
+            self.chip,
+            self.at_us
+        );
+        if let Some(d) = self.duration_us {
+            s.push_str(&format!(",\"duration_us\":{d}"));
+        }
+        match &self.kind {
+            FaultKind::ChipDeath => {}
+            FaultKind::DeadColumns { half, columns } => {
+                s.push_str(&format!(",\"half\":{half},\"columns\":["));
+                for (i, c) in columns.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(&c.to_string());
+                }
+                s.push(']');
+            }
+            FaultKind::AdcSaturation { half } => {
+                s.push_str(&format!(",\"half\":{half}"));
+            }
+            FaultKind::LinkCorruption { ber } => {
+                s.push_str(&format!(",\"ber\":{ber}"));
+            }
+            FaultKind::FrameDrops { rate } => {
+                s.push_str(&format!(",\"rate\":{rate}"));
+            }
+            FaultKind::LatencySpike { extra_us } => {
+                s.push_str(&format!(",\"extra_us\":{extra_us}"));
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// A seeded schedule of faults across the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of every stochastic draw under this plan (frame-drop rolls,
+    /// link bit flips), split per chip so replicas stay decorrelated.
+    pub seed: u64,
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Faults targeting `chip`, in schedule order.
+    pub fn faults_for(&self, chip: usize) -> Vec<FaultSpec> {
+        self.faults.iter().filter(|f| f.chip == chip).cloned().collect()
+    }
+
+    /// Chips carrying at least one [`FaultKind::ChipDeath`] spec (the
+    /// bound [`FaultPlan::random`] keeps under `chips / 2`).
+    pub fn death_chips(&self, chips: usize) -> usize {
+        self.chips_matching(chips, |k| matches!(k, FaultKind::ChipDeath))
+    }
+
+    /// Chips carrying at least one **erroring** fault
+    /// ([`FaultKind::is_erroring`]) — the only chips the plan can get
+    /// quarantined.  Silent and slow faults never cost serving capacity,
+    /// so a fleet of `chips` replicas holds a serving floor of
+    /// `chips - erroring_chips(..)` under this plan; the `repro chaos`
+    /// verdict and the chaos soak tests both measure against it.
+    pub fn erroring_chips(&self, chips: usize) -> usize {
+        self.chips_matching(chips, FaultKind::is_erroring)
+    }
+
+    fn chips_matching<P: Fn(&FaultKind) -> bool>(
+        &self,
+        chips: usize,
+        pred: P,
+    ) -> usize {
+        let mut hit = vec![false; chips];
+        for f in &self.faults {
+            if pred(&f.kind) && f.chip < chips {
+                hit[f.chip] = true;
+            }
+        }
+        hit.iter().filter(|&&h| h).count()
+    }
+
+    /// Reject a plan that names chips outside a fleet of `chips`
+    /// replicas.  Same strictness rule as the parser: a typo'd plan
+    /// (say, a 1-based chip index) must fail loudly, not silently arm
+    /// nothing and let a chaos run report survival of faults that were
+    /// never injected.  `Fleet::start` calls this before spinning up.
+    pub fn validate_for(&self, chips: usize) -> anyhow::Result<()> {
+        for (i, f) in self.faults.iter().enumerate() {
+            anyhow::ensure!(
+                f.chip < chips,
+                "fault {i} ({}) targets chip {} but the fleet has {chips} \
+                 chip(s) (valid: 0..={})",
+                f.kind.name(),
+                f.chip,
+                chips.saturating_sub(1)
+            );
+        }
+        Ok(())
+    }
+
+    /// Load from a path, or parse inline when the argument itself is a
+    /// JSON object (starts with `{`).
+    pub fn load(path_or_inline: &str) -> anyhow::Result<FaultPlan> {
+        let text = if path_or_inline.trim_start().starts_with('{') {
+            path_or_inline.to_string()
+        } else {
+            std::fs::read_to_string(path_or_inline).map_err(|e| {
+                anyhow::anyhow!("fault plan {path_or_inline}: {e}")
+            })?
+        };
+        Self::parse(&text)
+    }
+
+    /// Strict parse: malformed fields are rejected, never defaulted —
+    /// a typo'd plan must not silently arm different faults.
+    pub fn parse(text: &str) -> anyhow::Result<FaultPlan> {
+        let v = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("fault plan: {e}"))?;
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(s) => s
+                .as_uint()
+                .ok_or_else(|| anyhow::anyhow!("seed must be a non-negative integer"))?,
+        };
+        let items = v
+            .req("faults")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("faults must be an array"))?;
+        let mut faults = Vec::with_capacity(items.len());
+        for (i, item) in items.iter().enumerate() {
+            faults.push(
+                Self::parse_spec(item)
+                    .map_err(|e| anyhow::anyhow!("fault {i}: {e}"))?,
+            );
+        }
+        Ok(FaultPlan { seed, faults })
+    }
+
+    fn parse_spec(item: &Json) -> anyhow::Result<FaultSpec> {
+        let uint = |key: &str| -> anyhow::Result<u64> {
+            item.req(key)?.as_uint().ok_or_else(|| {
+                anyhow::anyhow!("`{key}` must be a non-negative integer")
+            })
+        };
+        let rate = |key: &str| -> anyhow::Result<f64> {
+            let r = item.req(key)?.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("`{key}` must be a number")
+            })?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&r),
+                "`{key}` must be in [0, 1], got {r}"
+            );
+            Ok(r)
+        };
+        let chip = uint("chip")? as usize;
+        let at_us = uint("at_us")?;
+        let duration_us = match item.get("duration_us") {
+            None => None,
+            Some(d) => Some(d.as_uint().ok_or_else(|| {
+                anyhow::anyhow!("`duration_us` must be a non-negative integer")
+            })?),
+        };
+        let kind_name = item
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("`kind` must be a string"))?;
+        let half = || -> anyhow::Result<usize> {
+            let h = uint("half")? as usize;
+            anyhow::ensure!(h < 2, "`half` must be 0 or 1, got {h}");
+            Ok(h)
+        };
+        let kind = match kind_name {
+            "chip_death" => FaultKind::ChipDeath,
+            "dead_columns" => {
+                let cols = item
+                    .req("columns")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("`columns` must be an array"))?;
+                let columns = cols
+                    .iter()
+                    .map(|c| {
+                        c.as_uint().map(|c| c as usize).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "`columns` entries must be non-negative integers"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<usize>>>()?;
+                anyhow::ensure!(!columns.is_empty(), "`columns` is empty");
+                FaultKind::DeadColumns { half: half()?, columns }
+            }
+            "adc_saturation" => FaultKind::AdcSaturation { half: half()? },
+            "link_corruption" => {
+                FaultKind::LinkCorruption { ber: rate("ber")? }
+            }
+            "frame_drops" => FaultKind::FrameDrops { rate: rate("rate")? },
+            "latency_spike" => {
+                FaultKind::LatencySpike { extra_us: uint("extra_us")? }
+            }
+            other => anyhow::bail!("unknown fault kind `{other}`"),
+        };
+        Ok(FaultSpec { chip, at_us, duration_us, kind })
+    }
+
+    /// Serialise back to the wire format ([`parse`](FaultPlan::parse)
+    /// round-trips it).
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"seed\":{},\"faults\":[", self.seed);
+        for (i, f) in self.faults.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&f.to_json());
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Draw a deterministic chaos plan for a fleet of `chips` replicas
+    /// whose per-chip time is expected to reach roughly `horizon_us`.
+    ///
+    /// Structure, not free-for-all: at most `chips / 2` replicas get a
+    /// [`ChipDeath`](FaultKind::ChipDeath) (mostly transient), so the
+    /// fleet can never lose more than half its replicas to the plan;
+    /// every chip gets a chance of one or two non-fatal faults.  All
+    /// randomness comes from `seed` — the same seed gives the same plan
+    /// byte for byte.
+    pub fn random(seed: u64, chips: usize, horizon_us: u64) -> FaultPlan {
+        let mut rng = SplitMix64::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let horizon = horizon_us.max(1000);
+        let mut faults = Vec::new();
+        let window = |rng: &mut SplitMix64| -> (u64, Option<u64>) {
+            let at = rng.below(horizon * 3 / 4);
+            let dur = horizon / 20 + rng.below(horizon / 4);
+            (at, Some(dur.max(1)))
+        };
+        // Death faults on a strict subset of the fleet.
+        let deadly = if chips >= 2 { chips / 2 } else { 0 };
+        for d in 0..deadly {
+            // Spread deaths over distinct chips deterministically.
+            let chip = (d * 2 + rng.below(2) as usize) % chips;
+            let (at_us, mut duration_us) = window(&mut rng);
+            if rng.unit() < 0.25 {
+                duration_us = None; // permanent
+            }
+            faults.push(FaultSpec {
+                chip,
+                at_us,
+                duration_us,
+                kind: FaultKind::ChipDeath,
+            });
+        }
+        // Non-fatal faults, one or two per chip with probability.
+        for chip in 0..chips {
+            for _ in 0..2 {
+                if rng.unit() < 0.4 {
+                    continue;
+                }
+                let (at_us, duration_us) = window(&mut rng);
+                let kind = match rng.below(5) {
+                    0 => FaultKind::DeadColumns {
+                        half: rng.below(2) as usize,
+                        columns: (0..(1 + rng.below(6) as usize))
+                            .map(|_| rng.below(64) as usize)
+                            .collect(),
+                    },
+                    1 => FaultKind::AdcSaturation {
+                        half: rng.below(2) as usize,
+                    },
+                    2 => FaultKind::LinkCorruption {
+                        // Integer-derived BER in [1e-4, 1e-2]: `powf`
+                        // goes through platform libm and is not
+                        // bit-identical across hosts, which would break
+                        // the chaos report's cross-host byte-identity.
+                        ber: (1 + rng.below(99)) as f64 * 1e-4,
+                    },
+                    3 => FaultKind::FrameDrops {
+                        rate: rng.uniform(0.05, 0.4),
+                    },
+                    _ => FaultKind::LatencySpike {
+                        extra_us: 500 + rng.below(5000),
+                    },
+                };
+                faults.push(FaultSpec { chip, at_us, duration_us, kind });
+            }
+        }
+        FaultPlan { seed, faults }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_are_half_open() {
+        let f = FaultSpec {
+            chip: 0,
+            at_us: 100,
+            duration_us: Some(50),
+            kind: FaultKind::ChipDeath,
+        };
+        assert!(!f.active_at(99));
+        assert!(f.active_at(100));
+        assert!(f.active_at(149));
+        assert!(!f.active_at(150));
+        let forever = FaultSpec { duration_us: None, ..f };
+        assert!(forever.active_at(u64::MAX));
+        assert!(!forever.active_at(99));
+    }
+
+    #[test]
+    fn parse_roundtrip_every_kind() {
+        let plan = FaultPlan {
+            seed: 7,
+            faults: vec![
+                FaultSpec {
+                    chip: 1,
+                    at_us: 2000,
+                    duration_us: Some(8000),
+                    kind: FaultKind::ChipDeath,
+                },
+                FaultSpec {
+                    chip: 0,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::DeadColumns {
+                        half: 1,
+                        columns: vec![3, 17],
+                    },
+                },
+                FaultSpec {
+                    chip: 2,
+                    at_us: 500,
+                    duration_us: Some(1500),
+                    kind: FaultKind::AdcSaturation { half: 0 },
+                },
+                FaultSpec {
+                    chip: 0,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::LinkCorruption { ber: 0.001 },
+                },
+                FaultSpec {
+                    chip: 1,
+                    at_us: 0,
+                    duration_us: Some(10),
+                    kind: FaultKind::FrameDrops { rate: 0.2 },
+                },
+                FaultSpec {
+                    chip: 3,
+                    at_us: 100,
+                    duration_us: None,
+                    kind: FaultKind::LatencySpike { extra_us: 5000 },
+                },
+            ],
+        };
+        let re = FaultPlan::parse(&plan.to_json()).unwrap();
+        assert_eq!(re, plan);
+    }
+
+    #[test]
+    fn strict_parse_rejects_malformed_fields() {
+        for bad in [
+            // missing faults array
+            "{\"seed\":1}",
+            // negative chip
+            "{\"faults\":[{\"kind\":\"chip_death\",\"chip\":-1,\"at_us\":0}]}",
+            // fractional at_us
+            "{\"faults\":[{\"kind\":\"chip_death\",\"chip\":0,\"at_us\":0.5}]}",
+            // unknown kind
+            "{\"faults\":[{\"kind\":\"gremlins\",\"chip\":0,\"at_us\":0}]}",
+            // rate out of range
+            "{\"faults\":[{\"kind\":\"frame_drops\",\"chip\":0,\"at_us\":0,\
+             \"rate\":1.5}]}",
+            // half out of range
+            "{\"faults\":[{\"kind\":\"adc_saturation\",\"chip\":0,\"at_us\":0,\
+             \"half\":2}]}",
+            // empty columns
+            "{\"faults\":[{\"kind\":\"dead_columns\",\"chip\":0,\"at_us\":0,\
+             \"half\":0,\"columns\":[]}]}",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // Inline load path parses objects directly.
+        let p =
+            FaultPlan::load("{\"seed\":3,\"faults\":[]}").unwrap();
+        assert_eq!(p.seed, 3);
+        assert!(p.faults.is_empty());
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic_and_bounded() {
+        let a = FaultPlan::random(42, 4, 30_000);
+        let b = FaultPlan::random(42, 4, 30_000);
+        assert_eq!(a, b, "same seed must give the same plan");
+        assert_eq!(a.to_json(), b.to_json());
+        let c = FaultPlan::random(43, 4, 30_000);
+        assert_ne!(a, c, "different seeds must differ");
+        // Never more than half the fleet with death faults.
+        for seed in 0..32u64 {
+            for chips in 1..6usize {
+                let p = FaultPlan::random(seed, chips, 30_000);
+                assert!(
+                    p.death_chips(chips) <= chips / 2,
+                    "seed {seed}, {chips} chips: too deadly"
+                );
+                for f in &p.faults {
+                    assert!(f.chip < chips);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_fleet_chips() {
+        let p = FaultPlan {
+            seed: 1,
+            faults: vec![FaultSpec {
+                chip: 4,
+                at_us: 0,
+                duration_us: None,
+                kind: FaultKind::ChipDeath,
+            }],
+        };
+        let err = p.validate_for(4).unwrap_err();
+        assert!(err.to_string().contains("targets chip 4"), "{err}");
+        assert!(p.validate_for(5).is_ok());
+        assert!(FaultPlan { seed: 0, faults: vec![] }.validate_for(1).is_ok());
+    }
+
+    #[test]
+    fn erroring_chips_counts_only_quarantinable_faults() {
+        let plan = FaultPlan {
+            seed: 2,
+            faults: vec![
+                FaultSpec {
+                    chip: 0,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::LinkCorruption { ber: 0.01 },
+                },
+                FaultSpec {
+                    chip: 1,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::FrameDrops { rate: 0.5 },
+                },
+                FaultSpec {
+                    chip: 1,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::ChipDeath,
+                },
+                FaultSpec {
+                    chip: 2,
+                    at_us: 0,
+                    duration_us: None,
+                    kind: FaultKind::LatencySpike { extra_us: 100 },
+                },
+            ],
+        };
+        assert_eq!(plan.death_chips(4), 1);
+        assert_eq!(plan.erroring_chips(4), 1, "silent/slow faults excluded");
+    }
+
+    #[test]
+    fn faults_for_filters_by_chip() {
+        let plan = FaultPlan::random(5, 4, 30_000);
+        for chip in 0..4 {
+            for f in plan.faults_for(chip) {
+                assert_eq!(f.chip, chip);
+            }
+        }
+        let total: usize = (0..4).map(|c| plan.faults_for(c).len()).sum();
+        assert_eq!(total, plan.faults.len());
+    }
+}

@@ -182,13 +182,25 @@ impl ChipHealth {
     /// Worker: job failed.  Crossing the consecutive-error threshold marks
     /// the chip unhealthy (drain + probe-only).
     pub fn record_error(&self, msg: &str) {
-        self.record_batch_error(1, msg);
+        self.record_error_event(1, msg);
     }
 
     /// Worker: a batch of `samples` failed as one engine call — the
     /// inflight slots drain, but it counts as *one* error event toward
     /// the consecutive-error threshold.
     pub fn record_batch_error(&self, samples: usize, msg: &str) {
+        self.record_error_event(samples, msg);
+    }
+
+    /// The one error-accounting primitive both paths route through: one
+    /// failed *engine call* is one error event and one strike, no matter
+    /// how many samples it carried.  Counting strikes per sample would
+    /// let a single bad 32-sample batch blow straight through any sane
+    /// `error_threshold` and kill a healthy chip on one transient fault;
+    /// counting the `errors` total per sample while striking per call
+    /// would make `fleet_stats` disagree with the state machine.  Keeping
+    /// exactly one site enforces that both tallies stay per-call.
+    fn record_error_event(&self, samples: usize, msg: &str) {
         self.inflight.fetch_sub(samples, Ordering::AcqRel);
         self.errors.fetch_add(1, Ordering::Relaxed);
         let consec = self.consecutive_errors.fetch_add(1, Ordering::AcqRel) + 1;
@@ -374,6 +386,28 @@ mod tests {
         assert_eq!(h.inflight(), 0);
         assert_eq!(h.snapshot().errors, 1);
         assert!(h.is_dispatchable(), "one batch failure is one strike");
+    }
+
+    #[test]
+    fn one_bad_batch_is_one_strike_regardless_of_size() {
+        // The error-threshold accounting is per engine *call*, not per
+        // sample: a single failed 100-sample batch must not instantly
+        // kill a chip whose threshold is 3, and the `errors` total must
+        // agree with the strike count (one event).
+        let h = ChipHealth::new(3);
+        h.begin_jobs(100);
+        h.record_batch_error(100, "one transient engine fault");
+        assert!(h.is_dispatchable(), "one bad batch is one strike");
+        assert_eq!(h.inflight(), 0, "all 100 slots drained");
+        assert_eq!(h.snapshot().errors, 1, "one event, not 100");
+        // Batch and single-sample errors carry identical weight: two
+        // more events of either shape reach the threshold together.
+        h.begin_jobs(50);
+        h.record_batch_error(50, "again");
+        h.begin_job();
+        h.record_error("and again");
+        assert_eq!(h.state(), ChipState::Unhealthy, "3 events = threshold");
+        assert_eq!(h.snapshot().errors, 3);
     }
 
     #[test]

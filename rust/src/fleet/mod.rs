@@ -32,10 +32,22 @@
 //! keeps serving.
 //!
 //! Streaming sessions (`stream_*` wire commands, DESIGN.md §11) dispatch
-//! preprocessed activation *frames* through [`Fleet::dispatch_acts`]: the
-//! FPGA-side incremental windower already ran, so the chip only executes
-//! the three analog passes.  Frames are accounted exactly like
+//! preprocessed activation *frames* through [`FleetCore::dispatch_acts`]:
+//! the FPGA-side incremental windower already ran, so the chip only
+//! executes the three analog passes.  Frames are accounted exactly like
 //! single-trace requests (one sample each).
+//!
+//! **Transparent failover** (DESIGN.md §12): a job whose engine call
+//! fails — organically or via an injected fault (`fault` subsystem,
+//! `FleetConfig::fault_plan`) — is re-dispatched by the failing worker
+//! onto the least-loaded healthy sibling, bounded by
+//! `FleetConfig::redirects` hops.  The reply channel travels with the
+//! job, so the service's ordered-reply writer delivers the eventual
+//! result in the original request order; only when the budget runs out
+//! (or no sibling is dispatchable) does the error reach the client.
+//! Chips that keep failing are quarantined (`Unhealthy`) and
+//! periodically re-probed, which is how *transient* whole-chip faults
+//! heal back into rotation.
 //!
 //! `coordinator::service` dispatches through a [`Fleet`]; `repro serve
 //! --chips N` sizes it from the CLI.
@@ -48,7 +60,7 @@ pub mod telemetry;
 pub use health::{ChipHealth, ChipHealthSnapshot, ChipState};
 pub use pool::{
     BatchDispatchOutcome, CalibReply, ChipId, ChipReply, DispatchOutcome,
-    Fleet, FleetConfig,
+    Fleet, FleetConfig, FleetCore,
 };
 pub use scheduler::ShedReason;
 pub use telemetry::{FleetTelemetry, LatencyHistogram, TelemetrySnapshot};

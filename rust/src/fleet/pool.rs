@@ -9,6 +9,36 @@
 //! chip's per-inference semantics — timing, energy, noise stream — stay
 //! bit-identical to the single-unit paper setup while aggregate
 //! throughput scales with the chip count.
+//!
+//! ## Structure: [`Fleet`] vs [`FleetCore`]
+//!
+//! The shared dispatch state (worker queues, health records, scheduler,
+//! telemetry, failover counters) lives in [`FleetCore`], an `Arc` every
+//! worker holds a clone of.  [`Fleet`] is the owning handle: it adds the
+//! join handles and drains/joins the pool on shutdown, and `Deref`s to
+//! the core so the public dispatch API reads the same as before the
+//! split.  The split exists for **transparent failover**: a worker whose
+//! engine fails a job re-dispatches that job onto a healthy sibling
+//! *itself* (bounded by [`FleetConfig::redirects`]), which requires
+//! workers to reach the dispatch surface.  The reply channel travels
+//! with the job, so the service's ordered-reply writer never notices —
+//! the reply fills the same FIFO slot whichever replica finally serves
+//! it, preserving the client's request order.
+//!
+//! Shutdown still works because the per-chip senders live in
+//! `Mutex<Option<Sender>>` slots inside the core: draining takes them
+//! out of the `Option`, closing each worker's queue even though the
+//! workers themselves keep the core alive until they exit.
+//!
+//! ## Fault injection
+//!
+//! [`FleetConfig::fault_plan`] arms a seeded [`FaultPlan`] on the
+//! replicas (each worker arms its chip's `FaultInjector` right after
+//! engine construction).  Erroring faults (chip death, frame drops)
+//! surface as engine errors: the health state machine strikes the chip
+//! (quarantine after `error_threshold` consecutive strikes, periodic
+//! re-probe for transient-fault recovery) and failover retries the job
+//! elsewhere; `fleet_stats` reports the redirect counters.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -18,6 +48,7 @@ use crate::calib::monitor::DriftMonitor;
 use crate::calib::scheduler::{RecalibPolicy, RecalibReason};
 use crate::coordinator::engine::{Engine, Inference};
 use crate::ecg::gen::Trace;
+use crate::fault::{FaultInjector, FaultPlan, FAULT_TAG};
 
 use super::health::{ChipHealth, ChipHealthSnapshot};
 use super::scheduler::{Scheduler, ShedReason};
@@ -45,7 +76,7 @@ pub struct FleetConfig {
     /// drains one aged/degraded replica at a time into
     /// `ChipState::Calibrating` while the rest keep serving.  `None`
     /// disables automatic recalibration (manual
-    /// [`Fleet::recalibrate_chip`] still works).
+    /// [`FleetCore::recalibrate_chip`] still works).
     pub recalib: Option<RecalibPolicy>,
     /// Whether the wire `shutdown` command may stop the whole service.
     /// Off by default: any TCP client being able to kill the fleet is an
@@ -58,6 +89,14 @@ pub struct FleetConfig {
     /// `max_connections + 1` gets an explicit accept-time shed reply
     /// instead of a handler thread.
     pub max_connections: usize,
+    /// Transparent-failover budget: how many times one failed job may be
+    /// redirected onto another healthy replica before its error is
+    /// answered to the client.  0 disables failover (every engine error
+    /// reaches the client, the pre-failover behaviour).
+    pub redirects: u32,
+    /// Deterministic fault schedule armed on the simulated hardware
+    /// (`fault` subsystem; `repro serve --fault-plan`, `repro chaos`).
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for FleetConfig {
@@ -70,6 +109,8 @@ impl Default for FleetConfig {
             recalib: None,
             allow_remote_shutdown: false,
             max_connections: 256,
+            redirects: 2,
+            fault_plan: None,
         }
     }
 }
@@ -92,6 +133,8 @@ enum ChipJob {
         traces: Vec<Trace>,
         admitted: Instant,
         resp: mpsc::Sender<ChipReply>,
+        /// Remaining transparent-failover budget for this job.
+        redirects_left: u32,
     },
     /// One preprocessed activation frame (`Engine::classify_acts`) — the
     /// streaming path: the FPGA-side incremental windower already ran, so
@@ -100,13 +143,16 @@ enum ChipJob {
         acts: Vec<i32>,
         admitted: Instant,
         resp: mpsc::Sender<ChipReply>,
+        /// Remaining transparent-failover budget for this frame.
+        redirects_left: u32,
     },
     /// Full-chip recalibration (`Engine::recalibrate`): measure, apply,
     /// re-admit.  `resp` is optional — policy-triggered recalibrations
     /// are fire-and-forget, manual ones want the summary back.
     /// `drain_token` is the pool-level one-at-a-time latch, held by both
     /// the policy and manual trigger paths; the worker releases it when
-    /// the measurement finishes.
+    /// the measurement finishes.  Never redirected: the measurement is
+    /// meaningful only on the drained chip itself.
     Calibrate {
         reps: usize,
         reason: RecalibReason,
@@ -118,8 +164,12 @@ enum ChipJob {
 /// Worker's answer to one job: one `Inference` per admitted sample.
 #[derive(Debug)]
 pub struct ChipReply {
+    /// The chip that finally *served* (or terminally failed) the job —
+    /// under failover this may differ from the chip the job was
+    /// originally admitted to.
     pub chip: ChipId,
-    /// Host latency from admission to completion [µs].
+    /// Host latency from admission to completion [µs] (includes any
+    /// failover hops).
     pub host_latency_us: f64,
     pub result: Result<Vec<Inference>, String>,
 }
@@ -160,12 +210,24 @@ pub enum BatchDispatchOutcome {
 
 struct ChipHandle {
     tx: Mutex<Option<mpsc::Sender<ChipJob>>>,
-    join: Option<std::thread::JoinHandle<()>>,
 }
 
-/// The running fleet: replicas + scheduler + telemetry.  `Fleet` is
-/// `Sync`; share it across connection handlers with an `Arc`.
-pub struct Fleet {
+/// Failover accounting (all `fleet_stats` fields).
+#[derive(Default)]
+struct FailoverStats {
+    /// Jobs successfully moved onto another replica after a failure.
+    redirects: AtomicU64,
+    /// Jobs whose failure reached the client because the redirect budget
+    /// ran out or no other replica was dispatchable.
+    exhausted: AtomicU64,
+    /// Engine errors carrying the injected-fault tag (`fault` subsystem).
+    injected: AtomicU64,
+}
+
+/// The shared dispatch surface: everything the workers, the connection
+/// handlers, and the failover path need.  [`Fleet`] (the owning handle)
+/// `Deref`s here, so `fleet.dispatch(..)` etc. keep working unchanged.
+pub struct FleetCore {
     handles: Vec<ChipHandle>,
     health: Vec<Arc<ChipHealth>>,
     /// Per-chip logit-margin monitors feeding the recalibration policy.
@@ -184,6 +246,24 @@ pub struct Fleet {
     /// Admissions refused at the transport layer (dead worker channels);
     /// scheduler-level sheds are counted separately.
     transport_rejects: AtomicU64,
+    /// Per-job transparent-failover budget (`FleetConfig::redirects`).
+    redirects_budget: u32,
+    failover: FailoverStats,
+}
+
+/// The running fleet: the shared core plus worker-thread ownership.
+/// `Fleet` is `Sync`; share it across connection handlers with an `Arc`.
+pub struct Fleet {
+    core: Arc<FleetCore>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl std::ops::Deref for Fleet {
+    type Target = FleetCore;
+
+    fn deref(&self) -> &FleetCore {
+        &self.core
+    }
 }
 
 impl Fleet {
@@ -196,38 +276,68 @@ impl Fleet {
         F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
     {
         anyhow::ensure!(cfg.chips >= 1, "fleet needs at least one chip");
+        if let Some(plan) = &cfg.fault_plan {
+            // Fail loudly on a plan naming chips this fleet doesn't
+            // have — silently arming nothing would fake resilience.
+            plan.validate_for(cfg.chips)?;
+        }
         let make = Arc::new(make_engine);
-        let telemetry = Arc::new(FleetTelemetry::new(cfg.chips));
+        let plan = cfg.fault_plan.clone().map(Arc::new);
         let mut handles = Vec::with_capacity(cfg.chips);
         let mut health = Vec::with_capacity(cfg.chips);
         let mut monitors = Vec::with_capacity(cfg.chips);
-        let (ack_tx, ack_rx) = mpsc::channel::<(ChipId, Result<(), String>)>();
-
-        for chip in 0..cfg.chips {
+        let mut rxs = Vec::with_capacity(cfg.chips);
+        for _ in 0..cfg.chips {
             let (tx, rx) = mpsc::channel::<ChipJob>();
-            let h = Arc::new(ChipHealth::new(cfg.error_threshold));
-            let m = Arc::new(DriftMonitor::new(MONITOR_ALPHA));
-            let worker_health = h.clone();
-            let worker_monitor = m.clone();
-            let worker_tel = telemetry.clone();
+            handles.push(ChipHandle { tx: Mutex::new(Some(tx)) });
+            rxs.push(rx);
+            health.push(Arc::new(ChipHealth::new(cfg.error_threshold)));
+            monitors.push(Arc::new(DriftMonitor::new(MONITOR_ALPHA)));
+        }
+        let core = Arc::new(FleetCore {
+            handles,
+            health,
+            monitors,
+            telemetry: Arc::new(FleetTelemetry::new(cfg.chips)),
+            scheduler: Scheduler::new(cfg.queue_depth, cfg.probe_period),
+            recalib: cfg.recalib.clone(),
+            policy_drain: Arc::new(AtomicBool::new(false)),
+            transport_rejects: AtomicU64::new(0),
+            redirects_budget: cfg.redirects,
+            failover: FailoverStats::default(),
+        });
+
+        let (ack_tx, ack_rx) = mpsc::channel::<(ChipId, Result<(), String>)>();
+        let mut joins = Vec::with_capacity(cfg.chips);
+        for (chip, rx) in rxs.into_iter().enumerate() {
+            let worker_core = core.clone();
             let worker_make = make.clone();
+            let worker_plan = plan.clone();
             let worker_ack = ack_tx.clone();
-            let join = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name(format!("bss2-chip-{chip}"))
                 .spawn(move || {
                     chip_worker(
                         chip,
                         rx,
+                        worker_core,
                         worker_make,
-                        worker_health,
-                        worker_monitor,
-                        worker_tel,
+                        worker_plan,
                         worker_ack,
                     )
-                })?;
-            handles.push(ChipHandle { tx: Mutex::new(Some(tx)), join: Some(join) });
-            health.push(h);
-            monitors.push(m);
+                });
+            match spawned {
+                Ok(j) => joins.push(j),
+                Err(e) => {
+                    // Unwind the partial pool: close every queue so the
+                    // already-spawned workers exit, then join them.
+                    core.close_channels();
+                    for j in joins {
+                        let _ = j.join();
+                    }
+                    return Err(e.into());
+                }
+            }
         }
         drop(ack_tx);
 
@@ -245,16 +355,7 @@ impl Fleet {
                 }
             }
         }
-        let mut fleet = Fleet {
-            handles,
-            health,
-            monitors,
-            telemetry,
-            scheduler: Scheduler::new(cfg.queue_depth, cfg.probe_period),
-            recalib: cfg.recalib.clone(),
-            policy_drain: Arc::new(AtomicBool::new(false)),
-            transport_rejects: AtomicU64::new(0),
-        };
+        let mut fleet = Fleet { core, joins };
         if ok == 0 {
             fleet.shutdown_inner();
             anyhow::bail!(
@@ -267,6 +368,35 @@ impl Fleet {
             log::warn!("fleet: {ok} of {} chips healthy at start", cfg.chips);
         }
         Ok(fleet)
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Dropping the senders closes the worker queues; queued jobs
+        // still drain before the threads exit.  The workers' own core
+        // clones keep the (now senderless) core alive until they return.
+        self.core.close_channels();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+
+    /// Drain and join all replicas.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl FleetCore {
+    fn close_channels(&self) {
+        for h in &self.handles {
+            h.tx.lock().unwrap().take();
+        }
     }
 
     /// Admit one trace, or shed it.  Non-blocking: the reply arrives on
@@ -324,6 +454,7 @@ impl Fleet {
                 acts,
                 admitted: Instant::now(),
                 resp: rtx,
+                redirects_left: self.redirects_budget,
             };
             match self.try_send(chip, job) {
                 Ok(()) => return DispatchOutcome::Enqueued { chip, resp: rrx },
@@ -380,6 +511,7 @@ impl Fleet {
                 traces,
                 admitted: Instant::now(),
                 resp: rtx,
+                redirects_left: self.redirects_budget,
             };
             match self.try_send(chip, job) {
                 Ok(()) => {
@@ -477,6 +609,100 @@ impl Fleet {
             .count()
             .max(1);
         (per * ((inflight / lanes) as f64 + 1.0)).max(1.0) as u64
+    }
+
+    // --- transparent failover ----------------------------------------------
+
+    /// The replacement replica for a job that failed on `exclude`: the
+    /// least-loaded dispatchable chip other than the failing one
+    /// (lowest index on ties — deterministic, and no admission tick is
+    /// consumed, so client-visible scheduling is unaffected).
+    fn pick_failover(&self, exclude: ChipId) -> Option<ChipId> {
+        let mut best: Option<(usize, ChipId)> = None;
+        for (i, h) in self.health.iter().enumerate() {
+            if i == exclude || !h.is_dispatchable() {
+                continue;
+            }
+            let load = h.inflight();
+            if best.map(|(bl, _)| load < bl).unwrap_or(true) {
+                best = Some((load, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Move a failed (or undeliverable) job onto another replica.
+    /// Returns the job back when the redirect budget is exhausted, the
+    /// job is not redirectable (`Calibrate`), or no other replica is
+    /// dispatchable — the caller then answers the client with the error.
+    ///
+    /// Redirected jobs bypass the queue-depth bound on purpose: the job
+    /// was already admitted once (its original slot drained with the
+    /// failure), so placing it adds no *net* load — shedding it here
+    /// would turn an internal fault into a client-visible failure the
+    /// budget was meant to absorb.
+    fn redirect(&self, from: ChipId, mut job: ChipJob) -> Result<(), ChipJob> {
+        if matches!(job, ChipJob::Calibrate { .. }) {
+            // A measurement is only meaningful on the drained chip
+            // itself — never redirected, and not a failover event.
+            return Err(job);
+        }
+        let exhausted = match &mut job {
+            ChipJob::Classify { redirects_left, .. }
+            | ChipJob::ClassifyActs { redirects_left, .. } => {
+                if *redirects_left == 0 {
+                    true
+                } else {
+                    *redirects_left -= 1;
+                    false
+                }
+            }
+            ChipJob::Calibrate { .. } => unreachable!("checked above"),
+        };
+        if exhausted {
+            self.failover.exhausted.fetch_add(1, Ordering::Relaxed);
+            return Err(job);
+        }
+        let samples = match &job {
+            ChipJob::Classify { traces, .. } => traces.len(),
+            _ => 1,
+        };
+        loop {
+            let Some(target) = self.pick_failover(from) else {
+                self.failover.exhausted.fetch_add(1, Ordering::Relaxed);
+                return Err(job);
+            };
+            self.health[target].begin_jobs(samples);
+            match self.try_send(target, job) {
+                Ok(()) => {
+                    self.failover.redirects.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(j) => {
+                    // Target's worker is gone (try_send marked it dead):
+                    // undo the admission and scan for the next candidate.
+                    self.health[target]
+                        .record_batch_error(samples, "worker channel closed");
+                    job = j;
+                }
+            }
+        }
+    }
+
+    /// Jobs transparently moved onto another replica after a failure.
+    pub fn redirect_count(&self) -> u64 {
+        self.failover.redirects.load(Ordering::Relaxed)
+    }
+
+    /// Failures that reached a client because the redirect budget ran
+    /// out or no other replica was dispatchable.
+    pub fn redirects_exhausted_count(&self) -> u64 {
+        self.failover.exhausted.load(Ordering::Relaxed)
+    }
+
+    /// Engine errors tagged as injected faults (`fault` subsystem).
+    pub fn injected_fault_errors(&self) -> u64 {
+        self.failover.injected.load(Ordering::Relaxed)
     }
 
     // --- recalibration (drain -> calibrate -> re-admit) --------------------
@@ -659,7 +885,8 @@ impl Fleet {
         let mut s = format!(
             "{{\"ok\":true,\"chips\":{},\"healthy\":{},\"calibrating\":{},\
              \"recalibrations\":{},\"served\":{},\
-             \"shed\":{},\"mean_host_us\":{:.1},\"p50_us\":{:.1},\
+             \"shed\":{},\"redirects\":{},\"redirects_exhausted\":{},\
+             \"fault_errors\":{},\"mean_host_us\":{:.1},\"p50_us\":{:.1},\
              \"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_sim_time_us\":{:.3},\
              \"per_chip\":[",
             self.size(),
@@ -668,6 +895,9 @@ impl Fleet {
             self.recalibration_count(),
             t.served,
             self.shed_count(),
+            self.redirect_count(),
+            self.redirects_exhausted_count(),
+            self.injected_fault_errors(),
             t.mean_host_us,
             t.p50_us,
             t.p95_us,
@@ -697,50 +927,66 @@ impl Fleet {
         s.push_str("]}");
         s
     }
-
-    fn shutdown_inner(&mut self) {
-        for h in &self.handles {
-            // Dropping the sender closes the worker's queue; queued jobs
-            // still drain before the thread exits.
-            h.tx.lock().unwrap().take();
-        }
-        for h in &mut self.handles {
-            if let Some(j) = h.join.take() {
-                let _ = j.join();
-            }
-        }
-    }
-
-    /// Drain and join all replicas.
-    pub fn shutdown(mut self) {
-        self.shutdown_inner();
-    }
 }
 
-impl Drop for Fleet {
-    fn drop(&mut self) {
-        self.shutdown_inner();
+/// Answer a job the failover path could not place anywhere (the terminal
+/// error path — the client must hear *something*, never silence).
+fn answer_failed(chip: ChipId, job: ChipJob, msg: &str) {
+    match job {
+        ChipJob::Classify { admitted, resp, .. }
+        | ChipJob::ClassifyActs { admitted, resp, .. } => {
+            let _ = resp.send(ChipReply {
+                chip,
+                host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
+                result: Err(format!("chip {chip}: {msg}")),
+            });
+        }
+        ChipJob::Calibrate { reason, resp, drain_token, .. } => {
+            if let Some(t) = drain_token {
+                t.store(false, Ordering::Release);
+            }
+            if let Some(resp) = resp {
+                let _ = resp.send(CalibReply {
+                    chip,
+                    reason,
+                    result: Err(format!("chip {chip}: {msg}")),
+                });
+            }
+        }
     }
 }
 
 fn chip_worker<F>(
     chip: ChipId,
     rx: mpsc::Receiver<ChipJob>,
+    core: Arc<FleetCore>,
     make_engine: Arc<F>,
-    health: Arc<ChipHealth>,
-    monitor: Arc<DriftMonitor>,
-    telemetry: Arc<FleetTelemetry>,
+    plan: Option<Arc<FaultPlan>>,
     ack: mpsc::Sender<(ChipId, Result<(), String>)>,
 ) where
     F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
 {
+    let health = core.health[chip].clone();
+    let monitor = core.monitors[chip].clone();
+    let telemetry = core.telemetry.clone();
     let mut engine = match make_engine(chip) {
-        Ok(e) => {
+        Ok(mut e) => {
             // Record backend capability *before* acking, so once
             // `Fleet::start` returns the recalibration policy can already
             // see which replicas are exempt.
             if !e.supports_recalibration() {
                 health.set_calib_incapable();
+            }
+            // Arm this chip's slice of the fault plan (after capability,
+            // before serving: the first program can already be faulted).
+            if let Some(plan) = plan.as_deref() {
+                if let Some(inj) = FaultInjector::from_plan(plan, chip) {
+                    log::info!(
+                        "chip {chip}: armed {} injected fault(s)",
+                        plan.faults_for(chip).len()
+                    );
+                    e.arm_faults(inj);
+                }
             }
             let _ = ack.send((chip, Ok(())));
             drop(ack);
@@ -750,49 +996,25 @@ fn chip_worker<F>(
             health.mark_dead(&format!("engine init: {e}"));
             let _ = ack.send((chip, Err(e.to_string())));
             drop(ack);
-            // Drain with error replies so racing clients never hang.
+            // Drain with failover (or error replies) so racing clients
+            // never hang on a chip that never came up.
             while let Ok(job) = rx.recv() {
-                match job {
-                    ChipJob::Classify { traces, admitted, resp } => {
+                match &job {
+                    ChipJob::Classify { traces, .. } => {
                         health.record_batch_error(
                             traces.len(),
                             "engine init failed",
                         );
-                        let _ = resp.send(ChipReply {
-                            chip,
-                            host_latency_us: admitted.elapsed().as_secs_f64()
-                                * 1e6,
-                            result: Err(format!(
-                                "chip {chip}: engine init failed"
-                            )),
-                        });
                     }
-                    ChipJob::ClassifyActs { admitted, resp, .. } => {
+                    ChipJob::ClassifyActs { .. } => {
                         health.record_batch_error(1, "engine init failed");
-                        let _ = resp.send(ChipReply {
-                            chip,
-                            host_latency_us: admitted.elapsed().as_secs_f64()
-                                * 1e6,
-                            result: Err(format!(
-                                "chip {chip}: engine init failed"
-                            )),
-                        });
                     }
-                    ChipJob::Calibrate { reason, resp, drain_token, .. } => {
+                    ChipJob::Calibrate { .. } => {
                         health.fail_calibration("engine init failed");
-                        if let Some(resp) = resp {
-                            let _ = resp.send(CalibReply {
-                                chip,
-                                reason,
-                                result: Err(format!(
-                                    "chip {chip}: engine init failed"
-                                )),
-                            });
-                        }
-                        if let Some(t) = drain_token {
-                            t.store(false, Ordering::Release);
-                        }
                     }
+                }
+                if let Err(job) = core.redirect(chip, job) {
+                    answer_failed(chip, job, "engine init failed");
                 }
             }
             return;
@@ -801,12 +1023,12 @@ fn chip_worker<F>(
 
     while let Ok(job) = rx.recv() {
         match job {
-            ChipJob::Classify { traces, admitted, resp } => {
+            ChipJob::Classify { traces, admitted, resp, redirects_left } => {
                 let samples = traces.len();
                 // One engine program per job: a 1-batch is bit-identical
                 // to the legacy single-trace path, larger batches amortise
                 // weight reconfiguration (Engine::classify_batch).
-                let result = match engine.classify_batch(&traces) {
+                match engine.classify_batch(&traces) {
                     Ok(infs) => {
                         let host_us = admitted.elapsed().as_secs_f64() * 1e6;
                         let mut total_sim_ns = 0u64;
@@ -818,27 +1040,44 @@ fn chip_worker<F>(
                         }
                         health.record_batch_success(samples, total_sim_ns);
                         health.set_chip_time_us(engine.chip_time_us());
-                        Ok(infs)
+                        // The client may have given up; a closed reply
+                        // channel is fine.
+                        let _ = resp.send(ChipReply {
+                            chip,
+                            host_latency_us: host_us,
+                            result: Ok(infs),
+                        });
                     }
                     Err(e) => {
                         let msg = e.to_string();
+                        if msg.starts_with(FAULT_TAG) {
+                            core.failover
+                                .injected
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
                         health.record_batch_error(samples, &msg);
-                        Err(format!("chip {chip}: {msg}"))
+                        health.set_chip_time_us(engine.chip_time_us());
+                        // Transparent failover: hand the whole job to a
+                        // healthy sibling; the reply channel travels with
+                        // it, so the client's ordered-reply slot is
+                        // filled by whichever replica finally serves.
+                        let job = ChipJob::Classify {
+                            traces,
+                            admitted,
+                            resp,
+                            redirects_left,
+                        };
+                        if let Err(job) = core.redirect(chip, job) {
+                            answer_failed(chip, job, &msg);
+                        }
                     }
-                };
-                // The client may have given up; a closed reply channel is
-                // fine.
-                let _ = resp.send(ChipReply {
-                    chip,
-                    host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
-                    result,
-                });
+                }
             }
-            ChipJob::ClassifyActs { acts, admitted, resp } => {
+            ChipJob::ClassifyActs { acts, admitted, resp, redirects_left } => {
                 // One activation frame from the streaming frontend: the
                 // chip runs the three analog passes; preprocessing
                 // already happened incrementally on the FPGA side.
-                let result = match engine.classify_acts(&acts) {
+                match engine.classify_acts(&acts) {
                     Ok(inf) => {
                         let host_us = admitted.elapsed().as_secs_f64() * 1e6;
                         let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
@@ -846,19 +1085,35 @@ fn chip_worker<F>(
                         monitor.record_scores(&inf.scores);
                         health.record_batch_success(1, sim_ns);
                         health.set_chip_time_us(engine.chip_time_us());
-                        Ok(vec![inf])
+                        let _ = resp.send(ChipReply {
+                            chip,
+                            host_latency_us: host_us,
+                            result: Ok(vec![inf]),
+                        });
                     }
                     Err(e) => {
                         let msg = e.to_string();
+                        if msg.starts_with(FAULT_TAG) {
+                            core.failover
+                                .injected
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
                         health.record_batch_error(1, &msg);
-                        Err(format!("chip {chip}: {msg}"))
+                        health.set_chip_time_us(engine.chip_time_us());
+                        // In-flight stream windows are re-dispatched, not
+                        // dropped: the window's result line still arrives
+                        // (in order) from the replacement replica.
+                        let job = ChipJob::ClassifyActs {
+                            acts,
+                            admitted,
+                            resp,
+                            redirects_left,
+                        };
+                        if let Err(job) = core.redirect(chip, job) {
+                            answer_failed(chip, job, &msg);
+                        }
                     }
-                };
-                let _ = resp.send(ChipReply {
-                    chip,
-                    host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
-                    result,
-                });
+                }
             }
             ChipJob::Calibrate { reps, reason, resp, drain_token } => {
                 // The FIFO queue already drained everything admitted
@@ -891,5 +1146,235 @@ fn chip_worker<F>(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::fault::{FaultKind, FaultSpec};
+    use crate::nn::weights::TrainedModel;
+
+    fn native_cfg(chip: usize) -> EngineConfig {
+        EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() }
+            .for_chip(chip)
+    }
+
+    fn fleet_with(cfg: FleetConfig) -> Fleet {
+        Fleet::start(cfg, |chip| {
+            Ok(Engine::native(TrainedModel::synthetic(0xF1EE7), native_cfg(chip)))
+        })
+        .unwrap()
+    }
+
+    /// A plan that kills `chip` from t = 0, permanently.
+    fn death_plan(chip: usize) -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            faults: vec![FaultSpec {
+                chip,
+                at_us: 0,
+                duration_us: None,
+                kind: FaultKind::ChipDeath,
+            }],
+        }
+    }
+
+    #[test]
+    fn failover_redirects_failed_jobs_transparently() {
+        // Chip 1 is dead-on-arrival (fault-injected).  Every request must
+        // still succeed — jobs landing on chip 1 fail there and are
+        // transparently re-dispatched onto a healthy sibling.
+        let fleet = fleet_with(FleetConfig {
+            chips: 2,
+            queue_depth: 16,
+            redirects: 2,
+            fault_plan: Some(death_plan(1)),
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(11, true, 1.0);
+        for _ in 0..8 {
+            let (served_by, inf) = fleet.classify_blocking(&trace).unwrap();
+            assert_eq!(served_by, 0, "only chip 0 can actually serve");
+            assert!(inf.pred <= 1);
+        }
+        assert!(
+            fleet.redirect_count() >= 1,
+            "chip 1 must have been picked and failed over at least once"
+        );
+        assert!(fleet.injected_fault_errors() >= 1);
+        assert_eq!(fleet.redirects_exhausted_count(), 0);
+        // Chip 1 earned strikes and is quarantined by now or soon.
+        let errors1 = fleet.chip_snapshots()[1].errors;
+        assert!(errors1 >= 1, "the faulty chip recorded its failures");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn fault_plan_naming_missing_chips_fails_start() {
+        // A typo'd plan (say, 1-based chip index) must fail the fleet
+        // loudly instead of silently arming nothing — a chaos run over
+        // an unarmed fleet would fake resilience.
+        let err = Fleet::start(
+            FleetConfig {
+                chips: 2,
+                fault_plan: Some(death_plan(2)),
+                ..Default::default()
+            },
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    native_cfg(chip),
+                ))
+            },
+        )
+        .err()
+        .expect("must fail");
+        assert!(err.to_string().contains("targets chip 2"), "{err}");
+    }
+
+    #[test]
+    fn failover_budget_zero_surfaces_errors() {
+        // redirects = 0 restores the pre-failover contract: the engine
+        // error reaches the client.
+        let fleet = fleet_with(FleetConfig {
+            chips: 2,
+            queue_depth: 16,
+            redirects: 0,
+            fault_plan: Some(death_plan(0)),
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(12, false, 1.0);
+        let mut saw_error = false;
+        for _ in 0..4 {
+            if let Err(e) = fleet.classify_blocking(&trace) {
+                assert!(e.to_string().contains("fault:"), "{e}");
+                saw_error = true;
+            }
+        }
+        assert!(saw_error, "with a zero budget some error must surface");
+        assert_eq!(fleet.redirect_count(), 0);
+        assert!(fleet.redirects_exhausted_count() >= 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn single_chip_fleet_exhausts_instead_of_hanging() {
+        // No sibling to fail over to: the error must reach the client
+        // (never silence), and the exhaustion is counted.
+        let fleet = fleet_with(FleetConfig {
+            chips: 1,
+            queue_depth: 8,
+            redirects: 3,
+            fault_plan: Some(death_plan(0)),
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(13, true, 1.0);
+        let err = fleet.classify_blocking(&trace).unwrap_err();
+        assert!(err.to_string().contains("fault:"), "{err}");
+        assert!(fleet.redirects_exhausted_count() >= 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn transient_death_quarantines_then_recovers_via_probes() {
+        // Chip 1 dies at t = 0 for 1200 µs of chip time.  Each failed
+        // attempt consumes chip time (the host's timeout), so after
+        // enough re-admission probes the chip crosses the window and a
+        // probe succeeds, re-admitting it.
+        let fleet = Fleet::start(
+            FleetConfig {
+                chips: 2,
+                queue_depth: 8,
+                error_threshold: 2,
+                probe_period: 4,
+                redirects: 2,
+                fault_plan: Some(FaultPlan {
+                    seed: 3,
+                    faults: vec![FaultSpec {
+                        chip: 1,
+                        at_us: 0,
+                        duration_us: Some(1200),
+                        kind: FaultKind::ChipDeath,
+                    }],
+                }),
+                ..Default::default()
+            },
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    native_cfg(chip),
+                ))
+            },
+        )
+        .unwrap();
+        let trace = crate::ecg::gen::generate_trace(14, false, 1.0);
+        let mut chip1_served = false;
+        // Sequential requests: every one must succeed (failover hides
+        // the fault); eventually a probe lands past the window and chip 1
+        // serves again.
+        for _ in 0..120 {
+            let (chip, _) = fleet.classify_blocking(&trace).unwrap();
+            if chip == 1 {
+                chip1_served = true;
+                break;
+            }
+        }
+        assert!(chip1_served, "transient fault must heal via probes");
+        assert_eq!(fleet.healthy_count(), 2, "chip 1 re-admitted");
+        assert!(fleet.redirect_count() >= 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn init_failed_chip_redirects_raced_jobs() {
+        // answer_failed / redirect on the init-failure drain path: jobs
+        // racing the death of a chip still get answered (via a sibling).
+        let fleet = Fleet::start(
+            FleetConfig { chips: 2, queue_depth: 8, ..Default::default() },
+            |chip| {
+                anyhow::ensure!(chip != 1, "chip 1 substrate missing");
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    native_cfg(chip),
+                ))
+            },
+        )
+        .unwrap();
+        assert_eq!(fleet.healthy_count(), 1);
+        let trace = crate::ecg::gen::generate_trace(15, true, 1.0);
+        for _ in 0..4 {
+            let (chip, _) = fleet.classify_blocking(&trace).unwrap();
+            assert_eq!(chip, 0);
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn stats_json_reports_failover_counters() {
+        let fleet = fleet_with(FleetConfig {
+            chips: 2,
+            queue_depth: 8,
+            redirects: 2,
+            fault_plan: Some(death_plan(1)),
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(16, false, 1.0);
+        for _ in 0..6 {
+            fleet.classify_blocking(&trace).unwrap();
+        }
+        let j = crate::util::json::Json::parse(&fleet.stats_json()).unwrap();
+        assert_eq!(j.get("ok"), Some(&crate::util::json::Json::Bool(true)));
+        let redirects =
+            j.get("redirects").and_then(|v| v.as_uint()).unwrap();
+        assert_eq!(redirects, fleet.redirect_count());
+        assert!(redirects >= 1, "{j}");
+        assert!(j.get("fault_errors").and_then(|v| v.as_uint()).unwrap() >= 1);
+        assert_eq!(
+            j.get("redirects_exhausted").and_then(|v| v.as_uint()),
+            Some(0)
+        );
+        fleet.shutdown();
     }
 }

@@ -84,10 +84,15 @@ pub struct DmaStats {
     pub transfers: u64,
     pub bytes: u64,
     pub time_ns: f64,
+    /// Descriptor transfers whose frame was lost (fault injection): the
+    /// descriptor round trip was paid but no data reached the fabric.
+    pub drops: u64,
 }
 
 pub struct DmaController {
     pub stats: DmaStats,
+    /// Armed by the fault injector: the next descriptor loses its frame.
+    drop_next: bool,
 }
 
 impl Default for DmaController {
@@ -98,7 +103,15 @@ impl Default for DmaController {
 
 impl DmaController {
     pub fn new() -> DmaController {
-        DmaController { stats: DmaStats::default() }
+        DmaController { stats: DmaStats::default(), drop_next: false }
+    }
+
+    /// Arm a frame drop: the next [`run`](DmaController::run) loses its
+    /// frame (counted in [`DmaStats::drops`]), after which transfers are
+    /// clean again.  The engine aborts the program when it sees a drop —
+    /// a partial activation vector must never reach the chip silently.
+    pub fn inject_drop(&mut self) {
+        self.drop_next = true;
     }
 
     /// Execute a descriptor: stream samples from DRAM through the
@@ -109,6 +122,15 @@ impl DmaController {
         desc: Descriptor,
         pp: &mut StreamingPreprocessor,
     ) {
+        if self.drop_next {
+            // Frame lost in flight: the descriptor round trip is paid,
+            // nothing reaches the preprocessor, the drop is counted.
+            self.drop_next = false;
+            self.stats.transfers += 1;
+            self.stats.drops += 1;
+            self.stats.time_ns += DRAM_LATENCY_NS;
+            return;
+        }
         let samples = dram.read_samples(desc.src_addr, desc.n_samples);
         pp.push_channel(&samples);
         let bytes = desc.n_samples as u64 * 2;
@@ -170,6 +192,27 @@ mod tests {
         dma.run(&mut dram, Descriptor { src_addr: 0, n_samples: 4096 }, &mut pp);
         let t2 = dma.stats.time_ns - t1;
         assert!(t2 > t1);
+    }
+
+    #[test]
+    fn injected_drop_loses_exactly_one_frame() {
+        let mut dram = Dram::default();
+        dram.write_samples(0x1000, &vec![2048u16; c::ECG_WINDOW]);
+        let mut dma = DmaController::new();
+        let mut pp = StreamingPreprocessor::new();
+        let desc = Descriptor { src_addr: 0x1000, n_samples: c::ECG_WINDOW };
+        dma.inject_drop();
+        dma.run(&mut dram, desc, &mut pp);
+        // The dropped frame never reached the fabric; no bytes counted.
+        assert_eq!(pp.out.len(), 0);
+        assert_eq!(dma.stats.drops, 1);
+        assert_eq!(dma.stats.bytes, 0);
+        assert!(dma.stats.time_ns > 0.0, "the round trip is still paid");
+        // The very next transfer is clean again.
+        dma.run(&mut dram, desc, &mut pp);
+        assert_eq!(pp.out.len(), c::POOLED_LEN);
+        assert_eq!(dma.stats.drops, 1);
+        assert_eq!(dma.stats.bytes, c::ECG_WINDOW as u64 * 2);
     }
 
     #[test]

@@ -40,7 +40,23 @@ pub struct LinkLayer {
 
 impl LinkLayer {
     pub fn new(cfg: LinkConfig) -> LinkLayer {
-        LinkLayer { cfg, stats: LinkStats::default(), rng: crate::util::rng::SplitMix64::new(0xBEEF) }
+        Self::with_seed(cfg, 0xBEEF)
+    }
+
+    /// A link with its own corruption stream — the fault injector seeds
+    /// one per chip so corrupted-bit positions are decorrelated across
+    /// replicas yet bit-identical per (plan seed, chip, burst sequence).
+    pub fn with_seed(cfg: LinkConfig, seed: u64) -> LinkLayer {
+        LinkLayer {
+            cfg,
+            stats: LinkStats::default(),
+            rng: crate::util::rng::SplitMix64::new(seed),
+        }
+    }
+
+    /// Adjust the bit-error rate mid-flight (fault windows open/close).
+    pub fn set_ber(&mut self, ber: f64) {
+        self.cfg.ber = ber;
     }
 
     /// Transfer an event burst; returns the events that survived the link

@@ -17,7 +17,12 @@
 //! * [`nn`] — weights, logical->physical mapping, graph + partitioner.
 //! * [`coordinator`] — standalone inference engine, batch runner, service.
 //! * [`fleet`] — multi-chip scheduler: N engine replicas behind one
-//!   least-loaded dispatcher with health tracking and backpressure.
+//!   least-loaded dispatcher with health tracking, backpressure, and
+//!   transparent failover of failed jobs onto healthy replicas.
+//! * [`fault`] — deterministic fault injection: seeded, chip-time-driven
+//!   schedules of hardware faults (dead columns, ADC saturation, link
+//!   corruption, frame drops, latency spikes, chip death) armed on the
+//!   simulated hardware for chaos/soak testing (`repro chaos`).
 //! * [`ecg`] — synthetic ECG: windowed generator, continuous
 //!   episode-labeled stream source, binary dataset reader.
 //! * [`baselines`] — comparison platforms of paper §V.
@@ -28,6 +33,7 @@ pub mod baselines;
 pub mod calib;
 pub mod coordinator;
 pub mod ecg;
+pub mod fault;
 pub mod fleet;
 pub mod fpga;
 pub mod nn;

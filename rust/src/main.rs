@@ -37,6 +37,7 @@ fn main() {
         "baselines" => baselines_cmd(&args),
         "classify" => classify(&args),
         "calibrate" => calibrate(&args),
+        "chaos" => chaos(&args),
         "serve" => serve(&args),
         "monitor" => monitor(&args),
         "snn" => snn(&args),
@@ -79,6 +80,13 @@ COMMANDS:
                                             through a stream_open/push/close
                                             session and reports per-window
                                             results + afib detection latency
+  chaos        seeded fault-injection soak (--chips 4 --seed 1 --requests 240
+                                            --redirects 2 --fault-plan FILE):
+                                            drives classify/batch/stream
+                                            traffic into a fleet with faults
+                                            armed and prints a deterministic
+                                            survival report (same seed =
+                                            byte-identical report)
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
 
 OPTIONS (common):
@@ -102,6 +110,12 @@ OPTIONS (common):
   --allow-remote-shutdown
                     serve: honour the wire `shutdown` command (default
                     off — an open port must not be a kill switch)
+  --fault-plan P    serve/chaos: arm a fault schedule on the simulated
+                    hardware — a JSON file path or an inline JSON object
+                    (see DESIGN.md §12 for the format)
+  --redirects K     serve/chaos: transparent-failover budget — how often
+                    one failed job may be retried on a healthy replica
+                    before its error reaches the client (default 2)
 ";
 
 fn env_logger_init() {
@@ -533,6 +547,13 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         // double as an unauthenticated kill switch.
         allow_remote_shutdown: args.flag("allow-remote-shutdown"),
         max_connections: args.usize_or("max-conns", 256)?.max(1),
+        redirects: args.usize_or("redirects", 2)? as u32,
+        // Deterministic fault injection on the simulated hardware (the
+        // chaos/soak machinery; see `repro chaos` and DESIGN.md §12).
+        fault_plan: match args.get("fault-plan") {
+            Some(p) => Some(bss2::fault::FaultPlan::load(p)?),
+            None => None,
+        },
         ..Default::default()
     };
     let svc = bss2::coordinator::service::Service::start_fleet(
@@ -893,6 +914,177 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
         println!("  false positives:   {fp}/{sinus_n} sinus windows");
     }
     svc.stop();
+    Ok(())
+}
+
+/// Seeded chaos soak: drive a deterministic mix of classify / batch /
+/// stream-frame traffic into an in-process fleet with a fault plan armed,
+/// then print a survival report.
+///
+/// Determinism contract: requests are dispatched **sequentially** (each
+/// reply awaited before the next dispatch), so scheduler picks, failover
+/// targets, probe ticks, and every chip's chip-time trajectory — and
+/// therefore the entire printed report — are a pure function of the seed
+/// and the plan.  `repro chaos --chips 4 --seed 1` prints byte-identical
+/// reports on every run and every host.  (Wall-clock latencies exist in
+/// telemetry but are deliberately not part of the report.)
+fn chaos(args: &Args) -> anyhow::Result<()> {
+    use bss2::ecg::gen::Trace;
+    use bss2::fault::FaultPlan;
+    use bss2::fleet::{
+        BatchDispatchOutcome, ChipReply, DispatchOutcome, Fleet, FleetConfig,
+    };
+    use bss2::nn::weights::TrainedModel;
+    use std::sync::mpsc;
+
+    let chips = args.usize_or("chips", 4)?.max(1);
+    let seed = args.u64_or("seed", 1)?;
+    let requests = args.usize_or("requests", 240)?.max(1);
+    let redirects = args.usize_or("redirects", 2)? as u32;
+    let queue_depth = args.usize_or("queue-depth", 32)?;
+    let probe_period = args.u64_or("probe-period", 8)?;
+
+    // Expected chip time per replica over the run: the request load
+    // spread across the fleet at ~300 µs per single-trace program.  The
+    // random plan draws its fault windows inside this horizon so the
+    // faults actually intersect the workload.
+    let horizon_us = ((requests / chips).max(1) as u64) * 300;
+    let plan = match args.get("fault-plan") {
+        Some(p) => FaultPlan::load(p)?,
+        None => FaultPlan::random(seed, chips, horizon_us),
+    };
+    // Serving floor: only *erroring* faults (chip death, frame drops)
+    // can quarantine a chip — silent/slow faults never cost capacity.
+    // Same definition as the chaos soak tests, so CLI verdicts and test
+    // assertions can never disagree about what "survived" means.
+    let floor = chips - plan.erroring_chips(chips);
+    println!(
+        "[chaos] seed {seed}, {chips} chips, {requests} samples, redirect \
+         budget {redirects}, queue depth {queue_depth}, probe period \
+         {probe_period}"
+    );
+    println!(
+        "[chaos] fault plan ({} fault(s), horizon ~{horizon_us} µs):",
+        plan.faults.len()
+    );
+    for f in &plan.faults {
+        println!("[chaos]   - {}", f.describe());
+    }
+
+    let fleet_plan = plan.clone();
+    let fleet = Fleet::start(
+        FleetConfig {
+            chips,
+            queue_depth,
+            probe_period,
+            redirects,
+            fault_plan: Some(fleet_plan),
+            ..Default::default()
+        },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(0xF1EE7),
+                EngineConfig { use_pjrt: false, ..Default::default() }
+                    .for_chip(chip),
+            ))
+        },
+    )?;
+
+    // Outcome tally, in samples.  `lost` counts replies that never came
+    // — the invariant the failover design must hold at zero.
+    let (mut ok, mut shed, mut failed, mut lost) = (0u64, 0u64, 0u64, 0u64);
+    let mut settle = |n: u64, recv: Result<ChipReply, mpsc::RecvError>| match recv
+    {
+        Err(_) => lost += n,
+        Ok(reply) => match reply.result {
+            Ok(_) => ok += n,
+            Err(_) => failed += n,
+        },
+    };
+
+    let mut traces = bss2::ecg::gen::TraceStream::new(seed, 1.0);
+    let mut sent = 0usize;
+    let mut tick = 0usize;
+    while sent < requests {
+        let kind = tick % 8;
+        tick += 1;
+        if kind == 5 {
+            // One 4-batch (amortised path; counts 4 samples).
+            let b = 4.min(requests - sent);
+            let batch: Vec<Trace> = (&mut traces).take(b).collect();
+            sent += b;
+            match fleet.dispatch_batch(batch) {
+                BatchDispatchOutcome::Shed { .. } => shed += b as u64,
+                BatchDispatchOutcome::Enqueued { rejected, resp, .. } => {
+                    shed += rejected as u64;
+                    settle((b - rejected) as u64, resp.recv());
+                }
+            }
+        } else if kind == 7 {
+            // One preprocessed stream frame (the monitoring path).
+            let t = traces.next().unwrap();
+            sent += 1;
+            let acts: Vec<i32> =
+                bss2::fpga::preprocess::preprocess(&t.samples)
+                    .into_iter()
+                    .map(|a| a as i32)
+                    .collect();
+            match fleet.dispatch_acts(acts) {
+                DispatchOutcome::Shed { .. } => shed += 1,
+                DispatchOutcome::Enqueued { resp, .. } => {
+                    settle(1, resp.recv())
+                }
+            }
+        } else {
+            // Single-trace classify (the paper's 276 µs path).
+            let t = traces.next().unwrap();
+            sent += 1;
+            match fleet.dispatch(t) {
+                DispatchOutcome::Shed { .. } => shed += 1,
+                DispatchOutcome::Enqueued { resp, .. } => {
+                    settle(1, resp.recv())
+                }
+            }
+        }
+    }
+
+    println!(
+        "[chaos] outcome over {sent} samples: {ok} ok, {shed} shed, \
+         {failed} failed, {lost} lost"
+    );
+    println!(
+        "[chaos] failover: {} redirect(s), {} exhausted, {} injected \
+         failure(s) observed",
+        fleet.redirect_count(),
+        fleet.redirects_exhausted_count(),
+        fleet.injected_fault_errors()
+    );
+    let healthy = fleet.healthy_count();
+    println!(
+        "[chaos] fleet end state: {healthy}/{chips} healthy \
+         (erroring-fault floor {floor})"
+    );
+    for (i, s) in fleet.chip_snapshots().iter().enumerate() {
+        println!(
+            "[chaos]   - chip {i}: {:<12} served {:<6} errors {}",
+            s.state.as_str(),
+            s.served,
+            s.errors
+        );
+    }
+    let survived = lost == 0 && healthy >= floor.max(1);
+    println!(
+        "[chaos] verdict: {}",
+        if survived {
+            "SURVIVED (every sample answered; serving floor held)"
+        } else if lost > 0 {
+            "FAILED (lost replies — a job fell into silence)"
+        } else {
+            "DEGRADED (served everything, but below the serving floor)"
+        }
+    );
+    fleet.shutdown();
+    anyhow::ensure!(lost == 0, "{lost} replies were lost");
     Ok(())
 }
 

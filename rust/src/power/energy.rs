@@ -222,6 +222,7 @@ mod tests {
                 transfers: 2,
                 bytes: (c::ECG_WINDOW * c::ECG_CHANNELS * 2) as u64,
                 time_ns: 1000.0,
+                drops: 0,
             },
             preprocessed_samples: (c::ECG_WINDOW * c::ECG_CHANNELS) as u64,
             events_generated: 300,

@@ -1,0 +1,431 @@
+//! Chaos/soak integration: deterministic fault injection + transparent
+//! fleet failover, end to end.
+//!
+//! The contract under test (ISSUE 5, DESIGN.md §12):
+//!   * every accepted request gets **exactly one, in-order** reply —
+//!     success, shed, or terminal error; never silence — even while
+//!     injected faults kill chips mid-traffic;
+//!   * stream sessions re-dispatch in-flight windows instead of dropping
+//!     them (window result lines keep arriving, in window order);
+//!   * failover is numerically invisible: results are bit-identical to a
+//!     fault-free fleet without the faulted replica;
+//!   * the fleet ends with at least the plan's serving floor intact;
+//!   * `repro chaos` prints a byte-identical survival report per seed.
+//!
+//! The short churn soak runs in the default suite; the heavy randomized
+//! soak is `#[ignore]`d for the nightly `cargo test --release -- --ignored`
+//! job.
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{Client, Service};
+use bss2::ecg::gen::{Trace, TraceStream};
+use bss2::fault::{FaultKind, FaultPlan, FaultSpec};
+use bss2::fleet::{Fleet, FleetConfig};
+use bss2::nn::weights::TrainedModel;
+use bss2::util::json::Json;
+use bss2::util::propcheck;
+use bss2::{prop_assert, prop_assert_eq};
+
+const MODEL_SEED: u64 = 0xC4A05;
+
+fn engine_cfg(chip: usize) -> EngineConfig {
+    EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() }
+        .for_chip(chip)
+}
+
+fn spec(
+    chip: usize,
+    at_us: u64,
+    duration_us: Option<u64>,
+    kind: FaultKind,
+) -> FaultSpec {
+    FaultSpec { chip, at_us, duration_us, kind }
+}
+
+/// One soak client: pipelines bursts of `classify_batch` requests with
+/// cycling batch sizes, then collects the replies and checks that each
+/// arrives in request order (every reply — ok, shed, or terminal error —
+/// echoes the `batch` field, which cycles deterministically).  Returns
+/// (ok, shed, failed) reply counts; panics on silence, disorder, or a
+/// malformed reply.
+fn churn_client(
+    addr: std::net::SocketAddr,
+    client_seed: u64,
+    bursts: usize,
+    burst_len: usize,
+) -> (u64, u64, u64) {
+    let mut cl = Client::connect(&addr).unwrap();
+    let mut traces = TraceStream::new(9_000 + client_seed, 1.0);
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    let mut req = 0usize;
+    for _ in 0..bursts {
+        // Pipeline the whole burst before reading any reply.
+        let mut expect = Vec::with_capacity(burst_len);
+        for _ in 0..burst_len {
+            let b = 1 + (req % 3);
+            req += 1;
+            let batch: Vec<Trace> = (&mut traces).take(b).collect();
+            cl.send_classify_batch(&batch).unwrap();
+            expect.push(b);
+        }
+        // Exactly one reply per request, in request order.
+        for (slot, want_b) in expect.iter().enumerate() {
+            let reply = cl
+                .read_reply()
+                .unwrap_or_else(|e| panic!("reply {slot} missing: {e}"));
+            let got_b = reply
+                .get("batch")
+                .and_then(|v| v.as_usize())
+                .unwrap_or_else(|| panic!("reply without batch echo: {reply}"));
+            assert_eq!(
+                got_b, *want_b,
+                "reply {slot} out of order (client {client_seed}): {reply}"
+            );
+            if reply.get("ok") == Some(&Json::Bool(true)) {
+                let n = reply
+                    .get("results")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.len())
+                    .unwrap_or(0);
+                let accepted = reply
+                    .get("accepted")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0);
+                assert_eq!(n, accepted, "one inference per accepted sample");
+                ok += 1;
+            } else if reply.get("shed") == Some(&Json::Bool(true)) {
+                shed += 1;
+            } else {
+                assert!(
+                    reply.get("error").is_some(),
+                    "failure without an error field: {reply}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    (ok, shed, failed)
+}
+
+/// The short deterministic churn soak (default suite): chip 1 is
+/// permanently dead from t = 0 (erroring fault), chip 0 carries silent
+/// link corruption, chip 2 a permanent latency spike.  Concurrent
+/// pipelining clients plus one streaming session; every request must be
+/// answered in order and the fleet must end at the serving floor.
+#[test]
+fn chaos_soak_short_every_request_answered_in_order() {
+    let chips = 3;
+    let plan = FaultPlan {
+        seed: 11,
+        faults: vec![
+            spec(1, 0, None, FaultKind::ChipDeath),
+            spec(0, 0, None, FaultKind::LinkCorruption { ber: 0.002 }),
+            spec(2, 0, None, FaultKind::LatencySpike { extra_us: 1_500 }),
+        ],
+    };
+    let floor = chips - plan.erroring_chips(chips);
+    assert_eq!(floor, 2);
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig {
+            chips,
+            queue_depth: 256,
+            error_threshold: 3,
+            probe_period: 8,
+            redirects: 4,
+            fault_plan: Some(plan),
+            ..Default::default()
+        },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                engine_cfg(chip),
+            ))
+        },
+    )
+    .unwrap();
+    let addr = svc.addr;
+
+    // Streaming session alongside the classify churn: in-flight windows
+    // must be re-dispatched (never dropped) when they land on the dead
+    // chip, and their result lines must arrive in window order.
+    let stream_handle = std::thread::spawn(move || {
+        let mut cl = Client::connect(&addr).unwrap();
+        let hop = 512usize;
+        let open = cl.stream_open(hop).unwrap();
+        assert_eq!(
+            open.get("stream").and_then(|s| s.as_str()),
+            Some("open"),
+            "{open}"
+        );
+        // 6000 samples/channel at hop 512, window 2048 -> several
+        // windows, pushed in uneven chunks.
+        let total = 6_000usize;
+        let mut pushed = 0usize;
+        let mut ecg = bss2::ecg::stream::ContinuousEcg::new(
+            77,
+            1.0,
+            Default::default(),
+        );
+        while pushed < total {
+            let n = (total - pushed).min(700);
+            let chunk = ecg.next_chunk(n);
+            cl.stream_push(&chunk).unwrap();
+            pushed += n;
+        }
+        cl.stream_close().unwrap();
+        // Collect every line up to the close ack; windows must be
+        // strictly increasing across ok/shed/error lines alike.
+        let mut lines = 0u64;
+        let mut last_window: Option<u64> = None;
+        loop {
+            let line = cl.read_reply().unwrap();
+            if line.get("stream").and_then(|s| s.as_str()) == Some("closed") {
+                let windows =
+                    line.get("windows").and_then(|v| v.as_uint()).unwrap();
+                assert_eq!(
+                    lines, windows,
+                    "every produced window needs exactly one line: {line}"
+                );
+                break;
+            }
+            let w = line
+                .get("window")
+                .and_then(|v| v.as_uint())
+                .unwrap_or_else(|| panic!("stream line without window: {line}"));
+            if let Some(prev) = last_window {
+                assert!(w > prev, "stream out of order: {w} after {prev}");
+            }
+            last_window = Some(w);
+            lines += 1;
+        }
+    });
+
+    let mut handles = Vec::new();
+    for client in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            churn_client(addr, client, 6, 5)
+        }));
+    }
+    let (mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (o, s, f) = h.join().unwrap();
+        ok += o;
+        shed += s;
+        failed += f;
+    }
+    stream_handle.join().unwrap();
+
+    // 3 clients x 6 bursts x 5 requests: every single one was answered
+    // (the churn clients panic on silence), and the healthy majority
+    // actually served.
+    assert_eq!(ok + shed + failed, 3 * 6 * 5);
+    assert!(ok > 0, "a 2-healthy-chip fleet must serve most requests");
+    assert_eq!(
+        failed, 0,
+        "budget 4 with 2 permanently healthy chips must absorb every \
+         failure transparently"
+    );
+
+    // The dead chip was hit and failed over; the fleet holds the floor.
+    let mut cl = Client::connect(&addr).unwrap();
+    let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+    assert!(
+        fs.get("redirects").and_then(|v| v.as_uint()).unwrap() >= 1,
+        "chip 1 must have been picked and failed over: {fs}"
+    );
+    assert!(
+        fs.get("fault_errors").and_then(|v| v.as_uint()).unwrap() >= 1,
+        "{fs}"
+    );
+    let healthy = fs.get("healthy").and_then(|v| v.as_usize()).unwrap();
+    assert!(
+        healthy >= floor,
+        "fleet ended below the serving floor: {healthy} < {floor}: {fs}"
+    );
+    svc.stop();
+}
+
+/// Failover must not change numerics: with a permanently dead chip K and
+/// retry enabled, batch results are bit-identical to a fault-free fleet
+/// with chip K removed (replicas share silicon and noise is off, so the
+/// *only* way to differ is serving a corrupted result from K or breaking
+/// batch composition during the redirect).
+#[test]
+fn failover_is_numerically_invisible() {
+    propcheck::check("failover_numerics", 4, 0xFA11, |g| {
+        let chips = g.usize_in(2, 4);
+        let k = g.usize_in(0, chips - 1);
+        let plan = FaultPlan {
+            seed: 1,
+            faults: vec![spec(k, 0, None, FaultKind::ChipDeath)],
+        };
+        let mk = |fault_plan: Option<FaultPlan>, removed: Option<usize>| {
+            Fleet::start(
+                FleetConfig {
+                    chips,
+                    queue_depth: 64,
+                    error_threshold: 2,
+                    probe_period: 4,
+                    redirects: 2,
+                    fault_plan,
+                    ..Default::default()
+                },
+                move |chip| {
+                    anyhow::ensure!(
+                        Some(chip) != removed,
+                        "chip removed for the reference fleet"
+                    );
+                    Ok(Engine::native(
+                        TrainedModel::synthetic(MODEL_SEED),
+                        engine_cfg(chip),
+                    ))
+                },
+            )
+        };
+        let faulty = mk(Some(plan), None).map_err(|e| e.to_string())?;
+        let reference = mk(None, Some(k)).map_err(|e| e.to_string())?;
+        for round in 0..4 {
+            let b = g.usize_in(1, 5);
+            let traces: Vec<Trace> =
+                TraceStream::new(g.rng.next_u64() % 100_000, 1.0)
+                    .take(b)
+                    .collect();
+            let (chip_a, got, rej_a) = faulty
+                .classify_batch_blocking(&traces)
+                .map_err(|e| format!("faulty fleet round {round}: {e}"))?;
+            let (_chip_b, want, rej_b) = reference
+                .classify_batch_blocking(&traces)
+                .map_err(|e| format!("reference fleet round {round}: {e}"))?;
+            prop_assert!(
+                chip_a != k,
+                "round {round}: the dead chip {k} produced a reply"
+            );
+            prop_assert_eq!(rej_a, rej_b);
+            prop_assert!(
+                got.len() == want.len(),
+                "round {round}: {} vs {} results",
+                got.len(),
+                want.len()
+            );
+            for (i, (a, w)) in got.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    a.pred == w.pred && a.scores == w.scores,
+                    "round {round} sample {i}: failover changed numerics \
+                     ({}, {:?}) != ({}, {:?})",
+                    a.pred,
+                    a.scores,
+                    w.pred,
+                    w.scores
+                );
+            }
+        }
+        prop_assert!(
+            faulty.redirect_count() >= 1,
+            "4 rotation rounds over ≤ 4 chips must have hit chip {k}"
+        );
+        faulty.shutdown();
+        reference.shutdown();
+        Ok(())
+    });
+}
+
+/// Acceptance criterion: `repro chaos --chips 4 --seed 1` is
+/// deterministic across runs — the survival report is byte-identical.
+#[test]
+fn chaos_cli_survival_report_is_deterministic() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let run = || {
+        std::process::Command::new(exe)
+            .args(["chaos", "--chips", "4", "--seed", "1"])
+            .output()
+            .expect("repro chaos runs")
+    };
+    let a = run();
+    assert!(
+        a.status.success(),
+        "chaos run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let report = String::from_utf8_lossy(&a.stdout);
+    assert!(report.contains("[chaos] verdict:"), "{report}");
+    assert!(report.contains("0 lost"), "no reply may fall silent: {report}");
+    let b = run();
+    assert_eq!(
+        a.stdout, b.stdout,
+        "survival report must be byte-identical across runs"
+    );
+    // A different seed draws a different plan (and prints it).
+    let c = std::process::Command::new(exe)
+        .args(["chaos", "--chips", "4", "--seed", "2"])
+        .output()
+        .expect("repro chaos runs");
+    assert!(c.status.success());
+    assert_ne!(a.stdout, c.stdout, "different seed, different report");
+}
+
+/// The heavy randomized soak (nightly: `cargo test --release -- --ignored`):
+/// a bigger fleet under a randomly drawn fault plan and much more
+/// concurrent traffic.  Invariants only — every request answered in
+/// order, and the fleet never ends below what the plan's erroring faults
+/// can explain.
+#[test]
+#[ignore = "long soak; run via `cargo test --release -- --ignored`"]
+fn chaos_soak_long_randomized() {
+    let chips = 4;
+    for seed in [1u64, 2, 3] {
+        let plan = FaultPlan::random(seed, chips, 60_000);
+        let floor = chips - plan.erroring_chips(chips);
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig {
+                chips,
+                queue_depth: 512,
+                error_threshold: 3,
+                probe_period: 8,
+                redirects: 6,
+                fault_plan: Some(plan),
+                ..Default::default()
+            },
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(MODEL_SEED),
+                    engine_cfg(chip),
+                ))
+            },
+        )
+        .unwrap();
+        let addr = svc.addr;
+        let mut handles = Vec::new();
+        for client in 0..6u64 {
+            handles.push(std::thread::spawn(move || {
+                churn_client(addr, 100 * client + 7, 20, 8)
+            }));
+        }
+        let (mut answered, mut failed) = (0u64, 0u64);
+        for h in handles {
+            let (o, s, f) = h.join().unwrap();
+            answered += o + s + f;
+            failed += f;
+        }
+        assert_eq!(answered, 6 * 20 * 8, "seed {seed}: silence detected");
+        let mut cl = Client::connect(&addr).unwrap();
+        let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+        let healthy = fs.get("healthy").and_then(|v| v.as_usize()).unwrap();
+        assert!(
+            healthy >= floor,
+            "seed {seed}: fleet ended below the erroring-fault floor \
+             ({healthy} < {floor}): {fs}"
+        );
+        // Terminal failures are only legitimate when the erroring faults
+        // could momentarily exhaust every candidate; with at least one
+        // never-erroring chip and budget 6 they should stay rare.
+        if floor >= 1 {
+            assert!(
+                failed <= 6 * 20 * 8 / 10,
+                "seed {seed}: too many terminal failures ({failed})"
+            );
+        }
+        svc.stop();
+    }
+}
