@@ -31,9 +31,28 @@ pub struct ChipStats {
 
 /// Chip-level timing model: simulated nanoseconds per activity
 /// (paper: 8 ns event period, 5 µs integration cycle).
+///
+/// `ns` stays the authoritative total (everything downstream — engine
+/// sim-time, chip-time drift clocks — reads it); the per-category fields
+/// split the same nanoseconds by pipeline stage so stage-level tracing
+/// (`obs::trace`) can answer where an inference's time goes.  Every
+/// `add_*` bumps its category and the total together, so the categories
+/// always sum to `ns` exactly.
 #[derive(Debug, Default, Clone)]
 pub struct ChipTiming {
     pub ns: f64,
+    /// Event streaming into the synapse drivers.
+    pub events_ns: f64,
+    /// Analog VMM integration cycles.
+    pub integration_ns: f64,
+    /// Synapse-matrix weight reconfigurations.
+    pub weight_write_ns: f64,
+    /// Parallel CADC readouts.
+    pub adc_ns: f64,
+    /// Embedded SIMD CPU post-processing.
+    pub simd_ns: f64,
+    /// Explicit waits (DMA handshakes etc.).
+    pub wait_ns: f64,
 }
 
 impl ChipTiming {
@@ -44,27 +63,40 @@ impl ChipTiming {
         let array_side = n_events as f64 * c::EVENT_PERIOD_NS;
         let link_side = (n_events * c::EVENT_PACKET_BITS) as f64
             / (c::LVDS_LINKS as f64 * c::LVDS_GBPS); // bits / (Gbit/s) = ns
-        self.ns += array_side.max(link_side);
+        let ns = array_side.max(link_side);
+        self.events_ns += ns;
+        self.ns += ns;
     }
 
     /// One integration cycle incl. membrane reset (5 µs).
     pub fn add_integration(&mut self) {
+        self.integration_ns += c::INTEGRATION_CYCLE_US * 1e3;
         self.ns += c::INTEGRATION_CYCLE_US * 1e3;
     }
 
     /// Rewrite one half's synapse matrix (per-pass weight reconfiguration).
     pub fn add_weight_write(&mut self) {
+        self.weight_write_ns += c::WEIGHT_WRITE_US * 1e3;
         self.ns += c::WEIGHT_WRITE_US * 1e3;
     }
 
     /// Parallel CADC conversion + digital transfer of one half.
     pub fn add_adc_read(&mut self) {
         // 1024 parallel channels, 8-bit ramp conversion ~1.5 µs on BSS-2.
+        self.adc_ns += 1.5e3;
         self.ns += 1.5e3;
     }
 
     pub fn add_simd_cycles(&mut self, cycles: u64) {
-        self.ns += cycles as f64 / super::simd::CLOCK_HZ * 1e9;
+        let ns = cycles as f64 / super::simd::CLOCK_HZ * 1e9;
+        self.simd_ns += ns;
+        self.ns += ns;
+    }
+
+    /// Explicit wait (DMA handshake round trips, settling).
+    pub fn add_wait_ns(&mut self, ns: f64) {
+        self.wait_ns += ns;
+        self.ns += ns;
     }
 
     pub fn us(&self) -> f64 {
@@ -187,7 +219,7 @@ impl ChipOps for NativeChip {
 
     fn wait_dma(&mut self) {
         // DMA handshake latency (FPGA round trip over the link).
-        self.timing.ns += 200.0;
+        self.timing.add_wait_ns(200.0);
     }
 }
 
@@ -238,6 +270,25 @@ mod tests {
         t.add_event_burst(256);
         // array side: 2048 ns; link side: 256*24/(5*2) = 614 ns -> max = 2048
         assert!((t.ns - 2048.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timing_categories_sum_to_total() {
+        let mut t = ChipTiming::default();
+        t.add_event_burst(300);
+        t.add_weight_write();
+        t.add_integration();
+        t.add_adc_read();
+        t.add_simd_cycles(250);
+        t.add_wait_ns(200.0);
+        let sum = t.events_ns
+            + t.integration_ns
+            + t.weight_write_ns
+            + t.adc_ns
+            + t.simd_ns
+            + t.wait_ns;
+        assert!((sum - t.ns).abs() < 1e-9, "categories {sum} vs total {}", t.ns);
+        assert!(t.weight_write_ns > 0.0 && t.wait_ns == 200.0);
     }
 
     #[test]

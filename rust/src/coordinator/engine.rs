@@ -41,6 +41,7 @@ use crate::fpga::preprocess::StreamingPreprocessor;
 use crate::nn::graph;
 use crate::nn::mapping;
 use crate::nn::weights::TrainedModel;
+use crate::obs::trace::SimStages;
 use crate::power::energy::{self, Activity, EnergyBreakdown};
 use crate::runtime::client::{Runtime, StagedPass, VmmExecutable};
 use crate::runtime::ArtifactDir;
@@ -84,6 +85,9 @@ pub struct Inference {
     /// Simulated time of the inference [s].
     pub sim_time_s: f64,
     pub energy: EnergyBreakdown,
+    /// Per-stage split of `sim_time_s` [µs per sample] — where the
+    /// paper's 276 µs goes (obs stage tracing; sums to `sim_time_s`).
+    pub stages: SimStages,
 }
 
 #[derive(Debug, Clone)]
@@ -444,6 +448,25 @@ impl Engine {
         self.run_stream(acts)
     }
 
+    /// Per-stage split of the *current* program's simulated time [µs]:
+    /// the engine's per-category chip-time accounting plus DMA and the
+    /// program-level control overhead.  By construction it sums to the
+    /// program's `sim_time_s` (same addends, same order of magnitude
+    /// splits the engine already charges).
+    fn sim_stages(&self, control_us: f64) -> SimStages {
+        let t = &self.chip_timing;
+        SimStages {
+            dma_us: self.dma_time_ns / 1e3,
+            events_us: t.events_ns / 1e3,
+            weight_write_us: t.weight_write_ns / 1e3,
+            vmm_us: t.integration_ns / 1e3,
+            adc_us: t.adc_ns / 1e3,
+            simd_us: t.simd_ns / 1e3,
+            wait_us: t.wait_ns / 1e3,
+            control_us,
+        }
+    }
+
     fn run_stream(&mut self, acts: &[i32]) -> anyhow::Result<Inference> {
         anyhow::ensure!(acts.len() == c::MODEL_IN, "need {} acts", c::MODEL_IN);
         self.slots.insert(0, acts.to_vec());
@@ -494,6 +517,7 @@ impl Engine {
             scores,
             sim_time_s,
             energy: energy::energy_of(&activity),
+            stages: self.sim_stages(CONTROL_OVERHEAD_US + latency_extra_us),
         })
     }
 
@@ -551,6 +575,9 @@ impl Engine {
         let per_sample_energy =
             energy::energy_of(&activity).scaled(1.0 / b as f64);
         let sim_time_s = batch_time_s / b as f64;
+        let per_sample_stages = self
+            .sim_stages(CONTROL_OVERHEAD_US + latency_extra_us)
+            .scaled(1.0 / b as f64);
 
         ctxs.into_iter()
             .map(|ctx| {
@@ -567,6 +594,7 @@ impl Engine {
                     scores: [result[0] as f32, result[1] as f32],
                     sim_time_s,
                     energy: per_sample_energy.clone(),
+                    stages: per_sample_stages,
                 })
             })
             .collect()
@@ -967,7 +995,7 @@ impl ChipOps for Engine {
     }
 
     fn wait_dma(&mut self) {
-        self.chip_timing.ns += 200.0;
+        self.chip_timing.add_wait_ns(200.0);
     }
 }
 
@@ -1026,6 +1054,42 @@ mod tests {
         let inf = eng.classify(&trace).unwrap();
         let us = inf.sim_time_s * 1e6;
         assert!((us - 276.0).abs() < 30.0, "per-inference time {us} µs");
+    }
+
+    #[test]
+    fn stage_breakdown_sums_to_sim_time() {
+        let mut eng = Engine::native(
+            tiny_model(),
+            EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+        );
+        let trace = crate::ecg::gen::generate_trace(6, true, 1.0);
+        let inf = eng.classify(&trace).unwrap();
+        let total_us = inf.stages.total_us();
+        assert!(
+            (total_us - inf.sim_time_s * 1e6).abs() < 1e-6,
+            "stages {total_us} µs vs sim {} µs",
+            inf.sim_time_s * 1e6
+        );
+        // The known dominant stages of the 276 µs: 128 µs control,
+        // 2x40 µs weight writes, 3x5 µs integrations, 3x1.5 µs ADC reads.
+        assert_eq!(inf.stages.control_us, CONTROL_OVERHEAD_US);
+        assert!((inf.stages.weight_write_us - 80.0).abs() < 1e-9);
+        assert!((inf.stages.vmm_us - 15.0).abs() < 1e-9);
+        assert!((inf.stages.adc_us - 4.5).abs() < 1e-9);
+        assert!(inf.stages.events_us > 0.0 && inf.stages.simd_us > 0.0);
+
+        // Batched: per-sample stages scale 1/B and still sum.
+        let traces: Vec<_> = (0..4)
+            .map(|i| crate::ecg::gen::generate_trace(20 + i, i % 2 == 0, 1.0))
+            .collect();
+        let infs = eng.classify_batch(&traces).unwrap();
+        for inf in &infs {
+            assert!(
+                (inf.stages.total_us() - inf.sim_time_s * 1e6).abs() < 1e-6
+            );
+        }
+        // Weight writes amortise: 2 per batch -> 80/4 µs per sample.
+        assert!((infs[0].stages.weight_write_us - 20.0).abs() < 1e-9);
     }
 
     #[test]

@@ -63,7 +63,21 @@
 //! -> {"cmd": "stats"}
 //! <- {"ok": true, "served": n, "mean_time_us": t, "chips": c, "shed": s}
 //! -> {"cmd": "fleet_stats"}
-//! <- {"ok": true, "chips": c, ..., "per_chip": [...]}
+//! <- {"ok": true, "chips": c, ..., "stages": {...}, "per_chip": [...]}
+//! -> {"cmd": "metrics"}            ("format": "text" for Prometheus)
+//! <- {"ok": true, "metrics": [{"name": "...", "kind": "counter",
+//!     "value": v, "labels": {...}}, ...]}
+//! <- {"ok": true, "format": "text", "body": "# HELP ...\n..."}
+//! -> {"cmd": "trace", "n": 16}
+//! <- {"ok": true, "seen": s, "recorded": r, "traces": [{"id": i,
+//!     "chip": c, "kind": "classify", "batch": b, "redirects": h,
+//!     "host_us": {"total": t, "queue": q, "execute": e, "retry": r},
+//!     "sim_us": {"total": t, "dma": ..., ..., "control": ...}}, ...]}
+//! -> {"cmd": "journal", "since": S}
+//! <- {"ok": true, "next_seq": n, "events": [{"seq": q, "kind": "...",
+//!     "chip": c?, "detail": "..."}, ...]}
+//!    (if the first returned seq is > S, events in between aged out of
+//!     the bounded ring)
 //! -> {"cmd": "recalibrate", "chip": c, "reps": r}
 //! <- {"ok": true, "chip": c, "chip_time_us": t, "residual_rms": x,
 //!     "reason": "..."}   (drain -> calibrate -> re-admit; the reply line
@@ -86,6 +100,7 @@ use crate::fleet::{
     BatchDispatchOutcome, ChipId, DispatchOutcome, Fleet, FleetConfig,
 };
 use crate::fpga::preprocess::IncrementalWindower;
+use crate::obs::{expo, EventKind, TraceRecord};
 use crate::util::json::Json;
 
 use super::engine::{Engine, Inference};
@@ -294,7 +309,14 @@ impl Service {
                     if aconns.active() >= max_conns {
                         // Explicit accept-time shed: tell the client why
                         // before hanging up, instead of a silent RST or —
-                        // worse — an unbounded thread pile-up.
+                        // worse — an unbounded thread pile-up.  Journal
+                        // first: a client that read the refusal line can
+                        // already see the event.
+                        afleet.obs().journal.log(
+                            EventKind::ConnectionShed,
+                            None,
+                            &format!("connection limit {max_conns} reached"),
+                        );
                         let mut s = stream;
                         let _ = s.write_all(
                             format!(
@@ -766,6 +788,96 @@ fn handle_request(
             ))
         }
         Some("fleet_stats") => one(fleet.stats_json()),
+        Some("metrics") => {
+            // One snapshot feeds both formats (obs::expo), so JSON and
+            // Prometheus text can never disagree about what exists.
+            let samples = fleet.metrics_samples();
+            let fmt = match req.get("format") {
+                None => Some("json"),
+                Some(f) => {
+                    f.as_str().filter(|f| *f == "json" || *f == "text")
+                }
+            };
+            match fmt {
+                Some("text") => one(format!(
+                    "{{\"ok\":true,\"format\":\"text\",\"body\":{}}}",
+                    json_str(&expo::prometheus(&samples))
+                )),
+                Some(_) => one(format!(
+                    "{{\"ok\":true,\"metrics\":{}}}",
+                    expo::json_array(&samples)
+                )),
+                None => one(err_json(
+                    "metrics format must be \"json\" or \"text\"",
+                )),
+            }
+        }
+        Some("trace") => {
+            let cap = crate::obs::trace::TRACE_RING_CAP;
+            let n = match req.get("n") {
+                None => Some(16),
+                Some(v) => v.as_uint().map(|n| n as usize),
+            }
+            .filter(|n| (1..=cap).contains(n));
+            let Some(n) = n else {
+                return one(err_json(&format!(
+                    "n must be an integer in 1..={cap}"
+                )));
+            };
+            let tracer = &fleet.obs().tracer;
+            let mut s = format!(
+                "{{\"ok\":true,\"seen\":{},\"recorded\":{},\"traces\":[",
+                tracer.seen(),
+                tracer.recorded()
+            );
+            for (i, t) in tracer.recent(n).iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&trace_json(t));
+            }
+            s.push_str("]}");
+            one(s)
+        }
+        Some("journal") => {
+            let since = match req.get("since") {
+                None => Some(0),
+                Some(v) => v.as_uint(),
+            };
+            let Some(since) = since else {
+                return one(err_json(
+                    "since must be a non-negative integer",
+                ));
+            };
+            let journal = &fleet.obs().journal;
+            // Cursor *before* the scan: an event logged concurrently may
+            // then show up both in this reply and after a resume from
+            // `next_seq` — at-least-once, never silently skipped.
+            let next_seq = journal.next_seq();
+            let events = journal.since(since);
+            let mut s = format!(
+                "{{\"ok\":true,\"next_seq\":{next_seq},\"events\":["
+            );
+            for (i, e) in events.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&format!(
+                    "{{\"seq\":{},\"kind\":\"{}\",",
+                    e.seq,
+                    e.kind.as_str()
+                ));
+                if let Some(chip) = e.chip {
+                    s.push_str(&format!("\"chip\":{chip},"));
+                }
+                s.push_str(&format!(
+                    "\"detail\":{}}}",
+                    json_str(&e.detail)
+                ));
+            }
+            s.push_str("]}");
+            one(s)
+        }
         Some("recalibrate") => {
             // Malformed fields are rejected, never defaulted: a bad
             // `chip` would drain a replica the client never named, a bad
@@ -948,6 +1060,30 @@ fn handle_request(
         },
         _ => one("{\"ok\":false,\"error\":\"unknown cmd\"}".to_string()),
     }
+}
+
+/// One full trace record as a wire JSON object: both stage splits carry
+/// an explicit `total` so clients need not re-derive the sum.
+fn trace_json(t: &TraceRecord) -> String {
+    let mut s = format!(
+        "{{\"id\":{},\"chip\":{},\"kind\":\"{}\",\"batch\":{},\
+         \"redirects\":{},\"host_us\":{{\"total\":{:.3}",
+        t.id,
+        t.chip,
+        t.kind,
+        t.batch,
+        t.redirects,
+        t.host.total_ns() as f64 / 1e3
+    );
+    for (name, ns) in t.host.named() {
+        s.push_str(&format!(",\"{name}\":{:.3}", ns as f64 / 1e3));
+    }
+    s.push_str(&format!("}},\"sim_us\":{{\"total\":{:.3}", t.sim.total_us()));
+    for (name, us) in t.sim.named() {
+        s.push_str(&format!(",\"{name}\":{us:.3}"));
+    }
+    s.push_str("}}");
+    s
 }
 
 fn parse_trace(req: &Json) -> anyhow::Result<Trace> {
@@ -1483,6 +1619,129 @@ mod tests {
         assert_eq!(
             fs.get("per_chip").and_then(|v| v.as_arr()).map(|a| a.len()),
             Some(2)
+        );
+        svc.stop();
+    }
+
+    #[test]
+    fn metrics_trace_journal_over_the_wire() {
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig {
+                chips: 1,
+                queue_depth: 8,
+                trace_sample: 1,
+                ..Default::default()
+            },
+            |chip| {
+                Ok(Engine::native(
+                    crate::nn::weights::TrainedModel::synthetic(5),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+        .unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let trace = crate::ecg::gen::generate_trace(5, true, 1.0);
+        let r = cl.classify(&trace).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+        // JSON metrics: the unified snapshot carries the fleet counters.
+        let m = cl.call("{\"cmd\":\"metrics\"}").unwrap();
+        assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m}");
+        let arr = m.get("metrics").and_then(|v| v.as_arr()).unwrap();
+        let served = arr
+            .iter()
+            .find(|s| {
+                s.get("name").and_then(|n| n.as_str())
+                    == Some("bss2_fleet_served_total")
+            })
+            .expect("served counter exposed");
+        assert_eq!(served.get("value").and_then(|v| v.as_f64()), Some(1.0));
+
+        // Prometheus text: same snapshot, scrape-ready.
+        let t = cl.call("{\"cmd\":\"metrics\",\"format\":\"text\"}").unwrap();
+        assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t}");
+        let body = t.get("body").and_then(|b| b.as_str()).unwrap();
+        assert!(
+            body.contains("# TYPE bss2_fleet_served_total counter"),
+            "{body}"
+        );
+        assert!(body.contains("bss2_fleet_served_total 1"), "{body}");
+        let bad = cl.call("{\"cmd\":\"metrics\",\"format\":\"xml\"}").unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+        // trace: sample_every = 1 kept the span; its stage splits sum to
+        // the reported totals in both time bases (± wire rounding).
+        let tr = cl.call("{\"cmd\":\"trace\"}").unwrap();
+        assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr}");
+        assert_eq!(tr.get("seen").and_then(|v| v.as_usize()), Some(1));
+        let traces = tr.get("traces").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(traces.len(), 1, "{tr}");
+        let t0 = &traces[0];
+        assert_eq!(t0.get("kind").and_then(|k| k.as_str()), Some("classify"));
+        assert_eq!(t0.get("batch").and_then(|v| v.as_usize()), Some(1));
+        let host = t0.get("host_us").unwrap();
+        let hsum: f64 = ["queue", "execute", "retry"]
+            .iter()
+            .map(|k| host.get(k).and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        let htotal = host.get("total").and_then(|v| v.as_f64()).unwrap();
+        assert!((hsum - htotal).abs() < 0.01, "{hsum} vs {htotal}");
+        let sim = t0.get("sim_us").unwrap();
+        let stotal = sim.get("total").and_then(|v| v.as_f64()).unwrap();
+        assert!(stotal > 100.0, "paper-scale chip time: {stotal}");
+        let ssum: f64 = crate::obs::trace::SIM_STAGE_NAMES
+            .iter()
+            .map(|k| sim.get(k).and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        assert!((ssum - stotal).abs() < 0.01, "{ssum} vs {stotal}");
+        let bad = cl.call("{\"cmd\":\"trace\",\"n\":0}").unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+        // journal: a clean single-chip run has logged nothing.
+        let j = cl.call("{\"cmd\":\"journal\"}").unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j}");
+        assert_eq!(j.get("next_seq").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(
+            j.get("events").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(0)
+        );
+        let bad = cl.call("{\"cmd\":\"journal\",\"since\":-1}").unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+        svc.stop();
+    }
+
+    #[test]
+    fn connection_shed_lands_in_journal() {
+        let svc = Service::start_fleet(
+            "127.0.0.1:0",
+            FleetConfig { chips: 1, max_connections: 1, ..Default::default() },
+            |_| Ok(test_engine()),
+        )
+        .unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        cl.call("{\"cmd\":\"ping\"}").unwrap();
+        // Second connection: refused at accept time with an explicit line.
+        let mut shed = Client::connect(&svc.addr).unwrap();
+        let refusal = shed.read_reply().unwrap();
+        assert_eq!(refusal.get("ok"), Some(&Json::Bool(false)), "{refusal}");
+        assert_eq!(refusal.get("shed"), Some(&Json::Bool(true)));
+        // The event was journalled before the refusal was written, so it
+        // is already visible here.
+        let j = cl.call("{\"cmd\":\"journal\"}").unwrap();
+        let events = j.get("events").and_then(|v| v.as_arr()).unwrap();
+        assert!(
+            events.iter().any(|e| {
+                e.get("kind").and_then(|k| k.as_str())
+                    == Some("connection_shed")
+            }),
+            "{j}"
         );
         svc.stop();
     }

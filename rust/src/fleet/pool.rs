@@ -49,8 +49,10 @@ use crate::calib::scheduler::{RecalibPolicy, RecalibReason};
 use crate::coordinator::engine::{Engine, Inference};
 use crate::ecg::gen::Trace;
 use crate::fault::{FaultInjector, FaultPlan, FAULT_TAG};
+use crate::obs::trace::HostStages;
+use crate::obs::{EventKind, MetricSample, ObsHub};
 
-use super::health::{ChipHealth, ChipHealthSnapshot};
+use super::health::{ChipHealth, ChipHealthSnapshot, ChipState};
 use super::scheduler::{Scheduler, ShedReason};
 use super::telemetry::FleetTelemetry;
 
@@ -97,6 +99,11 @@ pub struct FleetConfig {
     /// Deterministic fault schedule armed on the simulated hardware
     /// (`fault` subsystem; `repro serve --fault-plan`, `repro chaos`).
     pub fault_plan: Option<FaultPlan>,
+    /// Stage-level tracing: keep every Nth completed span whole in the
+    /// trace ring (`obs::trace`, the `trace` wire command; `repro serve
+    /// --trace-sample N`).  0 disables the ring; the per-stage
+    /// histograms behind `fleet_stats`/`metrics` always record.
+    pub trace_sample: u64,
 }
 
 impl Default for FleetConfig {
@@ -111,6 +118,7 @@ impl Default for FleetConfig {
             max_connections: 256,
             redirects: 2,
             fault_plan: None,
+            trace_sample: 16,
         }
     }
 }
@@ -132,6 +140,13 @@ enum ChipJob {
     Classify {
         traces: Vec<Trace>,
         admitted: Instant,
+        /// Start of the current queue residence (== `admitted` at first
+        /// enqueue; reset by every failover re-enqueue).  With `retry_ns`
+        /// this gives contiguous host-span stages: `retry + (dequeue -
+        /// enq) + execute == completion - admitted` exactly.
+        enq: Instant,
+        /// Queue + execute nanoseconds burnt in failed attempts.
+        retry_ns: u64,
         resp: mpsc::Sender<ChipReply>,
         /// Remaining transparent-failover budget for this job.
         redirects_left: u32,
@@ -142,6 +157,10 @@ enum ChipJob {
     ClassifyActs {
         acts: Vec<i32>,
         admitted: Instant,
+        /// See `Classify::enq`.
+        enq: Instant,
+        /// See `Classify::retry_ns`.
+        retry_ns: u64,
         resp: mpsc::Sender<ChipReply>,
         /// Remaining transparent-failover budget for this frame.
         redirects_left: u32,
@@ -249,6 +268,9 @@ pub struct FleetCore {
     /// Per-job transparent-failover budget (`FleetConfig::redirects`).
     redirects_budget: u32,
     failover: FailoverStats,
+    /// Observability surface: metrics registry, stage tracer, event
+    /// journal (`obs`; the `metrics`/`trace`/`journal` wire commands).
+    obs: Arc<ObsHub>,
 }
 
 /// The running fleet: the shared core plus worker-thread ownership.
@@ -305,6 +327,7 @@ impl Fleet {
             transport_rejects: AtomicU64::new(0),
             redirects_budget: cfg.redirects,
             failover: FailoverStats::default(),
+            obs: Arc::new(ObsHub::new(cfg.trace_sample)),
         });
 
         let (ack_tx, ack_rx) = mpsc::channel::<(ChipId, Result<(), String>)>();
@@ -426,6 +449,15 @@ impl FleetCore {
             }
         };
         send_result.map_err(|job| {
+            // First discovery of the dead worker makes the journal; the
+            // repeat discoveries every later send attempt would only spam.
+            if self.health[chip].state() != ChipState::Dead {
+                self.obs.journal.log(
+                    EventKind::ChipDead,
+                    Some(chip),
+                    "worker channel closed",
+                );
+            }
             self.health[chip].mark_dead("worker channel closed");
             job
         })
@@ -450,9 +482,12 @@ impl FleetCore {
             };
             let (rtx, rrx) = mpsc::channel();
             self.health[chip].begin_job();
+            let now = Instant::now();
             let job = ChipJob::ClassifyActs {
                 acts,
-                admitted: Instant::now(),
+                admitted: now,
+                enq: now,
+                retry_ns: 0,
                 resp: rtx,
                 redirects_left: self.redirects_budget,
             };
@@ -507,9 +542,12 @@ impl FleetCore {
             let rest = traces.split_off(accepted.min(traces.len()));
             let (rtx, rrx) = mpsc::channel();
             self.health[chip].begin_jobs(traces.len());
+            let now = Instant::now();
             let job = ChipJob::Classify {
                 traces,
-                admitted: Instant::now(),
+                admitted: now,
+                enq: now,
+                retry_ns: 0,
                 resp: rtx,
                 redirects_left: self.redirects_budget,
             };
@@ -661,7 +699,25 @@ impl FleetCore {
         };
         if exhausted {
             self.failover.exhausted.fetch_add(1, Ordering::Relaxed);
+            self.obs.journal.log(
+                EventKind::RedirectExhausted,
+                Some(from),
+                "redirect budget exhausted",
+            );
             return Err(job);
+        }
+        // Fold the failed attempt (its queue residence + execution) into
+        // the span's retry stage and restart the queue clock, so the
+        // stage chain stays contiguous across hops.
+        let now = Instant::now();
+        match &mut job {
+            ChipJob::Classify { enq, retry_ns, .. }
+            | ChipJob::ClassifyActs { enq, retry_ns, .. } => {
+                *retry_ns +=
+                    now.saturating_duration_since(*enq).as_nanos() as u64;
+                *enq = now;
+            }
+            ChipJob::Calibrate { .. } => unreachable!("checked above"),
         }
         let samples = match &job {
             ChipJob::Classify { traces, .. } => traces.len(),
@@ -670,6 +726,11 @@ impl FleetCore {
         loop {
             let Some(target) = self.pick_failover(from) else {
                 self.failover.exhausted.fetch_add(1, Ordering::Relaxed);
+                self.obs.journal.log(
+                    EventKind::RedirectExhausted,
+                    Some(from),
+                    "no dispatchable sibling",
+                );
                 return Err(job);
             };
             self.health[target].begin_jobs(samples);
@@ -783,6 +844,11 @@ impl FleetCore {
         if !self.health[chip].begin_calibration() {
             return false;
         }
+        self.obs.journal.log(
+            EventKind::CalibDrain,
+            Some(chip),
+            reason.as_str(),
+        );
         let job = ChipJob::Calibrate { reps, reason, resp, drain_token };
         // On a dead worker try_send marks the chip dead; dropping the
         // returned job drops any drain-token clone inside it, so the
@@ -875,6 +941,12 @@ impl FleetCore {
         &self.telemetry
     }
 
+    /// The fleet's observability surface (metrics registry, stage
+    /// tracer, event journal).
+    pub fn obs(&self) -> &ObsHub {
+        &self.obs
+    }
+
     pub fn chip_snapshots(&self) -> Vec<ChipHealthSnapshot> {
         self.health.iter().map(|h| h.snapshot()).collect()
     }
@@ -888,7 +960,7 @@ impl FleetCore {
              \"shed\":{},\"redirects\":{},\"redirects_exhausted\":{},\
              \"fault_errors\":{},\"mean_host_us\":{:.1},\"p50_us\":{:.1},\
              \"p95_us\":{:.1},\"p99_us\":{:.1},\"mean_sim_time_us\":{:.3},\
-             \"per_chip\":[",
+             \"stages\":{{\"host\":[",
             self.size(),
             self.healthy_count(),
             self.calibrating_count(),
@@ -904,6 +976,28 @@ impl FleetCore {
             t.p99_us,
             t.mean_sim_time_us,
         );
+        let push_stages =
+            |s: &mut String, stats: &[crate::obs::StageStat]| {
+                for (i, st) in stats.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(&format!(
+                        "{{\"stage\":\"{}\",\"count\":{},\"mean_us\":{:.3},\
+                         \"p50_us\":{:.3},\"p95_us\":{:.3},\"p99_us\":{:.3}}}",
+                        st.name,
+                        st.count,
+                        st.mean_us,
+                        st.p50_us,
+                        st.p95_us,
+                        st.p99_us,
+                    ));
+                }
+            };
+        push_stages(&mut s, &self.obs.tracer.host_stage_stats());
+        s.push_str("],\"sim\":[");
+        push_stages(&mut s, &self.obs.tracer.sim_stage_stats());
+        s.push_str("]},\"per_chip\":[");
         for (i, h) in self.chip_snapshots().iter().enumerate() {
             if i > 0 {
                 s.push(',');
@@ -926,6 +1020,171 @@ impl FleetCore {
         }
         s.push_str("]}");
         s
+    }
+
+    /// The unified metrics snapshot behind the `metrics` wire command:
+    /// registry-owned metrics first, then the scattered fleet stats
+    /// (telemetry, scheduler/failover counters, per-chip health, stage
+    /// quantiles) folded into the same [`MetricSample`] shape — one
+    /// snapshot, rendered by `obs::expo` as JSON or Prometheus text.
+    pub fn metrics_samples(&self) -> Vec<MetricSample> {
+        let state_code = |s: ChipState| match s {
+            ChipState::Healthy => 0.0,
+            ChipState::Unhealthy => 1.0,
+            ChipState::Dead => 2.0,
+            ChipState::Calibrating => 3.0,
+        };
+        let mut out = self.obs.registry.snapshot();
+        let t = self.telemetry.snapshot();
+        out.push(MetricSample::counter(
+            "bss2_fleet_served_total",
+            "Completed inferences across the fleet.",
+            t.served as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_fleet_shed_total",
+            "Requests shed (admission control + transport rejects).",
+            self.shed_count() as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_fleet_redirects_total",
+            "Jobs transparently failed over onto another replica.",
+            self.redirect_count() as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_fleet_redirects_exhausted_total",
+            "Failures that reached a client after the redirect budget ran out.",
+            self.redirects_exhausted_count() as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_fleet_fault_errors_total",
+            "Engine errors carrying the injected-fault tag.",
+            self.injected_fault_errors() as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_fleet_recalibrations_total",
+            "Completed recalibrations across the fleet.",
+            self.recalibration_count() as f64,
+        ));
+        out.push(MetricSample::gauge(
+            "bss2_fleet_healthy_chips",
+            "Chips currently admitting work.",
+            self.healthy_count() as f64,
+        ));
+        out.push(MetricSample::gauge(
+            "bss2_fleet_calibrating_chips",
+            "Chips currently drained for recalibration.",
+            self.calibrating_count() as f64,
+        ));
+        for (q, v) in
+            [("0.5", t.p50_us), ("0.95", t.p95_us), ("0.99", t.p99_us)]
+        {
+            out.push(
+                MetricSample::gauge(
+                    "bss2_host_latency_us",
+                    "Host latency quantiles [µs].",
+                    v,
+                )
+                .with_label("quantile", q),
+            );
+        }
+        out.push(MetricSample::gauge(
+            "bss2_host_latency_mean_us",
+            "Mean host latency [µs].",
+            t.mean_host_us,
+        ));
+        out.push(MetricSample::gauge(
+            "bss2_sim_time_mean_us",
+            "Mean simulated inference time [µs/sample] (paper: 276).",
+            t.mean_sim_time_us,
+        ));
+        let snaps = self.chip_snapshots();
+        for (i, h) in snaps.iter().enumerate() {
+            out.push(
+                MetricSample::counter(
+                    "bss2_chip_served_total",
+                    "Samples served, per chip.",
+                    h.served as f64,
+                )
+                .with_label("chip", i),
+            );
+        }
+        for (i, h) in snaps.iter().enumerate() {
+            out.push(
+                MetricSample::counter(
+                    "bss2_chip_errors_total",
+                    "Error events, per chip.",
+                    h.errors as f64,
+                )
+                .with_label("chip", i),
+            );
+        }
+        for (i, h) in snaps.iter().enumerate() {
+            out.push(
+                MetricSample::gauge(
+                    "bss2_chip_inflight",
+                    "Admitted-but-incomplete samples, per chip.",
+                    h.inflight as f64,
+                )
+                .with_label("chip", i),
+            );
+        }
+        for (i, h) in snaps.iter().enumerate() {
+            out.push(
+                MetricSample::gauge(
+                    "bss2_chip_state",
+                    "Chip state (0 healthy, 1 unhealthy, 2 dead, \
+                     3 calibrating).",
+                    state_code(h.state),
+                )
+                .with_label("chip", i),
+            );
+        }
+        for st in self.obs.tracer.host_stage_stats() {
+            for (q, v) in [
+                ("0.5", st.p50_us),
+                ("0.95", st.p95_us),
+                ("0.99", st.p99_us),
+            ] {
+                out.push(
+                    MetricSample::gauge(
+                        "bss2_host_stage_us",
+                        "Host span stage quantiles [µs].",
+                        v,
+                    )
+                    .with_label("stage", st.name)
+                    .with_label("quantile", q),
+                );
+            }
+        }
+        for st in self.obs.tracer.sim_stage_stats() {
+            for (q, v) in [
+                ("0.5", st.p50_us),
+                ("0.95", st.p95_us),
+                ("0.99", st.p99_us),
+            ] {
+                out.push(
+                    MetricSample::gauge(
+                        "bss2_sim_stage_us",
+                        "Simulated chip-time stage quantiles [µs/sample].",
+                        v,
+                    )
+                    .with_label("stage", st.name)
+                    .with_label("quantile", q),
+                );
+            }
+        }
+        out.push(MetricSample::counter(
+            "bss2_trace_spans_total",
+            "Completed spans observed by the stage tracer.",
+            self.obs.tracer.seen() as f64,
+        ));
+        out.push(MetricSample::counter(
+            "bss2_journal_events_total",
+            "Events appended to the structured journal.",
+            self.obs.journal.next_seq() as f64,
+        ));
+        out
     }
 }
 
@@ -994,6 +1253,11 @@ fn chip_worker<F>(
         }
         Err(e) => {
             health.mark_dead(&format!("engine init: {e}"));
+            core.obs.journal.log(
+                EventKind::ChipDead,
+                Some(chip),
+                &format!("engine init: {e}"),
+            );
             let _ = ack.send((chip, Err(e.to_string())));
             drop(ack);
             // Drain with failover (or error replies) so racing clients
@@ -1023,14 +1287,37 @@ fn chip_worker<F>(
 
     while let Ok(job) = rx.recv() {
         match job {
-            ChipJob::Classify { traces, admitted, resp, redirects_left } => {
+            ChipJob::Classify {
+                traces,
+                admitted,
+                enq,
+                retry_ns,
+                resp,
+                redirects_left,
+            } => {
                 let samples = traces.len();
+                let dequeued = Instant::now();
                 // One engine program per job: a 1-batch is bit-identical
                 // to the legacy single-trace path, larger batches amortise
                 // weight reconfiguration (Engine::classify_batch).
                 match engine.classify_batch(&traces) {
                     Ok(infs) => {
-                        let host_us = admitted.elapsed().as_secs_f64() * 1e6;
+                        let done = Instant::now();
+                        let host_us = done
+                            .saturating_duration_since(admitted)
+                            .as_secs_f64()
+                            * 1e6;
+                        let host = HostStages {
+                            queue_ns: dequeued
+                                .saturating_duration_since(enq)
+                                .as_nanos()
+                                as u64,
+                            execute_ns: done
+                                .saturating_duration_since(dequeued)
+                                .as_nanos()
+                                as u64,
+                            retry_ns,
+                        };
                         let mut total_sim_ns = 0u64;
                         for inf in &infs {
                             let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
@@ -1040,6 +1327,16 @@ fn chip_worker<F>(
                         }
                         health.record_batch_success(samples, total_sim_ns);
                         health.set_chip_time_us(engine.chip_time_us());
+                        core.obs.tracer.observe(
+                            chip,
+                            if samples == 1 { "classify" } else { "batch" },
+                            samples,
+                            core.redirects_budget - redirects_left,
+                            host,
+                            infs.first()
+                                .map(|i| i.stages)
+                                .unwrap_or_default(),
+                        );
                         // The client may have given up; a closed reply
                         // channel is fine.
                         let _ = resp.send(ChipReply {
@@ -1054,8 +1351,24 @@ fn chip_worker<F>(
                             core.failover
                                 .injected
                                 .fetch_add(1, Ordering::Relaxed);
+                            core.obs.journal.log(
+                                EventKind::FaultFired,
+                                Some(chip),
+                                &msg,
+                            );
                         }
+                        let was_healthy =
+                            health.state() == ChipState::Healthy;
                         health.record_batch_error(samples, &msg);
+                        if was_healthy
+                            && health.state() == ChipState::Unhealthy
+                        {
+                            core.obs.journal.log(
+                                EventKind::ChipQuarantined,
+                                Some(chip),
+                                &msg,
+                            );
+                        }
                         health.set_chip_time_us(engine.chip_time_us());
                         // Transparent failover: hand the whole job to a
                         // healthy sibling; the reply channel travels with
@@ -1064,6 +1377,8 @@ fn chip_worker<F>(
                         let job = ChipJob::Classify {
                             traces,
                             admitted,
+                            enq,
+                            retry_ns,
                             resp,
                             redirects_left,
                         };
@@ -1073,18 +1388,49 @@ fn chip_worker<F>(
                     }
                 }
             }
-            ChipJob::ClassifyActs { acts, admitted, resp, redirects_left } => {
+            ChipJob::ClassifyActs {
+                acts,
+                admitted,
+                enq,
+                retry_ns,
+                resp,
+                redirects_left,
+            } => {
+                let dequeued = Instant::now();
                 // One activation frame from the streaming frontend: the
                 // chip runs the three analog passes; preprocessing
                 // already happened incrementally on the FPGA side.
                 match engine.classify_acts(&acts) {
                     Ok(inf) => {
-                        let host_us = admitted.elapsed().as_secs_f64() * 1e6;
+                        let done = Instant::now();
+                        let host_us = done
+                            .saturating_duration_since(admitted)
+                            .as_secs_f64()
+                            * 1e6;
+                        let host = HostStages {
+                            queue_ns: dequeued
+                                .saturating_duration_since(enq)
+                                .as_nanos()
+                                as u64,
+                            execute_ns: done
+                                .saturating_duration_since(dequeued)
+                                .as_nanos()
+                                as u64,
+                            retry_ns,
+                        };
                         let sim_ns = (inf.sim_time_s * 1e9).round() as u64;
                         telemetry.record(chip, host_us, sim_ns);
                         monitor.record_scores(&inf.scores);
                         health.record_batch_success(1, sim_ns);
                         health.set_chip_time_us(engine.chip_time_us());
+                        core.obs.tracer.observe(
+                            chip,
+                            "acts",
+                            1,
+                            core.redirects_budget - redirects_left,
+                            host,
+                            inf.stages,
+                        );
                         let _ = resp.send(ChipReply {
                             chip,
                             host_latency_us: host_us,
@@ -1097,8 +1443,24 @@ fn chip_worker<F>(
                             core.failover
                                 .injected
                                 .fetch_add(1, Ordering::Relaxed);
+                            core.obs.journal.log(
+                                EventKind::FaultFired,
+                                Some(chip),
+                                &msg,
+                            );
                         }
+                        let was_healthy =
+                            health.state() == ChipState::Healthy;
                         health.record_batch_error(1, &msg);
+                        if was_healthy
+                            && health.state() == ChipState::Unhealthy
+                        {
+                            core.obs.journal.log(
+                                EventKind::ChipQuarantined,
+                                Some(chip),
+                                &msg,
+                            );
+                        }
                         health.set_chip_time_us(engine.chip_time_us());
                         // In-flight stream windows are re-dispatched, not
                         // dropped: the window's result line still arrives
@@ -1106,6 +1468,8 @@ fn chip_worker<F>(
                         let job = ChipJob::ClassifyActs {
                             acts,
                             admitted,
+                            enq,
+                            retry_ns,
                             resp,
                             redirects_left,
                         };
@@ -1124,6 +1488,14 @@ fn chip_worker<F>(
                         let residual = profile.worst_residual();
                         health.finish_calibration(stamp, residual);
                         monitor.reset();
+                        core.obs.journal.log(
+                            EventKind::CalibReadmit,
+                            Some(chip),
+                            &format!(
+                                "{} residual {residual:.3} LSB",
+                                reason.as_str()
+                            ),
+                        );
                         log::info!(
                             "chip {chip}: recalibrated ({}), residual \
                              {residual:.3} LSB",
@@ -1134,6 +1506,11 @@ fn chip_worker<F>(
                     Err(e) => {
                         let msg = format!("chip {chip}: {e}");
                         health.fail_calibration(&msg);
+                        core.obs.journal.log(
+                            EventKind::CalibFailed,
+                            Some(chip),
+                            &msg,
+                        );
                         log::warn!("recalibration failed: {msg}");
                         Err(msg)
                     }
@@ -1375,6 +1752,132 @@ mod tests {
             j.get("redirects_exhausted").and_then(|v| v.as_uint()),
             Some(0)
         );
+        // The additive stage block: host + sim per-stage aggregates.
+        let stages = j.get("stages").expect("stages block");
+        let host = stages.get("host").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(host.len(), 3);
+        assert_eq!(host[0].get("stage").and_then(|v| v.as_str()), Some("queue"));
+        let sim = stages.get("sim").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(sim.len(), 8);
+        assert!(sim
+            .iter()
+            .any(|s| s.get("stage").and_then(|v| v.as_str())
+                == Some("weight_write")));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn span_stages_sum_to_host_latency() {
+        let fleet = fleet_with(FleetConfig {
+            chips: 1,
+            queue_depth: 8,
+            trace_sample: 1,
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(23, true, 1.0);
+        match fleet.dispatch(trace) {
+            DispatchOutcome::Enqueued { resp, .. } => {
+                let reply = resp.recv().unwrap();
+                let infs = reply.result.unwrap();
+                let spans = fleet.obs().tracer.recent(1);
+                assert_eq!(spans.len(), 1);
+                // Host stages are contiguous: they sum to the reply's
+                // end-to-end latency (same Instant chain, float-rounding
+                // slop only).
+                let total_us = spans[0].host.total_ns() as f64 / 1e3;
+                let diff = (total_us - reply.host_latency_us).abs();
+                assert!(
+                    diff < 1e-3,
+                    "span {total_us} µs vs e2e {} µs",
+                    reply.host_latency_us
+                );
+                // Sim stages sum to the inference's simulated time.
+                let sim_us = infs[0].sim_time_s * 1e6;
+                assert!((spans[0].sim.total_us() - sim_us).abs() < 1e-6);
+            }
+            DispatchOutcome::Shed { .. } => panic!("unexpected shed"),
+        }
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn spans_and_journal_capture_failover() {
+        let fleet = fleet_with(FleetConfig {
+            chips: 2,
+            queue_depth: 16,
+            redirects: 2,
+            trace_sample: 1,
+            fault_plan: Some(death_plan(1)),
+            ..Default::default()
+        });
+        let trace = crate::ecg::gen::generate_trace(21, true, 1.0);
+        for _ in 0..12 {
+            fleet.classify_blocking(&trace).unwrap();
+        }
+        let spans = fleet.obs().tracer.recent(usize::MAX);
+        assert_eq!(spans.len(), 12, "trace_sample=1 keeps every span");
+        for s in &spans {
+            assert_eq!(s.chip, 0, "only chip 0 can actually serve");
+            assert_eq!(s.kind, "classify");
+            assert!(s.sim.total_us() > 100.0, "sim stages populated");
+            assert!(s.host.execute_ns > 0);
+        }
+        assert!(
+            spans.iter().any(|s| s.redirects >= 1 && s.host.retry_ns > 0),
+            "redirected jobs must carry retry time in their span"
+        );
+        // The journal saw the injected faults and, once chip 1 crossed
+        // its error threshold (round-robin guarantees ≥ 3 picks in 12
+        // sequential requests), the quarantine transition.
+        let events = fleet.obs().journal.since(0);
+        assert!(events
+            .iter()
+            .any(|e| e.kind == EventKind::FaultFired && e.chip == Some(1)));
+        assert!(events.iter().any(
+            |e| e.kind == EventKind::ChipQuarantined && e.chip == Some(1)
+        ));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn metrics_samples_unify_registry_and_fleet_stats() {
+        let fleet = fleet_with(FleetConfig {
+            chips: 2,
+            queue_depth: 8,
+            ..Default::default()
+        });
+        // Registry-owned metrics appear in the same snapshot.
+        fleet.obs().registry.counter("bss2_test_custom", "Custom.").add(7);
+        let trace = crate::ecg::gen::generate_trace(22, false, 1.0);
+        for _ in 0..3 {
+            fleet.classify_blocking(&trace).unwrap();
+        }
+        let samples = fleet.metrics_samples();
+        let get = |name: &str| {
+            samples.iter().find(|s| s.name == name).map(|s| s.value)
+        };
+        assert_eq!(get("bss2_test_custom"), Some(7.0));
+        assert_eq!(get("bss2_fleet_served_total"), Some(3.0));
+        assert_eq!(get("bss2_fleet_healthy_chips"), Some(2.0));
+        assert!(get("bss2_sim_time_mean_us").unwrap() > 100.0);
+        assert_eq!(
+            samples
+                .iter()
+                .filter(|s| s.name == "bss2_chip_served_total")
+                .count(),
+            2,
+            "one per-chip sample per replica"
+        );
+        // Stage quantiles are labeled by stage name.
+        assert!(samples.iter().any(|s| s.name == "bss2_sim_stage_us"
+            && s.labels.iter().any(|(k, v)| k == "stage" && v == "vmm")));
+        // Both expositions render the same snapshot.
+        let txt = crate::obs::expo::prometheus(&samples);
+        assert!(txt.contains("bss2_fleet_served_total 3"), "{txt}");
+        assert!(txt.contains("bss2_chip_served_total{chip=\"0\"}"), "{txt}");
+        let json = crate::obs::expo::json_array(&samples);
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), samples.len());
         fleet.shutdown();
     }
 }

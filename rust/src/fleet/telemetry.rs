@@ -24,6 +24,22 @@ const N_BUCKETS: usize = 64;
 const BASE_US: f64 = 1.0;
 const RATIO: f64 = 1.3;
 
+/// Minimum per-chip rate window [s]: snapshots taken closer together than
+/// this do not advance the window (and rate-compute against this floor),
+/// so concurrent `fleet_stats` pollers cannot corrupt each other's rates.
+pub const MIN_RATE_WINDOW_S: f64 = 0.05;
+
+/// Clamp NaN and negative inputs to 0 (they are clock/measurement bugs,
+/// not latencies; `as u64` would otherwise bucket NaN silently as 0 ns
+/// while still counting it wherever the cast result landed).
+fn sanitize_us(us: f64) -> f64 {
+    if us.is_finite() && us > 0.0 {
+        us
+    } else {
+        0.0
+    }
+}
+
 fn bucket_of(us: f64) -> usize {
     if us <= BASE_US {
         return 0;
@@ -54,9 +70,14 @@ impl LatencyHistogram {
     }
 
     pub fn record_us(&self, us: f64) {
+        // NaN and negative latencies are measurement bugs, not data: clamp
+        // them to zero instead of letting `as u64` silently bucket them.
+        let us = sanitize_us(us);
         self.counts[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add((us * 1e3) as u64, Ordering::Relaxed);
+        // Round to the nearest ns: flooring every sample systematically
+        // understated the mean by up to 1 ns/sample.
+        self.sum_ns.fetch_add((us * 1e3).round() as u64, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -159,8 +180,10 @@ impl FleetTelemetry {
         self.sim_time_ns_sum.fetch_add(sim_time_ns, Ordering::Relaxed);
         if let Some(c) = self.per_chip.get(chip) {
             c.completed.fetch_add(1, Ordering::Relaxed);
-            c.host_ns_sum
-                .fetch_add((host_latency_us * 1e3) as u64, Ordering::Relaxed);
+            c.host_ns_sum.fetch_add(
+                (sanitize_us(host_latency_us) * 1e3).round() as u64,
+                Ordering::Relaxed,
+            );
         }
     }
 
@@ -173,14 +196,22 @@ impl FleetTelemetry {
     }
 
     /// Point-in-time snapshot.  Per-chip `jobs/s` covers the window since
-    /// the *previous* snapshot (first call: since fleet start), so
-    /// back-to-back `fleet_stats` queries read current throughput.
+    /// the last window *advance*, and the window only advances once at
+    /// least [`MIN_RATE_WINDOW_S`] has elapsed: two monitoring clients
+    /// polling `fleet_stats` back to back no longer reset each other's
+    /// window to a near-zero dt (which turned per-chip jobs/s into
+    /// garbage).  Reads inside the floor are read-only and rate-compute
+    /// against the floor, so they are idempotent.
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let served = self.served();
         let now = Instant::now();
         let elapsed = (now - self.started).as_secs_f64().max(1e-9);
         let mut window = self.window.lock().unwrap();
-        let dt = (now - window.at).as_secs_f64().max(1e-9);
+        let dt = (now - window.at).as_secs_f64();
+        // Rate denominator is floored: a snapshot taken moments after the
+        // previous advance reports a slightly *conservative* rate instead
+        // of an inflated one.
+        let eff_dt = dt.max(MIN_RATE_WINDOW_S);
         let per_chip = self
             .per_chip
             .iter()
@@ -193,12 +224,14 @@ impl FleetTelemetry {
                     0.0
                 };
                 let prev = window.completed.get(i).copied().unwrap_or(0);
-                let rate = n.saturating_sub(prev) as f64 / dt;
+                let rate = n.saturating_sub(prev) as f64 / eff_dt;
                 (n, mean, rate)
             })
             .collect::<Vec<_>>();
-        window.at = now;
-        window.completed = per_chip.iter().map(|c| c.0).collect();
+        if dt >= MIN_RATE_WINDOW_S {
+            window.at = now;
+            window.completed = per_chip.iter().map(|c| c.0).collect();
+        }
         drop(window);
         TelemetrySnapshot {
             served,
@@ -298,6 +331,50 @@ mod tests {
         // Out-of-range chip ids are ignored, not panicking.
         t.record(9, 100.0, 1);
         assert_eq!(t.snapshot().served, 4);
+    }
+
+    #[test]
+    fn record_rounds_instead_of_flooring() {
+        // 0.4999 µs floors to 0 ns but rounds to 500 ns/sample; the old
+        // truncation understated this mean by 100 %.
+        let h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record_us(0.4999);
+        }
+        assert!((h.mean_us() - 0.5).abs() < 1e-3, "mean {}", h.mean_us());
+    }
+
+    #[test]
+    fn nan_and_negative_latencies_are_clamped() {
+        let h = LatencyHistogram::new();
+        h.record_us(f64::NAN);
+        h.record_us(-17.0);
+        h.record_us(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 3, "clamped samples still count");
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(99.0), bucket_mid_us(0));
+        // Fleet-level record path tolerates them too.
+        let t = FleetTelemetry::new(1);
+        t.record(0, f64::NAN, 0);
+        assert_eq!(t.snapshot().per_chip[0].1, 0.0);
+    }
+
+    #[test]
+    fn concurrent_snapshots_do_not_corrupt_rates() {
+        // Two monitoring clients polling back to back: the second read
+        // lands inside the rate-window floor, stays read-only, and both
+        // report a sane (non-inflated, non-zero) rate.
+        let t = FleetTelemetry::new(1);
+        for _ in 0..10 {
+            t.record(0, 300.0, 276_000);
+        }
+        let a = t.snapshot();
+        let b = t.snapshot(); // immediately after: inside the floor
+        assert!(a.per_chip[0].2 > 0.0);
+        // Neither read can report more than delta/floor.
+        let cap = 10.0 / MIN_RATE_WINDOW_S + 1e-9;
+        assert!(a.per_chip[0].2 <= cap, "rate {} > cap {cap}", a.per_chip[0].2);
+        assert!(b.per_chip[0].2 <= cap, "rate {} > cap {cap}", b.per_chip[0].2);
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //!   schedules of hardware faults (dead columns, ADC saturation, link
 //!   corruption, frame drops, latency spikes, chip death) armed on the
 //!   simulated hardware for chaos/soak testing (`repro chaos`).
+//! * [`obs`] — fleet-wide observability: unified metrics registry,
+//!   stage-level request tracing (host-ns + simulated chip-time), and
+//!   the bounded structured event journal behind the `metrics`/`trace`/
+//!   `journal` wire commands and `repro bench`.
 //! * [`ecg`] — synthetic ECG: windowed generator, continuous
 //!   episode-labeled stream source, binary dataset reader.
 //! * [`baselines`] — comparison platforms of paper §V.
@@ -37,6 +41,7 @@ pub mod fault;
 pub mod fleet;
 pub mod fpga;
 pub mod nn;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod util;

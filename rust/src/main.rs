@@ -37,6 +37,7 @@ fn main() {
         "baselines" => baselines_cmd(&args),
         "classify" => classify(&args),
         "calibrate" => calibrate(&args),
+        "bench" => bench(&args),
         "chaos" => chaos(&args),
         "serve" => serve(&args),
         "monitor" => monitor(&args),
@@ -87,6 +88,14 @@ COMMANDS:
                                             armed and prints a deterministic
                                             survival report (same seed =
                                             byte-identical report)
+  bench        deterministic perf benchmark (--area serving|batch|stream|
+                                            drift --n 64 --out FILE
+                                            --gate BASELINE): writes
+                                            BENCH_<area>.json with gated
+                                            simulated-time/energy metrics;
+                                            --gate fails (exit 1) when a
+                                            gated metric regresses >20%
+                                            against the baseline file
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
 
 OPTIONS (common):
@@ -116,6 +125,13 @@ OPTIONS (common):
   --redirects K     serve/chaos: transparent-failover budget — how often
                     one failed job may be retried on a healthy replica
                     before its error reaches the client (default 2)
+  --trace-sample N  serve: keep every Nth request span whole in the trace
+                    ring for the `trace` wire command (default 16; 0
+                    disables the ring — per-stage histograms, `metrics`
+                    and `fleet_stats` always record)
+  --json            chaos/monitor: emit one machine-readable JSON summary
+                    object instead of the human report (chaos --json is
+                    byte-identical per seed, like the text report)
 ";
 
 fn env_logger_init() {
@@ -526,6 +542,181 @@ fn calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Deterministic perf benchmark with a persisted trajectory: run one
+/// serving area against the native engine, write `BENCH_<area>.json`, and
+/// optionally gate against a committed baseline file.
+///
+/// Gated metrics are *simulated* chip time and energy — pure functions of
+/// the model, so a regression means the timing/energy model (or the code
+/// path feeding it) changed, never that CI ran on a slower machine.  Host
+/// wall-clock goes into `info` for trend-watching only.
+fn bench(args: &Args) -> anyhow::Result<()> {
+    use bss2::nn::weights::TrainedModel;
+    use std::fmt::Write as _;
+
+    let area = args.str_or("area", "serving");
+    let n = args.usize_or("n", 64)?.max(1);
+    let seed = args.u64_or("seed", 7)?;
+    let default_out = format!("BENCH_{area}.json");
+    let out = args.str_or("out", &default_out);
+    let mk = |chip: usize| {
+        Engine::native(
+            TrainedModel::synthetic(0xF1EE7),
+            EngineConfig {
+                use_pjrt: false,
+                noise_off: true,
+                ..Default::default()
+            }
+            .for_chip(chip),
+        )
+    };
+
+    // (metric name, value); every gated metric is lower-is-better.
+    let mut gated: Vec<(&str, f64)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    match area.as_str() {
+        "serving" => {
+            // The paper's single-trace path: 276 µs/sample, ~1.56 mJ.
+            let mut engine = mk(0);
+            let traces: Vec<_> = TraceStream::new(seed, 1.0).take(n).collect();
+            let (mut sim_s, mut e_j) = (0.0, 0.0);
+            for t in &traces {
+                let inf = &engine.classify_batch(std::slice::from_ref(t))?[0];
+                sim_s += inf.sim_time_s;
+                e_j += inf.energy.total_j();
+            }
+            gated.push(("us_per_sample", sim_s * 1e6 / n as f64));
+            gated.push(("energy_mj_per_sample", e_j * 1e3 / n as f64));
+        }
+        "batch" => {
+            // Amortised path: one weight reconfiguration per layer per
+            // batch (DESIGN.md §9).
+            let batch = args.usize_or("batch", 32)?.max(1);
+            let mut engine = mk(0);
+            let traces: Vec<_> = TraceStream::new(seed, 1.0).take(n).collect();
+            let (mut sim_s, mut e_j, mut served) = (0.0, 0.0, 0usize);
+            for chunk in traces.chunks(batch) {
+                for inf in engine.classify_batch(chunk)? {
+                    sim_s += inf.sim_time_s;
+                    e_j += inf.energy.total_j();
+                    served += 1;
+                }
+            }
+            gated.push(("us_per_sample", sim_s * 1e6 / served as f64));
+            gated.push(("energy_mj_per_sample", e_j * 1e3 / served as f64));
+        }
+        "stream" => {
+            // The monitoring path: preprocessed windows via classify_acts
+            // (no per-window weight rewrite of the conv layer input).
+            let mut engine = mk(0);
+            let traces: Vec<_> = TraceStream::new(seed, 1.0).take(n).collect();
+            let (mut sim_s, mut e_j) = (0.0, 0.0);
+            for t in &traces {
+                let acts: Vec<i32> =
+                    bss2::fpga::preprocess::preprocess(&t.samples)
+                        .into_iter()
+                        .map(|a| a as i32)
+                        .collect();
+                let inf = engine.classify_acts(&acts)?;
+                sim_s += inf.sim_time_s;
+                e_j += inf.energy.total_j();
+            }
+            gated.push(("us_per_window", sim_s * 1e6 / n as f64));
+            gated.push(("energy_mj_per_window", e_j * 1e3 / n as f64));
+        }
+        "drift" => {
+            // Drift-compensation loop: age a drifting chip, recalibrate,
+            // and gate the residual and the measurement's chip-time cost.
+            let reps = args.usize_or("reps", 32)?.max(1);
+            let mut engine = Engine::native(
+                TrainedModel::synthetic(0xF1EE7),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    fpn_seed: Some(0xD21F7),
+                    drift: Some(bss2::calib::drift::DriftParams::default()),
+                    ..Default::default()
+                },
+            );
+            engine.advance_idle_us(5_000_000);
+            let profile = engine.recalibrate(reps)?;
+            let residual = (profile.residual_rms[0] as f64
+                + profile.residual_rms[1] as f64)
+                / 2.0;
+            gated.push(("residual_rms_lsb", residual));
+            gated.push((
+                "recalib_cost_us",
+                bss2::calib::CalibProfile::measurement_cost_us(reps),
+            ));
+        }
+        other => anyhow::bail!(
+            "unknown bench area `{other}` (serving|batch|stream|drift)"
+        ),
+    }
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let mut s = format!(
+        "{{\"schema\":\"bss2-bench-v1\",\"bench\":\"{area}\",\"gated\":{{"
+    );
+    for (i, (name, v)) in gated.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        write!(s, "\"{name}\":{{\"value\":{v:.4},\"better\":\"lower\"}}")
+            .unwrap();
+    }
+    write!(
+        s,
+        "}},\"info\":{{\"n\":{n},\"seed\":{seed},\"host_wall_us\":{:.1}}}}}",
+        wall_us
+    )
+    .unwrap();
+    s.push('\n');
+    std::fs::write(&out, &s)?;
+    println!("[bench] area {area} over {n} iteration(s):");
+    for (name, v) in &gated {
+        println!("[bench]   {name} = {v:.4}");
+    }
+    println!("[bench] wrote {out}");
+
+    if let Some(base_path) = args.get("gate") {
+        let text = std::fs::read_to_string(base_path)
+            .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
+        let base = bss2::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
+        let bg = base.get("gated").ok_or_else(|| {
+            anyhow::anyhow!("--gate {base_path}: no `gated` object")
+        })?;
+        let mut failures = Vec::new();
+        for (name, v) in &gated {
+            let baseline = bg
+                .get(name)
+                .and_then(|m| m.get("value"))
+                .and_then(|x| x.as_f64());
+            let Some(b) = baseline else {
+                println!("[bench]   {name}: no baseline value (skipped)");
+                continue;
+            };
+            let fail = *v > b * 1.2;
+            println!(
+                "[bench]   {name}: {v:.4} vs baseline {b:.4} ({:+.1}%){}",
+                (v / b - 1.0) * 100.0,
+                if fail { "  REGRESSION" } else { "" }
+            );
+            if fail {
+                failures.push(*name);
+            }
+        }
+        anyhow::ensure!(
+            failures.is_empty(),
+            "bench gate failed (>20% regression vs {base_path}): {}",
+            failures.join(", ")
+        );
+        println!("[bench] gate vs {base_path}: OK");
+    }
+    Ok(())
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
     use bss2::fleet::FleetConfig;
     let addr = args.str_or("addr", "127.0.0.1:7001");
@@ -548,6 +739,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         allow_remote_shutdown: args.flag("allow-remote-shutdown"),
         max_connections: args.usize_or("max-conns", 256)?.max(1),
         redirects: args.usize_or("redirects", 2)? as u32,
+        // Observability: keep every Nth full request span for the `trace`
+        // wire command (0 = histograms only).
+        trace_sample: args.u64_or("trace-sample", 16)?,
         // Deterministic fault injection on the simulated hardware (the
         // chaos/soak machinery; see `repro chaos` and DESIGN.md §12).
         fault_plan: match args.get("fault-plan") {
@@ -611,7 +805,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "[serve] experiment service on {} — fleet of {} chip{} \
          (queue depth {} samples/chip; line-delimited JSON; \
          {{\"cmd\":\"ping\"}} / classify / classify_batch / \
-         stream_open|push|close / stats / fleet_stats{})",
+         stream_open|push|close / stats / fleet_stats / metrics / trace \
+         / journal{})",
         svc.addr,
         svc.fleet.size(),
         if svc.fleet.size() == 1 { "" } else { "s" },
@@ -655,9 +850,10 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
     let chunk = args.usize_or("chunk", 450)?.clamp(1, MAX_STREAM_CHUNK);
     let seed = args.u64_or("seed", 99)?;
     let queue_depth = args.usize_or("queue-depth", 64)?;
+    let json = args.flag("json");
     let dir = artifact_dir(args);
     let trained = dir.exists();
-    if !trained {
+    if !trained && !json {
         println!(
             "[monitor] no artifacts under {} — untrained energy-detector \
              model (score-sum threshold vs the sinus lead-in)",
@@ -717,13 +913,15 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
             }
         });
 
-    println!(
-        "[monitor] streaming {:.1} min at {} Hz (hop {hop} = {:.2} s per \
-         window step) into a {chips}-chip fleet ...",
-        minutes,
-        c::ECG_FS_HZ,
-        hop as f64 / c::ECG_FS_HZ
-    );
+    if !json {
+        println!(
+            "[monitor] streaming {:.1} min at {} Hz (hop {hop} = {:.2} s \
+             per window step) into a {chips}-chip fleet ...",
+            minutes,
+            c::ECG_FS_HZ,
+            hop as f64 / c::ECG_FS_HZ
+        );
+    }
     let t0 = std::time::Instant::now();
     let mut pushed = 0usize;
     while pushed < total {
@@ -814,11 +1012,13 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
         }
     };
     if let Some(s) = &lead_summary {
-        println!(
-            "[monitor] lead-in score sum {:.1} ± {:.1} LSB -> threshold \
-             {thr:.1}",
-            s.mean, s.std
-        );
+        if !json {
+            println!(
+                "[monitor] lead-in score sum {:.1} ± {:.1} LSB -> threshold \
+                 {thr:.1}",
+                s.mean, s.std
+            );
+        }
     }
 
     // Per-episode detection latency.  `afib_all` keeps *every* afib
@@ -833,22 +1033,24 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
         .copied()
         .filter(|e| e.start + win_len <= total as u64)
         .collect();
-    println!(
-        "\n--- streamed monitoring summary ------------------------------"
-    );
-    println!(
-        "  windows served:    {} in order (+{sheds} shed), {:.1} windows/s \
-         sustained end to end",
-        wins.len(),
-        wins.len() as f64 / wall
-    );
     let spread: std::collections::BTreeMap<usize, usize> =
         wins.iter().fold(Default::default(), |mut m, w| {
             *m.entry(w.chip).or_default() += 1;
             m
         });
-    println!("  chip spread:       {spread:?}");
-    println!("  afib episodes:     {}", episodes.len());
+    if !json {
+        println!(
+            "\n--- streamed monitoring summary ------------------------------"
+        );
+        println!(
+            "  windows served:    {} in order (+{sheds} shed), {:.1} \
+             windows/s sustained end to end",
+            wins.len(),
+            wins.len() as f64 / wall
+        );
+        println!("  chip spread:       {spread:?}");
+        println!("  afib episodes:     {}", episodes.len());
+    }
     let mut latencies = Vec::new();
     for ep in &episodes {
         // Index of the first window covering the onset, computed from
@@ -871,23 +1073,29 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
                 let lat_s =
                     (d.start + win_len - ep.start) as f64 / c::ECG_FS_HZ;
                 latencies.push(lat_windows as f64);
-                println!(
-                    "    episode at {:>7.1} s ({:>5.1} s long): detected \
-                     after {lat_windows} window{} ({lat_s:.1} s of signal \
-                     past onset)",
-                    ep.start as f64 / c::ECG_FS_HZ,
-                    ep.len() as f64 / c::ECG_FS_HZ,
-                    if lat_windows == 1 { "" } else { "s" }
-                );
+                if !json {
+                    println!(
+                        "    episode at {:>7.1} s ({:>5.1} s long): \
+                         detected after {lat_windows} window{} ({lat_s:.1} \
+                         s of signal past onset)",
+                        ep.start as f64 / c::ECG_FS_HZ,
+                        ep.len() as f64 / c::ECG_FS_HZ,
+                        if lat_windows == 1 { "" } else { "s" }
+                    );
+                }
             }
-            None => println!(
-                "    episode at {:>7.1} s ({:>5.1} s long): MISSED",
-                ep.start as f64 / c::ECG_FS_HZ,
-                ep.len() as f64 / c::ECG_FS_HZ
-            ),
+            None => {
+                if !json {
+                    println!(
+                        "    episode at {:>7.1} s ({:>5.1} s long): MISSED",
+                        ep.start as f64 / c::ECG_FS_HZ,
+                        ep.len() as f64 / c::ECG_FS_HZ
+                    );
+                }
+            }
         }
     }
-    if !latencies.is_empty() {
+    if !latencies.is_empty() && !json {
         println!(
             "  detection latency: {:.1} windows mean over {} detected \
              episode{}",
@@ -910,8 +1118,46 @@ fn monitor(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    if sinus_n > 0 {
+    if sinus_n > 0 && !json {
         println!("  false positives:   {fp}/{sinus_n} sinus windows");
+    }
+    if json {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "{{\"windows\":{},\"shed\":{sheds},\"wall_s\":{wall:.3},\
+             \"windows_per_s\":{:.1},\"chip_spread\":[",
+            wins.len(),
+            wins.len() as f64 / wall
+        );
+        for (i, (chip, served)) in spread.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            write!(s, "{{\"chip\":{chip},\"windows\":{served}}}").unwrap();
+        }
+        write!(
+            s,
+            "],\"episodes\":{},\"detected\":{}",
+            episodes.len(),
+            latencies.len()
+        )
+        .unwrap();
+        if latencies.is_empty() {
+            s.push_str(",\"mean_detection_windows\":null");
+        } else {
+            write!(
+                s,
+                ",\"mean_detection_windows\":{:.2}",
+                latencies.iter().sum::<f64>() / latencies.len() as f64
+            )
+            .unwrap();
+        }
+        write!(
+            s,
+            ",\"false_positives\":{fp},\"sinus_windows\":{sinus_n}}}"
+        )
+        .unwrap();
+        println!("{s}");
     }
     svc.stop();
     Ok(())
@@ -958,17 +1204,20 @@ fn chaos(args: &Args) -> anyhow::Result<()> {
     // Same definition as the chaos soak tests, so CLI verdicts and test
     // assertions can never disagree about what "survived" means.
     let floor = chips - plan.erroring_chips(chips);
-    println!(
-        "[chaos] seed {seed}, {chips} chips, {requests} samples, redirect \
-         budget {redirects}, queue depth {queue_depth}, probe period \
-         {probe_period}"
-    );
-    println!(
-        "[chaos] fault plan ({} fault(s), horizon ~{horizon_us} µs):",
-        plan.faults.len()
-    );
-    for f in &plan.faults {
-        println!("[chaos]   - {}", f.describe());
+    let json = args.flag("json");
+    if !json {
+        println!(
+            "[chaos] seed {seed}, {chips} chips, {requests} samples, \
+             redirect budget {redirects}, queue depth {queue_depth}, probe \
+             period {probe_period}"
+        );
+        println!(
+            "[chaos] fault plan ({} fault(s), horizon ~{horizon_us} µs):",
+            plan.faults.len()
+        );
+        for f in &plan.faults {
+            println!("[chaos]   - {}", f.describe());
+        }
     }
 
     let fleet_plan = plan.clone();
@@ -1048,41 +1297,92 @@ fn chaos(args: &Args) -> anyhow::Result<()> {
         }
     }
 
-    println!(
-        "[chaos] outcome over {sent} samples: {ok} ok, {shed} shed, \
-         {failed} failed, {lost} lost"
-    );
-    println!(
-        "[chaos] failover: {} redirect(s), {} exhausted, {} injected \
-         failure(s) observed",
-        fleet.redirect_count(),
-        fleet.redirects_exhausted_count(),
-        fleet.injected_fault_errors()
-    );
     let healthy = fleet.healthy_count();
-    println!(
-        "[chaos] fleet end state: {healthy}/{chips} healthy \
-         (erroring-fault floor {floor})"
-    );
-    for (i, s) in fleet.chip_snapshots().iter().enumerate() {
+    let survived = lost == 0 && healthy >= floor.max(1);
+    let verdict = if survived {
+        "survived"
+    } else if lost > 0 {
+        "failed"
+    } else {
+        "degraded"
+    };
+    if json {
+        // One machine-readable object; like the text report it contains
+        // only seed-deterministic values (no wall-clock), so the same
+        // seed prints byte-identical JSON.
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "{{\"seed\":{seed},\"chips\":{chips},\"samples\":{sent},\
+             \"redirect_budget\":{redirects},\"faults\":["
+        );
+        for (i, f) in plan.faults.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&bss2::util::json::Json::Str(f.describe()).to_string());
+        }
+        write!(
+            s,
+            "],\"ok\":{ok},\"shed\":{shed},\"failed\":{failed},\
+             \"lost\":{lost},\"redirects\":{},\"redirects_exhausted\":{},\
+             \"fault_errors\":{},\"healthy\":{healthy},\"floor\":{floor},\
+             \"per_chip\":[",
+            fleet.redirect_count(),
+            fleet.redirects_exhausted_count(),
+            fleet.injected_fault_errors()
+        )
+        .unwrap();
+        for (i, cs) in fleet.chip_snapshots().iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            write!(
+                s,
+                "{{\"chip\":{i},\"state\":\"{}\",\"served\":{},\
+                 \"errors\":{}}}",
+                cs.state.as_str(),
+                cs.served,
+                cs.errors
+            )
+            .unwrap();
+        }
+        write!(s, "],\"verdict\":\"{verdict}\"}}").unwrap();
+        println!("{s}");
+    } else {
         println!(
-            "[chaos]   - chip {i}: {:<12} served {:<6} errors {}",
-            s.state.as_str(),
-            s.served,
-            s.errors
+            "[chaos] outcome over {sent} samples: {ok} ok, {shed} shed, \
+             {failed} failed, {lost} lost"
+        );
+        println!(
+            "[chaos] failover: {} redirect(s), {} exhausted, {} injected \
+             failure(s) observed",
+            fleet.redirect_count(),
+            fleet.redirects_exhausted_count(),
+            fleet.injected_fault_errors()
+        );
+        println!(
+            "[chaos] fleet end state: {healthy}/{chips} healthy \
+             (erroring-fault floor {floor})"
+        );
+        for (i, s) in fleet.chip_snapshots().iter().enumerate() {
+            println!(
+                "[chaos]   - chip {i}: {:<12} served {:<6} errors {}",
+                s.state.as_str(),
+                s.served,
+                s.errors
+            );
+        }
+        println!(
+            "[chaos] verdict: {}",
+            if survived {
+                "SURVIVED (every sample answered; serving floor held)"
+            } else if lost > 0 {
+                "FAILED (lost replies — a job fell into silence)"
+            } else {
+                "DEGRADED (served everything, but below the serving floor)"
+            }
         );
     }
-    let survived = lost == 0 && healthy >= floor.max(1);
-    println!(
-        "[chaos] verdict: {}",
-        if survived {
-            "SURVIVED (every sample answered; serving floor held)"
-        } else if lost > 0 {
-            "FAILED (lost replies — a job fell into silence)"
-        } else {
-            "DEGRADED (served everything, but below the serving floor)"
-        }
-    );
     fleet.shutdown();
     anyhow::ensure!(lost == 0, "{lost} replies were lost");
     Ok(())

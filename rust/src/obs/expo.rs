@@ -1,0 +1,169 @@
+//! Exposition of a metrics snapshot: Prometheus text format and the
+//! wire-JSON array.
+//!
+//! Both renderers take the same `Vec<MetricSample>` (the unified
+//! snapshot), so the two formats can never disagree about what exists.
+//! The text format follows the Prometheus 0.0.4 conventions: one
+//! `# HELP` / `# TYPE` pair per metric family (first occurrence wins),
+//! then one `name{labels} value` line per sample.
+
+use crate::util::json::Json;
+
+use super::registry::MetricSample;
+
+/// Render a value the same way in both formats: finite f64 via Rust's
+/// shortest-roundtrip `Display` (integers print without a decimal
+/// point); non-finite values — which only arise from bugs upstream —
+/// clamp to 0 so the JSON exposition stays parseable.
+fn fmt_value(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn escape_label_value(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Prometheus text exposition (content type `text/plain; version=0.0.4`).
+pub fn prometheus(samples: &[MetricSample]) -> String {
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for s in samples {
+        if last_family != Some(s.name.as_str()) {
+            out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
+            out.push_str(&format!("# TYPE {} {}\n", s.name, s.kind.as_str()));
+            last_family = Some(s.name.as_str());
+        }
+        out.push_str(&s.name);
+        if !s.labels.is_empty() {
+            out.push('{');
+            for (i, (k, v)) in s.labels.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{k}=\"{}\"", escape_label_value(v)));
+            }
+            out.push('}');
+        }
+        out.push(' ');
+        out.push_str(&fmt_value(s.value));
+        out.push('\n');
+    }
+    out
+}
+
+/// JSON exposition: an array of sample objects, same order as the text
+/// format (and the same source snapshot).
+pub fn json_array(samples: &[MetricSample]) -> String {
+    let mut out = String::from("[");
+    for (i, s) in samples.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":{},\"kind\":\"{}\",\"value\":{}",
+            Json::Str(s.name.clone()),
+            s.kind.as_str(),
+            fmt_value(s.value)
+        ));
+        if !s.labels.is_empty() {
+            out.push_str(",\"labels\":{");
+            for (j, (k, v)) in s.labels.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{}:{}",
+                    Json::Str(k.clone()),
+                    Json::Str(v.clone())
+                ));
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_set() -> Vec<MetricSample> {
+        vec![
+            MetricSample::counter(
+                "bss2_fleet_served_total",
+                "Completed inferences.",
+                3.0,
+            ),
+            MetricSample::gauge(
+                "bss2_host_latency_us",
+                "Host latency quantiles.",
+                276.5,
+            )
+            .with_label("quantile", "0.5"),
+            MetricSample::gauge(
+                "bss2_host_latency_us",
+                "Host latency quantiles.",
+                410.0,
+            )
+            .with_label("quantile", "0.99"),
+        ]
+    }
+
+    /// Golden pin of the Prometheus text exposition format.
+    #[test]
+    fn prometheus_golden() {
+        let got = prometheus(&sample_set());
+        let want = "\
+# HELP bss2_fleet_served_total Completed inferences.
+# TYPE bss2_fleet_served_total counter
+bss2_fleet_served_total 3
+# HELP bss2_host_latency_us Host latency quantiles.
+# TYPE bss2_host_latency_us gauge
+bss2_host_latency_us{quantile=\"0.5\"} 276.5
+bss2_host_latency_us{quantile=\"0.99\"} 410
+";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn json_array_parses_and_round_trips() {
+        let txt = json_array(&sample_set());
+        let parsed = Json::parse(&txt).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(
+            arr[0].get("name").and_then(|n| n.as_str()),
+            Some("bss2_fleet_served_total")
+        );
+        assert_eq!(arr[0].get("value").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(
+            arr[1]
+                .get("labels")
+                .and_then(|l| l.get("quantile"))
+                .and_then(|q| q.as_str()),
+            Some("0.5")
+        );
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let s = vec![MetricSample::gauge("m", "H.", 1.0)
+            .with_label("detail", "a\"b\\c\nd")];
+        let txt = prometheus(&s);
+        assert!(txt.contains("m{detail=\"a\\\"b\\\\c\\nd\"} 1"), "{txt}");
+        assert!(Json::parse(&json_array(&s)).is_ok());
+    }
+
+    #[test]
+    fn non_finite_values_clamp() {
+        let s = vec![MetricSample::gauge("m", "H.", f64::NAN)];
+        assert!(prometheus(&s).contains("m 0"));
+        assert!(Json::parse(&json_array(&s)).is_ok());
+    }
+}

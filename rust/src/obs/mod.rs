@@ -1,0 +1,56 @@
+//! Fleet-wide observability (DESIGN.md §13).
+//!
+//! The paper's headline numbers are *measurements* — 276 µs/sample,
+//! 192 µJ/sample on the ASIC, 1.56 mJ system-total — and a serving fleet
+//! should be able to answer the same questions about itself at runtime.
+//! This module is the one place those answers come from:
+//!
+//! * [`registry`] — named counters/gauges behind one snapshot; scattered
+//!   fleet stats are folded into the same [`MetricSample`] shape and
+//!   exposed via the `metrics` wire command (JSON + Prometheus text,
+//!   [`expo`]).
+//! * [`trace`] — stage-level spans per job in host-ns *and* simulated
+//!   chip-time, aggregated into per-stage p50/p95/p99 histograms with a
+//!   bounded ring of full traces (`trace` wire command,
+//!   `repro serve --trace-sample N`).
+//! * [`journal`] — bounded structured event journal of fleet state
+//!   transitions (quarantine, calibration drain/re-admit, fault fired,
+//!   redirect exhausted, connection shed) with monotonic sequence
+//!   numbers (`journal` wire command).
+//!
+//! One [`ObsHub`] instance lives in `fleet::FleetCore`; chip workers and
+//! the service write into it lock-free (registry handles, atomics) or
+//! through short bounded-ring mutexes (traces, journal) — never on the
+//! reply path's critical lock.
+
+pub mod expo;
+pub mod journal;
+pub mod registry;
+pub mod trace;
+
+pub use journal::{Event, EventJournal, EventKind, DEFAULT_JOURNAL_CAP};
+pub use registry::{Counter, Gauge, MetricKind, MetricSample, Registry};
+pub use trace::{
+    HostStages, SimStages, StageStat, TraceRecord, TraceRecorder,
+};
+
+/// The observability surface owned by a fleet: registry + tracer +
+/// journal, constructed together so every subsystem writes to the same
+/// instances.
+pub struct ObsHub {
+    pub registry: Registry,
+    pub tracer: TraceRecorder,
+    pub journal: EventJournal,
+}
+
+impl ObsHub {
+    /// `trace_sample`: keep every Nth full span in the trace ring
+    /// (0 disables the ring; stage histograms always record).
+    pub fn new(trace_sample: u64) -> ObsHub {
+        ObsHub {
+            registry: Registry::new(),
+            tracer: TraceRecorder::new(trace_sample),
+            journal: EventJournal::new(DEFAULT_JOURNAL_CAP),
+        }
+    }
+}

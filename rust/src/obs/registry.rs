@@ -1,0 +1,225 @@
+//! Unified metrics registry: named counters and gauges behind one
+//! snapshot.
+//!
+//! Registration (rare) takes a mutex; the hot path — bumping a counter
+//! from a chip worker or the service acceptor — is a single relaxed
+//! atomic on a pre-registered handle, so instrumentation never contends
+//! with serving.
+//!
+//! The registry only *owns* the metrics created through it.  Stats that
+//! already live elsewhere (fleet telemetry, scheduler, failover
+//! counters) are folded into the same snapshot shape by
+//! `FleetCore::metrics_samples`, which appends [`MetricSample`]s read
+//! from those sources — one snapshot, one exposition path
+//! ([`super::expo`]), regardless of where a number is accumulated.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+impl MetricKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// Monotonic counter handle (clone-cheap, lock-free increments).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle (stores f64 bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    cell: Arc<AtomicU64>,
+}
+
+/// One sample of the unified snapshot.  `labels` render as Prometheus
+/// labels (`name{k="v"} value`) and as a JSON object in the JSON
+/// exposition.
+#[derive(Debug, Clone)]
+pub struct MetricSample {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl MetricSample {
+    pub fn counter(name: &str, help: &str, value: f64) -> MetricSample {
+        MetricSample {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: MetricKind::Counter,
+            labels: Vec::new(),
+            value,
+        }
+    }
+
+    pub fn gauge(name: &str, help: &str, value: f64) -> MetricSample {
+        MetricSample {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: MetricKind::Gauge,
+            labels: Vec::new(),
+            value,
+        }
+    }
+
+    pub fn with_label(mut self, key: &str, value: impl ToString) -> Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+}
+
+/// Named-metric registry.  `counter`/`gauge` are idempotent by name: a
+/// second registration returns a handle onto the same cell, so callers
+/// in different modules can share a metric without plumbing handles.
+pub struct Registry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn cell(&self, name: &str, help: &str, kind: MetricKind) -> Arc<AtomicU64> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.iter().find(|e| e.name == name) {
+            return e.cell.clone();
+        }
+        let cell = Arc::new(AtomicU64::new(0));
+        inner.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            cell: cell.clone(),
+        });
+        cell
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        Counter(self.cell(name, help, MetricKind::Counter))
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        Gauge(self.cell(name, help, MetricKind::Gauge))
+    }
+
+    /// Snapshot every registered metric, in registration order.
+    pub fn snapshot(&self) -> Vec<MetricSample> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| {
+                let raw = e.cell.load(Ordering::Relaxed);
+                MetricSample {
+                    name: e.name.clone(),
+                    help: e.help.clone(),
+                    kind: e.kind,
+                    labels: Vec::new(),
+                    value: match e.kind {
+                        MetricKind::Counter => raw as f64,
+                        MetricKind::Gauge => f64::from_bits(raw),
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_snapshot() {
+        let r = Registry::new();
+        let c = r.counter("jobs_total", "Jobs.");
+        c.inc();
+        c.add(2);
+        let g = r.gauge("temp_c", "Temperature.");
+        g.set(36.5);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "jobs_total");
+        assert_eq!(snap[0].kind, MetricKind::Counter);
+        assert_eq!(snap[0].value, 3.0);
+        assert_eq!(snap[1].value, 36.5);
+    }
+
+    #[test]
+    fn registration_is_idempotent_by_name() {
+        let r = Registry::new();
+        let a = r.counter("x", "X.");
+        let b = r.counter("x", "ignored duplicate help");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "both handles share one cell");
+        assert_eq!(r.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn handles_are_lock_free_across_threads() {
+        let r = Registry::new();
+        let c = r.counter("n", "N.");
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+}

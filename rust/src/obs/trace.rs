@@ -1,0 +1,340 @@
+//! Stage-level request tracing.
+//!
+//! Every classify/stream job carries a span through the fleet in two
+//! time bases:
+//!
+//! * **host stages** (wall-clock ns, measured from contiguous `Instant`
+//!   reads in the dispatch path and chip worker, so the stage durations
+//!   sum *exactly* to the recorded end-to-end latency):
+//!   `queue` (admission -> worker dequeue), `execute` (engine run of the
+//!   successful attempt), `retry` (queue + execute time burnt in failed
+//!   attempts before a failover redirect landed);
+//! * **simulated chip-time stages** (µs, per sample, from the engine's
+//!   per-category [`ChipTiming`](crate::asic::chip::ChipTiming)
+//!   accounting): where the paper's 276 µs actually goes — DMA, event
+//!   streaming, weight writes, VMM integrations, ADC reads, SIMD
+//!   post-processing, explicit waits, and the fixed control overhead.
+//!
+//! Completed spans feed per-stage latency histograms (p50/p95/p99 per
+//! stage, surfaced in `fleet_stats` and `metrics`), and every
+//! `sample_every`-th span is kept whole in a bounded ring fetchable via
+//! the `trace` wire command.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::fleet::telemetry::LatencyHistogram;
+
+/// Host-side span of one job, in nanoseconds.  Stages are contiguous by
+/// construction: `queue + execute + retry == end-to-end` exactly (each
+/// boundary is a single `Instant` read shared by the adjacent stages).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostStages {
+    /// Admission (or last redirect re-enqueue) to worker dequeue.
+    pub queue_ns: u64,
+    /// Engine execution of the attempt that produced the reply.
+    pub execute_ns: u64,
+    /// Queue + execute time of failed attempts (failover redirect hops).
+    pub retry_ns: u64,
+}
+
+impl HostStages {
+    pub fn total_ns(&self) -> u64 {
+        self.queue_ns + self.execute_ns + self.retry_ns
+    }
+
+    pub fn named(&self) -> [(&'static str, u64); 3] {
+        [
+            ("queue", self.queue_ns),
+            ("execute", self.execute_ns),
+            ("retry", self.retry_ns),
+        ]
+    }
+}
+
+/// Simulated chip-time of one inference, split by pipeline stage [µs per
+/// sample].  Sums to the inference's `sim_time_s` (± float addition
+/// order).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimStages {
+    /// DMA transfer of the preprocessed window into FPGA memory.
+    pub dma_us: f64,
+    /// Event streaming into the analog core (link-bandwidth bound).
+    pub events_us: f64,
+    /// Synapse weight reconfiguration (40 µs per half-array write).
+    pub weight_write_us: f64,
+    /// Analog VMM integration cycles (5 µs each).
+    pub vmm_us: f64,
+    /// Parallel ADC readouts (1.5 µs each).
+    pub adc_us: f64,
+    /// Embedded SIMD CPU post-processing.
+    pub simd_us: f64,
+    /// Explicit waits (DMA settling etc.).
+    pub wait_us: f64,
+    /// Fixed control overhead + injected latency-spike extra.
+    pub control_us: f64,
+}
+
+pub const SIM_STAGE_NAMES: [&str; 8] = [
+    "dma",
+    "events",
+    "weight_write",
+    "vmm",
+    "adc",
+    "simd",
+    "wait",
+    "control",
+];
+
+impl SimStages {
+    pub fn total_us(&self) -> f64 {
+        self.dma_us
+            + self.events_us
+            + self.weight_write_us
+            + self.vmm_us
+            + self.adc_us
+            + self.simd_us
+            + self.wait_us
+            + self.control_us
+    }
+
+    pub fn named(&self) -> [(&'static str, f64); 8] {
+        [
+            ("dma", self.dma_us),
+            ("events", self.events_us),
+            ("weight_write", self.weight_write_us),
+            ("vmm", self.vmm_us),
+            ("adc", self.adc_us),
+            ("simd", self.simd_us),
+            ("wait", self.wait_us),
+            ("control", self.control_us),
+        ]
+    }
+
+    /// Uniform share (e.g. `1/B` of a batch-level span per sample).
+    pub fn scaled(&self, f: f64) -> SimStages {
+        SimStages {
+            dma_us: self.dma_us * f,
+            events_us: self.events_us * f,
+            weight_write_us: self.weight_write_us * f,
+            vmm_us: self.vmm_us * f,
+            adc_us: self.adc_us * f,
+            simd_us: self.simd_us * f,
+            wait_us: self.wait_us * f,
+            control_us: self.control_us * f,
+        }
+    }
+}
+
+/// One fully recorded span (ring entry for the `trace` wire command).
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Monotonic trace id (counts *recorded* traces).
+    pub id: u64,
+    /// Chip that produced the reply (after any redirects).
+    pub chip: usize,
+    /// "classify" | "batch" | "acts".
+    pub kind: &'static str,
+    /// Samples in the job (1 for classify/acts).
+    pub batch: usize,
+    /// Failover hops this job survived.
+    pub redirects: u32,
+    pub host: HostStages,
+    /// Per-sample simulated stage split.
+    pub sim: SimStages,
+}
+
+/// Per-stage aggregate for stats surfaces.
+#[derive(Debug, Clone)]
+pub struct StageStat {
+    pub name: &'static str,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Bound on the ring of full trace records.
+pub const TRACE_RING_CAP: usize = 256;
+
+pub struct TraceRecorder {
+    /// Keep every Nth full span (0 disables the ring; histograms always
+    /// record).
+    sample_every: u64,
+    seen: AtomicU64,
+    recorded: AtomicU64,
+    ring: Mutex<VecDeque<TraceRecord>>,
+    host_hists: [LatencyHistogram; 3],
+    sim_hists: [LatencyHistogram; 8],
+}
+
+pub const HOST_STAGE_NAMES: [&str; 3] = ["queue", "execute", "retry"];
+
+impl TraceRecorder {
+    pub fn new(sample_every: u64) -> TraceRecorder {
+        TraceRecorder {
+            sample_every,
+            seen: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            host_hists: Default::default(),
+            sim_hists: Default::default(),
+        }
+    }
+
+    /// Observe one completed span: always feeds the per-stage histograms;
+    /// every `sample_every`-th span is additionally kept whole.
+    pub fn observe(
+        &self,
+        chip: usize,
+        kind: &'static str,
+        batch: usize,
+        redirects: u32,
+        host: HostStages,
+        sim: SimStages,
+    ) {
+        for (i, (_, ns)) in host.named().iter().enumerate() {
+            self.host_hists[i].record_us(*ns as f64 / 1e3);
+        }
+        for (i, (_, us)) in sim.named().iter().enumerate() {
+            self.sim_hists[i].record_us(*us);
+        }
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if self.sample_every == 0 || n % self.sample_every != 0 {
+            return;
+        }
+        let id = self.recorded.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == TRACE_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(TraceRecord {
+            id,
+            chip,
+            kind,
+            batch,
+            redirects,
+            host,
+            sim,
+        });
+    }
+
+    /// Spans observed (histogram entries).
+    pub fn seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Spans kept whole in the ring (lifetime, before eviction).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// The most recent `n` full trace records, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceRecord> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(n);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// Host-stage aggregates (values in µs).
+    pub fn host_stage_stats(&self) -> Vec<StageStat> {
+        HOST_STAGE_NAMES
+            .iter()
+            .zip(&self.host_hists)
+            .map(|(name, h)| stat(name, h))
+            .collect()
+    }
+
+    /// Simulated-stage aggregates (values in µs per sample).
+    pub fn sim_stage_stats(&self) -> Vec<StageStat> {
+        SIM_STAGE_NAMES
+            .iter()
+            .zip(&self.sim_hists)
+            .map(|(name, h)| stat(name, h))
+            .collect()
+    }
+}
+
+fn stat(name: &'static str, h: &LatencyHistogram) -> StageStat {
+    StageStat {
+        name,
+        count: h.count(),
+        mean_us: h.mean_us(),
+        p50_us: h.quantile_us(50.0),
+        p95_us: h.quantile_us(95.0),
+        p99_us: h.quantile_us(99.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(q: u64, e: u64, r: u64) -> HostStages {
+        HostStages { queue_ns: q, execute_ns: e, retry_ns: r }
+    }
+
+    #[test]
+    fn host_stages_sum_exactly() {
+        let h = span(1_234, 276_000, 300_001);
+        assert_eq!(h.total_ns(), 577_235);
+        let by_name: u64 = h.named().iter().map(|(_, ns)| ns).sum();
+        assert_eq!(by_name, h.total_ns());
+    }
+
+    #[test]
+    fn sim_stages_total_and_scale() {
+        let s = SimStages {
+            dma_us: 1.0,
+            events_us: 2.0,
+            weight_write_us: 80.0,
+            vmm_us: 15.0,
+            adc_us: 4.5,
+            simd_us: 1.5,
+            wait_us: 0.4,
+            control_us: 128.0,
+        };
+        assert!((s.total_us() - 232.4).abs() < 1e-9);
+        let half = s.scaled(0.5);
+        assert!((half.total_us() - 116.2).abs() < 1e-9);
+        assert_eq!(s.named().len(), SIM_STAGE_NAMES.len());
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_and_ring_is_bounded() {
+        let t = TraceRecorder::new(4);
+        for i in 0..2000 {
+            t.observe(
+                i % 3,
+                "classify",
+                1,
+                0,
+                span(100, 200, 0),
+                SimStages::default(),
+            );
+        }
+        assert_eq!(t.seen(), 2000);
+        assert_eq!(t.recorded(), 500, "every 4th span recorded");
+        let recent = t.recent(usize::MAX);
+        assert_eq!(recent.len(), TRACE_RING_CAP, "ring bound holds");
+        // Oldest-first, monotonically increasing ids, newest retained.
+        for w in recent.windows(2) {
+            assert!(w[1].id > w[0].id);
+        }
+        assert_eq!(recent.last().unwrap().id, 499);
+        assert_eq!(t.recent(3).len(), 3);
+    }
+
+    #[test]
+    fn sampling_disabled_still_feeds_histograms() {
+        let t = TraceRecorder::new(0);
+        t.observe(0, "classify", 1, 0, span(0, 276_000, 0), SimStages::default());
+        assert!(t.recent(10).is_empty());
+        let stats = t.host_stage_stats();
+        assert_eq!(stats[1].name, "execute");
+        assert_eq!(stats[1].count, 1);
+        assert!((stats[1].mean_us - 276.0).abs() < 1e-6);
+    }
+}

@@ -364,6 +364,141 @@ fn chaos_cli_survival_report_is_deterministic() {
     assert_ne!(a.stdout, c.stdout, "different seed, different report");
 }
 
+/// `repro chaos --json` is the machine-readable twin of the survival
+/// report: still byte-identical per seed (no wall-clock fields), and it
+/// parses as one JSON object with the survival verdict.
+#[test]
+fn chaos_cli_json_report_is_deterministic_and_parses() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let run = || {
+        std::process::Command::new(exe)
+            .args(["chaos", "--chips", "4", "--seed", "1", "--json"])
+            .output()
+            .expect("repro chaos runs")
+    };
+    let a = run();
+    assert!(
+        a.status.success(),
+        "chaos --json run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let b = run();
+    assert_eq!(
+        a.stdout, b.stdout,
+        "json report must be byte-identical across runs"
+    );
+    let text = String::from_utf8_lossy(&a.stdout);
+    let report = Json::parse(text.trim()).expect("json report parses");
+    assert_eq!(
+        report.get("lost").and_then(|v| v.as_uint()),
+        Some(0),
+        "{report}"
+    );
+    assert_eq!(report.get("seed").and_then(|v| v.as_uint()), Some(1));
+    assert!(
+        report.get("verdict").and_then(|v| v.as_str()).is_some(),
+        "{report}"
+    );
+    assert_eq!(
+        report.get("per_chip").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(4),
+        "{report}"
+    );
+}
+
+/// The event journal keeps the fleet's lifecycle transitions in causal
+/// order under chaos: a chip's quarantine entry comes after the fault
+/// that earned it, a recalibration's drain entry comes before its
+/// readmit, sequence numbers are strictly increasing, and a `since`
+/// cursor returns exactly the suffix.
+#[test]
+fn journal_orders_fleet_transitions_under_chaos() {
+    let chips = 3;
+    let plan = FaultPlan {
+        seed: 7,
+        faults: vec![spec(1, 0, None, FaultKind::ChipDeath)],
+    };
+    let svc = Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig {
+            chips,
+            queue_depth: 64,
+            error_threshold: 3,
+            probe_period: 64,
+            redirects: 4,
+            fault_plan: Some(plan),
+            ..Default::default()
+        },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                engine_cfg(chip),
+            ))
+        },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    // Sequential singles: round-robin over 3 chips lands on the dead
+    // chip 1 every third admission, so 24 requests push it well past
+    // error_threshold 3 — and with budget 4 every reply is still ok.
+    let mut traces = TraceStream::new(41, 1.0);
+    for i in 0..24 {
+        let t = traces.next().unwrap();
+        let r = cl.classify(&t).unwrap();
+        assert_eq!(
+            r.get("ok"),
+            Some(&Json::Bool(true)),
+            "request {i}: {r}"
+        );
+    }
+    // A manual drain of a *healthy* chip while chip 1 sits quarantined;
+    // the reply only comes back after the worker journals the readmit.
+    let r = cl.call("{\"cmd\":\"recalibrate\",\"chip\":0,\"reps\":8}").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    let j = cl.call("{\"cmd\":\"journal\"}").unwrap();
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j}");
+    let events = j.get("events").and_then(|v| v.as_arr()).unwrap();
+    let seqs: Vec<u64> = events
+        .iter()
+        .map(|e| e.get("seq").and_then(|v| v.as_uint()).unwrap())
+        .collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seqs not strictly increasing: {j}");
+    let first = |kind: &str, chip: usize| -> Option<usize> {
+        events.iter().position(|e| {
+            e.get("kind").and_then(|k| k.as_str()) == Some(kind)
+                && e.get("chip").and_then(|c| c.as_usize()) == Some(chip)
+        })
+    };
+    let fired = first("fault_fired", 1).expect("chip 1's fault journaled");
+    let quarantined =
+        first("chip_quarantined", 1).expect("chip 1 quarantined");
+    assert!(
+        fired < quarantined,
+        "quarantine must follow the fault that earned it: {j}"
+    );
+    let drain = first("calib_drain", 0).expect("chip 0 drained");
+    let readmit = first("calib_readmit", 0).expect("chip 0 readmitted");
+    assert!(drain < readmit, "drain must precede readmit: {j}");
+
+    // Cursor semantics: `since` mid-stream returns exactly the suffix.
+    let mid = seqs[seqs.len() / 2];
+    let tail = cl
+        .call(&format!("{{\"cmd\":\"journal\",\"since\":{mid}}}"))
+        .unwrap();
+    let tail_seqs: Vec<u64> = tail
+        .get("events")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|e| e.get("seq").and_then(|v| v.as_uint()).unwrap())
+        .collect();
+    let want: Vec<u64> =
+        seqs.iter().copied().filter(|&s| s >= mid).collect();
+    assert_eq!(tail_seqs, want, "{tail}");
+    svc.stop();
+}
+
 /// The heavy randomized soak (nightly: `cargo test --release -- --ignored`):
 /// a bigger fleet under a randomly drawn fault plan and much more
 /// concurrent traffic.  Invariants only — every request answered in

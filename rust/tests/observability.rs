@@ -1,0 +1,244 @@
+//! Observability integration: the `metrics` / `trace` / `journal` wire
+//! surface and the per-stage latency stats over a live fleet (ISSUE 6,
+//! DESIGN.md §13).
+//!
+//! The contract under test:
+//!   * `metrics` answers one unified snapshot — registry metrics plus the
+//!     scattered fleet stats — in JSON and Prometheus text, and the two
+//!     formats agree because they render the same sample vector;
+//!   * every completed job leaves a span whose host stages sum to its
+//!     end-to-end latency and whose simulated stages sum to its chip
+//!     time, for arbitrary batch sizes (property test);
+//!   * `fleet_stats` reports per-stage p50/p95/p99 in both time bases
+//!     even with the trace ring disabled (histograms always record).
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{Client, Service};
+use bss2::ecg::gen::{Trace, TraceStream};
+use bss2::fleet::FleetConfig;
+use bss2::nn::weights::TrainedModel;
+use bss2::prop_assert;
+use bss2::util::json::Json;
+use bss2::util::propcheck;
+
+const MODEL_SEED: u64 = 0x0B5E;
+
+fn start_fleet(chips: usize, trace_sample: u64) -> Service {
+    Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips, queue_depth: 64, trace_sample, ..Default::default() },
+        |chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(MODEL_SEED),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    ..Default::default()
+                }
+                .for_chip(chip),
+            ))
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn metrics_track_served_work_in_both_formats() {
+    let svc = start_fleet(2, 16);
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let mut traces = TraceStream::new(31, 1.0);
+    for _ in 0..3 {
+        let t = traces.next().unwrap();
+        let r = cl.classify(&t).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+    let batch: Vec<Trace> = (&mut traces).take(4).collect();
+    let r = cl.classify_batch(&batch).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+
+    // The unified snapshot agrees with the fleet's own accounting.
+    let served = cl
+        .call("{\"cmd\":\"stats\"}")
+        .unwrap()
+        .get("served")
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    let m = cl.call("{\"cmd\":\"metrics\"}").unwrap();
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m}");
+    let arr = m.get("metrics").and_then(|v| v.as_arr()).unwrap();
+    let sum_of = |name: &str| -> f64 {
+        arr.iter()
+            .filter(|s| s.get("name").and_then(|n| n.as_str()) == Some(name))
+            .map(|s| s.get("value").and_then(|v| v.as_f64()).unwrap())
+            .sum()
+    };
+    assert!(served >= 7.0, "3 singles + a 4-batch served: {served}");
+    assert_eq!(sum_of("bss2_fleet_served_total"), served, "{m}");
+    assert_eq!(
+        sum_of("bss2_chip_served_total"),
+        served,
+        "per-chip counters must sum to the fleet total: {m}"
+    );
+    assert_eq!(sum_of("bss2_fleet_healthy_chips"), 2.0);
+    assert!(
+        sum_of("bss2_trace_spans_total") >= 4.0,
+        "one span per completed job: {m}"
+    );
+    let sim_mean = arr
+        .iter()
+        .find(|s| {
+            s.get("name").and_then(|n| n.as_str())
+                == Some("bss2_sim_time_mean_us")
+        })
+        .and_then(|s| s.get("value"))
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(
+        sim_mean > 50.0,
+        "mean simulated time must be paper-scale: {sim_mean}"
+    );
+
+    // Prometheus text: one HELP/TYPE pair per family even with per-chip
+    // samples, and both chips labelled.
+    let t = cl.call("{\"cmd\":\"metrics\",\"format\":\"text\"}").unwrap();
+    assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t}");
+    let body =
+        t.get("body").and_then(|b| b.as_str()).unwrap().to_string();
+    let helps = body
+        .lines()
+        .filter(|l| l.starts_with("# HELP bss2_chip_served_total "))
+        .count();
+    assert_eq!(helps, 1, "HELP once per family:\n{body}");
+    assert!(body.contains("bss2_chip_served_total{chip=\"0\"}"), "{body}");
+    assert!(body.contains("bss2_chip_served_total{chip=\"1\"}"), "{body}");
+    assert!(
+        body.contains("# TYPE bss2_host_latency_us gauge"),
+        "{body}"
+    );
+    svc.stop();
+}
+
+#[test]
+fn trace_spans_are_internally_consistent_over_random_batches() {
+    // sample_every = 1: every completed span lands in the ring.
+    let svc = start_fleet(2, 1);
+    let addr = svc.addr;
+    propcheck::check("trace_span_sums", 8, 0x7CE5, |g| {
+        let mut cl = Client::connect(&addr).map_err(|e| e.to_string())?;
+        let b = g.usize_in(1, 5);
+        let traces: Vec<Trace> =
+            TraceStream::new(g.rng.next_u64() % 50_000, 1.0)
+                .take(b)
+                .collect();
+        let r = if b == 1 {
+            cl.classify(&traces[0])
+        } else {
+            cl.classify_batch(&traces)
+        }
+        .map_err(|e| e.to_string())?;
+        prop_assert!(r.get("ok") == Some(&Json::Bool(true)), "{}", r);
+        let tr = cl
+            .call("{\"cmd\":\"trace\",\"n\":64}")
+            .map_err(|e| e.to_string())?;
+        let recs =
+            tr.get("traces").and_then(|v| v.as_arr()).ok_or("no traces")?;
+        prop_assert!(!recs.is_empty(), "sample_every=1 keeps every span");
+        for rec in recs {
+            let host = rec.get("host_us").ok_or("no host_us")?;
+            let total =
+                host.get("total").and_then(|v| v.as_f64()).ok_or("no total")?;
+            let sum: f64 = ["queue", "execute", "retry"]
+                .iter()
+                .map(|k| {
+                    host.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+                })
+                .sum();
+            prop_assert!(
+                (sum - total).abs() < 0.01,
+                "host stages {} != e2e {}: {}",
+                sum,
+                total,
+                rec
+            );
+            let sim = rec.get("sim_us").ok_or("no sim_us")?;
+            let stotal =
+                sim.get("total").and_then(|v| v.as_f64()).ok_or("no sim")?;
+            let ssum: f64 = [
+                "dma", "events", "weight_write", "vmm", "adc", "simd",
+                "wait", "control",
+            ]
+            .iter()
+            .map(|k| sim.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN))
+            .sum();
+            prop_assert!(
+                (ssum - stotal).abs() < 0.05,
+                "sim stages {} != chip time {}: {}",
+                ssum,
+                stotal,
+                rec
+            );
+            prop_assert!(
+                stotal > 50.0,
+                "per-sample chip time must be paper-scale: {}",
+                rec
+            );
+        }
+        Ok(())
+    });
+    svc.stop();
+}
+
+#[test]
+fn fleet_stats_exposes_stage_quantiles_with_ring_disabled() {
+    // trace_sample = 0: the full-span ring is off, but the per-stage
+    // histograms (and therefore `fleet_stats` quantiles) always record.
+    let svc = start_fleet(1, 0);
+    let mut cl = Client::connect(&svc.addr).unwrap();
+    let mut traces = TraceStream::new(3, 1.0);
+    for _ in 0..5 {
+        let t = traces.next().unwrap();
+        let r = cl.classify(&t).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    }
+    let fs = cl.call("{\"cmd\":\"fleet_stats\"}").unwrap();
+    let stages = fs.get("stages").expect("stages block");
+    let host = stages.get("host").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(host.len(), 3, "{fs}");
+    let exec = host
+        .iter()
+        .find(|s| s.get("stage").and_then(|x| x.as_str()) == Some("execute"))
+        .unwrap();
+    assert_eq!(exec.get("count").and_then(|v| v.as_usize()), Some(5));
+    let p50 = exec.get("p50_us").and_then(|v| v.as_f64()).unwrap();
+    let p99 = exec.get("p99_us").and_then(|v| v.as_f64()).unwrap();
+    assert!(p99 >= p50, "{fs}");
+    assert!(
+        exec.get("mean_us").and_then(|v| v.as_f64()).unwrap() > 0.0,
+        "{fs}"
+    );
+    let sim = stages.get("sim").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(sim.len(), 8, "{fs}");
+    let ww = sim
+        .iter()
+        .find(|s| {
+            s.get("stage").and_then(|x| x.as_str()) == Some("weight_write")
+        })
+        .unwrap();
+    // Per-pass weight reconfiguration dominates the paper's 276 µs:
+    // multiple 40 µs half-array writes per single-sample program.
+    assert!(
+        ww.get("mean_us").and_then(|v| v.as_f64()).unwrap() > 50.0,
+        "{fs}"
+    );
+
+    // The ring stayed empty while the histograms recorded.
+    let tr = cl.call("{\"cmd\":\"trace\"}").unwrap();
+    assert_eq!(tr.get("ok"), Some(&Json::Bool(true)), "{tr}");
+    assert_eq!(tr.get("seen").and_then(|v| v.as_usize()), Some(5));
+    assert_eq!(tr.get("recorded").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(
+        tr.get("traces").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(0)
+    );
+    svc.stop();
+}
