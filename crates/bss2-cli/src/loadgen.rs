@@ -1,0 +1,490 @@
+//! `repro loadgen` — serving-layer load generator and connection-model
+//! A/B bench (DESIGN.md §14).
+//!
+//! Phase 1 (gated): N concurrent framed clients blast pipelined `ping`
+//! requests at an in-process fleet under *both* connection models.
+//! Ping never touches a chip, so the measured throughput isolates pure
+//! connection handling — the quantity the readiness refactor changes.
+//! The gated metric is `speedup_vs_threaded_x` (readiness req/s over
+//! threaded req/s at equal chip count), higher-is-better.
+//!
+//! Phase 2 (info): the same client set drives `classify` requests into
+//! the readiness model and records the end-to-end latency distribution
+//! (p50/p95/p99), throughput, and the shed behaviour — shed rate, the
+//! observed `queue_depth` hints, and a log2 histogram of the
+//! `retry_after_us` backoff hints.  These go into `info` for
+//! trend-watching; they depend on host speed and are not gated.
+//!
+//! Results land in `BENCH_loadgen.json` (bss2-bench-v1 schema, same
+//! gate semantics as `repro bench --gate`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{ServeModel, Service};
+use bss2::fleet::FleetConfig;
+use bss2::nn::weights::TrainedModel;
+use bss2::util::cli::Args;
+use bss2_client::{Client, Encoding, Json, Options};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let conns = args.usize_or("conns", 1000)?.max(1);
+    let chips = args.usize_or("chips", 2)?.max(1);
+    let pipeline = args.usize_or("pipeline", 8)?.max(1);
+    let per_conn = args.usize_or("requests", 64)?.max(1);
+    let classify_n = args.usize_or("classify-n", 4)?;
+    let queue_depth = args.usize_or("queue-depth", 32)?.max(1);
+    let mode = args.str_or("mode", "both");
+    let encoding = match args.str_or("encoding", "binary").as_str() {
+        "binary" => Encoding::Binary,
+        "json" => Encoding::Json,
+        other => anyhow::bail!("unknown --encoding {other:?} (binary|json)"),
+    };
+    let timeout_ms = args.u64_or("read-timeout-ms", 30_000)?;
+    let out = args.str_or("out", "BENCH_loadgen.json");
+    anyhow::ensure!(
+        matches!(mode.as_str(), "both" | "readiness" | "threaded"),
+        "unknown --mode {mode:?} (both|readiness|threaded)"
+    );
+
+    // Every client plus its accepted peer costs a descriptor; the
+    // default soft limit (often 1024) is below a 1000-connection run.
+    raise_nofile(conns as u64 * 2 + 512);
+
+    let opts = Options {
+        encoding,
+        read_timeout: (timeout_ms > 0)
+            .then(|| Duration::from_millis(timeout_ms)),
+        ..Options::default()
+    };
+    let start = |model: ServeModel| -> anyhow::Result<Service> {
+        Service::start_fleet_with(
+            "127.0.0.1:0",
+            FleetConfig {
+                chips,
+                queue_depth,
+                max_connections: conns + 16,
+                ..Default::default()
+            },
+            model,
+            |chip| {
+                Ok(Engine::native(
+                    TrainedModel::synthetic(0xF1EE7),
+                    EngineConfig {
+                        use_pjrt: false,
+                        noise_off: true,
+                        ..Default::default()
+                    }
+                    .for_chip(chip),
+                ))
+            },
+        )
+    };
+
+    println!(
+        "[loadgen] {conns} connections x {per_conn} pings (pipeline depth \
+         {pipeline}, {} frames) against a {chips}-chip fleet",
+        encoding_name(encoding)
+    );
+    let mut threaded = None;
+    if mode == "both" || mode == "threaded" {
+        let svc = start(ServeModel::Threaded)?;
+        let r = ping_blast(&svc, conns, per_conn, pipeline, &opts)?;
+        svc.stop();
+        println!(
+            "[loadgen]   threaded:  {:>9.0} req/s ({} concurrent conns)",
+            r.rps, r.concurrent
+        );
+        threaded = Some(r);
+    }
+    let mut readiness = None;
+    let mut classify = None;
+    if mode == "both" || mode == "readiness" {
+        let svc = start(ServeModel::Readiness)?;
+        let r = ping_blast(&svc, conns, per_conn, pipeline, &opts)?;
+        println!(
+            "[loadgen]   readiness: {:>9.0} req/s ({} concurrent conns)",
+            r.rps, r.concurrent
+        );
+        readiness = Some(r);
+        if classify_n > 0 {
+            let c = classify_phase(&svc, conns, classify_n, &opts)?;
+            println!(
+                "[loadgen]   classify:  {:>9.0} req/s, {}/{} ok, {} shed \
+                 ({:.0}% shed rate), p50/p95/p99 = {:.0}/{:.0}/{:.0} µs",
+                c.rps,
+                c.ok,
+                c.sent,
+                c.shed,
+                100.0 * c.shed as f64 / c.sent.max(1) as f64,
+                c.p50_us,
+                c.p95_us,
+                c.p99_us
+            );
+            classify = Some(c);
+        }
+        svc.stop();
+    }
+
+    // Gated metric: connection-handling speedup at equal chip count.
+    let mut gated: Vec<(&str, f64)> = Vec::new();
+    if let (Some(t), Some(r)) = (&threaded, &readiness) {
+        let speedup = r.rps / t.rps.max(1e-9);
+        println!("[loadgen] speedup_vs_threaded_x = {speedup:.2}");
+        gated.push(("speedup_vs_threaded_x", speedup));
+    }
+
+    let mut s = String::from(
+        "{\"schema\":\"bss2-bench-v1\",\"bench\":\"loadgen\",\"gated\":{",
+    );
+    for (i, (name, v)) in gated.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        write!(s, "\"{name}\":{{\"value\":{v:.4},\"better\":\"higher\"}}")
+            .unwrap();
+    }
+    write!(
+        s,
+        "}},\"info\":{{\"conns\":{conns},\"chips\":{chips},\
+         \"pipeline\":{pipeline},\"requests_per_conn\":{per_conn},\
+         \"encoding\":\"{}\"",
+        encoding_name(encoding)
+    )
+    .unwrap();
+    if let Some(t) = &threaded {
+        write!(
+            s,
+            ",\"threaded_rps\":{:.1},\"threaded_concurrent\":{}",
+            t.rps, t.concurrent
+        )
+        .unwrap();
+    }
+    if let Some(r) = &readiness {
+        write!(
+            s,
+            ",\"readiness_rps\":{:.1},\"readiness_concurrent\":{}",
+            r.rps, r.concurrent
+        )
+        .unwrap();
+    }
+    if let Some(c) = &classify {
+        write!(
+            s,
+            ",\"classify\":{{\"sent\":{},\"ok\":{},\"shed\":{},\
+             \"errors\":{},\"rps\":{:.1},\"p50_us\":{:.1},\
+             \"p95_us\":{:.1},\"p99_us\":{:.1},\"max_queue_depth\":{},\
+             \"retry_after_us_hist\":[",
+            c.sent,
+            c.ok,
+            c.shed,
+            c.errors,
+            c.rps,
+            c.p50_us,
+            c.p95_us,
+            c.p99_us,
+            c.max_queue_depth
+        )
+        .unwrap();
+        for (i, (le, count)) in c.retry_hist.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            write!(s, "{{\"le_us\":{le},\"count\":{count}}}").unwrap();
+        }
+        s.push_str("]}");
+    }
+    s.push_str("}}\n");
+    std::fs::write(&out, &s)?;
+    println!("[loadgen] wrote {out}");
+
+    if let Some(base_path) = args.get("gate") {
+        super::gate_against(base_path, &gated)?;
+    }
+    Ok(())
+}
+
+fn encoding_name(enc: Encoding) -> &'static str {
+    match enc {
+        Encoding::Json => "json",
+        Encoding::Binary => "binary",
+    }
+}
+
+struct PingResult {
+    rps: f64,
+    /// Connections registered at the service while the blast ran.
+    concurrent: usize,
+}
+
+/// Connect `conns` clients, then (behind a barrier, so the connect cost
+/// never pollutes the timing) blast `per_conn` pings each, pipelined
+/// `pipeline` deep, and measure aggregate throughput.
+fn ping_blast(
+    svc: &Service,
+    conns: usize,
+    per_conn: usize,
+    pipeline: usize,
+    opts: &Options,
+) -> anyhow::Result<PingResult> {
+    let addr = svc.addr;
+    let barrier = Arc::new(Barrier::new(conns + 1));
+    let mut joins = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let barrier = barrier.clone();
+        let opts = opts.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-{i}"))
+                .stack_size(256 * 1024)
+                .spawn(move || -> anyhow::Result<()> {
+                    // Connect *before* the barrier; a failed connect must
+                    // still reach the barrier or everyone deadlocks.
+                    let connected = Client::connect(addr, opts);
+                    barrier.wait();
+                    let mut cl = connected?;
+                    let ping = obj(&[("cmd", Json::Str("ping".into()))]);
+                    let mut done = 0usize;
+                    while done < per_conn {
+                        let burst = pipeline.min(per_conn - done);
+                        for _ in 0..burst {
+                            cl.send(&ping)?;
+                        }
+                        for _ in 0..burst {
+                            let r = cl.read_reply()?;
+                            anyhow::ensure!(
+                                r.get("ok") == Some(&Json::Bool(true)),
+                                "ping failed: {r}"
+                            );
+                        }
+                        done += burst;
+                    }
+                    Ok(())
+                })?,
+        );
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let concurrent = svc.active_connections();
+    let (mut failed, mut first_err) = (0usize, None);
+    for j in joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                failed += 1;
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                failed += 1;
+                first_err
+                    .get_or_insert(anyhow::anyhow!("client thread panicked"));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = first_err {
+        anyhow::bail!(
+            "{failed} of {conns} client(s) failed; first error: {e:#}"
+        );
+    }
+    Ok(PingResult {
+        rps: (conns * per_conn) as f64 / wall.max(1e-9),
+        concurrent,
+    })
+}
+
+#[derive(Default)]
+struct ClassifyStats {
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    lat_us: Vec<f64>,
+    retry_after_us: Vec<u64>,
+    max_queue_depth: u64,
+}
+
+struct ClassifySummary {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    rps: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    max_queue_depth: u64,
+    /// log2-bucketed `retry_after_us` hints: upper bound -> count.
+    retry_hist: BTreeMap<u64, u64>,
+}
+
+/// Unpipelined classify load: per-request latency is well defined, and
+/// an undersized admission queue sheds — which is the point: the shed
+/// replies carry the backoff hints this phase histograms.
+fn classify_phase(
+    svc: &Service,
+    conns: usize,
+    per_conn: usize,
+    opts: &Options,
+) -> anyhow::Result<ClassifySummary> {
+    let addr = svc.addr;
+    let barrier = Arc::new(Barrier::new(conns + 1));
+    let mut joins = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let barrier = barrier.clone();
+        let opts = opts.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-c{i}"))
+                .stack_size(256 * 1024)
+                .spawn(move || -> anyhow::Result<ClassifyStats> {
+                    let trace = bss2::ecg::gen::generate_trace(
+                        0xC0FFEE ^ i as u64,
+                        i % 7 == 0,
+                        1.0,
+                    );
+                    let connected = Client::connect(addr, opts);
+                    barrier.wait();
+                    let mut cl = connected?;
+                    let mut st = ClassifyStats::default();
+                    for _ in 0..per_conn {
+                        let t = Instant::now();
+                        let reply = cl.classify(&trace.samples)?;
+                        let us = t.elapsed().as_secs_f64() * 1e6;
+                        if reply.get("ok") == Some(&Json::Bool(true)) {
+                            st.ok += 1;
+                            st.lat_us.push(us);
+                        } else if reply.get("shed")
+                            == Some(&Json::Bool(true))
+                        {
+                            st.shed += 1;
+                            if let Some(r) = reply
+                                .get("retry_after_us")
+                                .and_then(|v| v.as_uint())
+                            {
+                                st.retry_after_us.push(r);
+                            }
+                            if let Some(q) = reply
+                                .get("queue_depth")
+                                .and_then(|v| v.as_uint())
+                            {
+                                st.max_queue_depth =
+                                    st.max_queue_depth.max(q);
+                            }
+                        } else {
+                            st.errors += 1;
+                        }
+                    }
+                    Ok(st)
+                })?,
+        );
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut all = ClassifyStats::default();
+    let (mut failed, mut first_err) = (0usize, None);
+    for j in joins {
+        match j.join() {
+            Ok(Ok(st)) => {
+                all.ok += st.ok;
+                all.shed += st.shed;
+                all.errors += st.errors;
+                all.lat_us.extend(st.lat_us);
+                all.retry_after_us.extend(st.retry_after_us);
+                all.max_queue_depth =
+                    all.max_queue_depth.max(st.max_queue_depth);
+            }
+            Ok(Err(e)) => {
+                failed += 1;
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                failed += 1;
+                first_err
+                    .get_or_insert(anyhow::anyhow!("client thread panicked"));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = first_err {
+        anyhow::bail!(
+            "{failed} of {conns} classify client(s) failed; first error: \
+             {e:#}"
+        );
+    }
+    all.lat_us.sort_by(|a, b| a.total_cmp(b));
+    let mut retry_hist = BTreeMap::new();
+    for &us in &all.retry_after_us {
+        *retry_hist.entry(us.max(1).next_power_of_two()).or_insert(0u64) +=
+            1;
+    }
+    let sent = (conns * per_conn) as u64;
+    Ok(ClassifySummary {
+        sent,
+        ok: all.ok,
+        shed: all.shed,
+        errors: all.errors,
+        rps: sent as f64 / wall.max(1e-9),
+        p50_us: percentile(&all.lat_us, 50.0),
+        p95_us: percentile(&all.lat_us, 95.0),
+        p99_us: percentile(&all.lat_us, 99.0),
+        max_queue_depth: all.max_queue_depth,
+        retry_hist,
+    })
+}
+
+/// Nearest-rank percentile over an already-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn obj(fields: &[(&str, Json)]) -> Json {
+    Json::Obj(
+        fields
+            .iter()
+            .map(|(k, v)| ((*k).to_string(), v.clone()))
+            .collect(),
+    )
+}
+
+/// Best-effort RLIMIT_NOFILE bump up to the hard limit; a run that
+/// still hits the limit fails with ordinary connect errors.
+#[cfg(unix)]
+fn raise_nofile(target: u64) {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = if cfg!(target_os = "macos") { 8 } else { 7 };
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 || r.cur >= target {
+            return;
+        }
+        let want = target.min(r.max);
+        let new = RLimit { cur: want, max: r.max };
+        if setrlimit(RLIMIT_NOFILE, &new) == 0 {
+            log::info!("raised RLIMIT_NOFILE {} -> {want}", r.cur);
+        } else {
+            log::warn!(
+                "could not raise RLIMIT_NOFILE past {} (want {target}); \
+                 large --conns runs may fail to connect",
+                r.cur
+            );
+        }
+    }
+}
+
+#[cfg(not(unix))]
+fn raise_nofile(_target: u64) {}

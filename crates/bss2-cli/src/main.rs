@@ -13,8 +13,11 @@
 //! repro classify [--n 10]            classify synthetic traces (quickstart)
 //! repro serve   [--addr host:port] [--chips N]   experiment execution
 //!                                    service over a fleet of N replicas
+//! repro loadgen [--conns 1000]       connection-model A/B load bench
 //! repro snn     [--neurons 4]        spiking (AdEx) operation-mode demo
 //! ```
+
+mod loadgen;
 
 use bss2::asic::consts as c;
 use bss2::coordinator::batch;
@@ -40,6 +43,7 @@ fn main() {
         "bench" => bench(&args),
         "chaos" => chaos(&args),
         "serve" => serve(&args),
+        "loadgen" => loadgen::run(&args),
         "monitor" => monitor(&args),
         "snn" => snn(&args),
         "" | "help" | "--help" => {
@@ -73,8 +77,23 @@ COMMANDS:
                                             profile artifact)
   serve        experiment service          (--addr 127.0.0.1:7001 --native
                                             --chips 4 --queue-depth 32
-                                            --max-conns 256
-                                            --allow-remote-shutdown)
+                                            --max-conns 256 --conn-model M
+                                            --allow-remote-shutdown): speaks
+                                            both line-delimited JSON and the
+                                            framed binary protocol (clients
+                                            opt in via the 8-byte handshake;
+                                            see DESIGN.md §14)
+  loadgen      serving-layer load bench    (--conns 1000 --chips 2
+                                            --pipeline 8 --requests 64
+                                            --classify-n 4 --encoding binary
+                                            --mode both --read-timeout-ms T
+                                            --out FILE --gate BASELINE):
+                                            measures framed ping throughput
+                                            under both connection models
+                                            (gated speedup_vs_threaded_x)
+                                            plus classify latency
+                                            percentiles and shed/backoff
+                                            histograms -> BENCH_loadgen.json
   monitor      continuous ECG stream demo  (--minutes 3 --hop 512 --chips 2
                                             --chunk 450 --seed 99): streams
                                             an episode-labeled recording
@@ -116,6 +135,9 @@ OPTIONS (common):
                     chip drains into `calibrating` while the rest serve)
   --max-conns N     serve: cap on concurrent client connections; excess
                     connects get an explicit shed reply (default 256)
+  --conn-model M    serve: connection handling — `readiness` (poll(2)
+                    worker set multiplexing every connection; the default
+                    on unix) or `threaded` (two threads per connection)
   --allow-remote-shutdown
                     serve: honour the wire `shutdown` command (default
                     off — an open port must not be a kill switch)
@@ -680,47 +702,73 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     println!("[bench] wrote {out}");
 
     if let Some(base_path) = args.get("gate") {
-        let text = std::fs::read_to_string(base_path)
-            .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
-        let base = bss2::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
-        let bg = base.get("gated").ok_or_else(|| {
-            anyhow::anyhow!("--gate {base_path}: no `gated` object")
-        })?;
-        let mut failures = Vec::new();
-        for (name, v) in &gated {
-            let baseline = bg
-                .get(name)
-                .and_then(|m| m.get("value"))
-                .and_then(|x| x.as_f64());
-            let Some(b) = baseline else {
-                println!("[bench]   {name}: no baseline value (skipped)");
-                continue;
-            };
-            let fail = *v > b * 1.2;
-            println!(
-                "[bench]   {name}: {v:.4} vs baseline {b:.4} ({:+.1}%){}",
-                (v / b - 1.0) * 100.0,
-                if fail { "  REGRESSION" } else { "" }
-            );
-            if fail {
-                failures.push(*name);
-            }
-        }
-        anyhow::ensure!(
-            failures.is_empty(),
-            "bench gate failed (>20% regression vs {base_path}): {}",
-            failures.join(", ")
-        );
-        println!("[bench] gate vs {base_path}: OK");
+        gate_against(base_path, &gated)?;
     }
     Ok(())
 }
 
+/// Compare measured gated metrics against a committed baseline file and
+/// fail on a >20% regression.  The regression *direction* comes from the
+/// baseline's own `better` field (`"lower"` — the default — or
+/// `"higher"`, e.g. the loadgen speedup), so a metric's polarity lives
+/// in exactly one place: the baseline that gates it.
+pub(crate) fn gate_against(
+    base_path: &str,
+    gated: &[(&str, f64)],
+) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(base_path)
+        .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
+    let base = bss2::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("--gate {base_path}: {e}"))?;
+    let bg = base.get("gated").ok_or_else(|| {
+        anyhow::anyhow!("--gate {base_path}: no `gated` object")
+    })?;
+    let mut failures = Vec::new();
+    for (name, v) in gated {
+        let Some(metric) = bg.get(name) else {
+            println!("[bench]   {name}: no baseline value (skipped)");
+            continue;
+        };
+        let Some(b) = metric.get("value").and_then(|x| x.as_f64()) else {
+            println!("[bench]   {name}: no baseline value (skipped)");
+            continue;
+        };
+        let better = metric
+            .get("better")
+            .and_then(|x| x.as_str())
+            .unwrap_or("lower");
+        let fail = match better {
+            "higher" => *v < b * 0.8,
+            _ => *v > b * 1.2,
+        };
+        println!(
+            "[bench]   {name}: {v:.4} vs baseline {b:.4} ({:+.1}%, \
+             {better} is better){}",
+            (v / b - 1.0) * 100.0,
+            if fail { "  REGRESSION" } else { "" }
+        );
+        if fail {
+            failures.push(*name);
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "bench gate failed (>20% regression vs {base_path}): {}",
+        failures.join(", ")
+    );
+    println!("[bench] gate vs {base_path}: OK");
+    Ok(())
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
+    use bss2::coordinator::service::ServeModel;
     use bss2::fleet::FleetConfig;
     let addr = args.str_or("addr", "127.0.0.1:7001");
     let chips = args.usize_or("chips", 1)?;
+    let model = match args.get("conn-model") {
+        Some(m) => ServeModel::parse(m)?,
+        None => ServeModel::default(),
+    };
     let queue_depth = args.usize_or("queue-depth", 32)?;
     let dir = artifact_dir(args);
     let cfg = engine_config(args)?;
@@ -750,9 +798,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         },
         ..Default::default()
     };
-    let svc = bss2::coordinator::service::Service::start_fleet(
+    let svc = bss2::coordinator::service::Service::start_fleet_with(
         &addr,
         fleet_cfg,
+        model,
         move |chip| {
             let mut engine =
                 Engine::from_artifacts(&dir, cfg.clone().for_chip(chip))?;
@@ -803,7 +852,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     )?;
     println!(
         "[serve] experiment service on {} — fleet of {} chip{} \
-         (queue depth {} samples/chip; line-delimited JSON; \
+         (queue depth {} samples/chip; {} connection model; \
+         line-delimited JSON or framed binary after handshake; \
          {{\"cmd\":\"ping\"}} / classify / classify_batch / \
          stream_open|push|close / stats / fleet_stats / metrics / trace \
          / journal{})",
@@ -811,6 +861,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         svc.fleet.size(),
         if svc.fleet.size() == 1 { "" } else { "s" },
         queue_depth,
+        model.as_str(),
         if args.flag("allow-remote-shutdown") {
             " / shutdown"
         } else {

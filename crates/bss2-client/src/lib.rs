@@ -1,0 +1,384 @@
+//! Framed TCP client for the bss2 serving layer (DESIGN.md §14).
+//!
+//! Opens with the `bss2-proto` handshake (version + encoding), then
+//! exchanges length-prefixed frames: JSON text or the compact binary
+//! value encoding — the latter packs the 12-bit ECG sample arrays at two
+//! bytes per sample instead of ~5 characters each.  The request/reply
+//! values and their semantics are identical across encodings (and
+//! identical to the legacy line protocol); only the bytes differ.
+//!
+//! The client is deliberately value-oriented: [`Client::call`] takes and
+//! returns [`Json`], with thin typed helpers (`classify`, `stream_push`,
+//! …) for the common commands.  Requests pipeline: any number of
+//! `send*` calls may be issued before the matching `read_reply` calls —
+//! the server resolves replies in request order.
+//!
+//! ```no_run
+//! use bss2_client::{Client, Json, Options};
+//!
+//! let mut cl = Client::connect("127.0.0.1:7433", Options::default())?;
+//! cl.ping()?;
+//! let trace = vec![vec![2048u16; 2048], vec![2048u16; 2048]];
+//! let reply = cl.classify(&trace)?;
+//! assert_eq!(reply.get("ok"), Some(&Json::Bool(true)));
+//! # Ok::<(), bss2_client::ClientError>(())
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use bss2_proto::handshake::{self, AckError};
+use bss2_proto::{bin, frame};
+
+// Re-exported so consumers don't need a direct bss2-proto dependency to
+// build requests or inspect replies.
+pub use bss2_proto::handshake::Encoding;
+pub use bss2_proto::json::Json;
+pub use bss2_proto::PROTO_VERSION;
+
+/// Connection options.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Frame payload encoding to request (default: [`Encoding::Binary`]).
+    pub encoding: Encoding,
+    /// Read timeout applied to every reply wait (default: none — block
+    /// forever, like the legacy client).  An expired timeout surfaces as
+    /// the typed [`ClientError::Timeout`].
+    pub read_timeout: Option<Duration>,
+    /// Protocol version to claim in the hello.  Defaults to
+    /// [`PROTO_VERSION`]; tests override it to provoke the server's
+    /// version rejection.
+    pub protocol_version: u16,
+}
+
+impl Default for Options {
+    fn default() -> Options {
+        Options {
+            encoding: Encoding::Binary,
+            read_timeout: None,
+            protocol_version: PROTO_VERSION,
+        }
+    }
+}
+
+impl Options {
+    /// The framed-JSON fallback encoding.
+    pub fn json() -> Options {
+        Options { encoding: Encoding::Json, ..Options::default() }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+    /// The configured `read_timeout` expired while waiting for a reply.
+    #[error("timed out waiting for a reply")]
+    Timeout,
+    /// The server closed the connection (mid-frame or between frames).
+    #[error("server closed the connection")]
+    Closed,
+    /// The server rejected the hello: it speaks protocol version
+    /// `server_version`, we asked for something else.
+    #[error("server rejected handshake: it speaks protocol version {server_version}")]
+    VersionMismatch { server_version: u16 },
+    /// The server rejected the requested frame encoding.
+    #[error("server rejected the requested encoding")]
+    EncodingRejected,
+    /// The server's bytes violate the framed protocol.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+}
+
+fn io_to_client(e: std::io::Error) -> ClientError {
+    // A `read_timeout` expiry surfaces as WouldBlock on unix and
+    // TimedOut on windows; both mean the same thing to callers.
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            ClientError::Timeout
+        }
+        _ => ClientError::Io(e),
+    }
+}
+
+/// A connected framed client.
+pub struct Client {
+    stream: TcpStream,
+    /// Bytes read past the last complete frame.
+    rbuf: Vec<u8>,
+    encoding: Encoding,
+}
+
+impl Client {
+    /// Connect and run the handshake.
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        options: Options,
+    ) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(options.read_timeout)?;
+        let mut client =
+            Client { stream, rbuf: Vec::new(), encoding: options.encoding };
+        client.stream.write_all(&handshake::hello_bytes(
+            options.protocol_version,
+            options.encoding,
+        ))?;
+        let mut ack = [0u8; handshake::LEN];
+        client.read_exact_buffered(&mut ack)?;
+        match handshake::evaluate_ack(&ack) {
+            Ok(encoding) => {
+                // The server echoes what it accepted; trust its answer.
+                client.encoding = encoding;
+                Ok(client)
+            }
+            Err(AckError::Rejected { server_version: _, reason })
+                if reason == handshake::REJECT_ENCODING =>
+            {
+                Err(ClientError::EncodingRejected)
+            }
+            Err(AckError::Rejected { server_version, .. }) => {
+                Err(ClientError::VersionMismatch { server_version })
+            }
+            Err(e) => Err(ClientError::Protocol(e.to_string())),
+        }
+    }
+
+    /// The negotiated frame encoding.
+    pub fn encoding(&self) -> Encoding {
+        self.encoding
+    }
+
+    /// Adjust the reply-wait timeout on the live connection.
+    pub fn set_read_timeout(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> Result<(), ClientError> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Split the connection: the clone shares the socket and encoding.
+    /// Intended for one-direction-per-half use (a sender thread and a
+    /// reader thread); the receive buffer is *not* shared, so only one
+    /// half may ever call `read_reply`.
+    pub fn try_clone(&self) -> Result<Client, ClientError> {
+        Ok(Client {
+            stream: self.stream.try_clone()?,
+            rbuf: Vec::new(),
+            encoding: self.encoding,
+        })
+    }
+
+    /// Send one request frame without waiting for the reply (pipelining).
+    pub fn send(&mut self, req: &Json) -> Result<(), ClientError> {
+        let mut out = Vec::new();
+        match self.encoding {
+            Encoding::Json => {
+                frame::encode_into(req.to_string().as_bytes(), &mut out)
+            }
+            Encoding::Binary => {
+                frame::encode_into(&bin::encode(req), &mut out)
+            }
+        }
+        self.stream.write_all(&out)?;
+        Ok(())
+    }
+
+    /// Read the next reply frame and decode it.
+    pub fn read_reply(&mut self) -> Result<Json, ClientError> {
+        let payload = self.read_frame()?;
+        match self.encoding {
+            Encoding::Json => {
+                let text = std::str::from_utf8(&payload).map_err(|_| {
+                    ClientError::Protocol(
+                        "reply frame is not valid UTF-8".into(),
+                    )
+                })?;
+                Json::parse(text).map_err(|e| {
+                    ClientError::Protocol(format!("bad reply json: {e}"))
+                })
+            }
+            Encoding::Binary => bin::decode(&payload).map_err(|e| {
+                ClientError::Protocol(format!("bad reply encoding: {e}"))
+            }),
+        }
+    }
+
+    /// Send one request and wait for its reply.
+    pub fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
+        self.send(req)?;
+        self.read_reply()
+    }
+
+    // -- typed helpers ------------------------------------------------
+
+    pub fn ping(&mut self) -> Result<Json, ClientError> {
+        self.call(&obj(&[("cmd", Json::Str("ping".into()))]))
+    }
+
+    /// Classify one two-channel trace of raw 12-bit samples.
+    pub fn classify(&mut self, trace: &[Vec<u16>]) -> Result<Json, ClientError> {
+        self.send_classify(trace)?;
+        self.read_reply()
+    }
+
+    /// Pipelined [`Client::classify`]: send without reading the reply.
+    pub fn send_classify(
+        &mut self,
+        trace: &[Vec<u16>],
+    ) -> Result<(), ClientError> {
+        self.send(&obj(&[
+            ("cmd", Json::Str("classify".into())),
+            ("trace", samples_json(trace)),
+        ]))
+    }
+
+    pub fn classify_batch(
+        &mut self,
+        traces: &[Vec<Vec<u16>>],
+    ) -> Result<Json, ClientError> {
+        let arr =
+            Json::Arr(traces.iter().map(|t| samples_json(t)).collect());
+        self.call(&obj(&[
+            ("cmd", Json::Str("classify_batch".into())),
+            ("traces", arr),
+        ]))
+    }
+
+    /// Open a streaming session (`hop` in samples, `None` for the
+    /// server default).
+    pub fn stream_open(
+        &mut self,
+        hop: Option<usize>,
+    ) -> Result<Json, ClientError> {
+        let mut fields = vec![("cmd", Json::Str("stream_open".into()))];
+        if let Some(hop) = hop {
+            fields.push(("hop", Json::Num(hop as f64)));
+        }
+        self.call(&obj(&fields))
+    }
+
+    /// Push one chunk of the continuous two-channel stream.  Window
+    /// results arrive asynchronously via [`Client::read_reply`].
+    pub fn stream_push(
+        &mut self,
+        chunk: &[Vec<u16>],
+    ) -> Result<(), ClientError> {
+        self.send(&obj(&[
+            ("cmd", Json::Str("stream_push".into())),
+            ("samples", samples_json(chunk)),
+        ]))
+    }
+
+    pub fn stream_close(&mut self) -> Result<(), ClientError> {
+        self.send(&obj(&[("cmd", Json::Str("stream_close".into()))]))
+    }
+
+    // -- framing ------------------------------------------------------
+
+    /// Read until `buf` is full, consuming buffered bytes first.
+    fn read_exact_buffered(
+        &mut self,
+        buf: &mut [u8],
+    ) -> Result<(), ClientError> {
+        while self.rbuf.len() < buf.len() {
+            self.fill_rbuf()?;
+        }
+        buf.copy_from_slice(&self.rbuf[..buf.len()]);
+        self.rbuf.drain(..buf.len());
+        Ok(())
+    }
+
+    /// Read the next complete frame payload.
+    fn read_frame(&mut self) -> Result<Vec<u8>, ClientError> {
+        loop {
+            match frame::first_frame_len(&self.rbuf) {
+                Err(e) => {
+                    return Err(ClientError::Protocol(e.to_string()));
+                }
+                Ok(Some(total)) if self.rbuf.len() >= total => {
+                    let payload =
+                        self.rbuf[frame::HEADER_LEN..total].to_vec();
+                    self.rbuf.drain(..total);
+                    return Ok(payload);
+                }
+                Ok(_) => self.fill_rbuf()?,
+            }
+        }
+    }
+
+    fn fill_rbuf(&mut self) -> Result<(), ClientError> {
+        let mut chunk = [0u8; 8192];
+        let n = self.stream.read(&mut chunk).map_err(io_to_client)?;
+        if n == 0 {
+            return Err(ClientError::Closed);
+        }
+        self.rbuf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+}
+
+/// Build a JSON object from (key, value) pairs.
+fn obj(fields: &[(&str, Json)]) -> Json {
+    let mut map = std::collections::BTreeMap::new();
+    for (k, v) in fields {
+        map.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(map)
+}
+
+/// Channels of u16 samples as nested JSON arrays.  Under the binary
+/// encoding these hit the packed-u16 array representation on the wire.
+fn samples_json(channels: &[Vec<u16>]) -> Json {
+    Json::Arr(
+        channels
+            .iter()
+            .map(|ch| {
+                Json::Arr(
+                    ch.iter().map(|&s| Json::Num(f64::from(s))).collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_objects_have_the_wire_shape() {
+        let req = obj(&[
+            ("cmd", Json::Str("classify".into())),
+            ("trace", samples_json(&[vec![1, 2], vec![3, 4]])),
+        ]);
+        assert_eq!(
+            req.to_string(),
+            "{\"cmd\":\"classify\",\"trace\":[[1,2],[3,4]]}"
+        );
+        // Binary: the sample arrays take the packed-u16 path.
+        let bytes = bin::encode(&req);
+        assert_eq!(bin::decode(&bytes).unwrap(), req);
+    }
+
+    #[test]
+    fn timeout_maps_from_both_io_kinds() {
+        for kind in [
+            std::io::ErrorKind::WouldBlock,
+            std::io::ErrorKind::TimedOut,
+        ] {
+            assert!(matches!(
+                io_to_client(std::io::Error::new(kind, "t/o")),
+                ClientError::Timeout
+            ));
+        }
+        assert!(matches!(
+            io_to_client(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "rst"
+            )),
+            ClientError::Io(_)
+        ));
+    }
+}

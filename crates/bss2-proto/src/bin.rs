@@ -1,0 +1,301 @@
+//! Tagged binary encoding of [`Json`] values — the payload format of
+//! binary-mode frames.
+//!
+//! One byte of tag, then a fixed layout per tag (all integers little
+//! endian):
+//!
+//! | tag    | value                                                    |
+//! |--------|----------------------------------------------------------|
+//! | `0x00` | null                                                     |
+//! | `0x01` | false                                                    |
+//! | `0x02` | true                                                     |
+//! | `0x03` | number: f64, 8 bytes                                     |
+//! | `0x04` | string: u32 byte length + UTF-8 bytes                    |
+//! | `0x05` | array: u32 count + that many values                      |
+//! | `0x06` | object: u32 count + (u32 key length + key + value) each  |
+//! | `0x07` | packed u16 array: u32 count + that many u16s             |
+//!
+//! `0x07` is the fast path for ECG sample windows (12-bit ADC codes): a
+//! 2048-sample channel is 4100 bytes instead of ~18 KiB of `0x05` + f64
+//! elements.  The encoder picks it automatically for non-empty arrays of
+//! integral numbers in `0..=65535`; the decoder expands it back to a
+//! plain array of numbers, so the two forms are semantically identical.
+//!
+//! The decoder is written for hostile input: every read is bounds
+//! checked, collection counts are validated against the remaining bytes
+//! *before* any allocation, recursion depth is capped, and trailing
+//! garbage after the value is an error.  It must never panic — the
+//! framing-robustness suite feeds it random bytes.
+
+use crate::json::Json;
+
+const TAG_NULL: u8 = 0x00;
+const TAG_FALSE: u8 = 0x01;
+const TAG_TRUE: u8 = 0x02;
+const TAG_NUM: u8 = 0x03;
+const TAG_STR: u8 = 0x04;
+const TAG_ARR: u8 = 0x05;
+const TAG_OBJ: u8 = 0x06;
+const TAG_U16S: u8 = 0x07;
+
+/// Nesting cap: deeper input is rejected rather than risking stack
+/// overflow on attacker-chosen `[[[[…]]]]` payloads.
+const MAX_DEPTH: usize = 64;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum BinError {
+    #[error("binary value truncated")]
+    Truncated,
+    #[error("unknown binary tag 0x{0:02x}")]
+    BadTag(u8),
+    #[error("binary string is not valid UTF-8")]
+    Utf8,
+    #[error("trailing bytes after binary value")]
+    TrailingBytes,
+    #[error("binary value nested deeper than {MAX_DEPTH} levels")]
+    TooDeep,
+}
+
+/// Encode one value; the inverse of [`decode`] up to the `0x05`/`0x07`
+/// array-representation choice (which decodes to the same [`Json`]).
+pub fn encode(v: &Json) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    encode_value(v, &mut out);
+    out
+}
+
+fn encode_value(v: &Json, out: &mut Vec<u8>) {
+    match v {
+        Json::Null => out.push(TAG_NULL),
+        Json::Bool(false) => out.push(TAG_FALSE),
+        Json::Bool(true) => out.push(TAG_TRUE),
+        Json::Num(n) => {
+            out.push(TAG_NUM);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        Json::Str(s) => {
+            out.push(TAG_STR);
+            out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+        Json::Arr(items) => {
+            if !items.is_empty() && items.iter().all(is_packable_u16) {
+                out.push(TAG_U16S);
+                out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+                for item in items {
+                    let Json::Num(n) = item else { unreachable!() };
+                    out.extend_from_slice(&(*n as u16).to_le_bytes());
+                }
+            } else {
+                out.push(TAG_ARR);
+                out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+                for item in items {
+                    encode_value(item, out);
+                }
+            }
+        }
+        Json::Obj(map) => {
+            out.push(TAG_OBJ);
+            out.extend_from_slice(&(map.len() as u32).to_le_bytes());
+            for (k, val) in map {
+                out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+                out.extend_from_slice(k.as_bytes());
+                encode_value(val, out);
+            }
+        }
+    }
+}
+
+fn is_packable_u16(v: &Json) -> bool {
+    matches!(v, Json::Num(n)
+        if n.fract() == 0.0 && *n >= 0.0 && *n <= f64::from(u16::MAX))
+}
+
+/// Decode one value, requiring that it consume the whole buffer.
+pub fn decode(buf: &[u8]) -> Result<Json, BinError> {
+    let mut r = Reader { buf, pos: 0 };
+    let v = r.value(0)?;
+    if r.pos != buf.len() {
+        return Err(BinError::TrailingBytes);
+    }
+    Ok(v)
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], BinError> {
+        if n > self.remaining() {
+            return Err(BinError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, BinError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, BinError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a collection count and sanity-check it against the bytes left:
+    /// each element occupies at least `min_elem_bytes`, so a count that
+    /// cannot possibly fit is rejected before `Vec::with_capacity`.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, BinError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_elem_bytes) > self.remaining() {
+            return Err(BinError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn string(&mut self) -> Result<String, BinError> {
+        let len = self.u32()? as usize;
+        if len > self.remaining() {
+            return Err(BinError::Truncated);
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| BinError::Utf8)
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, BinError> {
+        if depth >= MAX_DEPTH {
+            return Err(BinError::TooDeep);
+        }
+        match self.u8()? {
+            TAG_NULL => Ok(Json::Null),
+            TAG_FALSE => Ok(Json::Bool(false)),
+            TAG_TRUE => Ok(Json::Bool(true)),
+            TAG_NUM => {
+                let b = self.take(8)?;
+                let mut raw = [0u8; 8];
+                raw.copy_from_slice(b);
+                Ok(Json::Num(f64::from_le_bytes(raw)))
+            }
+            TAG_STR => Ok(Json::Str(self.string()?)),
+            TAG_ARR => {
+                let n = self.count(1)?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(self.value(depth + 1)?);
+                }
+                Ok(Json::Arr(items))
+            }
+            TAG_OBJ => {
+                // Each entry is at least a 4-byte key length + 1-byte tag.
+                let n = self.count(5)?;
+                let mut map = std::collections::BTreeMap::new();
+                for _ in 0..n {
+                    let k = self.string()?;
+                    let v = self.value(depth + 1)?;
+                    map.insert(k, v);
+                }
+                Ok(Json::Obj(map))
+            }
+            TAG_U16S => {
+                let n = self.count(2)?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let b = self.take(2)?;
+                    items.push(Json::Num(f64::from(u16::from_le_bytes([
+                        b[0], b[1],
+                    ]))));
+                }
+                Ok(Json::Arr(items))
+            }
+            tag => Err(BinError::BadTag(tag)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: Json) {
+        assert_eq!(decode(&encode(&v)).unwrap(), v, "roundtrip {v}");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        roundtrip(Json::Null);
+        roundtrip(Json::Bool(true));
+        roundtrip(Json::Bool(false));
+        roundtrip(Json::Num(0.0));
+        roundtrip(Json::Num(-276.5));
+        roundtrip(Json::Num(1e300));
+        roundtrip(Json::Str(String::new()));
+        roundtrip(Json::Str("chip 0: ok \"quoted\" ünïcode".into()));
+    }
+
+    #[test]
+    fn collections_roundtrip() {
+        roundtrip(Json::Arr(vec![]));
+        roundtrip(Json::Arr(vec![
+            Json::Num(1.5),
+            Json::Str("x".into()),
+            Json::Null,
+            Json::Arr(vec![Json::Bool(true)]),
+        ]));
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("cmd".to_string(), Json::Str("classify".into()));
+        m.insert("trace".to_string(), Json::Arr(vec![Json::Num(7.0)]));
+        roundtrip(Json::Obj(m));
+    }
+
+    #[test]
+    fn sample_windows_take_the_packed_path() {
+        let window: Vec<Json> =
+            (0..2048u32).map(|i| Json::Num(f64::from(i % 4096))).collect();
+        let v = Json::Arr(window);
+        let bytes = encode(&v);
+        assert_eq!(bytes[0], TAG_U16S);
+        assert_eq!(bytes.len(), 1 + 4 + 2 * 2048);
+        assert_eq!(decode(&bytes).unwrap(), v);
+        // Non-integral or out-of-range elements force the general form.
+        let general = Json::Arr(vec![Json::Num(0.5)]);
+        assert_eq!(encode(&general)[0], TAG_ARR);
+        let negative = Json::Arr(vec![Json::Num(-1.0)]);
+        assert_eq!(encode(&negative)[0], TAG_ARR);
+        let wide = Json::Arr(vec![Json::Num(65536.0)]);
+        assert_eq!(encode(&wide)[0], TAG_ARR);
+    }
+
+    #[test]
+    fn hostile_inputs_are_typed_errors_not_panics() {
+        assert_eq!(decode(&[]), Err(BinError::Truncated));
+        assert_eq!(decode(&[0xff]), Err(BinError::BadTag(0xff)));
+        assert_eq!(decode(&[TAG_NUM, 1, 2]), Err(BinError::Truncated));
+        // Count claims 4 billion elements with 3 bytes left.
+        let mut huge = vec![TAG_ARR];
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        huge.extend_from_slice(&[0, 0, 0]);
+        assert_eq!(decode(&huge), Err(BinError::Truncated));
+        // Invalid UTF-8 in a string.
+        let mut bad = vec![TAG_STR];
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.extend_from_slice(&[0xc3, 0x28]);
+        assert_eq!(decode(&bad), Err(BinError::Utf8));
+        // Trailing garbage after a complete value.
+        assert_eq!(decode(&[TAG_NULL, 0]), Err(BinError::TrailingBytes));
+        // Nesting bomb: 100 nested single-element arrays.
+        let mut bomb = Vec::new();
+        for _ in 0..100 {
+            bomb.push(TAG_ARR);
+            bomb.extend_from_slice(&1u32.to_le_bytes());
+        }
+        bomb.push(TAG_NULL);
+        assert_eq!(decode(&bomb), Err(BinError::TooDeep));
+    }
+}

@@ -1,0 +1,89 @@
+//! Length-prefixed framing: each frame is a 4-byte little-endian payload
+//! length followed by the payload bytes.  The prefix is validated against
+//! [`crate::MAX_FRAME`] *before* any allocation, so a hostile peer cannot
+//! make the server reserve gigabytes with four bytes of input.
+
+use crate::MAX_FRAME;
+
+/// Size of the length prefix.
+pub const HEADER_LEN: usize = 4;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum FrameError {
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    TooLarge { len: usize, max: usize },
+}
+
+/// Total length (header + payload) of the first frame in `buf`, if a
+/// complete header is present.  `Ok(None)` means "need more bytes";
+/// `Err(TooLarge)` is fatal for the connection and is raised as soon as
+/// the header arrives, even if the payload never does.
+pub fn first_frame_len(buf: &[u8]) -> Result<Option<usize>, FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let len =
+        u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let total = HEADER_LEN + len;
+    if total > MAX_FRAME {
+        return Err(FrameError::TooLarge { len: total, max: MAX_FRAME });
+    }
+    Ok(Some(total))
+}
+
+/// Append one framed payload to `out`.
+///
+/// Panics if `payload` exceeds [`MAX_FRAME`]; encoders own their payload
+/// sizes, so this is a programming error rather than a wire condition.
+pub fn encode_into(payload: &[u8], out: &mut Vec<u8>) {
+    assert!(
+        HEADER_LEN + payload.len() <= MAX_FRAME,
+        "frame payload of {} bytes exceeds MAX_FRAME",
+        payload.len()
+    );
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_partial_frames() {
+        let mut buf = Vec::new();
+        encode_into(b"hello", &mut buf);
+        encode_into(b"", &mut buf);
+        assert_eq!(first_frame_len(&buf).unwrap(), Some(9));
+        assert_eq!(&buf[HEADER_LEN..9], b"hello");
+        assert_eq!(first_frame_len(&buf[9..]).unwrap(), Some(4));
+        // Incomplete header: need more bytes, no error.
+        assert_eq!(first_frame_len(&buf[..3]).unwrap(), None);
+        // Complete header, incomplete payload: still a valid prefix.
+        assert_eq!(first_frame_len(&buf[..6]).unwrap(), Some(9));
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_before_payload_arrives() {
+        let mut buf = (MAX_FRAME as u32).to_le_bytes().to_vec();
+        buf.push(0);
+        assert_eq!(
+            first_frame_len(&buf),
+            Err(FrameError::TooLarge {
+                len: HEADER_LEN + MAX_FRAME,
+                max: MAX_FRAME
+            })
+        );
+        let huge = u32::MAX.to_le_bytes();
+        assert!(first_frame_len(&huge).is_err());
+    }
+
+    #[test]
+    fn largest_legal_frame_is_accepted() {
+        let len = (MAX_FRAME - HEADER_LEN) as u32;
+        assert_eq!(
+            first_frame_len(&len.to_le_bytes()).unwrap(),
+            Some(MAX_FRAME)
+        );
+    }
+}

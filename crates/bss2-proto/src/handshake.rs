@@ -1,0 +1,187 @@
+//! Connection-open negotiation.
+//!
+//! A framed client opens with an 8-byte hello; the server answers with an
+//! 8-byte ack or reject and the connection then speaks frames.  A legacy
+//! client sends no hello — its first byte is JSON (`{`, whitespace, …) —
+//! and the server falls back to the line-oriented protocol, so every
+//! pre-existing tool keeps working unchanged.  `0xB5` cannot begin a JSON
+//! line (or any UTF-8 text line), which makes the dispatch unambiguous on
+//! the first byte.
+//!
+//! Byte layout (all three messages are exactly [`LEN`] bytes):
+//!
+//! | off | client hello     | server ack       | server reject       |
+//! |-----|------------------|------------------|---------------------|
+//! | 0   | `0xB5`           | `0xB5`           | `0xB5`              |
+//! | 1   | `0x52` (hello)   | `0x53` (ok)      | `0x5E` (reject)     |
+//! | 2-3 | version, u16 LE  | version, u16 LE  | server version      |
+//! | 4   | encoding         | encoding         | reject reason       |
+//! | 5-7 | reserved, zero   | reserved, zero   | reserved, zero      |
+
+use crate::PROTO_VERSION;
+
+/// Size of every handshake message.
+pub const LEN: usize = 8;
+
+/// First byte of every handshake message (and of nothing else).
+pub const MAGIC: u8 = 0xB5;
+
+const KIND_HELLO: u8 = 0x52;
+const KIND_OK: u8 = 0x53;
+const KIND_REJECT: u8 = 0x5E;
+
+/// Reject reason: the client's protocol version is not supported.
+pub const REJECT_VERSION: u8 = 1;
+/// Reject reason: the requested encoding is unknown to the server.
+pub const REJECT_ENCODING: u8 = 2;
+
+/// Payload encoding carried inside frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Frames carry UTF-8 JSON text (framing without the binary codec).
+    Json = 1,
+    /// Frames carry [`crate::bin`]-encoded values.
+    Binary = 2,
+}
+
+impl Encoding {
+    pub fn from_byte(b: u8) -> Option<Encoding> {
+        match b {
+            1 => Some(Encoding::Json),
+            2 => Some(Encoding::Binary),
+            _ => None,
+        }
+    }
+}
+
+/// The server's verdict on a client hello.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HelloVerdict {
+    /// Accept: answer with [`ok_bytes`] and speak frames in this encoding.
+    Accept { version: u16, encoding: Encoding },
+    /// Reject: answer with [`reject_bytes`]`(reason)` and close.
+    Reject { reason: u8 },
+}
+
+/// Client hello for `encoding`, at an explicit version (tests use a wrong
+/// one to provoke rejection; real clients pass [`PROTO_VERSION`]).
+pub fn hello_bytes(version: u16, encoding: Encoding) -> [u8; LEN] {
+    let v = version.to_le_bytes();
+    [MAGIC, KIND_HELLO, v[0], v[1], encoding as u8, 0, 0, 0]
+}
+
+/// Server ack confirming the negotiated version and encoding.
+pub fn ok_bytes(version: u16, encoding: Encoding) -> [u8; LEN] {
+    let v = version.to_le_bytes();
+    [MAGIC, KIND_OK, v[0], v[1], encoding as u8, 0, 0, 0]
+}
+
+/// Server reject carrying the server's own version and a reason code.
+pub fn reject_bytes(reason: u8) -> [u8; LEN] {
+    let v = PROTO_VERSION.to_le_bytes();
+    [MAGIC, KIND_REJECT, v[0], v[1], reason, 0, 0, 0]
+}
+
+/// Server-side evaluation of a complete hello message whose first byte is
+/// already known to be [`MAGIC`].  A malformed second byte is treated as a
+/// version problem: the client is clearly framed-family but not speaking
+/// anything we know.
+pub fn evaluate_hello(msg: &[u8; LEN]) -> HelloVerdict {
+    if msg[1] != KIND_HELLO {
+        return HelloVerdict::Reject { reason: REJECT_VERSION };
+    }
+    let version = u16::from_le_bytes([msg[2], msg[3]]);
+    if version != PROTO_VERSION {
+        return HelloVerdict::Reject { reason: REJECT_VERSION };
+    }
+    match Encoding::from_byte(msg[4]) {
+        Some(encoding) => HelloVerdict::Accept { version, encoding },
+        None => HelloVerdict::Reject { reason: REJECT_ENCODING },
+    }
+}
+
+/// Client-side evaluation of the server's 8-byte answer.
+pub fn evaluate_ack(msg: &[u8; LEN]) -> Result<Encoding, AckError> {
+    if msg[0] != MAGIC {
+        return Err(AckError::NotFramed);
+    }
+    let version = u16::from_le_bytes([msg[2], msg[3]]);
+    match msg[1] {
+        KIND_OK => match Encoding::from_byte(msg[4]) {
+            Some(e) => Ok(e),
+            None => Err(AckError::Malformed),
+        },
+        KIND_REJECT => Err(AckError::Rejected {
+            server_version: version,
+            reason: msg[4],
+        }),
+        _ => Err(AckError::Malformed),
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum AckError {
+    #[error("server does not speak the framed protocol")]
+    NotFramed,
+    #[error(
+        "server rejected the handshake (server version {server_version}, \
+         reason {reason})"
+    )]
+    Rejected { server_version: u16, reason: u8 },
+    #[error("malformed handshake answer")]
+    Malformed,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_ack_roundtrip_both_encodings() {
+        for enc in [Encoding::Json, Encoding::Binary] {
+            let hello = hello_bytes(PROTO_VERSION, enc);
+            assert_eq!(
+                evaluate_hello(&hello),
+                HelloVerdict::Accept { version: PROTO_VERSION, encoding: enc }
+            );
+            assert_eq!(
+                evaluate_ack(&ok_bytes(PROTO_VERSION, enc)),
+                Ok(enc)
+            );
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_with_server_version() {
+        let hello = hello_bytes(PROTO_VERSION + 9, Encoding::Binary);
+        assert_eq!(
+            evaluate_hello(&hello),
+            HelloVerdict::Reject { reason: REJECT_VERSION }
+        );
+        assert_eq!(
+            evaluate_ack(&reject_bytes(REJECT_VERSION)),
+            Err(AckError::Rejected {
+                server_version: PROTO_VERSION,
+                reason: REJECT_VERSION,
+            })
+        );
+    }
+
+    #[test]
+    fn unknown_encoding_is_rejected() {
+        let mut hello = hello_bytes(PROTO_VERSION, Encoding::Json);
+        hello[4] = 0x7f;
+        assert_eq!(
+            evaluate_hello(&hello),
+            HelloVerdict::Reject { reason: REJECT_ENCODING }
+        );
+    }
+
+    #[test]
+    fn magic_cannot_start_a_json_line() {
+        // The legacy protocol's first byte is always ASCII (a JSON value
+        // or whitespace); 0xB5 is a UTF-8 continuation byte and can never
+        // appear first in well-formed text.
+        assert!(MAGIC >= 0x80);
+    }
+}

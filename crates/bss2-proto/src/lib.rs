@@ -1,0 +1,45 @@
+//! Wire protocol for the bss2 serving layer (DESIGN.md §14).
+//!
+//! This crate is the shared language between `bss2-client` and the server
+//! in the core crate, deliberately free of any engine/fleet dependency:
+//!
+//! * [`json`] — the JSON value type and parser/writer used by both the
+//!   legacy line-oriented protocol and the artifact formats.
+//! * [`frame`] — length-prefixed binary framing (u32 LE prefix, 8 MiB cap).
+//! * [`bin`] — compact tagged binary encoding of [`json::Json`] values,
+//!   with a packed-u16 fast path for ECG sample arrays.
+//! * [`handshake`] — the 8-byte magic/version/encoding negotiation that
+//!   selects framed-binary, framed-JSON, or the legacy line protocol.
+//!
+//! Wire limits that both sides must agree on live here too, so the client
+//! crate can validate requests before they ever hit a socket.
+
+pub mod bin;
+pub mod frame;
+pub mod handshake;
+pub mod json;
+
+/// Protocol version spoken by this build (negotiated in the handshake).
+pub const PROTO_VERSION: u16 = 1;
+
+/// Hard cap on a single frame (header + payload), and on a single legacy
+/// JSON line.  A full `classify_batch` of 64 two-channel windows is ~1.2 MiB
+/// as text; 8 MiB leaves generous headroom without letting one connection
+/// balloon the server's buffers.
+pub const MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// Cap on one request line in the legacy line-JSON mode (same budget).
+pub const MAX_LINE: usize = MAX_FRAME;
+
+/// Most traces one `classify_batch` request may carry.
+pub const MAX_WIRE_BATCH: usize = 64;
+
+/// Most measurement repetitions one `recalibrate` request may ask for.
+pub const MAX_RECALIB_REPS: usize = 1024;
+
+/// Most samples per channel in one `stream_push` chunk.
+pub const MAX_STREAM_CHUNK: usize = 16384;
+
+/// Pipelining depth: how many replies may be pending per connection before
+/// the server stops reading further requests from it (backpressure).
+pub const PENDING_REPLY_DEPTH: usize = 256;

@@ -1,0 +1,313 @@
+//! Protocol state machine shared by both connection models (DESIGN.md
+//! §14): sniffs the transport on the first byte, then turns raw socket
+//! bytes into complete requests.
+//!
+//! * First byte == [`handshake::MAGIC`]: a framed client.  The 8-byte
+//!   hello negotiates version + encoding; afterwards every request is a
+//!   length-prefixed frame carrying JSON text or a binary-encoded value.
+//! * Anything else: the legacy line-oriented JSON protocol, byte-for-byte
+//!   compatible with every pre-existing client.
+//!
+//! The state machine is transport-agnostic — the threaded reader and the
+//! readiness loop both feed it whatever `read()` returned and act on the
+//! drained events — and hostile-input safe: malformed payloads become
+//! [`WireEvent::BadRequest`] (typed error reply, connection keeps going),
+//! while protocol violations (oversized frame or line, unsupported
+//! version) are [`Fatal`] — one final reply, then close.
+
+use bss2_proto::handshake::{self, Encoding, HelloVerdict};
+use bss2_proto::{bin, frame, MAX_LINE};
+
+use crate::util::json::Json;
+
+/// How replies are serialized back to this connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum ReplyFormat {
+    /// Legacy: the reply text plus `\n`.
+    Lines,
+    /// A frame around the reply text.
+    FramedJson,
+    /// A frame around the binary encoding of the reply value.
+    FramedBin,
+}
+
+impl ReplyFormat {
+    pub(super) fn for_encoding(enc: Encoding) -> ReplyFormat {
+        match enc {
+            Encoding::Json => ReplyFormat::FramedJson,
+            Encoding::Binary => ReplyFormat::FramedBin,
+        }
+    }
+
+    /// Serialize one reply (the resolvers' JSON text) onto the wire.
+    pub(super) fn serialize(self, text: &str, out: &mut Vec<u8>) {
+        match self {
+            ReplyFormat::Lines => {
+                out.extend_from_slice(text.as_bytes());
+                out.push(b'\n');
+            }
+            ReplyFormat::FramedJson => frame::encode_into(text.as_bytes(), out),
+            ReplyFormat::FramedBin => {
+                // Replies are produced by the (tested) reply writers, so
+                // the parse cannot fail; the fallback keeps a hypothetical
+                // bug observable instead of panicking the worker.
+                let value = Json::parse(text)
+                    .unwrap_or_else(|_| Json::Str(text.to_string()));
+                frame::encode_into(&bin::encode(&value), out);
+            }
+        }
+    }
+}
+
+/// One event drained from the byte stream.
+pub(super) enum WireEvent {
+    /// Accepted handshake: ack with [`handshake::ok_bytes`] and switch
+    /// the connection's [`ReplyFormat`].
+    Hello(Encoding),
+    /// One complete, well-formed request.
+    Request(Json),
+    /// A complete but malformed request payload.  Reply with this error
+    /// message and keep the connection (a pipelining client must keep
+    /// its request/reply correlation even across its own mistakes).
+    BadRequest(String),
+}
+
+/// A protocol violation: write one final reply, then close.
+pub(super) enum Fatal {
+    /// Raw handshake-reject bytes (the peer speaks frames, not text).
+    Reject([u8; handshake::LEN]),
+    /// Error message to serialize in the connection's current format.
+    Error(String),
+}
+
+enum Mode {
+    /// Nothing received yet: sniff the first byte.
+    Detect,
+    Lines,
+    Frames(Encoding),
+}
+
+/// Per-connection receive state: the undrained byte buffer plus the
+/// negotiated transport mode.
+pub(super) struct ProtoState {
+    buf: Vec<u8>,
+    mode: Mode,
+}
+
+impl ProtoState {
+    pub(super) fn new() -> ProtoState {
+        ProtoState { buf: Vec::new(), mode: Mode::Detect }
+    }
+
+    /// The reply format matching the negotiated transport.
+    pub(super) fn reply_format(&self) -> ReplyFormat {
+        match self.mode {
+            Mode::Detect | Mode::Lines => ReplyFormat::Lines,
+            Mode::Frames(enc) => ReplyFormat::for_encoding(enc),
+        }
+    }
+
+    /// Feed freshly read bytes and drain every complete event.  After a
+    /// [`Fatal`] the state must not be fed again (the caller closes).
+    pub(super) fn push(
+        &mut self,
+        bytes: &[u8],
+    ) -> Result<Vec<WireEvent>, Fatal> {
+        self.buf.extend_from_slice(bytes);
+        let mut events = Vec::new();
+        let mut cursor = 0usize;
+        let result = loop {
+            let avail = &self.buf[cursor..];
+            match self.mode {
+                Mode::Detect => {
+                    let Some(&first) = avail.first() else { break Ok(()) };
+                    if first != handshake::MAGIC {
+                        self.mode = Mode::Lines;
+                        continue;
+                    }
+                    if avail.len() < handshake::LEN {
+                        break Ok(()); // wait for the whole hello
+                    }
+                    let mut hello = [0u8; handshake::LEN];
+                    hello.copy_from_slice(&avail[..handshake::LEN]);
+                    cursor += handshake::LEN;
+                    match handshake::evaluate_hello(&hello) {
+                        HelloVerdict::Accept { encoding, .. } => {
+                            self.mode = Mode::Frames(encoding);
+                            events.push(WireEvent::Hello(encoding));
+                        }
+                        HelloVerdict::Reject { reason } => {
+                            break Err(Fatal::Reject(handshake::reject_bytes(
+                                reason,
+                            )));
+                        }
+                    }
+                }
+                Mode::Lines => {
+                    let Some(nl) = avail.iter().position(|&b| b == b'\n')
+                    else {
+                        if avail.len() > MAX_LINE {
+                            break Err(Fatal::Error(format!(
+                                "request line exceeds the {MAX_LINE}-byte \
+                                 limit"
+                            )));
+                        }
+                        break Ok(());
+                    };
+                    let line = &avail[..nl];
+                    cursor += nl + 1;
+                    match std::str::from_utf8(line) {
+                        Err(_) => events.push(WireEvent::BadRequest(
+                            "bad json: request is not valid UTF-8".into(),
+                        )),
+                        Ok(text) => {
+                            let text = text.trim();
+                            if text.is_empty() {
+                                continue;
+                            }
+                            events.push(match Json::parse(text) {
+                                Ok(req) => WireEvent::Request(req),
+                                Err(e) => WireEvent::BadRequest(format!(
+                                    "bad json: {e}"
+                                )),
+                            });
+                        }
+                    }
+                }
+                Mode::Frames(enc) => {
+                    let total = match frame::first_frame_len(avail) {
+                        Err(frame::FrameError::TooLarge { len, max }) => {
+                            break Err(Fatal::Error(format!(
+                                "frame of {len} bytes exceeds the \
+                                 {max}-byte limit"
+                            )));
+                        }
+                        Ok(None) => break Ok(()),
+                        Ok(Some(total)) => total,
+                    };
+                    if avail.len() < total {
+                        break Ok(()); // mid-frame: wait for the rest
+                    }
+                    let payload = &avail[frame::HEADER_LEN..total];
+                    events.push(decode_payload(enc, payload));
+                    cursor += total;
+                }
+            }
+        };
+        self.buf.drain(..cursor);
+        result.map(|()| events)
+    }
+}
+
+fn decode_payload(enc: Encoding, payload: &[u8]) -> WireEvent {
+    match enc {
+        Encoding::Json => match std::str::from_utf8(payload) {
+            Err(_) => WireEvent::BadRequest(
+                "bad json: request is not valid UTF-8".into(),
+            ),
+            Ok(text) => match Json::parse(text.trim()) {
+                Ok(req) => WireEvent::Request(req),
+                Err(e) => WireEvent::BadRequest(format!("bad json: {e}")),
+            },
+        },
+        Encoding::Binary => match bin::decode(payload) {
+            Ok(req) => WireEvent::Request(req),
+            Err(e) => WireEvent::BadRequest(format!("bad request: {e}")),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use bss2_proto::PROTO_VERSION;
+
+    fn req_bytes(text: &str) -> Vec<u8> {
+        let mut out = Vec::new();
+        frame::encode_into(text.as_bytes(), &mut out);
+        out
+    }
+
+    #[test]
+    fn legacy_lines_pass_through() {
+        let mut st = ProtoState::new();
+        // Split across pushes, with a blank line in between.
+        let ev = st.push(b"{\"cmd\":\"pi").unwrap();
+        assert!(ev.is_empty());
+        let ev = st.push(b"ng\"}\n\n{\"cmd\":").unwrap();
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(&ev[0], WireEvent::Request(r)
+            if r.get("cmd").and_then(|c| c.as_str()) == Some("ping")));
+        assert_eq!(st.reply_format(), ReplyFormat::Lines);
+        let ev = st.push(b"3}\nnot json\n").unwrap();
+        assert_eq!(ev.len(), 2);
+        assert!(matches!(&ev[0], WireEvent::Request(_)));
+        assert!(matches!(&ev[1], WireEvent::BadRequest(m)
+            if m.starts_with("bad json")));
+    }
+
+    #[test]
+    fn framed_json_negotiates_and_drains() {
+        let mut st = ProtoState::new();
+        let mut bytes =
+            handshake::hello_bytes(PROTO_VERSION, Encoding::Json).to_vec();
+        bytes.extend_from_slice(&req_bytes("{\"cmd\":\"ping\"}"));
+        // Feed byte by byte: every split point must be handled.
+        let mut events = Vec::new();
+        for b in bytes {
+            events.extend(st.push(&[b]).unwrap());
+        }
+        assert_eq!(events.len(), 2);
+        assert!(matches!(events[0], WireEvent::Hello(Encoding::Json)));
+        assert!(matches!(&events[1], WireEvent::Request(_)));
+        assert_eq!(st.reply_format(), ReplyFormat::FramedJson);
+    }
+
+    #[test]
+    fn binary_frames_decode() {
+        let mut st = ProtoState::new();
+        let hello = handshake::hello_bytes(PROTO_VERSION, Encoding::Binary);
+        assert_eq!(st.push(&hello).unwrap().len(), 1);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("cmd".to_string(), Json::Str("stats".into()));
+        let mut framed = Vec::new();
+        frame::encode_into(&bin::encode(&Json::Obj(m)), &mut framed);
+        let ev = st.push(&framed).unwrap();
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(&ev[0], WireEvent::Request(r)
+            if r.get("cmd").and_then(|c| c.as_str()) == Some("stats")));
+        // Garbage inside a well-formed frame: typed error, not fatal.
+        let mut garbage = Vec::new();
+        frame::encode_into(&[0xfe, 0xba, 0xbe], &mut garbage);
+        let ev = st.push(&garbage).unwrap();
+        assert!(matches!(&ev[0], WireEvent::BadRequest(m)
+            if m.starts_with("bad request")));
+    }
+
+    #[test]
+    fn version_mismatch_is_fatal_reject() {
+        let mut st = ProtoState::new();
+        let hello = handshake::hello_bytes(PROTO_VERSION + 1, Encoding::Json);
+        match st.push(&hello) {
+            Err(Fatal::Reject(bytes)) => {
+                assert_eq!(
+                    handshake::evaluate_ack(&bytes),
+                    Err(handshake::AckError::Rejected {
+                        server_version: PROTO_VERSION,
+                        reason: handshake::REJECT_VERSION,
+                    })
+                );
+            }
+            _ => panic!("expected a handshake reject"),
+        }
+    }
+
+    #[test]
+    fn oversized_frame_is_fatal() {
+        let mut st = ProtoState::new();
+        let hello = handshake::hello_bytes(PROTO_VERSION, Encoding::Json);
+        st.push(&hello).unwrap();
+        let huge = (u32::MAX).to_le_bytes();
+        assert!(matches!(st.push(&huge), Err(Fatal::Error(_))));
+    }
+}

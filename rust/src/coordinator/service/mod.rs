@@ -4,25 +4,45 @@
 //! interfaces on host computers that exchange serialized experiment
 //! configurations and result data with the mobile system."
 //!
-//! Ours is a line-delimited JSON protocol over TCP (the mobile system's
-//! USB-Ethernet remote path).  Requests are dispatched through a
+//! Ours is a JSON-valued protocol over TCP (the mobile system's
+//! USB-Ethernet remote path) with two transports, negotiated per
+//! connection by the first byte (DESIGN.md §14, `bss2-proto`):
+//!
+//! * **Legacy lines**: one JSON object per `\n`-terminated line — the
+//!   original protocol, still spoken byte-for-byte by old clients.
+//! * **Framed**: an 8-byte magic hello negotiates the protocol version
+//!   and an encoding (framed JSON text, or the compact binary value
+//!   encoding with packed `u16` sample arrays); every request and reply
+//!   is then a length-prefixed frame.  `bss2-client` implements this.
+//!
+//! Requests are dispatched through a
 //! [`fleet::Fleet`](crate::fleet::Fleet) of engine replicas.  A `classify`
 //! serves one trace at the paper's 276 µs single-sample latency; a
 //! `classify_batch` trades latency for throughput: the whole batch runs on
 //! one chip as a single program with one weight reconfiguration per layer
 //! per batch (DESIGN.md §9).  The fleet spreads concurrent clients across
 //! replicas, accounts admission in *samples*, and sheds load explicitly —
-//! a batch that only partially fits is partially accepted.
+//! a batch that only partially fits is partially accepted; every shed
+//! reply carries backoff hints (`queue_depth`, `retry_after_us`).
 //!
-//! **Connection model** (DESIGN.md §11): each connection is split into a
-//! *reader* (parses requests, dispatches into the fleet without waiting)
-//! and an *ordered-reply writer* (a FIFO of pending replies, each resolved
-//! as its chip finishes).  Replies therefore arrive in request order while
-//! in-flight requests **pipeline** — a client may write N requests before
-//! reading any reply, and they execute concurrently across the fleet.
-//! All I/O is blocking and shutdown-aware: idle connections cause zero
-//! periodic wakeups, and `stop()` unblocks everything by closing the
-//! listener and every registered connection.
+//! **Connection model** (DESIGN.md §11/§14, [`ServeModel`]): requests
+//! pipeline — a client may write N requests before reading any reply;
+//! replies come back in request order, each resolved as its chip
+//! finishes, with the pending-reply FIFO bounded at
+//! [`PENDING_REPLY_DEPTH`].  Two interchangeable implementations:
+//!
+//! * [`ServeModel::Readiness`] (default on unix): a small worker set
+//!   multiplexes *all* connections over non-blocking sockets and
+//!   `poll(2)`; chip completions wake the owning worker through a pipe.
+//!   Thousands of mostly-idle connections cost two fds and a few kB
+//!   each, not two threads each.
+//! * [`ServeModel::Threaded`]: the original reader + ordered-reply
+//!   writer thread pair per connection — the loadgen baseline, and the
+//!   only model on non-unix hosts.
+//!
+//! Both are shutdown-aware: idle connections cause zero periodic
+//! wakeups, and `stop()` unblocks everything by closing the listener and
+//! every registered connection.
 //!
 //! **Streaming sessions**: continuous ECG monitoring pushes an unbroken
 //! sample stream in arbitrary chunks; the server windows it incrementally
@@ -35,14 +55,15 @@
 //! -> {"cmd": "classify", "trace": [[...ch0 u12...], [...ch1...]]}
 //! <- {"ok": true, "pred": 1, "scores": [a, b], "time_us": t,
 //!     "energy_mj": e, "chip": c}
-//! <- {"ok": false, "shed": true, "error": "...", "retry_after_us": n}
+//! <- {"ok": false, "shed": true, "error": "...", "queue_depth": q,
+//!     "retry_after_us": n}
 //! -> {"cmd": "classify_batch", "traces": [[[..ch0..], [..ch1..]], ...]}
 //! <- {"ok": true, "chip": c, "batch": B, "accepted": k, "shed": B - k,
 //!     "retry_after_us": n?, "time_us_per_sample": t,
 //!     "results": [{"pred": p, "scores": [a, b], "time_us": t,
 //!                  "energy_mj": e}, ...k entries...]}
 //! <- {"ok": false, "shed": true, "error": "...", "accepted": 0,
-//!     "batch": B, "retry_after_us": n}
+//!     "batch": B, "queue_depth": q, "retry_after_us": n}
 //! <- {"ok": false, "error": "...", "batch": B, "accepted": k}
 //!    (terminal engine failure — only after the fleet's transparent
 //!     failover budget is exhausted; still echoes batch/accepted so
@@ -56,7 +77,8 @@
 //!     "pred": p, "scores": [a, b], "time_us": t, "energy_mj": e,
 //!     "chip": c}
 //! <- {"ok": false, "stream": true, "shed": true, "window": w,
-//!     "start_sample": s, "error": "...", "retry_after_us": n}
+//!     "start_sample": s, "error": "...", "queue_depth": q,
+//!     "retry_after_us": n}
 //! -> {"cmd": "stream_close"}
 //! <- {"ok": true, "stream": "closed", "windows": n, "dispatched": d,
 //!     "shed": k, "samples": m}   (written after every pending result)
@@ -88,6 +110,11 @@
 //!     off: an open port must not be an unauthenticated kill switch)
 //! ```
 
+mod conn;
+#[cfg(unix)]
+mod readiness;
+mod threaded;
+
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -98,6 +125,7 @@ use crate::asic::consts as c;
 use crate::ecg::gen::Trace;
 use crate::fleet::{
     BatchDispatchOutcome, ChipId, DispatchOutcome, Fleet, FleetConfig,
+    ReplyNotify,
 };
 use crate::fpga::preprocess::IncrementalWindower;
 use crate::obs::{expo, EventKind, TraceRecord};
@@ -105,27 +133,12 @@ use crate::util::json::Json;
 
 use super::engine::{Engine, Inference};
 
-/// Largest accepted `classify_batch` wire batch (sanity bound for request
-/// and reply sizes; larger batches should be split by the client anyway).
-pub const MAX_WIRE_BATCH: usize = 64;
-
-/// Largest accepted `recalibrate` repetition count: one request must not
-/// wedge a chip in `Calibrating` (and suppress the fleet policy) for an
-/// unbounded measurement.  1024 reps ≈ 6k integrations per half, already
-/// far past the point of diminishing noise suppression.
-pub const MAX_RECALIB_REPS: usize = 1024;
-
-/// Largest accepted `stream_push` chunk [samples per channel] — bounds a
-/// single request line to a few hundred kB; longer recordings are meant
-/// to be pushed as a sequence of chunks anyway.
-pub const MAX_STREAM_CHUNK: usize = 16384;
-
-/// Bound on a connection's pending-reply FIFO.  The reader blocks once
-/// this many replies are outstanding, so a client that writes requests
-/// without ever reading replies stalls its *own* connection (TCP
-/// backpressure) instead of growing server memory without bound — the
-/// pipelining window is "up to this many requests in flight".
-pub const PENDING_REPLY_DEPTH: usize = 256;
+// The wire-protocol limits live in `bss2-proto` (client and server must
+// agree on them); re-exported here so existing `service::MAX_*` paths
+// keep working.
+pub use bss2_proto::{
+    MAX_RECALIB_REPS, MAX_STREAM_CHUNK, MAX_WIRE_BATCH, PENDING_REPLY_DEPTH,
+};
 
 /// Level-triggered shutdown latch: an atomic flag for cheap polling plus
 /// a condvar so [`Service::run_until_shutdown`] can sleep instead of
@@ -216,6 +229,112 @@ impl Drop for ConnGuard {
     }
 }
 
+/// Connection-handling model (DESIGN.md §14).  Both models speak the
+/// same protocols and share the request handler; they differ only in
+/// how many threads a connection costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeModel {
+    /// A fixed worker set multiplexes every connection over
+    /// non-blocking sockets and `poll(2)` — thousands of connections,
+    /// a handful of threads.  Unix only.
+    Readiness,
+    /// One reader + one writer thread per connection (the original
+    /// model; the `repro loadgen` baseline).
+    Threaded,
+}
+
+impl Default for ServeModel {
+    fn default() -> ServeModel {
+        if cfg!(unix) {
+            ServeModel::Readiness
+        } else {
+            ServeModel::Threaded
+        }
+    }
+}
+
+impl ServeModel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServeModel::Readiness => "readiness",
+            ServeModel::Threaded => "threaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ServeModel> {
+        match s {
+            "readiness" => Ok(ServeModel::Readiness),
+            "threaded" => Ok(ServeModel::Threaded),
+            other => anyhow::bail!(
+                "unknown connection model {other:?} (expected \
+                 \"readiness\" or \"threaded\")"
+            ),
+        }
+    }
+}
+
+/// Where the acceptor hands an admitted connection: a freshly spawned
+/// handler thread, or the readiness-loop worker pool.
+enum ConnSink {
+    Threaded {
+        fleet: Arc<Fleet>,
+        shutdown: Arc<ShutdownSignal>,
+        allow_remote_shutdown: bool,
+        handlers: Vec<std::thread::JoinHandle<()>>,
+    },
+    #[cfg(unix)]
+    Readiness(readiness::WorkerPool),
+}
+
+impl ConnSink {
+    fn submit(&mut self, stream: TcpStream, guard: ConnGuard) {
+        match self {
+            ConnSink::Threaded {
+                fleet,
+                shutdown,
+                allow_remote_shutdown,
+                handlers,
+            } => {
+                // Reap finished handler threads so connection churn
+                // cannot grow the vector (and the thread handles it
+                // retains) without bound.
+                handlers.retain(|h| !h.is_finished());
+                let fleet = fleet.clone();
+                let sdown = shutdown.clone();
+                let allow = *allow_remote_shutdown;
+                let spawned = std::thread::Builder::new()
+                    .name("bss2-conn".into())
+                    .spawn(move || {
+                        let _guard = guard;
+                        let _ = threaded::handle_conn(
+                            stream, fleet, sdown, allow,
+                        );
+                    });
+                // On spawn failure the closure (and the guard inside
+                // it) is dropped, which deregisters the connection.
+                if let Ok(h) = spawned {
+                    handlers.push(h);
+                }
+            }
+            #[cfg(unix)]
+            ConnSink::Readiness(pool) => pool.submit(stream, guard),
+        }
+    }
+
+    /// Acceptor exit: join every handler / stop the worker pool.
+    fn finish(self) {
+        match self {
+            ConnSink::Threaded { handlers, .. } => {
+                for h in handlers {
+                    let _ = h.join();
+                }
+            }
+            #[cfg(unix)]
+            ConnSink::Readiness(mut pool) => pool.stop(),
+        }
+    }
+}
+
 /// The running service handle.  Serving statistics live in
 /// [`Fleet::telemetry`]: one source of truth, accumulated in integer
 /// nanoseconds so mean-latency reporting keeps sub-µs precision across
@@ -260,13 +379,28 @@ impl Service {
     }
 
     /// Start the service on `addr` (use port 0 for an ephemeral port)
-    /// backed by a fleet of `cfg.chips` engine replicas.  `make_engine`
-    /// runs once per chip, inside that chip's worker thread.  Fails fast
-    /// if *every* replica's engine fails to construct (partial failures
-    /// serve degraded, with the dead chips reported in `fleet_stats`).
+    /// backed by a fleet of `cfg.chips` engine replicas, using the
+    /// default [`ServeModel`].  `make_engine` runs once per chip, inside
+    /// that chip's worker thread.  Fails fast if *every* replica's
+    /// engine fails to construct (partial failures serve degraded, with
+    /// the dead chips reported in `fleet_stats`).
     pub fn start_fleet<F>(
         addr: &str,
         cfg: FleetConfig,
+        make_engine: F,
+    ) -> anyhow::Result<Service>
+    where
+        F: Fn(ChipId) -> anyhow::Result<Engine> + Send + Sync + 'static,
+    {
+        Self::start_fleet_with(addr, cfg, ServeModel::default(), make_engine)
+    }
+
+    /// [`Service::start_fleet`] with an explicit connection-handling
+    /// model (`repro serve --conn-model`, and the loadgen A/B bench).
+    pub fn start_fleet_with<F>(
+        addr: &str,
+        cfg: FleetConfig,
+        model: ServeModel,
         make_engine: F,
     ) -> anyhow::Result<Service>
     where
@@ -280,6 +414,36 @@ impl Service {
         let shutdown = Arc::new(ShutdownSignal::new());
         let conns = Arc::new(ConnRegistry::new());
 
+        #[cfg(not(unix))]
+        let model = match model {
+            ServeModel::Readiness => {
+                log::warn!(
+                    "readiness loop needs poll(2); falling back to \
+                     thread-per-connection"
+                );
+                ServeModel::Threaded
+            }
+            m => m,
+        };
+        let mut sink = match model {
+            ServeModel::Threaded => ConnSink::Threaded {
+                fleet: fleet.clone(),
+                shutdown: shutdown.clone(),
+                allow_remote_shutdown,
+                handlers: Vec::new(),
+            },
+            #[cfg(unix)]
+            ServeModel::Readiness => {
+                ConnSink::Readiness(readiness::WorkerPool::spawn(
+                    fleet.clone(),
+                    shutdown.clone(),
+                    allow_remote_shutdown,
+                )?)
+            }
+            #[cfg(not(unix))]
+            ServeModel::Readiness => unreachable!("forced Threaded above"),
+        };
+
         // Acceptor: *blocking* accept loop — no polling sleeps.  `stop()`
         // wakes it with a loopback connection after setting the flag.
         let sdown = shutdown.clone();
@@ -288,7 +452,6 @@ impl Service {
         let accept_handle = std::thread::Builder::new()
             .name("bss2-acceptor".into())
             .spawn(move || {
-                let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 loop {
                     let stream = match listener.accept() {
                         Ok((s, _)) => s,
@@ -302,16 +465,15 @@ impl Service {
                     if sdown.is_set() {
                         break; // stop()'s wake-up connection (dropped)
                     }
-                    // Reap finished handler threads so connection churn
-                    // cannot grow the vector (and the thread handles it
-                    // retains) without bound.
-                    handlers.retain(|h| !h.is_finished());
-                    if aconns.active() >= max_conns {
+                    let active = aconns.active();
+                    if active >= max_conns {
                         // Explicit accept-time shed: tell the client why
                         // before hanging up, instead of a silent RST or —
-                        // worse — an unbounded thread pile-up.  Journal
-                        // first: a client that read the refusal line can
-                        // already see the event.
+                        // worse — an unbounded connection pile-up.
+                        // Journal first: a client that read the refusal
+                        // line can already see the event.  `queue_depth`
+                        // here counts *connections* (the contended
+                        // resource at this level).
                         afleet.obs().journal.log(
                             EventKind::ConnectionShed,
                             None,
@@ -322,7 +484,8 @@ impl Service {
                             format!(
                                 "{{\"ok\":false,\"shed\":true,\
                                  \"error\":\"connection limit reached\",\
-                                 \"max_connections\":{max_conns}}}\n"
+                                 \"max_connections\":{max_conns},\
+                                 \"queue_depth\":{active}}}\n"
                             )
                             .as_bytes(),
                         );
@@ -335,37 +498,17 @@ impl Service {
                     // then closes every registered socket, and the
                     // registry mutex orders the two — either stop() saw
                     // this entry and closed it, or we see the flag here.
-                    // Either way no handler is spawned on a socket that
+                    // Either way no handler is started on a socket that
                     // could block the final join.
                     if sdown.is_set() {
                         let _ = stream.shutdown(Shutdown::Both);
                         aconns.deregister(id);
                         break;
                     }
-                    let fleet = afleet.clone();
-                    let sdown2 = sdown.clone();
-                    let guard =
-                        ConnGuard { conns: aconns.clone(), id };
-                    let spawned = std::thread::Builder::new()
-                        .name("bss2-conn".into())
-                        .spawn(move || {
-                            let _guard = guard;
-                            let _ = handle_conn(
-                                stream,
-                                fleet,
-                                sdown2,
-                                allow_remote_shutdown,
-                            );
-                        });
-                    // On spawn failure the closure (and the guard inside
-                    // it) is dropped, which deregisters the connection.
-                    if let Ok(h) = spawned {
-                        handlers.push(h);
-                    }
+                    let guard = ConnGuard { conns: aconns.clone(), id };
+                    sink.submit(stream, guard);
                 }
-                for h in handlers {
-                    let _ = h.join();
-                }
+                sink.finish();
             })
             .expect("spawn acceptor");
 
@@ -492,86 +635,17 @@ struct StreamSession {
     samples: u64,
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    fleet: Arc<Fleet>,
-    shutdown: Arc<ShutdownSignal>,
-    allow_remote_shutdown: bool,
-) -> anyhow::Result<()> {
-    // Reader half (this thread) + ordered-reply writer thread.  Blocking
-    // I/O throughout: an idle connection wakes nobody; stop() closes the
-    // socket to unblock us.
-    let writer_stream = stream.try_clone()?;
-    // Bounded FIFO: `send` blocks at PENDING_REPLY_DEPTH outstanding
-    // replies, propagating backpressure to the client instead of
-    // buffering unboundedly.  stop() cannot deadlock on this: it closes
-    // the socket, the writer's write fails and it drops `rx`, and any
-    // blocked `send` here returns Err immediately.
-    let (tx, rx) = mpsc::sync_channel::<Pending>(PENDING_REPLY_DEPTH);
-    let writer_shutdown = shutdown.clone();
-    let writer = std::thread::Builder::new()
-        .name("bss2-conn-writer".into())
-        .spawn(move || write_loop(writer_stream, rx, writer_shutdown))?;
-
-    let mut reader = BufReader::new(stream);
-    let mut session: Option<StreamSession> = None;
-    let mut line = String::new();
-    let result = loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break Ok(()), // client closed
-            Ok(_) => {}
-            // stop() shut the socket down, or the peer vanished.
-            Err(e) => break Err(e.into()),
-        }
-        if shutdown.is_set() {
-            break Ok(());
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (replies, bye) = handle_request(
-            line.trim(),
-            &fleet,
-            allow_remote_shutdown,
-            &mut session,
-        );
-        let mut writer_gone = false;
-        for p in replies {
-            if tx.send(p).is_err() {
-                writer_gone = true;
-                break;
-            }
-        }
-        if bye || writer_gone {
-            break Ok(());
-        }
-    };
-    // Let the writer flush every pending reply, then join it.
-    drop(tx);
-    let _ = writer.join();
-    result
-}
-
-/// The connection's ordered-reply writer: resolves pending replies in
-/// FIFO (= request) order.  A write failure (client gone, or stop()
-/// closed the socket) ends the loop; dropped receivers are harmless —
-/// chip workers ignore closed reply channels.  An accepted wire
-/// `shutdown` is signalled *here*, after the good-bye line (and every
-/// reply queued ahead of it) reached the socket — raising it any
-/// earlier would race `stop()` into closing this connection under the
-/// unflushed replies.
-fn write_loop(
-    mut w: TcpStream,
-    rx: mpsc::Receiver<Pending>,
-    shutdown: Arc<ShutdownSignal>,
-) {
-    while let Ok(p) = rx.recv() {
-        let (reply, bye) = match p {
+impl Pending {
+    /// Resolve to reply text, blocking until the chip answers.  The
+    /// bool is the close-after-write flag (`Bye`).  Used by the
+    /// threaded writer; dropped receivers are harmless — chip workers
+    /// ignore closed reply channels.
+    fn resolve_blocking(self) -> (String, bool) {
+        match self {
             Pending::Now(s) => (s, false),
             Pending::Bye(s) => (s, true),
             Pending::Classify { chip, resp } => {
-                (resolve_classify(chip, &resp), false)
+                (resolve_classify(chip, resp.recv()), false)
             }
             Pending::Batch {
                 chip,
@@ -581,33 +655,104 @@ fn write_loop(
                 retry_after_us,
                 resp,
             } => (
-                resolve_batch(chip, batch, accepted, rejected, retry_after_us, &resp),
+                resolve_batch(
+                    chip,
+                    batch,
+                    accepted,
+                    rejected,
+                    retry_after_us,
+                    resp.recv(),
+                ),
                 false,
             ),
-            Pending::Calib { chip, resp } => (resolve_calib(chip, &resp), false),
-            Pending::StreamResult { window, start_sample, resp } => {
-                (resolve_stream(window, start_sample, &resp), false)
+            Pending::Calib { chip, resp } => {
+                (resolve_calib(chip, resp.recv()), false)
             }
-        };
-        let write_ok = w.write_all(reply.as_bytes()).is_ok()
-            && w.write_all(b"\n").is_ok();
-        if bye {
-            // Accepted shutdown: the command takes effect even if the
-            // good-bye could not be delivered (the client vanished).
-            shutdown.signal();
-            return;
+            Pending::StreamResult { window, start_sample, resp } => {
+                (resolve_stream(window, start_sample, resp.recv()), false)
+            }
         }
-        if !write_ok {
-            return;
+    }
+
+    /// Non-blocking resolution for the readiness loop: `Ok` when the
+    /// reply text is available *now*, `Err(self)` to try again after
+    /// the next chip-completion wake-up.
+    #[cfg(unix)]
+    fn try_resolve(self) -> Result<(String, bool), Pending> {
+        // A disconnected channel resolves (to the worker-gone error);
+        // only Empty defers.
+        fn step<T>(
+            resp: &mpsc::Receiver<T>,
+        ) -> Option<Result<T, mpsc::RecvError>> {
+            match resp.try_recv() {
+                Ok(v) => Some(Ok(v)),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Some(Err(mpsc::RecvError))
+                }
+                Err(mpsc::TryRecvError::Empty) => None,
+            }
+        }
+        match self {
+            Pending::Now(s) => Ok((s, false)),
+            Pending::Bye(s) => Ok((s, true)),
+            Pending::Classify { chip, resp } => match step(&resp) {
+                Some(r) => Ok((resolve_classify(chip, r), false)),
+                None => Err(Pending::Classify { chip, resp }),
+            },
+            Pending::Batch {
+                chip,
+                batch,
+                accepted,
+                rejected,
+                retry_after_us,
+                resp,
+            } => match step(&resp) {
+                Some(r) => Ok((
+                    resolve_batch(
+                        chip,
+                        batch,
+                        accepted,
+                        rejected,
+                        retry_after_us,
+                        r,
+                    ),
+                    false,
+                )),
+                None => Err(Pending::Batch {
+                    chip,
+                    batch,
+                    accepted,
+                    rejected,
+                    retry_after_us,
+                    resp,
+                }),
+            },
+            Pending::Calib { chip, resp } => match step(&resp) {
+                Some(r) => Ok((resolve_calib(chip, r), false)),
+                None => Err(Pending::Calib { chip, resp }),
+            },
+            Pending::StreamResult { window, start_sample, resp } => {
+                match step(&resp) {
+                    Some(r) => Ok((
+                        resolve_stream(window, start_sample, r),
+                        false,
+                    )),
+                    None => Err(Pending::StreamResult {
+                        window,
+                        start_sample,
+                        resp,
+                    }),
+                }
+            }
         }
     }
 }
 
 fn resolve_classify(
     chip: ChipId,
-    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+    recv: Result<crate::fleet::ChipReply, mpsc::RecvError>,
 ) -> String {
-    match resp.recv() {
+    match recv {
         Err(mpsc::RecvError) => {
             format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
         }
@@ -639,12 +784,12 @@ fn resolve_batch(
     accepted: usize,
     rejected: usize,
     retry_after_us: u64,
-    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+    recv: Result<crate::fleet::ChipReply, mpsc::RecvError>,
 ) -> String {
     // Terminal failures still echo `batch`/`accepted`: a pipelining
     // client correlates ordered replies to requests by these fields, and
     // a failover-exhausted error must not break that correlation.
-    match resp.recv() {
+    match recv {
         Err(mpsc::RecvError) => {
             format!(
                 "{{\"ok\":false,\"error\":\"chip {chip} worker gone\",\
@@ -689,9 +834,9 @@ fn resolve_batch(
 
 fn resolve_calib(
     chip: usize,
-    resp: &mpsc::Receiver<crate::fleet::CalibReply>,
+    recv: Result<crate::fleet::CalibReply, mpsc::RecvError>,
 ) -> String {
-    match resp.recv() {
+    match recv {
         Err(mpsc::RecvError) => {
             format!("{{\"ok\":false,\"error\":\"chip {chip} worker gone\"}}")
         }
@@ -709,9 +854,9 @@ fn resolve_calib(
 fn resolve_stream(
     window: u64,
     start_sample: u64,
-    resp: &mpsc::Receiver<crate::fleet::ChipReply>,
+    recv: Result<crate::fleet::ChipReply, mpsc::RecvError>,
 ) -> String {
-    match resp.recv() {
+    match recv {
         Err(mpsc::RecvError) => format!(
             "{{\"ok\":false,\"stream\":true,\"window\":{window},\
              \"start_sample\":{start_sample},\
@@ -744,20 +889,20 @@ fn resolve_stream(
     }
 }
 
-/// Parse one request line and dispatch it.  Returns the pending replies
-/// to enqueue (in order) and whether the connection should close after
-/// they are written.
+/// Dispatch one parsed request (both transports decode to the same
+/// [`Json`] value — see [`conn`]).  Returns the pending replies to
+/// enqueue (in order) and whether the connection should close after
+/// they are written.  `notify` is the readiness loop's chip-completion
+/// hook, cloned into every fleet dispatch; the threaded model blocks in
+/// `resolve_blocking` instead and passes `None`.
 fn handle_request(
-    line: &str,
+    req: &Json,
     fleet: &Fleet,
     allow_remote_shutdown: bool,
     session: &mut Option<StreamSession>,
+    notify: Option<&ReplyNotify>,
 ) -> (Vec<Pending>, bool) {
     let one = |s: String| (vec![Pending::Now(s)], false);
-    let req = match Json::parse(line) {
-        Err(e) => return one(err_json(&format!("bad json: {e}"))),
-        Ok(req) => req,
-    };
     match req.get("cmd").and_then(|c| c.as_str()) {
         Some("ping") => one("{\"ok\":true,\"pong\":true}".to_string()),
         Some("shutdown") => {
@@ -903,7 +1048,12 @@ fn handle_request(
                      in 1..={MAX_RECALIB_REPS}\"}}"
                 )),
                 (Some(chip), Some(reps)) => {
-                    match fleet.recalibrate_chip(chip, reps) {
+                    let started = match notify {
+                        Some(n) => fleet
+                            .recalibrate_chip_notify(chip, reps, n.clone()),
+                        None => fleet.recalibrate_chip(chip, reps),
+                    };
+                    match started {
                         Err(e) => one(err_json(&e.to_string())),
                         Ok(rx) => {
                             (vec![Pending::Calib { chip, resp: rx }], false)
@@ -912,32 +1062,48 @@ fn handle_request(
                 }
             }
         }
-        Some("classify") => match parse_trace(&req) {
+        Some("classify") => match parse_trace(req) {
             Err(e) => one(err_json(&e.to_string())),
-            Ok(trace) => match fleet.dispatch(trace) {
-                DispatchOutcome::Shed { reason, retry_after_us } => {
-                    one(format!(
-                        "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
-                         \"retry_after_us\":{retry_after_us}}}",
-                        reason.as_str()
-                    ))
+            Ok(trace) => {
+                let outcome = match notify {
+                    Some(n) => fleet.dispatch_notify(trace, n.clone()),
+                    None => fleet.dispatch(trace),
+                };
+                match outcome {
+                    DispatchOutcome::Shed { reason, retry_after_us } => {
+                        // Backoff hints: how much work was already in
+                        // flight (samples), and a retry horizon.
+                        one(format!(
+                            "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
+                             \"queue_depth\":{},\
+                             \"retry_after_us\":{retry_after_us}}}",
+                            reason.as_str(),
+                            fleet.inflight_samples()
+                        ))
+                    }
+                    DispatchOutcome::Enqueued { chip, resp } => {
+                        (vec![Pending::Classify { chip, resp }], false)
+                    }
                 }
-                DispatchOutcome::Enqueued { chip, resp } => {
-                    (vec![Pending::Classify { chip, resp }], false)
-                }
-            },
+            }
         },
-        Some("classify_batch") => match parse_trace_batch(&req) {
+        Some("classify_batch") => match parse_trace_batch(req) {
             Err(e) => one(err_json(&e.to_string())),
             Ok(traces) => {
                 let batch = traces.len();
-                match fleet.dispatch_batch(traces) {
+                let outcome = match notify {
+                    Some(n) => fleet.dispatch_batch_notify(traces, n.clone()),
+                    None => fleet.dispatch_batch(traces),
+                };
+                match outcome {
                     BatchDispatchOutcome::Shed { reason, retry_after_us } => {
                         one(format!(
                             "{{\"ok\":false,\"shed\":true,\"error\":\"{}\",\
                              \"accepted\":0,\"batch\":{batch},\
+                             \"queue_depth\":{},\
                              \"retry_after_us\":{retry_after_us}}}",
-                            reason.as_str()
+                            reason.as_str(),
+                            fleet.inflight_samples()
                         ))
                     }
                     BatchDispatchOutcome::Enqueued {
@@ -1009,7 +1175,7 @@ fn handle_request(
                      first)",
                 );
             };
-            let chunk = match parse_stream_chunk(&req) {
+            let chunk = match parse_stream_chunk(req) {
                 Err(e) => return stream_err(&e.to_string()),
                 Ok(chunk) => chunk,
             };
@@ -1022,7 +1188,11 @@ fn handle_request(
             for f in frames {
                 let acts: Vec<i32> =
                     f.acts.iter().map(|&a| a as i32).collect();
-                match fleet.dispatch_acts(acts) {
+                let outcome = match notify {
+                    Some(n) => fleet.dispatch_acts_notify(acts, n.clone()),
+                    None => fleet.dispatch_acts(acts),
+                };
+                match outcome {
                     DispatchOutcome::Enqueued { chip: _, resp } => {
                         sess.dispatched += 1;
                         out.push(Pending::StreamResult {
@@ -1036,11 +1206,12 @@ fn handle_request(
                         out.push(Pending::Now(format!(
                             "{{\"ok\":false,\"stream\":true,\"shed\":true,\
                              \"window\":{},\"start_sample\":{},\
-                             \"error\":\"{}\",\
+                             \"error\":\"{}\",\"queue_depth\":{},\
                              \"retry_after_us\":{retry_after_us}}}",
                             f.index,
                             f.start_sample,
-                            reason.as_str()
+                            reason.as_str(),
+                            fleet.inflight_samples()
                         )));
                     }
                 }
@@ -1732,6 +1903,17 @@ mod tests {
         let refusal = shed.read_reply().unwrap();
         assert_eq!(refusal.get("ok"), Some(&Json::Bool(false)), "{refusal}");
         assert_eq!(refusal.get("shed"), Some(&Json::Bool(true)));
+        // Backoff hints ride on every shed reply; at the connection
+        // level `queue_depth` counts active connections.
+        assert_eq!(
+            refusal.get("max_connections").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(
+            refusal.get("queue_depth").and_then(|v| v.as_usize()),
+            Some(1),
+            "{refusal}"
+        );
         // The event was journalled before the refusal was written, so it
         // is already visible here.
         let j = cl.call("{\"cmd\":\"journal\"}").unwrap();
@@ -1751,5 +1933,35 @@ mod tests {
         assert_eq!(json_str("plain"), "\"plain\"");
         assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
         assert_eq!(json_str("\u{1}"), "\"\\u0001\"");
+    }
+
+    /// The default model on unix is the readiness loop (which every
+    /// other test in this module therefore exercises); the threaded
+    /// model must keep serving identically behind `--conn-model`.
+    #[test]
+    fn threaded_model_serves_and_pipelines() {
+        let svc = Service::start_fleet_with(
+            "127.0.0.1:0",
+            FleetConfig { chips: 1, queue_depth: 8, ..Default::default() },
+            ServeModel::Threaded,
+            |_| Ok(test_engine()),
+        )
+        .unwrap();
+        let mut cl = Client::connect(&svc.addr).unwrap();
+        let pong = cl.call("{\"cmd\":\"ping\"}").unwrap();
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+        // Pipeline: several classifies written before any reply is read.
+        let traces: Vec<_> = (0..3)
+            .map(|i| crate::ecg::gen::generate_trace(40 + i, i % 2 == 0, 1.0))
+            .collect();
+        for t in &traces {
+            cl.send_classify(t).unwrap();
+        }
+        for _ in &traces {
+            let r = cl.read_reply().unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+        }
+        assert_eq!(svc.fleet.telemetry().served(), 3);
+        svc.stop();
     }
 }

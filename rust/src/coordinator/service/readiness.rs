@@ -1,0 +1,510 @@
+//! Readiness-loop serving model (DESIGN.md §14): a fixed set of worker
+//! threads multiplexes every accepted connection over non-blocking
+//! sockets and `poll(2)` — thousands of mostly-idle connections cost a
+//! file descriptor and a few buffers each, not a reader + writer thread
+//! pair each.
+//!
+//! Structure per worker:
+//!
+//! * An **inbox** (new connections from the acceptor, a shutdown flag)
+//!   plus a **waker pipe** (`UnixStream::pair`): the acceptor, `stop()`,
+//!   and — crucially — chip workers completing replies all write one
+//!   byte to pop the worker out of `poll`.
+//! * Per connection: the shared protocol state machine
+//!   ([`super::conn::ProtoState`]), an ordered pending-reply FIFO, and a
+//!   write buffer.  Replies resolve front-first ([`Pending::try_resolve`]),
+//!   so pipelined replies leave in request order exactly like the
+//!   threaded model's writer thread.
+//! * Backpressure: once [`PENDING_REPLY_DEPTH`] replies are outstanding
+//!   the connection's `POLLIN` interest is dropped — the client's
+//!   requests pile up in the kernel buffer and TCP flow control pushes
+//!   back, same contract as the threaded model's bounded channel.
+//! * A connection with nothing pollable (idle write side, paused read
+//!   side) is simply left out of the poll set; chip completions reach it
+//!   through the waker.  Idle connections cause zero periodic wakeups.
+//!
+//! The fleet side of the wake-up is [`ReplyNotify`]
+//! (`dispatch_*_notify`): the hook travels with the job and fires after
+//! the reply is buffered on its channel, so a `try_resolve` sweep after
+//! a wake never misses a completion.
+//!
+//! `poll(2)` is declared directly (the offline build vendors no `libc`/
+//! `mio`); the FFI surface is three constants and one function.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use bss2_proto::{handshake, PENDING_REPLY_DEPTH, PROTO_VERSION};
+
+use super::conn::{Fatal, ProtoState, ReplyFormat, WireEvent};
+use super::{
+    err_json, handle_request, ConnGuard, Pending, ShutdownSignal,
+    StreamSession,
+};
+use crate::fleet::{Fleet, ReplyNotify};
+
+// ---------------------------------------------------------------------
+// poll(2) FFI — identical layout and flag values on Linux and the BSDs.
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+/// Error-ish revents are reported regardless of the requested events;
+/// either direction should attempt I/O and observe the failure there.
+const POLL_ANY_IN: i16 = POLLIN | POLLERR | POLLHUP | POLLNVAL;
+const POLL_ANY_OUT: i16 = POLLOUT | POLLERR | POLLHUP | POLLNVAL;
+
+#[cfg(target_os = "macos")]
+type Nfds = u32;
+#[cfg(not(target_os = "macos"))]
+type Nfds = std::os::raw::c_ulong;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+}
+
+// ---------------------------------------------------------------------
+
+/// Wake a worker out of `poll`.  The pipe is non-blocking: a full pipe
+/// already guarantees a pending wake-up, so `WouldBlock` is success.
+fn wake(waker: &UnixStream) {
+    let mut w = waker;
+    let _ = w.write(&[1]);
+}
+
+/// Acceptor- and fleet-facing message box of one worker.
+struct Inbox {
+    new_conns: Mutex<Vec<(TcpStream, ConnGuard)>>,
+    shutdown: AtomicBool,
+}
+
+struct WorkerHandle {
+    inbox: Arc<Inbox>,
+    waker: Arc<UnixStream>,
+}
+
+/// The running worker set.  Owned by the acceptor thread; connections
+/// are distributed round-robin.
+pub(super) struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    next: usize,
+}
+
+impl WorkerPool {
+    pub(super) fn spawn(
+        fleet: Arc<Fleet>,
+        shutdown: Arc<ShutdownSignal>,
+        allow_remote_shutdown: bool,
+    ) -> anyhow::Result<WorkerPool> {
+        let n = worker_count();
+        let mut pool =
+            WorkerPool { workers: Vec::new(), joins: Vec::new(), next: 0 };
+        for i in 0..n {
+            match spawn_worker(i, &fleet, &shutdown, allow_remote_shutdown) {
+                Ok((handle, join)) => {
+                    pool.workers.push(handle);
+                    pool.joins.push(join);
+                }
+                Err(e) => {
+                    pool.stop(); // don't leak the workers already up
+                    return Err(e);
+                }
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Hand an accepted (registered) connection to a worker.
+    pub(super) fn submit(&mut self, stream: TcpStream, guard: ConnGuard) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // dropping the guard deregisters the connection
+        }
+        let w = &self.workers[self.next % self.workers.len()];
+        self.next = self.next.wrapping_add(1);
+        w.inbox.new_conns.lock().unwrap().push((stream, guard));
+        wake(&w.waker);
+    }
+
+    /// Stop every worker and join it.  Open connections are dropped —
+    /// the service only calls this after `stop()` closed their sockets.
+    pub(super) fn stop(&mut self) {
+        for w in &self.workers {
+            w.inbox.shutdown.store(true, Ordering::SeqCst);
+            wake(&w.waker);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Worker-set size: I/O multiplexing is cheap, so half the cores
+/// (bounded to 8) is plenty — the chips, not the sockets, are the
+/// expensive resource.
+fn worker_count() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .div_ceil(2)
+        .clamp(1, 8)
+}
+
+fn spawn_worker(
+    index: usize,
+    fleet: &Arc<Fleet>,
+    shutdown: &Arc<ShutdownSignal>,
+    allow_remote_shutdown: bool,
+) -> anyhow::Result<(WorkerHandle, std::thread::JoinHandle<()>)> {
+    let (wake_tx, wake_rx) = UnixStream::pair()?;
+    wake_tx.set_nonblocking(true)?;
+    wake_rx.set_nonblocking(true)?;
+    let waker = Arc::new(wake_tx);
+    let inbox = Arc::new(Inbox {
+        new_conns: Mutex::new(Vec::new()),
+        shutdown: AtomicBool::new(false),
+    });
+    // The chip-completion hook: one per worker, cloned into every
+    // dispatch made on behalf of this worker's connections.
+    let notify_waker = waker.clone();
+    let notify: ReplyNotify = Arc::new(move || wake(&notify_waker));
+    let w_inbox = inbox.clone();
+    let w_fleet = fleet.clone();
+    let w_shutdown = shutdown.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("bss2-poll-{index}"))
+        .spawn(move || {
+            worker_loop(
+                &w_inbox,
+                &wake_rx,
+                &w_fleet,
+                &w_shutdown,
+                allow_remote_shutdown,
+                &notify,
+            );
+        })?;
+    Ok((WorkerHandle { inbox, waker }, join))
+}
+
+fn worker_loop(
+    inbox: &Inbox,
+    wake_rx: &UnixStream,
+    fleet: &Fleet,
+    shutdown: &ShutdownSignal,
+    allow_remote_shutdown: bool,
+    notify: &ReplyNotify,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    let mut poll_map: Vec<usize> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        if inbox.shutdown.load(Ordering::SeqCst) {
+            // Dropping the connections deregisters them; their sockets
+            // were already shut down by `stop()`.
+            return;
+        }
+        for (stream, guard) in inbox.new_conns.lock().unwrap().drain(..) {
+            conns.push(Conn::new(stream, guard));
+        }
+
+        // Make progress everywhere: resolve chip replies that are ready
+        // (in FIFO order per connection) and flush what each socket will
+        // take right now.
+        for conn in conns.iter_mut() {
+            conn.resolve_ready();
+            conn.flush();
+        }
+        // Sweep finished connections, honouring wire `shutdown` byes.
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].done() {
+                let conn = conns.swap_remove(i);
+                if conn.bye {
+                    shutdown.signal();
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        // Poll set: the waker, plus each connection we can make direct
+        // socket progress on.  Everything else (reply-paused or idle-
+        // write connections) is reached through the waker instead —
+        // zero periodic wakeups.
+        pollfds.clear();
+        poll_map.clear();
+        pollfds.push(PollFd {
+            fd: wake_rx.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        });
+        for (ci, conn) in conns.iter().enumerate() {
+            let mut events = 0i16;
+            if conn.wants_read() {
+                events |= POLLIN;
+            }
+            if !conn.wbuf.is_empty() {
+                events |= POLLOUT;
+            }
+            if events != 0 {
+                pollfds.push(PollFd {
+                    fd: conn.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+                poll_map.push(ci);
+            }
+        }
+
+        let rc = unsafe {
+            poll(pollfds.as_mut_ptr(), pollfds.len() as Nfds, -1)
+        };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            return; // poll itself failed; nothing sane left to do
+        }
+
+        if pollfds[0].revents != 0 {
+            drain_waker(wake_rx);
+        }
+        for (pi, &ci) in poll_map.iter().enumerate() {
+            let revents = pollfds[pi + 1].revents;
+            if revents == 0 {
+                continue;
+            }
+            let conn = &mut conns[ci];
+            if revents & POLL_ANY_OUT != 0 && !conn.wbuf.is_empty() {
+                conn.flush();
+            }
+            if revents & POLL_ANY_IN != 0 && conn.wants_read() {
+                conn.fill(&mut chunk, fleet, allow_remote_shutdown, notify);
+            }
+        }
+    }
+}
+
+fn drain_waker(mut rx: &UnixStream) {
+    let mut buf = [0u8; 256];
+    loop {
+        match rx.read(&mut buf) {
+            Ok(0) => return, // write half gone (pool stopping)
+            Ok(_) => continue,
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    _guard: ConnGuard,
+    proto: ProtoState,
+    fmt: ReplyFormat,
+    /// Ordered pending-reply FIFO (the threaded model's bounded channel,
+    /// as data).  Resolution is front-only: replies leave in request
+    /// order.
+    pending: VecDeque<Pending>,
+    wbuf: Vec<u8>,
+    session: Option<StreamSession>,
+    /// Read side is finished (EOF, read error, fatal protocol error, or
+    /// an accepted `shutdown`): drain `pending` + `wbuf`, then close.
+    closing: bool,
+    /// Write side failed: drop the connection at the next sweep.
+    dead: bool,
+    /// An accepted wire `shutdown` good-bye was serialized: signal
+    /// service shutdown when this connection closes.
+    bye: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, guard: ConnGuard) -> Conn {
+        Conn {
+            stream,
+            _guard: guard,
+            proto: ProtoState::new(),
+            fmt: ReplyFormat::Lines,
+            pending: VecDeque::new(),
+            wbuf: Vec::new(),
+            session: None,
+            closing: false,
+            dead: false,
+            bye: false,
+        }
+    }
+
+    /// Still interested in bytes from the client?  False once closing,
+    /// and false while the pending FIFO is at the pipelining bound —
+    /// the readiness-model backpressure.
+    fn wants_read(&self) -> bool {
+        !self.closing && !self.dead && self.pending.len() < PENDING_REPLY_DEPTH
+    }
+
+    fn done(&self) -> bool {
+        self.dead
+            || (self.closing
+                && self.pending.is_empty()
+                && self.wbuf.is_empty())
+    }
+
+    /// Serialize every already-answered reply at the front of the FIFO.
+    fn resolve_ready(&mut self) {
+        if self.dead {
+            return;
+        }
+        while let Some(p) = self.pending.pop_front() {
+            match p.try_resolve() {
+                Err(p) => {
+                    self.pending.push_front(p); // still waiting on a chip
+                    break;
+                }
+                Ok((text, bye)) => {
+                    self.fmt.serialize(&text, &mut self.wbuf);
+                    if bye {
+                        self.bye = true;
+                        self.closing = true;
+                        self.pending.clear();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write as much of `wbuf` as the socket takes without blocking.
+    fn flush(&mut self) {
+        let mut written = 0usize;
+        while written < self.wbuf.len() {
+            let mut w = &self.stream;
+            match w.write(&self.wbuf[written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            self.wbuf.drain(..written);
+        }
+    }
+
+    /// Read whatever the socket has, run the protocol state machine,
+    /// and dispatch complete requests.
+    fn fill(
+        &mut self,
+        chunk: &mut [u8],
+        fleet: &Fleet,
+        allow_remote_shutdown: bool,
+        notify: &ReplyNotify,
+    ) {
+        loop {
+            if !self.wants_read() {
+                return;
+            }
+            let n = {
+                let mut r = &self.stream;
+                match r.read(chunk) {
+                    Ok(0) => {
+                        self.closing = true; // EOF: drain replies, close
+                        return;
+                    }
+                    Ok(n) => n,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::Interrupted =>
+                    {
+                        continue
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        return
+                    }
+                    Err(_) => {
+                        // Same as EOF: pending replies still drain, the
+                        // flush failing is what declares the conn dead.
+                        self.closing = true;
+                        return;
+                    }
+                }
+            };
+            let events = match self.proto.push(&chunk[..n]) {
+                Ok(events) => events,
+                Err(Fatal::Reject(bytes)) => {
+                    self.wbuf.extend_from_slice(&bytes);
+                    self.closing = true;
+                    return;
+                }
+                Err(Fatal::Error(msg)) => {
+                    self.pending.push_back(Pending::Now(err_json(&msg)));
+                    self.closing = true;
+                    return;
+                }
+            };
+            for event in events {
+                match event {
+                    WireEvent::Hello(enc) => {
+                        // The hello is the first bytes on the wire, so
+                        // appending the ack directly keeps wire order.
+                        self.fmt = ReplyFormat::for_encoding(enc);
+                        self.wbuf.extend_from_slice(&handshake::ok_bytes(
+                            PROTO_VERSION,
+                            enc,
+                        ));
+                    }
+                    WireEvent::BadRequest(msg) => {
+                        self.pending.push_back(Pending::Now(err_json(&msg)));
+                    }
+                    WireEvent::Request(req) => {
+                        let (replies, bye) = handle_request(
+                            &req,
+                            fleet,
+                            allow_remote_shutdown,
+                            &mut self.session,
+                            Some(notify),
+                        );
+                        self.pending.extend(replies);
+                        if bye {
+                            // Stop reading; the queued `Bye` pending
+                            // raises the shutdown signal once it has
+                            // been serialized behind its predecessors.
+                            self.closing = true;
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

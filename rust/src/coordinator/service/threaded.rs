@@ -1,0 +1,157 @@
+//! Thread-per-connection serving model: one reader thread (this module's
+//! [`handle_conn`], run on the per-connection `bss2-conn` thread spawned
+//! by the acceptor) plus one `bss2-conn-writer` thread per connection.
+//!
+//! This is the original serving model, kept for `--conn-model threaded`
+//! (and as the only model on non-unix hosts) and as the baseline the
+//! `repro loadgen` bench compares the readiness loop against.  Both
+//! models share the same protocol state machine ([`super::conn`]) and
+//! request handler, so they are wire-identical; only the concurrency
+//! structure differs.
+//!
+//! Replies are resolved and written by the writer thread in request
+//! order; the bounded channel between reader and writer is the
+//! [`PENDING_REPLY_DEPTH`] pipelining backpressure.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+
+use bss2_proto::{handshake, PENDING_REPLY_DEPTH, PROTO_VERSION};
+
+use super::conn::{Fatal, ProtoState, ReplyFormat, WireEvent};
+use super::{err_json, handle_request, Pending, ShutdownSignal};
+use crate::fleet::Fleet;
+
+/// Reader → writer message.  `Mode` travels in-band so the format switch
+/// lands exactly between the last legacy reply and the handshake ack.
+enum ConnMsg {
+    /// Pre-serialized bytes (handshake ack), written verbatim.
+    Raw(Vec<u8>),
+    /// Switch the reply serialization for everything that follows.
+    Mode(ReplyFormat),
+    /// A reply to resolve (blocking on the chip if needed) and write.
+    Reply(Pending),
+}
+
+/// Serve one accepted connection until EOF, a fatal protocol error, or
+/// `bye`/shutdown.
+pub(super) fn handle_conn(
+    stream: TcpStream,
+    fleet: Arc<Fleet>,
+    shutdown: Arc<ShutdownSignal>,
+    allow_remote_shutdown: bool,
+) -> anyhow::Result<()> {
+    let writer_stream = stream.try_clone()?;
+    // The bounded queue is the pipelining depth: a client that floods
+    // requests blocks the reader here until replies drain.
+    let (tx, rx) = mpsc::sync_channel::<ConnMsg>(PENDING_REPLY_DEPTH);
+    let writer_shutdown = shutdown.clone();
+    let writer = std::thread::Builder::new()
+        .name("bss2-conn-writer".into())
+        .spawn(move || write_loop(writer_stream, rx, writer_shutdown))?;
+
+    let mut reader = stream;
+    let mut proto = ProtoState::new();
+    let mut session = None;
+    let mut chunk = [0u8; 8192];
+    let result = 'conn: loop {
+        let n = match reader.read(&mut chunk) {
+            Ok(0) => break Ok(()),
+            Ok(n) => n,
+            Err(e) => break Err(anyhow::Error::from(e)),
+        };
+        if shutdown.is_set() {
+            break Ok(());
+        }
+        let events = match proto.push(&chunk[..n]) {
+            Ok(events) => events,
+            Err(fatal) => {
+                let msg = match fatal {
+                    Fatal::Reject(bytes) => ConnMsg::Raw(bytes.to_vec()),
+                    Fatal::Error(text) => {
+                        ConnMsg::Reply(Pending::Now(err_json(&text)))
+                    }
+                };
+                let _ = tx.send(msg);
+                break Ok(());
+            }
+        };
+        for event in events {
+            let (replies, bye) = match event {
+                WireEvent::Hello(enc) => {
+                    let fmt = ReplyFormat::for_encoding(enc);
+                    let ack =
+                        handshake::ok_bytes(PROTO_VERSION, enc).to_vec();
+                    if tx.send(ConnMsg::Mode(fmt)).is_err()
+                        || tx.send(ConnMsg::Raw(ack)).is_err()
+                    {
+                        break 'conn Ok(()); // writer gone (socket died)
+                    }
+                    continue;
+                }
+                WireEvent::BadRequest(msg) => {
+                    (vec![Pending::Now(err_json(&msg))], false)
+                }
+                WireEvent::Request(req) => handle_request(
+                    &req,
+                    &fleet,
+                    allow_remote_shutdown,
+                    &mut session,
+                    None,
+                ),
+            };
+            for reply in replies {
+                if tx.send(ConnMsg::Reply(reply)).is_err() {
+                    break 'conn Ok(());
+                }
+            }
+            if bye {
+                break 'conn Ok(());
+            }
+        }
+    };
+    // Dropping the sender lets the writer drain the remaining replies
+    // and exit; joining keeps the guard alive until both halves stop.
+    drop(tx);
+    let _ = writer.join();
+    result
+}
+
+/// Writer half: resolves pendings in order and owns the write side.
+fn write_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<ConnMsg>,
+    shutdown: Arc<ShutdownSignal>,
+) {
+    let mut fmt = ReplyFormat::Lines;
+    let mut out = Vec::with_capacity(512);
+    while let Ok(msg) = rx.recv() {
+        out.clear();
+        let bye = match msg {
+            ConnMsg::Mode(new_fmt) => {
+                fmt = new_fmt;
+                continue;
+            }
+            ConnMsg::Raw(bytes) => {
+                out.extend_from_slice(&bytes);
+                false
+            }
+            ConnMsg::Reply(pending) => {
+                let (text, bye) = pending.resolve_blocking();
+                fmt.serialize(&text, &mut out);
+                bye
+            }
+        };
+        let write_ok = stream.write_all(&out).is_ok();
+        if bye {
+            // Accepted shutdown: the command takes effect even if the
+            // good-bye could not be delivered.
+            shutdown.signal();
+            return;
+        }
+        if !write_ok {
+            return;
+        }
+    }
+}

@@ -60,7 +60,7 @@ pub mod telemetry;
 pub use health::{ChipHealth, ChipHealthSnapshot, ChipState};
 pub use pool::{
     BatchDispatchOutcome, CalibReply, ChipId, ChipReply, DispatchOutcome,
-    Fleet, FleetConfig, FleetCore,
+    Fleet, FleetConfig, FleetCore, ReplyNotify,
 };
 pub use scheduler::ShedReason;
 pub use telemetry::{FleetTelemetry, LatencyHistogram, TelemetrySnapshot};

@@ -147,7 +147,7 @@ enum ChipJob {
         enq: Instant,
         /// Queue + execute nanoseconds burnt in failed attempts.
         retry_ns: u64,
-        resp: mpsc::Sender<ChipReply>,
+        resp: ReplySink<ChipReply>,
         /// Remaining transparent-failover budget for this job.
         redirects_left: u32,
     },
@@ -161,7 +161,7 @@ enum ChipJob {
         enq: Instant,
         /// See `Classify::retry_ns`.
         retry_ns: u64,
-        resp: mpsc::Sender<ChipReply>,
+        resp: ReplySink<ChipReply>,
         /// Remaining transparent-failover budget for this frame.
         redirects_left: u32,
     },
@@ -175,7 +175,7 @@ enum ChipJob {
     Calibrate {
         reps: usize,
         reason: RecalibReason,
-        resp: Option<mpsc::Sender<CalibReply>>,
+        resp: Option<ReplySink<CalibReply>>,
         drain_token: Option<Arc<AtomicBool>>,
     },
 }
@@ -200,6 +200,37 @@ pub struct CalibReply {
     pub reason: RecalibReason,
     /// On success: (chip-time stamp [µs], worst per-half residual [LSB]).
     pub result: Result<(u64, f32), String>,
+}
+
+/// Completion hook fired after a worker delivers a reply.  The threaded
+/// service blocks on the reply receiver and needs none; the readiness
+/// loop (`coordinator::service::readiness`) cannot block, so its
+/// `*_notify` dispatches install a hook that wakes the poll thread to
+/// `try_recv` the finished reply.
+pub type ReplyNotify = Arc<dyn Fn() + Send + Sync>;
+
+/// Where a worker's reply goes: the mpsc sender plus the optional
+/// completion hook.  Travels with the job through failover redirects, so
+/// the hook fires whichever replica finally serves.
+struct ReplySink<T> {
+    tx: mpsc::Sender<T>,
+    notify: Option<ReplyNotify>,
+}
+
+impl<T> ReplySink<T> {
+    fn new(tx: mpsc::Sender<T>, notify: Option<ReplyNotify>) -> ReplySink<T> {
+        ReplySink { tx, notify }
+    }
+
+    /// Deliver one reply.  A closed receiver is fine — the client may
+    /// have given up — and the hook still fires so pollers re-check
+    /// their queues rather than missing the final state change.
+    fn send(&self, value: T) {
+        let _ = self.tx.send(value);
+        if let Some(notify) = &self.notify {
+            notify();
+        }
+    }
 }
 
 /// Outcome of a single-trace admission attempt.
@@ -425,7 +456,25 @@ impl FleetCore {
     /// Admit one trace, or shed it.  Non-blocking: the reply arrives on
     /// the returned receiver.
     pub fn dispatch(&self, trace: Trace) -> DispatchOutcome {
-        match self.dispatch_batch(vec![trace]) {
+        self.dispatch_inner(trace, None)
+    }
+
+    /// [`Self::dispatch`] with a completion hook fired when the reply is
+    /// delivered — for pollers that `try_recv` instead of blocking.
+    pub fn dispatch_notify(
+        &self,
+        trace: Trace,
+        notify: ReplyNotify,
+    ) -> DispatchOutcome {
+        self.dispatch_inner(trace, Some(notify))
+    }
+
+    fn dispatch_inner(
+        &self,
+        trace: Trace,
+        notify: Option<ReplyNotify>,
+    ) -> DispatchOutcome {
+        match self.dispatch_batch_inner(vec![trace], notify) {
             BatchDispatchOutcome::Enqueued { chip, resp, .. } => {
                 DispatchOutcome::Enqueued { chip, resp }
             }
@@ -468,6 +517,24 @@ impl FleetCore {
     /// shed it.  Non-blocking; accounted as one sample, exactly like a
     /// single-trace `dispatch`.
     pub fn dispatch_acts(&self, acts: Vec<i32>) -> DispatchOutcome {
+        self.dispatch_acts_inner(acts, None)
+    }
+
+    /// [`Self::dispatch_acts`] with a completion hook (see
+    /// [`Self::dispatch_notify`]).
+    pub fn dispatch_acts_notify(
+        &self,
+        acts: Vec<i32>,
+        notify: ReplyNotify,
+    ) -> DispatchOutcome {
+        self.dispatch_acts_inner(acts, Some(notify))
+    }
+
+    fn dispatch_acts_inner(
+        &self,
+        acts: Vec<i32>,
+        notify: Option<ReplyNotify>,
+    ) -> DispatchOutcome {
         self.maybe_recalibrate();
         let mut acts = acts;
         for _ in 0..self.handles.len() {
@@ -488,7 +555,7 @@ impl FleetCore {
                 admitted: now,
                 enq: now,
                 retry_ns: 0,
-                resp: rtx,
+                resp: ReplySink::new(rtx, notify.clone()),
                 redirects_left: self.redirects_budget,
             };
             match self.try_send(chip, job) {
@@ -510,7 +577,25 @@ impl FleetCore {
 
     /// Admit a batch of traces — possibly only a prefix of it (admission
     /// is bounded in samples; see [`BatchDispatchOutcome`]).  Non-blocking.
-    pub fn dispatch_batch(&self, mut traces: Vec<Trace>) -> BatchDispatchOutcome {
+    pub fn dispatch_batch(&self, traces: Vec<Trace>) -> BatchDispatchOutcome {
+        self.dispatch_batch_inner(traces, None)
+    }
+
+    /// [`Self::dispatch_batch`] with a completion hook (see
+    /// [`Self::dispatch_notify`]).
+    pub fn dispatch_batch_notify(
+        &self,
+        traces: Vec<Trace>,
+        notify: ReplyNotify,
+    ) -> BatchDispatchOutcome {
+        self.dispatch_batch_inner(traces, Some(notify))
+    }
+
+    fn dispatch_batch_inner(
+        &self,
+        mut traces: Vec<Trace>,
+        notify: Option<ReplyNotify>,
+    ) -> BatchDispatchOutcome {
         // An empty batch is a caller bug; never let it reach a worker
         // (it would error in the engine and charge the healthy chip an
         // error strike).  Report it as a zero-accepted shed instead.
@@ -548,7 +633,7 @@ impl FleetCore {
                 admitted: now,
                 enq: now,
                 retry_ns: 0,
-                resp: rtx,
+                resp: ReplySink::new(rtx, notify.clone()),
                 redirects_left: self.redirects_budget,
             };
             match self.try_send(chip, job) {
@@ -634,12 +719,18 @@ impl FleetCore {
         }
     }
 
+    /// Samples currently admitted fleet-wide (queued + executing) — the
+    /// queue-depth figure shed replies carry as a backoff hint.
+    pub fn inflight_samples(&self) -> usize {
+        self.health.iter().map(|h| h.inflight()).sum()
+    }
+
     /// Rough client-facing backpressure hint [µs]: the mean host latency
     /// times the number of queued rounds ahead of the request.
     fn retry_hint_us(&self) -> u64 {
         let mean = self.telemetry.mean_host_us();
         let per = if mean > 0.0 { mean } else { 300.0 };
-        let inflight: usize = self.health.iter().map(|h| h.inflight()).sum();
+        let inflight = self.inflight_samples();
         let lanes = self
             .health
             .iter()
@@ -838,7 +929,7 @@ impl FleetCore {
         chip: ChipId,
         reps: usize,
         reason: RecalibReason,
-        resp: Option<mpsc::Sender<CalibReply>>,
+        resp: Option<ReplySink<CalibReply>>,
         drain_token: Option<Arc<AtomicBool>>,
     ) -> bool {
         if !self.health[chip].begin_calibration() {
@@ -871,6 +962,26 @@ impl FleetCore {
         chip: ChipId,
         reps: usize,
     ) -> anyhow::Result<mpsc::Receiver<CalibReply>> {
+        self.recalibrate_chip_inner(chip, reps, None)
+    }
+
+    /// [`Self::recalibrate_chip`] with a completion hook (see
+    /// [`Self::dispatch_notify`]).
+    pub fn recalibrate_chip_notify(
+        &self,
+        chip: ChipId,
+        reps: usize,
+        notify: ReplyNotify,
+    ) -> anyhow::Result<mpsc::Receiver<CalibReply>> {
+        self.recalibrate_chip_inner(chip, reps, Some(notify))
+    }
+
+    fn recalibrate_chip_inner(
+        &self,
+        chip: ChipId,
+        reps: usize,
+        notify: Option<ReplyNotify>,
+    ) -> anyhow::Result<mpsc::Receiver<CalibReply>> {
         anyhow::ensure!(chip < self.handles.len(), "chip {chip} out of range");
         anyhow::ensure!(
             self.health[chip].is_calib_capable(),
@@ -902,7 +1013,7 @@ impl FleetCore {
             chip,
             reps,
             RecalibReason::Aged,
-            Some(tx),
+            Some(ReplySink::new(tx, notify)),
             Some(self.policy_drain.clone()),
         ) {
             self.policy_drain.store(false, Ordering::Release);
@@ -1194,7 +1305,7 @@ fn answer_failed(chip: ChipId, job: ChipJob, msg: &str) {
     match job {
         ChipJob::Classify { admitted, resp, .. }
         | ChipJob::ClassifyActs { admitted, resp, .. } => {
-            let _ = resp.send(ChipReply {
+            resp.send(ChipReply {
                 chip,
                 host_latency_us: admitted.elapsed().as_secs_f64() * 1e6,
                 result: Err(format!("chip {chip}: {msg}")),
@@ -1205,7 +1316,7 @@ fn answer_failed(chip: ChipId, job: ChipJob, msg: &str) {
                 t.store(false, Ordering::Release);
             }
             if let Some(resp) = resp {
-                let _ = resp.send(CalibReply {
+                resp.send(CalibReply {
                     chip,
                     reason,
                     result: Err(format!("chip {chip}: {msg}")),
@@ -1339,7 +1450,7 @@ fn chip_worker<F>(
                         );
                         // The client may have given up; a closed reply
                         // channel is fine.
-                        let _ = resp.send(ChipReply {
+                        resp.send(ChipReply {
                             chip,
                             host_latency_us: host_us,
                             result: Ok(infs),
@@ -1431,7 +1542,7 @@ fn chip_worker<F>(
                             host,
                             inf.stages,
                         );
-                        let _ = resp.send(ChipReply {
+                        resp.send(ChipReply {
                             chip,
                             host_latency_us: host_us,
                             result: Ok(vec![inf]),
@@ -1519,7 +1630,7 @@ fn chip_worker<F>(
                     t.store(false, Ordering::Release);
                 }
                 if let Some(resp) = resp {
-                    let _ = resp.send(CalibReply { chip, reason, result });
+                    resp.send(CalibReply { chip, reason, result });
                 }
             }
         }

@@ -5,7 +5,8 @@
 //! proptest, rand) are replaced by small, tested, purpose-built modules:
 //!
 //! * [`rng`] — SplitMix64 PRNG, bit-identical to the python mirror.
-//! * [`json`] — JSON parser/writer for the artifact formats.
+//! * [`json`] — JSON parser/writer for the artifact formats (re-exported
+//!   from `bss2-proto`, where it doubles as the wire value type).
 //! * [`cli`] — argument parsing for the `repro` binary.
 //! * [`stats`] — summaries/percentiles for the measurement pipeline.
 //! * [`benchkit`] — the bench harness driving `cargo bench` targets.
@@ -13,7 +14,8 @@
 
 pub mod benchkit;
 pub mod cli;
-pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+
+pub use bss2_proto::json;

@@ -1,0 +1,268 @@
+//! Framing-robustness suite (DESIGN.md §14): the binary decoder and the
+//! server's protocol state machine against hostile bytes — truncations,
+//! oversized length prefixes, random garbage, mid-frame splits.  The
+//! server must answer with typed errors or close the connection; it must
+//! never panic, and it must keep serving other clients afterwards.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::Service;
+use bss2::fleet::FleetConfig;
+use bss2::nn::weights::TrainedModel;
+use bss2::util::propcheck::{self, Gen};
+use bss2_client::{Client, Json, Options};
+use bss2_proto::handshake::{self, Encoding};
+use bss2_proto::{bin, frame, PROTO_VERSION};
+
+fn start_service() -> Service {
+    Service::start_fleet(
+        "127.0.0.1:0",
+        FleetConfig { chips: 1, queue_depth: 16, ..Default::default() },
+        |_chip| {
+            Ok(Engine::native(
+                TrainedModel::synthetic(0x57AB1E),
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    ..Default::default()
+                },
+            ))
+        },
+    )
+    .unwrap()
+}
+
+fn assert_still_serving(svc: &Service) {
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    assert_eq!(
+        cl.ping().unwrap().get("ok"),
+        Some(&Json::Bool(true)),
+        "service stopped answering after hostile input"
+    );
+}
+
+// --- pure decoder properties (no server) --------------------------------
+
+fn arbitrary_json(g: &mut Gen, depth: usize) -> Json {
+    let top = if depth >= 3 { 4 } else { 6 };
+    match g.usize_in(0, top) {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num(g.f64_in(-1e6, 1e6)),
+        // Integral 0..=65535 numbers steer arrays onto the packed-u16
+        // wire representation.
+        3 => Json::Num(f64::from(g.i32_in(0, 65535))),
+        4 => {
+            let len = g.usize_in(0, 12);
+            Json::Str(
+                (0..len)
+                    .map(|_| g.i32_in(32, 126) as u8 as char)
+                    .collect(),
+            )
+        }
+        5 => Json::Arr(
+            (0..g.usize_in(0, 6))
+                .map(|_| arbitrary_json(g, depth + 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..g.usize_in(0, 5))
+                .map(|i| {
+                    (format!("k{i}"), arbitrary_json(g, depth + 1))
+                })
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn decoder_roundtrips_arbitrary_values() {
+    propcheck::check("bin roundtrip", 300, 0xB17, |g| {
+        let v = arbitrary_json(g, 0);
+        let decoded = bin::decode(&bin::encode(&v))
+            .map_err(|e| format!("decode failed on {v}: {e}"))?;
+        if decoded != v {
+            return Err(format!("roundtrip mismatch: {v} -> {decoded}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decoder_rejects_every_strict_prefix() {
+    // The encoding is self-delimiting, so a cut-anywhere prefix can
+    // never decode to a complete value — it must be a typed error.
+    propcheck::check("bin truncation", 300, 0x7120, |g| {
+        let v = arbitrary_json(g, 0);
+        let bytes = bin::encode(&v);
+        let cut = g.usize_in(0, bytes.len() - 1);
+        if bin::decode(&bytes[..cut]).is_ok() {
+            return Err(format!(
+                "prefix of {cut}/{} bytes of {v} decoded Ok",
+                bytes.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decoder_never_panics_on_garbage() {
+    propcheck::check("bin garbage", 500, 0xF00D, |g| {
+        let len = g.usize_in(0, 128);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| g.i32_in(0, 255) as u8).collect();
+        let _ = bin::decode(&bytes); // any Result is fine; a panic is not
+        let _ = frame::first_frame_len(&bytes);
+        Ok(())
+    });
+    // Single-byte corruptions of valid encodings, same contract.
+    propcheck::check("bin corruption", 300, 0xBADB17, |g| {
+        let v = arbitrary_json(g, 0);
+        let mut bytes = bin::encode(&v);
+        let at = g.usize_in(0, bytes.len() - 1);
+        bytes[at] ^= (1 + g.i32_in(0, 254)) as u8;
+        let _ = bin::decode(&bytes);
+        Ok(())
+    });
+}
+
+// --- live-server robustness ----------------------------------------------
+
+/// Raw framed connection with the handshake already done.
+fn framed_conn(svc: &Service) -> TcpStream {
+    let mut s = TcpStream::connect(svc.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(&handshake::hello_bytes(PROTO_VERSION, Encoding::Binary))
+        .unwrap();
+    let mut ack = [0u8; handshake::LEN];
+    s.read_exact(&mut ack).unwrap();
+    assert_eq!(handshake::evaluate_ack(&ack), Ok(Encoding::Binary));
+    s
+}
+
+fn read_raw_frame(s: &mut TcpStream) -> Vec<u8> {
+    let mut hdr = [0u8; frame::HEADER_LEN];
+    s.read_exact(&mut hdr).unwrap();
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload).unwrap();
+    payload
+}
+
+fn ping_frame() -> Vec<u8> {
+    let ping = Json::parse("{\"cmd\":\"ping\"}").unwrap();
+    let mut out = Vec::new();
+    frame::encode_into(&bin::encode(&ping), &mut out);
+    out
+}
+
+#[test]
+fn oversized_length_prefix_is_a_typed_error_then_close() {
+    let svc = start_service();
+    let mut s = framed_conn(&svc);
+    // Four bytes claiming a 4 GiB frame: the server must refuse before
+    // buffering anything, tell the client why, and hang up.
+    s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    let reply = bin::decode(&read_raw_frame(&mut s)).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    let msg = reply.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(msg.contains("exceeds"), "unexpected error text: {msg}");
+    let mut rest = Vec::new();
+    assert_eq!(s.read_to_end(&mut rest).unwrap(), 0, "must close");
+    assert_still_serving(&svc);
+    svc.stop();
+}
+
+#[test]
+fn truncated_frames_and_dead_connections_are_harmless() {
+    let svc = start_service();
+    // A header promising 100 bytes followed by 10 and a close.
+    let mut s = framed_conn(&svc);
+    s.write_all(&100u32.to_le_bytes()).unwrap();
+    s.write_all(&[0u8; 10]).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut sink = Vec::new();
+    let _ = s.read_to_end(&mut sink);
+    // A hello cut off halfway.
+    let mut s = TcpStream::connect(svc.addr).unwrap();
+    s.write_all(&handshake::hello_bytes(PROTO_VERSION, Encoding::Binary)[..3])
+        .unwrap();
+    drop(s);
+    assert_still_serving(&svc);
+    svc.stop();
+}
+
+#[test]
+fn garbage_inside_a_valid_frame_is_a_bad_request_not_a_hangup() {
+    let svc = start_service();
+    let mut s = framed_conn(&svc);
+    // Well-framed payload that is not a valid binary value.
+    let mut msg = Vec::new();
+    frame::encode_into(&[0xff, 0x01, 0x02], &mut msg);
+    s.write_all(&msg).unwrap();
+    let reply = bin::decode(&read_raw_frame(&mut s)).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    // The connection survives a bad request: a valid ping still answers.
+    s.write_all(&ping_frame()).unwrap();
+    let pong = bin::decode(&read_raw_frame(&mut s)).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)), "{pong}");
+    assert_still_serving(&svc);
+    svc.stop();
+}
+
+#[test]
+fn mid_frame_splits_reassemble() {
+    let svc = start_service();
+    let mut s = TcpStream::connect(svc.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_nodelay(true).unwrap();
+    let mut msg =
+        handshake::hello_bytes(PROTO_VERSION, Encoding::Binary).to_vec();
+    msg.extend(ping_frame());
+    // One byte at a time across the hello boundary and the frame header,
+    // then tiny chunks: the state machine sees every possible split.
+    for b in &msg[..14] {
+        s.write_all(std::slice::from_ref(b)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for chunk in msg[14..].chunks(3) {
+        s.write_all(chunk).unwrap();
+        std::thread::yield_now();
+    }
+    let mut ack = [0u8; handshake::LEN];
+    s.read_exact(&mut ack).unwrap();
+    assert_eq!(handshake::evaluate_ack(&ack), Ok(Encoding::Binary));
+    let pong = bin::decode(&read_raw_frame(&mut s)).unwrap();
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)), "{pong}");
+    assert_still_serving(&svc);
+    svc.stop();
+}
+
+#[test]
+fn random_opening_bytes_never_kill_the_server() {
+    let svc = start_service();
+    propcheck::check("server vs garbage", 24, 0x5E12, |g| {
+        let len = g.usize_in(1, 96);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| g.i32_in(0, 255) as u8).collect();
+        let mut s = TcpStream::connect(svc.addr)
+            .map_err(|e| format!("connect: {e}"))?;
+        s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        // The server may already have rejected and closed (e.g. a blob
+        // starting 0xB5 with a bad version) — a write error is fine.
+        let _ = s.write_all(&bytes);
+        let _ = s.shutdown(Shutdown::Write);
+        // Drain whatever the server says (reject bytes, error replies,
+        // nothing); only a panic on the other side is a failure, and
+        // that is caught by the liveness probe below.
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+        Ok(())
+    });
+    assert_still_serving(&svc);
+    svc.stop();
+}

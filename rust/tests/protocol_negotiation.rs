@@ -1,0 +1,355 @@
+//! Protocol-negotiation integration tests (DESIGN.md §14): the framed
+//! binary client, the framed-JSON fallback, and the legacy line protocol
+//! against one server; version-mismatch rejection; cross-encoding reply
+//! equivalence; pipelined ordering and stream sessions over binary
+//! framing; the typed client read timeout; and the backoff hints on
+//! shed replies.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use bss2::asic::consts as c;
+use bss2::coordinator::engine::{Engine, EngineConfig};
+use bss2::coordinator::service::{self, ServeModel, Service};
+use bss2::ecg::gen::{generate_trace, Trace};
+use bss2::fleet::FleetConfig;
+use bss2::nn::weights::TrainedModel;
+use bss2_client::{Client, ClientError, Encoding, Json, Options};
+use bss2_proto::handshake;
+
+/// Deterministic native engine; identical on every chip, so the server's
+/// replies equal a local reference engine's bit for bit.
+fn test_engine() -> Engine {
+    Engine::native(
+        TrainedModel::synthetic(0x57AB1E),
+        EngineConfig { use_pjrt: false, noise_off: true, ..Default::default() },
+    )
+}
+
+fn start_service(cfg: FleetConfig) -> Service {
+    Service::start_fleet("127.0.0.1:0", cfg, |_chip| Ok(test_engine())).unwrap()
+}
+
+fn small_fleet() -> FleetConfig {
+    FleetConfig { chips: 1, queue_depth: 64, ..Default::default() }
+}
+
+fn assert_ok(reply: &Json) {
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+}
+
+#[test]
+fn both_framed_encodings_negotiate_and_serve() {
+    let svc = start_service(small_fleet());
+    for (opts, want) in [
+        (Options::default(), Encoding::Binary),
+        (Options::json(), Encoding::Json),
+    ] {
+        let mut cl = Client::connect(svc.addr, opts).unwrap();
+        assert_eq!(cl.encoding(), want);
+        assert_ok(&cl.ping().unwrap());
+        let trace = generate_trace(3, false, 1.0);
+        let reply = cl.classify(&trace.samples).unwrap();
+        assert_ok(&reply);
+        assert!(reply.get("pred").is_some(), "{reply}");
+    }
+    svc.stop();
+}
+
+#[test]
+fn legacy_line_clients_coexist_with_framed_clients() {
+    let svc = start_service(small_fleet());
+    let trace = generate_trace(11, true, 1.0);
+    // Line-protocol client (no handshake) and a binary client, same
+    // server, same trace: byte-identical reply content.
+    let mut legacy = service::Client::connect(&svc.addr).unwrap();
+    let from_lines = legacy.classify(&trace).unwrap();
+    let mut framed = Client::connect(svc.addr, Options::default()).unwrap();
+    let from_frames = framed.classify(&trace.samples).unwrap();
+    assert_ok(&from_lines);
+    assert_eq!(from_lines, from_frames);
+    svc.stop();
+}
+
+#[test]
+fn version_mismatch_is_rejected_with_server_version() {
+    let svc = start_service(small_fleet());
+    let opts = Options {
+        protocol_version: bss2_client::PROTO_VERSION + 7,
+        ..Options::default()
+    };
+    match Client::connect(svc.addr, opts) {
+        Err(ClientError::VersionMismatch { server_version }) => {
+            assert_eq!(server_version, bss2_client::PROTO_VERSION);
+        }
+        other => panic!("expected VersionMismatch, got {other:?}"),
+    }
+    // The rejection must not poison the acceptor: the next client is
+    // served normally.
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    assert_ok(&cl.ping().unwrap());
+    svc.stop();
+}
+
+#[test]
+fn unknown_encoding_is_rejected_at_the_socket() {
+    let svc = start_service(small_fleet());
+    let mut raw = std::net::TcpStream::connect(svc.addr).unwrap();
+    let mut hello = handshake::hello_bytes(
+        bss2_client::PROTO_VERSION,
+        Encoding::Binary,
+    );
+    hello[4] = 0x7f; // an encoding this server has never heard of
+    raw.write_all(&hello).unwrap();
+    let mut ack = [0u8; handshake::LEN];
+    raw.read_exact(&mut ack).unwrap();
+    assert_eq!(
+        handshake::evaluate_ack(&ack),
+        Err(handshake::AckError::Rejected {
+            server_version: bss2_client::PROTO_VERSION,
+            reason: handshake::REJECT_ENCODING,
+        })
+    );
+    // Reject closes the connection.
+    assert_eq!(raw.read(&mut [0u8; 1]).unwrap(), 0);
+    svc.stop();
+}
+
+#[test]
+fn replies_are_equivalent_across_all_three_encodings() {
+    let svc = start_service(small_fleet());
+    let trace = generate_trace(29, false, 1.0);
+    let mut replies = Vec::new();
+    for opts in [Options::default(), Options::json()] {
+        let mut cl = Client::connect(svc.addr, opts).unwrap();
+        replies.push(cl.classify(&trace.samples).unwrap());
+    }
+    let mut legacy = service::Client::connect(&svc.addr).unwrap();
+    replies.push(legacy.classify(&trace).unwrap());
+    assert_ok(&replies[0]);
+    assert_eq!(replies[0], replies[1], "binary vs framed-JSON");
+    assert_eq!(replies[0], replies[2], "binary vs legacy lines");
+
+    // And the values agree with a local reference engine.
+    let mut reference = test_engine();
+    let infs =
+        reference.classify_batch(std::slice::from_ref(&trace)).unwrap();
+    let inf = &infs[0];
+    assert_eq!(
+        replies[0].get("pred").and_then(|v| v.as_uint()),
+        Some(u64::from(inf.pred))
+    );
+    let scores = replies[0].get("scores").and_then(|v| v.as_arr()).unwrap();
+    for (got, want) in scores.iter().zip(inf.scores) {
+        assert!(
+            (got.as_f64().unwrap() - f64::from(want)).abs() < 1e-3,
+            "server scores {scores:?} vs local {:?}",
+            inf.scores
+        );
+    }
+    svc.stop();
+}
+
+#[test]
+fn pipelined_replies_stay_ordered_over_binary_framing() {
+    let svc = start_service(small_fleet());
+    let traces: Vec<Trace> =
+        (0..6).map(|i| generate_trace(100 + i, i % 2 == 1, 1.0)).collect();
+    let mut reference = test_engine();
+    let expected: Vec<u64> = traces
+        .iter()
+        .map(|t| {
+            u64::from(
+                reference.classify_batch(std::slice::from_ref(t)).unwrap()[0]
+                    .pred,
+            )
+        })
+        .collect();
+
+    // Interleave slow (classify) and instant (ping) requests without
+    // reading a single reply; the reply sequence must match the request
+    // sequence exactly — a ping answered before the classify sent ahead
+    // of it is an ordering bug.
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    let ping = Json::parse("{\"cmd\":\"ping\"}").unwrap();
+    for t in &traces {
+        cl.send_classify(&t.samples).unwrap();
+        cl.send(&ping).unwrap();
+    }
+    for pred in &expected {
+        let classify = cl.read_reply().unwrap();
+        assert_ok(&classify);
+        assert_eq!(
+            classify.get("pred").and_then(|v| v.as_uint()).as_ref(),
+            Some(pred),
+            "{classify}"
+        );
+        let pong = cl.read_reply().unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)), "{pong}");
+    }
+    svc.stop();
+}
+
+#[test]
+fn stream_session_works_over_binary_framing() {
+    let svc = start_service(small_fleet());
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    let hop = c::ECG_WINDOW;
+    assert_eq!(
+        cl.stream_open(Some(hop)).unwrap().get("stream").and_then(|v| v.as_str()),
+        Some("open")
+    );
+    // Three full windows, pushed in chunks that straddle the window
+    // boundary so the server-side windower does the reassembly.
+    let windows = 3;
+    let long = generate_trace(77, false, 1.0);
+    let total = hop * windows;
+    let mut sent = 0usize;
+    while sent < total {
+        let n = 700.min(total - sent);
+        let chunk: Vec<Vec<u16>> = long
+            .samples
+            .iter()
+            .map(|ch| {
+                (0..n).map(|i| ch[(sent + i) % ch.len()]).collect()
+            })
+            .collect();
+        cl.stream_push(&chunk).unwrap();
+        sent += n;
+    }
+    cl.stream_close().unwrap();
+
+    let mut results = Vec::new();
+    loop {
+        let line = cl.read_reply().unwrap();
+        if line.get("stream").and_then(|v| v.as_str()) == Some("closed") {
+            break;
+        }
+        results.push(line);
+    }
+    assert_eq!(results.len(), windows, "{results:?}");
+    for (i, line) in results.iter().enumerate() {
+        assert_eq!(
+            line.get("window").and_then(|v| v.as_uint()),
+            Some(i as u64),
+            "{line}"
+        );
+        assert_eq!(
+            line.get("start_sample").and_then(|v| v.as_uint()),
+            Some((i * hop) as u64),
+            "{line}"
+        );
+        assert_ok(line);
+        assert!(line.get("scores").is_some(), "{line}");
+    }
+    svc.stop();
+}
+
+#[test]
+fn read_timeout_is_typed_and_recoverable() {
+    let svc = start_service(small_fleet());
+    let opts = Options {
+        read_timeout: Some(Duration::from_millis(150)),
+        ..Options::default()
+    };
+    let mut cl = Client::connect(svc.addr, opts).unwrap();
+    // Nothing was requested, so nothing ever arrives: the wait must end
+    // in the typed timeout, not block forever or surface a raw io error.
+    match cl.read_reply() {
+        Err(ClientError::Timeout) => {}
+        other => panic!("expected ClientError::Timeout, got {other:?}"),
+    }
+    // A timeout consumes no bytes — the connection stays usable.
+    assert_ok(&cl.ping().unwrap());
+    // And the timeout is adjustable on a live connection.
+    cl.set_read_timeout(None).unwrap();
+    assert_ok(&cl.ping().unwrap());
+    svc.stop();
+}
+
+#[test]
+fn shed_replies_carry_backoff_hints() {
+    // Admission queue of one sample: a pipelined burst must shed, and
+    // every shed reply must tell the client how loaded the fleet is
+    // (queue_depth) and when to come back (retry_after_us).
+    let svc = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 1,
+        ..Default::default()
+    });
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    let trace = generate_trace(5, false, 1.0);
+    let burst = 8;
+    for _ in 0..burst {
+        cl.send_classify(&trace.samples).unwrap();
+    }
+    let (mut ok, mut shed) = (0, 0);
+    for _ in 0..burst {
+        let reply = cl.read_reply().unwrap();
+        if reply.get("ok") == Some(&Json::Bool(true)) {
+            ok += 1;
+        } else {
+            assert_eq!(reply.get("shed"), Some(&Json::Bool(true)), "{reply}");
+            assert!(
+                reply.get("queue_depth").and_then(|v| v.as_uint()).is_some(),
+                "shed reply without queue_depth hint: {reply}"
+            );
+            assert!(
+                reply
+                    .get("retry_after_us")
+                    .and_then(|v| v.as_uint())
+                    .map(|us| us > 0)
+                    .unwrap_or(false),
+                "shed reply without retry_after_us hint: {reply}"
+            );
+            shed += 1;
+        }
+    }
+    assert!(ok >= 1, "the first sample of the burst must be admitted");
+    assert!(shed >= 1, "a queue depth of 1 must shed under a burst of 8");
+
+    // Accept-time sheds carry the same kind of hint, counted in
+    // connections: hold the only slot, then read the refusal line.
+    let tight = start_service(FleetConfig {
+        chips: 1,
+        queue_depth: 8,
+        max_connections: 1,
+        ..Default::default()
+    });
+    let mut held =
+        Client::connect(tight.addr, Options::default()).unwrap();
+    assert_ok(&held.ping().unwrap());
+    let mut refused = service::Client::connect(&tight.addr).unwrap();
+    let line = refused.read_reply().unwrap();
+    assert_eq!(line.get("shed"), Some(&Json::Bool(true)), "{line}");
+    assert_eq!(line.get("queue_depth").and_then(|v| v.as_uint()), Some(1));
+    assert_eq!(
+        line.get("max_connections").and_then(|v| v.as_uint()),
+        Some(1)
+    );
+    tight.stop();
+    svc.stop();
+}
+
+#[test]
+fn binary_client_works_against_the_threaded_model() {
+    let svc = Service::start_fleet_with(
+        "127.0.0.1:0",
+        small_fleet(),
+        ServeModel::Threaded,
+        |_chip| Ok(test_engine()),
+    )
+    .unwrap();
+    let mut cl = Client::connect(svc.addr, Options::default()).unwrap();
+    assert_ok(&cl.ping().unwrap());
+    let trace = generate_trace(42, false, 1.0);
+    let a = cl.classify(&trace.samples).unwrap();
+    assert_ok(&a);
+    // Same request against the default model: identical reply — the two
+    // connection models are wire-indistinguishable.
+    let dfl = start_service(small_fleet());
+    let mut dcl = Client::connect(dfl.addr, Options::default()).unwrap();
+    assert_eq!(a, dcl.classify(&trace.samples).unwrap());
+    dfl.stop();
+    svc.stop();
+}
