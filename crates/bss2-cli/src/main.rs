@@ -40,6 +40,7 @@ fn main() {
         "baselines" => baselines_cmd(&args),
         "classify" => classify(&args),
         "calibrate" => calibrate(&args),
+        "train" => train(&args),
         "bench" => bench(&args),
         "chaos" => chaos(&args),
         "serve" => serve(&args),
@@ -75,6 +76,18 @@ COMMANDS:
   calibrate    full-chip calibration run   (--reps 64 --chip 0 --idle-us T
                                             --out FILE; writes the per-chip
                                             profile artifact)
+  train        in-the-loop training        (--epochs 8 --batch 16 --lr 0.4
+                                            --windows 192 --val-n 25 --seed 1
+                                            --chip 0 --fault-plan P --out FILE
+                                            --fpn-seed S --no-drift
+                                            --ideal-substrate): mini-batch
+                                            training on the simulated analog
+                                            substrate (FPN + drift armed by
+                                            default) with straight-through
+                                            gradients on host shadow weights;
+                                            writes the bss2-model-v1 artifact
+                                            `repro serve --native` adopts.
+                                            Deterministic per --seed.
   serve        experiment service          (--addr 127.0.0.1:7001 --native
                                             --chips 4 --queue-depth 32
                                             --max-conns 256 --conn-model M
@@ -108,7 +121,7 @@ COMMANDS:
                                             survival report (same seed =
                                             byte-identical report)
   bench        deterministic perf benchmark (--area serving|batch|stream|
-                                            drift --n 64 --out FILE
+                                            drift|train --n 64 --out FILE
                                             --gate BASELINE): writes
                                             BENCH_<area>.json with gated
                                             simulated-time/energy metrics;
@@ -564,6 +577,110 @@ fn calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Hardware-in-the-loop training: run the mini-batch loop against the
+/// simulated analog substrate and write the versioned `bss2-model-v1`
+/// artifact `repro serve --native` adopts.  Deterministic per `--seed` —
+/// two runs with the same flags produce byte-identical artifacts.
+fn train(args: &Args) -> anyhow::Result<()> {
+    use bss2::train::{TrainConfig, Trainer, TRAIN_FPN_SEED};
+
+    let dir = artifact_dir(args);
+    let chip = args.usize_or("chip", 0)?;
+    let mut ecfg = engine_config(args)?;
+    // Gradient taps and per-step weight reload are native-only.
+    ecfg.use_pjrt = false;
+    // Train against realistic silicon by default: a fixed-pattern
+    // realisation (TRAIN_FPN_SEED unless --fpn-seed chose one) with the
+    // drift field advancing.  --ideal-substrate / --no-drift opt out
+    // for ablations.
+    if ecfg.fpn_seed.is_none() && !args.flag("ideal-substrate") {
+        ecfg.fpn_seed = Some(TRAIN_FPN_SEED);
+    }
+    if ecfg.drift.is_none() && !args.flag("no-drift") {
+        ecfg.drift = Some(bss2::calib::drift::DriftParams::default());
+    }
+    let defaults = TrainConfig::default();
+    let cfg = TrainConfig {
+        epochs: args.usize_or("epochs", defaults.epochs)?.max(1),
+        batch: args.usize_or("batch", defaults.batch)?.max(1),
+        windows: args.usize_or("windows", defaults.windows)?.max(2),
+        val_per_class: args.usize_or("val-n", defaults.val_per_class)?.max(1),
+        lr: args.f64_or("lr", defaults.lr)?,
+        momentum: args.f64_or("momentum", defaults.momentum)?,
+        temperature: args.f64_or("temperature", defaults.temperature)?,
+        seed: args.u64_or("seed", defaults.seed)?,
+        fault_plan: match args.get("fault-plan") {
+            Some(p) => Some(bss2::fault::FaultPlan::load(p)?),
+            None => None,
+        },
+        engine: ecfg.for_chip(chip),
+        ..defaults
+    };
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => dir.trained_model(),
+    };
+    println!(
+        "[train] {} epochs x {} windows (batch {}), seed {}, \
+         substrate: fpn {}, drift {}, faults {}",
+        cfg.epochs,
+        cfg.windows,
+        cfg.batch,
+        cfg.seed,
+        match cfg.engine.fpn_seed {
+            Some(s) => format!("{s:#x}"),
+            None => "model-defined".into(),
+        },
+        if cfg.engine.drift.is_some() { "on" } else { "off" },
+        if cfg.fault_plan.is_some() { "armed" } else { "none" }
+    );
+    let outcome = Trainer::run(&cfg)?;
+    let r = &outcome.report;
+    for e in 0..r.epoch_loss.len() {
+        println!(
+            "[train] epoch {:>2}: loss {:.4}  val det {:.3} fp {:.3}",
+            e + 1,
+            r.epoch_loss[e],
+            r.epoch_val[e].0,
+            r.epoch_val[e].1
+        );
+    }
+    println!(
+        "[train] final: det {:.3} fp {:.3} over {} train windows \
+         ({} sinus / {} afib), {} steps, {:.1} µs chip time/step{}",
+        r.final_det,
+        r.final_fp,
+        r.train_windows[0] + r.train_windows[1],
+        r.train_windows[0],
+        r.train_windows[1],
+        r.steps,
+        r.chip_us_per_step,
+        if r.skipped_batches > 0 {
+            format!(", {} batch(es) lost to faults", r.skipped_batches)
+        } else {
+            String::new()
+        }
+    );
+    match r.epochs_to_target {
+        Some(e) => println!("[train] target band reached at epoch {e}"),
+        None => println!("[train] target band not reached"),
+    }
+    if let Some(parent) = out_path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                anyhow::anyhow!("creating {}: {e}", parent.display())
+            })?;
+        }
+    }
+    outcome.artifact.save(&out_path)?;
+    println!(
+        "[train] artifact (substrate {:016x}) -> {}",
+        outcome.artifact.substrate,
+        out_path.display()
+    );
+    Ok(())
+}
+
 /// Deterministic perf benchmark with a persisted trajectory: run one
 /// serving area against the native engine, write `BENCH_<area>.json`, and
 /// optionally gate against a committed baseline file.
@@ -571,7 +688,9 @@ fn calibrate(args: &Args) -> anyhow::Result<()> {
 /// Gated metrics are *simulated* chip time and energy — pure functions of
 /// the model, so a regression means the timing/energy model (or the code
 /// path feeding it) changed, never that CI ran on a slower machine.  Host
-/// wall-clock goes into `info` for trend-watching only.
+/// wall-clock goes into `info` for trend-watching only.  The `train` area
+/// gates training *quality* instead: the deterministic trained artifact's
+/// detection rate on the accuracy pin's held-out seeds (higher is better).
 fn bench(args: &Args) -> anyhow::Result<()> {
     use bss2::nn::weights::TrainedModel;
     use std::fmt::Write as _;
@@ -593,8 +712,13 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         )
     };
 
-    // (metric name, value); every gated metric is lower-is-better.
-    let mut gated: Vec<(&str, f64)> = Vec::new();
+    // (metric name, value, polarity).  The polarity is written into the
+    // file so the gate reads each metric's regression direction from the
+    // committed baseline (time/energy gate lower-is-better; the train
+    // area's detection rate gates higher-is-better).
+    let mut gated: Vec<(&str, f64, &str)> = Vec::new();
+    // Ungated context metrics, recorded in the file's `info` object.
+    let mut info: Vec<(&str, f64)> = Vec::new();
     let t0 = std::time::Instant::now();
     match area.as_str() {
         "serving" => {
@@ -607,8 +731,12 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 sim_s += inf.sim_time_s;
                 e_j += inf.energy.total_j();
             }
-            gated.push(("us_per_sample", sim_s * 1e6 / n as f64));
-            gated.push(("energy_mj_per_sample", e_j * 1e3 / n as f64));
+            gated.push(("us_per_sample", sim_s * 1e6 / n as f64, "lower"));
+            gated.push((
+                "energy_mj_per_sample",
+                e_j * 1e3 / n as f64,
+                "lower",
+            ));
         }
         "batch" => {
             // Amortised path: one weight reconfiguration per layer per
@@ -624,8 +752,16 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                     served += 1;
                 }
             }
-            gated.push(("us_per_sample", sim_s * 1e6 / served as f64));
-            gated.push(("energy_mj_per_sample", e_j * 1e3 / served as f64));
+            gated.push((
+                "us_per_sample",
+                sim_s * 1e6 / served as f64,
+                "lower",
+            ));
+            gated.push((
+                "energy_mj_per_sample",
+                e_j * 1e3 / served as f64,
+                "lower",
+            ));
         }
         "stream" => {
             // The monitoring path: preprocessed windows via classify_acts
@@ -643,8 +779,12 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 sim_s += inf.sim_time_s;
                 e_j += inf.energy.total_j();
             }
-            gated.push(("us_per_window", sim_s * 1e6 / n as f64));
-            gated.push(("energy_mj_per_window", e_j * 1e3 / n as f64));
+            gated.push(("us_per_window", sim_s * 1e6 / n as f64, "lower"));
+            gated.push((
+                "energy_mj_per_window",
+                e_j * 1e3 / n as f64,
+                "lower",
+            ));
         }
         "drift" => {
             // Drift-compensation loop: age a drifting chip, recalibrate,
@@ -665,14 +805,63 @@ fn bench(args: &Args) -> anyhow::Result<()> {
             let residual = (profile.residual_rms[0] as f64
                 + profile.residual_rms[1] as f64)
                 / 2.0;
-            gated.push(("residual_rms_lsb", residual));
+            gated.push(("residual_rms_lsb", residual, "lower"));
             gated.push((
                 "recalib_cost_us",
                 bss2::calib::CalibProfile::measurement_cost_us(reps),
+                "lower",
+            ));
+        }
+        "train" => {
+            // In-the-loop training quality: run a short training session
+            // against the default training substrate (FPN + drift), then
+            // evaluate the artifact on the accuracy pin's held-out (odd)
+            // eval seeds with a *fresh* engine reconstructed from the
+            // artifact — the exact serve-side adoption path.
+            use bss2::train::{TrainConfig, Trainer};
+            let cfg = TrainConfig {
+                epochs: args.usize_or("epochs", 6)?.max(1),
+                batch: args.usize_or("batch", 16)?.max(1),
+                windows: 160,
+                val_per_class: 16,
+                seed,
+                ..TrainConfig::default()
+            };
+            let outcome = Trainer::run(&cfg)?;
+            let art = &outcome.artifact;
+            let mut engine =
+                Engine::native(art.model.clone(), art.engine_config());
+            let per_class = n.min(50);
+            let (mut det, mut fp) = (0usize, 0usize);
+            for i in 0..per_class {
+                let s = 2 * i as u64 + 1;
+                let afib = generate_trace(20_000 + s, true, 1.0);
+                let sinus = generate_trace(10_000 + s, false, 1.0);
+                let pa = engine
+                    .classify_batch(std::slice::from_ref(&afib))?[0]
+                    .pred;
+                let ps = engine
+                    .classify_batch(std::slice::from_ref(&sinus))?[0]
+                    .pred;
+                det += usize::from(pa == 1);
+                fp += usize::from(ps == 1);
+            }
+            let det_rate = det as f64 / per_class as f64;
+            let fp_rate = fp as f64 / per_class as f64;
+            gated.push(("detection_rate", det_rate, "higher"));
+            info.push(("false_positive_rate", fp_rate));
+            info.push(("margin", det_rate - fp_rate));
+            info.push((
+                "epochs_to_target",
+                outcome.report.epochs_to_target.map_or(-1.0, |e| e as f64),
+            ));
+            info.push((
+                "chip_us_per_step",
+                outcome.report.chip_us_per_step,
             ));
         }
         other => anyhow::bail!(
-            "unknown bench area `{other}` (serving|batch|stream|drift)"
+            "unknown bench area `{other}` (serving|batch|stream|drift|train)"
         ),
     }
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -680,29 +869,33 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     let mut s = format!(
         "{{\"schema\":\"bss2-bench-v1\",\"bench\":\"{area}\",\"gated\":{{"
     );
-    for (i, (name, v)) in gated.iter().enumerate() {
+    for (i, (name, v, better)) in gated.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        write!(s, "\"{name}\":{{\"value\":{v:.4},\"better\":\"lower\"}}")
+        write!(s, "\"{name}\":{{\"value\":{v:.4},\"better\":\"{better}\"}}")
             .unwrap();
     }
-    write!(
-        s,
-        "}},\"info\":{{\"n\":{n},\"seed\":{seed},\"host_wall_us\":{:.1}}}}}",
-        wall_us
-    )
-    .unwrap();
+    write!(s, "}},\"info\":{{\"n\":{n},\"seed\":{seed}").unwrap();
+    for (name, v) in &info {
+        write!(s, ",\"{name}\":{v:.4}").unwrap();
+    }
+    write!(s, ",\"host_wall_us\":{wall_us:.1}}}}}").unwrap();
     s.push('\n');
     std::fs::write(&out, &s)?;
     println!("[bench] area {area} over {n} iteration(s):");
-    for (name, v) in &gated {
+    for (name, v, _) in &gated {
         println!("[bench]   {name} = {v:.4}");
+    }
+    for (name, v) in &info {
+        println!("[bench]   {name} = {v:.4} (info)");
     }
     println!("[bench] wrote {out}");
 
     if let Some(base_path) = args.get("gate") {
-        gate_against(base_path, &gated)?;
+        let pairs: Vec<(&str, f64)> =
+            gated.iter().map(|&(name, v, _)| (name, v)).collect();
+        gate_against(base_path, &pairs)?;
     }
     Ok(())
 }
@@ -803,8 +996,23 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         fleet_cfg,
         model,
         move |chip| {
-            let mut engine =
-                Engine::from_artifacts(&dir, cfg.clone().for_chip(chip))?;
+            // Native fleets can serve without build artifacts: fall back
+            // to the built-in energy-detector base model (the same model
+            // `repro train` improves on).  PJRT still requires artifacts
+            // — `from_artifacts` reports the `make artifacts` hint.
+            let mut engine = if !dir.exists() && !cfg.use_pjrt {
+                log::info!(
+                    "chip {chip}: no artifacts under {} — serving the \
+                     built-in energy-detector base model",
+                    dir.root.display()
+                );
+                Engine::native(
+                    bss2::nn::weights::TrainedModel::energy_detector(),
+                    cfg.clone().for_chip(chip),
+                )
+            } else {
+                Engine::from_artifacts(&dir, cfg.clone().for_chip(chip))?
+            };
             // Close the measurement -> serving loop: a profile written by
             // `repro calibrate` (or a previous serving run) is applied at
             // construction; a corrupt artifact fails the chip loudly
@@ -842,6 +1050,67 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                             "chip {chip}: ignoring calibration profile {}: \
                              {e}; re-run `repro calibrate`",
                             profile_path.display()
+                        );
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            // Adopt a `repro train` artifact, same applicability policy
+            // as the calibration profile above: corrupt fails the chip
+            // loudly; a stale format version or a model trained on
+            // *different silicon* is warn-skipped — weights learned
+            // against foreign fixed-pattern noise would undo the
+            // in-the-loop training, not transfer it.
+            let model_path = dir.trained_model();
+            if model_path.exists() {
+                use bss2::train::artifact::{
+                    ModelArtifact, UnsupportedFormat,
+                };
+                match ModelArtifact::load(&model_path) {
+                    Ok(art) => match engine.substrate_hash() {
+                        Some(h) if h == art.substrate => {
+                            engine.load_model_weights(
+                                &art.model.pass_weights,
+                                art.model.scales,
+                            )?;
+                            log::info!(
+                                "chip {chip}: serving trained model {} \
+                                 (seed {}, val det {:.3} fp {:.3})",
+                                model_path.display(),
+                                art.seed,
+                                art.metrics
+                                    .get("val_det")
+                                    .copied()
+                                    .unwrap_or(f64::NAN),
+                                art.metrics
+                                    .get("val_fp")
+                                    .copied()
+                                    .unwrap_or(f64::NAN)
+                            );
+                        }
+                        current => log::warn!(
+                            "chip {chip}: ignoring trained model {}: \
+                             trained on substrate {:016x}, this chip is \
+                             {}; re-run `repro train` against this \
+                             chip's substrate",
+                            model_path.display(),
+                            art.substrate,
+                            match current {
+                                Some(h) => format!("{h:016x}"),
+                                None => "a PJRT backend \
+                                         (no substrate identity)"
+                                    .into(),
+                            }
+                        ),
+                    },
+                    Err(e)
+                        if e.downcast_ref::<UnsupportedFormat>()
+                            .is_some() =>
+                    {
+                        log::warn!(
+                            "chip {chip}: ignoring trained model {}: \
+                             {e}; re-run `repro train`",
+                            model_path.display()
                         );
                     }
                     Err(e) => return Err(e),

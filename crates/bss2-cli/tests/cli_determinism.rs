@@ -1,0 +1,141 @@
+//! CLI-level determinism acceptance tests.
+//!
+//! These live in the bss2-cli crate because `CARGO_BIN_EXE_repro` is
+//! only defined for the package that owns the `repro` binary; the
+//! engine-level counterparts live in the bss2 crate's integration
+//! suites (`tests/chaos.rs`, `tests/train_loop.rs`).
+
+use bss2::util::json::Json;
+
+/// Acceptance criterion: `repro chaos --chips 4 --seed 1` is
+/// deterministic across runs — the survival report is byte-identical.
+#[test]
+fn chaos_cli_survival_report_is_deterministic() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let run = || {
+        std::process::Command::new(exe)
+            .args(["chaos", "--chips", "4", "--seed", "1"])
+            .output()
+            .expect("repro chaos runs")
+    };
+    let a = run();
+    assert!(
+        a.status.success(),
+        "chaos run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let report = String::from_utf8_lossy(&a.stdout);
+    assert!(report.contains("[chaos] verdict:"), "{report}");
+    assert!(report.contains("0 lost"), "no reply may fall silent: {report}");
+    let b = run();
+    assert_eq!(
+        a.stdout, b.stdout,
+        "survival report must be byte-identical across runs"
+    );
+    // A different seed draws a different plan (and prints it).
+    let c = std::process::Command::new(exe)
+        .args(["chaos", "--chips", "4", "--seed", "2"])
+        .output()
+        .expect("repro chaos runs");
+    assert!(c.status.success());
+    assert_ne!(a.stdout, c.stdout, "different seed, different report");
+}
+
+/// `repro chaos --json` is the machine-readable twin of the survival
+/// report: still byte-identical per seed (no wall-clock fields), and it
+/// parses as one JSON object with the survival verdict.
+#[test]
+fn chaos_cli_json_report_is_deterministic_and_parses() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let run = || {
+        std::process::Command::new(exe)
+            .args(["chaos", "--chips", "4", "--seed", "1", "--json"])
+            .output()
+            .expect("repro chaos runs")
+    };
+    let a = run();
+    assert!(
+        a.status.success(),
+        "chaos --json run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let b = run();
+    assert_eq!(
+        a.stdout, b.stdout,
+        "json report must be byte-identical across runs"
+    );
+    let text = String::from_utf8_lossy(&a.stdout);
+    let report = Json::parse(text.trim()).expect("json report parses");
+    assert_eq!(
+        report.get("lost").and_then(|v| v.as_uint()),
+        Some(0),
+        "{report}"
+    );
+    assert_eq!(report.get("seed").and_then(|v| v.as_uint()), Some(1));
+    assert!(
+        report.get("verdict").and_then(|v| v.as_str()).is_some(),
+        "{report}"
+    );
+    assert_eq!(
+        report.get("per_chip").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(4),
+        "{report}"
+    );
+}
+
+/// Acceptance criterion (ISSUE 8): two `repro train --seed S` runs
+/// produce byte-identical `bss2-model-v1` artifacts (and byte-identical
+/// stdout), while a different seed trains different weights.
+#[test]
+fn train_cli_artifact_is_deterministic_per_seed() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let out = |tag: &str| {
+        std::env::temp_dir().join(format!("bss2_train_determinism_{tag}.json"))
+    };
+    let run = |seed: &str, out_path: &std::path::Path| {
+        std::process::Command::new(exe)
+            .args([
+                "train", "--epochs", "2", "--batch", "8", "--windows", "24",
+                "--val-n", "4", "--seed", seed, "--out",
+            ])
+            .arg(out_path)
+            .output()
+            .expect("repro train runs")
+    };
+    let (pa, pb, pc) = (out("a"), out("b"), out("c"));
+    let a = run("5", &pa);
+    assert!(
+        a.status.success(),
+        "train run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let b = run("5", &pb);
+    assert!(b.status.success());
+    assert_eq!(
+        a.stdout, b.stdout,
+        "training summary must be byte-identical across runs"
+    );
+    let bytes_a = std::fs::read(&pa).expect("artifact a written");
+    let bytes_b = std::fs::read(&pb).expect("artifact b written");
+    assert!(!bytes_a.is_empty());
+    assert_eq!(bytes_a, bytes_b, "same seed must train identical artifacts");
+    // The artifact parses and is stamped with a real substrate.
+    let j = Json::parse(std::str::from_utf8(&bytes_a).unwrap()).unwrap();
+    assert_eq!(
+        j.get("format").and_then(|v| v.as_str()),
+        Some("bss2-model-v1"),
+        "{j}"
+    );
+    assert_ne!(
+        j.get("substrate").and_then(|v| v.as_str()),
+        Some("0000000000000000"),
+        "training must stamp the substrate it ran against"
+    );
+    let c = run("6", &pc);
+    assert!(c.status.success());
+    let bytes_c = std::fs::read(&pc).expect("artifact c written");
+    assert_ne!(bytes_a, bytes_c, "different seed, different artifact");
+    for p in [pa, pb, pc] {
+        let _ = std::fs::remove_file(p);
+    }
+}

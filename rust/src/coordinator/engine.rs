@@ -69,6 +69,21 @@ pub const CONTROL_OVERHEAD_US: f64 = 128.0;
 /// lets *transient* deaths recover under the fleet's re-admission probes.
 pub const FAULT_ATTEMPT_COST_US: u64 = 300;
 
+/// Per-pass gradient tap captured by [`Engine::classify_batch_taps`]: the
+/// activation vector the synapse drivers actually saw (post event
+/// generation, 5-bit) and the ADC readout the digital chain consumed
+/// (post compensation).  These two vectors per pass are exactly what the
+/// straight-through estimator in `train::ste` needs to back-propagate
+/// through the quantised forward — the chip-in-the-loop boundary of
+/// hxtorch (arXiv:2006.13138).
+#[derive(Debug, Clone, Default)]
+pub struct PassTap {
+    /// 5-bit input activations, `[K_LOGICAL]` (row order of the half).
+    pub x: Vec<u8>,
+    /// ADC readout after compensation, `[N_COLS]`.
+    pub adc: Vec<i32>,
+}
+
 /// Which VMM implementation executes the analog passes.
 pub enum Backend {
     Pjrt { vmm: VmmExecutable, staged: Vec<StagedPass> },
@@ -161,6 +176,10 @@ pub struct Engine {
     /// segment currently executes.
     batch_noise: Option<Vec<Vec<Vec<f32>>>>,
     batch_sample: usize,
+    /// Gradient taps, armed by the `*_taps` entry points: `run_vmm`
+    /// records each pass's input activations and ADC readout per sample.
+    /// `None` (the serving default) costs one branch per pass.
+    taps: Option<Vec<[PassTap; 3]>>,
     noise_rng: SplitMix64,
     noise_sigma: f64,
     // Calibration & drift state (calib subsystem)
@@ -317,6 +336,7 @@ impl Engine {
             half1_pass: usize::MAX,
             batch_noise: None,
             batch_sample: 0,
+            taps: None,
             noise_rng: SplitMix64::new(cfg.noise_seed),
             noise_sigma,
             chip_ordinal: cfg.chip,
@@ -446,6 +466,67 @@ impl Engine {
         self.reset_accounting();
         self.begin_faulted_program(false)?;
         self.run_stream(acts)
+    }
+
+    /// [`classify_batch`](Engine::classify_batch) with gradient taps: each
+    /// sample's per-pass input activations and ADC readouts are recorded
+    /// for the straight-through estimator (`train::ste`).  Numerically
+    /// identical to `classify_batch` — the taps are copies of values the
+    /// forward pass computes anyway.
+    pub fn classify_batch_taps(
+        &mut self,
+        traces: &[Trace],
+    ) -> anyhow::Result<(Vec<Inference>, Vec<[PassTap; 3]>)> {
+        self.taps = Some(vec![Default::default(); traces.len()]);
+        let run = self.classify_batch(traces);
+        let taps = self.taps.take().expect("armed above");
+        Ok((run?, taps))
+    }
+
+    /// [`classify_acts`](Engine::classify_acts) with gradient taps (the
+    /// single-sample variant `tests` use for finite-difference checks).
+    pub fn classify_acts_taps(
+        &mut self,
+        acts: &[i32],
+    ) -> anyhow::Result<(Inference, [PassTap; 3])> {
+        // The sequential path never touches `batch_sample`; pin it to the
+        // single tap slot armed here.
+        self.batch_sample = 0;
+        self.taps = Some(vec![Default::default()]);
+        let run = self.classify_acts(acts);
+        let mut taps = self.taps.take().expect("armed above");
+        Ok((run?, taps.pop().expect("one sample")))
+    }
+
+    /// Rewrite the serving weights in place (the training loop's
+    /// per-step update path, and `serve`'s trained-artifact adoption).
+    /// Native backend only — the PJRT artifact serves its staged weights,
+    /// same refusal convention as [`apply_profile`](Engine::apply_profile).
+    ///
+    /// Half 0 (conv) is reloaded immediately; the shared half 1 is marked
+    /// non-resident so the next program's first fc pass rewrites it (and
+    /// charges its reconfiguration, as always).  The explicit half-0 write
+    /// consumes chip time like any other weight write — training time
+    /// ages the drift field, which is the point of in-the-loop training.
+    pub fn load_model_weights(
+        &mut self,
+        pass_weights: &[mapping::PhysMatrix; 3],
+        scales: [f32; 3],
+    ) -> anyhow::Result<()> {
+        match &mut self.backend {
+            Backend::Native { halves } => {
+                halves[0].load_weights(&mapping::to_i8(&pass_weights[0]));
+            }
+            Backend::Pjrt { .. } => anyhow::bail!(
+                "weight reload requires the native backend (the PJRT \
+                 artifact serves its staged weights)"
+            ),
+        }
+        self.model.pass_weights = pass_weights.clone();
+        self.model.scales = scales;
+        self.half1_pass = usize::MAX;
+        self.advance_chip_time_us(c::WEIGHT_WRITE_US as u64);
+        Ok(())
     }
 
     /// Per-stage split of the *current* program's simulated time [µs]:
@@ -973,6 +1054,16 @@ impl ChipOps for Engine {
             // per-column gain/offset right after the parallel readout.
             corr[h].apply_i32(&mut out);
         }
+        if let Some(taps) = self.taps.as_mut() {
+            // Gradient tap: what the synapse drivers saw and what the
+            // digital chain will consume (post compensation) — the STE
+            // boundary.  `batch_sample` is 0 on the sequential path
+            // (pinned by `classify_acts_taps`).
+            taps[self.batch_sample][pass] = PassTap {
+                x: x.iter().map(|&v| v as u8).collect(),
+                adc: out.clone(),
+            };
+        }
         self.adc_latch[h] = out;
         self.queued[h].fill(0.0);
         self.chip_stats.vmm_cycles += 1;
@@ -1174,6 +1265,68 @@ mod tests {
             one.energy.total_j(),
             "energy drifted"
         );
+    }
+
+    #[test]
+    fn taps_capture_the_forward_pass_and_change_nothing() {
+        let mk = || {
+            Engine::native(
+                tiny_model(),
+                EngineConfig { use_pjrt: false, ..Default::default() },
+            )
+        };
+        let traces: Vec<_> = (0..3)
+            .map(|i| crate::ecg::gen::generate_trace(30 + i, i % 2 == 0, 1.0))
+            .collect();
+        let plain = mk().classify_batch(&traces).unwrap();
+        let (tapped, taps) = mk().classify_batch_taps(&traces).unwrap();
+        assert_eq!(taps.len(), traces.len());
+        for (a, b) in plain.iter().zip(&tapped) {
+            assert_eq!(a.pred, b.pred, "taps must not perturb the forward");
+            assert_eq!(a.scores, b.scores);
+        }
+        for t in &taps {
+            for tap in t.iter() {
+                assert_eq!(tap.x.len(), c::K_LOGICAL);
+                assert_eq!(tap.adc.len(), c::N_COLS);
+                assert!(tap.x.iter().all(|&v| v <= c::X_MAX as u8));
+            }
+            // The pass-0 tap is the preprocessed activation vector.
+            assert!(t[0].x[..c::MODEL_IN].iter().any(|&v| v > 0));
+        }
+        // The sequential acts variant agrees with `classify_acts`.
+        let acts: Vec<i32> = crate::fpga::preprocess::preprocess(
+            &traces[0].samples,
+        )
+        .iter()
+        .map(|&a| a as i32)
+        .collect();
+        let one = mk().classify_acts(&acts).unwrap();
+        let (inf, tap) = mk().classify_acts_taps(&acts).unwrap();
+        assert_eq!(inf.scores, one.scores);
+        assert_eq!(tap[2].adc.len(), c::N_COLS);
+    }
+
+    #[test]
+    fn load_model_weights_matches_fresh_engine() {
+        let cfg = || EngineConfig {
+            use_pjrt: false,
+            noise_off: true,
+            ..Default::default()
+        };
+        let mut eng = Engine::native(tiny_model(), cfg());
+        let trace = crate::ecg::gen::generate_trace(31, true, 1.0);
+        let _ = eng.classify(&trace).unwrap();
+        let other = TrainedModel::synthetic(3);
+        let t0 = eng.chip_time_us();
+        eng.load_model_weights(&other.pass_weights, other.scales).unwrap();
+        assert!(eng.chip_time_us() > t0, "weight write consumes chip time");
+        let after = eng.classify(&trace).unwrap();
+        // The reloaded engine serves exactly what a fresh engine built
+        // from the same model serves (noise off ⇒ comparable).
+        let fresh = Engine::native(other, cfg()).classify(&trace).unwrap();
+        assert_eq!(after.scores, fresh.scores);
+        assert_eq!(after.pred, fresh.pred);
     }
 
     /// Acceptance property: `classify_batch(B)[i]` is bit-identical to

@@ -29,6 +29,10 @@
 //!   `journal` wire commands and `repro bench`.
 //! * [`ecg`] — synthetic ECG: windowed generator, continuous
 //!   episode-labeled stream source, binary dataset reader.
+//! * [`train`] — hardware-in-the-loop training: mini-batch loop over the
+//!   simulated substrate, straight-through estimator across quantisation
+//!   and ADC saturation, f32 shadow weights, versioned `bss2-model-v1`
+//!   artifacts (`repro train`).
 //! * [`baselines`] — comparison platforms of paper §V.
 //! * [`util`] — hand-rolled substrate (JSON, PRNG, CLI, bench, propcheck).
 
@@ -44,4 +48,5 @@ pub mod nn;
 pub mod obs;
 pub mod power;
 pub mod runtime;
+pub mod train;
 pub mod util;

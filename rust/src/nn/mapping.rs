@@ -84,6 +84,59 @@ pub fn pack_fc2(w2: &[f32]) -> PhysMatrix {
     m
 }
 
+/// Recover the logical conv weights `[C_OUT][C_IN][K]` from a
+/// Toeplitz-packed matrix (inverse of [`pack_conv`]).  Every interior
+/// position carries a full copy of the kernel; position 4 is the first
+/// one whose entire receptive field `start..start+K` lies inside
+/// `0..POOLED_LEN` (start = 4·2 − 3 = 5), so each tap reads back from a
+/// placed cell.
+pub fn unpack_conv(m: &PhysMatrix) -> Vec<f32> {
+    assert_eq!(m.len(), c::K_LOGICAL * c::N_COLS, "phys matrix shape");
+    let p = 4usize;
+    let start = p * c::CONV_STRIDE - c::CONV_PAD;
+    debug_assert!(start + c::CONV_KERNEL <= c::POOLED_LEN);
+    let mut wc =
+        vec![0.0f32; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL];
+    for o in 0..c::CONV_CHANNELS {
+        let col = p * c::CONV_CHANNELS + o;
+        for ch in 0..c::ECG_CHANNELS {
+            for t in 0..c::CONV_KERNEL {
+                let row = ch * c::POOLED_LEN + start + t;
+                wc[(o * c::ECG_CHANNELS + ch) * c::CONV_KERNEL + t] =
+                    m[row * c::N_COLS + col];
+            }
+        }
+    }
+    wc
+}
+
+/// Recover the logical fc1 weights `[K_LOGICAL][FC1_OUT]` (inverse of
+/// [`pack_fc1`]'s two-block placement).
+pub fn unpack_fc1(m: &PhysMatrix) -> Vec<f32> {
+    assert_eq!(m.len(), c::K_LOGICAL * c::N_COLS, "phys matrix shape");
+    let mut w1 = vec![0.0f32; c::K_LOGICAL * c::FC1_OUT];
+    for r in 0..c::K_LOGICAL {
+        let block = if r < c::K_SIGNED { 0 } else { c::FC1_OUT };
+        for j in 0..c::FC1_OUT {
+            w1[r * c::FC1_OUT + j] = m[r * c::N_COLS + block + j];
+        }
+    }
+    w1
+}
+
+/// Recover the logical fc2 weights `[FC1_OUT][FC2_OUT]` (inverse of
+/// [`pack_fc2`]'s right-most column block).
+pub fn unpack_fc2(m: &PhysMatrix) -> Vec<f32> {
+    assert_eq!(m.len(), c::K_LOGICAL * c::N_COLS, "phys matrix shape");
+    let mut w2 = vec![0.0f32; c::FC1_OUT * c::FC2_OUT];
+    for r in 0..c::FC1_OUT {
+        for j in 0..c::FC2_OUT {
+            w2[r * c::FC2_OUT + j] = m[r * c::N_COLS + 2 * c::FC1_OUT + j];
+        }
+    }
+    w2
+}
+
 /// Convert a physical matrix to the i8 grid for the native array model.
 pub fn to_i8(m: &PhysMatrix) -> Vec<i8> {
     m.iter()
@@ -173,6 +226,16 @@ mod tests {
                 assert_eq!(m[r * c::N_COLS + col], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn unpack_inverts_pack() {
+        let wc = rand_w(c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL, 11);
+        let w1 = rand_w(c::K_LOGICAL * c::FC1_OUT, 12);
+        let w2 = rand_w(c::FC1_OUT * c::FC2_OUT, 13);
+        assert_eq!(unpack_conv(&pack_conv(&wc)), wc);
+        assert_eq!(unpack_fc1(&pack_fc1(&w1)), w1);
+        assert_eq!(unpack_fc2(&pack_fc2(&w2)), w2);
     }
 
     #[test]

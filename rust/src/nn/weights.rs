@@ -93,6 +93,62 @@ impl TrainedModel {
         })
     }
 
+    /// Serialise to the same `bss2-weights-v1` JSON that [`parse`]
+    /// consumes (the writer `load`/`parse` never had — the training loop
+    /// emits its artifact through this).  Physical matrices are unpacked
+    /// back to *logical* weights (`mapping::unpack_*`), so the file stays
+    /// interchangeable with the python exporter's layout; packing on load
+    /// reproduces the matrices bit-identically (`unpack ∘ pack = id`).
+    /// f32 values survive the JSON round trip exactly (shortest-roundtrip
+    /// printing, same guarantee the calibration profiles rely on).
+    ///
+    /// [`parse`]: TrainedModel::parse
+    pub fn to_json(&self) -> String {
+        let vec_f32 = |v: &[f32]| {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("format".into(), Json::Str("bss2-weights-v1".into()));
+        m.insert(
+            "wc".into(),
+            vec_f32(&mapping::unpack_conv(&self.pass_weights[0])),
+        );
+        m.insert(
+            "w1".into(),
+            vec_f32(&mapping::unpack_fc1(&self.pass_weights[1])),
+        );
+        m.insert(
+            "w2".into(),
+            vec_f32(&mapping::unpack_fc2(&self.pass_weights[2])),
+        );
+        m.insert(
+            "scales".into(),
+            vec_f32(&[self.scales[0], self.scales[1], self.scales[2]]),
+        );
+        let flat = |halves: &[Vec<f32>; 2]| {
+            let mut v = halves[0].clone();
+            v.extend_from_slice(&halves[1]);
+            v
+        };
+        m.insert("gain".into(), vec_f32(&flat(&self.gain)));
+        m.insert("offset".into(), vec_f32(&flat(&self.offset)));
+        m.insert("noise_sigma".into(), Json::Num(self.noise_sigma));
+        if !self.train_metrics.is_empty() {
+            let metrics = self
+                .train_metrics
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect();
+            m.insert("metrics".into(), Json::Obj(metrics));
+        }
+        Json::Obj(m).to_string()
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
     /// Deterministic synthetic model for tests, benches, and fleet
     /// bring-up without trained artifacts: on-grid (6-bit) weights from a
     /// seeded stream, nominal calibration, the paper's noise sigma.  Not a
@@ -228,6 +284,35 @@ mod tests {
         }
         let c2 = TrainedModel::synthetic(10);
         assert_ne!(a.pass_weights[0], c2.pass_weights[0], "seed matters");
+    }
+
+    #[test]
+    fn to_json_parse_roundtrip_is_exact() {
+        let mut m = TrainedModel::synthetic(21);
+        m.train_metrics.insert("val_det".into(), 0.875);
+        let q = TrainedModel::parse(&m.to_json()).unwrap();
+        for p in 0..3 {
+            assert_eq!(
+                q.pass_weights[p], m.pass_weights[p],
+                "pass {p} weights must roundtrip bit-identically"
+            );
+        }
+        assert_eq!(q.scales, m.scales, "thresholds/scales must roundtrip");
+        assert_eq!(q.gain, m.gain);
+        assert_eq!(q.offset, m.offset);
+        assert_eq!(q.noise_sigma, m.noise_sigma);
+        assert_eq!(q.train_metrics, m.train_metrics);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = TrainedModel::energy_detector();
+        let path = std::env::temp_dir().join("bss2_weights_writer_test.json");
+        m.save(&path).unwrap();
+        let q = TrainedModel::load(&path).unwrap();
+        assert_eq!(q.pass_weights[0], m.pass_weights[0]);
+        assert_eq!(q.scales, m.scales);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -67,6 +67,12 @@ impl ArtifactDir {
         self.path(&format!("calib_chip{chip}.json"))
     }
 
+    /// In-the-loop trained model artifact (`repro train` output,
+    /// `bss2-model-v1`): weights + substrate stamp + training config.
+    pub fn trained_model(&self) -> PathBuf {
+        self.path("model_trained.json")
+    }
+
     pub fn exists(&self) -> bool {
         self.manifest().exists() && self.vmm_hlo().exists()
     }
@@ -174,6 +180,10 @@ mod tests {
         assert_eq!(
             d.calib_profile(3),
             PathBuf::from("/tmp/x/calib_chip3.json")
+        );
+        assert_eq!(
+            d.trained_model(),
+            PathBuf::from("/tmp/x/model_trained.json")
         );
     }
 

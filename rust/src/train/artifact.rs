@@ -1,0 +1,317 @@
+//! The versioned trained-model artifact (`bss2-model-v1`).
+//!
+//! Wraps the `bss2-weights-v1` weight payload with the provenance the
+//! serving path needs to decide whether the model is *applicable*: the
+//! [`substrate_hash`](crate::calib::profile::substrate_hash) of the
+//! silicon it was trained against, the chip ordinal, the chip-time age,
+//! and the full training configuration (so a run is reproducible from
+//! its artifact alone).  Policy mirrors `bss2-calib-v2`: a
+//! different-format artifact is a *typed* error loaders may skip; a
+//! foreign-substrate artifact is warn-skipped by `serve` rather than
+//! silently served on silicon it was never trained for.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::calib::drift::DriftParams;
+use crate::coordinator::engine::EngineConfig;
+use crate::nn::weights::TrainedModel;
+use crate::util::json::Json;
+
+/// Artifact format tag (bump on layout changes).
+pub const MODEL_FORMAT: &str = "bss2-model-v1";
+
+/// [`ModelArtifact::parse`] error for a well-formed artifact of a
+/// *different* format version — skippable, unlike corruption.
+#[derive(Debug)]
+pub struct UnsupportedFormat(pub String);
+
+impl std::fmt::Display for UnsupportedFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unsupported model artifact format `{}` (expected {})",
+            self.0, MODEL_FORMAT
+        )
+    }
+}
+
+impl std::error::Error for UnsupportedFormat {}
+
+/// A trained model plus the provenance of its training run.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    /// Substrate identity the model was trained against (0 = ideal).
+    pub substrate: u64,
+    /// Fleet ordinal of the training chip.
+    pub chip: usize,
+    /// Chip time the training run consumed [µs].
+    pub chip_time_us: u64,
+    /// Training seed (data order, init, validation draw).
+    pub seed: u64,
+    /// The *final* engine FPN seed (post `for_chip` split) — reusing it
+    /// verbatim reconstructs the training silicon exactly.
+    pub fpn_seed: Option<u64>,
+    /// Whether drift advanced during training.
+    pub drift: bool,
+    /// Whether a fault plan was armed as augmentation.
+    pub augmented: bool,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub temperature: f64,
+    /// Final training metrics (validation rates, loss, step cost).
+    pub metrics: BTreeMap<String, f64>,
+    /// The trained weights themselves (`bss2-weights-v1` payload).
+    pub model: TrainedModel,
+}
+
+impl ModelArtifact {
+    pub fn to_json(&self) -> String {
+        let hex = |v: u64| Json::Str(format!("{v:016x}"));
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Str(MODEL_FORMAT.into()));
+        // Hex strings, not numbers: u64 identities do not survive the
+        // f64 round-trip a JSON number would impose.
+        m.insert("substrate".into(), hex(self.substrate));
+        m.insert("chip".into(), Json::Num(self.chip as f64));
+        m.insert("chip_time_us".into(), Json::Num(self.chip_time_us as f64));
+        m.insert("seed".into(), hex(self.seed));
+        m.insert(
+            "fpn_seed".into(),
+            match self.fpn_seed {
+                Some(s) => hex(s),
+                None => Json::Null,
+            },
+        );
+        m.insert("drift".into(), Json::Bool(self.drift));
+        m.insert("augmented".into(), Json::Bool(self.augmented));
+        m.insert("epochs".into(), Json::Num(self.epochs as f64));
+        m.insert("batch".into(), Json::Num(self.batch as f64));
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("momentum".into(), Json::Num(self.momentum));
+        m.insert("temperature".into(), Json::Num(self.temperature));
+        if !self.metrics.is_empty() {
+            let metrics = self
+                .metrics
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect();
+            m.insert("metrics".into(), Json::Obj(metrics));
+        }
+        let weights = Json::parse(&self.model.to_json())
+            .expect("TrainedModel::to_json emits valid JSON");
+        m.insert("weights".into(), weights);
+        Json::Obj(m).to_string()
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<ModelArtifact> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("model artifact: {e}"))?;
+        // Only a well-formed *string* tag can name another version; a
+        // wrong-typed `format` is corruption and fails loudly.
+        let format = j
+            .req("format")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("format must be a string"))?;
+        if format != MODEL_FORMAT {
+            return Err(UnsupportedFormat(format.into()).into());
+        }
+        let uint = |key: &str| -> anyhow::Result<u64> {
+            j.req(key)?.as_uint().ok_or_else(|| {
+                anyhow::anyhow!("{key} must be a non-negative integer")
+            })
+        };
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+        };
+        let hex = |key: &str| -> anyhow::Result<u64> {
+            j.req(key)?
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{key} must be a hex identity string")
+                })
+        };
+        let boolean = |key: &str| -> anyhow::Result<bool> {
+            match j.req(key)? {
+                Json::Bool(b) => Ok(*b),
+                _ => anyhow::bail!("{key} must be a boolean"),
+            }
+        };
+        let fpn_seed = match j.req("fpn_seed")? {
+            Json::Null => None,
+            Json::Str(s) => Some(u64::from_str_radix(s, 16).map_err(|_| {
+                anyhow::anyhow!("fpn_seed must be a hex string or null")
+            })?),
+            _ => anyhow::bail!("fpn_seed must be a hex string or null"),
+        };
+        let mut metrics = BTreeMap::new();
+        if let Some(m) = j.get("metrics").and_then(|m| m.as_obj()) {
+            for (k, v) in m {
+                if let Some(x) = v.as_f64() {
+                    metrics.insert(k.clone(), x);
+                }
+            }
+        }
+        let model = TrainedModel::parse(&j.req("weights")?.to_string())?;
+        Ok(ModelArtifact {
+            substrate: hex("substrate")?,
+            chip: uint("chip")? as usize,
+            chip_time_us: uint("chip_time_us")?,
+            seed: hex("seed")?,
+            fpn_seed,
+            drift: boolean("drift")?,
+            augmented: boolean("augmented")?,
+            epochs: uint("epochs")? as usize,
+            batch: uint("batch")? as usize,
+            lr: num("lr")?,
+            momentum: num("momentum")?,
+            temperature: num("temperature")?,
+            metrics,
+            model,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ModelArtifact> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// The engine configuration that reconstructs the training substrate.
+    ///
+    /// The stamped `fpn_seed` is already the final per-chip value (the
+    /// trainer stamps it *after* `for_chip` splitting), so it is used
+    /// verbatim — do not split it again.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            use_pjrt: false,
+            chip: self.chip,
+            fpn_seed: self.fpn_seed,
+            drift: if self.drift {
+                Some(DriftParams::default())
+            } else {
+                None
+            },
+            ..EngineConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelArtifact {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("val_det".into(), 0.91);
+        metrics.insert("val_fp".into(), 0.07);
+        ModelArtifact {
+            substrate: 0xdead_beef_cafe_f00d,
+            chip: 3,
+            chip_time_us: 123_456,
+            seed: 42,
+            fpn_seed: Some(0xB55C2),
+            drift: true,
+            augmented: false,
+            epochs: 8,
+            batch: 16,
+            lr: 0.4,
+            momentum: 0.9,
+            temperature: 8.0,
+            metrics,
+            model: TrainedModel::synthetic(7),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let a = sample();
+        let b = ModelArtifact::parse(&a.to_json()).unwrap();
+        assert_eq!(b.substrate, a.substrate, "identity must roundtrip");
+        assert_eq!(b.chip, a.chip);
+        assert_eq!(b.chip_time_us, a.chip_time_us);
+        assert_eq!(b.seed, a.seed);
+        assert_eq!(b.fpn_seed, a.fpn_seed);
+        assert_eq!(b.drift, a.drift);
+        assert_eq!(b.augmented, a.augmented);
+        assert_eq!((b.epochs, b.batch), (a.epochs, a.batch));
+        assert_eq!((b.lr, b.momentum, b.temperature), (0.4, 0.9, 8.0));
+        assert_eq!(b.metrics, a.metrics);
+        for p in 0..3 {
+            assert_eq!(
+                b.model.pass_weights[p], a.model.pass_weights[p],
+                "pass {p} weights must roundtrip bit-exactly"
+            );
+        }
+        assert_eq!(b.model.scales, a.model.scales);
+    }
+
+    #[test]
+    fn none_fpn_seed_roundtrips() {
+        let mut a = sample();
+        a.fpn_seed = None;
+        let b = ModelArtifact::parse(&a.to_json()).unwrap();
+        assert_eq!(b.fpn_seed, None);
+        assert_eq!(b.engine_config().fpn_seed, None);
+    }
+
+    #[test]
+    fn engine_config_reconstructs_training_substrate() {
+        let a = sample();
+        let cfg = a.engine_config();
+        assert!(!cfg.use_pjrt, "training substrate is native-only");
+        assert_eq!(cfg.chip, 3);
+        assert_eq!(cfg.fpn_seed, Some(0xB55C2), "used verbatim, not re-split");
+        assert!(cfg.drift.is_some());
+    }
+
+    #[test]
+    fn parse_rejects_bad_format_and_types() {
+        let a = sample();
+        let stale = a.to_json().replace(MODEL_FORMAT, "bss2-model-v0");
+        let err = ModelArtifact::parse(&stale).unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedFormat>().is_some(), "{err}");
+        // Missing format is corruption, not another version.
+        let err = ModelArtifact::parse("{}").unwrap_err();
+        assert!(err.downcast_ref::<UnsupportedFormat>().is_none(), "{err}");
+        // Wrong-typed fields fail loudly.
+        for (key, bad) in [
+            ("format", Json::Num(42.0)),
+            ("drift", Json::Str("yes".into())),
+            ("substrate", Json::Num(1.0)),
+            ("fpn_seed", Json::Num(1.0)),
+            ("epochs", Json::Str("eight".into())),
+        ] {
+            let mut j = Json::parse(&a.to_json()).unwrap();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), bad);
+            }
+            let err = ModelArtifact::parse(&j.to_string()).unwrap_err();
+            assert!(
+                err.downcast_ref::<UnsupportedFormat>().is_none(),
+                "wrong-typed `{key}` must be corruption: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let a = sample();
+        let path = std::env::temp_dir().join("bss2_model_artifact_test.json");
+        a.save(&path).unwrap();
+        let b = ModelArtifact::load(&path).unwrap();
+        assert_eq!(b.substrate, a.substrate);
+        assert_eq!(b.model.pass_weights[1], a.model.pass_weights[1]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,128 @@
+//! Deterministic training data from the continuous ECG stream.
+//!
+//! Training windows are cut from a seeded [`ContinuousEcg`] episode
+//! stream (the same generator the serving path replays), labelled by the
+//! stream's own episode schedule via `afib_fraction`.  Validation uses
+//! `generate_trace` on a held-out seed range far from both the training
+//! stream and the accuracy-pin seeds (10_000/20_000), so the per-epoch
+//! metric is measured on rhythms the optimizer never saw.
+
+use crate::asic::consts as c;
+use crate::ecg::gen::{self, Trace};
+use crate::ecg::stream::{ContinuousEcg, EpisodeConfig};
+use crate::util::rng::SplitMix64;
+
+/// Held-out validation seed bases (sinus / afib).  Distinct from the
+/// training stream and from `tests/accuracy_regression.rs`'s pin seeds.
+pub const VAL_SINUS_BASE: u64 = 30_000;
+pub const VAL_AFIB_BASE: u64 = 40_000;
+
+/// Cut `n` labelled windows from a seeded continuous stream.
+///
+/// Windows hop by half a window; one is kept when the episode schedule
+/// covers ≥ 75 % of it with one rhythm (label 1 for afib, 0 for sinus).
+/// Mixed windows are dropped — the boundary is genuinely ambiguous.
+/// Deterministic per seed: same seed, same `n` → identical traces.
+pub fn stream_windows(seed: u64, n: usize) -> Vec<Trace> {
+    let cfg = EpisodeConfig {
+        lead_in_s: 16.0,
+        sinus_s: (16.0, 26.0),
+        afib_s: (16.0, 26.0),
+    };
+    let mut s = ContinuousEcg::new(seed, 1.0, cfg);
+    let mut raw: Vec<Vec<u16>> = vec![Vec::new(); c::ECG_CHANNELS];
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    let hop = c::ECG_WINDOW / 2;
+    while out.len() < n {
+        while raw[0].len() < start + c::ECG_WINDOW {
+            let chunk = s.next_chunk(4 * c::ECG_WINDOW);
+            for (buf, ch) in raw.iter_mut().zip(chunk) {
+                buf.extend(ch);
+            }
+        }
+        let frac = s.afib_fraction(start as u64, c::ECG_WINDOW as u64);
+        if !(0.25..=0.75).contains(&frac) {
+            let samples: Vec<Vec<u16>> = raw
+                .iter()
+                .map(|ch| ch[start..start + c::ECG_WINDOW].to_vec())
+                .collect();
+            out.push(Trace {
+                samples,
+                label: u8::from(frac > 0.75),
+            });
+        }
+        start += hop;
+    }
+    out
+}
+
+/// Held-out validation set: `per_class` traces per rhythm class,
+/// interleaved sinus/afib so truncation stays balanced.
+pub fn val_set(per_class: usize) -> Vec<Trace> {
+    let mut out = Vec::with_capacity(2 * per_class);
+    for i in 0..per_class {
+        out.push(gen::generate_trace(VAL_SINUS_BASE + i as u64, false, 1.0));
+        out.push(gen::generate_trace(VAL_AFIB_BASE + i as u64, true, 1.0));
+    }
+    out
+}
+
+/// Seeded Fisher–Yates shuffle of an index order (per-epoch data order).
+pub fn shuffle(order: &mut [usize], seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        order.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_windows_are_deterministic_and_labelled() {
+        let a = stream_windows(5, 12);
+        let b = stream_windows(5, 12);
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.samples, y.samples);
+            assert_eq!(x.label, y.label);
+        }
+        for t in &a {
+            assert_eq!(t.samples.len(), c::ECG_CHANNELS);
+            assert_eq!(t.samples[0].len(), c::ECG_WINDOW);
+        }
+        // The episode schedule alternates rhythms, so a modest harvest
+        // contains both classes.
+        assert!(a.iter().any(|t| t.label == 0), "sinus windows present");
+        assert!(a.iter().any(|t| t.label == 1), "afib windows present");
+        // A different seed cuts different signal.
+        let c2 = stream_windows(6, 12);
+        assert!(a.iter().zip(&c2).any(|(x, y)| x.samples != y.samples));
+    }
+
+    #[test]
+    fn val_set_is_balanced_and_off_pin_seeds() {
+        let v = val_set(4);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.iter().filter(|t| t.label == 1).count(), 4);
+        assert_eq!(v.iter().filter(|t| t.label == 0).count(), 4);
+    }
+
+    #[test]
+    fn shuffle_is_seeded_permutation() {
+        let mut a: Vec<usize> = (0..50).collect();
+        let mut b: Vec<usize> = (0..50).collect();
+        shuffle(&mut a, 9);
+        shuffle(&mut b, 9);
+        assert_eq!(a, b);
+        let mut c2: Vec<usize> = (0..50).collect();
+        shuffle(&mut c2, 10);
+        assert_ne!(a, c2);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,355 @@
+//! Hardware-in-the-loop training against the simulated analog substrate.
+//!
+//! The real BrainScaleS-2 flow does not train a model and hope it
+//! transfers: it trains *through* the hardware (hxtorch, arXiv
+//! 2006.13138; Weis et al., arXiv 2006.13177).  Forward passes execute
+//! on the chip — fixed-pattern noise, temporal noise, quantisation,
+//! drift and all — while the backward pass runs on the host against a
+//! straight-through surrogate.  The network thereby learns weights that
+//! are robust to the specific non-idealities of the silicon it will
+//! serve on, which is what lets the accuracy pin ratchet past the
+//! hand-built baselines.
+//!
+//! Module map:
+//!
+//! * [`shadow`] — f32 shadow weights, 6-bit projection, SGD-momentum.
+//! * [`ste`]    — straight-through estimator across the analog stack.
+//! * [`data`]   — seeded windows from [`ContinuousEcg`], held-out val.
+//! * [`artifact`] — the versioned `bss2-model-v1` artifact.
+//!
+//! The whole loop is deterministic per seed: data order, init, noise,
+//! drift and fault schedules all derive from explicit seeds, so two
+//! runs with the same [`TrainConfig`] produce byte-identical artifacts.
+//!
+//! [`ContinuousEcg`]: crate::ecg::stream::ContinuousEcg
+
+pub mod artifact;
+pub mod data;
+pub mod shadow;
+pub mod ste;
+
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::ecg::gen::Trace;
+use crate::fault::{FaultInjector, FaultPlan, FAULT_TAG};
+
+use artifact::ModelArtifact;
+use data::{shuffle, stream_windows, val_set};
+use shadow::{Momentum, ShadowWeights};
+use ste::{backward_logistic, Grads};
+
+/// Default FPN seed for training substrates.  Training against *some*
+/// fixed-pattern realisation (rather than the ideal substrate) is the
+/// point of in-the-loop training; serving reconstructs the same silicon
+/// from the artifact's stamped seed.
+pub const TRAIN_FPN_SEED: u64 = 0xB55C2;
+
+/// Seed-space splits so data, shuffling and init draw from independent
+/// streams of the one user-facing seed.
+const DATA_SPLIT: u64 = 0x5D17_A7A5_EC61_39D1;
+const SHUFFLE_SPLIT: u64 = 0x94D0_49BB_1331_11EB;
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Full configuration of a training run (everything the artifact needs
+/// to stamp for reproducibility).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    /// Training windows cut from the continuous stream.
+    pub windows: usize,
+    /// Held-out validation traces per rhythm class.
+    pub val_per_class: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    /// Logistic-loss temperature [score LSB per logit unit].
+    pub temperature: f64,
+    /// Master seed: init, data order, stream episodes.
+    pub seed: u64,
+    /// Per-pass analog scales served with the weights.
+    pub scales: [f32; 3],
+    /// Uniform init amplitude on the ±63 weight grid.
+    pub init_amp: f32,
+    /// Validation detection rate that counts as "target reached".
+    pub target_det: f64,
+    /// Validation false-positive ceiling for the target.
+    pub target_fp: f64,
+    /// Optional fault plan armed as training-time augmentation
+    /// (faulted batches are skipped, surviving ones see the faulted
+    /// analog state).
+    pub fault_plan: Option<FaultPlan>,
+    /// Substrate to train against.  Must be native; the default arms
+    /// [`TRAIN_FPN_SEED`] and drift so training sees realistic silicon.
+    pub engine: EngineConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 8,
+            batch: 16,
+            windows: 192,
+            val_per_class: 25,
+            lr: 0.4,
+            momentum: 0.9,
+            temperature: 8.0,
+            seed: 1,
+            scales: [0.2, 0.08, 0.1],
+            init_amp: 4.0,
+            target_det: 0.85,
+            target_fp: 0.15,
+            fault_plan: None,
+            engine: EngineConfig {
+                use_pjrt: false,
+                fpn_seed: Some(TRAIN_FPN_SEED),
+                drift: Some(Default::default()),
+                ..EngineConfig::default()
+            },
+        }
+    }
+}
+
+/// Per-run training telemetry (mirrored into the artifact's metrics).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean loss per epoch.
+    pub epoch_loss: Vec<f64>,
+    /// Validation (detection rate, false-positive rate) per epoch.
+    pub epoch_val: Vec<(f64, f64)>,
+    pub final_det: f64,
+    pub final_fp: f64,
+    /// First 1-based epoch whose validation met the target band.
+    pub epochs_to_target: Option<usize>,
+    /// Chip time per optimizer step [µs] (weight write + batch forward).
+    pub chip_us_per_step: f64,
+    pub steps: usize,
+    /// Batches lost to injected faults (augmentation mode).
+    pub skipped_batches: usize,
+    /// Training windows per class `[sinus, afib]`.
+    pub train_windows: [usize; 2],
+}
+
+/// A finished run: the servable artifact plus its telemetry.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub artifact: ModelArtifact,
+    pub report: TrainReport,
+}
+
+/// The mini-batch training loop.
+pub struct Trainer;
+
+impl Trainer {
+    /// Run a full training session.  Deterministic per [`TrainConfig`]:
+    /// identical configs produce byte-identical artifacts.
+    pub fn run(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
+        anyhow::ensure!(
+            !cfg.engine.use_pjrt,
+            "training requires the native backend (gradient taps and \
+             weight reload are not wired through PJRT)"
+        );
+        anyhow::ensure!(cfg.epochs >= 1, "need at least one epoch");
+        anyhow::ensure!(cfg.batch >= 1, "need a positive batch size");
+        anyhow::ensure!(cfg.windows >= 2, "need at least two windows");
+        anyhow::ensure!(cfg.val_per_class >= 1, "need validation traces");
+
+        let mut shadow = ShadowWeights::init(cfg.seed, cfg.init_amp);
+        let mut engine =
+            Engine::native(shadow.to_model(cfg.scales), cfg.engine.clone());
+        let mut augmented = false;
+        if let Some(plan) = &cfg.fault_plan {
+            if let Some(inj) = FaultInjector::from_plan(plan, cfg.engine.chip)
+            {
+                engine.arm_faults(inj);
+                augmented = true;
+            }
+        }
+
+        let train = stream_windows(cfg.seed ^ DATA_SPLIT, cfg.windows);
+        let val = val_set(cfg.val_per_class);
+        let n_afib = train.iter().filter(|t| t.label == 1).count();
+        let train_windows = [train.len() - n_afib, n_afib];
+
+        let mut opt = Momentum::new(cfg.lr as f32, cfg.momentum as f32);
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut report = TrainReport {
+            epoch_loss: Vec::with_capacity(cfg.epochs),
+            epoch_val: Vec::with_capacity(cfg.epochs),
+            final_det: 0.0,
+            final_fp: 1.0,
+            epochs_to_target: None,
+            chip_us_per_step: 0.0,
+            steps: 0,
+            skipped_batches: 0,
+            train_windows,
+        };
+        let mut train_chip_us = 0u64;
+
+        for epoch in 0..cfg.epochs {
+            shuffle(
+                &mut order,
+                cfg.seed ^ (epoch as u64).wrapping_mul(GOLDEN) ^ SHUFFLE_SPLIT,
+            );
+            let (mut loss_sum, mut loss_n) = (0.0f64, 0usize);
+            for chunk in order.chunks(cfg.batch) {
+                let model = shadow.to_model(cfg.scales);
+                engine
+                    .load_model_weights(&model.pass_weights, model.scales)?;
+                let traces: Vec<Trace> =
+                    chunk.iter().map(|&i| train[i].clone()).collect();
+                let t0 = engine.chip_time_us();
+                let (infs, taps) = match engine.classify_batch_taps(&traces) {
+                    Ok(out) => out,
+                    Err(e) if e.to_string().contains(FAULT_TAG) => {
+                        report.skipped_batches += 1;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                let q = shadow.quantised();
+                let mut grads = Grads::zero();
+                for ((inf, tap), trace) in
+                    infs.iter().zip(&taps).zip(&traces)
+                {
+                    loss_sum += backward_logistic(
+                        tap,
+                        &q,
+                        cfg.scales,
+                        inf.scores,
+                        trace.label,
+                        cfg.temperature as f32,
+                        &mut grads,
+                    );
+                    loss_n += 1;
+                }
+                grads.scale(1.0 / chunk.len() as f32);
+                opt.step(&mut shadow, &grads);
+                report.steps += 1;
+                train_chip_us += engine.chip_time_us() - t0;
+            }
+            report
+                .epoch_loss
+                .push(loss_sum / loss_n.max(1) as f64);
+
+            // Per-epoch validation on the freshly stepped weights.
+            let model = shadow.to_model(cfg.scales);
+            engine.load_model_weights(&model.pass_weights, model.scales)?;
+            let (det, fp) = validate(&mut engine, &val, cfg.batch)?;
+            report.epoch_val.push((det, fp));
+            if report.epochs_to_target.is_none()
+                && det >= cfg.target_det
+                && fp <= cfg.target_fp
+            {
+                report.epochs_to_target = Some(epoch + 1);
+            }
+            log::info!(
+                "train: epoch {}/{}: loss {:.4} val det {:.3} fp {:.3}",
+                epoch + 1,
+                cfg.epochs,
+                report.epoch_loss[epoch],
+                det,
+                fp
+            );
+        }
+
+        let (final_det, final_fp) =
+            *report.epoch_val.last().expect("epochs >= 1");
+        report.final_det = final_det;
+        report.final_fp = final_fp;
+        report.chip_us_per_step =
+            train_chip_us as f64 / report.steps.max(1) as f64;
+
+        let mut model = shadow.to_model(cfg.scales);
+        let metrics = [
+            ("val_det", final_det),
+            ("val_fp", final_fp),
+            ("loss_final", *report.epoch_loss.last().expect("epochs >= 1")),
+            (
+                "epochs_to_target",
+                report.epochs_to_target.map_or(-1.0, |e| e as f64),
+            ),
+            ("chip_us_per_step", report.chip_us_per_step),
+            ("steps", report.steps as f64),
+            ("skipped_batches", report.skipped_batches as f64),
+            ("windows_sinus", train_windows[0] as f64),
+            ("windows_afib", train_windows[1] as f64),
+        ];
+        for (k, v) in metrics {
+            model.train_metrics.insert(k.into(), v);
+        }
+
+        let artifact = ModelArtifact {
+            substrate: engine
+                .substrate_hash()
+                .expect("native backend always has a substrate identity"),
+            chip: cfg.engine.chip,
+            chip_time_us: engine.chip_time_us(),
+            seed: cfg.seed,
+            fpn_seed: cfg.engine.fpn_seed,
+            drift: cfg.engine.drift.is_some(),
+            augmented,
+            epochs: cfg.epochs,
+            batch: cfg.batch,
+            lr: cfg.lr,
+            momentum: cfg.momentum,
+            temperature: cfg.temperature,
+            metrics: model.train_metrics.clone(),
+            model,
+        };
+        Ok(TrainOutcome { artifact, report })
+    }
+}
+
+/// Detection rate (afib recall) and false-positive rate (sinus windows
+/// flagged afib) over a labelled trace set.  Faulted batches are skipped
+/// — the rates are over the traces that actually classified.
+fn validate(
+    engine: &mut Engine,
+    val: &[Trace],
+    batch: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let (mut det_hit, mut det_n) = (0usize, 0usize);
+    let (mut fp_hit, mut fp_n) = (0usize, 0usize);
+    for chunk in val.chunks(batch.max(1)) {
+        let infs = match engine.classify_batch(chunk) {
+            Ok(infs) => infs,
+            Err(e) if e.to_string().contains(FAULT_TAG) => continue,
+            Err(e) => return Err(e),
+        };
+        for (inf, trace) in infs.iter().zip(chunk) {
+            if trace.label == 1 {
+                det_n += 1;
+                det_hit += usize::from(inf.pred == 1);
+            } else {
+                fp_n += 1;
+                fp_hit += usize::from(inf.pred == 1);
+            }
+        }
+    }
+    Ok((
+        det_hit as f64 / det_n.max(1) as f64,
+        fp_hit as f64 / fp_n.max(1) as f64,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_pjrt_substrate() {
+        let cfg = TrainConfig {
+            engine: EngineConfig::default(), // use_pjrt: true
+            ..TrainConfig::default()
+        };
+        let err = Trainer::run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("native backend"), "{err}");
+    }
+
+    #[test]
+    fn default_config_arms_realistic_substrate() {
+        let cfg = TrainConfig::default();
+        assert!(!cfg.engine.use_pjrt);
+        assert_eq!(cfg.engine.fpn_seed, Some(TRAIN_FPN_SEED));
+        assert!(cfg.engine.drift.is_some());
+    }
+}

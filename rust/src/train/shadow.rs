@@ -1,0 +1,184 @@
+//! Host-side shadow weights and the optimizer that moves them.
+//!
+//! The chip only ever sees 6-bit weights; the learning signal is far
+//! finer-grained than one weight LSB per step.  Hardware-in-the-loop
+//! training (hxtorch, arXiv:2006.13138) therefore keeps a full-precision
+//! *shadow* copy of every logical weight on the host: forward passes run
+//! on the quantised projection ([`ShadowWeights::quantised`] →
+//! [`ShadowWeights::to_model`]), gradients accumulate into the f32
+//! shadow, and the projection is rewritten onto the chip each step
+//! (`Engine::load_model_weights`).  Rounding is treated as identity by
+//! the straight-through estimator in [`super::ste`].
+
+use crate::asic::consts as c;
+use crate::nn::mapping;
+use crate::nn::weights::TrainedModel;
+use crate::util::rng::SplitMix64;
+
+/// Logical-layout f32 weights (same shapes the `weights.json` exporter
+/// uses: conv `[C_OUT][C_IN][K]`, fc1 `[K_LOGICAL][FC1_OUT]`, fc2
+/// `[FC1_OUT][FC2_OUT]`).
+#[derive(Debug, Clone)]
+pub struct ShadowWeights {
+    pub wc: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+/// The quantised (on-grid) projection the forward pass executes — also
+/// the weights the straight-through estimator differentiates through
+/// when it back-propagates activations.
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    pub wc: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+/// Project one shadow value onto the 6-bit synapse grid.
+#[inline]
+fn quantise(v: f32) -> f32 {
+    v.round().clamp(-(c::W_MAX as f32), c::W_MAX as f32)
+}
+
+impl ShadowWeights {
+    /// Seeded uniform init in `[-amp, amp]` per logical weight.  Small
+    /// relative to the ±63 grid: the first quantised projections carry a
+    /// few LSB of structure, enough to break symmetry without driving
+    /// any ADC column into its rail before training starts.
+    pub fn init(seed: u64, amp: f32) -> ShadowWeights {
+        let mut rng = SplitMix64::new(seed);
+        let mut draw = |n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|_| rng.uniform(-(amp as f64), amp as f64) as f32)
+                .collect()
+        };
+        ShadowWeights {
+            wc: draw(c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL),
+            w1: draw(c::K_LOGICAL * c::FC1_OUT),
+            w2: draw(c::FC1_OUT * c::FC2_OUT),
+        }
+    }
+
+    /// The on-grid projection the chip executes.
+    pub fn quantised(&self) -> QuantWeights {
+        QuantWeights {
+            wc: self.wc.iter().map(|&v| quantise(v)).collect(),
+            w1: self.w1.iter().map(|&v| quantise(v)).collect(),
+            w2: self.w2.iter().map(|&v| quantise(v)).collect(),
+        }
+    }
+
+    /// Pack the quantised projection into a servable model (nominal
+    /// calibration vectors — under an `fpn_seed` the engine draws its own
+    /// silicon, and without one nominal vectors mean an ideal substrate).
+    pub fn to_model(&self, scales: [f32; 3]) -> TrainedModel {
+        let q = self.quantised();
+        TrainedModel {
+            pass_weights: [
+                mapping::pack_conv(&q.wc),
+                mapping::pack_fc1(&q.w1),
+                mapping::pack_fc2(&q.w2),
+            ],
+            scales,
+            gain: [vec![1.0; c::N_COLS], vec![1.0; c::N_COLS]],
+            offset: [vec![0.0; c::N_COLS], vec![0.0; c::N_COLS]],
+            noise_sigma: c::NOISE_SIGMA,
+            train_metrics: Default::default(),
+        }
+    }
+}
+
+/// SGD with momentum over the shadow weights, with per-layer RMS
+/// gradient normalisation.  The three layers sit behind very different
+/// effective gains (each analog stage multiplies by its `scale` and
+/// requantises), so raw gradient magnitudes differ by orders of
+/// magnitude between conv and fc2; normalising each layer's gradient to
+/// unit RMS makes `lr` mean "weight-grid units per step" uniformly —
+/// the robust choice on a ±63 integer grid.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    lr: f32,
+    mu: f32,
+    vc: Vec<f32>,
+    v1: Vec<f32>,
+    v2: Vec<f32>,
+}
+
+impl Momentum {
+    pub fn new(lr: f32, mu: f32) -> Momentum {
+        Momentum {
+            lr,
+            mu,
+            vc: vec![0.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL],
+            v1: vec![0.0; c::K_LOGICAL * c::FC1_OUT],
+            v2: vec![0.0; c::FC1_OUT * c::FC2_OUT],
+        }
+    }
+
+    fn layer(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+        let ms: f64 = g.iter().map(|&x| x as f64 * x as f64).sum::<f64>()
+            / g.len().max(1) as f64;
+        // A silent layer (all gradients masked) takes no step.
+        let s = if ms > 1e-24 { (1.0 / ms.sqrt()) as f32 } else { 0.0 };
+        for ((wi, vi), &gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+            *vi = mu * *vi - lr * gi * s;
+            *wi = (*wi + *vi).clamp(-(c::W_MAX as f32), c::W_MAX as f32);
+        }
+    }
+
+    /// One descent step from accumulated (batch-averaged) gradients.
+    pub fn step(&mut self, w: &mut ShadowWeights, g: &super::ste::Grads) {
+        Self::layer(&mut w.wc, &mut self.vc, &g.wc, self.lr, self.mu);
+        Self::layer(&mut w.w1, &mut self.v1, &g.w1, self.lr, self.mu);
+        Self::layer(&mut w.w2, &mut self.v2, &g.w2, self.lr, self.mu);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_seeded_and_bounded() {
+        let a = ShadowWeights::init(7, 4.0);
+        let b = ShadowWeights::init(7, 4.0);
+        assert_eq!(a.wc, b.wc);
+        assert_eq!(a.w1, b.w1);
+        assert_ne!(a.wc, ShadowWeights::init(8, 4.0).wc, "seed matters");
+        assert!(a.wc.iter().chain(&a.w1).chain(&a.w2).all(|v| v.abs() <= 4.0));
+    }
+
+    #[test]
+    fn quantised_projection_is_on_grid() {
+        let mut s = ShadowWeights::init(1, 4.0);
+        s.w2[0] = 70.0;
+        s.w2[1] = -2.4;
+        let q = s.quantised();
+        assert_eq!(q.w2[0], c::W_MAX as f32, "clamped to the grid");
+        assert_eq!(q.w2[1], -2.0, "rounded to the grid");
+        for v in q.wc.iter().chain(&q.w1).chain(&q.w2) {
+            assert!(*v == v.trunc() && v.abs() <= c::W_MAX as f32);
+        }
+        // The packed model passes the strict weights.json parser.
+        let m = s.to_model([0.2, 0.08, 0.1]);
+        assert!(crate::nn::weights::TrainedModel::parse(&m.to_json()).is_ok());
+    }
+
+    #[test]
+    fn momentum_moves_weights_toward_negative_gradient() {
+        let mut w = ShadowWeights::init(2, 0.0); // all zero
+        let mut opt = Momentum::new(0.5, 0.9);
+        let mut g = crate::train::ste::Grads::zero();
+        g.w2[3] = 1.0; // unit-RMS normalisation acts per layer
+        let before = w.w2[3];
+        opt.step(&mut w, &g);
+        assert!(w.w2[3] < before, "descends against the gradient");
+        // Momentum keeps moving with a zero gradient.
+        let pos = w.w2[3];
+        opt.step(&mut w, &crate::train::ste::Grads::zero());
+        assert!(w.w2[3] < pos, "momentum carries the step");
+        // And a silent layer never moves.
+        assert!(w.wc.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,277 @@
+//! Straight-through estimator across the analog substrate.
+//!
+//! The forward pass runs on the simulated chip; nothing in it is
+//! differentiable (6-bit weights, 5-bit activations, ADC saturation,
+//! integer requantisation).  The backward pass therefore differentiates
+//! a *surrogate*: each analog matmul is treated as the linear map
+//! `adc ≈ scale · Wᵠ x` through the quantised weights, with two masks
+//! applied where the hardware clips (hxtorch's approach, arXiv
+//! 2006.13138):
+//!
+//! * **rail** — an ADC column pinned at `ADC_MIN`/`ADC_MAX` passes no
+//!   gradient (saturated amplifier).
+//! * **requant** — the `Relu → >>RELU_SHIFT → clamp(0, X_MAX)` stage has
+//!   surrogate slope `1/2^RELU_SHIFT` on its linear segment and zero
+//!   outside it (straight-through across the floor rounding).
+//!
+//! Weight quantisation itself is straight-through: gradients land on the
+//! f32 shadow weights as if rounding were identity.
+//!
+//! Index conventions mirror `nn/mapping.rs` exactly — the gradient of a
+//! packed Toeplitz cell is accumulated onto its *logical* conv tap, once
+//! per replicated position.
+
+use crate::asic::consts as c;
+use crate::coordinator::engine::PassTap;
+
+use super::shadow::QuantWeights;
+
+/// Per-layer gradient accumulators in logical layout (same shapes as
+/// [`super::shadow::ShadowWeights`]).
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub wc: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+impl Grads {
+    pub fn zero() -> Grads {
+        Grads {
+            wc: vec![0.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL],
+            w1: vec![0.0; c::K_LOGICAL * c::FC1_OUT],
+            w2: vec![0.0; c::FC1_OUT * c::FC2_OUT],
+        }
+    }
+
+    /// Scale all accumulators (batch averaging).
+    pub fn scale(&mut self, s: f32) {
+        for g in self
+            .wc
+            .iter_mut()
+            .chain(self.w1.iter_mut())
+            .chain(self.w2.iter_mut())
+        {
+            *g *= s;
+        }
+    }
+}
+
+/// Saturation mask: a railed ADC column passes no gradient.
+#[inline]
+fn rail(adc: i32) -> f32 {
+    if adc > c::ADC_MIN && adc < c::ADC_MAX {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Surrogate slope of `relu(pre) >> RELU_SHIFT` clamped to `0..=X_MAX`,
+/// given the pre-activation and the 5-bit activation it produced.
+#[inline]
+fn requant(pre: i32, x: u8) -> f32 {
+    if pre > 0 && (x as i32) < c::X_MAX {
+        1.0 / (1 << c::RELU_SHIFT) as f32
+    } else {
+        0.0
+    }
+}
+
+/// Back-propagate a gradient on the two class scores through the three
+/// captured passes, accumulating weight gradients into `grads`.
+///
+/// `g_scores[q]` is ∂L/∂score(class q).  Scores average 5 fc2 columns
+/// with round-to-nearest; the surrogate treats the rounding as identity
+/// (slope 1/5 per column).
+pub fn backward_scores(
+    tap: &[PassTap; 3],
+    q: &QuantWeights,
+    scales: [f32; 3],
+    g_scores: [f32; 2],
+    grads: &mut Grads,
+) {
+    // --- output stage: scores → fc2 ADC columns (246..256) -----------
+    let mut g_adc2 = [0.0f32; c::FC2_OUT];
+    for (qi, ga) in g_adc2.iter_mut().enumerate() {
+        let cls = qi / (c::FC2_OUT / 2);
+        *ga = g_scores[cls] / (c::FC2_OUT / 2) as f32
+            * rail(tap[2].adc[2 * c::FC1_OUT + qi]);
+    }
+    if g_adc2.iter().all(|&g| g == 0.0) {
+        return;
+    }
+
+    // --- pass 2 (fc2): x2 = tap[2].x, w2 [FC1_OUT][FC2_OUT] ----------
+    let mut dx2 = vec![0.0f32; c::FC1_OUT];
+    for r in 0..c::FC1_OUT {
+        let x2 = tap[2].x[r] as f32;
+        let mut acc = 0.0f32;
+        for (j, &ga) in g_adc2.iter().enumerate() {
+            let g = ga * scales[2];
+            grads.w2[r * c::FC2_OUT + j] += g * x2;
+            acc += g * q.w2[r * c::FC2_OUT + j];
+        }
+        dx2[r] = acc;
+    }
+
+    // --- requant + partial-sum split back onto pass-1 ADC columns ----
+    // x2[j] came from relu-shift of psum[j] = adc1[j] + adc1[123+j].
+    let mut g_adc1 = vec![0.0f32; 2 * c::FC1_OUT];
+    for j in 0..c::FC1_OUT {
+        let pre = tap[1].adc[j] + tap[1].adc[c::FC1_OUT + j];
+        let g_ps = dx2[j] * requant(pre, tap[2].x[j]);
+        g_adc1[j] = g_ps * rail(tap[1].adc[j]);
+        g_adc1[c::FC1_OUT + j] = g_ps * rail(tap[1].adc[c::FC1_OUT + j]);
+    }
+
+    // --- pass 1 (fc1): x1 = tap[1].x, w1 [K_LOGICAL][FC1_OUT], two
+    // column blocks selected by the input row ------------------------
+    let mut dx1 = vec![0.0f32; c::K_LOGICAL];
+    for r in 0..c::K_LOGICAL {
+        let block = if r < c::K_SIGNED { 0 } else { c::FC1_OUT };
+        let x1 = tap[1].x[r] as f32;
+        let mut acc = 0.0f32;
+        for j in 0..c::FC1_OUT {
+            let g = g_adc1[block + j] * scales[1];
+            grads.w1[r * c::FC1_OUT + j] += g * x1;
+            acc += g * q.w1[r * c::FC1_OUT + j];
+        }
+        dx1[r] = acc;
+    }
+
+    // --- requant back onto pass-0 ADC columns ------------------------
+    let mut g_adc0 = vec![0.0f32; c::K_LOGICAL];
+    for (k, ga) in g_adc0.iter_mut().enumerate() {
+        let adc = tap[0].adc[k];
+        *ga = dx1[k] * requant(adc, tap[1].x[k]) * rail(adc);
+    }
+
+    // --- pass 0 (conv): mirror pack_conv's Toeplitz loops, folding
+    // each placed cell's gradient onto its logical tap ----------------
+    let x0 = &tap[0].x;
+    for p in 0..c::CONV_POSITIONS {
+        let start = p as isize * c::CONV_STRIDE as isize - c::CONV_PAD as isize;
+        for o in 0..c::CONV_CHANNELS {
+            let ga = g_adc0[p * c::CONV_CHANNELS + o];
+            if ga == 0.0 {
+                continue;
+            }
+            let g = ga * scales[0];
+            for ch in 0..c::ECG_CHANNELS {
+                for t in 0..c::CONV_KERNEL {
+                    let ti = start + t as isize;
+                    if ti >= 0 && (ti as usize) < c::POOLED_LEN {
+                        let row = ch * c::POOLED_LEN + ti as usize;
+                        grads.wc[(o * c::ECG_CHANNELS + ch) * c::CONV_KERNEL
+                            + t] += g * x0[row] as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Logistic loss on the score margin: `z = (s1 − s0)/T`,
+/// `p = σ(z)`, `L = −ln p(label)`.  Back-propagates through
+/// [`backward_scores`] and returns the loss value.
+pub fn backward_logistic(
+    tap: &[PassTap; 3],
+    q: &QuantWeights,
+    scales: [f32; 3],
+    scores: [f32; 2],
+    label: u8,
+    temperature: f32,
+    grads: &mut Grads,
+) -> f64 {
+    let z = ((scores[1] - scores[0]) / temperature) as f64;
+    let p = 1.0 / (1.0 + (-z).exp());
+    let y = label as f64;
+    let g = ((p - y) / temperature as f64) as f32;
+    backward_scores(tap, q, scales, [-g, g], grads);
+    let likelihood = if label == 1 { p } else { 1.0 - p };
+    -likelihood.max(1e-12).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A hand-made tap: every ADC in-range, every activation mid-range,
+    /// so every mask is open and the fc2 gradient has a closed form.
+    fn open_tap() -> [PassTap; 3] {
+        let mk = |x: u8, adc: i32| PassTap {
+            x: vec![x; c::K_LOGICAL],
+            adc: vec![adc; c::N_COLS],
+        };
+        // pass-1 psum = 5 + 5 = 10 > 0, activations 2 < X_MAX: open.
+        [mk(3, 5), mk(2, 5), mk(2, 5)]
+    }
+
+    fn unit_quant() -> QuantWeights {
+        QuantWeights {
+            wc: vec![1.0; c::CONV_CHANNELS * c::ECG_CHANNELS * c::CONV_KERNEL],
+            w1: vec![1.0; c::K_LOGICAL * c::FC1_OUT],
+            w2: vec![1.0; c::FC1_OUT * c::FC2_OUT],
+        }
+    }
+
+    #[test]
+    fn fc2_gradient_matches_closed_form() {
+        let tap = open_tap();
+        let mut grads = Grads::zero();
+        backward_scores(&tap, &unit_quant(), [0.2, 0.08, 0.1], [-1.0, 1.0], &mut grads);
+        // dw2[r, j] = g_scores[j/5]/5 · scale2 · x2[r]; x2 = 2.
+        let want = -1.0 / 5.0 * 0.1 * 2.0;
+        assert!((grads.w2[0] - want).abs() < 1e-6, "{} vs {want}", grads.w2[0]);
+        // Class-1 columns carry the opposite sign.
+        assert!((grads.w2[c::FC2_OUT - 1] + want).abs() < 1e-6);
+        // Gradient reached every layer.
+        assert!(grads.w1.iter().any(|&g| g != 0.0));
+        assert!(grads.wc.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn railed_outputs_pass_no_gradient() {
+        let mut tap = open_tap();
+        // Rail every fc2 output column.
+        for j in 0..c::FC2_OUT {
+            tap[2].adc[2 * c::FC1_OUT + j] = c::ADC_MAX;
+        }
+        let mut grads = Grads::zero();
+        backward_scores(&tap, &unit_quant(), [0.2, 0.08, 0.1], [-1.0, 1.0], &mut grads);
+        assert!(grads.wc.iter().all(|&g| g == 0.0));
+        assert!(grads.w1.iter().all(|&g| g == 0.0));
+        assert!(grads.w2.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn closed_requant_blocks_earlier_layers() {
+        let mut tap = open_tap();
+        // Saturated pass-1 activations: x2 at X_MAX closes the requant
+        // mask between fc1 and fc2; fc2 still gets a weight gradient.
+        tap[2].x = vec![c::X_MAX as u8; c::K_LOGICAL];
+        let mut grads = Grads::zero();
+        backward_scores(&tap, &unit_quant(), [0.2, 0.08, 0.1], [-1.0, 1.0], &mut grads);
+        assert!(grads.w2.iter().any(|&g| g != 0.0));
+        assert!(grads.w1.iter().all(|&g| g == 0.0));
+        assert!(grads.wc.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn logistic_loss_is_confidence_calibrated() {
+        let tap = open_tap();
+        let q = unit_quant();
+        let scales = [0.2, 0.08, 0.1];
+        let mut g = Grads::zero();
+        // Equal scores → p = 0.5 → loss = ln 2 for either label.
+        let l = backward_logistic(&tap, &q, scales, [10.0, 10.0], 1, 8.0, &mut g);
+        assert!((l - std::f64::consts::LN_2).abs() < 1e-9);
+        // Confidently correct → small loss; wrong → large loss.
+        let mut g2 = Grads::zero();
+        let lc = backward_logistic(&tap, &q, scales, [0.0, 40.0], 1, 8.0, &mut g2);
+        let mut g3 = Grads::zero();
+        let lw = backward_logistic(&tap, &q, scales, [40.0, 0.0], 1, 8.0, &mut g3);
+        assert!(lc < l && l < lw, "{lc} < {l} < {lw}");
+    }
+}

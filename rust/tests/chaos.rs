@@ -10,7 +10,10 @@
 //!   * failover is numerically invisible: results are bit-identical to a
 //!     fault-free fleet without the faulted replica;
 //!   * the fleet ends with at least the plan's serving floor intact;
-//!   * `repro chaos` prints a byte-identical survival report per seed.
+//!   * `repro chaos` prints a byte-identical survival report per seed
+//!     (CLI-level determinism lives in the bss2-cli crate's
+//!     `cli_determinism` suite — `CARGO_BIN_EXE_repro` is only defined
+//!     for the package that owns the binary).
 //!
 //! The short churn soak runs in the default suite; the heavy randomized
 //! soak is `#[ignore]`d for the nightly `cargo test --release -- --ignored`
@@ -328,82 +331,6 @@ fn failover_is_numerically_invisible() {
         reference.shutdown();
         Ok(())
     });
-}
-
-/// Acceptance criterion: `repro chaos --chips 4 --seed 1` is
-/// deterministic across runs — the survival report is byte-identical.
-#[test]
-fn chaos_cli_survival_report_is_deterministic() {
-    let exe = env!("CARGO_BIN_EXE_repro");
-    let run = || {
-        std::process::Command::new(exe)
-            .args(["chaos", "--chips", "4", "--seed", "1"])
-            .output()
-            .expect("repro chaos runs")
-    };
-    let a = run();
-    assert!(
-        a.status.success(),
-        "chaos run failed: {}",
-        String::from_utf8_lossy(&a.stderr)
-    );
-    let report = String::from_utf8_lossy(&a.stdout);
-    assert!(report.contains("[chaos] verdict:"), "{report}");
-    assert!(report.contains("0 lost"), "no reply may fall silent: {report}");
-    let b = run();
-    assert_eq!(
-        a.stdout, b.stdout,
-        "survival report must be byte-identical across runs"
-    );
-    // A different seed draws a different plan (and prints it).
-    let c = std::process::Command::new(exe)
-        .args(["chaos", "--chips", "4", "--seed", "2"])
-        .output()
-        .expect("repro chaos runs");
-    assert!(c.status.success());
-    assert_ne!(a.stdout, c.stdout, "different seed, different report");
-}
-
-/// `repro chaos --json` is the machine-readable twin of the survival
-/// report: still byte-identical per seed (no wall-clock fields), and it
-/// parses as one JSON object with the survival verdict.
-#[test]
-fn chaos_cli_json_report_is_deterministic_and_parses() {
-    let exe = env!("CARGO_BIN_EXE_repro");
-    let run = || {
-        std::process::Command::new(exe)
-            .args(["chaos", "--chips", "4", "--seed", "1", "--json"])
-            .output()
-            .expect("repro chaos runs")
-    };
-    let a = run();
-    assert!(
-        a.status.success(),
-        "chaos --json run failed: {}",
-        String::from_utf8_lossy(&a.stderr)
-    );
-    let b = run();
-    assert_eq!(
-        a.stdout, b.stdout,
-        "json report must be byte-identical across runs"
-    );
-    let text = String::from_utf8_lossy(&a.stdout);
-    let report = Json::parse(text.trim()).expect("json report parses");
-    assert_eq!(
-        report.get("lost").and_then(|v| v.as_uint()),
-        Some(0),
-        "{report}"
-    );
-    assert_eq!(report.get("seed").and_then(|v| v.as_uint()), Some(1));
-    assert!(
-        report.get("verdict").and_then(|v| v.as_str()).is_some(),
-        "{report}"
-    );
-    assert_eq!(
-        report.get("per_chip").and_then(|v| v.as_arr()).map(|a| a.len()),
-        Some(4),
-        "{report}"
-    );
 }
 
 /// The event journal keeps the fleet's lifecycle transitions in causal

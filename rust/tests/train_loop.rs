@@ -1,0 +1,316 @@
+//! Training-loop acceptance tests (hardware-in-the-loop subsystem):
+//!
+//! * finite-difference checks of the straight-through estimator against
+//!   the simulated forward pass — end-to-end on the score margin for the
+//!   output layer, and at the ADC-tap level for the hidden layers (where
+//!   per-weight effects on the integer scores drown in AvgPool rounding,
+//!   but the linear surrogate `Δadc ≈ scale·ΣΔw·x` is directly
+//!   measurable);
+//! * in-process training determinism (two `Trainer::run`s with the same
+//!   config produce byte-identical artifacts);
+//! * save→load roundtrip properties for the model and its artifact.
+//!
+//! All FD checks run on the ideal substrate (`noise_off`, no FPN, no
+//! drift): the forward is then exactly `round(scale·Wx)` per column up
+//! to clip, so the surrogate's error budget is integer rounding only.
+
+use bss2::asic::consts as c;
+use bss2::coordinator::engine::{Engine, EngineConfig, PassTap};
+use bss2::ecg::gen::generate_trace;
+use bss2::nn::weights::TrainedModel;
+use bss2::train::artifact::ModelArtifact;
+use bss2::train::shadow::ShadowWeights;
+use bss2::train::ste::{backward_scores, Grads};
+use bss2::train::{TrainConfig, Trainer};
+use bss2::util::propcheck;
+use bss2::{prop_assert, prop_assert_eq};
+
+const SCALES: [f32; 3] = [0.2, 0.08, 0.1];
+
+/// Ideal, frozen, noiseless substrate: finite differences see only the
+/// deterministic analog chain.
+fn ideal_cfg() -> EngineConfig {
+    EngineConfig {
+        use_pjrt: false,
+        noise_off: true,
+        ..Default::default()
+    }
+}
+
+fn acts_for(seed: u64, afib: bool) -> Vec<i32> {
+    let trace = generate_trace(seed, afib, 1.0);
+    bss2::fpga::preprocess::preprocess(&trace.samples)
+        .iter()
+        .map(|&a| a as i32)
+        .collect()
+}
+
+/// One tapped forward pass; returns the score margin `s1 − s0` and the
+/// per-pass gradient taps.
+fn forward(shadow: &ShadowWeights, acts: &[i32]) -> (f64, [PassTap; 3]) {
+    let mut engine = Engine::native(shadow.to_model(SCALES), ideal_cfg());
+    let (inf, tap) = engine.classify_acts_taps(acts).unwrap();
+    ((inf.scores[1] - inf.scores[0]) as f64, tap)
+}
+
+/// End-to-end finite-difference check on the output layer: perturb a
+/// handful of fc2 shadow weights feeding one safely-off-rail column and
+/// compare the measured change of the score margin against the STE
+/// prediction `ΔJ ≈ h·Σ ∂J/∂w` from [`backward_scores`].
+///
+/// The scores are integer-valued (AvgPool rounds to nearest), so the
+/// measurement carries up to ±1 LSB of rounding per score — the step
+/// size is chosen so the predicted ΔJ clears that noise floor.
+#[test]
+fn ste_fc2_gradient_matches_end_to_end_finite_difference() {
+    let shadow = ShadowWeights::init(31, 4.0);
+    let acts = acts_for(123, true);
+    let (j0, tap) = forward(&shadow, &acts);
+
+    // With g_scores = [-1, +1], `grads` is exactly ∂J/∂w for J = s1−s0.
+    let mut grads = Grads::zero();
+    backward_scores(&tap, &shadow.quantised(), SCALES, [-1.0, 1.0], &mut grads);
+    assert!(
+        grads.w2.iter().any(|&g| g != 0.0),
+        "gradient must reach the output layer"
+    );
+
+    // Pick an output column whose base ADC sits well inside the rails,
+    // then the rows with the largest activations feeding it (largest
+    // |∂J/∂w|, strongest finite-difference signal).
+    let x2 = &tap[2].x[..c::FC1_OUT];
+    let col = (0..c::FC2_OUT)
+        .find(|&j| tap[2].adc[2 * c::FC1_OUT + j].abs() < 60)
+        .expect("some fc2 column off the rails");
+    let mut rows: Vec<usize> = (0..c::FC1_OUT).collect();
+    rows.sort_by_key(|&r| std::cmp::Reverse(x2[r]));
+    rows.truncate(6);
+    let x_sum: f32 = rows.iter().map(|&r| x2[r] as f32).sum();
+    assert!(x_sum > 0.0, "no fc1 activation reached the output pass");
+
+    // Step size targeting ~15 ADC LSB on the perturbed column: far above
+    // the score-rounding floor, far below the rail from |adc| < 60.
+    let h = (15.0 / (SCALES[2] * x_sum)).ceil().clamp(1.0, 16.0);
+    let mut pert = shadow.clone();
+    let mut predicted = 0.0f64;
+    for &r in &rows {
+        pert.w2[r * c::FC2_OUT + col] += h;
+        predicted += (h * grads.w2[r * c::FC2_OUT + col]) as f64;
+    }
+    let (j1, _) = forward(&pert, &acts);
+    let actual = j1 - j0;
+    // predicted = ±h·scale2·Σx2/5: at least 3/5 of the targeted 15 LSB
+    // (h is clamped, the column average divides by 5).
+    assert!(
+        predicted.abs() >= 0.6,
+        "predicted step too small to resolve: {predicted}"
+    );
+    if predicted.abs() >= 2.0 {
+        // Well above the ±1 LSB rounding floor: direction must match.
+        assert_eq!(
+            actual.signum(),
+            predicted.signum(),
+            "FD and STE must agree on direction: {actual} vs {predicted}"
+        );
+    }
+    // AvgPool rounds each score to an integer: ±1 LSB of margin noise,
+    // plus a surrogate slack for the (identity-assumed) rounding chain.
+    let tol = 1.25 + 0.35 * predicted.abs();
+    assert!(
+        (actual - predicted).abs() <= tol,
+        "FD mismatch: measured {actual:.2}, predicted {predicted:.2}"
+    );
+}
+
+/// Tap-level finite-difference check for fc1: perturbing `w1[r][j]`
+/// must move ADC column `j` (input row in the signed block) or
+/// `123 + j` (unsigned block) by `scale1·h·x1[r]`, and leave untouched
+/// columns bit-identical.  This validates the surrogate slope and the
+/// two-block column mapping the STE's fc1 loop encodes.
+#[test]
+fn ste_fc1_surrogate_matches_tap_deltas() {
+    let shadow = ShadowWeights::init(32, 4.0);
+    let acts = acts_for(124, false);
+    let (_, tap) = forward(&shadow, &acts);
+    let x1 = &tap[1].x;
+
+    // A column comfortably off the rails in both blocks.
+    let col = (0..c::FC1_OUT)
+        .find(|&j| {
+            tap[1].adc[j].abs() < 60 && tap[1].adc[c::FC1_OUT + j].abs() < 60
+        })
+        .expect("some fc1 column off the rails");
+    // The strongest input row of each block.
+    let r_a = (0..c::K_SIGNED).max_by_key(|&r| x1[r]).unwrap();
+    let r_b = (c::K_SIGNED..c::K_LOGICAL).max_by_key(|&r| x1[r]).unwrap();
+    assert!(x1[r_a] > 0, "signed block saw no activation");
+
+    let h = 4.0f32;
+    let mut pert = shadow.clone();
+    pert.w1[r_a * c::FC1_OUT + col] += h;
+    pert.w1[r_b * c::FC1_OUT + col] += h;
+    let (_, tap2) = forward(&pert, &acts);
+
+    // Inputs to the pass are untouched by an fc1-weight change.
+    assert_eq!(tap[1].x, tap2[1].x, "pass-1 inputs must not move");
+    for (block, r) in [(0, r_a), (c::FC1_OUT, r_b)] {
+        let want = SCALES[1] * h * x1[r] as f32;
+        let got = (tap2[1].adc[block + col] - tap[1].adc[block + col]) as f32;
+        assert!(
+            (got - want).abs() <= 1.5 + 0.05 * want,
+            "block at {block}: Δadc {got} vs surrogate {want}"
+        );
+    }
+    // A neighbouring column's weights are untouched: bit-identical ADC.
+    let other = (col + 1) % c::FC1_OUT;
+    assert_eq!(tap[1].adc[other], tap2[1].adc[other]);
+    assert_eq!(
+        tap[1].adc[c::FC1_OUT + other],
+        tap2[1].adc[c::FC1_OUT + other]
+    );
+}
+
+/// Tap-level finite-difference check for the conv layer: one logical
+/// tap `(o, ch, t)` is replicated across all valid Toeplitz positions,
+/// so perturbing it must move ADC column `p·8 + o` by
+/// `scale0·h·x0[ch·64 + p·2 − 3 + t]` at every interior position and
+/// leave positions where the tap falls off the window — and every other
+/// output channel — bit-identical.  Mirrors `pack_conv` exactly; this
+/// is the indexing the STE's conv loop folds gradients back through.
+#[test]
+fn ste_conv_toeplitz_surrogate_matches_tap_deltas() {
+    let shadow = ShadowWeights::init(33, 4.0);
+    let acts = acts_for(125, true);
+    let (_, tap) = forward(&shadow, &acts);
+    let x0 = &tap[0].x;
+
+    let (o, ch, t) = (2usize, 0usize, 0usize);
+    let h = 4.0f32;
+    let mut pert = shadow.clone();
+    pert.wc[(o * c::ECG_CHANNELS + ch) * c::CONV_KERNEL + t] += h;
+    let (_, tap2) = forward(&pert, &acts);
+    assert_eq!(tap[0].x, tap2[0].x, "pass-0 inputs must not move");
+
+    let mut checked = 0;
+    for p in 0..c::CONV_POSITIONS {
+        let colv = p * c::CONV_CHANNELS + o;
+        let ti = p as isize * c::CONV_STRIDE as isize
+            - c::CONV_PAD as isize
+            + t as isize;
+        if ti < 0 || ti as usize >= c::POOLED_LEN {
+            // Tap off the padded window: the placed column never held
+            // this cell, so its ADC must not move at all.
+            assert_eq!(tap[0].adc[colv], tap2[0].adc[colv], "pad at p={p}");
+            continue;
+        }
+        if tap[0].adc[colv].abs() >= 80 {
+            continue; // too close to a rail for a linear check
+        }
+        let want = SCALES[0] * h * x0[ch * c::POOLED_LEN + ti as usize] as f32;
+        let got = (tap2[0].adc[colv] - tap[0].adc[colv]) as f32;
+        assert!(
+            (got - want).abs() <= 1.5 + 0.05 * want,
+            "p={p}: Δadc {got} vs surrogate {want}"
+        );
+        checked += 1;
+    }
+    assert!(checked >= 5, "too few positions off the rails: {checked}");
+    // Other output channels never share the perturbed tap.
+    for p in 0..c::CONV_POSITIONS {
+        let colv = p * c::CONV_CHANNELS + (o + 1);
+        assert_eq!(tap[0].adc[colv], tap2[0].adc[colv]);
+    }
+}
+
+/// ISSUE 8 acceptance: training is deterministic per seed — two runs
+/// with the same config produce byte-identical `bss2-model-v1`
+/// artifacts (FPN, drift, data order and init all derive from explicit
+/// seeds), and a different seed trains different weights.
+#[test]
+fn training_is_deterministic_per_seed() {
+    let cfg = TrainConfig {
+        epochs: 2,
+        batch: 4,
+        windows: 12,
+        val_per_class: 3,
+        seed: 9,
+        ..TrainConfig::default()
+    };
+    let a = Trainer::run(&cfg).unwrap();
+    let b = Trainer::run(&cfg).unwrap();
+    assert_eq!(
+        a.artifact.to_json(),
+        b.artifact.to_json(),
+        "same config must produce byte-identical artifacts"
+    );
+    assert_eq!(a.report.epoch_loss, b.report.epoch_loss);
+    assert_eq!(a.report.epoch_val, b.report.epoch_val);
+    // The artifact is stamped with the substrate it trained against.
+    assert_ne!(a.artifact.substrate, 0, "FPN substrate must be stamped");
+    assert!(a.artifact.drift && a.artifact.fpn_seed.is_some());
+    assert!(a.artifact.metrics.contains_key("val_det"));
+    assert_eq!(a.report.steps, 2 * 3, "2 epochs × ⌈12/4⌉ batches");
+
+    let c = Trainer::run(&TrainConfig { seed: 10, ..cfg }).unwrap();
+    assert_ne!(
+        a.artifact.to_json(),
+        c.artifact.to_json(),
+        "different seed, different artifact"
+    );
+}
+
+/// Satellite: save→load roundtrip of the trained model and its artifact
+/// reproduces weights, scales, calibration and metrics bit-identically.
+#[test]
+fn model_and_artifact_save_load_roundtrip_property() {
+    propcheck::check("model artifact roundtrip", 6, 0x8A17, |g| {
+        let mut model = TrainedModel::synthetic(g.rng.next_u64());
+        model.scales = [
+            g.f64_in(0.01, 0.5) as f32,
+            g.f64_in(0.01, 0.5) as f32,
+            g.f64_in(0.01, 0.5) as f32,
+        ];
+        model
+            .train_metrics
+            .insert("val_det".into(), g.f64_in(0.0, 1.0));
+        let fpn = g.bool();
+        let art = ModelArtifact {
+            substrate: g.rng.next_u64(),
+            chip: g.usize_in(0, 7),
+            chip_time_us: g.rng.next_u64() >> 20,
+            seed: g.rng.next_u64(),
+            fpn_seed: if fpn { Some(g.rng.next_u64()) } else { None },
+            drift: g.bool(),
+            augmented: g.bool(),
+            epochs: g.usize_in(1, 32),
+            batch: g.usize_in(1, 64),
+            lr: g.f64_in(0.01, 1.0),
+            momentum: g.f64_in(0.0, 0.99),
+            temperature: g.f64_in(1.0, 16.0),
+            metrics: model.train_metrics.clone(),
+            model,
+        };
+        let path = std::env::temp_dir()
+            .join(format!("bss2_model_roundtrip_{:016x}.json", g.seed));
+        art.save(&path).map_err(|e| e.to_string())?;
+        let back = ModelArtifact::load(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert_eq!(back.substrate, art.substrate);
+        prop_assert_eq!(back.fpn_seed, art.fpn_seed);
+        prop_assert_eq!(back.model.scales, art.model.scales);
+        prop_assert_eq!(back.model.gain, art.model.gain);
+        prop_assert_eq!(back.model.offset, art.model.offset);
+        prop_assert_eq!(back.metrics, art.metrics);
+        for p in 0..3 {
+            prop_assert!(
+                back.model.pass_weights[p] == art.model.pass_weights[p],
+                "pass {} weights drifted through the roundtrip",
+                p
+            );
+        }
+        // Byte-level fixpoint: serialising the reload reproduces the
+        // file exactly (no float drift through the JSON layer).
+        prop_assert_eq!(back.to_json(), art.to_json());
+        Ok(())
+    });
+}
