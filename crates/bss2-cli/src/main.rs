@@ -47,6 +47,7 @@ fn main() {
         "loadgen" => loadgen::run(&args),
         "monitor" => monitor(&args),
         "snn" => snn(&args),
+        "audit" => audit(&args),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             Ok(())
@@ -129,6 +130,13 @@ COMMANDS:
                                             gated metric regresses >20%
                                             against the baseline file
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
+  audit        workspace static analysis   (--json --gate FILE
+                                            --write-baseline FILE): the
+                                            bss2-lint determinism/panic-
+                                            safety/lock-discipline pass
+                                            (DESIGN.md §16); with no flags
+                                            it gates against
+                                            LINT_BASELINE.json
 
 OPTIONS (common):
   --artifacts DIR   artifact directory (default: ./artifacts or $BSS2_ARTIFACTS)
@@ -1706,6 +1714,25 @@ fn chaos(args: &Args) -> anyhow::Result<()> {
     fleet.shutdown();
     anyhow::ensure!(lost == 0, "{lost} replies were lost");
     Ok(())
+}
+
+/// `repro audit`: the bss2-lint static-analysis pass (DESIGN.md §16),
+/// exposed through the main CLI so the gate needs no second entry point.
+fn audit(args: &Args) -> anyhow::Result<()> {
+    let opts = bss2_lint::Options {
+        root: args.get("root").map(std::path::PathBuf::from),
+        json: args.flag("json"),
+        gate: args.get("gate").map(std::path::PathBuf::from),
+        write_baseline: args
+            .get("write-baseline")
+            .map(std::path::PathBuf::from),
+    };
+    args.check_unknown()?;
+    match bss2_lint::run(&opts) {
+        Ok(0) => Ok(()),
+        Ok(_) => anyhow::bail!("lint gate failed (see findings above)"),
+        Err(e) => anyhow::bail!("{e}"),
+    }
 }
 
 fn snn(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,388 @@
+//! Minimal Rust lexer for the lint pass (DESIGN.md §16).
+//!
+//! Produces a flat token stream with line numbers.  Comments are stripped
+//! (after harvesting `// lint:allow(rule: reason)` annotations), string and
+//! char literals collapse into [`Kind::Str`] placeholders so adjacency
+//! checks cannot be confused by their contents, lifetimes are dropped, and
+//! `#[cfg(test)]` / `#[test]` items are removed so the rules only ever see
+//! shipping code.  This is not a full lexer — just faithful enough that
+//! token-pattern rules cannot be fooled by comments, strings, raw strings,
+//! or char literals.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    /// String / char / byte-string literal (contents dropped).
+    Str,
+    /// Single punctuation character.
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.chars().next() == Some(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+}
+
+/// One `// lint:allow(rule: reason)` annotation.
+///
+/// A trailing comment covers findings on its own line; a comment that has
+/// the whole line to itself covers the next line that carries code.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub own_line: bool,
+    pub rule: String,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut last_tok_line = 0u32;
+
+    macro_rules! push {
+        ($kind:expr, $text:expr, $line:expr) => {{
+            toks.push(Tok { kind: $kind, text: $text, line: $line });
+            last_tok_line = $line;
+        }};
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            if let Some(a) = parse_allow(&src[start..i], line, last_tok_line != line) {
+                allows.push(a);
+            }
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let tline = line;
+            i = skip_escaped_string(b, i + 1, b'"', &mut line);
+            push!(Kind::Str, String::new(), tline);
+        } else if c == b'\'' {
+            let nxt = b.get(i + 1).copied().unwrap_or(0);
+            if (nxt.is_ascii_alphabetic() || nxt == b'_') && b.get(i + 2) != Some(&b'\'') {
+                // Lifetime: drop the quote and the identifier.
+                i += 2;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            } else {
+                let tline = line;
+                i = skip_escaped_string(b, i + 1, b'\'', &mut line);
+                push!(Kind::Str, String::new(), tline);
+            }
+        } else if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            let mut seen_dot = false;
+            while i < b.len() {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    i += 1;
+                } else if d == b'.'
+                    && !seen_dot
+                    && b.get(i + 1).map_or(false, |n| n.is_ascii_digit())
+                {
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            push!(Kind::Num, src[start..i].to_string(), line);
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            if let Some((hashes, body)) = raw_string_start(b, i) {
+                let tline = line;
+                i = match hashes {
+                    None => skip_escaped_string(b, body, b'"', &mut line),
+                    Some(n) => skip_raw_string(b, body, n, &mut line),
+                };
+                push!(Kind::Str, String::new(), tline);
+            } else if c == b'b' && b.get(i + 1) == Some(&b'\'') {
+                let tline = line;
+                i = skip_escaped_string(b, i + 2, b'\'', &mut line);
+                push!(Kind::Str, String::new(), tline);
+            } else {
+                let start = i;
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                push!(Kind::Ident, src[start..i].to_string(), line);
+            }
+        } else {
+            push!(Kind::Punct, (c as char).to_string(), line);
+            i += 1;
+        }
+    }
+
+    Lexed { toks: strip_tests(toks), allows }
+}
+
+/// Skip to just past the closing `quote`, honouring backslash escapes.
+fn skip_escaped_string(b: &[u8], mut i: usize, quote: u8, line: &mut u32) -> usize {
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            c if c == quote => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip to just past the `"###...` terminator of a raw string with
+/// `hashes` leading `#`s.
+fn skip_raw_string(b: &[u8], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == b'"' && b[i + 1..].iter().take(hashes).filter(|c| **c == b'#').count() == hashes
+        {
+            return i + 1 + hashes;
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Detect `r"`, `r#"`, `b"`, `br"`, `br#"` at position `i`.
+///
+/// Returns `(Some(n_hashes), content_start)` for raw strings and
+/// `(None, content_start)` for a plain byte string.
+fn raw_string_start(b: &[u8], i: usize) -> Option<(Option<usize>, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'r' && j + 1 < b.len() && (b[j + 1] == b'#' || b[j + 1] == b'"') {
+        j += 1;
+        let mut n = 0usize;
+        while j < b.len() && b[j] == b'#' {
+            n += 1;
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'"' {
+            return Some((Some(n), j + 1));
+        }
+        return None;
+    }
+    if j > i && j < b.len() && b[j] == b'"' {
+        // b"..."
+        return Some((None, j + 1));
+    }
+    None
+}
+
+fn parse_allow(comment: &str, line: u32, own_line: bool) -> Option<Allow> {
+    let pos = comment.find("lint:allow(")?;
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let body = &rest[..close];
+    let (rule, reason) = match body.split_once(':') {
+        Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+        None => (body.trim().to_string(), String::new()),
+    };
+    if rule.is_empty() {
+        return None;
+    }
+    Some(Allow { line, own_line, rule, reason })
+}
+
+/// Remove `#[test]` / `#[cfg(test)]` items from the token stream so the
+/// rules only see shipping code (`#[cfg(not(test))]` survives).
+fn strip_tests(toks: Vec<Tok>) -> Vec<Tok> {
+    let mut out: Vec<Tok> = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_punct('#') && toks.get(i + 1).map_or(false, |t| t.is_punct('[')) {
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut is_test = false;
+            while j < toks.len() && depth > 0 {
+                if toks[j].is_punct('[') {
+                    depth += 1;
+                } else if toks[j].is_punct(']') {
+                    depth -= 1;
+                } else if toks[j].is_ident("test")
+                    && !(j >= 2 && toks[j - 2].is_ident("not") && toks[j - 1].is_punct('('))
+                {
+                    is_test = true;
+                }
+                j += 1;
+            }
+            if is_test {
+                i = skip_item(&toks, j);
+                continue;
+            }
+            out.extend_from_slice(&toks[i..j]);
+            i = j;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Skip past the item that follows an attribute: any further stacked
+/// attributes, then either a braced body or a `;`-terminated item.
+fn skip_item(toks: &[Tok], mut j: usize) -> usize {
+    while j < toks.len() && toks[j].is_punct('#') && toks.get(j + 1).map_or(false, |t| t.is_punct('['))
+    {
+        j += 1;
+        let mut depth = 0usize;
+        while j < toks.len() {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+    let mut depth = 0usize;
+    while j < toks.len() {
+        if toks[j].is_punct('{') {
+            depth += 1;
+        } else if toks[j].is_punct('}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return j + 1;
+            }
+        } else if toks[j].is_punct(';') && depth == 0 {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r##"
+            // HashMap in a comment
+            /* Instant::now() in a block /* nested */ comment */
+            let s = "HashMap::unwrap()";
+            let r = r#"SystemTime "quoted" "#;
+            let b = b"unwrap";
+            let c = 'x';
+            let bc = b'\'';
+            let lt: &'static str = "ok";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "HashMap" || s == "Instant" || s == "unwrap"));
+        assert!(!ids.iter().any(|s| s == "static")); // lifetime idents are dropped
+    }
+
+    #[test]
+    fn test_items_are_stripped() {
+        let src = r#"
+            fn keep() { v.lock(); }
+            #[cfg(test)]
+            mod tests {
+                fn gone() { x.unwrap(); }
+            }
+            #[test]
+            fn also_gone() { y.unwrap(); }
+            #[cfg(not(test))]
+            fn kept_too() { z.expect("m"); }
+        "#;
+        let ids = idents(src);
+        assert!(ids.iter().any(|s| s == "keep"));
+        assert!(ids.iter().any(|s| s == "kept_too"));
+        assert!(ids.iter().any(|s| s == "expect"));
+        assert!(!ids.iter().any(|s| s == "gone" || s == "also_gone" || s == "unwrap"));
+    }
+
+    #[test]
+    fn allow_annotations_are_harvested() {
+        let src = "let x = a.exp(); // lint:allow(det-float-intrinsic: tolerated here)\n\
+                   // lint:allow(panic-index: next line)\n\
+                   let y = v[i];\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.allows.len(), 2);
+        assert_eq!(lexed.allows[0].rule, "det-float-intrinsic");
+        assert!(!lexed.allows[0].own_line);
+        assert_eq!(lexed.allows[1].rule, "panic-index");
+        assert!(lexed.allows[1].own_line);
+        assert_eq!(lexed.allows[1].reason, "next line");
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let lexed = lex("a[1..n] + 2.5 + t.0");
+        let texts: Vec<&str> = lexed.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["a", "[", "1", ".", ".", "n", "]", "+", "2.5", "+", "t", ".", "0"]);
+    }
+}

@@ -1,0 +1,590 @@
+//! `bss2-lint` — workspace-wide determinism & concurrency static analysis
+//! (DESIGN.md §16).
+//!
+//! A dependency-free, token-level pass over `rust/src/**` and
+//! `crates/*/src/**` enforcing four rule families:
+//!
+//! * **determinism** — no wall-clock (`Instant`/`SystemTime`), no
+//!   `HashMap`/`HashSet`, no libm float intrinsics in the sim-path modules
+//!   that must replay byte-identically (`asic/`, `fpga/`, `nn/`, `calib/`,
+//!   `fault/`, `train/`).
+//! * **panic-safety** — no `unwrap`/`expect`/`panic!`-family macros/bare
+//!   computed indexing in `coordinator/service/`, `fleet/`, and the
+//!   `bss2-proto` decode paths.
+//! * **lock-discipline** — a static Mutex/latch acquisition-order graph;
+//!   cycles in the direct-nesting graph are findings.
+//! * **wire-hygiene** — runtime-sized allocations in `bss2-proto` must
+//!   follow a limit check, and every declared `MAX_*` limit must be used
+//!   in at least one comparison somewhere in the workspace.
+//!
+//! Findings are suppressed per-line with `// lint:allow(rule: reason)`;
+//! suppressed findings are reported as the *allow budget*.  Un-annotated
+//! findings are summarised per `(rule, file)` in `LINT_BASELINE.json`; the
+//! gate fails on any count increase (ratchet-down only) and on *any*
+//! un-annotated determinism or lock-discipline finding.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::Edge;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+pub const BASELINE_FORMAT: &str = "bss2-lint-baseline-v1";
+
+/// Families whose findings must always be fixed or annotated — the
+/// baseline cannot absorb them.
+pub const HARD_FAMILIES: &[&str] = &["determinism", "lock-discipline"];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub family: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub snippet: String,
+    /// `Some(reason)` when a `lint:allow` annotation covers this finding.
+    pub allow: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub lock_edges: Vec<Edge>,
+    pub lock_info_edges: Vec<Edge>,
+    pub files_scanned: usize,
+}
+
+/// Run every rule over `(relative_path, source)` pairs.
+///
+/// Paths drive rule scoping, so tests can feed fixture sources under
+/// synthetic paths like `rust/src/asic/fixture.rs`.
+pub fn scan_sources(files: &[(String, String)]) -> Report {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut facts: Vec<rules::FnFacts> = Vec::new();
+    let mut decls: Vec<rules::LimitDecl> = Vec::new();
+    let mut guarded: BTreeSet<String> = BTreeSet::new();
+    // file -> [(covered line, rule, reason)]
+    let mut allows: BTreeMap<String, Vec<(u32, String, String)>> = BTreeMap::new();
+
+    for (path, src) in files {
+        let lexed = lexer::lex(src);
+        rules::file_findings(path, &lexed.toks, &mut findings);
+        rules::wire_alloc_findings(path, &lexed.toks, &mut findings);
+        rules::limit_decls(path, &lexed.toks, &mut decls);
+        rules::guarded_limit_uses(&lexed.toks, &mut guarded);
+        rules::lock_facts(path, &lexed.toks, &mut facts);
+        for a in &lexed.allows {
+            let target = if a.own_line {
+                lexed.toks.iter().map(|t| t.line).filter(|l| *l > a.line).min()
+            } else {
+                Some(a.line)
+            };
+            if let Some(t) = target {
+                allows
+                    .entry(path.clone())
+                    .or_default()
+                    .push((t, a.rule.clone(), a.reason.clone()));
+            }
+        }
+    }
+
+    for d in &decls {
+        if !guarded.contains(&d.name) {
+            findings.push(Finding {
+                rule: "wire-unguarded-limit",
+                family: "wire-hygiene",
+                file: d.file.clone(),
+                line: d.line,
+                snippet: d.name.clone(),
+                allow: None,
+            });
+        }
+    }
+
+    let lock = rules::analyze_locks(&facts);
+    findings.extend(lock.cycles);
+
+    for f in &mut findings {
+        if let Some(list) = allows.get(&f.file) {
+            if let Some((_, _, reason)) =
+                list.iter().find(|(l, r, _)| *l == f.line && r == f.rule)
+            {
+                f.allow = Some(reason.clone());
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.snippet.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.snippet.as_str()))
+    });
+
+    Report {
+        findings,
+        lock_edges: lock.edges,
+        lock_info_edges: lock.info_edges,
+        files_scanned: files.len(),
+    }
+}
+
+/// Collect the workspace source set: `rust/src/**` and `crates/*/src/**`
+/// (vendor crates and `tests/` trees — including lint fixtures — are out).
+pub fn collect_workspace(root: &Path) -> Result<Vec<(String, String)>, String> {
+    let mut files = Vec::new();
+    walk(&root.join("rust").join("src"), root, &mut files)?;
+    let crates_dir = root.join("crates");
+    let mut subs: Vec<PathBuf> = std::fs::read_dir(&crates_dir)
+        .map_err(|e| format!("read {}: {e}", crates_dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .collect();
+    subs.sort();
+    for sub in subs {
+        let src = sub.join("src");
+        if src.is_dir() {
+            walk(&src, root, &mut files)?;
+        }
+    }
+    Ok(files)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = rd.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src =
+                std::fs::read_to_string(&p).map_err(|e| format!("read {}: {e}", p.display()))?;
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Baseline
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub count: u32,
+}
+
+/// Group the report's un-annotated findings into baseline entries.
+pub fn baseline_from(report: &Report) -> Vec<BaselineEntry> {
+    let mut counts: BTreeMap<(String, String), u32> = BTreeMap::new();
+    for f in &report.findings {
+        if f.allow.is_none() {
+            *counts.entry((f.file.clone(), f.rule.to_string())).or_insert(0) += 1;
+        }
+    }
+    counts
+        .into_iter()
+        .map(|((file, rule), count)| BaselineEntry { rule, file, count })
+        .collect()
+}
+
+pub fn render_baseline(entries: &[BaselineEntry]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"format\": \"{BASELINE_FORMAT}\",");
+    s.push_str(
+        "  \"note\": \"Un-annotated finding counts per (rule, file). The gate fails on any \
+         increase; shrink entries by fixing findings or annotating them with lint:allow \
+         (DESIGN.md S16).\",\n",
+    );
+    s.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"count\": {}}}{comma}",
+            esc(&e.rule),
+            esc(&e.file),
+            e.count
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    if !text.contains(BASELINE_FORMAT) {
+        return Err(format!("baseline is missing the `{BASELINE_FORMAT}` format marker"));
+    }
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let t = line.trim().trim_end_matches(',');
+        if !t.starts_with("{\"rule\"") {
+            continue;
+        }
+        let rule = json_str_field(t, "rule")
+            .ok_or_else(|| format!("bad baseline line (no rule): {t}"))?;
+        let file = json_str_field(t, "file")
+            .ok_or_else(|| format!("bad baseline line (no file): {t}"))?;
+        let count = json_num_field(t, "count")
+            .ok_or_else(|| format!("bad baseline line (no count): {t}"))?;
+        entries.push(BaselineEntry { rule, file, count });
+    }
+    Ok(entries)
+}
+
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let s = line.find(&pat)? + pat.len();
+    let rest = &line[s..];
+    let e = rest.find('"')?;
+    Some(rest.get(..e)?.to_string())
+}
+
+fn json_num_field(line: &str, key: &str) -> Option<u32> {
+    let pat = format!("\"{key}\": ");
+    let s = line.find(&pat)? + pat.len();
+    let digits: String = line.get(s..)?.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+// ---------------------------------------------------------------------------
+// Gate
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    pub failures: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Ratchet-down gate: hard families must be clean (fixed or annotated);
+/// every other `(rule, file)` count may only shrink relative to the
+/// baseline.  Loose or stale baseline entries are notes, not failures, so
+/// fixing findings never breaks the gate.
+pub fn gate(report: &Report, baseline: &[BaselineEntry]) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let mut fresh: BTreeMap<(String, String), u32> = BTreeMap::new();
+    for f in &report.findings {
+        if f.allow.is_some() {
+            continue;
+        }
+        if HARD_FAMILIES.contains(&f.family) {
+            out.failures.push(format!(
+                "{}:{}: [{}] {} — {} findings must be fixed or lint:allow-annotated",
+                f.file, f.line, f.rule, f.snippet, f.family
+            ));
+            continue;
+        }
+        *fresh.entry((f.file.clone(), f.rule.to_string())).or_insert(0) += 1;
+    }
+    let mut base: BTreeMap<(String, String), u32> = BTreeMap::new();
+    for b in baseline {
+        base.insert((b.file.clone(), b.rule.clone()), b.count);
+    }
+    for ((file, rule), n) in &fresh {
+        let b = base.get(&(file.clone(), rule.clone())).copied().unwrap_or(0);
+        if *n > b {
+            out.failures.push(format!(
+                "{file}: [{rule}] {n} un-annotated finding(s), baseline allows {b} — fix or annotate the new ones"
+            ));
+        } else if *n < b {
+            out.notes.push(format!(
+                "{file}: [{rule}] baseline is loose ({b} allowed, {n} found) — run --write-baseline to tighten"
+            ));
+        }
+    }
+    for ((file, rule), b) in &base {
+        if *b > 0 && !fresh.contains_key(&(file.clone(), rule.clone())) {
+            out.notes.push(format!(
+                "{file}: [{rule}] baseline entry is stale (no findings remain) — run --write-baseline"
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+pub fn render_json(report: &Report) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"findings\": [\n");
+    for (i, f) in report.findings.iter().enumerate() {
+        let comma = if i + 1 == report.findings.len() { "" } else { "," };
+        let allow = match &f.allow {
+            Some(r) => format!("\"{}\"", esc(r)),
+            None => "null".to_string(),
+        };
+        let _ = writeln!(
+            s,
+            "    {{\"rule\": \"{}\", \"family\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+             \"snippet\": \"{}\", \"allow\": {}}}{comma}",
+            f.rule,
+            f.family,
+            esc(&f.file),
+            f.line,
+            esc(&f.snippet),
+            allow
+        );
+    }
+    s.push_str("  ],\n  \"lock_edges\": [\n");
+    let render_edges = |s: &mut String, edges: &[Edge]| {
+        for (i, e) in edges.iter().enumerate() {
+            let comma = if i + 1 == edges.len() { "" } else { "," };
+            let _ = writeln!(
+                s,
+                "    {{\"from\": \"{}\", \"to\": \"{}\", \"file\": \"{}\", \"line\": {}}}{comma}",
+                esc(&e.from),
+                esc(&e.to),
+                esc(&e.file),
+                e.line
+            );
+        }
+    };
+    render_edges(&mut s, &report.lock_edges);
+    s.push_str("  ],\n  \"lock_info_edges\": [\n");
+    render_edges(&mut s, &report.lock_info_edges);
+    s.push_str("  ]\n}\n");
+    s
+}
+
+pub fn render_human(report: &Report) -> String {
+    let mut s = String::new();
+    let total = report.findings.len();
+    let allowed = report.findings.iter().filter(|f| f.allow.is_some()).count();
+    let _ = writeln!(
+        s,
+        "bss2-lint: {} finding(s) across {} file(s), {} annotated (allow budget)",
+        total, report.files_scanned, allowed
+    );
+    let mut per_rule: BTreeMap<&str, (u32, u32)> = BTreeMap::new();
+    for f in &report.findings {
+        let e = per_rule.entry(f.rule).or_insert((0, 0));
+        e.0 += 1;
+        if f.allow.is_some() {
+            e.1 += 1;
+        }
+    }
+    for (rule, (n, a)) in &per_rule {
+        let _ = writeln!(s, "  {rule:<24} total {n:>3}   allowed {a:>3}");
+    }
+    for f in &report.findings {
+        if f.allow.is_none() {
+            let _ = writeln!(s, "  {}:{}: [{}] {}", f.file, f.line, f.rule, f.snippet);
+        }
+    }
+    if !report.lock_edges.is_empty() {
+        s.push_str("lock acquisition order (direct nesting):\n");
+        for e in &report.lock_edges {
+            let _ = writeln!(s, "  {} -> {}  ({}:{})", e.from, e.to, e.file, e.line);
+        }
+    }
+    if !report.lock_info_edges.is_empty() {
+        s.push_str("lock order via calls (informational):\n");
+        for e in &report.lock_info_edges {
+            let _ = writeln!(s, "  {} -> {}  ({}:{})", e.from, e.to, e.file, e.line);
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// CLI driver (shared by the `bss2-lint` binary and `repro audit`)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct Options {
+    /// Workspace root; discovered by walking up from the CWD when absent.
+    pub root: Option<PathBuf>,
+    pub json: bool,
+    pub gate: Option<PathBuf>,
+    pub write_baseline: Option<PathBuf>,
+}
+
+/// Returns the process exit code: 0 clean, 1 gate failures.
+/// IO/usage problems come back as `Err`.
+pub fn run(opts: &Options) -> Result<i32, String> {
+    let root = match &opts.root {
+        Some(r) => r.clone(),
+        None => find_root()?,
+    };
+    let files = collect_workspace(&root)?;
+    let report = scan_sources(&files);
+
+    if let Some(path) = &opts.write_baseline {
+        let entries = baseline_from(&report);
+        let abs = if path.is_absolute() { path.clone() } else { root.join(path) };
+        std::fs::write(&abs, render_baseline(&entries))
+            .map_err(|e| format!("write {}: {e}", abs.display()))?;
+        println!("bss2-lint: wrote {} entr(ies) to {}", entries.len(), abs.display());
+        return Ok(0);
+    }
+
+    if opts.json {
+        print!("{}", render_json(&report));
+    }
+
+    // Gate against an explicit baseline, or the committed one when present.
+    let gate_path = match &opts.gate {
+        Some(p) => {
+            let abs = if p.is_absolute() { p.clone() } else { root.join(p) };
+            Some(abs)
+        }
+        None => {
+            let default = root.join("LINT_BASELINE.json");
+            default.exists().then_some(default)
+        }
+    };
+    let Some(gp) = gate_path else {
+        if !opts.json {
+            print!("{}", render_human(&report));
+        }
+        return Ok(0);
+    };
+    let text = std::fs::read_to_string(&gp).map_err(|e| format!("read {}: {e}", gp.display()))?;
+    let baseline = parse_baseline(&text)?;
+    let outcome = gate(&report, &baseline);
+    for n in &outcome.notes {
+        eprintln!("bss2-lint note: {n}");
+    }
+    if outcome.passed() {
+        if !opts.json {
+            println!(
+                "bss2-lint: gate clean — {} finding(s), {} annotated, baseline {}",
+                report.findings.len(),
+                report.findings.iter().filter(|f| f.allow.is_some()).count(),
+                gp.display()
+            );
+        }
+        Ok(0)
+    } else {
+        for f in &outcome.failures {
+            eprintln!("bss2-lint FAIL: {f}");
+        }
+        eprintln!("bss2-lint: {} gate failure(s) vs {}", outcome.failures.len(), gp.display());
+        Ok(1)
+    }
+}
+
+fn find_root() -> Result<PathBuf, String> {
+    let mut dir = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+    for _ in 0..10 {
+        let manifest = dir.join("Cargo.toml");
+        if manifest.is_file() {
+            if let Ok(text) = std::fs::read_to_string(&manifest) {
+                if text.contains("[workspace]") {
+                    return Ok(dir);
+                }
+            }
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    Err("could not find the workspace root (run from inside the repo or pass --root)".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(path: &str, src: &str) -> Report {
+        scan_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let entries = vec![
+            BaselineEntry { rule: "panic-index".into(), file: "rust/src/fleet/pool.rs".into(), count: 3 },
+            BaselineEntry { rule: "panic-unwrap".into(), file: "rust/src/x.rs".into(), count: 1 },
+        ];
+        let text = render_baseline(&entries);
+        assert_eq!(parse_baseline(&text).unwrap(), entries);
+        assert!(parse_baseline("{}").is_err(), "format marker required");
+    }
+
+    #[test]
+    fn gate_ratchet_semantics() {
+        let report = scan_one(
+            "rust/src/fleet/x.rs",
+            "fn f(v: &[u8], i: usize) -> u8 { v[i] }\n",
+        );
+        assert_eq!(report.findings.len(), 1);
+        // No baseline entry -> new finding -> failure.
+        assert!(!gate(&report, &[]).passed());
+        // Exact entry -> pass.
+        let base = vec![BaselineEntry {
+            rule: "panic-index".into(),
+            file: "rust/src/fleet/x.rs".into(),
+            count: 1,
+        }];
+        assert!(gate(&report, &base).passed());
+        // Loose entry -> pass with a note.
+        let loose = vec![BaselineEntry {
+            rule: "panic-index".into(),
+            file: "rust/src/fleet/x.rs".into(),
+            count: 5,
+        }];
+        let out = gate(&report, &loose);
+        assert!(out.passed() && !out.notes.is_empty());
+    }
+
+    #[test]
+    fn hard_families_ignore_the_baseline() {
+        let report = scan_one(
+            "rust/src/asic/x.rs",
+            "use std::collections::HashMap;\n",
+        );
+        assert_eq!(report.findings.len(), 1);
+        let base = vec![BaselineEntry {
+            rule: "det-unordered-map".into(),
+            file: "rust/src/asic/x.rs".into(),
+            count: 99,
+        }];
+        assert!(!gate(&report, &base).passed(), "determinism findings cannot be baselined");
+    }
+
+    #[test]
+    fn allow_annotation_feeds_the_budget() {
+        let report = scan_one(
+            "rust/src/asic/x.rs",
+            "fn f(x: f64) -> f64 { x.exp() } // lint:allow(det-float-intrinsic: seeded noise shaping)\n",
+        );
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].allow.as_deref(), Some("seeded noise shaping"));
+        assert!(gate(&report, &[]).passed());
+    }
+}

@@ -1,0 +1,56 @@
+//! `cargo run -p bss2-lint -- [--root DIR] [--json] [--gate FILE]
+//! [--write-baseline FILE]` — see DESIGN.md §16.
+//!
+//! With no flags: gates against `LINT_BASELINE.json` at the workspace root
+//! when it exists, otherwise prints the full report.  Exit codes: 0 clean,
+//! 1 gate failures, 2 usage/IO errors.
+
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+bss2-lint — workspace determinism & concurrency static analysis
+
+USAGE: bss2-lint [--root DIR] [--json] [--gate FILE] [--write-baseline FILE]
+
+  --root DIR             workspace root (default: discovered upward from CWD)
+  --json                 print the machine-readable findings report
+  --gate FILE            fail (exit 1) on findings not covered by FILE
+  --write-baseline FILE  regenerate the baseline from the current findings
+";
+
+fn main() {
+    let mut opts = bss2_lint::Options::default();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => opts.json = true,
+            "--root" | "--gate" | "--write-baseline" => {
+                let Some(v) = args.next() else {
+                    eprintln!("error: {a} needs a value\n{USAGE}");
+                    std::process::exit(2);
+                };
+                let p = PathBuf::from(v);
+                match a.as_str() {
+                    "--root" => opts.root = Some(p),
+                    "--gate" => opts.gate = Some(p),
+                    _ => opts.write_baseline = Some(p),
+                }
+            }
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return;
+            }
+            other => {
+                eprintln!("error: unknown argument `{other}`\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    }
+    match bss2_lint::run(&opts) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("bss2-lint error: {e}");
+            std::process::exit(2);
+        }
+    }
+}

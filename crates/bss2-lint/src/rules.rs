@@ -1,0 +1,751 @@
+//! The four rule families (DESIGN.md §16): determinism, panic-safety,
+//! lock discipline, and wire hygiene.
+//!
+//! Everything here works on the filtered token stream from [`crate::lexer`]
+//! — no AST.  Scoping is by path prefix, so the same rules run unchanged on
+//! fixture files in tests (they just get synthetic paths).
+
+use crate::lexer::{Kind, Tok};
+use crate::Finding;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Modules that must advance on chip time only and replay byte-identically.
+pub const SIM_PATHS: &[&str] = &[
+    "rust/src/asic/",
+    "rust/src/fpga/",
+    "rust/src/nn/",
+    "rust/src/calib/",
+    "rust/src/fault/",
+    "rust/src/train/",
+];
+
+/// Server paths where a panic tears down a worker or a connection.
+pub const PANIC_PATHS: &[&str] = &[
+    "rust/src/coordinator/service/",
+    "rust/src/fleet/",
+    "crates/bss2-proto/src/",
+];
+
+/// The wire crate: every `MAX_*` limit must be checked before the
+/// allocation it bounds.
+pub const WIRE_PATHS: &[&str] = &["crates/bss2-proto/src/"];
+
+/// libm-backed float intrinsics whose results are not guaranteed
+/// bit-identical across platforms (`sqrt` is IEEE-correctly-rounded and
+/// `powi` lowers to multiplies, so both stay legal).
+const BANNED_FLOAT: &[&str] = &[
+    "powf", "exp", "exp2", "exp_m1", "ln", "ln_1p", "log", "log2", "log10", "sin", "cos", "tan",
+    "asin", "acos", "atan", "atan2", "sinh", "cosh", "tanh",
+];
+
+const BANNED_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Idents that can legally precede `[` without it being an index
+/// expression (slice patterns, array types, ...).
+const KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern", "fn",
+    "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "super", "trait", "type", "unsafe", "use", "where", "while",
+];
+
+/// Method names that never acquire repo locks; calls to them while a guard
+/// is held are not worth tracking in the acquisition graph.
+const CALL_NOISE: &[&str] = &[
+    "lock", "unwrap", "expect", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "map",
+    "map_err", "and_then", "ok", "err", "ok_or", "ok_or_else", "iter", "into_iter", "drain",
+    "push", "pop", "insert", "remove", "get", "get_mut", "len", "is_empty", "clone",
+    "to_string", "as_ref", "as_mut", "as_str", "as_bytes", "take", "replace", "store", "load",
+    "compare_exchange", "send", "recv", "try_send", "try_recv", "contains", "contains_key",
+    "min", "max", "clamp", "collect", "filter", "rev", "enumerate", "extend", "entry",
+    "or_default", "or_insert", "or_insert_with", "values", "keys", "join", "wait", "notify_all",
+    "notify_one", "new", "drop", "format", "write", "writeln", "into", "from", "retain",
+    "position", "any", "all", "find", "count", "copied", "cloned", "chars", "next", "fmt",
+    "flush", "shutdown", "set_nodelay", "set_nonblocking", "to_vec", "starts_with", "ends_with",
+];
+
+pub fn in_any(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+fn finding(rule: &'static str, family: &'static str, file: &str, line: u32, snippet: String) -> Finding {
+    Finding { rule, family, file: file.to_string(), line, snippet, allow: None }
+}
+
+/// Determinism + panic-safety rules (path-scoped, single pass).
+pub fn file_findings(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let sim = in_any(path, SIM_PATHS);
+    let panicky = in_any(path, PANIC_PATHS);
+    if !sim && !panicky {
+        return;
+    }
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != Kind::Ident {
+            if panicky && t.is_punct('[') {
+                if let Some(s) = index_snippet(toks, i) {
+                    out.push(finding("panic-index", "panic-safety", path, t.line, s));
+                }
+            }
+            continue;
+        }
+        let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+        let next_paren = toks.get(i + 1).map_or(false, |n| n.is_punct('('));
+        let next_bang = toks.get(i + 1).map_or(false, |n| n.is_punct('!'));
+        if sim {
+            if t.text == "Instant" || t.text == "SystemTime" {
+                out.push(finding("det-wallclock", "determinism", path, t.line, t.text.clone()));
+            }
+            if t.text == "HashMap" || t.text == "HashSet" {
+                out.push(finding("det-unordered-map", "determinism", path, t.line, t.text.clone()));
+            }
+            if prev_dot && next_paren && BANNED_FLOAT.contains(&t.text.as_str()) {
+                out.push(finding(
+                    "det-float-intrinsic",
+                    "determinism",
+                    path,
+                    t.line,
+                    format!(".{}()", t.text),
+                ));
+            }
+        }
+        if panicky {
+            if prev_dot && next_paren && (t.text == "unwrap" || t.text == "expect") {
+                out.push(finding(
+                    "panic-unwrap",
+                    "panic-safety",
+                    path,
+                    t.line,
+                    format!(".{}()", t.text),
+                ));
+            }
+            if next_bang && BANNED_MACROS.contains(&t.text.as_str()) {
+                out.push(finding(
+                    "panic-macro",
+                    "panic-safety",
+                    path,
+                    t.line,
+                    format!("{}!", t.text),
+                ));
+            }
+        }
+    }
+}
+
+/// `Some(snippet)` when `toks[open]` (a `[`) is a fallible index expression.
+///
+/// Single integer literals (`buf[0]`) and full ranges (`buf[..]`) are
+/// considered benign: the former is the fixed-layout style the handshake
+/// and header parsers use and cannot be wrong twice, the latter cannot
+/// panic at all.  Everything computed (`buf[i]`, `buf[n..m]`) is flagged.
+fn index_snippet(toks: &[Tok], open: usize) -> Option<String> {
+    if open == 0 {
+        return None;
+    }
+    let prev = &toks[open - 1];
+    let indexable = match prev.kind {
+        Kind::Ident => !KEYWORDS.contains(&prev.text.as_str()),
+        Kind::Punct => prev.is_punct(')') || prev.is_punct(']'),
+        _ => false,
+    };
+    if !indexable {
+        return None;
+    }
+    let mut depth = 1usize;
+    let mut k = open + 1;
+    let mut inner: Vec<&Tok> = Vec::new();
+    while k < toks.len() && depth > 0 {
+        if toks[k].is_punct('[') {
+            depth += 1;
+        } else if toks[k].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        inner.push(&toks[k]);
+        k += 1;
+    }
+    if inner.len() == 1 && inner[0].kind == Kind::Num {
+        return None;
+    }
+    if inner.len() == 2 && inner[0].is_punct('.') && inner[1].is_punct('.') {
+        return None;
+    }
+    let mut s = String::new();
+    if prev.kind == Kind::Ident {
+        s.push_str(&prev.text);
+    }
+    s.push('[');
+    for (n, t) in inner.iter().take(6).enumerate() {
+        if n > 0 && t.kind != Kind::Punct && inner[n - 1].kind != Kind::Punct {
+            s.push(' ');
+        }
+        s.push_str(if t.kind == Kind::Str { "\u{201c}\u{201d}" } else { &t.text });
+    }
+    if inner.len() > 6 {
+        s.push('\u{2026}');
+    }
+    s.push(']');
+    Some(s)
+}
+
+/// Wire hygiene, part 1: allocations sized by a runtime value must follow a
+/// limit check (`MAX_*`, or the `count`/`take`/`min` pre-validation
+/// helpers) earlier in the same function.
+pub fn wire_alloc_findings(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, WIRE_PATHS) {
+        return;
+    }
+    for_each_fn(toks, |_name, body| {
+        for i in 0..body.len() {
+            let t = &body[i];
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let size: Option<Vec<&Tok>> = if (t.text == "with_capacity" || t.text == "reserve")
+                && body.get(i + 1).map_or(false, |n| n.is_punct('('))
+            {
+                Some(group_contents(body, i + 1, '(', ')'))
+            } else if t.text == "vec" && body.get(i + 1).map_or(false, |n| n.is_punct('!')) {
+                body.get(i + 2).filter(|n| n.is_punct('[')).map(|_| {
+                    let inner = group_contents(body, i + 2, '[', ']');
+                    match inner.iter().position(|t| t.is_punct(';')) {
+                        Some(p) => inner[p + 1..].to_vec(),
+                        None => Vec::new(),
+                    }
+                })
+            } else {
+                None
+            };
+            let Some(size) = size else { continue };
+            let runtime_sized = size
+                .iter()
+                .any(|s| s.kind == Kind::Ident && s.text.chars().any(|c| c.is_lowercase()));
+            if !runtime_sized {
+                continue;
+            }
+            let guarded = body[..i].iter().any(|g| {
+                g.kind == Kind::Ident
+                    && (g.text.starts_with("MAX_")
+                        || g.text == "count"
+                        || g.text == "take"
+                        || g.text == "min")
+            });
+            if !guarded {
+                out.push(finding(
+                    "wire-unchecked-alloc",
+                    "wire-hygiene",
+                    path,
+                    t.line,
+                    format!("{}(..)", t.text),
+                ));
+            }
+        }
+    });
+}
+
+/// Wire hygiene, part 2 (global): every `MAX_*` constant declared in the
+/// wire crate must appear in at least one comparison / range / clamp
+/// somewhere in the workspace.
+#[derive(Debug, Clone)]
+pub struct LimitDecl {
+    pub name: String,
+    pub file: String,
+    pub line: u32,
+}
+
+pub fn limit_decls(path: &str, toks: &[Tok], out: &mut Vec<LimitDecl>) {
+    if !in_any(path, WIRE_PATHS) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].is_ident("const")
+            && toks.get(i + 1).map_or(false, |n| n.kind == Kind::Ident && n.text.starts_with("MAX_"))
+        {
+            out.push(LimitDecl {
+                name: toks[i + 1].text.clone(),
+                file: path.to_string(),
+                line: toks[i + 1].line,
+            });
+        }
+    }
+}
+
+pub fn guarded_limit_uses(toks: &[Tok], out: &mut BTreeSet<String>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != Kind::Ident || !t.text.starts_with("MAX_") {
+            continue;
+        }
+        if i >= 1 && toks[i - 1].is_ident("const") {
+            continue; // the declaration itself
+        }
+        let lo = i.saturating_sub(3);
+        let hi = (i + 4).min(toks.len());
+        let win = &toks[lo..hi];
+        let relational = win.iter().any(|w| w.is_punct('<') || w.is_punct('>'));
+        let helper = win
+            .iter()
+            .any(|w| w.is_ident("min") || w.is_ident("max") || w.is_ident("contains") || w.is_ident("clamp"));
+        let range = win.windows(2).any(|p| p[0].is_punct('.') && p[1].is_punct('.'));
+        if relational || helper || range {
+            out.insert(t.text.clone());
+        }
+    }
+}
+
+/// Tokens inside the bracket group opening at `body[open]` (exclusive).
+fn group_contents<'a>(body: &'a [Tok], open: usize, oc: char, cc: char) -> Vec<&'a Tok> {
+    let mut depth = 1usize;
+    let mut k = open + 1;
+    let mut inner = Vec::new();
+    while k < body.len() && depth > 0 {
+        if body[k].is_punct(oc) {
+            depth += 1;
+        } else if body[k].is_punct(cc) {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        inner.push(&body[k]);
+        k += 1;
+    }
+    inner
+}
+
+/// Call `f(name, body)` for every `fn name(..) { body }` in the stream
+/// (bodies include their outer braces; nested fns are visited too).
+pub fn for_each_fn<'a>(toks: &'a [Tok], mut f: impl FnMut(&str, &'a [Tok])) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].is_ident("fn") && toks.get(i + 1).map_or(false, |n| n.kind == Kind::Ident) {
+            let name = &toks[i + 1].text;
+            let mut j = i + 2;
+            let mut body_start = None;
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    body_start = Some(j);
+                    break;
+                }
+                if toks[j].is_punct(';') {
+                    break; // trait method declaration, no body
+                }
+                j += 1;
+            }
+            if let Some(s) = body_start {
+                let mut depth = 0i32;
+                let mut k = s;
+                while k < toks.len() {
+                    if toks[k].is_punct('{') {
+                        depth += 1;
+                    } else if toks[k].is_punct('}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                f(name, &toks[s..k.min(toks.len())]);
+                i = s + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock discipline
+// ---------------------------------------------------------------------------
+
+/// One observed "A held while acquiring B" site.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Per-function lock facts extracted from one file.
+#[derive(Debug, Default)]
+pub struct FnFacts {
+    pub name: String,
+    pub file: String,
+    /// Lock names this function acquires directly.
+    pub locks: BTreeSet<String>,
+    /// Snake-case callees (for one-level summary propagation).
+    pub calls: BTreeSet<String>,
+    /// Direct nested acquisitions: guard of `from` live while `to` is taken.
+    pub direct_edges: Vec<Edge>,
+    /// (held lock, callee) pairs for the informational graph.
+    pub calls_while_holding: Vec<(String, String, u32)>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Until {
+    /// Guard is `let`-bound (or a loop/match scrutinee temporary): lives to
+    /// the end of the enclosing block, i.e. while depth >= this value.
+    Scope(i32),
+    /// Plain expression statement temporary: dies at the next `;` at or
+    /// below this depth.
+    Stmt(i32),
+    /// A `compare_exchange(false, true)` latch: released by
+    /// `.store(false)` on the same name, or at function end.
+    Latch,
+}
+
+#[derive(Debug, Clone)]
+struct Hold {
+    name: String,
+    var: Option<String>,
+    until: Until,
+}
+
+pub fn lock_facts(path: &str, toks: &[Tok], out: &mut Vec<FnFacts>) {
+    for_each_fn(toks, |name, body| {
+        let mut facts = FnFacts {
+            name: name.to_string(),
+            file: path.to_string(),
+            ..FnFacts::default()
+        };
+        walk_fn_body(path, body, &mut facts);
+        if !facts.locks.is_empty() || !facts.calls.is_empty() {
+            out.push(facts);
+        }
+    });
+}
+
+fn walk_fn_body(path: &str, body: &[Tok], facts: &mut FnFacts) {
+    let mut held: Vec<Hold> = Vec::new();
+    let mut depth = 0i32;
+    let mut k = 0usize;
+    while k < body.len() {
+        let t = &body[k];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            held.retain(|h| match h.until {
+                Until::Scope(d) => depth >= d,
+                Until::Stmt(d) => depth >= d,
+                Until::Latch => true,
+            });
+        } else if t.is_punct(';') {
+            held.retain(|h| match h.until {
+                Until::Stmt(d) => depth > d,
+                _ => true,
+            });
+        } else if t.is_ident("fn") && body.get(k + 1).map_or(false, |n| n.kind == Kind::Ident) {
+            // Nested fn item: analysed separately by for_each_fn; skip its
+            // body here so its acquisitions are not charged to us.
+            let mut j = k + 2;
+            while j < body.len() && !body[j].is_punct('{') && !body[j].is_punct(';') {
+                j += 1;
+            }
+            if j < body.len() && body[j].is_punct('{') {
+                let mut d = 0i32;
+                while j < body.len() {
+                    if body[j].is_punct('{') {
+                        d += 1;
+                    } else if body[j].is_punct('}') {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            k = j + 1;
+            continue;
+        } else if t.is_ident("drop")
+            && body.get(k + 1).map_or(false, |n| n.is_punct('('))
+            && body.get(k + 3).map_or(false, |n| n.is_punct(')'))
+        {
+            if let Some(v) = body.get(k + 2).filter(|v| v.kind == Kind::Ident) {
+                held.retain(|h| h.var.as_deref() != Some(v.text.as_str()));
+            }
+        } else if t.is_punct('.') {
+            let meth = body.get(k + 1);
+            let paren = body.get(k + 2).map_or(false, |n| n.is_punct('('));
+            if let (Some(m), true) = (meth, paren) {
+                if m.is_ident("lock") {
+                    let name = receiver_name(body, k);
+                    acquire(path, body, k, m.line, name, depth, &mut held, facts, false);
+                    k += 2;
+                    continue;
+                }
+                if m.is_ident("compare_exchange")
+                    && body.get(k + 3).map_or(false, |n| n.is_ident("false"))
+                    && body.get(k + 4).map_or(false, |n| n.is_punct(','))
+                    && body.get(k + 5).map_or(false, |n| n.is_ident("true"))
+                {
+                    let name = receiver_name(body, k);
+                    acquire(path, body, k, m.line, name, depth, &mut held, facts, true);
+                    k += 2;
+                    continue;
+                }
+                if m.is_ident("store") && body.get(k + 3).map_or(false, |n| n.is_ident("false")) {
+                    let name = receiver_name(body, k);
+                    held.retain(|h| !(h.until == Until::Latch && h.name == name));
+                }
+            }
+        } else if t.kind == Kind::Ident
+            && body.get(k + 1).map_or(false, |n| n.is_punct('('))
+            && !CALL_NOISE.contains(&t.text.as_str())
+            && t.text.chars().next().map_or(false, |c| c.is_lowercase())
+        {
+            facts.calls.insert(t.text.clone());
+            for h in &held {
+                facts.calls_while_holding.push((h.name.clone(), t.text.clone(), t.line));
+            }
+        }
+        k += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    path: &str,
+    body: &[Tok],
+    dot: usize,
+    line: u32,
+    name: String,
+    depth: i32,
+    held: &mut Vec<Hold>,
+    facts: &mut FnFacts,
+    latch: bool,
+) {
+    for h in held.iter() {
+        if h.name != name {
+            facts.direct_edges.push(Edge {
+                from: h.name.clone(),
+                to: name.clone(),
+                file: path.to_string(),
+                line,
+            });
+        }
+    }
+    facts.locks.insert(name.clone());
+    let (until, var) = if latch {
+        (Until::Latch, None)
+    } else {
+        statement_binding(body, dot, depth)
+    };
+    held.push(Hold { name, var, until });
+}
+
+/// Look back to the start of the statement containing `dot` to decide how
+/// long the guard lives, and capture a `let`-bound variable name if any.
+fn statement_binding(body: &[Tok], dot: usize, depth: i32) -> (Until, Option<String>) {
+    let mut s = dot;
+    while s > 0 {
+        let p = &body[s - 1];
+        if p.is_punct(';') || p.is_punct('{') || p.is_punct('}') {
+            break;
+        }
+        s -= 1;
+    }
+    let head: Vec<&Tok> = body[s..(s + 3).min(body.len())].iter().collect();
+    let has_let = head.iter().any(|t| t.is_ident("let"));
+    let scoped = has_let
+        || head.first().map_or(false, |t| {
+            t.is_ident("for") || t.is_ident("while") || t.is_ident("match") || t.is_ident("if")
+        });
+    let var = if has_let {
+        body[s..dot]
+            .iter()
+            .skip_while(|t| !t.is_ident("let"))
+            .skip(1)
+            .find(|t| t.kind == Kind::Ident && t.text != "mut")
+            .map(|t| t.text.clone())
+    } else {
+        None
+    };
+    if scoped {
+        (Until::Scope(depth), var)
+    } else {
+        (Until::Stmt(depth), var)
+    }
+}
+
+/// Last path segment of the receiver chain ending just before `body[dot]`.
+fn receiver_name(body: &[Tok], dot: usize) -> String {
+    if dot == 0 {
+        return "<expr>".to_string();
+    }
+    let p = &body[dot - 1];
+    match p.kind {
+        Kind::Ident => p.text.clone(),
+        Kind::Punct if p.is_punct(')') || p.is_punct(']') => {
+            let (oc, cc) = if p.is_punct(')') { ('(', ')') } else { ('[', ']') };
+            let mut d = 0i32;
+            let mut k = dot - 1;
+            loop {
+                if body[k].is_punct(cc) {
+                    d += 1;
+                } else if body[k].is_punct(oc) {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                if k == 0 {
+                    break;
+                }
+                k -= 1;
+            }
+            if k > 0 && body[k - 1].kind == Kind::Ident {
+                receiver_name(body, k) // ident before the group, e.g. `handles[i].tx`
+            } else {
+                "<expr>".to_string()
+            }
+        }
+        _ => "<expr>".to_string(),
+    }
+}
+
+/// Global lock-order analysis over all collected facts.
+pub struct LockReport {
+    /// Gate-relevant findings: cycles in the *direct* acquisition graph.
+    pub cycles: Vec<Finding>,
+    /// Deduplicated direct edges (for the report / JSON output).
+    pub edges: Vec<Edge>,
+    /// Informational held-across-call edges via one-level fn summaries.
+    pub info_edges: Vec<Edge>,
+}
+
+pub fn analyze_locks(facts: &[FnFacts]) -> LockReport {
+    let mut edges: Vec<Edge> = Vec::new();
+    for f in facts {
+        for e in &f.direct_edges {
+            if !edges.iter().any(|x| x.from == e.from && x.to == e.to) {
+                edges.push(e.clone());
+            }
+        }
+    }
+    edges.sort();
+
+    // Transitive lock summaries: fn name -> locks reachable through calls.
+    let mut summary: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in facts {
+        summary.entry(f.name.clone()).or_default().extend(f.locks.iter().cloned());
+    }
+    for _ in 0..8 {
+        let mut changed = false;
+        for f in facts {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for callee in &f.calls {
+                if let Some(s) = summary.get(callee) {
+                    add.extend(s.iter().cloned());
+                }
+            }
+            let own = summary.entry(f.name.clone()).or_default();
+            for l in add {
+                changed |= own.insert(l);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut info_edges: Vec<Edge> = Vec::new();
+    for f in facts {
+        for (held, callee, line) in &f.calls_while_holding {
+            if let Some(locks) = summary.get(callee) {
+                for l in locks {
+                    if l != held
+                        && !info_edges.iter().any(|x| &x.from == held && &x.to == l)
+                        && !edges.iter().any(|x| &x.from == held && &x.to == l)
+                    {
+                        info_edges.push(Edge {
+                            from: held.clone(),
+                            to: l.clone(),
+                            file: f.file.clone(),
+                            line: *line,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    info_edges.sort();
+
+    let cycles = find_cycles(&edges)
+        .into_iter()
+        .map(|cyc| {
+            let first = edges
+                .iter()
+                .find(|e| e.from == cyc[0] && e.to == cyc[1])
+                .cloned()
+                .unwrap_or_else(|| Edge {
+                    from: cyc[0].clone(),
+                    to: cyc[1].clone(),
+                    file: String::new(),
+                    line: 0,
+                });
+            Finding {
+                rule: "lock-order-cycle",
+                family: "lock-discipline",
+                file: first.file,
+                line: first.line,
+                snippet: cyc.join(" -> "),
+                allow: None,
+            }
+        })
+        .collect();
+
+    LockReport { cycles, edges, info_edges }
+}
+
+/// All elementary cycles, canonicalised (rotated to start at the smallest
+/// node, closed with the starting node repeated at the end).
+fn find_cycles(edges: &[Edge]) -> Vec<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(e.from.as_str()).or_default().push(e.to.as_str());
+    }
+    let mut cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for start in nodes {
+        let mut path: Vec<&str> = vec![start];
+        dfs(start, &adj, &mut path, &mut cycles);
+    }
+    cycles.into_iter().collect()
+}
+
+fn dfs<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    path: &mut Vec<&'a str>,
+    cycles: &mut BTreeSet<Vec<String>>,
+) {
+    if path.len() > 16 {
+        return; // degenerate graphs: bail rather than blow the stack
+    }
+    let Some(nexts) = adj.get(node) else { return };
+    for &n in nexts {
+        if let Some(pos) = path.iter().position(|p| *p == n) {
+            let cyc = &path[pos..];
+            // canonical rotation: start at the lexicographically smallest
+            let min_i = cyc
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, s)| *s)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let mut canon: Vec<String> =
+                cyc.iter().cycle().skip(min_i).take(cyc.len()).map(|s| s.to_string()).collect();
+            canon.push(canon[0].clone());
+            cycles.insert(canon);
+            continue;
+        }
+        path.push(n);
+        dfs(n, adj, path, cycles);
+        path.pop();
+    }
+}

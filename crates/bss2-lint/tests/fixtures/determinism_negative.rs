@@ -1,0 +1,13 @@
+// Fixture: the deterministic idioms the rules must NOT flag, plus one
+// intentionally banned call carrying a lint:allow annotation.
+use std::collections::BTreeMap;
+
+pub fn clean(xs: &[f64]) -> f64 {
+    let mut m: BTreeMap<u32, f64> = BTreeMap::new();
+    // sqrt is IEEE-correctly-rounded, powi is compile-time multiplies:
+    // both are bit-exact across hosts and stay legal.
+    m.insert(0, xs[0].sqrt() + xs[0].powi(2));
+    // lint:allow(det-float-intrinsic: fixture demonstrates an annotated site)
+    m.insert(1, xs[0].exp());
+    m.len() as f64
+}

@@ -1,0 +1,13 @@
+// Fixture: every determinism rule fires when this text is scanned under a
+// simulation path (tests feed it in as `rust/src/asic/fixture.rs`).  It is
+// never compiled — `tests/fixtures/` is data, not a test target.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn tainted(xs: &[f64]) -> f64 {
+    let t = Instant::now();
+    let mut m: HashMap<u32, f64> = HashMap::new();
+    m.insert(0, xs[0].powf(2.0));
+    let _ = t;
+    m.len() as f64
+}

@@ -1,0 +1,28 @@
+// Fixture: a three-lock acquisition-order cycle — alpha→beta, beta→gamma,
+// gamma→alpha via direct nesting.  The lock-discipline pass must report
+// exactly one canonical cycle.
+pub struct Trio {
+    alpha: std::sync::Mutex<u32>,
+    beta: std::sync::Mutex<u32>,
+    gamma: std::sync::Mutex<u32>,
+}
+
+impl Trio {
+    pub fn ab(&self) {
+        let a = self.alpha.lock();
+        let _b = self.beta.lock();
+        drop(a);
+    }
+
+    pub fn bc(&self) {
+        let b = self.beta.lock();
+        let _c = self.gamma.lock();
+        drop(b);
+    }
+
+    pub fn ca(&self) {
+        let c = self.gamma.lock();
+        let _a = self.alpha.lock();
+        drop(c);
+    }
+}

@@ -1,0 +1,12 @@
+// Fixture: panic-free server-path idioms — typed errors, `.get()`, benign
+// literal indexing — plus an annotated invariant `unreachable!`.
+pub fn sturdy(xs: &[u32], i: usize) -> Result<u32, String> {
+    let first = xs.first().ok_or("empty batch")?;
+    let probe = xs[0];
+    match xs.get(i) {
+        Some(v) => Ok(v + first + probe),
+        // lint:allow(panic-macro: fixture demonstrates an annotated invariant)
+        None if i == usize::MAX => unreachable!("caller clamps i"),
+        None => Err(format!("index {i} out of range")),
+    }
+}

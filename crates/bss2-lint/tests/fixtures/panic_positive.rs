@@ -1,0 +1,9 @@
+// Fixture: every panic-safety rule fires when scanned under a server path
+// (tests feed it in as `rust/src/fleet/fixture.rs`).
+pub fn brittle(xs: &[u32], i: usize) -> u32 {
+    let first = xs.first().unwrap();
+    if *first > 9000 {
+        panic!("impossible reading");
+    }
+    xs[i] + first
+}

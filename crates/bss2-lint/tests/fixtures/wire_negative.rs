@@ -1,0 +1,12 @@
+// Fixture: the compliant wire idiom — the count is validated against its
+// MAX_* limit before the allocation, so both wire rules stay quiet.
+pub const MAX_ITEMS: usize = 64;
+
+pub fn decode_items(n: usize) -> Option<Vec<u32>> {
+    if n > MAX_ITEMS {
+        return None;
+    }
+    let mut items = Vec::with_capacity(n);
+    items.push(0);
+    Some(items)
+}

@@ -1,0 +1,10 @@
+// Fixture: wire-hygiene violations — a runtime-sized allocation with no
+// preceding limit check, and a declared MAX_* constant nothing ever
+// enforces (tests feed it in as `crates/bss2-proto/src/fixture.rs`).
+pub const MAX_ORPHAN_ITEMS: usize = 64;
+
+pub fn decode_items(n: usize) -> Vec<u32> {
+    let mut items = Vec::with_capacity(n);
+    items.push(0);
+    items
+}

@@ -1,0 +1,155 @@
+//! Rule-family self-tests: each fixture under `tests/fixtures/` is fed to
+//! [`bss2_lint::scan_sources`] under a synthetic workspace path (scoping is
+//! path-driven), so positives, negatives, and `lint:allow` budgeting are
+//! pinned without compiling the fixtures.  The final test gates the real
+//! workspace against the committed `LINT_BASELINE.json` — the same check
+//! CI runs — so the baseline can never silently rot.
+
+use std::path::Path;
+
+use bss2_lint::{baseline_from, gate, parse_baseline, scan_sources, Report};
+
+const DET_POS: &str = include_str!("fixtures/determinism_positive.rs");
+const DET_NEG: &str = include_str!("fixtures/determinism_negative.rs");
+const PANIC_POS: &str = include_str!("fixtures/panic_positive.rs");
+const PANIC_NEG: &str = include_str!("fixtures/panic_negative.rs");
+const LOCK_CYCLE: &str = include_str!("fixtures/lock_cycle.rs");
+const WIRE_POS: &str = include_str!("fixtures/wire_positive.rs");
+const WIRE_NEG: &str = include_str!("fixtures/wire_negative.rs");
+
+fn scan(path: &str, src: &str) -> Report {
+    scan_sources(&[(path.to_string(), src.to_string())])
+}
+
+fn rules(report: &Report) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn determinism_positives_fire_in_sim_paths() {
+    let r = scan("rust/src/asic/fixture.rs", DET_POS);
+    let rs = rules(&r);
+    assert!(rs.contains(&"det-wallclock"), "Instant must be flagged: {rs:?}");
+    assert!(rs.contains(&"det-unordered-map"), "HashMap must be flagged: {rs:?}");
+    assert!(rs.contains(&"det-float-intrinsic"), "powf must be flagged: {rs:?}");
+    assert!(r.findings.iter().all(|f| f.allow.is_none()));
+}
+
+#[test]
+fn determinism_rules_are_scoped_to_sim_paths() {
+    // The identical source outside the simulation tree is none of the
+    // determinism family's business (wall-clock in telemetry is fine).
+    let r = scan("rust/src/obs/fixture.rs", DET_POS);
+    assert!(
+        r.findings.is_empty(),
+        "non-sim path must not be flagged: {:?}",
+        rules(&r)
+    );
+}
+
+#[test]
+fn determinism_negative_fixture_is_clean_modulo_allowed() {
+    let r = scan("rust/src/asic/fixture.rs", DET_NEG);
+    // sqrt/powi/BTreeMap are legal; the one banned call is annotated.
+    let un: Vec<_> = r.findings.iter().filter(|f| f.allow.is_none()).collect();
+    assert!(un.is_empty(), "unexpected un-annotated findings: {un:?}");
+    let allowed: Vec<_> = r.findings.iter().filter(|f| f.allow.is_some()).collect();
+    assert_eq!(allowed.len(), 1, "exactly the annotated exp() site");
+    assert_eq!(allowed[0].rule, "det-float-intrinsic");
+    // Annotated findings never enter a regenerated baseline.
+    assert!(baseline_from(&r).is_empty());
+}
+
+#[test]
+fn panic_positives_fire_in_server_paths() {
+    let r = scan("rust/src/fleet/fixture.rs", PANIC_POS);
+    let rs = rules(&r);
+    assert!(rs.contains(&"panic-unwrap"), "unwrap must be flagged: {rs:?}");
+    assert!(rs.contains(&"panic-macro"), "panic! must be flagged: {rs:?}");
+    assert!(rs.contains(&"panic-index"), "xs[i] must be flagged: {rs:?}");
+    // Same source in a non-server path: no panic-safety findings.
+    let elsewhere = scan("rust/src/asic/fixture.rs", PANIC_POS);
+    assert!(!rules(&elsewhere).contains(&"panic-unwrap"));
+}
+
+#[test]
+fn panic_negative_fixture_is_clean_modulo_allowed() {
+    let r = scan("rust/src/fleet/fixture.rs", PANIC_NEG);
+    let un: Vec<_> = r.findings.iter().filter(|f| f.allow.is_none()).collect();
+    assert!(un.is_empty(), "typed errors, .get(), and literal indices are legal: {un:?}");
+    let allowed: Vec<_> = r.findings.iter().filter(|f| f.allow.is_some()).collect();
+    assert_eq!(allowed.len(), 1, "exactly the annotated unreachable!");
+    assert_eq!(allowed[0].rule, "panic-macro");
+}
+
+#[test]
+fn three_lock_cycle_is_detected() {
+    let r = scan("rust/src/fleet/fixture.rs", LOCK_CYCLE);
+    let cycles: Vec<_> =
+        r.findings.iter().filter(|f| f.rule == "lock-order-cycle").collect();
+    assert_eq!(cycles.len(), 1, "one canonical cycle: {:?}", r.findings);
+    let s = &cycles[0].snippet;
+    for lock in ["alpha", "beta", "gamma"] {
+        assert!(s.contains(lock), "cycle {s:?} must name {lock}");
+    }
+    assert_eq!(r.lock_edges.len(), 3, "three direct-nesting edges");
+}
+
+#[test]
+fn consistent_lock_order_has_no_cycle() {
+    // Drop the closing fn: alpha→beta→gamma alone is a clean partial order.
+    let consistent = LOCK_CYCLE
+        .replace("self.gamma.lock();\n        let _a = self.alpha.lock()", "self.gamma.lock()");
+    let r = scan("rust/src/fleet/fixture.rs", &consistent);
+    assert!(
+        !rules(&r).contains(&"lock-order-cycle"),
+        "acyclic order must pass: {:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn wire_rules_catch_unchecked_allocs_and_orphan_limits() {
+    let r = scan("crates/bss2-proto/src/fixture.rs", WIRE_POS);
+    let rs = rules(&r);
+    assert!(rs.contains(&"wire-unchecked-alloc"), "with_capacity(n): {rs:?}");
+    assert!(rs.contains(&"wire-unguarded-limit"), "MAX_ORPHAN_ITEMS: {rs:?}");
+
+    let clean = scan("crates/bss2-proto/src/fixture.rs", WIRE_NEG);
+    assert!(
+        clean.findings.is_empty(),
+        "limit-checked alloc must pass: {:?}",
+        rules(&clean)
+    );
+}
+
+#[test]
+fn committed_baseline_gates_the_real_workspace() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let files = bss2_lint::collect_workspace(&root).expect("collect workspace");
+    let report = scan_sources(&files);
+
+    // The ISSUE-level invariant: determinism and lock-discipline are
+    // hard-clean — every banned construct is either fixed or carries a
+    // reviewed lint:allow reason.
+    let hard: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| {
+            bss2_lint::HARD_FAMILIES.contains(&f.family) && f.allow.is_none()
+        })
+        .collect();
+    assert!(hard.is_empty(), "hard-family findings must be fixed or annotated: {hard:?}");
+
+    // The committed ratchet budget parses and the gate passes against it —
+    // the same check `repro audit` and the CI lint job run.
+    let text = std::fs::read_to_string(root.join("LINT_BASELINE.json"))
+        .expect("read LINT_BASELINE.json");
+    let baseline = parse_baseline(&text).expect("parse committed baseline");
+    assert!(
+        baseline.iter().all(|e| e.rule.starts_with("panic-")),
+        "only panic-safety budget entries belong in the baseline"
+    );
+    let outcome = gate(&report, &baseline);
+    assert!(outcome.passed(), "gate failures: {:?}", outcome.failures);
+}

@@ -83,6 +83,7 @@ fn encode_value(v: &Json, out: &mut Vec<u8>) {
                 out.push(TAG_U16S);
                 out.extend_from_slice(&(items.len() as u32).to_le_bytes());
                 for item in items {
+                    // lint:allow(panic-macro: is_packable_u16 admits only Json::Num)
                     let Json::Num(n) = item else { unreachable!() };
                     out.extend_from_slice(&(*n as u16).to_le_bytes());
                 }
@@ -132,11 +133,11 @@ impl<'a> Reader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8], BinError> {
-        if n > self.remaining() {
-            return Err(BinError::Truncated);
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        // checked_add: on 32-bit hosts `pos + n` can wrap for a hostile
+        // u32 length, turning a too-long read into a short in-bounds one.
+        let end = self.pos.checked_add(n).ok_or(BinError::Truncated)?;
+        let s = self.buf.get(self.pos..end).ok_or(BinError::Truncated)?;
+        self.pos = end;
         Ok(s)
     }
 

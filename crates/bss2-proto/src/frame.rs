@@ -10,8 +10,10 @@ pub const HEADER_LEN: usize = 4;
 
 #[derive(Debug, thiserror::Error, PartialEq, Eq)]
 pub enum FrameError {
+    /// `len` is u64: the offending length comes straight off the wire
+    /// and must survive reporting even where it exceeds `usize::MAX`.
     #[error("frame of {len} bytes exceeds the {max}-byte limit")]
-    TooLarge { len: usize, max: usize },
+    TooLarge { len: u64, max: usize },
 }
 
 /// Total length (header + payload) of the first frame in `buf`, if a
@@ -22,13 +24,15 @@ pub fn first_frame_len(buf: &[u8]) -> Result<Option<usize>, FrameError> {
     if buf.len() < HEADER_LEN {
         return Ok(None);
     }
-    let len =
-        u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
-    let total = HEADER_LEN + len;
-    if total > MAX_FRAME {
+    // Widen to u64 before adding the header: on a 32-bit host
+    // `HEADER_LEN + (u32::MAX as usize)` wraps, and the wrapped total
+    // would sail under MAX_FRAME and be treated as a tiny valid frame.
+    let len = u64::from(u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]));
+    let total = HEADER_LEN as u64 + len;
+    if total > MAX_FRAME as u64 {
         return Err(FrameError::TooLarge { len: total, max: MAX_FRAME });
     }
-    Ok(Some(total))
+    Ok(Some(total as usize))
 }
 
 /// Append one framed payload to `out`.
@@ -70,7 +74,7 @@ mod tests {
         assert_eq!(
             first_frame_len(&buf),
             Err(FrameError::TooLarge {
-                len: HEADER_LEN + MAX_FRAME,
+                len: (HEADER_LEN + MAX_FRAME) as u64,
                 max: MAX_FRAME
             })
         );

@@ -138,7 +138,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), ParseError> {
+    fn eat(&mut self, c: u8) -> Result<(), ParseError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -161,7 +161,8 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, ParseError> {
-        if self.b[self.pos..].starts_with(word.as_bytes()) {
+        let rest = self.b.get(self.pos..).unwrap_or_default();
+        if rest.starts_with(word.as_bytes()) {
             self.pos += word.len();
             Ok(v)
         } else {
@@ -192,7 +193,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos])
+        let digits = self.b.get(start..self.pos).unwrap_or_default();
+        let text = std::str::from_utf8(digits)
             .map_err(|_| self.err("invalid utf8 in number"))?;
         text.parse::<f64>()
             .map(Json::Num)
@@ -200,7 +202,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -221,13 +223,11 @@ impl<'a> Parser<'a> {
                         Some(b'r') => s.push('\r'),
                         Some(b't') => s.push('\t'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex = std::str::from_utf8(
-                                &self.b[self.pos + 1..self.pos + 5],
-                            )
-                            .map_err(|_| self.err("bad \\u escape"))?;
+                            let hex = self
+                                .b
+                                .get(self.pos + 1..self.pos + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
@@ -243,9 +243,12 @@ impl<'a> Parser<'a> {
                 }
                 Some(_) => {
                     // Multi-byte UTF-8: copy the full scalar.
-                    let rest = std::str::from_utf8(&self.b[self.pos..])
+                    let tail = self.b.get(self.pos..).unwrap_or_default();
+                    let rest = std::str::from_utf8(tail)
                         .map_err(|_| self.err("invalid utf8"))?;
-                    let ch = rest.chars().next().unwrap();
+                    let Some(ch) = rest.chars().next() else {
+                        return Err(self.err("invalid utf8"));
+                    };
                     s.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -254,7 +257,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -277,7 +280,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -288,7 +291,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let key = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.ws();
             let val = self.value()?;
             m.insert(key, val);

@@ -112,7 +112,7 @@ pub struct NativeChip {
     queued: [Vec<u8>; c::N_HALVES],
     adc_latch: [Vec<i16>; c::N_HALVES],
     /// DRAM slots (via the FPGA memory switch) for activations/results.
-    pub slots: std::collections::HashMap<u8, Vec<i32>>,
+    pub slots: std::collections::BTreeMap<u8, Vec<i32>>,
     pub noise_rng: SplitMix64,
     pub noise_sigma: f64,
     pub stats: ChipStats,

@@ -113,6 +113,7 @@ impl SpikingPopulation {
             }
             // AdEx membrane dynamics.
             let exp_term = if p.delta_t > 0.0 {
+                // lint:allow(det-float-intrinsic: AdEx spike term; libm exp fixed per build)
                 p.delta_t * ((n.v - p.v_thresh) / p.delta_t).exp()
             } else {
                 0.0

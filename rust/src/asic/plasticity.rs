@@ -48,9 +48,11 @@ impl CorrelationSensor {
     /// Record a (pre, post) spike pair with `dt_us = t_post - t_pre`.
     pub fn record_pair(&mut self, dt_us: f64, p: &SensorParams) {
         if dt_us >= 0.0 {
+            // lint:allow(det-float-intrinsic: STDP kernel; libm exp fixed per build)
             let w = (-dt_us / p.tau_plus_us).exp() as f32;
             self.c_plus = (self.c_plus + p.eta * w).min(p.saturation);
         } else {
+            // lint:allow(det-float-intrinsic: STDP kernel; libm exp fixed per build)
             let w = (dt_us / p.tau_minus_us).exp() as f32;
             self.c_minus = (self.c_minus + p.eta * w).min(p.saturation);
         }
@@ -117,6 +119,7 @@ impl PlasticRow {
             let mut out = Vec::new();
             let mean_isi = 1e6 / rate;
             while t < dur_us {
+                // lint:allow(det-float-intrinsic: seeded Poisson ISI; libm ln fixed per build)
                 t += -mean_isi * rng.unit().max(1e-12).ln();
                 if t < dur_us {
                     out.push(t);
@@ -160,6 +163,7 @@ impl PlasticRow {
         let mut t = 0.0;
         let mut pairs = 0;
         while t < dur_us {
+            // lint:allow(det-float-intrinsic: seeded Poisson ISI; libm ln fixed per build)
             t += -mean_isi * rng.unit().max(1e-12).ln();
             if t >= dur_us {
                 break;

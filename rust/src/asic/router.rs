@@ -6,7 +6,7 @@
 //! Synapse-level address matching (the second event group used by fc1's
 //! split, paper Fig 6) is represented by logical rows 128..255.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::consts as c;
 use super::packets::Event;
@@ -22,7 +22,9 @@ pub struct Target {
 /// Crossbar configuration + statistics.
 #[derive(Debug, Default)]
 pub struct EventRouter {
-    table: HashMap<u16, Vec<Target>>,
+    // BTreeMap, not HashMap: replay of a routed event burst must be
+    // byte-identical run to run (lint: det-unordered-map).
+    table: BTreeMap<u16, Vec<Target>>,
     pub delivered: u64,
     pub dropped: u64,
 }
@@ -119,6 +121,40 @@ mod tests {
         let ts = r.route(&Event::new(7, 9));
         assert_eq!(ts.len(), 2);
         assert_eq!(r.delivered, 1);
+    }
+
+    /// Regression for the HashMap→BTreeMap conversion (DESIGN.md §16):
+    /// the routing table must behave identically however the crossbar
+    /// was programmed, so a replayed burst is byte-identical run to run.
+    #[test]
+    fn table_is_insertion_order_independent() {
+        let wiring = [
+            (3u16, Target { half: 0, row: 5 }),
+            (900, Target { half: 1, row: 40 }),
+            (3, Target { half: 1, row: 6 }),
+            (41, Target { half: 0, row: 99 }),
+        ];
+        let mut fwd = EventRouter::new();
+        for (a, t) in wiring {
+            fwd.connect(a, t);
+        }
+        let mut rev = EventRouter::new();
+        for (a, t) in wiring.iter().rev() {
+            rev.connect(*a, *t);
+        }
+        // Multicast fanout per address keeps connect() order (it is a
+        // Vec); only the *map* must not leak ordering.
+        let burst: Vec<Event> =
+            [3, 900, 41, 3, 7].iter().map(|&a| Event::new(a, 17)).collect();
+        let a = fwd.assemble(&burst);
+        let b = rev.assemble(&burst);
+        assert_eq!(a, b, "programming order must not leak into the output");
+        assert_eq!(fwd.targets(3).len(), 2);
+        assert_eq!(a[0][5], 17);
+        assert_eq!(a[1][6], 17);
+        assert_eq!(a[1][40], 17);
+        assert_eq!(a[0][99], 17);
+        assert_eq!(fwd.dropped, 1); // address 7 unrouted
     }
 
     #[test]

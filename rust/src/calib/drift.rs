@@ -119,6 +119,7 @@ impl DriftState {
 
     /// One exact OU update over a tick: `x <- a x + sqrt(1-a^2) sigma g`.
     fn tick(&mut self) {
+        // lint:allow(det-float-intrinsic: exact OU decay; libm exp fixed per build)
         let a = (-(DRIFT_TICK_US as f64) / self.params.tau_us).exp();
         let b = (1.0 - a * a).sqrt();
         let (sg, so) = (self.params.sigma_gain, self.params.sigma_offset);
@@ -137,6 +138,7 @@ impl DriftState {
         }
         let phase = self.time_us as f64 / self.params.temp_period_us;
         self.params.temp_amplitude_k
+            // lint:allow(det-float-intrinsic: seeded temp model; libm sin fixed per build)
             * (2.0 * std::f64::consts::PI * phase).sin()
     }
 

@@ -220,7 +220,7 @@ pub struct Engine {
     dma_bytes: u64,
     pp_samples: u64,
     events_generated: u64,
-    slots: std::collections::HashMap<u8, Vec<i32>>,
+    slots: std::collections::BTreeMap<u8, Vec<i32>>,
     backend_error: Option<anyhow::Error>,
 }
 
@@ -926,13 +926,13 @@ struct SampleCtx {
     queued: [Vec<f32>; 2],
     adc_latch: [Vec<i32>; 2],
     next_pass: usize,
-    slots: std::collections::HashMap<u8, Vec<i32>>,
+    slots: std::collections::BTreeMap<u8, Vec<i32>>,
     argmax: Option<usize>,
 }
 
 impl SampleCtx {
     fn new(acts: &[i32]) -> SampleCtx {
-        let mut slots = std::collections::HashMap::new();
+        let mut slots = std::collections::BTreeMap::new();
         slots.insert(0, acts.to_vec());
         SampleCtx {
             cpu: SimdCpu::new(),

@@ -117,6 +117,7 @@ impl ProtoState {
         let mut events = Vec::new();
         let mut cursor = 0usize;
         let result = loop {
+            // lint:allow(panic-index: cursor only advances by consumed prefix lengths)
             let avail = &self.buf[cursor..];
             match self.mode {
                 Mode::Detect => {
@@ -129,6 +130,7 @@ impl ProtoState {
                         break Ok(()); // wait for the whole hello
                     }
                     let mut hello = [0u8; handshake::LEN];
+                    // lint:allow(panic-index: avail.len() >= LEN checked above)
                     hello.copy_from_slice(&avail[..handshake::LEN]);
                     cursor += handshake::LEN;
                     match handshake::evaluate_hello(&hello) {
@@ -154,6 +156,7 @@ impl ProtoState {
                         }
                         break Ok(());
                     };
+                    // lint:allow(panic-index: nl is a position() hit inside avail)
                     let line = &avail[..nl];
                     cursor += nl + 1;
                     match std::str::from_utf8(line) {
@@ -188,6 +191,7 @@ impl ProtoState {
                     if avail.len() < total {
                         break Ok(()); // mid-frame: wait for the rest
                     }
+                    // lint:allow(panic-index: HEADER_LEN <= total <= avail.len() checked above)
                     let payload = &avail[frame::HEADER_LEN..total];
                     events.push(decode_payload(enc, payload));
                     cursor += total;

@@ -130,6 +130,7 @@ use crate::fleet::{
 use crate::fpga::preprocess::IncrementalWindower;
 use crate::obs::{expo, EventKind, TraceRecord};
 use crate::util::json::Json;
+use crate::util::sync::{lock_clean, wait_clean};
 
 use super::engine::{Engine, Inference};
 
@@ -161,7 +162,7 @@ impl ShutdownSignal {
     fn signal(&self) {
         // Set under the lock so a waiter can never observe the flag
         // clear and then miss the notify.
-        let _g = self.lock.lock().unwrap();
+        let _g = lock_clean(&self.lock);
         self.flag.store(true, Ordering::SeqCst);
         self.cv.notify_all();
     }
@@ -171,9 +172,9 @@ impl ShutdownSignal {
     }
 
     fn wait(&self) {
-        let mut g = self.lock.lock().unwrap();
+        let mut g = lock_clean(&self.lock);
         while !self.flag.load(Ordering::SeqCst) {
-            g = self.cv.wait(g).unwrap();
+            g = wait_clean(&self.cv, g);
         }
     }
 }
@@ -198,20 +199,20 @@ impl ConnRegistry {
     fn register(&self, stream: &TcpStream) -> std::io::Result<u64> {
         let clone = stream.try_clone()?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.streams.lock().unwrap().insert(id, clone);
+        lock_clean(&self.streams).insert(id, clone);
         Ok(id)
     }
 
     fn deregister(&self, id: u64) {
-        self.streams.lock().unwrap().remove(&id);
+        lock_clean(&self.streams).remove(&id);
     }
 
     fn active(&self) -> usize {
-        self.streams.lock().unwrap().len()
+        lock_clean(&self.streams).len()
     }
 
     fn shutdown_all(&self) {
-        for s in self.streams.lock().unwrap().values() {
+        for s in lock_clean(&self.streams).values() {
             let _ = s.shutdown(Shutdown::Both);
         }
     }
@@ -369,9 +370,7 @@ impl Service {
             ..FleetConfig::single()
         };
         Self::start_fleet(addr, cfg, move |_chip| {
-            let f = once
-                .lock()
-                .unwrap()
+            let f = lock_clean(&once)
                 .take()
                 .ok_or_else(|| anyhow::anyhow!("engine builder already used"))?;
             f()
@@ -441,6 +440,7 @@ impl Service {
                 )?)
             }
             #[cfg(not(unix))]
+            // lint:allow(panic-macro: model is forced to Threaded above on non-unix)
             ServeModel::Readiness => unreachable!("forced Threaded above"),
         };
 
@@ -510,7 +510,7 @@ impl Service {
                 }
                 sink.finish();
             })
-            .expect("spawn acceptor");
+            .map_err(|e| anyhow::anyhow!("spawn acceptor thread: {e}"))?;
 
         Ok(Service {
             addr: local,
@@ -764,6 +764,7 @@ fn resolve_classify(
                     let fields = inference_json(inf);
                     format!(
                         "{{\"ok\":true,{},\"chip\":{}}}",
+                        // lint:allow(panic-index: inference_json is brace-wrapped, len >= 2)
                         &fields[1..fields.len() - 1],
                         reply.chip
                     )
@@ -869,6 +870,7 @@ fn resolve_stream(
                     format!(
                         "{{\"ok\":true,\"stream\":true,\"window\":{window},\
                          \"start_sample\":{start_sample},{},\"chip\":{}}}",
+                        // lint:allow(panic-index: inference_json is brace-wrapped, len >= 2)
                         &fields[1..fields.len() - 1],
                         reply.chip
                     )

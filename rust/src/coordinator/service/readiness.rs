@@ -47,6 +47,7 @@ use super::{
     StreamSession,
 };
 use crate::fleet::{Fleet, ReplyNotify};
+use crate::util::sync::lock_clean;
 
 // ---------------------------------------------------------------------
 // poll(2) FFI — identical layout and flag values on Linux and the BSDs.
@@ -134,9 +135,10 @@ impl WorkerPool {
         if stream.set_nonblocking(true).is_err() {
             return; // dropping the guard deregisters the connection
         }
+        // lint:allow(panic-index: modulo by workers.len(), pool is never empty)
         let w = &self.workers[self.next % self.workers.len()];
         self.next = self.next.wrapping_add(1);
-        w.inbox.new_conns.lock().unwrap().push((stream, guard));
+        lock_clean(&w.inbox.new_conns).push((stream, guard));
         wake(&w.waker);
     }
 
@@ -218,7 +220,7 @@ fn worker_loop(
             // were already shut down by `stop()`.
             return;
         }
-        for (stream, guard) in inbox.new_conns.lock().unwrap().drain(..) {
+        for (stream, guard) in lock_clean(&inbox.new_conns).drain(..) {
             conns.push(Conn::new(stream, guard));
         }
 
@@ -232,6 +234,7 @@ fn worker_loop(
         // Sweep finished connections, honouring wire `shutdown` byes.
         let mut i = 0;
         while i < conns.len() {
+            // lint:allow(panic-index: i < conns.len() is the loop condition)
             if conns[i].done() {
                 let conn = conns.swap_remove(i);
                 if conn.bye {
@@ -286,10 +289,12 @@ fn worker_loop(
             drain_waker(wake_rx);
         }
         for (pi, &ci) in poll_map.iter().enumerate() {
+            // lint:allow(panic-index: pollfds is waker + one slot per poll_map entry)
             let revents = pollfds[pi + 1].revents;
             if revents == 0 {
                 continue;
             }
+            // lint:allow(panic-index: poll_map holds indices into conns built this pass)
             let conn = &mut conns[ci];
             if revents & POLL_ANY_OUT != 0 && !conn.wbuf.is_empty() {
                 conn.flush();
@@ -393,6 +398,7 @@ impl Conn {
         let mut written = 0usize;
         while written < self.wbuf.len() {
             let mut w = &self.stream;
+            // lint:allow(panic-index: written < wbuf.len() is the loop condition)
             match w.write(&self.wbuf[written..]) {
                 Ok(0) => {
                     self.dead = true;
@@ -459,6 +465,7 @@ impl Conn {
                     }
                 }
             };
+            // lint:allow(panic-index: n is the byte count read() returned for chunk)
             let events = match self.proto.push(&chunk[..n]) {
                 Ok(events) => events,
                 Err(Fatal::Reject(bytes)) => {

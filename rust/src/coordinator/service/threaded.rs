@@ -64,6 +64,7 @@ pub(super) fn handle_conn(
         if shutdown.is_set() {
             break Ok(());
         }
+        // lint:allow(panic-index: n is the byte count read() returned for chunk)
         let events = match proto.push(&chunk[..n]) {
             Ok(events) => events,
             Err(fatal) => {

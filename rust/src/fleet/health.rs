@@ -21,6 +21,8 @@ use std::sync::atomic::{
 };
 use std::sync::Mutex;
 
+use crate::util::sync::lock_clean;
+
 /// Replica lifecycle state (stored as an `AtomicU8`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ChipState {
@@ -204,7 +206,7 @@ impl ChipHealth {
         self.inflight.fetch_sub(samples, Ordering::AcqRel);
         self.errors.fetch_add(1, Ordering::Relaxed);
         let consec = self.consecutive_errors.fetch_add(1, Ordering::AcqRel) + 1;
-        *self.last_error.lock().unwrap() = Some(msg.to_string());
+        *lock_clean(&self.last_error) = Some(msg.to_string());
         if consec >= self.error_threshold {
             let _ = self.state.compare_exchange(
                 0,
@@ -219,7 +221,7 @@ impl ChipHealth {
     /// worker death).  Does not touch inflight: the pool unwinds those.
     pub fn mark_dead(&self, msg: &str) {
         self.state.store(2, Ordering::Release);
-        *self.last_error.lock().unwrap() = Some(msg.to_string());
+        *lock_clean(&self.last_error) = Some(msg.to_string());
     }
 
     // --- calibration state machine (drain -> calibrate -> re-admit) --------
@@ -260,7 +262,7 @@ impl ChipHealth {
     /// ordinary probe path decides whether it ever serves again.
     pub fn fail_calibration(&self, msg: &str) {
         self.errors.fetch_add(1, Ordering::Relaxed);
-        *self.last_error.lock().unwrap() = Some(msg.to_string());
+        *lock_clean(&self.last_error) = Some(msg.to_string());
         let _ = self.state.compare_exchange(
             3,
             1,
@@ -315,7 +317,7 @@ impl ChipHealth {
             calib_age_us: self.calib_age_us(),
             residual_rms: self.residual_rms(),
             recalibrations: self.recalibrations(),
-            last_error: self.last_error.lock().unwrap().clone(),
+            last_error: lock_clean(&self.last_error).clone(),
         }
     }
 }

@@ -51,6 +51,7 @@ use crate::ecg::gen::Trace;
 use crate::fault::{FaultInjector, FaultPlan, FAULT_TAG};
 use crate::obs::trace::HostStages;
 use crate::obs::{EventKind, MetricSample, ObsHub};
+use crate::util::sync::lock_clean;
 
 use super::health::{ChipHealth, ChipHealthSnapshot, ChipState};
 use super::scheduler::{Scheduler, ShedReason};
@@ -449,7 +450,7 @@ impl Drop for Fleet {
 impl FleetCore {
     fn close_channels(&self) {
         for h in &self.handles {
-            h.tx.lock().unwrap().take();
+            lock_clean(&h.tx).take();
         }
     }
 
@@ -491,7 +492,7 @@ impl FleetCore {
     /// exactly once.
     fn try_send(&self, chip: ChipId, job: ChipJob) -> Result<(), ChipJob> {
         let send_result = {
-            let guard = self.handles[chip].tx.lock().unwrap();
+            let guard = lock_clean(&self.handles[chip].tx);
             match guard.as_ref() {
                 Some(tx) => tx.send(job).map_err(|mpsc::SendError(j)| j),
                 None => Err(job),
@@ -565,6 +566,7 @@ impl FleetCore {
                         .record_batch_error(1, "worker channel closed");
                     acts = reclaimed;
                 }
+                // lint:allow(panic-macro: try_send echoes back the exact job we sent)
                 Err(_) => unreachable!("acts dispatch returned a foreign job"),
             }
         }
@@ -659,6 +661,7 @@ impl FleetCore {
                     traces.extend(rest);
                 }
                 Err(_) => {
+                    // lint:allow(panic-macro: try_send echoes back the job we sent)
                     unreachable!("classify dispatch returned a foreign job")
                 }
             }
@@ -786,6 +789,7 @@ impl FleetCore {
                     false
                 }
             }
+            // lint:allow(panic-macro: caller matches out Calibrate before this)
             ChipJob::Calibrate { .. } => unreachable!("checked above"),
         };
         if exhausted {
@@ -808,6 +812,7 @@ impl FleetCore {
                     now.saturating_duration_since(*enq).as_nanos() as u64;
                 *enq = now;
             }
+            // lint:allow(panic-macro: caller matches out Calibrate before this)
             ChipJob::Calibrate { .. } => unreachable!("checked above"),
         }
         let samples = match &job {

@@ -17,6 +17,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::stats::pm;
+use crate::util::sync::lock_clean;
 
 /// Log-spaced buckets: bucket `i` covers `[BASE_US * RATIO^i, BASE_US *
 /// RATIO^(i+1))`.  64 buckets at ratio 1.3 span 1 µs .. ~2e7 µs (20 s).
@@ -73,6 +74,7 @@ impl LatencyHistogram {
         // NaN and negative latencies are measurement bugs, not data: clamp
         // them to zero instead of letting `as u64` silently bucket them.
         let us = sanitize_us(us);
+        // lint:allow(panic-index: bucket_of clamps to N_BUCKETS - 1)
         self.counts[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
         // Round to the nearest ns: flooring every sample systematically
@@ -206,7 +208,7 @@ impl FleetTelemetry {
         let served = self.served();
         let now = Instant::now();
         let elapsed = (now - self.started).as_secs_f64().max(1e-9);
-        let mut window = self.window.lock().unwrap();
+        let mut window = lock_clean(&self.window);
         let dt = (now - window.at).as_secs_f64();
         // Rate denominator is floored: a snapshot taken moments after the
         // previous advance reports a slightly *conservative* rate instead

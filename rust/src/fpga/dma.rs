@@ -18,7 +18,9 @@ pub const DRAM_LATENCY_NS: f64 = 100.0;
 /// Word-addressed DRAM with access statistics.
 #[derive(Debug, Default)]
 pub struct Dram {
-    mem: std::collections::HashMap<u32, u32>,
+    // Ordered map so DRAM contents replay deterministically (lint:
+    // det-unordered-map).
+    mem: std::collections::BTreeMap<u32, u32>,
     pub reads: u64,
     pub writes: u64,
     pub bytes_read: u64,

@@ -185,11 +185,13 @@ pub fn backward_logistic(
     grads: &mut Grads,
 ) -> f64 {
     let z = ((scores[1] - scores[0]) / temperature) as f64;
+    // lint:allow(det-float-intrinsic: logistic loss; libm exp is deterministic per build)
     let p = 1.0 / (1.0 + (-z).exp());
     let y = label as f64;
     let g = ((p - y) / temperature as f64) as f32;
     backward_scores(tap, q, scales, [-g, g], grads);
     let likelihood = if label == 1 { p } else { 1.0 - p };
+    // lint:allow(det-float-intrinsic: libm ln, same libm on every host this artifact targets)
     -likelihood.max(1e-12).ln()
 }
 

@@ -11,11 +11,13 @@
 //! * [`stats`] — summaries/percentiles for the measurement pipeline.
 //! * [`benchkit`] — the bench harness driving `cargo bench` targets.
 //! * [`propcheck`] — mini property-testing kit for invariant tests.
+//! * [`sync`] — poison-tolerant `Mutex`/`Condvar` helpers for server paths.
 
 pub mod benchkit;
 pub mod cli;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use bss2_proto::json;

@@ -1,0 +1,43 @@
+//! Poison-tolerant locking helpers (DESIGN.md §16, panic-safety family).
+//!
+//! `Mutex::lock().unwrap()` turns one panicked holder into a cascade: every
+//! later `lock()` sees the poison flag and panics too, which in the serving
+//! layer tears down worker threads that were nowhere near the original bug.
+//! All server-path state guarded by our mutexes (connection registries,
+//! telemetry windows, health strings, reply queues) stays structurally
+//! valid even if a holder unwound mid-update, so the right recovery is to
+//! take the guard and keep serving.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Acquire `m`, recovering the guard from a poisoned lock instead of
+/// propagating the panic to this thread.
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison recovery as [`lock_clean`].
+pub fn wait_clean<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_clean_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*lock_clean(&m), 7);
+        *lock_clean(&m) = 9;
+        assert_eq!(*lock_clean(&m), 9);
+    }
+}

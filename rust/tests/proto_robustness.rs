@@ -130,6 +130,44 @@ fn decoder_never_panics_on_garbage() {
     });
 }
 
+#[test]
+fn length_arithmetic_cannot_wrap() {
+    // A u32::MAX payload length must be TooLarge on every pointer width.
+    // Before first_frame_len did its math in u64, a 32-bit host computed
+    // `HEADER_LEN + (u32::MAX as usize)`, wrapped to 3, and treated the
+    // hostile prefix as a tiny complete frame.
+    let hostile = u32::MAX.to_le_bytes();
+    match frame::first_frame_len(&hostile) {
+        Err(frame::FrameError::TooLarge { len, max }) => {
+            assert_eq!(len, u64::from(u32::MAX) + frame::HEADER_LEN as u64);
+            assert_eq!(max, bss2_proto::MAX_FRAME);
+        }
+        other => panic!("u32::MAX prefix must be TooLarge, got {other:?}"),
+    }
+
+    // Same idea inside the binary decoder: a string length of u32::MAX
+    // with a few real bytes behind it must be a typed Truncated error,
+    // not a wrapped in-bounds slice (bin::Reader::take uses checked_add).
+    let mut s = vec![0x04]; // TAG_STR
+    s.extend_from_slice(&u32::MAX.to_le_bytes());
+    s.extend_from_slice(b"abc");
+    assert_eq!(bin::decode(&s), Err(bin::BinError::Truncated));
+
+    // Packed-u16 array claiming u32::MAX elements: count validation
+    // (2 bytes/element minimum) rejects it before any allocation.
+    let mut u16s = vec![0x07]; // TAG_U16S
+    u16s.extend_from_slice(&u32::MAX.to_le_bytes());
+    u16s.extend_from_slice(&[0u8; 8]);
+    assert_eq!(bin::decode(&u16s), Err(bin::BinError::Truncated));
+
+    // Nested object whose inner count also lies: still a typed error.
+    let mut obj = vec![0x06]; // TAG_OBJ
+    obj.extend_from_slice(&1u32.to_le_bytes());
+    obj.extend_from_slice(&u32::MAX.to_le_bytes()); // key length
+    obj.extend_from_slice(b"k");
+    assert_eq!(bin::decode(&obj), Err(bin::BinError::Truncated));
+}
+
 // --- live-server robustness ----------------------------------------------
 
 /// Raw framed connection with the handshake already done.
