@@ -54,6 +54,8 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
     // default soft limit (often 1024) is below a 1000-connection run.
     raise_nofile(conns as u64 * 2 + 512);
 
+    let t0 = Instant::now();
+
     let opts = Options {
         encoding,
         read_timeout: (timeout_ms > 0)
@@ -151,8 +153,9 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
         s,
         "}},\"info\":{{\"conns\":{conns},\"chips\":{chips},\
          \"pipeline\":{pipeline},\"requests_per_conn\":{per_conn},\
-         \"encoding\":\"{}\"",
-        encoding_name(encoding)
+         \"encoding\":\"{}\",\"host_wall_us\":{:.1}",
+        encoding_name(encoding),
+        t0.elapsed().as_secs_f64() * 1e6
     )
     .unwrap();
     if let Some(t) = &threaded {

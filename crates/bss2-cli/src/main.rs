@@ -20,12 +20,57 @@
 mod loadgen;
 
 use bss2::asic::consts as c;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use bss2::coordinator::batch;
 use bss2::coordinator::engine::{Engine, EngineConfig};
 use bss2::ecg::dataset::Dataset;
 use bss2::ecg::gen::{generate_trace, TraceStream};
 use bss2::runtime::ArtifactDir;
 use bss2::util::cli::Args;
+
+/// Counting wrapper over the system allocator.  `repro bench --area
+/// simcore` gates on allocations-per-classify — a deterministic,
+/// host-speed-independent measure of hot-path heap churn (DESIGN.md
+/// §17).  The counter is one relaxed atomic add per allocation: noise
+/// for a CLI, and every other subcommand is unaffected beyond that.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Heap allocations observed so far (alloc + alloc_zeroed + realloc).
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn main() {
     env_logger_init();
@@ -122,13 +167,16 @@ COMMANDS:
                                             survival report (same seed =
                                             byte-identical report)
   bench        deterministic perf benchmark (--area serving|batch|stream|
-                                            drift|train --n 64 --out FILE
-                                            --gate BASELINE): writes
-                                            BENCH_<area>.json with gated
-                                            simulated-time/energy metrics;
-                                            --gate fails (exit 1) when a
-                                            gated metric regresses >20%
-                                            against the baseline file
+                                            drift|train|simcore --n 64
+                                            --out FILE --gate BASELINE):
+                                            writes BENCH_<area>.json with
+                                            gated simulated-time/energy
+                                            metrics (simcore gates heap
+                                            allocs/classify; passes/s and
+                                            ns/pass go to info); --gate
+                                            fails (exit 1) when a gated
+                                            metric regresses >20% against
+                                            the baseline file
   snn          spiking-mode (AdEx) demo    (--neurons 4 --current 150)
   audit        workspace static analysis   (--json --gate FILE
                                             --write-baseline FILE): the
@@ -699,6 +747,9 @@ fn train(args: &Args) -> anyhow::Result<()> {
 /// wall-clock goes into `info` for trend-watching only.  The `train` area
 /// gates training *quality* instead: the deterministic trained artifact's
 /// detection rate on the accuracy pin's held-out seeds (higher is better).
+/// The `simcore` area gates hot-loop heap churn (allocations per classify,
+/// counted by the process-wide [`CountingAlloc`]) — deterministic per
+/// binary, so it too is host-speed-independent.
 fn bench(args: &Args) -> anyhow::Result<()> {
     use bss2::nn::weights::TrainedModel;
     use std::fmt::Write as _;
@@ -868,8 +919,46 @@ fn bench(args: &Args) -> anyhow::Result<()> {
                 outcome.report.chip_us_per_step,
             ));
         }
+        "simcore" => {
+            // The simulation-core hot loop (ROADMAP item 2): steady-state
+            // `classify_batch` on the native engine with noise ON, so the
+            // scratch-buffer executor *and* the flat batch-major noise
+            // bank are both on the measured path (DESIGN.md §17).  The
+            // gated metric is heap allocations per classify — a pure
+            // function of the code path, so it gates hot-loop churn
+            // regressions independently of CI host speed.  Raw pass rate
+            // and wall time go to `info` for trend-watching.
+            let batch = args.usize_or("batch", 8)?.max(1);
+            let mut engine = Engine::native(
+                TrainedModel::synthetic(0xF1EE7),
+                EngineConfig { use_pjrt: false, ..Default::default() },
+            );
+            let traces: Vec<_> =
+                TraceStream::new(seed, 1.0).take(batch).collect();
+            // Warm-up batch: sizes every scratch buffer and performs the
+            // fc1/fc2 weight reconfigurations before counting starts.
+            engine.classify_batch(&traces)?;
+            let a0 = alloc_count();
+            let w0 = std::time::Instant::now();
+            for _ in 0..n {
+                engine.classify_batch(&traces)?;
+            }
+            let steady_us = w0.elapsed().as_secs_f64() * 1e6;
+            let allocs = alloc_count() - a0;
+            let classifies = (n * batch) as f64;
+            let passes = 3.0 * classifies;
+            gated.push((
+                "allocs_per_classify",
+                allocs as f64 / classifies,
+                "lower",
+            ));
+            info.push(("batch", batch as f64));
+            info.push(("ns_per_pass", steady_us * 1e3 / passes));
+            info.push(("passes_per_s", passes / (steady_us / 1e6)));
+        }
         other => anyhow::bail!(
-            "unknown bench area `{other}` (serving|batch|stream|drift|train)"
+            "unknown bench area `{other}` \
+             (serving|batch|stream|drift|train|simcore)"
         ),
     }
     let wall_us = t0.elapsed().as_secs_f64() * 1e6;

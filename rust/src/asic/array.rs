@@ -169,15 +169,47 @@ impl AnalogArray {
         noise: &[f32],
         relu_in_adc: bool,
     ) -> Vec<i16> {
+        let mut acc = vec![0i32; self.n];
+        let mut out = vec![0i16; self.n];
+        self.integrate_into(x, scale, noise, relu_in_adc, &mut acc, &mut out);
+        out
+    }
+
+    /// [`integrate`] into caller-provided scratch: `acc` holds the exact
+    /// charge accumulation, `out` the converted ADC counts (DESIGN.md §17).
+    /// The allocating wrappers delegate here, so both spellings are
+    /// bit-identical by construction.
+    ///
+    /// [`integrate`]: AnalogArray::integrate
+    pub fn integrate_into(
+        &self,
+        x: &[u8],
+        scale: f32,
+        noise: &[f32],
+        relu_in_adc: bool,
+        acc: &mut [i32],
+        out: &mut [i16],
+    ) {
         assert_eq!(x.len(), self.k);
         assert_eq!(noise.len(), self.n);
-        let acc = self.accumulate(x);
-        self.digitize(&acc, scale, noise, relu_in_adc)
+        self.accumulate_into(x, acc);
+        self.digitize_into(acc, scale, noise, relu_in_adc, out);
     }
 
     /// Integer charge accumulation only (exact; used by Fig 4 and tests).
     pub fn accumulate(&self, x: &[u8]) -> Vec<i32> {
         let mut acc = vec![0i32; self.n];
+        self.accumulate_into(x, &mut acc);
+        acc
+    }
+
+    /// [`accumulate`] into a caller-provided accumulator (overwritten, not
+    /// summed into — the zero-fill is part of the contract).
+    ///
+    /// [`accumulate`]: AnalogArray::accumulate
+    pub fn accumulate_into(&self, x: &[u8], acc: &mut [i32]) {
+        assert_eq!(acc.len(), self.n);
+        acc.fill(0);
         for (row, &xv) in x.iter().enumerate() {
             if xv == 0 {
                 continue; // no event -> no synaptic current
@@ -188,7 +220,6 @@ impl AnalogArray {
                 *a += xv * w as i32;
             }
         }
-        acc
     }
 
     /// Analog front-end + ADC conversion of accumulated charge.
@@ -199,27 +230,42 @@ impl AnalogArray {
         noise: &[f32],
         relu_in_adc: bool,
     ) -> Vec<i16> {
+        let mut out = vec![0i16; acc.len()];
+        self.digitize_into(acc, scale, noise, relu_in_adc, &mut out);
+        out
+    }
+
+    /// [`digitize`] into a caller-provided output slice.
+    ///
+    /// [`digitize`]: AnalogArray::digitize
+    pub fn digitize_into(
+        &self,
+        acc: &[i32],
+        scale: f32,
+        noise: &[f32],
+        relu_in_adc: bool,
+        out: &mut [i16],
+    ) {
+        assert_eq!(out.len(), acc.len());
         let lo = if relu_in_adc { 0.0 } else { c::ADC_MIN as f32 };
-        acc.iter()
-            .enumerate()
-            .map(|(n, &a)| {
-                if self.faults.adc_saturated {
-                    // Reference collapse: the comparator ramp never
-                    // crosses, every column latches full-scale.
-                    return c::ADC_MAX as i16;
-                }
-                // A dead synapse column contributes no charge; the
-                // front-end still converts its offset and noise.
-                let a = if self.faults.dead_columns.contains(&n) { 0 } else { a };
-                let v = scale * self.effective_gain(n) * a as f32
-                    + self.effective_offset(n)
-                    + noise[n];
-                let v = v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP);
-                // jnp.round is roundTiesToEven; the CADC model matches it.
-                let r = round_half_even(v);
-                r.clamp(lo, c::ADC_MAX as f32) as i16
-            })
-            .collect()
+        for (n, (o, &a)) in out.iter_mut().zip(acc).enumerate() {
+            if self.faults.adc_saturated {
+                // Reference collapse: the comparator ramp never
+                // crosses, every column latches full-scale.
+                *o = c::ADC_MAX as i16;
+                continue;
+            }
+            // A dead synapse column contributes no charge; the
+            // front-end still converts its offset and noise.
+            let a = if self.faults.dead_columns.contains(&n) { 0 } else { a };
+            let v = scale * self.effective_gain(n) * a as f32
+                + self.effective_offset(n)
+                + noise[n];
+            let v = v.clamp(-c::MEMBRANE_CLIP, c::MEMBRANE_CLIP);
+            // jnp.round is roundTiesToEven; the CADC model matches it.
+            let r = round_half_even(v);
+            *o = r.clamp(lo, c::ADC_MAX as f32) as i16;
+        }
     }
 
     /// Pre-ADC membrane voltage trace for a staged sequence of event
@@ -401,6 +447,30 @@ mod tests {
         // 96.5 -> round-half-even: 100, 98, 98, 96.
         let out = a.integrate(&[10], 0.1, &[0.0; 4], false);
         assert_eq!(out, vec![100, 98, 98, 96]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_path() {
+        let mut rng = SplitMix64::new(7);
+        let mut a =
+            AnalogArray::new(8, 5, ColumnCalib::fixed_pattern(5, &mut rng));
+        let w: Vec<i8> =
+            (0..40).map(|i| ((i * 7) % 127) as i8 - 63).collect();
+        a.load_weights(&w);
+        let x: Vec<u8> = (0..8).map(|i| (i * 5 % 33) as u8).collect();
+        let noise: Vec<f32> = (0..5).map(|_| rng.gauss() as f32).collect();
+        for relu in [false, true] {
+            let owned = a.integrate(&x, 0.07, &noise, relu);
+            // Deliberately dirty scratch: the `_into` contract overwrites.
+            let mut acc = vec![123i32; 5];
+            let mut out = vec![77i16; 5];
+            a.integrate_into(&x, 0.07, &noise, relu, &mut acc, &mut out);
+            assert_eq!(out, owned);
+            assert_eq!(acc, a.accumulate(&x));
+            let mut out2 = vec![-1i16; 5];
+            a.digitize_into(&acc, 0.07, &noise, relu, &mut out2);
+            assert_eq!(out2, owned);
+        }
     }
 
     #[test]

@@ -172,9 +172,12 @@ pub struct Engine {
     /// SRAM does.
     half1_pass: usize,
     /// Batched execution only: noise realisations pre-drawn per
-    /// (sample, pass) in sample-major order, and the sample whose stream
-    /// segment currently executes.
-    batch_noise: Option<Vec<Vec<Vec<f32>>>>,
+    /// (sample, pass) in *sample-major* order, flattened into one
+    /// contiguous batch-major bank indexed at
+    /// `(sample * 3 + pass) * N_COLS` (DESIGN.md §17), and the sample
+    /// whose stream segment currently executes.  `None` on the
+    /// sequential path and whenever sigma == 0 (`noise_off`).
+    batch_noise: Option<Vec<f32>>,
     batch_sample: usize,
     /// Gradient taps, armed by the `*_taps` entry points: `run_vmm`
     /// records each pass's input activations and ADC readout per sample.
@@ -182,6 +185,17 @@ pub struct Engine {
     taps: Option<Vec<[PassTap; 3]>>,
     noise_rng: SplitMix64,
     noise_sigma: f64,
+    /// Per-pass scratch, reused so `run_vmm` and `send_events` are
+    /// allocation-free in steady state (DESIGN.md §17): the sequential
+    /// noise draw, a shared all-zero noise vector for sigma == 0, the
+    /// quantised activation vector, the native accumulator/readout
+    /// pair, and the event-generator input.
+    noise_scratch: Vec<f32>,
+    zero_noise: Vec<f32>,
+    xq_scratch: Vec<u8>,
+    vmm_acc: Vec<i32>,
+    vmm_adc: Vec<i16>,
+    acts_scratch: Vec<u8>,
     // Calibration & drift state (calib subsystem)
     /// Fleet ordinal (stamped into calibration profiles).
     chip_ordinal: usize,
@@ -339,6 +353,12 @@ impl Engine {
             taps: None,
             noise_rng: SplitMix64::new(cfg.noise_seed),
             noise_sigma,
+            noise_scratch: vec![0.0; c::N_COLS],
+            zero_noise: vec![0.0; c::N_COLS],
+            xq_scratch: vec![0; c::K_LOGICAL],
+            vmm_acc: vec![0; c::N_COLS],
+            vmm_adc: vec![0; c::N_COLS],
+            acts_scratch: Vec::new(),
             chip_ordinal: cfg.chip,
             chip_time_us: 0,
             last_calib_us: 0,
@@ -363,11 +383,22 @@ impl Engine {
         }
     }
 
-    fn sample_noise(&mut self) -> Vec<f32> {
+    /// Draw one pass's noise realisation into `noise_scratch`.  With
+    /// sigma == 0 (`noise_off`) both the draw and the RNG advance are
+    /// skipped: the old per-column entries were `(0.0 * gauss()) as f32`,
+    /// i.e. ±0.0, and `v + ±0.0` rounds to the same integer readout for
+    /// every v, so skipping is readout-identical — and because
+    /// `noise_sigma` is fixed at construction (calibration uses the
+    /// separate `calib_rng`), the unconsumed RNG positions are never
+    /// observable.
+    fn sample_noise_into_scratch(&mut self) {
+        if self.noise_sigma == 0.0 {
+            return;
+        }
         let sigma = self.noise_sigma;
-        (0..c::N_COLS)
-            .map(|_| (sigma * self.noise_rng.gauss()) as f32)
-            .collect()
+        for n in self.noise_scratch.iter_mut() {
+            *n = (sigma * self.noise_rng.gauss()) as f32;
+        }
     }
 
     fn reset_accounting(&mut self) {
@@ -617,14 +648,22 @@ impl Engine {
                 c::MODEL_IN
             );
         }
-        // Pre-draw every (sample, pass) noise realisation in
-        // *sample-major* order — the order the sequential path consumes
-        // the RNG — so each sample's result stays bit-identical under
-        // pass-major execution.
-        let bank: Vec<Vec<Vec<f32>>> = (0..b)
-            .map(|_| (0..3).map(|_| self.sample_noise()).collect())
-            .collect();
-        self.batch_noise = Some(bank);
+        // Pre-draw every (sample, pass) noise realisation into one flat
+        // batch-major bank, filled in *sample-major* order — the order
+        // the sequential path consumes the RNG — so each sample's result
+        // stays bit-identical under pass-major execution.  With
+        // sigma == 0 the bank (and the RNG advance) is skipped entirely;
+        // `run_vmm` then borrows the shared zero vector instead.
+        self.batch_noise = if self.noise_sigma != 0.0 {
+            let sigma = self.noise_sigma;
+            let mut bank = vec![0.0f32; b * 3 * c::N_COLS];
+            for v in bank.iter_mut() {
+                *v = (sigma * self.noise_rng.gauss()) as f32;
+            }
+            Some(bank)
+        } else {
+            None
+        };
         let run = self.exec_segments(acts_all);
         self.batch_noise = None;
         let (ctxs, total_cycles) = run?;
@@ -974,11 +1013,12 @@ impl ChipOps for Engine {
     fn send_events(&mut self, half: u8, activations: &[i32]) {
         // FPGA vector event generator: LUT lookup, zero suppression,
         // 8 ns spacing (fpga::eventgen), then the link + synapse drivers.
-        let acts_u8: Vec<u8> = activations
-            .iter()
-            .map(|&a| a.clamp(0, c::X_MAX) as u8)
-            .collect();
-        let (events, gstats) = eventgen::generate(&acts_u8, &self.lut, 0);
+        // The quantised view lives in a reused scratch (DESIGN.md §17).
+        self.acts_scratch.clear();
+        self.acts_scratch
+            .extend(activations.iter().map(|&a| a.clamp(0, c::X_MAX) as u8));
+        let (events, gstats) =
+            eventgen::generate(&self.acts_scratch, &self.lut, 0);
         self.events_generated += gstats.events as u64;
         self.chip_stats.events_sent += gstats.events as u64;
         self.chip_timing.add_event_burst(gstats.events);
@@ -1020,16 +1060,34 @@ impl ChipOps for Engine {
             self.chip_stats.weight_writes += 1;
             self.chip_timing.add_weight_write();
         }
-        let banked = self
-            .batch_noise
-            .as_ref()
-            .map(|bank| bank[self.batch_sample][pass].clone());
-        let noise = banked.unwrap_or_else(|| self.sample_noise());
-        let x: Vec<f32> = self.queued[h].clone();
-        let mut out: Vec<i32> = match &mut self.backend {
+        // Scratch-buffer pass (DESIGN.md §17): the quantised activation
+        // vector, the noise realisation, and the ADC readout all live in
+        // reusable engine buffers — no per-pass heap traffic.
+        for (q, &v) in self.xq_scratch.iter_mut().zip(self.queued[h].iter()) {
+            *q = v as u8;
+        }
+        // Noise selection as a borrowed slice: a batched program indexes
+        // the flat pre-drawn bank; the sequential path draws into the
+        // engine scratch; sigma == 0 borrows the shared zero vector
+        // (readout-identical to the old ±0.0 draws, see
+        // `sample_noise_into_scratch`).
+        if self.batch_noise.is_none() {
+            self.sample_noise_into_scratch();
+        }
+        let noise: &[f32] = match &self.batch_noise {
+            Some(bank) => {
+                let at = (self.batch_sample * 3 + pass) * c::N_COLS;
+                &bank[at..at + c::N_COLS]
+            }
+            None if self.noise_sigma != 0.0 => &self.noise_scratch,
+            None => &self.zero_noise,
+        };
+        match &mut self.backend {
             Backend::Pjrt { vmm, staged } => {
-                let res = vmm.run_pass(&staged[pass], &x, &noise)?;
-                res.iter().map(|&v| v as i32).collect()
+                let res = vmm.run_pass(&staged[pass], &self.queued[h], noise)?;
+                let latch = &mut self.adc_latch[h];
+                latch.clear();
+                latch.extend(res.iter().map(|&v| v as i32));
             }
             Backend::Native { halves } => {
                 if reconfigure {
@@ -1041,18 +1099,23 @@ impl ChipOps for Engine {
                         &self.model.pass_weights[pass],
                     ));
                 }
-                let xq: Vec<u8> = x.iter().map(|&v| v as u8).collect();
-                halves[h]
-                    .integrate(&xq, self.model.scales[pass], &noise, false)
-                    .iter()
-                    .map(|&v| v as i32)
-                    .collect()
+                halves[h].integrate_into(
+                    &self.xq_scratch,
+                    self.model.scales[pass],
+                    noise,
+                    false,
+                    &mut self.vmm_acc,
+                    &mut self.vmm_adc,
+                );
+                let latch = &mut self.adc_latch[h];
+                latch.clear();
+                latch.extend(self.vmm_adc.iter().map(|&v| v as i32));
             }
-        };
+        }
         if let Some(corr) = &self.compensation {
             // Profile compensation: the SIMD CPUs undo the measured
             // per-column gain/offset right after the parallel readout.
-            corr[h].apply_i32(&mut out);
+            corr[h].apply_i32(&mut self.adc_latch[h]);
         }
         if let Some(taps) = self.taps.as_mut() {
             // Gradient tap: what the synapse drivers saw and what the
@@ -1060,11 +1123,10 @@ impl ChipOps for Engine {
             // boundary.  `batch_sample` is 0 on the sequential path
             // (pinned by `classify_acts_taps`).
             taps[self.batch_sample][pass] = PassTap {
-                x: x.iter().map(|&v| v as u8).collect(),
-                adc: out.clone(),
+                x: self.xq_scratch.clone(),
+                adc: self.adc_latch[h].clone(),
             };
         }
-        self.adc_latch[h] = out;
         self.queued[h].fill(0.0);
         self.chip_stats.vmm_cycles += 1;
         self.chip_timing.add_integration();
@@ -1213,6 +1275,65 @@ mod tests {
         let b = off.classify(&trace).unwrap();
         // Scores may coincide after pooling, but usually differ.
         let _ = (a, b); // smoke: both complete
+    }
+
+    #[test]
+    fn noise_off_skips_rng_draws_entirely() {
+        // With sigma == 0 both the sequential and the batched path skip
+        // the draw *and* the RNG advance (satellite of ISSUE 10): the old
+        // ±0.0 realisations were readout-identical to the zero vector,
+        // so results must be unchanged and the stream untouched.
+        let seed = 0xD00Du64;
+        let mk = |noise_seed: u64| {
+            Engine::native(
+                TrainedModel { noise_sigma: 2.0, ..tiny_model() },
+                EngineConfig {
+                    use_pjrt: false,
+                    noise_off: true,
+                    noise_seed,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut eng = mk(seed);
+        let trace = crate::ecg::gen::generate_trace(70, false, 1.0);
+        let single = eng.classify(&trace).unwrap();
+        let traces: Vec<_> = (0..3)
+            .map(|i| crate::ecg::gen::generate_trace(71 + i, i % 2 == 0, 1.0))
+            .collect();
+        let _ = eng.classify_batch(&traces).unwrap();
+        assert_eq!(
+            eng.noise_rng.next_u64(),
+            SplitMix64::new(seed).next_u64(),
+            "noise-off must not advance the noise RNG"
+        );
+        // And the results are noise-seed-independent: the skip changes
+        // nothing the stream could have influenced.
+        let other = mk(seed ^ 0x5EED).classify(&trace).unwrap();
+        assert_eq!(single.scores, other.scores);
+        assert_eq!(single.pred, other.pred);
+    }
+
+    #[test]
+    fn noise_on_stream_position_survives_batching() {
+        // A 1-batch pre-draws exactly the 3 realisations the sequential
+        // path would consume, so a *later* classify on either engine
+        // still reads the same stream position — the flat batch-major
+        // bank (and the noise-off skip) must not perturb noise-on
+        // streams.
+        let model = || TrainedModel { noise_sigma: 2.0, ..tiny_model() };
+        let cfg = EngineConfig { use_pjrt: false, ..Default::default() };
+        let t1 = crate::ecg::gen::generate_trace(80, true, 1.0);
+        let t2 = crate::ecg::gen::generate_trace(81, false, 1.0);
+        let mut seq = Engine::native(model(), cfg.clone());
+        let mut bat = Engine::native(model(), cfg);
+        let a1 = seq.classify(&t1).unwrap();
+        let a2 = seq.classify(&t2).unwrap();
+        let b1 = bat.classify_batch(std::slice::from_ref(&t1)).unwrap();
+        let b2 = bat.classify(&t2).unwrap();
+        assert_eq!(a1.scores, b1[0].scores);
+        assert_eq!(a2.scores, b2.scores, "bank draw shifted the RNG stream");
+        assert_eq!(a2.pred, b2.pred);
     }
 
     #[test]

@@ -157,6 +157,17 @@ pub struct WindowFrame {
     pub acts: Vec<u8>,
 }
 
+/// Metadata of a completed window — [`WindowFrame`] minus the activation
+/// payload — returned by the allocation-free
+/// [`IncrementalWindower::push_into`].
+#[derive(Debug, Clone, Copy)]
+pub struct WindowMeta {
+    /// 0-based index of the window within the stream (hop-ordered).
+    pub index: u64,
+    /// Absolute index of the window's first raw sample.
+    pub start_sample: u64,
+}
+
 /// Per-channel incremental state: derivative seed + the current bin's
 /// accumulators + a ring of completed pooled/quantised columns.
 struct ChanWindow {
@@ -289,7 +300,29 @@ impl IncrementalWindower {
     }
 
     /// Feed one sample per channel; returns the completed window, if any.
+    /// Allocates the frame's `acts` only when a window actually completes
+    /// — hot loops that recycle one buffer across windows use
+    /// [`push_into`](Self::push_into) instead.
     pub fn push(&mut self, samples: [u16; c::ECG_CHANNELS]) -> Option<WindowFrame> {
+        let mut acts = Vec::new();
+        let meta = self.push_into(samples, &mut acts)?;
+        Some(WindowFrame {
+            index: meta.index,
+            start_sample: meta.start_sample,
+            acts,
+        })
+    }
+
+    /// Allocation-free core of [`push`](Self::push): when the sample
+    /// completes a window, `acts` is cleared and refilled with its
+    /// `MODEL_IN` activations — reusing the buffer's capacity across
+    /// windows (DESIGN.md §17) — and the window metadata is returned.
+    /// Samples that complete no window leave `acts` untouched.
+    pub fn push_into(
+        &mut self,
+        samples: [u16; c::ECG_CHANNELS],
+        acts: &mut Vec<u8>,
+    ) -> Option<WindowMeta> {
         self.samples_in += 1;
         self.work_ops += c::ECG_CHANNELS as u64;
         let mut bin_done = false;
@@ -306,7 +339,8 @@ impl IncrementalWindower {
         }
         self.next_window_bin += self.hop_bins as u64;
         let start_bin = self.bins_done - WIN_BINS as u64;
-        let mut acts = Vec::with_capacity(c::MODEL_IN);
+        acts.clear();
+        acts.reserve(c::MODEL_IN);
         for ch in &self.chans {
             for k in 0..WIN_BINS as u64 {
                 let (seeded, interior) =
@@ -314,13 +348,12 @@ impl IncrementalWindower {
                 acts.push(if k == 0 { seeded } else { interior });
             }
         }
-        let frame = WindowFrame {
+        let meta = WindowMeta {
             index: self.windows,
             start_sample: start_bin * c::POOL_WINDOW as u64,
-            acts,
         };
         self.windows += 1;
-        Some(frame)
+        Some(meta)
     }
 
     /// Feed a two-channel chunk (`chunk[ch]`, equal lengths); returns the
@@ -484,6 +517,49 @@ mod tests {
                 assert_eq!(pair[1] - pair[0], per, "hop {hop}");
             }
         }
+    }
+
+    #[test]
+    fn push_into_matches_push_and_reuses_the_buffer() {
+        // The allocation-free core emits bit-identical frames, and one
+        // caller-held buffer really is recycled: after the first window
+        // sized it, later windows must not reallocate (stable pointer).
+        let hop = 4 * c::POOL_WINDOW;
+        let mut rng = SplitMix64::new(0xACE5);
+        let mut a = IncrementalWindower::new(hop).unwrap();
+        let mut b = IncrementalWindower::new(hop).unwrap();
+        let mut acts = Vec::new();
+        let mut buf_ptr = std::ptr::null();
+        let mut windows = 0u64;
+        for _ in 0..c::ECG_WINDOW + 6 * hop {
+            let s = [rng.below(4096) as u16, rng.below(4096) as u16];
+            let want = a.push(s);
+            let got = b.push_into(s, &mut acts);
+            match (want, got) {
+                (None, None) => {}
+                (Some(frame), Some(meta)) => {
+                    assert_eq!(meta.index, frame.index);
+                    assert_eq!(meta.start_sample, frame.start_sample);
+                    assert_eq!(acts, frame.acts);
+                    if windows == 0 {
+                        buf_ptr = acts.as_ptr();
+                    } else {
+                        assert_eq!(
+                            acts.as_ptr(),
+                            buf_ptr,
+                            "acts buffer reallocated between windows"
+                        );
+                    }
+                    windows += 1;
+                }
+                (w, g) => panic!(
+                    "push/push_into disagree on completion: {:?} vs {:?}",
+                    w.map(|f| f.index),
+                    g.map(|m| m.index)
+                ),
+            }
+        }
+        assert!(windows >= 6, "only {windows} windows emitted");
     }
 
     #[test]

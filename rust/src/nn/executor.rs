@@ -47,6 +47,37 @@ pub trait PassRunner {
             .collect()
     }
 
+    /// Flat batch-major variant of
+    /// [`run_tile_batch`](PassRunner::run_tile_batch): `xs` is `batch ×
+    /// in_len` row-major, `out` is `batch × out_len` row-major and fully
+    /// overwritten (DESIGN.md §17).  The default round-trips through
+    /// `run_tile_batch`, so any backend's flat results are bit-identical
+    /// to its nested ones by construction; `NativeRunner` overrides with
+    /// an allocation-free scratch path.
+    fn run_tile_batch_into(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        xs: &[u8],
+        batch: usize,
+        scale: f32,
+        out: &mut [i16],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(xs.len() == batch * in_len, "batch input shape");
+        anyhow::ensure!(out.len() == batch * out_len, "batch output shape");
+        let xs_vec: Vec<Vec<u8>> =
+            xs.chunks_exact(in_len).map(|x| x.to_vec()).collect();
+        let adcs =
+            self.run_tile_batch(w_tile, in_len, out_len, &xs_vec, scale)?;
+        anyhow::ensure!(adcs.len() == batch, "runner batch shape");
+        for (o, adc) in out.chunks_exact_mut(out_len).zip(&adcs) {
+            anyhow::ensure!(adc.len() == out_len, "tile output shape");
+            o.copy_from_slice(adc);
+        }
+        Ok(())
+    }
+
     /// Integration cycles executed so far (for cost accounting).
     fn passes(&self) -> usize;
 
@@ -54,6 +85,41 @@ pub trait PassRunner {
     /// not track reconfiguration pay one write per pass.
     fn weight_loads(&self) -> usize {
         self.passes()
+    }
+}
+
+/// Reusable per-runner buffers for the integrate hot path (DESIGN.md §17):
+/// the physical activation vector, the i32 charge accumulator, the i16 ADC
+/// row, and the packed physical weight tile.  Every pass writes into these
+/// instead of allocating.  `x_dirty` and `w_rows`/`w_cols` record how much
+/// of each buffer the previous pass may have left non-zero, so only the
+/// stale region is re-zeroed — the zero-padding invariant the array model
+/// relies on is maintained without a full-width fill per pass.
+struct PassScratch {
+    x_phys: Vec<u8>,
+    /// Rows `[0, x_dirty)` of `x_phys` may hold the previous pass's
+    /// activations; everything beyond is guaranteed zero.
+    x_dirty: usize,
+    acc: Vec<i32>,
+    adc: Vec<i16>,
+    w_phys: Vec<i8>,
+    /// Rectangle `[0, w_rows) × [0, w_cols)` of `w_phys` may hold the
+    /// previous tile's weights; everything outside is guaranteed zero.
+    w_rows: usize,
+    w_cols: usize,
+}
+
+impl PassScratch {
+    fn new() -> PassScratch {
+        PassScratch {
+            x_phys: vec![0; c::K_LOGICAL],
+            x_dirty: 0,
+            acc: vec![0; c::N_COLS],
+            adc: vec![0; c::N_COLS],
+            w_phys: vec![0; c::K_LOGICAL * c::N_COLS],
+            w_rows: 0,
+            w_cols: 0,
+        }
     }
 }
 
@@ -68,6 +134,7 @@ pub struct NativeRunner {
     /// the measured per-column gain/offset right after readout, the same
     /// place the engine applies it.
     correction: Option<crate::calib::ColumnCorrection>,
+    scratch: PassScratch,
 }
 
 impl Default for NativeRunner {
@@ -91,6 +158,7 @@ impl NativeRunner {
             weight_loads: 0,
             noise: vec![0.0; c::N_COLS],
             correction: None,
+            scratch: PassScratch::new(),
         }
     }
 
@@ -111,7 +179,9 @@ impl NativeRunner {
     }
 
     /// Pack a logical tile into the physical array (zero-padded) and
-    /// write it — one weight reconfiguration.
+    /// write it — one weight reconfiguration.  The packed buffer is the
+    /// runner's scratch: only cells the previous tile wrote and this one
+    /// will not overwrite are re-zeroed.
     fn load_tile(
         &mut self,
         w_tile: &[f32],
@@ -121,19 +191,32 @@ impl NativeRunner {
         anyhow::ensure!((1..=c::K_LOGICAL).contains(&in_len));
         anyhow::ensure!((1..=c::N_COLS).contains(&out_len));
         anyhow::ensure!(w_tile.len() == in_len * out_len);
-        let mut w_phys = vec![0i8; c::K_LOGICAL * c::N_COLS];
+        let s = &mut self.scratch;
+        for r in 0..s.w_rows {
+            let row = &mut s.w_phys[r * c::N_COLS..r * c::N_COLS + s.w_cols];
+            if r < in_len {
+                if s.w_cols > out_len {
+                    row[out_len..].fill(0);
+                }
+            } else {
+                row.fill(0);
+            }
+        }
         for (r, w_row) in w_tile.chunks_exact(out_len).enumerate() {
             for (col, &w) in w_row.iter().enumerate() {
-                w_phys[r * c::N_COLS + col] =
+                s.w_phys[r * c::N_COLS + col] =
                     (w as i32).clamp(-c::W_MAX, c::W_MAX) as i8;
             }
         }
-        self.array.load_weights(&w_phys);
+        s.w_rows = in_len;
+        s.w_cols = out_len;
+        self.array.load_weights(&s.w_phys);
         self.weight_loads += 1;
         Ok(())
     }
 
-    /// One integration of the currently loaded tile.
+    /// One integration of the currently loaded tile (allocating wrapper
+    /// over [`integrate_loaded_into`](NativeRunner::integrate_loaded_into)).
     fn integrate_loaded(
         &mut self,
         in_len: usize,
@@ -141,18 +224,53 @@ impl NativeRunner {
         x: &[u8],
         scale: f32,
     ) -> anyhow::Result<Vec<i16>> {
+        let mut out = vec![0i16; out_len];
+        self.integrate_loaded_into(in_len, out_len, x, scale, &mut out)?;
+        Ok(out)
+    }
+
+    /// One integration of the currently loaded tile, written into `out`
+    /// (`len == out_len`) — the allocation-free hot path.
+    fn integrate_loaded_into(
+        &mut self,
+        in_len: usize,
+        out_len: usize,
+        x: &[u8],
+        scale: f32,
+        out: &mut [i16],
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(x.len() == in_len);
-        let mut x_phys = vec![0u8; c::K_LOGICAL];
-        x_phys[..in_len].copy_from_slice(x);
-        let out = self.array.integrate(&x_phys, scale, &self.noise, false);
+        anyhow::ensure!(out.len() == out_len);
+        self.scratch.x_phys[..in_len].copy_from_slice(x);
+        // Only rows the *previous* pass wrote beyond this pass's prefix
+        // can hold stale events; the rest of the physical vector is
+        // already zero, so nothing else needs a fill.
+        if self.scratch.x_dirty > in_len {
+            self.scratch.x_phys[in_len..self.scratch.x_dirty].fill(0);
+        }
+        self.scratch.x_dirty = in_len;
+        self.array.integrate_into(
+            &self.scratch.x_phys,
+            scale,
+            &self.noise,
+            false,
+            &mut self.scratch.acc,
+            &mut self.scratch.adc,
+        );
         self.passes += 1;
-        let mut out = out[..out_len].to_vec();
+        out.copy_from_slice(&self.scratch.adc[..out_len]);
         if let Some(corr) = &self.correction {
             // Tiles occupy the column prefix, so the per-column correction
             // indexes line up with the tile output.
-            corr.apply_i16(&mut out);
+            corr.apply_i16(out);
         }
-        Ok(out)
+        Ok(())
+    }
+
+    /// Test hook: the physical activation scratch (zero-padding invariant).
+    #[cfg(test)]
+    fn scratch_x(&self) -> &[u8] {
+        &self.scratch.x_phys
     }
 }
 
@@ -184,6 +302,28 @@ impl PassRunner for NativeRunner {
             .collect()
     }
 
+    /// One weight write, `batch` integrations, zero allocations.
+    fn run_tile_batch_into(
+        &mut self,
+        w_tile: &[f32],
+        in_len: usize,
+        out_len: usize,
+        xs: &[u8],
+        batch: usize,
+        scale: f32,
+        out: &mut [i16],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(xs.len() == batch * in_len, "batch input shape");
+        anyhow::ensure!(out.len() == batch * out_len, "batch output shape");
+        self.load_tile(w_tile, in_len, out_len)?;
+        for (x, o) in
+            xs.chunks_exact(in_len).zip(out.chunks_exact_mut(out_len))
+        {
+            self.integrate_loaded_into(in_len, out_len, x, scale, o)?;
+        }
+        Ok(())
+    }
+
     fn passes(&self) -> usize {
         self.passes
     }
@@ -207,24 +347,44 @@ pub struct LayerSpec {
 
 /// Slice one chunk's weight tile out of a layer's row-major matrix.
 fn slice_tile(layer: &LayerSpec, chunk: &super::partition::Chunk) -> Vec<f32> {
+    let mut tile = Vec::new();
+    slice_tile_into(layer, chunk, &mut tile);
+    tile
+}
+
+/// [`slice_tile`] into a reusable buffer (resized; every cell written).
+fn slice_tile_into(
+    layer: &LayerSpec,
+    chunk: &super::partition::Chunk,
+    tile: &mut Vec<f32>,
+) {
     let ol = chunk.out_len();
-    let mut tile = vec![0.0f32; chunk.in_len() * ol];
+    tile.resize(chunk.in_len() * ol, 0.0);
     for (ri, r) in (chunk.in_start..chunk.in_end).enumerate() {
         for (ci, col) in (chunk.out_start..chunk.out_end).enumerate() {
             tile[ri * ol + ci] = layer.weights[r * layer.out_dim + col];
         }
     }
-    tile
 }
 
 /// The digital inter-layer requantisation (SIMD-CPU semantics).
 fn requantise(layer: &LayerSpec, raw: &[i32]) -> Vec<u8> {
+    let mut acts = Vec::with_capacity(raw.len());
+    requantise_into(layer, raw, &mut acts);
+    acts
+}
+
+/// [`requantise`] into a reusable buffer (cleared then filled).  Purely
+/// elementwise, so it applies unchanged to a flat batch-major buffer.
+fn requantise_into(layer: &LayerSpec, raw: &[i32], acts: &mut Vec<u8>) {
+    acts.clear();
     if layer.relu_requant {
-        raw.iter()
-            .map(|&v| ((v.max(0) >> c::RELU_SHIFT).min(c::X_MAX)) as u8)
-            .collect()
+        acts.extend(
+            raw.iter()
+                .map(|&v| ((v.max(0) >> c::RELU_SHIFT).min(c::X_MAX)) as u8),
+        );
     } else {
-        raw.iter().map(|&v| v.clamp(0, c::X_MAX) as u8).collect()
+        acts.extend(raw.iter().map(|&v| v.clamp(0, c::X_MAX) as u8));
     }
 }
 
@@ -259,10 +419,27 @@ pub fn run_layer<R: PassRunner>(
     Ok(out)
 }
 
+/// Reusable buffers for the flat batch-major executor path (DESIGN.md
+/// §17).  One instance amortises every per-chunk and per-layer allocation
+/// of [`run_layer_batch_into`] / [`run_model_batch_flat`] across an
+/// arbitrary number of calls.
+#[derive(Default)]
+pub struct BatchScratch {
+    /// Current chunk's weight tile (`in_len × out_len`, row-major).
+    tile: Vec<f32>,
+    /// Batch-major activation slices for the current chunk (`B × in_len`).
+    xs: Vec<u8>,
+    /// Batch-major ADC outputs for the current chunk (`B × out_len`).
+    adc: Vec<i16>,
+    /// Batch-major requantised inter-layer activations (`B × dim`).
+    acts: Vec<u8>,
+}
+
 /// Batched layer execution: every chunk's weight tile is sliced and
 /// written **once** and integrated against all `xs.len()` activation
 /// vectors (`run_layer` re-sliced and re-wrote it per sample).  Per-sample
-/// results are bit-identical to `run_layer`.
+/// results are bit-identical to `run_layer`.  Thin nested-`Vec` wrapper
+/// over [`run_layer_batch_into`].
 pub fn run_layer_batch<R: PassRunner>(
     runner: &mut R,
     layer: &LayerSpec,
@@ -270,35 +447,80 @@ pub fn run_layer_batch<R: PassRunner>(
     xs: &[Vec<u8>],
 ) -> anyhow::Result<Vec<Vec<i32>>> {
     anyhow::ensure!(!xs.is_empty(), "empty batch");
+    for x in xs {
+        anyhow::ensure!(x.len() == layer.in_dim, "input dim");
+    }
+    let mut flat = Vec::with_capacity(xs.len() * layer.in_dim);
+    for x in xs {
+        flat.extend_from_slice(x);
+    }
+    let mut out = Vec::new();
+    let mut scratch = BatchScratch::default();
+    run_layer_batch_into(
+        runner,
+        layer,
+        plan,
+        &flat,
+        xs.len(),
+        &mut out,
+        &mut scratch,
+    )?;
+    Ok(out.chunks_exact(layer.out_dim).map(|o| o.to_vec()).collect())
+}
+
+/// Flat batch-major layer execution: `xs` is `batch × in_dim` row-major,
+/// `out` is resized to `batch × out_dim` and holds the raw i32 partial
+/// sums.  All intermediate buffers live in `scratch`, so steady-state
+/// calls allocate nothing.  The inner accumulation walks contiguous
+/// per-sample rows of both the ADC buffer and the output, which is the
+/// vectorisation-friendly layout (no strided gather per column).
+pub fn run_layer_batch_into<R: PassRunner>(
+    runner: &mut R,
+    layer: &LayerSpec,
+    plan: &Plan,
+    xs: &[u8],
+    batch: usize,
+    out: &mut Vec<i32>,
+    scratch: &mut BatchScratch,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(batch > 0, "empty batch");
     anyhow::ensure!(
         plan.in_dim == layer.in_dim && plan.out_dim == layer.out_dim,
         "plan/layer mismatch"
     );
-    for x in xs {
-        anyhow::ensure!(x.len() == layer.in_dim, "input dim");
-    }
-    let mut out = vec![vec![0i32; layer.out_dim]; xs.len()];
+    anyhow::ensure!(xs.len() == batch * layer.in_dim, "input dim");
+    out.clear();
+    out.resize(batch * layer.out_dim, 0);
     for chunk in &plan.chunks {
-        let tile = slice_tile(layer, chunk);
-        let slices: Vec<Vec<u8>> = xs
-            .iter()
-            .map(|x| x[chunk.in_start..chunk.in_end].to_vec())
-            .collect();
-        let adcs = runner.run_tile_batch(
-            &tile,
-            chunk.in_len(),
-            chunk.out_len(),
-            &slices,
+        let (il, ol) = (chunk.in_len(), chunk.out_len());
+        slice_tile_into(layer, chunk, &mut scratch.tile);
+        scratch.xs.resize(batch * il, 0);
+        for s in 0..batch {
+            let row = s * layer.in_dim;
+            scratch.xs[s * il..(s + 1) * il].copy_from_slice(
+                &xs[row + chunk.in_start..row + chunk.in_end],
+            );
+        }
+        scratch.adc.resize(batch * ol, 0);
+        runner.run_tile_batch_into(
+            &scratch.tile,
+            il,
+            ol,
+            &scratch.xs,
+            batch,
             layer.scale,
+            &mut scratch.adc,
         )?;
-        anyhow::ensure!(adcs.len() == xs.len(), "runner batch shape");
-        for (sample, adc) in out.iter_mut().zip(&adcs) {
-            for (ci, &v) in adc.iter().enumerate() {
-                sample[chunk.out_start + ci] += v as i32;
+        for s in 0..batch {
+            let row = s * layer.out_dim;
+            let dst = &mut out[row + chunk.out_start..row + chunk.out_end];
+            let src = &scratch.adc[s * ol..(s + 1) * ol];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d += v as i32; // digital partial sum
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Per-layer execution plans of a model, partitioned **once** and reused
@@ -363,7 +585,8 @@ pub fn run_model_planned<R: PassRunner>(
 /// Batched model execution: for every layer, each weight tile is written
 /// once per *batch* instead of once per sample.  Guarantee (property
 /// tested): `run_model_batch(..)[i]` is bit-identical to
-/// `run_model(.., inputs[i])` for every `i`.
+/// `run_model(.., inputs[i])` for every `i`.  Thin nested-`Vec` wrapper
+/// over [`run_model_batch_flat`].
 pub fn run_model_batch<R: PassRunner>(
     runner: &mut R,
     layers: &[LayerSpec],
@@ -371,18 +594,66 @@ pub fn run_model_batch<R: PassRunner>(
     inputs: &[Vec<u8>],
 ) -> anyhow::Result<Vec<Vec<i32>>> {
     anyhow::ensure!(!inputs.is_empty(), "empty batch");
+    anyhow::ensure!(!layers.is_empty(), "empty model");
     anyhow::ensure!(layers.len() == plan.plans.len(), "plan/model mismatch");
-    let mut acts: Vec<Vec<u8>> = inputs.to_vec();
-    let mut last_raw: Vec<Vec<i32>> = acts
-        .iter()
-        .map(|a| a.iter().map(|&v| v as i32).collect())
-        .collect();
-    for (layer, lplan) in layers.iter().zip(&plan.plans) {
-        let raw = run_layer_batch(runner, layer, lplan, &acts)?;
-        acts = raw.iter().map(|r| requantise(layer, r)).collect();
-        last_raw = raw;
+    let in_dim = layers[0].in_dim;
+    for x in inputs {
+        anyhow::ensure!(x.len() == in_dim, "input dim");
     }
-    Ok(last_raw)
+    let mut flat = Vec::with_capacity(inputs.len() * in_dim);
+    for x in inputs {
+        flat.extend_from_slice(x);
+    }
+    let mut out = Vec::new();
+    let mut scratch = BatchScratch::default();
+    run_model_batch_flat(
+        runner,
+        layers,
+        plan,
+        &flat,
+        inputs.len(),
+        &mut out,
+        &mut scratch,
+    )?;
+    let out_dim = match layers.last() {
+        Some(l) => l.out_dim,
+        None => unreachable!("guarded by the empty-model ensure above"),
+    };
+    Ok(out.chunks_exact(out_dim).map(|o| o.to_vec()).collect())
+}
+
+/// Flat batch-major model execution (DESIGN.md §17): `inputs` is `batch ×
+/// layers[0].in_dim` row-major, `out` is resized to `batch ×
+/// last.out_dim` and holds the last layer's raw i32 sums.  With a warm
+/// `scratch` the whole forward pass allocates nothing — this is the
+/// serving/bench hot path.
+pub fn run_model_batch_flat<R: PassRunner>(
+    runner: &mut R,
+    layers: &[LayerSpec],
+    plan: &ModelPlan,
+    inputs: &[u8],
+    batch: usize,
+    out: &mut Vec<i32>,
+    scratch: &mut BatchScratch,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(batch > 0, "empty batch");
+    anyhow::ensure!(!layers.is_empty(), "empty model");
+    anyhow::ensure!(layers.len() == plan.plans.len(), "plan/model mismatch");
+    anyhow::ensure!(inputs.len() == batch * layers[0].in_dim, "input dim");
+    // The activation buffer is taken out of the scratch for the loop so
+    // the layer call can borrow the rest of the scratch mutably; it is
+    // put back (capacity intact) before returning.
+    let mut acts = std::mem::take(&mut scratch.acts);
+    for (i, (layer, lplan)) in layers.iter().zip(&plan.plans).enumerate() {
+        let xs: &[u8] = if i == 0 { inputs } else { &acts };
+        run_layer_batch_into(runner, layer, lplan, xs, batch, out, scratch)?;
+        if i + 1 < layers.len() {
+            // Elementwise, so the flat buffer requantises in one sweep.
+            requantise_into(layer, out, &mut acts);
+        }
+    }
+    scratch.acts = acts;
+    Ok(())
 }
 
 /// Cost model: integration cycles + simulated chip time for a layer stack
@@ -649,6 +920,303 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert_eq!(runner.passes(), 4 * plan.passes());
         assert_eq!(runner.weight_loads(), plan.passes(), "one write per tile");
+    }
+
+    #[test]
+    fn stale_x_suffix_zeroed_after_shorter_pass() {
+        // Regression (ISSUE 10 satellite): a short-input pass after a
+        // long-input pass must see zeros in the physical tail.  The
+        // output cannot reveal a stale tail directly — `load_tile` keeps
+        // the tail *weights* zero too — so this checks the zero-padding
+        // invariant on the scratch itself.
+        let mut runner = NativeRunner::new();
+        let w_long = vec![1.0f32; c::K_LOGICAL];
+        let x_long = vec![3u8; c::K_LOGICAL];
+        runner.run_tile(&w_long, c::K_LOGICAL, 1, &x_long, 1.0).unwrap();
+        assert!(runner.scratch_x().iter().all(|&v| v == 3));
+        let got = runner
+            .run_tile(&[1.0, 1.0, 1.0, 1.0], 4, 1, &[7, 7, 7, 7], 1.0)
+            .unwrap();
+        assert_eq!(&runner.scratch_x()[..4], &[7, 7, 7, 7]);
+        assert!(
+            runner.scratch_x()[4..].iter().all(|&v| v == 0),
+            "stale suffix survived the shorter pass"
+        );
+        // And the conversion sees only the 4 live rows.
+        assert_eq!(got, vec![28]);
+    }
+
+    #[test]
+    fn pass_results_independent_of_previous_pass_length() {
+        // Belt and braces for the invariant test above: a reused runner
+        // and a fresh runner must produce identical tiles regardless of
+        // what earlier (larger) passes left in the scratch.
+        let mut rng = SplitMix64::new(0xD1);
+        let w_big: Vec<f32> = (0..c::K_LOGICAL * 8)
+            .map(|_| (rng.below(13) as i32 - 6) as f32)
+            .collect();
+        let x_big: Vec<u8> =
+            (0..c::K_LOGICAL).map(|_| rng.below(32) as u8).collect();
+        let w_small: Vec<f32> =
+            (0..6 * 3).map(|_| (rng.below(13) as i32 - 6) as f32).collect();
+        let x_small: Vec<u8> = (0..6).map(|_| rng.below(32) as u8).collect();
+        let mut reused = NativeRunner::new();
+        reused.run_tile(&w_big, c::K_LOGICAL, 8, &x_big, 0.05).unwrap();
+        let got = reused.run_tile(&w_small, 6, 3, &x_small, 0.05).unwrap();
+        let mut fresh = NativeRunner::new();
+        let want = fresh.run_tile(&w_small, 6, 3, &x_small, 0.05).unwrap();
+        assert_eq!(got, want);
+    }
+
+    /// The pre-scratch (PR ≤ 9) native runner, retained verbatim as the
+    /// golden reference for the equivalence property: every pass
+    /// allocates `x_phys`, the integrate output, and a truncated copy —
+    /// but its arithmetic is the specification the scratch path must
+    /// reproduce bit for bit.
+    struct ReferenceRunner {
+        array: AnalogArray,
+        passes: usize,
+        weight_loads: usize,
+        noise: Vec<f32>,
+        correction: Option<crate::calib::ColumnCorrection>,
+    }
+
+    impl ReferenceRunner {
+        fn with_calib(calib: ColumnCalib) -> ReferenceRunner {
+            ReferenceRunner {
+                array: AnalogArray::new(c::K_LOGICAL, c::N_COLS, calib),
+                passes: 0,
+                weight_loads: 0,
+                noise: vec![0.0; c::N_COLS],
+                correction: None,
+            }
+        }
+
+        fn load_tile(
+            &mut self,
+            w_tile: &[f32],
+            in_len: usize,
+            out_len: usize,
+        ) -> anyhow::Result<()> {
+            anyhow::ensure!((1..=c::K_LOGICAL).contains(&in_len));
+            anyhow::ensure!((1..=c::N_COLS).contains(&out_len));
+            anyhow::ensure!(w_tile.len() == in_len * out_len);
+            let mut w_phys = vec![0i8; c::K_LOGICAL * c::N_COLS];
+            for (r, w_row) in w_tile.chunks_exact(out_len).enumerate() {
+                for (col, &w) in w_row.iter().enumerate() {
+                    w_phys[r * c::N_COLS + col] =
+                        (w as i32).clamp(-c::W_MAX, c::W_MAX) as i8;
+                }
+            }
+            self.array.load_weights(&w_phys);
+            self.weight_loads += 1;
+            Ok(())
+        }
+
+        fn integrate_loaded(
+            &mut self,
+            in_len: usize,
+            out_len: usize,
+            x: &[u8],
+            scale: f32,
+        ) -> anyhow::Result<Vec<i16>> {
+            anyhow::ensure!(x.len() == in_len);
+            let mut x_phys = vec![0u8; c::K_LOGICAL];
+            x_phys[..in_len].copy_from_slice(x);
+            let out =
+                self.array.integrate(&x_phys, scale, &self.noise, false);
+            self.passes += 1;
+            let mut out = out[..out_len].to_vec();
+            if let Some(corr) = &self.correction {
+                corr.apply_i16(&mut out);
+            }
+            Ok(out)
+        }
+    }
+
+    impl PassRunner for ReferenceRunner {
+        fn run_tile(
+            &mut self,
+            w_tile: &[f32],
+            in_len: usize,
+            out_len: usize,
+            x: &[u8],
+            scale: f32,
+        ) -> anyhow::Result<Vec<i16>> {
+            self.load_tile(w_tile, in_len, out_len)?;
+            self.integrate_loaded(in_len, out_len, x, scale)
+        }
+
+        fn run_tile_batch(
+            &mut self,
+            w_tile: &[f32],
+            in_len: usize,
+            out_len: usize,
+            xs: &[Vec<u8>],
+            scale: f32,
+        ) -> anyhow::Result<Vec<Vec<i16>>> {
+            self.load_tile(w_tile, in_len, out_len)?;
+            xs.iter()
+                .map(|x| self.integrate_loaded(in_len, out_len, x, scale))
+                .collect()
+        }
+
+        fn passes(&self) -> usize {
+            self.passes
+        }
+
+        fn weight_loads(&self) -> usize {
+            self.weight_loads
+        }
+    }
+
+    /// The pre-scratch `run_layer_batch`, retained verbatim (nested Vecs,
+    /// per-chunk slice copies) for the same reason as [`ReferenceRunner`].
+    fn reference_run_layer_batch(
+        runner: &mut ReferenceRunner,
+        layer: &LayerSpec,
+        plan: &Plan,
+        xs: &[Vec<u8>],
+    ) -> anyhow::Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(!xs.is_empty(), "empty batch");
+        let mut out = vec![vec![0i32; layer.out_dim]; xs.len()];
+        for chunk in &plan.chunks {
+            let tile = slice_tile(layer, chunk);
+            let slices: Vec<Vec<u8>> = xs
+                .iter()
+                .map(|x| x[chunk.in_start..chunk.in_end].to_vec())
+                .collect();
+            let adcs = runner.run_tile_batch(
+                &tile,
+                chunk.in_len(),
+                chunk.out_len(),
+                &slices,
+                layer.scale,
+            )?;
+            for (sample, adc) in out.iter_mut().zip(&adcs) {
+                for (ci, &v) in adc.iter().enumerate() {
+                    sample[chunk.out_start + ci] += v as i32;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// ISSUE 10 acceptance property: the scratch-buffer executor is
+    /// bit-identical to the retained reference — i16 tile outputs, raw
+    /// i32 partial sums, u8 requantised activations, and accounting —
+    /// across random shapes, partitions, batch sizes, correction on/off,
+    /// and noise on/off.
+    #[test]
+    fn scratch_executor_matches_reference_property() {
+        use crate::calib::ColumnCorrection;
+        propcheck::check("scratch_vs_reference", 10, 0x5CA7C4, |g| {
+            let mut rng = SplitMix64::new(g.rng.next_u64());
+            let d0 = g.usize_in(1, 520);
+            let d1 = g.usize_in(1, 300);
+            let d2 = g.usize_in(1, 40);
+            let layers = vec![
+                rand_layer(&mut rng, d0, d1, true),
+                rand_layer(&mut rng, d1, d2, false),
+            ];
+            let batch = g.usize_in(1, 5);
+            let inputs: Vec<Vec<u8>> = (0..batch)
+                .map(|_| (0..d0).map(|_| rng.below(32) as u8).collect())
+                .collect();
+            let fpn_on = g.rng.next_u64() % 2 == 0;
+            let noise_on = g.rng.next_u64() % 2 == 0;
+            let corr_on = g.rng.next_u64() % 2 == 0;
+            let calib = if fpn_on {
+                ColumnCalib::fixed_pattern(c::N_COLS, &mut rng)
+            } else {
+                ColumnCalib::nominal(c::N_COLS)
+            };
+            let mut new_r = NativeRunner::with_calib(calib.clone());
+            let mut ref_r = ReferenceRunner::with_calib(calib);
+            if noise_on {
+                let noise: Vec<f32> = (0..c::N_COLS)
+                    .map(|_| (0.7 * rng.gauss()) as f32)
+                    .collect();
+                new_r.noise.copy_from_slice(&noise);
+                ref_r.noise = noise;
+            }
+            if corr_on {
+                let gain: Vec<f32> = (0..c::N_COLS)
+                    .map(|_| (1.0 + 0.05 * rng.gauss()) as f32)
+                    .collect();
+                let offset: Vec<f32> = (0..c::N_COLS)
+                    .map(|_| (2.0 * rng.gauss()) as f32)
+                    .collect();
+                let corr = ColumnCorrection::from_measured(&gain, &offset);
+                new_r.set_correction(Some(corr.clone()));
+                ref_r.correction = Some(corr);
+            }
+            let plan = ModelPlan::of(&layers).map_err(|e| e.to_string())?;
+            // Layer by layer: raw sums and requantised activations must
+            // agree at every boundary, not just at the model output.
+            let mut acts_new = inputs.clone();
+            let mut acts_ref = inputs;
+            for (li, (layer, lplan)) in
+                layers.iter().zip(plan.plans()).enumerate()
+            {
+                let raw_new =
+                    run_layer_batch(&mut new_r, layer, lplan, &acts_new)
+                        .map_err(|e| e.to_string())?;
+                let raw_ref = reference_run_layer_batch(
+                    &mut ref_r, layer, lplan, &acts_ref,
+                )
+                .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    raw_new == raw_ref,
+                    "layer {li}: raw sums diverge (new {:?} ref {:?})",
+                    &raw_new[0][..raw_new[0].len().min(8)],
+                    &raw_ref[0][..raw_ref[0].len().min(8)]
+                );
+                acts_new =
+                    raw_new.iter().map(|r| requantise(layer, r)).collect();
+                acts_ref =
+                    raw_ref.iter().map(|r| requantise(layer, r)).collect();
+                prop_assert!(
+                    acts_new == acts_ref,
+                    "layer {li}: requantised activations diverge"
+                );
+            }
+            // Direct i16 parity on a single tile (the raw-sum check above
+            // only sees i16s through the digital accumulation).
+            let chunk = &plan.plans()[0].chunks[0];
+            let tile = slice_tile(&layers[0], chunk);
+            let x0: Vec<u8> = vec![1; chunk.in_len()];
+            let t_new = new_r
+                .run_tile(
+                    &tile,
+                    chunk.in_len(),
+                    chunk.out_len(),
+                    &x0,
+                    layers[0].scale,
+                )
+                .map_err(|e| e.to_string())?;
+            let t_ref = ref_r
+                .run_tile(
+                    &tile,
+                    chunk.in_len(),
+                    chunk.out_len(),
+                    &x0,
+                    layers[0].scale,
+                )
+                .map_err(|e| e.to_string())?;
+            prop_assert!(t_new == t_ref, "single-tile i16 outputs diverge");
+            // Accounting parity: same passes, same weight writes.
+            prop_assert!(
+                new_r.passes() == ref_r.passes()
+                    && new_r.weight_loads() == ref_r.weight_loads(),
+                "accounting diverges: {}/{} vs {}/{}",
+                new_r.passes(),
+                new_r.weight_loads(),
+                ref_r.passes(),
+                ref_r.weight_loads()
+            );
+            Ok(())
+        });
     }
 
     /// Acceptance property: `run_model_batch(B)[i] == run_model(sample_i)`

@@ -6,3 +6,11 @@ pub mod graph;
 pub mod mapping;
 pub mod partition;
 pub mod weights;
+
+// The executor's runner/scratch surface, re-exported flat: backends
+// implement [`PassRunner`], hot paths hold a [`BatchScratch`] and drive
+// the `_into` entry points (DESIGN.md §17).
+pub use executor::{
+    run_layer_batch_into, run_model_batch_flat, BatchScratch, NativeRunner,
+    PassRunner,
+};
